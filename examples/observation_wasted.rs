@@ -1,0 +1,51 @@
+//! Reproduces the paper's §3.1 observation (Figure 2): past the early
+//! phase of a greedy graph search, most distance computations exceed the
+//! current upper bound and therefore cannot change the result.
+//!
+//!   cargo run --release --example observation_wasted
+
+use finger_ann::data::spec_by_name;
+use finger_ann::graph::hnsw::{Hnsw, HnswParams};
+use finger_ann::graph::search::SearchStats;
+use finger_ann::graph::visited::VisitedSet;
+
+fn main() {
+    for name in ["fashion-sim-784", "glove-sim-100"] {
+        let spec = spec_by_name(name, 0.2).unwrap();
+        println!("\ndataset: {} (n={}, dim={})", spec.name, spec.n, spec.dim);
+        let ds = spec.generate();
+        let h = Hnsw::build(
+            &ds.data,
+            HnswParams { m: 16, ef_construction: 120, ..Default::default() },
+        );
+
+        let mut vis = VisitedSet::new(ds.data.rows());
+        let mut agg = SearchStats::default();
+        for qi in 0..ds.queries.rows() {
+            let mut st = SearchStats::default();
+            h.search(&ds.data, ds.queries.row(qi), 10, 128, &mut vis, Some(&mut st));
+            agg.merge(&st);
+        }
+
+        let hops = agg.per_hop.len().max(1);
+        println!("search phase (decile) -> fraction of distance computations > upper bound");
+        for d in 0..10 {
+            let (mut t, mut w) = (0u64, 0u64);
+            for (h_idx, &(ht, hw)) in agg.per_hop.iter().enumerate() {
+                if (h_idx * 10 / hops).min(9) == d {
+                    t += ht;
+                    w += hw;
+                }
+            }
+            let frac = if t == 0 { 0.0 } else { w as f64 / t as f64 };
+            let bar: String = std::iter::repeat('#').take((frac * 50.0) as usize).collect();
+            println!("  {d}0-{}0%: {frac:5.3} {bar}", d + 1);
+        }
+        println!(
+            "overall: {:.1}% of {} distance computations were non-influential",
+            100.0 * agg.wasted as f64 / agg.dist_calls.max(1) as f64,
+            agg.dist_calls
+        );
+    }
+    println!("\n(paper Figure 2: >80% wasted from the mid-phase on — the headroom FINGER exploits)");
+}

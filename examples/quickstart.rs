@@ -1,0 +1,82 @@
+//! Quickstart: build an HNSW-FINGER index over a synthetic dataset, search
+//! it, and compare against plain HNSW and exact ground truth.
+//!
+//!   cargo run --release --example quickstart
+
+use std::time::Instant;
+
+use finger_ann::data::groundtruth::exact_knn;
+use finger_ann::data::spec_by_name;
+use finger_ann::eval::recall;
+use finger_ann::finger::construct::FingerParams;
+use finger_ann::finger::search::FingerHnsw;
+use finger_ann::graph::hnsw::HnswParams;
+use finger_ann::graph::search::SearchStats;
+use finger_ann::graph::visited::VisitedSet;
+
+fn main() {
+    // 1. Data: a scaled-down SIFT-like benchmark (20k x 128 at scale 1.0).
+    let spec = spec_by_name("sift-sim-128", 0.2).unwrap();
+    println!("dataset: {} (n={}, dim={})", spec.name, spec.n, spec.dim);
+    let ds = spec.generate();
+    let gt = exact_knn(&ds.data, &ds.queries, 10);
+
+    // 2. Index: HNSW base graph + FINGER side index (Algorithm 2).
+    let t0 = Instant::now();
+    let index = FingerHnsw::build(
+        &ds.data,
+        HnswParams { m: 16, ef_construction: 120, ..Default::default() },
+        FingerParams { rank: 16, ..Default::default() },
+    );
+    println!(
+        "index built in {:.1}s ({} MB, angle-estimate correlation {:.3})",
+        t0.elapsed().as_secs_f64(),
+        index.nbytes() as f64 / 1e6,
+        index.index.matching.correlation
+    );
+
+    // 3. Search (Algorithm 4) and evaluate.
+    let mut vis = VisitedSet::new(ds.data.rows());
+    let mut stats = SearchStats::default();
+    let t0 = Instant::now();
+    let mut total_recall = 0.0;
+    for qi in 0..ds.queries.rows() {
+        let res = index.search(&ds.data, ds.queries.row(qi), 10, 80, &mut vis, Some(&mut stats));
+        total_recall += recall(&res, &gt[qi]);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let nq = ds.queries.rows() as f64;
+    println!(
+        "hnsw-finger: recall@10 = {:.4}, QPS = {:.0}",
+        total_recall / nq,
+        nq / secs
+    );
+    println!(
+        "  distance calls/query: {:.0} full + {:.0} approx (screened {:.0}%)",
+        stats.dist_calls as f64 / nq,
+        stats.approx_calls as f64 / nq,
+        100.0 * (1.0 - stats.dist_calls as f64 / (stats.dist_calls + stats.approx_calls) as f64)
+    );
+
+    // 4. Plain HNSW on the same graph for comparison.
+    let mut plain = SearchStats::default();
+    let t0 = Instant::now();
+    let mut plain_recall = 0.0;
+    for qi in 0..ds.queries.rows() {
+        let res = index
+            .hnsw
+            .search(&ds.data, ds.queries.row(qi), 10, 80, &mut vis, Some(&mut plain));
+        plain_recall += recall(&res, &gt[qi]);
+    }
+    let plain_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "hnsw (same graph): recall@10 = {:.4}, QPS = {:.0}, {:.0} full dist calls/query",
+        plain_recall / nq,
+        nq / plain_secs,
+        plain.dist_calls as f64 / nq
+    );
+    println!(
+        "speedup at matched recall: {:.2}x",
+        plain_secs / secs
+    );
+}

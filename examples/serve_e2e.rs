@@ -1,0 +1,131 @@
+//! End-to-end serving driver (EXPERIMENTS.md §E2E): build an HNSW-FINGER
+//! index, start the full router (TCP, dynamic batcher, worker pool, PJRT
+//! exact re-rank through the AOT JAX/Pallas artifact), fire batched
+//! requests from concurrent clients, and report latency/throughput/recall.
+//!
+//!   make artifacts && cargo run --release --example serve_e2e
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use finger_ann::data::groundtruth::exact_knn;
+use finger_ann::data::spec_by_name;
+use finger_ann::eval::recall_ids;
+use finger_ann::finger::construct::FingerParams;
+use finger_ann::finger::search::FingerHnsw;
+use finger_ann::graph::hnsw::HnswParams;
+use finger_ann::router::{Client, IndexKind, QueryRequest, ServeIndex, Server, ServerConfig};
+use finger_ann::runtime::{default_artifacts_dir, service::RerankService};
+
+fn main() {
+    // Dataset matching the AOT artifact dim (128) so PJRT re-rank engages.
+    let spec = spec_by_name("sift-sim-128", 0.2).unwrap();
+    println!("dataset: {} (n={}, dim={})", spec.name, spec.n, spec.dim);
+    let ds = spec.generate();
+    let gt = exact_knn(&ds.data, &ds.queries, 10);
+
+    let t0 = Instant::now();
+    let fh = FingerHnsw::build(
+        &ds.data,
+        HnswParams { m: 16, ef_construction: 120, ..Default::default() },
+        FingerParams { rank: 16, ..Default::default() },
+    );
+    println!("index built in {:.1}s", t0.elapsed().as_secs_f64());
+
+    let queries = ds.queries.clone();
+    let dim = ds.data.cols();
+    let index = Arc::new(ServeIndex {
+        data: ds.data,
+        kind: IndexKind::Finger(fh),
+        ef_search: 80,
+    });
+
+    // PJRT re-rank service: final distances come from the AOT-compiled
+    // JAX/Pallas kernel, demonstrating the Python-free request path.
+    let rerank = match RerankService::start(
+        default_artifacts_dir(),
+        dim,
+        Arc::new(index.data.clone()),
+    ) {
+        Ok(svc) => {
+            println!("PJRT rerank online (panel width {})", svc.max_cands);
+            Some(Arc::new(svc))
+        }
+        Err(e) => {
+            println!("PJRT rerank unavailable ({e:#}); run `make artifacts`. Serving without.");
+            None
+        }
+    };
+    let use_rerank = rerank.is_some();
+
+    let server = Server::start(
+        Arc::clone(&index),
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 4,
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            max_queue: 4096,
+            use_pjrt_rerank: use_rerank,
+        },
+        rerank,
+    )
+    .expect("server start");
+    let addr = server.local_addr;
+    println!("server on {addr} (4 workers, max_batch 8, pjrt_rerank={use_rerank})");
+
+    // Fire all benchmark queries from 8 concurrent TCP clients.
+    let n_clients = 8;
+    let queries = Arc::new(queries);
+    let gt = Arc::new(gt);
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let queries = Arc::clone(&queries);
+        let gt = Arc::clone(&gt);
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).expect("connect");
+            let mut rec_sum = 0.0;
+            let mut latencies = Vec::new();
+            let mut count = 0usize;
+            for qi in (c..queries.rows()).step_by(n_clients) {
+                let resp = client
+                    .query(&QueryRequest {
+                        id: qi as u64,
+                        vector: queries.row(qi).to_vec(),
+                        k: 10,
+                    })
+                    .expect("query");
+                let ids: Vec<u32> = resp.hits.iter().map(|&(_, id)| id).collect();
+                rec_sum += recall_ids(&ids, &gt[qi]);
+                latencies.push(resp.latency_us);
+                count += 1;
+            }
+            (rec_sum, latencies, count)
+        }));
+    }
+    let mut total_recall = 0.0;
+    let mut all_lat: Vec<u64> = Vec::new();
+    let mut total = 0usize;
+    for h in handles {
+        let (r, lat, c) = h.join().unwrap();
+        total_recall += r;
+        all_lat.extend(lat);
+        total += c;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    all_lat.sort_unstable();
+    let pct = |p: f64| all_lat[(p / 100.0 * (all_lat.len() - 1) as f64) as usize];
+
+    println!("--- E2E results ---");
+    println!("queries: {total}  wall: {wall:.2}s  throughput: {:.0} QPS", total as f64 / wall);
+    println!(
+        "latency: p50={}us p90={}us p99={}us",
+        pct(50.0),
+        pct(90.0),
+        pct(99.0)
+    );
+    println!("recall@10: {:.4}", total_recall / total as f64);
+    println!("server metrics: {}", server.metrics.summary());
+    server.shutdown();
+}

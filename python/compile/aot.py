@@ -1,0 +1,127 @@
+"""AOT lowering: jit the L2 entry points at fixed shapes, emit HLO TEXT.
+
+HLO *text* (never ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(what the published ``xla`` 0.1.6 crate links) rejects (`proto.id() <=
+INT_MAX`). The text parser reassigns ids, so text round-trips cleanly.
+
+Each artifact is one fully-static-shape HLO module; a ``manifest.json``
+records names, shapes and tuple layouts so the Rust runtime can pad inputs
+and unpack outputs without guessing.
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entries():
+    """(name, fn, arg_specs, meta) for every artifact we ship.
+
+    Shapes cover the serving path (batch 8, candidate panel 256) for the
+    dataset dims the examples use, plus one small config for Rust unit
+    tests. Wrap fns as 1-tuples where needed so the Rust side always sees a
+    tuple root.
+    """
+    out = []
+
+    def add(name, fn, specs, meta):
+        out.append((name, fn, specs, meta))
+
+    for dim in (96, 128):
+        b, c = 8, 256
+        add(
+            f"score_l2_b{b}_c{c}_d{dim}",
+            lambda q, d, dsq: (model.score_l2(q, d, dsq),),
+            [_spec((b, dim)), _spec((c, dim)), _spec((c,))],
+            {"kind": "score_l2", "batch": b, "cands": c, "dim": dim,
+             "outputs": [{"shape": [b, c], "dtype": "f32"}]},
+        )
+        k = 10
+        add(
+            f"rerank_b{b}_c{c}_d{dim}_k{k}",
+            functools.partial(model.rerank_topk, k=k),
+            [_spec((b, dim)), _spec((c, dim)), _spec((c,))],
+            {"kind": "rerank", "batch": b, "cands": c, "dim": dim, "k": k,
+             "outputs": [{"shape": [b, k], "dtype": "f32"},
+                         {"shape": [b, k], "dtype": "i32"}]},
+        )
+
+    for r in (16, 32):
+        b, c = 8, 256
+        add(
+            f"finger_b{b}_c{c}_r{r}",
+            lambda pq, pd, qn, dn, qp, dp, prm: (
+                model.finger_score(pq, pd, qn, dn, qp, dp, prm),
+            ),
+            [_spec((b, r)), _spec((c, r)), _spec((b,)), _spec((c,)),
+             _spec((b,)), _spec((c,)), _spec((8,))],
+            {"kind": "finger", "batch": b, "cands": c, "rank": r,
+             "outputs": [{"shape": [b, c], "dtype": "f32"}]},
+        )
+
+    # Small config exercised by Rust runtime unit tests (fast to execute).
+    b, c, dim, k = 4, 64, 32, 5
+    add(
+        f"rerank_b{b}_c{c}_d{dim}_k{k}",
+        functools.partial(model.rerank_topk, k=k),
+        [_spec((b, dim)), _spec((c, dim)), _spec((c,))],
+        {"kind": "rerank", "batch": b, "cands": c, "dim": dim, "k": k,
+         "outputs": [{"shape": [b, k], "dtype": "f32"},
+                     {"shape": [b, k], "dtype": "i32"}]},
+    )
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "artifacts": {}}
+    for name, fn, specs, meta in entries():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        meta = dict(meta)
+        meta["file"] = fname
+        meta["inputs"] = [
+            {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+        ]
+        manifest["artifacts"][name] = meta
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

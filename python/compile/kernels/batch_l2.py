@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: tiled batched squared-L2 distance panel.
+
+The hot operation of any graph ANN search is "distances from a query batch
+to a candidate set". Expressed via the identity
+
+    ||q - d||^2 = ||q||^2 + ||d||^2 - 2 q.d
+
+the bulk of the work is the cross-term matmul Q @ D^T, which maps straight
+onto the TPU MXU systolic array. ||d||^2 is precomputed at index-build time
+and streamed in.
+
+TPU adaptation (DESIGN.md section 4): the kernel tiles the (B queries x C
+candidates) panel with BlockSpecs sized for VMEM residency - a (Q_TILE, m)
+query block and a (C_TILE, m) candidate block are resident while the MXU
+computes the Q_TILE x C_TILE panel. The paper's AVX2 inner loop becomes a
+matmul panel; `interpret=True` is mandatory on the CPU PJRT plugin (real-TPU
+lowering emits Mosaic custom-calls the CPU client cannot execute).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes chosen for VMEM residency on a real TPU core (16 MiB VMEM):
+# f32 operands at m=960: (8+128)*960*4 B ~ 0.5 MiB per step plus the 8x128
+# f32 output panel - comfortably double-bufferable. See EXPERIMENTS.md.
+Q_TILE = 8
+C_TILE = 128
+
+
+def _l2_kernel(q_ref, d_ref, dsq_ref, out_ref):
+    """One (Q_TILE, C_TILE) output panel.
+
+    q_ref:   (Q_TILE, m)  query block
+    d_ref:   (C_TILE, m)  candidate block
+    dsq_ref: (C_TILE,)    precomputed ||d||^2 for the block
+    out_ref: (Q_TILE, C_TILE) squared L2 distances
+    """
+    q = q_ref[...]
+    d = d_ref[...]
+    dsq = dsq_ref[...]
+    qsq = jnp.sum(q * q, axis=1, keepdims=True)  # (Q_TILE, 1)
+    # The MXU panel: contract over the feature dimension in f32.
+    cross = jax.lax.dot_general(
+        q, d, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    out = qsq + dsq[None, :].astype(jnp.float32) - 2.0 * cross
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+def _pad_to(x, axis, multiple, value=0.0):
+    n = x.shape[axis]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+def batch_l2(q, d, d_sqnorm, q_tile=Q_TILE, c_tile=C_TILE):
+    """Squared L2 distance panel between query batch and candidate set.
+
+    q:        (B, m) float queries
+    d:        (C, m) float candidates
+    d_sqnorm: (C,)   precomputed squared norms of the candidates
+    returns   (B, C) squared L2 distances, dtype of q
+
+    Shapes need not be tile-multiples; inputs are zero-padded and the output
+    is sliced back (zero-padded candidates produce garbage rows that are
+    discarded by the slice).
+    """
+    B, m = q.shape
+    C, md = d.shape
+    assert md == m, f"dim mismatch {m} vs {md}"
+    assert d_sqnorm.shape == (C,)
+    qp = _pad_to(q, 0, q_tile)
+    dp = _pad_to(d, 0, c_tile)
+    dsqp = _pad_to(d_sqnorm, 0, c_tile)
+    Bp, Cp = qp.shape[0], dp.shape[0]
+    grid = (Bp // q_tile, Cp // c_tile)
+    out = pl.pallas_call(
+        _l2_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q_tile, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((c_tile, m), lambda i, j: (j, 0)),
+            pl.BlockSpec((c_tile,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((q_tile, c_tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Cp), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(qp, dp, dsqp)
+    return out[:B, :C]

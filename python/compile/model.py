@@ -1,0 +1,53 @@
+"""L2: the JAX compute graph the Rust runtime executes via PJRT.
+
+Three jit-able entry points, each calling the L1 Pallas kernels:
+
+* ``score_l2``     - raw squared-L2 distance panel (batch scoring).
+* ``rerank_topk``  - exact re-rank: score the candidate panel and return the
+                     top-k (distances, indices). This is the artifact the
+                     serving path runs on every answered request.
+* ``finger_score`` - batched FINGER approximate distances (Algorithm 3).
+
+Everything here is build-time Python: ``aot.py`` lowers these functions once
+to HLO text and the Rust coordinator loads the artifacts. Python is never on
+the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.batch_l2 import batch_l2
+from compile.kernels.finger_approx import finger_approx
+
+
+def score_l2(q, d, d_sqnorm):
+    """(B, C) squared L2 distance panel. Thin wrapper over the L1 kernel."""
+    return batch_l2(q, d, d_sqnorm)
+
+
+def rerank_topk(q, cands, cands_sqnorm, k):
+    """Exact top-k re-rank of a candidate panel.
+
+    q:            (B, m) query batch
+    cands:        (C, m) candidate vectors (gathered by the Rust router)
+    cands_sqnorm: (C,)   precomputed squared norms
+    k:            static int
+
+    Returns (dist, idx): (B, k) squared distances ascending, (B, k) i32
+    positions into the candidate panel. The Rust side maps positions back to
+    global ids. Padded candidate slots should carry a large value in
+    cands_sqnorm so they sort last.
+    """
+    dist = batch_l2(q, cands, cands_sqnorm)
+    # NOTE: jax.lax.top_k lowers to the `topk` HLO instruction, which the
+    # runtime's HLO text parser (xla_extension 0.5.1) does not know. A
+    # variadic lax.sort lowers to the classic `sort` op instead.
+    c = dist.shape[1]
+    idx = jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32), dist.shape)
+    sorted_dist, sorted_idx = jax.lax.sort((dist, idx), dimension=1, num_keys=1)
+    return sorted_dist[:, :k], sorted_idx[:, :k]
+
+
+def finger_score(pq, pd, q_res_norm, d_res_norm, q_proj, d_proj, params):
+    """Batched FINGER approximate squared distances (Algorithm 3)."""
+    return finger_approx(pq, pd, q_res_norm, d_res_norm, q_proj, d_proj, params)

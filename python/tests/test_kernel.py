@@ -1,0 +1,168 @@
+"""Pallas kernels vs pure-jnp oracle - the core L1 correctness signal.
+
+hypothesis sweeps shapes (including non-tile-multiples, which exercise the
+padding path) and dtypes; fixed-seed numpy draws keep cases reproducible.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.batch_l2 import batch_l2
+from compile.kernels.finger_approx import finger_approx, PARAMS_LEN
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- batch_l2
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 33),
+    c=st.integers(1, 300),
+    m=st.sampled_from([3, 16, 96, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_batch_l2_matches_ref(b, c, m, seed):
+    r = _rng(seed)
+    q = r.standard_normal((b, m)).astype(np.float32)
+    d = r.standard_normal((c, m)).astype(np.float32)
+    dsq = np.sum(d * d, axis=1)
+    got = np.asarray(batch_l2(jnp.asarray(q), jnp.asarray(d), jnp.asarray(dsq)))
+    want = np.asarray(ref.batch_l2_ref(jnp.asarray(q), jnp.asarray(d)))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    dtype=st.sampled_from([np.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_batch_l2_dtypes(dtype, seed):
+    r = _rng(seed)
+    q32 = r.standard_normal((8, 64)).astype(np.float32)
+    d32 = r.standard_normal((128, 64)).astype(np.float32)
+    q = jnp.asarray(q32, dtype)
+    d = jnp.asarray(d32, dtype)
+    dsq = jnp.sum(d.astype(jnp.float32) ** 2, axis=1)
+    got = np.asarray(batch_l2(q, d, dsq), np.float32)
+    want = np.asarray(ref.batch_l2_ref(jnp.asarray(q32), jnp.asarray(d32)))
+    tol = 5e-4 if dtype == np.float32 else 0.35
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_batch_l2_zero_distance_on_identical_points():
+    r = _rng(0)
+    d = r.standard_normal((16, 32)).astype(np.float32)
+    dsq = np.sum(d * d, axis=1)
+    got = np.asarray(batch_l2(jnp.asarray(d[:4]), jnp.asarray(d), jnp.asarray(dsq)))
+    # Diagonal entries are distances from a point to itself.
+    diag = np.array([got[i, i] for i in range(4)])
+    np.testing.assert_allclose(diag, np.zeros(4), atol=1e-3)
+
+
+def test_batch_l2_exact_tile_shapes():
+    """Shapes exactly at the tile boundary (no padding path)."""
+    r = _rng(7)
+    q = r.standard_normal((8, 128)).astype(np.float32)
+    d = r.standard_normal((256, 128)).astype(np.float32)
+    dsq = np.sum(d * d, axis=1)
+    got = np.asarray(batch_l2(jnp.asarray(q), jnp.asarray(d), jnp.asarray(dsq)))
+    want = np.asarray(ref.batch_l2_ref(jnp.asarray(q), jnp.asarray(d)))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------ finger_approx
+
+def _finger_inputs(r, b, c, rank, params=None):
+    pq = r.standard_normal((b, rank)).astype(np.float32)
+    pd = r.standard_normal((c, rank)).astype(np.float32)
+    qn = np.abs(r.standard_normal(b)).astype(np.float32)
+    dn = np.abs(r.standard_normal(c)).astype(np.float32)
+    qp = r.standard_normal(b).astype(np.float32)
+    dp = r.standard_normal(c).astype(np.float32)
+    if params is None:
+        prm = np.zeros(PARAMS_LEN, np.float32)
+        prm[:5] = [0.02, 0.3, -0.01, 0.35, 0.005]  # mu, sigma, mu_hat, sigma_hat, eps
+    else:
+        prm = params
+    return pq, pd, qn, dn, qp, dp, prm
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 20),
+    c=st.integers(1, 200),
+    rank=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_finger_matches_ref(b, c, rank, seed):
+    args = _finger_inputs(_rng(seed), b, c, rank)
+    jargs = [jnp.asarray(a) for a in args]
+    got = np.asarray(finger_approx(*jargs))
+    want = np.asarray(ref.finger_approx_ref(*jargs))
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+def test_finger_identity_params_full_rank_recovers_exact_l2():
+    """With P = I and identity distribution matching, Algorithm 3 reduces to
+    Eq. 2 exactly, so the approx distance equals the true squared L2."""
+    r = _rng(3)
+    m = 16
+    c_vec = r.standard_normal(m).astype(np.float32)
+    c_sq = float(c_vec @ c_vec)
+    q = r.standard_normal((6, m)).astype(np.float32)
+    d = r.standard_normal((40, m)).astype(np.float32)
+
+    def decompose(x):
+        coef = (x @ c_vec) / c_sq              # (n,)
+        proj = coef[:, None] * c_vec[None, :]  # (n, m)
+        res = x - proj
+        return coef * np.sqrt(c_sq), res       # signed proj length, residual
+
+    qp, q_res = decompose(q)
+    dp, d_res = decompose(d)
+    qn = np.linalg.norm(q_res, axis=1)
+    dn = np.linalg.norm(d_res, axis=1)
+    prm = np.zeros(PARAMS_LEN, np.float32)
+    prm[:5] = [0.0, 1.0, 0.0, 1.0, 0.0]  # identity matching
+    got = np.asarray(finger_approx(
+        jnp.asarray(q_res), jnp.asarray(d_res), jnp.asarray(qn), jnp.asarray(dn),
+        jnp.asarray(qp.astype(np.float32)), jnp.asarray(dp.astype(np.float32)),
+        jnp.asarray(prm)))
+    want = np.asarray(ref.batch_l2_ref(jnp.asarray(q), jnp.asarray(d)))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_finger_distribution_matching_shifts_values():
+    """Changing (mu, sigma) must move the estimate in the documented
+    direction: larger mu -> larger cosine estimate -> smaller distance."""
+    r = _rng(11)
+    pq, pd, qn, dn, qp, dp, prm = _finger_inputs(r, 4, 32, 16)
+    lo = prm.copy(); lo[0] = -0.5
+    hi = prm.copy(); hi[0] = 0.5
+    d_lo = np.asarray(finger_approx(*[jnp.asarray(a) for a in (pq, pd, qn, dn, qp, dp, lo)]))
+    d_hi = np.asarray(finger_approx(*[jnp.asarray(a) for a in (pq, pd, qn, dn, qp, dp, hi)]))
+    # distance = ... - 2*qn*dn*t, and t is affine-increasing in mu
+    assert np.all(d_hi <= d_lo + 1e-5)
+
+
+def test_finger_zero_residual_query_is_stable():
+    """A query lying exactly along the center (q_res = 0) must not NaN."""
+    r = _rng(5)
+    pq = np.zeros((2, 16), np.float32)
+    pd = r.standard_normal((32, 16)).astype(np.float32)
+    qn = np.zeros(2, np.float32)
+    dn = np.abs(r.standard_normal(32)).astype(np.float32)
+    qp = r.standard_normal(2).astype(np.float32)
+    dp = r.standard_normal(32).astype(np.float32)
+    prm = np.zeros(PARAMS_LEN, np.float32)
+    prm[:5] = [0.0, 1.0, 0.0, 1.0, 0.0]
+    got = np.asarray(finger_approx(*[jnp.asarray(a) for a in (pq, pd, qn, dn, qp, dp, prm)]))
+    assert np.all(np.isfinite(got))

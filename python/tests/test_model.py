@@ -1,0 +1,68 @@
+"""L2 model graph tests: rerank shapes/semantics and AOT lowering."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from compile.aot import to_hlo_text, entries
+
+import jax
+
+
+def test_rerank_topk_matches_ref():
+    r = np.random.default_rng(0)
+    q = r.standard_normal((8, 64)).astype(np.float32)
+    d = r.standard_normal((200, 64)).astype(np.float32)
+    dsq = np.sum(d * d, axis=1)
+    dist, idx = model.rerank_topk(jnp.asarray(q), jnp.asarray(d), jnp.asarray(dsq), k=10)
+    _, want_idx = ref.rerank_topk_ref(jnp.asarray(q), jnp.asarray(d), 10)
+    # Indices must match the oracle (distances are distinct w.p. 1).
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(want_idx))
+    # Distances ascending within each row.
+    dist = np.asarray(dist)
+    assert np.all(np.diff(dist, axis=1) >= -1e-6)
+
+
+def test_rerank_padded_slots_sort_last():
+    """Slots padded with huge sqnorm (the runtime's padding convention) must
+    never appear in the top-k when enough real candidates exist."""
+    r = np.random.default_rng(1)
+    q = r.standard_normal((4, 32)).astype(np.float32)
+    d = np.zeros((64, 32), np.float32)
+    d[:40] = r.standard_normal((40, 32)).astype(np.float32)
+    dsq = np.full(64, 1e30, np.float32)
+    dsq[:40] = np.sum(d[:40] * d[:40], axis=1)
+    _, idx = model.rerank_topk(jnp.asarray(q), jnp.asarray(d), jnp.asarray(dsq), k=5)
+    assert np.all(np.asarray(idx) < 40)
+
+
+def test_rerank_i32_indices():
+    r = np.random.default_rng(2)
+    q = r.standard_normal((2, 16)).astype(np.float32)
+    d = r.standard_normal((32, 16)).astype(np.float32)
+    dsq = np.sum(d * d, axis=1)
+    _, idx = model.rerank_topk(jnp.asarray(q), jnp.asarray(d), jnp.asarray(dsq), k=3)
+    assert idx.dtype == jnp.int32
+
+
+# ------------------------------------------------------------------- AOT
+
+def test_aot_entries_lower_to_hlo_text():
+    """Every shipped artifact must lower to parseable-looking HLO text."""
+    for name, fn, specs, meta in entries():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        assert "ENTRY" in text, name
+        assert "HloModule" in text, name
+        # return_tuple=True: root must be a tuple
+        assert "tuple(" in text or "(f32" in text, name
+
+
+def test_aot_manifest_meta_consistent():
+    for name, fn, specs, meta in entries():
+        assert meta["kind"] in ("score_l2", "rerank", "finger")
+        for o in meta["outputs"]:
+            assert o["dtype"] in ("f32", "i32")
+        assert len(specs) >= 3

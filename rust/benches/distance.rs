@@ -1,0 +1,73 @@
+//! Microbenchmarks of the distance kernels (harness=false: the offline
+//! environment has no criterion; this prints median-of-runs ns/op).
+//!
+//!   cargo bench --bench distance
+
+use std::time::Instant;
+
+use finger_ann::core::distance::{dot, l2_sq};
+use finger_ann::core::matrix::Matrix;
+use finger_ann::core::rng::Pcg32;
+use finger_ann::finger::approx::{approx_dist_sq, QueryCenter, QueryState};
+use finger_ann::finger::construct::{FingerIndex, FingerParams};
+use finger_ann::graph::hnsw::{Hnsw, HnswParams};
+
+fn bench<F: FnMut() -> f32>(name: &str, iters: usize, mut f: F) {
+    // Warmup + 5 timed reps; report the median.
+    let mut sink = 0.0f32;
+    for _ in 0..iters / 10 + 1 {
+        sink += f();
+    }
+    let mut reps: Vec<f64> = (0..5)
+        .map(|_| {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                sink += f();
+            }
+            t0.elapsed().as_nanos() as f64 / iters as f64
+        })
+        .collect();
+    reps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!("{name:<40} {:>10.1} ns/op   (sink {sink:.1})", reps[2]);
+}
+
+fn main() {
+    let mut rng = Pcg32::new(1);
+    for dim in [96usize, 128, 256, 784, 960] {
+        let a: Vec<f32> = (0..dim).map(|_| rng.next_gaussian()).collect();
+        let b: Vec<f32> = (0..dim).map(|_| rng.next_gaussian()).collect();
+        bench(&format!("l2_sq dim={dim}"), 100_000, || l2_sq(&a, &b));
+        bench(&format!("dot   dim={dim}"), 100_000, || dot(&a, &b));
+    }
+
+    // FINGER approximate distance vs full distance at the paper's ranks.
+    let dim = 128;
+    let n = 2000;
+    let mut data = Matrix::zeros(0, 0);
+    for _ in 0..n {
+        let row: Vec<f32> = (0..dim).map(|_| rng.next_gaussian()).collect();
+        data.push_row(&row);
+    }
+    let h = Hnsw::build(&data, HnswParams { m: 16, ef_construction: 80, ..Default::default() });
+    let q: Vec<f32> = (0..dim).map(|_| rng.next_gaussian()).collect();
+    for rank in [8usize, 16, 32] {
+        let idx = FingerIndex::build(&data, &h.base, FingerParams { rank, ..Default::default() });
+        let qs = QueryState::new(&idx, &q);
+        let qc = QueryCenter::new(&idx, &qs, 0, l2_sq(&q, data.row(0)));
+        let slots: Vec<usize> = (0..h.base.degree(0)).map(|j| h.base.edge_slot(0, j)).collect();
+        let mut i = 0;
+        bench(&format!("finger approx_dist_sq r={rank} (m={dim})"), 100_000, || {
+            i = (i + 1) % slots.len();
+            approx_dist_sq(&idx, &qc, slots[i])
+        });
+    }
+    let d0 = data.row(0).to_vec();
+    bench(&format!("exact l2 (m={dim}) for comparison"), 100_000, || l2_sq(&q, &d0));
+
+    // QueryCenter setup amortized per expansion.
+    let idx = FingerIndex::build(&data, &h.base, FingerParams { rank: 16, ..Default::default() });
+    let qs = QueryState::new(&idx, &q);
+    bench("QueryCenter::new r=16", 100_000, || {
+        QueryCenter::new(&idx, &qs, 7, l2_sq(&q, data.row(7))).q_res_norm
+    });
+}

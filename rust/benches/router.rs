@@ -1,0 +1,91 @@
+//! Router/batcher benchmark: in-process request throughput and latency
+//! through the dynamic batcher + worker pool (no TCP), at several offered
+//! batch sizes — the serving-layer overhead budget.
+//!
+//!   cargo bench --bench router
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use finger_ann::data::spec_by_name;
+use finger_ann::finger::construct::FingerParams;
+use finger_ann::finger::search::FingerHnsw;
+use finger_ann::graph::hnsw::HnswParams;
+use finger_ann::router::{IndexKind, QueryRequest, ServeIndex, Server, ServerConfig};
+
+fn main() {
+    let spec = spec_by_name("sift-sim-128", 0.1).unwrap();
+    println!("dataset: {} (n={}, dim={})", spec.name, spec.n, spec.dim);
+    let ds = spec.generate();
+    let fh = FingerHnsw::build(
+        &ds.data,
+        HnswParams { m: 16, ef_construction: 100, ..Default::default() },
+        FingerParams { rank: 16, ..Default::default() },
+    );
+    let queries = ds.queries.clone();
+    let index = Arc::new(ServeIndex {
+        data: ds.data,
+        kind: IndexKind::Finger(fh),
+        ef_search: 60,
+    });
+
+    println!(
+        "{:>8} {:>8} {:>10} {:>12} {:>12} {:>12}",
+        "workers", "batch", "clients", "QPS", "p50 us", "p99 us"
+    );
+    for &(workers, max_batch) in &[(1usize, 1usize), (2, 4), (4, 8), (8, 16)] {
+        let server = Server::start(
+            Arc::clone(&index),
+            ServerConfig {
+                addr: "127.0.0.1:0".into(),
+                workers,
+                max_batch,
+                max_wait: Duration::from_micros(100),
+                max_queue: 8192,
+                use_pjrt_rerank: false,
+            },
+            None,
+        )
+        .unwrap();
+        let server = Arc::new(server);
+        let n_clients = 8;
+        let rounds = 40;
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..n_clients {
+            let server = Arc::clone(&server);
+            let queries = queries.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut lats = Vec::new();
+                for round in 0..rounds {
+                    let qi = (c * rounds + round) % queries.rows();
+                    let rx = server
+                        .submit_local(QueryRequest {
+                            id: (c * rounds + round) as u64,
+                            vector: queries.row(qi).to_vec(),
+                            k: 10,
+                        })
+                        .unwrap();
+                    let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+                    lats.push(resp.latency_us);
+                }
+                lats
+            }));
+        }
+        let mut lats: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        let wall = t0.elapsed().as_secs_f64();
+        lats.sort_unstable();
+        let total = lats.len();
+        let pct = |p: f64| lats[((p / 100.0) * (total - 1) as f64) as usize];
+        println!(
+            "{:>8} {:>8} {:>10} {:>12.0} {:>12} {:>12}",
+            workers,
+            max_batch,
+            n_clients,
+            total as f64 / wall,
+            pct(50.0),
+            pct(99.0)
+        );
+        Arc::try_unwrap(server).ok().unwrap().shutdown();
+    }
+}

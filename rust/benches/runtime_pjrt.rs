@@ -1,0 +1,64 @@
+//! PJRT runtime benchmark: latency of executing the AOT-compiled
+//! JAX/Pallas artifacts (rerank + score panels) from Rust.
+//!
+//!   make artifacts && cargo bench --bench runtime_pjrt
+
+use std::time::Instant;
+
+use finger_ann::core::matrix::Matrix;
+use finger_ann::core::rng::Pcg32;
+use finger_ann::runtime::{default_artifacts_dir, Engine};
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts not built (run `make artifacts`); skipping");
+        return;
+    }
+    let engine = Engine::new(&dir).expect("engine");
+    let mut rng = Pcg32::new(2);
+
+    for (name, dim, cands) in [
+        ("rerank_b4_c64_d32_k5", 32usize, 64usize),
+        ("rerank_b8_c256_d128_k10", 128, 256),
+        ("score_l2_b8_c256_d128", 128, 256),
+    ] {
+        let exe = engine.compile(name).expect("compile");
+        let mut data = Matrix::zeros(0, 0);
+        for _ in 0..cands {
+            let row: Vec<f32> = (0..dim).map(|_| rng.next_gaussian()).collect();
+            data.push_row(&row);
+        }
+        let b = exe.spec.meta["batch"];
+        let mut queries = Matrix::zeros(0, 0);
+        for _ in 0..b {
+            let row: Vec<f32> = (0..dim).map(|_| rng.next_gaussian()).collect();
+            queries.push_row(&row);
+        }
+        let ids: Vec<u32> = (0..cands as u32).collect();
+
+        // Warmup
+        for _ in 0..3 {
+            if exe.spec.kind == "rerank" {
+                exe.rerank(&data, &queries, &ids).unwrap();
+            } else {
+                exe.score_l2(&data, &queries, &ids).unwrap();
+            }
+        }
+        let iters = 50;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            if exe.spec.kind == "rerank" {
+                exe.rerank(&data, &queries, &ids).unwrap();
+            } else {
+                exe.score_l2(&data, &queries, &ids).unwrap();
+            }
+        }
+        let us = t0.elapsed().as_micros() as f64 / iters as f64;
+        let pairs = (b * cands) as f64;
+        println!(
+            "{name:<28} {us:>10.1} us/exec  ({:.1} ns per query-candidate pair, batch={b})",
+            us * 1000.0 / pairs
+        );
+    }
+}

@@ -1,0 +1,70 @@
+//! End-to-end search benchmark: HNSW vs HNSW-FINGER per-query latency and
+//! throughput at matched ef — the microbench behind Figures 5/8.
+//!
+//!   cargo bench --bench search
+
+use std::time::Instant;
+
+use finger_ann::data::groundtruth::exact_knn;
+use finger_ann::data::spec_by_name;
+use finger_ann::eval::recall;
+use finger_ann::finger::construct::{FingerIndex, FingerParams};
+use finger_ann::finger::search::FingerHnsw;
+use finger_ann::graph::hnsw::{Hnsw, HnswParams};
+use finger_ann::graph::search::SearchStats;
+use finger_ann::graph::visited::VisitedSet;
+
+fn main() {
+    for name in ["sift-sim-128", "gist-sim-960"] {
+        let spec = spec_by_name(name, 0.15).unwrap();
+        println!("\n=== {} (n={}, dim={}) ===", spec.name, spec.n, spec.dim);
+        let ds = spec.generate();
+        let gt = exact_knn(&ds.data, &ds.queries, 10);
+        let hnsw = Hnsw::build(&ds.data, HnswParams { m: 16, ef_construction: 120, ..Default::default() });
+        let rank = if name.starts_with("gist") { 16 } else { 16 };
+        let fidx = FingerIndex::build(&ds.data, &hnsw.base, FingerParams { rank, ..Default::default() });
+        let fh = FingerHnsw { hnsw, index: fidx };
+
+        let mut vis = VisitedSet::new(ds.data.rows());
+        println!(
+            "{:<14} {:>5} {:>10} {:>10} {:>12} {:>12}",
+            "method", "ef", "recall@10", "QPS", "us/query", "dist calls"
+        );
+        for ef in [20usize, 40, 80, 160] {
+            for method in ["hnsw", "hnsw-finger"] {
+                // Warmup
+                for qi in 0..ds.queries.rows().min(8) {
+                    let q = ds.queries.row(qi);
+                    if method == "hnsw" {
+                        fh.hnsw.search(&ds.data, q, 10, ef, &mut vis, None);
+                    } else {
+                        fh.search(&ds.data, q, 10, ef, &mut vis, None);
+                    }
+                }
+                let mut stats = SearchStats::default();
+                let mut rec = 0.0;
+                let t0 = Instant::now();
+                for qi in 0..ds.queries.rows() {
+                    let q = ds.queries.row(qi);
+                    let res = if method == "hnsw" {
+                        fh.hnsw.search(&ds.data, q, 10, ef, &mut vis, Some(&mut stats))
+                    } else {
+                        fh.search(&ds.data, q, 10, ef, &mut vis, Some(&mut stats))
+                    };
+                    rec += recall(&res, &gt[qi]);
+                }
+                let secs = t0.elapsed().as_secs_f64();
+                let nq = ds.queries.rows() as f64;
+                println!(
+                    "{:<14} {:>5} {:>10.4} {:>10.0} {:>12.1} {:>12.0}",
+                    method,
+                    ef,
+                    rec / nq,
+                    nq / secs,
+                    1e6 * secs / nq,
+                    stats.dist_calls as f64 / nq
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Hand-rolled CLI argument parsing (no clap in the offline environment).
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals + `--key value` / `--flag` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                // `--key=value` or `--key value` or bare flag.
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options.insert(key.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(&argv(&[
+            "bench", "figure5", "--scale", "0.5", "--out=results", "--verbose",
+        ]));
+        assert_eq!(a.positional, vec!["bench", "figure5"]);
+        assert_eq!(a.get("scale"), Some("0.5"));
+        assert_eq!(a.get("out"), Some("results"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get_f64("scale", 1.0), 0.5);
+        assert_eq!(a.get_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn trailing_flag_is_flag() {
+        let a = Args::parse(&argv(&["serve", "--dry-run"]));
+        assert!(a.has_flag("dry-run"));
+        assert_eq!(a.positional, vec!["serve"]);
+    }
+
+    #[test]
+    fn flag_before_positional_consumes_value() {
+        // Documented behavior: `--key value` greedily binds the next
+        // non-`--` token, so boolean flags belong after positionals.
+        let a = Args::parse(&argv(&["--rerank", "serve"]));
+        assert_eq!(a.get("rerank"), Some("serve"));
+    }
+}

@@ -1,0 +1,238 @@
+//! Dense linear algebra for the FINGER basis: covariance + orthogonal
+//! (block power) iteration. No LAPACK in the offline environment, so the
+//! top-r eigenbasis of the residual second-moment matrix is computed with
+//! a from-scratch subspace iteration — deterministic, and fast enough for
+//! m up to ~1000 and r up to ~64 (one-time index-build cost).
+//!
+//! Paper hook: Proposition 3.1 — the optimal rank-r projection P for the
+//! pairwise distance-distortion objective (Eq. 3) is the top-r left
+//! singular basis of D_res, i.e. the top-r eigenvectors of
+//! D_res D_resᵀ = Σᵢ x_i x_iᵀ over sampled residual vectors x_i.
+
+use crate::core::distance::{dot, norm};
+use crate::core::matrix::Matrix;
+use crate::core::rng::Pcg32;
+
+/// Second-moment matrix  C = (1/N) Σ rows[i] rows[i]ᵀ  (m × m, symmetric).
+/// Residual vectors are already mean-free by construction in FINGER, so
+/// this is the covariance up to the usual centering nuance.
+pub fn second_moment(rows: &Matrix) -> Matrix {
+    let n = rows.rows();
+    let m = rows.cols();
+    let mut c = Matrix::zeros(m, m);
+    if n == 0 {
+        return c;
+    }
+    // Rank-1 accumulation; upper triangle then mirror.
+    for i in 0..n {
+        let x = rows.row(i);
+        for a in 0..m {
+            let xa = x[a];
+            if xa == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(a);
+            for b in a..m {
+                crow[b] += xa * x[b];
+            }
+        }
+    }
+    let inv = 1.0 / n as f32;
+    for a in 0..m {
+        for b in a..m {
+            let v = c.row(a)[b] * inv;
+            c.row_mut(a)[b] = v;
+            c.row_mut(b)[a] = v;
+        }
+    }
+    c
+}
+
+/// Modified Gram–Schmidt on the rows of `q` (in place). Returns per-row
+/// norms before normalization (useful as Ritz-value estimates).
+fn mgs_rows(q: &mut Matrix) -> Vec<f32> {
+    let r = q.rows();
+    let m = q.cols();
+    let mut norms = vec![0.0f32; r];
+    for i in 0..r {
+        // Orthogonalize against previous rows.
+        for j in 0..i {
+            let (head, tail) = rows_split_mut(q, j, i);
+            let coef = dot(tail, head);
+            for k in 0..m {
+                tail[k] -= coef * head[k];
+            }
+        }
+        let ni = norm(q.row(i));
+        norms[i] = ni;
+        if ni > 1e-12 {
+            let inv = 1.0 / ni;
+            for v in q.row_mut(i) {
+                *v *= inv;
+            }
+        } else {
+            // Degenerate direction: re-randomize deterministically.
+            let mut rng = Pcg32::with_stream(0xC0FFEE ^ i as u64, 17);
+            for v in q.row_mut(i) {
+                *v = rng.next_gaussian();
+            }
+            let ni2 = norm(q.row(i));
+            let inv = 1.0 / ni2.max(1e-12);
+            for v in q.row_mut(i) {
+                *v *= inv;
+            }
+        }
+    }
+    norms
+}
+
+/// Split-borrow helper: returns (&row j, &mut row i), j < i.
+fn rows_split_mut(m: &mut Matrix, j: usize, i: usize) -> (&[f32], &mut [f32]) {
+    assert!(j < i);
+    let cols = m.cols();
+    let (lo, hi) = m.as_mut_slice().split_at_mut(i * cols);
+    (&lo[j * cols..(j + 1) * cols], &mut hi[..cols])
+}
+
+/// Result of the eigen solve: rows of `basis` are orthonormal eigenvectors
+/// (descending eigenvalue), `eigenvalues[i]` the matching Ritz values.
+pub struct EigenBasis {
+    pub basis: Matrix,
+    pub eigenvalues: Vec<f32>,
+}
+
+/// Top-`r` eigenpairs of the symmetric matrix `c` via orthogonal iteration.
+pub fn top_eigenvectors(c: &Matrix, r: usize, iters: usize, seed: u64) -> EigenBasis {
+    let m = c.rows();
+    assert_eq!(c.rows(), c.cols(), "symmetric matrix expected");
+    let r = r.min(m);
+    let mut q = Matrix::zeros(r, m);
+    let mut rng = Pcg32::new(seed);
+    for i in 0..r {
+        for v in q.row_mut(i) {
+            *v = rng.next_gaussian();
+        }
+    }
+    mgs_rows(&mut q);
+    let mut norms = vec![0.0f32; r];
+    for _ in 0..iters {
+        // Y = Q Cᵀ (rows of Q times symmetric C) — row-major friendly.
+        let mut y = Matrix::zeros(r, m);
+        for i in 0..r {
+            let qi = q.row(i);
+            let yi = y.row_mut(i);
+            for a in 0..m {
+                yi[a] = dot(qi, c.row(a));
+            }
+        }
+        q = y;
+        norms = mgs_rows(&mut q);
+    }
+    EigenBasis {
+        basis: q,
+        eigenvalues: norms,
+    }
+}
+
+/// The FINGER projection (Prop. 3.1): rows of the returned matrix are the
+/// top-r left singular directions of the residual collection (given as
+/// rows of `residuals`, i.e. N × m). `P` has shape r × m; apply as P·x.
+pub fn finger_projection(residuals: &Matrix, r: usize, seed: u64) -> EigenBasis {
+    let c = second_moment(residuals);
+    top_eigenvectors(&c, r, 40, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a matrix with known spectrum: C = Σ λ_i v_i v_iᵀ over an
+    /// orthonormal set {v_i}.
+    fn known_spectrum(m: usize, lambdas: &[f32], seed: u64) -> (Matrix, Matrix) {
+        let mut q = Matrix::zeros(lambdas.len(), m);
+        let mut rng = Pcg32::new(seed);
+        for i in 0..lambdas.len() {
+            for v in q.row_mut(i) {
+                *v = rng.next_gaussian();
+            }
+        }
+        mgs_rows(&mut q);
+        let mut c = Matrix::zeros(m, m);
+        for (i, &l) in lambdas.iter().enumerate() {
+            let v = q.row(i).to_vec();
+            for a in 0..m {
+                for b in 0..m {
+                    c.row_mut(a)[b] += l * v[a] * v[b];
+                }
+            }
+        }
+        (c, q)
+    }
+
+    #[test]
+    fn recovers_dominant_eigenvectors() {
+        let (c, q) = known_spectrum(24, &[10.0, 5.0, 1.0], 3);
+        let eb = top_eigenvectors(&c, 2, 60, 7);
+        for i in 0..2 {
+            let overlap = dot(eb.basis.row(i), q.row(i)).abs();
+            assert!(overlap > 0.99, "eigvec {i} overlap {overlap}");
+        }
+        assert!((eb.eigenvalues[0] - 10.0).abs() < 0.1);
+        assert!((eb.eigenvalues[1] - 5.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn basis_is_orthonormal() {
+        let (c, _) = known_spectrum(16, &[4.0, 3.0, 2.0, 1.0], 11);
+        let eb = top_eigenvectors(&c, 4, 60, 5);
+        for i in 0..4 {
+            for j in 0..4 {
+                let d = dot(eb.basis.row(i), eb.basis.row(j));
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((d - want).abs() < 1e-3, "({i},{j}) = {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn second_moment_of_identity_rows() {
+        // Rows e_0, e_1 -> C = diag(0.5, 0.5)
+        let rows = Matrix::from_rows(&[vec![1.0, 0.0], vec![0.0, 1.0]]);
+        let c = second_moment(&rows);
+        assert!((c.row(0)[0] - 0.5).abs() < 1e-6);
+        assert!((c.row(1)[1] - 0.5).abs() < 1e-6);
+        assert!(c.row(0)[1].abs() < 1e-6);
+    }
+
+    #[test]
+    fn projection_captures_low_rank_structure() {
+        // Residuals concentrated in a 2-D subspace of R^12 + small noise.
+        let mut rng = Pcg32::new(42);
+        let dir1: Vec<f32> = (0..12).map(|_| rng.next_gaussian()).collect();
+        let dir2: Vec<f32> = (0..12).map(|_| rng.next_gaussian()).collect();
+        let mut rows = Vec::new();
+        for _ in 0..400 {
+            let a = rng.next_gaussian() * 3.0;
+            let b = rng.next_gaussian() * 2.0;
+            let row: Vec<f32> = (0..12)
+                .map(|k| a * dir1[k] + b * dir2[k] + 0.01 * rng.next_gaussian())
+                .collect();
+            rows.push(row);
+        }
+        let m = Matrix::from_rows(&rows);
+        let eb = finger_projection(&m, 2, 1);
+        // Projected energy should capture nearly all variance.
+        let total: f32 = rows
+            .iter()
+            .map(|r| crate::core::distance::norm_sq(r))
+            .sum::<f32>();
+        let mut captured = 0.0f32;
+        for row in &rows {
+            for i in 0..2 {
+                let c = dot(row, eb.basis.row(i));
+                captured += c * c;
+            }
+        }
+        assert!(captured / total > 0.995, "captured {}", captured / total);
+    }
+}

@@ -1,0 +1,10 @@
+//! Core substrate: distances, RNG, dense matrices, eigen solves, scalar
+//! statistics, and a minimal JSON codec.
+
+pub mod distance;
+pub mod json;
+pub mod linalg;
+pub mod matrix;
+pub mod rng;
+pub mod stats;
+pub mod threads;

@@ -1,0 +1,193 @@
+//! Scalar statistics used by FINGER's distribution matching (Algorithm 2)
+//! and by the Figure 3/4 distribution analyses.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() as f32 / xs.len() as f32
+}
+
+/// Population variance (the paper's Algorithm 2 uses 1/N).
+pub fn variance(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs) as f64;
+    (xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64) as f32
+}
+
+pub fn stddev(xs: &[f32]) -> f32 {
+    variance(xs).sqrt()
+}
+
+/// Fisher skewness g1 = m3 / m2^{3/2}.
+pub fn skewness(xs: &[f32]) -> f32 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs) as f64;
+    let n = xs.len() as f64;
+    let m2 = xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / n;
+    let m3 = xs.iter().map(|&x| (x as f64 - m).powi(3)).sum::<f64>() / n;
+    if m2 <= 1e-18 {
+        0.0
+    } else {
+        (m3 / m2.powf(1.5)) as f32
+    }
+}
+
+/// Excess kurtosis g2 = m4 / m2^2 - 3.
+pub fn excess_kurtosis(xs: &[f32]) -> f32 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs) as f64;
+    let n = xs.len() as f64;
+    let m2 = xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / n;
+    let m4 = xs.iter().map(|&x| (x as f64 - m).powi(4)).sum::<f64>() / n;
+    if m2 <= 1e-18 {
+        0.0
+    } else {
+        (m4 / (m2 * m2) - 3.0) as f32
+    }
+}
+
+/// Jarque–Bera normality statistic: JB = n/6 · (g1² + g2²/4).
+/// Under normality JB ~ χ²(2); JB < ~6 means "not rejected at 5%".
+/// Used by the Figure 3 analysis to quantify "distributes like a
+/// Gaussian" beyond eyeballing the histogram.
+pub fn jarque_bera(xs: &[f32]) -> f64 {
+    if xs.len() < 8 {
+        return 0.0;
+    }
+    let n = xs.len() as f64;
+    let g1 = skewness(xs) as f64;
+    let g2 = excess_kurtosis(xs) as f64;
+    n / 6.0 * (g1 * g1 + g2 * g2 / 4.0)
+}
+
+/// Pearson correlation coefficient; 0 when either side is constant.
+pub fn pearson(xs: &[f32], ys: &[f32]) -> f32 {
+    assert_eq!(xs.len(), ys.len());
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let mx = mean(xs) as f64;
+    let my = mean(ys) as f64;
+    let mut sxy = 0.0f64;
+    let mut sxx = 0.0f64;
+    let mut syy = 0.0f64;
+    for (&x, &y) in xs.iter().zip(ys) {
+        let dx = x as f64 - mx;
+        let dy = y as f64 - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    let denom = (sxx * syy).sqrt();
+    if denom <= 1e-18 {
+        0.0
+    } else {
+        (sxy / denom) as f32
+    }
+}
+
+/// Equal-width histogram over [lo, hi]; values outside are clamped into the
+/// edge bins. Returns bin counts.
+pub fn histogram(xs: &[f32], lo: f32, hi: f32, bins: usize) -> Vec<usize> {
+    assert!(bins > 0 && hi > lo);
+    let mut out = vec![0usize; bins];
+    let w = (hi - lo) / bins as f32;
+    for &x in xs {
+        let mut b = ((x - lo) / w) as isize;
+        if b < 0 {
+            b = 0;
+        }
+        if b as usize >= bins {
+            b = bins as isize - 1;
+        }
+        out[b as usize] += 1;
+    }
+    out
+}
+
+/// Percentile (nearest-rank) of an unsorted slice; p in [0, 100].
+pub fn percentile(xs: &[f32], p: f64) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Pcg32;
+
+    #[test]
+    fn mean_var_basics() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-6);
+        assert!((variance(&xs) - 1.25).abs() < 1e-6);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn gaussian_sample_moments() {
+        let mut r = Pcg32::new(5);
+        let xs: Vec<f32> = (0..60_000).map(|_| 2.0 + 0.5 * r.next_gaussian()).collect();
+        assert!((mean(&xs) - 2.0).abs() < 0.02);
+        assert!((stddev(&xs) - 0.5).abs() < 0.02);
+        assert!(skewness(&xs).abs() < 0.05);
+        assert!(excess_kurtosis(&xs).abs() < 0.1);
+    }
+
+    #[test]
+    fn skewed_distribution_detected() {
+        let mut r = Pcg32::new(6);
+        // Exponential-ish: skewness ~ 2
+        let xs: Vec<f32> = (0..40_000).map(|_| -(1.0 - r.next_f32()).ln()).collect();
+        assert!(skewness(&xs) > 1.5);
+    }
+
+    #[test]
+    fn jarque_bera_accepts_gaussian_rejects_uniform() {
+        let mut r = Pcg32::new(8);
+        let gauss: Vec<f32> = (0..20_000).map(|_| r.next_gaussian()).collect();
+        let unif: Vec<f32> = (0..20_000).map(|_| r.next_f32()).collect();
+        let jb_g = jarque_bera(&gauss);
+        let jb_u = jarque_bera(&unif);
+        assert!(jb_g < 10.0, "gaussian JB = {jb_g}");
+        assert!(jb_u > 100.0, "uniform JB = {jb_u}"); // platykurtic: huge JB
+    }
+
+    #[test]
+    fn pearson_perfect_and_inverse() {
+        let xs: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let ys: Vec<f32> = xs.iter().map(|&x| 3.0 * x + 1.0).collect();
+        let zs: Vec<f32> = xs.iter().map(|&x| -x).collect();
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-5);
+        assert!((pearson(&xs, &zs) + 1.0).abs() < 1e-5);
+        assert_eq!(pearson(&[1.0, 1.0], &[2.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn histogram_counts_and_clamping() {
+        let h = histogram(&[-5.0, 0.1, 0.2, 0.9, 5.0], 0.0, 1.0, 2);
+        assert_eq!(h, vec![3, 2]);
+        assert_eq!(h.iter().sum::<usize>(), 5);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [5.0f32, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+}

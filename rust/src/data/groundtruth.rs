@@ -1,0 +1,89 @@
+//! Exact ground-truth K-nearest neighbors by threaded brute force.
+//! Used for recall evaluation in every figure harness.
+
+use crate::core::distance::l2_sq;
+use crate::core::matrix::Matrix;
+use crate::core::threads::{default_threads, parallel_map};
+
+/// Exact top-k neighbors of each query (ascending distance). O(nq · n · m).
+pub fn exact_knn(data: &Matrix, queries: &Matrix, k: usize) -> Vec<Vec<u32>> {
+    let k = k.min(data.rows());
+    parallel_map(queries.rows(), default_threads(), |qi| {
+        let q = queries.row(qi);
+        // Bounded max-heap of (dist, id).
+        let mut heap: Vec<(f32, u32)> = Vec::with_capacity(k + 1);
+        for i in 0..data.rows() {
+            let d = l2_sq(q, data.row(i));
+            if heap.len() < k {
+                heap.push((d, i as u32));
+                if heap.len() == k {
+                    heap.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                }
+            } else if d < heap[0].0 {
+                // Replace current worst, restore descending-by-dist order.
+                heap[0] = (d, i as u32);
+                let mut j = 0;
+                while j + 1 < heap.len() && heap[j].0 < heap[j + 1].0 {
+                    heap.swap(j, j + 1);
+                    j += 1;
+                }
+            }
+        }
+        heap.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        heap.into_iter().map(|(_, id)| id).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Pcg32;
+
+    fn naive_knn(data: &Matrix, q: &[f32], k: usize) -> Vec<u32> {
+        let mut d: Vec<(f32, u32)> = (0..data.rows())
+            .map(|i| (l2_sq(q, data.row(i)), i as u32))
+            .collect();
+        d.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        d.into_iter().take(k).map(|(_, i)| i).collect()
+    }
+
+    #[test]
+    fn matches_naive_sort() {
+        let mut rng = Pcg32::new(2);
+        let mut data = Matrix::zeros(0, 0);
+        for _ in 0..300 {
+            let row: Vec<f32> = (0..8).map(|_| rng.next_gaussian()).collect();
+            data.push_row(&row);
+        }
+        let mut queries = Matrix::zeros(0, 0);
+        for _ in 0..10 {
+            let row: Vec<f32> = (0..8).map(|_| rng.next_gaussian()).collect();
+            queries.push_row(&row);
+        }
+        let gt = exact_knn(&data, &queries, 10);
+        for qi in 0..queries.rows() {
+            assert_eq!(gt[qi], naive_knn(&data, queries.row(qi), 10), "query {qi}");
+        }
+    }
+
+    #[test]
+    fn k_larger_than_n_is_clamped() {
+        let data = Matrix::from_rows(&[vec![0.0, 0.0], vec![1.0, 1.0]]);
+        let queries = Matrix::from_rows(&[vec![0.1, 0.0]]);
+        let gt = exact_knn(&data, &queries, 10);
+        assert_eq!(gt[0], vec![0, 1]);
+    }
+
+    #[test]
+    fn self_query_returns_self_first() {
+        let mut rng = Pcg32::new(3);
+        let mut data = Matrix::zeros(0, 0);
+        for _ in 0..50 {
+            let row: Vec<f32> = (0..4).map(|_| rng.next_gaussian()).collect();
+            data.push_row(&row);
+        }
+        let q = Matrix::from_rows(&[data.row(7).to_vec()]);
+        let gt = exact_knn(&data, &q, 3);
+        assert_eq!(gt[0][0], 7);
+    }
+}

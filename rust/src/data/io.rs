@@ -1,0 +1,235 @@
+//! Dataset and matrix IO: the classic `fvecs`/`ivecs` formats used by the
+//! ANN-benchmarks ecosystem (SIFT/GIST distributions), plus a simple raw
+//! binary matrix format for index persistence.
+//!
+//! fvecs layout: per row, a little-endian i32 dimension followed by `dim`
+//! little-endian f32 values. ivecs is the same with i32 payloads.
+
+use std::fs::File;
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::core::matrix::Matrix;
+
+pub fn write_fvecs(path: &Path, m: &Matrix) -> io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    for i in 0..m.rows() {
+        w.write_all(&(m.cols() as i32).to_le_bytes())?;
+        for &v in m.row(i) {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+pub fn read_fvecs(path: &Path) -> io::Result<Matrix> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut out = Matrix::zeros(0, 0);
+    let mut dim_buf = [0u8; 4];
+    loop {
+        match r.read_exact(&mut dim_buf) {
+            Ok(()) => {}
+            Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e),
+        }
+        let dim = i32::from_le_bytes(dim_buf);
+        if dim <= 0 {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "bad fvecs dim"));
+        }
+        let mut row = vec![0f32; dim as usize];
+        let mut buf = vec![0u8; dim as usize * 4];
+        r.read_exact(&mut buf)?;
+        for (i, chunk) in buf.chunks_exact(4).enumerate() {
+            row[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        out.push_row(&row);
+    }
+    Ok(out)
+}
+
+pub fn write_ivecs(path: &Path, rows: &[Vec<u32>]) -> io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    for row in rows {
+        w.write_all(&(row.len() as i32).to_le_bytes())?;
+        for &v in row {
+            w.write_all(&(v as i32).to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+pub fn read_ivecs(path: &Path) -> io::Result<Vec<Vec<u32>>> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut out = Vec::new();
+    let mut dim_buf = [0u8; 4];
+    loop {
+        match r.read_exact(&mut dim_buf) {
+            Ok(()) => {}
+            Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e),
+        }
+        let dim = i32::from_le_bytes(dim_buf);
+        if dim < 0 {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "bad ivecs dim"));
+        }
+        let mut buf = vec![0u8; dim as usize * 4];
+        r.read_exact(&mut buf)?;
+        let row: Vec<u32> = buf
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()) as u32)
+            .collect();
+        out.push(row);
+    }
+    Ok(out)
+}
+
+// -------------------------- raw binary writer/reader for persistence ----
+
+/// Simple length-prefixed binary writer (little endian).
+pub struct BinWriter<W: Write> {
+    w: W,
+}
+
+impl<W: Write> BinWriter<W> {
+    pub fn new(w: W) -> Self {
+        Self { w }
+    }
+
+    pub fn u64(&mut self, v: u64) -> io::Result<()> {
+        self.w.write_all(&v.to_le_bytes())
+    }
+
+    pub fn f32_slice(&mut self, v: &[f32]) -> io::Result<()> {
+        self.u64(v.len() as u64)?;
+        for &x in v {
+            self.w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn u32_slice(&mut self, v: &[u32]) -> io::Result<()> {
+        self.u64(v.len() as u64)?;
+        for &x in v {
+            self.w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn matrix(&mut self, m: &Matrix) -> io::Result<()> {
+        self.u64(m.rows() as u64)?;
+        self.u64(m.cols() as u64)?;
+        self.f32_slice(m.as_slice())
+    }
+}
+
+/// Matching reader.
+pub struct BinReader<R: Read> {
+    r: R,
+}
+
+impl<R: Read> BinReader<R> {
+    pub fn new(r: R) -> Self {
+        Self { r }
+    }
+
+    pub fn u64(&mut self) -> io::Result<u64> {
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    pub fn f32_slice(&mut self) -> io::Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        let mut buf = vec![0u8; n * 4];
+        self.r.read_exact(&mut buf)?;
+        Ok(buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn u32_slice(&mut self) -> io::Result<Vec<u32>> {
+        let n = self.u64()? as usize;
+        let mut buf = vec![0u8; n * 4];
+        self.r.read_exact(&mut buf)?;
+        Ok(buf
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn matrix(&mut self) -> io::Result<Matrix> {
+        let rows = self.u64()? as usize;
+        let cols = self.u64()? as usize;
+        let data = self.f32_slice()?;
+        if data.len() != rows * cols {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "matrix shape"));
+        }
+        Ok(Matrix::from_vec(data, rows, cols))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Pcg32;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("finger_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn fvecs_roundtrip() {
+        let mut rng = Pcg32::new(1);
+        let mut m = Matrix::zeros(0, 0);
+        for _ in 0..17 {
+            let row: Vec<f32> = (0..9).map(|_| rng.next_gaussian()).collect();
+            m.push_row(&row);
+        }
+        let p = tmp("a.fvecs");
+        write_fvecs(&p, &m).unwrap();
+        let back = read_fvecs(&p).unwrap();
+        assert_eq!(m, back);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn ivecs_roundtrip() {
+        let rows = vec![vec![1u32, 2, 3], vec![7, 8, 9]];
+        let p = tmp("b.ivecs");
+        write_ivecs(&p, &rows).unwrap();
+        let back = read_ivecs(&p).unwrap();
+        assert_eq!(rows, back);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bin_roundtrip() {
+        let p = tmp("c.bin");
+        {
+            let mut w = BinWriter::new(std::fs::File::create(&p).unwrap());
+            w.u64(42).unwrap();
+            w.f32_slice(&[1.5, -2.5]).unwrap();
+            w.u32_slice(&[9, 10, 11]).unwrap();
+            w.matrix(&Matrix::from_rows(&[vec![1.0, 2.0]])).unwrap();
+        }
+        {
+            let mut r = BinReader::new(std::fs::File::open(&p).unwrap());
+            assert_eq!(r.u64().unwrap(), 42);
+            assert_eq!(r.f32_slice().unwrap(), vec![1.5, -2.5]);
+            assert_eq!(r.u32_slice().unwrap(), vec![9, 10, 11]);
+            assert_eq!(r.matrix().unwrap().row(0), &[1.0, 2.0]);
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn fvecs_rejects_corrupt() {
+        let p = tmp("d.fvecs");
+        std::fs::write(&p, [255u8, 255, 255, 255, 0, 0]).unwrap();
+        assert!(read_fvecs(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,9 @@
+//! Datasets: synthetic generators (paper-dataset stand-ins), fvecs/ivecs
+//! IO, binary persistence, and exact ground truth.
+
+pub mod groundtruth;
+pub mod io;
+pub mod persist;
+pub mod synth;
+
+pub use synth::{registry, spec_by_name, tiny, Dataset, SynthSpec};

@@ -1,0 +1,246 @@
+//! Index persistence: save/load the HNSW graph and the FINGER side-index
+//! to a single binary file, so serving restarts skip the build (a
+//! production requirement; Table 1 builds are minutes at full scale).
+//!
+//! Format (little-endian, length-prefixed; see `data::io::BinWriter`):
+//!   magic "FNGR" u32 | version u64 | section tags.
+
+use std::io;
+use std::path::Path;
+
+use crate::core::matrix::Matrix;
+use crate::data::io::{BinReader, BinWriter};
+use crate::finger::construct::{FingerIndex, FingerParams, MatchParams};
+use crate::finger::search::FingerHnsw;
+use crate::graph::adjacency::FlatAdj;
+use crate::graph::hnsw::{Hnsw, HnswParams};
+
+const MAGIC: u64 = 0x464E_4752; // "FNGR"
+const VERSION: u64 = 2;
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+fn write_adj<W: io::Write>(w: &mut BinWriter<W>, a: &FlatAdj) -> io::Result<()> {
+    w.u64(a.n() as u64)?;
+    w.u64(a.cap() as u64)?;
+    // Store as (len, neighbor list) rows; dense copy keeps slot stability.
+    for u in 0..a.n() as u32 {
+        w.u32_slice(a.neighbors(u))?;
+    }
+    Ok(())
+}
+
+fn read_adj<R: io::Read>(r: &mut BinReader<R>) -> io::Result<FlatAdj> {
+    let n = r.u64()? as usize;
+    let cap = r.u64()? as usize;
+    if cap > 1 << 20 || n > 1 << 32 {
+        return Err(bad("implausible adjacency header"));
+    }
+    let mut a = FlatAdj::new(n, cap);
+    for u in 0..n as u32 {
+        let list = r.u32_slice()?;
+        if list.len() > cap {
+            return Err(bad("row exceeds capacity"));
+        }
+        a.set(u, &list);
+    }
+    Ok(a)
+}
+
+pub fn save_hnsw<W: io::Write>(w: &mut BinWriter<W>, h: &Hnsw) -> io::Result<()> {
+    w.u64(h.params.m as u64)?;
+    w.u64(h.params.ef_construction as u64)?;
+    w.u64(h.params.seed)?;
+    w.u64(h.params.heuristic as u64)?;
+    w.u64(h.entry as u64)?;
+    w.u64(h.max_level as u64)?;
+    w.u32_slice(&h.levels.iter().map(|&l| l as u32).collect::<Vec<_>>())?;
+    write_adj(w, &h.base)?;
+    w.u64(h.upper.len() as u64)?;
+    for l in &h.upper {
+        write_adj(w, l)?;
+    }
+    Ok(())
+}
+
+pub fn load_hnsw<R: io::Read>(r: &mut BinReader<R>) -> io::Result<Hnsw> {
+    let m = r.u64()? as usize;
+    let ef_construction = r.u64()? as usize;
+    let seed = r.u64()?;
+    let heuristic = r.u64()? != 0;
+    let entry = r.u64()? as u32;
+    let max_level = r.u64()? as usize;
+    let levels: Vec<u8> = r.u32_slice()?.into_iter().map(|v| v as u8).collect();
+    let base = read_adj(r)?;
+    let n_upper = r.u64()? as usize;
+    let mut upper = Vec::with_capacity(n_upper);
+    for _ in 0..n_upper {
+        upper.push(read_adj(r)?);
+    }
+    Ok(Hnsw {
+        params: HnswParams {
+            m,
+            ef_construction,
+            seed,
+            heuristic,
+        },
+        base,
+        upper,
+        levels,
+        entry,
+        max_level,
+    })
+}
+
+pub fn save_finger<W: io::Write>(w: &mut BinWriter<W>, f: &FingerIndex) -> io::Result<()> {
+    w.u64(f.rank as u64)?;
+    w.matrix(&f.proj)?;
+    let mp = &f.matching;
+    w.f32_slice(&[mp.mu, mp.sigma, mp.mu_hat, mp.sigma_hat, mp.eps, mp.correlation])?;
+    w.u64(f.params.max_svd_samples as u64)?;
+    w.u64(f.params.distribution_matching as u64)?;
+    w.u64(f.params.error_correction as u64)?;
+    w.u64(f.params.seed)?;
+    w.f32_slice(&f.c_norm)?;
+    w.f32_slice(&f.c_sqnorm)?;
+    w.f32_slice(&f.pc)?;
+    w.f32_slice(&f.edge_proj)?;
+    w.f32_slice(&f.edge_res_norm)?;
+    w.f32_slice(&f.edge_pres_norm)?;
+    w.f32_slice(&f.edge_pres)?;
+    Ok(())
+}
+
+pub fn load_finger<R: io::Read>(r: &mut BinReader<R>) -> io::Result<FingerIndex> {
+    let rank = r.u64()? as usize;
+    let proj = r.matrix()?;
+    let mv = r.f32_slice()?;
+    if mv.len() != 6 {
+        return Err(bad("matching params"));
+    }
+    let matching = MatchParams {
+        mu: mv[0],
+        sigma: mv[1],
+        mu_hat: mv[2],
+        sigma_hat: mv[3],
+        eps: mv[4],
+        correlation: mv[5],
+    };
+    let max_svd_samples = r.u64()? as usize;
+    let distribution_matching = r.u64()? != 0;
+    let error_correction = r.u64()? != 0;
+    let seed = r.u64()?;
+    Ok(FingerIndex {
+        rank,
+        proj,
+        matching,
+        params: FingerParams {
+            rank,
+            max_svd_samples,
+            distribution_matching,
+            error_correction,
+            seed,
+        },
+        c_norm: r.f32_slice()?,
+        c_sqnorm: r.f32_slice()?,
+        pc: r.f32_slice()?,
+        edge_proj: r.f32_slice()?,
+        edge_res_norm: r.f32_slice()?,
+        edge_pres_norm: r.f32_slice()?,
+        edge_pres: r.f32_slice()?,
+    })
+}
+
+/// Save a complete serving bundle: data matrix + HNSW + FINGER.
+pub fn save_bundle(path: &Path, data: &Matrix, fh: &FingerHnsw) -> io::Result<()> {
+    let mut w = BinWriter::new(io::BufWriter::new(std::fs::File::create(path)?));
+    w.u64(MAGIC)?;
+    w.u64(VERSION)?;
+    w.matrix(data)?;
+    save_hnsw(&mut w, &fh.hnsw)?;
+    save_finger(&mut w, &fh.index)
+}
+
+/// Load a serving bundle saved by `save_bundle`.
+pub fn load_bundle(path: &Path) -> io::Result<(Matrix, FingerHnsw)> {
+    let mut r = BinReader::new(io::BufReader::new(std::fs::File::open(path)?));
+    if r.u64()? != MAGIC {
+        return Err(bad("not a finger-ann bundle"));
+    }
+    let version = r.u64()?;
+    if version != VERSION {
+        return Err(bad("unsupported bundle version"));
+    }
+    let data = r.matrix()?;
+    let hnsw = load_hnsw(&mut r)?;
+    let index = load_finger(&mut r)?;
+    Ok((data, FingerHnsw { hnsw, index }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::distance::Metric;
+    use crate::data::synth::tiny;
+    use crate::graph::visited::VisitedSet;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("finger_persist_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn bundle_roundtrip_preserves_search_results() {
+        let ds = tiny(401, 400, 24, Metric::L2);
+        let fh = FingerHnsw::build(
+            &ds.data,
+            HnswParams { m: 8, ef_construction: 60, ..Default::default() },
+            FingerParams { rank: 8, ..Default::default() },
+        );
+        let path = tmp("bundle.bin");
+        save_bundle(&path, &ds.data, &fh).unwrap();
+        let (data2, fh2) = load_bundle(&path).unwrap();
+        assert_eq!(ds.data, data2);
+
+        let mut vis = VisitedSet::new(ds.data.rows());
+        for qi in 0..ds.queries.rows() {
+            let q = ds.queries.row(qi);
+            let a = fh.search(&ds.data, q, 10, 60, &mut vis, None);
+            let b = fh2.search(&data2, q, 10, 60, &mut vis, None);
+            let ai: Vec<u32> = a.iter().map(|n| n.id).collect();
+            let bi: Vec<u32> = b.iter().map(|n| n.id).collect();
+            assert_eq!(ai, bi, "query {qi}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmp("junk.bin");
+        std::fs::write(&path, [0u8; 64]).unwrap();
+        assert!(load_bundle(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn adjacency_roundtrip_preserves_slots() {
+        let ds = tiny(402, 100, 8, Metric::L2);
+        let fh = FingerHnsw::build(
+            &ds.data,
+            HnswParams { m: 6, ef_construction: 30, ..Default::default() },
+            FingerParams { rank: 8, ..Default::default() },
+        );
+        let path = tmp("adj.bin");
+        save_bundle(&path, &ds.data, &fh).unwrap();
+        let (_, fh2) = load_bundle(&path).unwrap();
+        for u in 0..100u32 {
+            assert_eq!(fh.hnsw.base.neighbors(u), fh2.hnsw.base.neighbors(u));
+            for j in 0..fh.hnsw.base.degree(u) {
+                let s = fh.hnsw.base.edge_slot(u, j);
+                assert_eq!(fh.index.edge_proj[s], fh2.index.edge_proj[s]);
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,267 @@
+//! Synthetic dataset generation — the substitution for the paper's
+//! benchmark datasets (DESIGN.md §5).
+//!
+//! FINGER's mechanics rely on two geometric properties of real embedding
+//! data: (a) residual vectors around a graph node concentrate in a
+//! low-dimensional subspace, and (b) angles between neighboring residuals
+//! distribute approximately as a Gaussian. Both are properties of clustered
+//! data with low intrinsic dimension, which this generator controls
+//! explicitly: each cluster is `center + A·z + σ·noise` with `A` an
+//! (ambient × intrinsic) random map and `z` standard normal.
+
+use crate::core::distance::{normalize, Metric};
+use crate::core::matrix::Matrix;
+use crate::core::rng::Pcg32;
+
+/// A fully materialized benchmark dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub metric: Metric,
+    pub data: Matrix,
+    pub queries: Matrix,
+}
+
+/// Generator parameters.
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub name: String,
+    pub n: usize,
+    pub n_queries: usize,
+    pub dim: usize,
+    pub clusters: usize,
+    pub intrinsic_dim: usize,
+    /// Ambient isotropic noise level relative to signal.
+    pub noise: f32,
+    pub metric: Metric,
+    pub seed: u64,
+}
+
+impl SynthSpec {
+    pub fn generate(&self) -> Dataset {
+        let mut rng = Pcg32::new(self.seed);
+        let m = self.dim;
+        let k = self.clusters.max(1);
+        let d = self.intrinsic_dim.min(m).max(1);
+
+        // Cluster centers: spread on a sphere of radius 4 so clusters are
+        // separated but overlapping tails exist (realistic hard negatives).
+        let centers: Vec<Vec<f32>> = (0..k)
+            .map(|_| {
+                let mut c: Vec<f32> = (0..m).map(|_| rng.next_gaussian()).collect();
+                normalize(&mut c);
+                c.iter_mut().for_each(|x| *x *= 4.0);
+                c
+            })
+            .collect();
+
+        // Per-cluster low-rank maps A (m × d), mildly anisotropic.
+        let maps: Vec<Vec<f32>> = (0..k)
+            .map(|_| {
+                (0..m * d)
+                    .map(|j| {
+                        let col = j % d;
+                        let scale = 1.0 / (1.0 + 0.3 * col as f32); // decaying spectrum
+                        rng.next_gaussian() * scale / (d as f32).sqrt()
+                    })
+                    .collect()
+            })
+            .collect();
+
+        let sample = |rng: &mut Pcg32| -> Vec<f32> {
+            let c = rng.gen_range(k);
+            let z: Vec<f32> = (0..d).map(|_| rng.next_gaussian()).collect();
+            let a = &maps[c];
+            let mut x = centers[c].clone();
+            for row in 0..m {
+                let mut acc = 0.0f32;
+                for col in 0..d {
+                    acc += a[row * d + col] * z[col];
+                }
+                x[row] += acc + self.noise * rng.next_gaussian();
+            }
+            if self.metric == Metric::Angular {
+                normalize(&mut x);
+            }
+            x
+        };
+
+        let mut data = Matrix::zeros(0, 0);
+        for _ in 0..self.n {
+            data.push_row(&sample(&mut rng));
+        }
+        let mut queries = Matrix::zeros(0, 0);
+        for _ in 0..self.n_queries {
+            queries.push_row(&sample(&mut rng));
+        }
+
+        Dataset {
+            name: self.name.clone(),
+            metric: self.metric,
+            data,
+            queries,
+        }
+    }
+}
+
+/// The six paper datasets as scaled-down synthetic stand-ins, preserving
+/// dimension and metric (DESIGN.md §5). `scale` in (0, 1] shrinks n for
+/// quick runs; 1.0 is the full benchmark size used in EXPERIMENTS.md.
+pub fn registry(scale: f64) -> Vec<SynthSpec> {
+    let s = |n: usize| ((n as f64 * scale).round() as usize).max(64);
+    vec![
+        SynthSpec {
+            name: "fashion-sim-784".into(),
+            n: s(8_000),
+            n_queries: 200,
+            dim: 784,
+            clusters: 10,
+            intrinsic_dim: 12,
+            noise: 0.05,
+            metric: Metric::L2,
+            seed: 101,
+        },
+        SynthSpec {
+            name: "sift-sim-128".into(),
+            n: s(20_000),
+            n_queries: 200,
+            dim: 128,
+            clusters: 64,
+            intrinsic_dim: 16,
+            noise: 0.08,
+            metric: Metric::L2,
+            seed: 102,
+        },
+        SynthSpec {
+            name: "gist-sim-960".into(),
+            n: s(8_000),
+            n_queries: 200,
+            dim: 960,
+            clusters: 20,
+            intrinsic_dim: 24,
+            noise: 0.05,
+            metric: Metric::L2,
+            seed: 103,
+        },
+        SynthSpec {
+            name: "nytimes-sim-256".into(),
+            n: s(8_000),
+            n_queries: 200,
+            dim: 256,
+            clusters: 30,
+            intrinsic_dim: 16,
+            noise: 0.08,
+            metric: Metric::Angular,
+            seed: 104,
+        },
+        SynthSpec {
+            name: "glove-sim-100".into(),
+            n: s(20_000),
+            n_queries: 200,
+            dim: 100,
+            clusters: 50,
+            intrinsic_dim: 20,
+            noise: 0.1,
+            metric: Metric::Angular,
+            seed: 105,
+        },
+        SynthSpec {
+            name: "deep-sim-96".into(),
+            n: s(30_000),
+            n_queries: 200,
+            dim: 96,
+            clusters: 64,
+            intrinsic_dim: 24,
+            noise: 0.08,
+            metric: Metric::Angular,
+            seed: 106,
+        },
+    ]
+}
+
+/// Look up a registry entry by name (prefix match allowed).
+pub fn spec_by_name(name: &str, scale: f64) -> Option<SynthSpec> {
+    registry(scale)
+        .into_iter()
+        .find(|s| s.name == name || s.name.starts_with(name))
+}
+
+/// Small dataset for unit tests: fast to build, still clustered.
+pub fn tiny(seed: u64, n: usize, dim: usize, metric: Metric) -> Dataset {
+    SynthSpec {
+        name: format!("tiny-{n}-{dim}"),
+        n,
+        n_queries: 16,
+        dim,
+        clusters: 5,
+        intrinsic_dim: (dim / 4).max(2),
+        noise: 0.05,
+        metric,
+        seed,
+    }
+    .generate()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::distance::{l2_sq, norm};
+
+    #[test]
+    fn shapes_and_determinism() {
+        let spec = SynthSpec {
+            name: "t".into(),
+            n: 100,
+            n_queries: 10,
+            dim: 16,
+            clusters: 4,
+            intrinsic_dim: 4,
+            noise: 0.05,
+            metric: Metric::L2,
+            seed: 7,
+        };
+        let a = spec.generate();
+        let b = spec.generate();
+        assert_eq!(a.data.rows(), 100);
+        assert_eq!(a.data.cols(), 16);
+        assert_eq!(a.queries.rows(), 10);
+        assert_eq!(a.data, b.data, "generation must be deterministic");
+    }
+
+    #[test]
+    fn angular_datasets_are_normalized() {
+        let ds = tiny(3, 200, 24, Metric::Angular);
+        for i in 0..ds.data.rows() {
+            assert!((norm(ds.data.row(i)) - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn clustered_structure_exists() {
+        // Nearest neighbor should be much closer than a random point.
+        let ds = tiny(5, 500, 32, Metric::L2);
+        let q = ds.data.row(0);
+        let mut dists: Vec<f32> = (1..ds.data.rows()).map(|i| l2_sq(q, ds.data.row(i))).collect();
+        dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let nn = dists[0];
+        let median = dists[dists.len() / 2];
+        assert!(nn < median * 0.5, "nn {nn} median {median}");
+    }
+
+    #[test]
+    fn registry_covers_paper_datasets() {
+        let r = registry(0.01);
+        assert_eq!(r.len(), 6);
+        let dims: Vec<usize> = r.iter().map(|s| s.dim).collect();
+        assert_eq!(dims, vec![784, 128, 960, 256, 100, 96]);
+        let angular = r.iter().filter(|s| s.metric == Metric::Angular).count();
+        assert_eq!(angular, 3);
+    }
+
+    #[test]
+    fn spec_by_name_prefix() {
+        assert!(spec_by_name("sift-sim-128", 0.1).is_some());
+        assert!(spec_by_name("sift", 0.1).is_some());
+        assert!(spec_by_name("nope", 0.1).is_none());
+    }
+}

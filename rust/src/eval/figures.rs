@@ -1,0 +1,445 @@
+//! Figure/table harnesses: one function per paper artifact, each writing
+//! CSV series into the results directory and printing a summary table.
+//! DESIGN.md §3 maps figure → harness → modules.
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::core::distance::{cosine, dot, norm_sq};
+use crate::core::matrix::Matrix;
+use crate::core::stats;
+use crate::data::groundtruth::exact_knn;
+use crate::data::synth::{registry, Dataset, SynthSpec};
+use crate::eval::sweep::{self, SweepPoint, DEFAULT_EFS};
+use crate::finger::construct::{FingerIndex, FingerParams};
+use crate::finger::rplsh::build_rplsh_index;
+use crate::finger::search::FingerHnsw;
+use crate::graph::hnsw::{Hnsw, HnswParams};
+use crate::graph::nndescent::{NnDescent, NnDescentParams};
+use crate::graph::search::SearchStats;
+use crate::graph::vamana::{Vamana, VamanaParams};
+use crate::graph::visited::VisitedSet;
+use crate::quant::ivfpq::{IvfPq, IvfPqParams};
+
+pub fn write_csv(dir: &Path, name: &str, content: &str) {
+    std::fs::create_dir_all(dir).ok();
+    let path = dir.join(name);
+    std::fs::write(&path, content).expect("write results csv");
+    println!("  wrote {}", path.display());
+}
+
+fn materialize(spec: &SynthSpec) -> (Dataset, Vec<Vec<u32>>) {
+    let t0 = Instant::now();
+    let ds = spec.generate();
+    let gt = exact_knn(&ds.data, &ds.queries, 10);
+    println!(
+        "  dataset {} (n={}, dim={}, {}) ready in {:.1}s",
+        ds.name,
+        ds.data.rows(),
+        ds.data.cols(),
+        ds.metric.name(),
+        t0.elapsed().as_secs_f64()
+    );
+    (ds, gt)
+}
+
+/// Paper-chosen rank per dataset family (Supplementary E).
+fn paper_rank(name: &str) -> usize {
+    if name.starts_with("nytimes") {
+        48
+    } else if name.starts_with("glove") {
+        32
+    } else if name.starts_with("deep") {
+        24
+    } else {
+        16
+    }
+}
+
+// ---------------------------------------------------------------- Fig 1/5/8
+
+/// Figures 1, 5 and 8: throughput-vs-recall@10 for all graph methods on
+/// all six datasets. Figure 1 is the baseline subset, Figure 5/8 add
+/// HNSW-FINGER (and the RPLSH-screened ablation for Fig. 8).
+pub fn figure5(out: &Path, scale: f64, with_rplsh: bool) {
+    println!("== Figure 5/8 (and Fig. 1 baselines): throughput vs recall@10 ==");
+    for spec in registry(scale) {
+        let (ds, gt) = materialize(&spec);
+        let mut points: Vec<SweepPoint> = Vec::new();
+        let rank = paper_rank(&ds.name);
+
+        let hnsw_params = HnswParams { m: 16, ef_construction: 120, ..Default::default() };
+        let t0 = Instant::now();
+        let hnsw = Hnsw::build(&ds.data, hnsw_params.clone());
+        println!("  hnsw built in {:.1}s", t0.elapsed().as_secs_f64());
+        points.extend(sweep::sweep_hnsw(&ds, &gt, &hnsw, DEFAULT_EFS, 10));
+
+        let t0 = Instant::now();
+        let findex = FingerIndex::build(&ds.data, &hnsw.base, FingerParams { rank, ..Default::default() });
+        println!(
+            "  finger index (r={rank}) built in {:.1}s, corr={:.3}",
+            t0.elapsed().as_secs_f64(),
+            findex.matching.correlation
+        );
+        let fh = FingerHnsw { hnsw, index: findex };
+        points.extend(sweep::sweep_finger(&ds, &gt, &fh, DEFAULT_EFS, 10, "hnsw-finger"));
+
+        if with_rplsh {
+            let ridx = build_rplsh_index(&ds.data, &fh.hnsw.base, FingerParams { rank, ..Default::default() });
+            let rh = FingerHnsw { hnsw: fh.hnsw, index: ridx };
+            points.extend(sweep::sweep_finger(&ds, &gt, &rh, DEFAULT_EFS, 10, "hnsw-rplsh"));
+            // fh moved; rebuild for the remaining baselines is unnecessary.
+        }
+
+        let t0 = Instant::now();
+        let vam = Vamana::build(&ds.data, VamanaParams::default());
+        println!("  vamana built in {:.1}s", t0.elapsed().as_secs_f64());
+        points.extend(sweep::sweep_vamana(&ds, &gt, &vam, DEFAULT_EFS, 10));
+
+        let t0 = Instant::now();
+        let nnd = NnDescent::build(&ds.data, NnDescentParams::default());
+        println!("  nndescent built in {:.1}s", t0.elapsed().as_secs_f64());
+        points.extend(sweep::sweep_nndescent(&ds, &gt, &nnd, DEFAULT_EFS, 10));
+
+        print_points(&points);
+        let fname = format!(
+            "{}_{}.csv",
+            if with_rplsh { "figure8" } else { "figure5" },
+            ds.name
+        );
+        write_csv(out, &fname, &sweep::to_csv(&points));
+    }
+}
+
+fn print_points(points: &[SweepPoint]) {
+    println!("  {:<14} {:>10} {:>10} {:>12} {:>12}", "method", "param", "recall@10", "QPS", "eff.calls");
+    for p in points {
+        println!(
+            "  {:<14} {:>10} {:>10.4} {:>12.1} {:>12.1}",
+            p.method, p.param, p.recall10, p.qps, p.effective_dist_calls
+        );
+    }
+}
+
+// -------------------------------------------------------------------- Fig 2
+
+/// Figure 2: fraction of distance computations larger than the upper bound,
+/// bucketed by search phase (node-expansion decile).
+pub fn figure2(out: &Path, scale: f64) {
+    println!("== Figure 2: wasted distance computations by search phase ==");
+    let mut csv = String::from("dataset,phase_decile,total,wasted,fraction\n");
+    for name in ["fashion-sim-784", "glove-sim-100"] {
+        let spec = crate::data::synth::spec_by_name(name, scale).unwrap();
+        let (ds, _gt) = materialize(&spec);
+        let h = Hnsw::build(&ds.data, HnswParams { m: 16, ef_construction: 120, ..Default::default() });
+        let mut vis = VisitedSet::new(ds.data.rows());
+        let mut agg = SearchStats::default();
+        for qi in 0..ds.queries.rows() {
+            let mut st = SearchStats::default();
+            h.search(&ds.data, ds.queries.row(qi), 10, 128, &mut vis, Some(&mut st));
+            agg.merge(&st);
+        }
+        // Bucket per-hop counts into deciles of the search.
+        let hops = agg.per_hop.len().max(1);
+        let mut deciles = vec![(0u64, 0u64); 10];
+        for (h_idx, &(t, w)) in agg.per_hop.iter().enumerate() {
+            let d = (h_idx * 10 / hops).min(9);
+            deciles[d].0 += t;
+            deciles[d].1 += w;
+        }
+        println!("  {name}: phase -> wasted fraction");
+        for (d, &(t, w)) in deciles.iter().enumerate() {
+            let frac = if t == 0 { 0.0 } else { w as f64 / t as f64 };
+            println!("    decile {d}: {frac:.3} ({w}/{t})");
+            csv.push_str(&format!("{name},{d},{t},{w},{frac:.4}\n"));
+        }
+        let overall = agg.wasted as f64 / agg.dist_calls.max(1) as f64;
+        println!("  overall wasted fraction: {overall:.3}");
+    }
+    write_csv(out, "figure2.csv", &csv);
+}
+
+// ------------------------------------------------------------------ Fig 3/4
+
+/// Sample (true cosine, raw inner product, rank-r cosine) triples of
+/// neighboring residual pairs.
+fn residual_pair_samples(
+    ds: &Dataset,
+    h: &Hnsw,
+    proj: &Matrix,
+    max_pairs: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = crate::core::rng::Pcg32::new(9);
+    let data = &ds.data;
+    let mut cosines = Vec::new();
+    let mut dots_ = Vec::new();
+    let mut approx = Vec::new();
+    for c in 0..data.rows() as u32 {
+        if cosines.len() >= max_pairs {
+            break;
+        }
+        let nbs = h.base.neighbors(c);
+        if nbs.len() < 2 {
+            continue;
+        }
+        let i = rng.gen_range(nbs.len());
+        let mut j = rng.gen_range(nbs.len());
+        while j == i {
+            j = rng.gen_range(nbs.len());
+        }
+        let xc = data.row(c as usize);
+        let csq = norm_sq(xc).max(1e-12);
+        let resid = |d: u32| -> Vec<f32> {
+            let xd = data.row(d as usize);
+            let t = dot(xc, xd) / csq;
+            xd.iter().zip(xc).map(|(&a, &b)| a - t * b).collect()
+        };
+        let rd = resid(nbs[i]);
+        let rdp = resid(nbs[j]);
+        cosines.push(cosine(&rd, &rdp));
+        dots_.push(dot(&rd, &rdp));
+        let pd = crate::finger::construct::project(proj, &rd);
+        let pdp = crate::finger::construct::project(proj, &rdp);
+        approx.push(cosine(&pd, &pdp));
+    }
+    (cosines, dots_, approx)
+}
+
+fn hist_csv(label: &str, xs: &[f32], lo: f32, hi: f32, bins: usize, csv: &mut String) {
+    let h = stats::histogram(xs, lo, hi, bins);
+    let w = (hi - lo) / bins as f32;
+    for (b, &c) in h.iter().enumerate() {
+        let center = lo + (b as f32 + 0.5) * w;
+        csv.push_str(&format!("{label},{center:.4},{c}\n"));
+    }
+}
+
+/// Figure 3: residual-angle distributions are Gaussian-like; raw
+/// inner-products are skewed.
+pub fn figure3(out: &Path, scale: f64) {
+    println!("== Figure 3: neighboring-residual angle distributions ==");
+    let mut csv = String::from("series,bin_center,count\n");
+    let mut summary = String::from("dataset,series,mean,std,skewness,kurtosis\n");
+    for name in ["fashion-sim-784", "sift-sim-128"] {
+        let spec = crate::data::synth::spec_by_name(name, scale).unwrap();
+        let (ds, _gt) = materialize(&spec);
+        let h = Hnsw::build(&ds.data, HnswParams { m: 16, ef_construction: 120, ..Default::default() });
+        let fidx = FingerIndex::build(&ds.data, &h.base, FingerParams { rank: 16, ..Default::default() });
+        let (cosines, dots_, _) = residual_pair_samples(&ds, &h, &fidx.proj, 20_000);
+        for (series, xs) in [("cosine", &cosines), ("inner_product", &dots_)] {
+            let (m, s) = (stats::mean(xs), stats::stddev(xs));
+            let (sk, ku) = (stats::skewness(xs), stats::excess_kurtosis(xs));
+            let jb = stats::jarque_bera(xs);
+            println!(
+                "  {name} {series}: mean={m:.4} std={s:.4} skew={sk:.3} kurt={ku:.3} JB={jb:.0}"
+            );
+            summary.push_str(&format!("{name},{series},{m:.5},{s:.5},{sk:.4},{ku:.4}\n"));
+            let lo = stats::percentile(xs, 0.5);
+            let hi = stats::percentile(xs, 99.5);
+            hist_csv(&format!("{name}:{series}"), xs, lo, hi.max(lo + 1e-3), 40, &mut csv);
+        }
+        // Headline check: |skew(cosine)| << |skew(inner product)|.
+        let sk_cos = stats::skewness(&cosines).abs();
+        let sk_dot = stats::skewness(&dots_).abs();
+        println!("  -> skew |cos|={sk_cos:.3} vs |ip|={sk_dot:.3} (paper: cosines less skewed)");
+    }
+    write_csv(out, "figure3_hist.csv", &csv);
+    write_csv(out, "figure3_summary.csv", &summary);
+}
+
+/// Figure 4: the rank-r approximated angle distribution is shifted/wider
+/// than the true one; distribution matching re-aligns it.
+pub fn figure4(out: &Path, scale: f64) {
+    println!("== Figure 4: distribution matching ==");
+    let mut csv = String::from("series,bin_center,count\n");
+    let mut summary = String::from("dataset,series,mean,std\n");
+    for name in ["fashion-sim-784", "sift-sim-128"] {
+        let spec = crate::data::synth::spec_by_name(name, scale).unwrap();
+        let (ds, _gt) = materialize(&spec);
+        let h = Hnsw::build(&ds.data, HnswParams { m: 16, ef_construction: 120, ..Default::default() });
+        let fidx = FingerIndex::build(&ds.data, &h.base, FingerParams { rank: 16, ..Default::default() });
+        let (true_cos, _, approx_cos) = residual_pair_samples(&ds, &h, &fidx.proj, 20_000);
+        let mp = fidx.matching;
+        let matched: Vec<f32> = approx_cos
+            .iter()
+            .map(|&y| (y - mp.mu_hat) * (mp.sigma / mp.sigma_hat) + mp.mu)
+            .collect();
+        for (series, xs) in [
+            ("true", &true_cos),
+            ("approx_r16", &approx_cos),
+            ("approx_matched", &matched),
+        ] {
+            let (m, s) = (stats::mean(xs), stats::stddev(xs));
+            println!("  {name} {series}: mean={m:.4} std={s:.4}");
+            summary.push_str(&format!("{name},{series},{m:.5},{s:.5}\n"));
+            hist_csv(&format!("{name}:{series}"), xs, -1.0, 1.0, 50, &mut csv);
+        }
+        // Matched mean/std must land closer to the true distribution.
+        let d_before = (stats::mean(&approx_cos) - stats::mean(&true_cos)).abs();
+        let d_after = (stats::mean(&matched) - stats::mean(&true_cos)).abs();
+        println!("  -> |mean shift| before={d_before:.4} after={d_after:.4}");
+    }
+    write_csv(out, "figure4_hist.csv", &csv);
+    write_csv(out, "figure4_summary.csv", &summary);
+}
+
+// -------------------------------------------------------------------- Fig 6
+
+/// Figure 6: ablation — approximation error and recall vs effective
+/// distance calls, FINGER vs RPLSH, each with and without distribution
+/// matching, sweeping rank.
+pub fn figure6(out: &Path, scale: f64) {
+    println!("== Figure 6: ablation (FINGER vs RPLSH, +/- distribution matching) ==");
+    let mut err_csv = String::from("dataset,scheme,rank,approx_error_pct,effective_ratio\n");
+    let mut rec_csv =
+        String::from("dataset,scheme,rank,ef,recall10,effective_dist_calls\n");
+    for name in ["fashion-sim-784", "glove-sim-100"] {
+        let spec = crate::data::synth::spec_by_name(name, scale).unwrap();
+        let (ds, gt) = materialize(&spec);
+        let m = ds.data.cols();
+        let hnsw = Hnsw::build(&ds.data, HnswParams { m: 16, ef_construction: 120, ..Default::default() });
+
+        for rank in [8usize, 16, 32] {
+            for (scheme, dm) in [
+                ("finger", true),
+                ("finger-nodm", false),
+                ("rplsh", false),
+                ("rplsh-dm", true),
+            ] {
+                let params = FingerParams {
+                    rank,
+                    distribution_matching: dm,
+                    error_correction: dm,
+                    ..Default::default()
+                };
+                let idx = if scheme.starts_with("rplsh") {
+                    build_rplsh_index(&ds.data, &hnsw.base, params)
+                } else {
+                    FingerIndex::build(&ds.data, &hnsw.base, params)
+                };
+
+                // Approximation error on sampled pairs: |t - t_hat| / |t|.
+                let (true_cos, _, approx_cos) =
+                    residual_pair_samples(&ds, &hnsw, &idx.proj, 8_000);
+                let mp = idx.matching;
+                let mut errs = Vec::new();
+                for (&t, &y) in true_cos.iter().zip(&approx_cos) {
+                    let t_hat = if dm {
+                        (y - mp.mu_hat) * (mp.sigma / mp.sigma_hat) + mp.mu
+                    } else {
+                        y
+                    };
+                    if t.abs() > 0.05 {
+                        errs.push((t_hat - t).abs() / t.abs());
+                    }
+                }
+                let err_pct = 100.0 * stats::mean(&errs);
+                err_csv.push_str(&format!(
+                    "{name},{scheme},{rank},{err_pct:.3},{:.4}\n",
+                    rank as f64 / m as f64
+                ));
+
+                // Recall vs effective calls (shared graph, screened search).
+                let pts =
+                    sweep::sweep_finger_borrowed(&ds, &gt, &hnsw, &idx, &[20, 60, 160], 10, scheme);
+                for p in &pts {
+                    rec_csv.push_str(&format!(
+                        "{name},{scheme},{rank},{},{:.4},{:.1}\n",
+                        p.param, p.recall10, p.effective_dist_calls
+                    ));
+                }
+                println!(
+                    "  {name} {scheme:<12} r={rank:<3} err={err_pct:6.2}%  recall@ef60={:.4}",
+                    pts[1].recall10
+                );
+            }
+        }
+    }
+    write_csv(out, "figure6_error.csv", &err_csv);
+    write_csv(out, "figure6_recall.csv", &rec_csv);
+}
+
+// -------------------------------------------------------------------- Fig 7
+
+/// Figure 7: HNSW-FINGER vs quantization (IVF-PQ) on three datasets.
+pub fn figure7(out: &Path, scale: f64) {
+    println!("== Figure 7: comparison to quantization methods ==");
+    for name in ["nytimes-sim-256", "gist-sim-960", "deep-sim-96"] {
+        let spec = crate::data::synth::spec_by_name(name, scale).unwrap();
+        let (ds, gt) = materialize(&spec);
+        let mut points = Vec::new();
+
+        let hnsw = Hnsw::build(&ds.data, HnswParams { m: 16, ef_construction: 120, ..Default::default() });
+        let rank = paper_rank(&ds.name);
+        let fidx = FingerIndex::build(&ds.data, &hnsw.base, FingerParams { rank, ..Default::default() });
+        let fh = FingerHnsw { hnsw, index: fidx };
+        points.extend(sweep::sweep_finger(&ds, &gt, &fh, DEFAULT_EFS, 10, "hnsw-finger"));
+
+        let nlist = (ds.data.rows() as f64).sqrt() as usize;
+        let ivf = IvfPq::train(
+            &ds.data,
+            IvfPqParams { n_list: nlist.max(16), ..Default::default() },
+        );
+        points.extend(sweep::sweep_ivfpq(&ds, &gt, &ivf, &[1, 2, 4, 8, 16, 32], 10));
+
+        print_points(&points);
+        write_csv(out, &format!("figure7_{}.csv", ds.name), &sweep::to_csv(&points));
+    }
+}
+
+// ------------------------------------------------------------------ Table 1
+
+/// Table 1: construction time and memory, HNSW vs HNSW-FINGER, M ∈ {12,48}.
+pub fn table1(out: &Path, scale: f64) {
+    println!("== Table 1: construction statistics ==");
+    let mut csv = String::from("dataset,M,method,build_secs,index_bytes\n");
+    for name in ["sift-sim-128", "glove-sim-100"] {
+        let spec = crate::data::synth::spec_by_name(name, scale).unwrap();
+        let ds = spec.generate();
+        for m in [12usize, 48] {
+            let t0 = Instant::now();
+            let hnsw = Hnsw::build(&ds.data, HnswParams { m, ef_construction: 120, ..Default::default() });
+            let t_hnsw = t0.elapsed().as_secs_f64();
+            let hnsw_bytes = hnsw.nbytes() + ds.data.nbytes();
+
+            let rank = paper_rank(name);
+            let t1 = Instant::now();
+            let fidx = FingerIndex::build(&ds.data, &hnsw.base, FingerParams { rank, ..Default::default() });
+            let t_finger = t_hnsw + t1.elapsed().as_secs_f64();
+            let finger_bytes = hnsw_bytes + fidx.nbytes();
+
+            println!(
+                "  {name} M={m}: HNSW {t_hnsw:.1}s ({:.2} MB)  HNSW-FINGER {t_finger:.1}s ({:.2} MB)",
+                hnsw_bytes as f64 / 1e6,
+                finger_bytes as f64 / 1e6
+            );
+            csv.push_str(&format!("{name},{m},hnsw,{t_hnsw:.2},{hnsw_bytes}\n"));
+            csv.push_str(&format!("{name},{m},hnsw-finger,{t_finger:.2},{finger_bytes}\n"));
+        }
+    }
+    write_csv(out, "table1.csv", &csv);
+}
+
+// -------------------------------------------------------- Supplementary E
+
+/// Supplementary E: rank selection by correlation threshold.
+pub fn rank_selection(out: &Path, scale: f64) {
+    println!("== Supplementary E: rank selection (corr >= 0.7, step 8) ==");
+    let mut csv = String::from("dataset,rank,correlation,chosen\n");
+    for spec in registry(scale) {
+        let ds = spec.generate();
+        let h = Hnsw::build(&ds.data, HnswParams { m: 16, ef_construction: 120, ..Default::default() });
+        let (tried, chosen) = crate::finger::construct::select_rank(&ds.data, &h.base, 0.7, 64, 7);
+        for (i, &(r, c)) in tried.iter().enumerate() {
+            csv.push_str(&format!("{},{r},{c:.4},{}\n", ds.name, i == chosen));
+        }
+        println!(
+            "  {}: chose r={} (corr={:.3}) after {:?}",
+            ds.name,
+            tried[chosen].0,
+            tried[chosen].1,
+            tried.iter().map(|&(r, _)| r).collect::<Vec<_>>()
+        );
+    }
+    write_csv(out, "rank_selection.csv", &csv);
+}

@@ -1,0 +1,9 @@
+//! Evaluation: recall metrics, throughput/recall sweeps, and per-figure
+//! harnesses regenerating every table and figure of the paper.
+
+pub mod figures;
+pub mod recall;
+pub mod sweep;
+
+pub use recall::{recall, recall_ids};
+pub use sweep::{SweepPoint, DEFAULT_EFS};

@@ -1,0 +1,43 @@
+//! recall@k — the benchmark metric of the paper (|found ∩ truth| / k).
+
+use crate::graph::search::Neighbor;
+
+/// recall of one result list against ground truth ids.
+pub fn recall(found: &[Neighbor], gt: &[u32]) -> f64 {
+    if gt.is_empty() {
+        return 0.0;
+    }
+    let hits = found.iter().filter(|n| gt.contains(&n.id)).count();
+    hits as f64 / gt.len() as f64
+}
+
+/// recall from plain id lists.
+pub fn recall_ids(found: &[u32], gt: &[u32]) -> f64 {
+    if gt.is_empty() {
+        return 0.0;
+    }
+    let hits = found.iter().filter(|id| gt.contains(id)).count();
+    hits as f64 / gt.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nb(ids: &[u32]) -> Vec<Neighbor> {
+        ids.iter().map(|&id| Neighbor { dist: 0.0, id }).collect()
+    }
+
+    #[test]
+    fn full_and_partial_overlap() {
+        assert_eq!(recall(&nb(&[1, 2, 3]), &[1, 2, 3]), 1.0);
+        assert_eq!(recall(&nb(&[1, 9, 8]), &[1, 2, 3]), 1.0 / 3.0);
+        assert_eq!(recall(&nb(&[]), &[1, 2]), 0.0);
+        assert_eq!(recall(&nb(&[1]), &[]), 0.0);
+    }
+
+    #[test]
+    fn id_variant_matches() {
+        assert_eq!(recall_ids(&[5, 6], &[5, 7]), 0.5);
+    }
+}

@@ -1,0 +1,269 @@
+//! ANN-benchmark-style sweeps: run a method across its search-time
+//! hyper-parameter grid, measuring throughput (single-thread QPS) and
+//! recall@10 at each point — the data behind every throughput/recall
+//! curve in the paper (Figures 1, 5, 7, 8).
+
+use std::time::Instant;
+
+use crate::core::matrix::Matrix;
+use crate::data::synth::Dataset;
+use crate::eval::recall::recall;
+use crate::finger::search::FingerHnsw;
+use crate::graph::hnsw::Hnsw;
+use crate::graph::nndescent::NnDescent;
+use crate::graph::search::SearchStats;
+use crate::graph::vamana::Vamana;
+use crate::graph::visited::VisitedSet;
+use crate::quant::ivfpq::IvfPq;
+
+/// One measured point of a throughput/recall curve.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub method: String,
+    pub param: String,
+    pub recall10: f64,
+    pub qps: f64,
+    pub mean_full_dist_calls: f64,
+    pub mean_approx_calls: f64,
+    /// Figure 6's x-axis: full + approx · r/m.
+    pub effective_dist_calls: f64,
+}
+
+impl SweepPoint {
+    pub fn csv_header() -> &'static str {
+        "method,param,recall10,qps,full_dist_calls,approx_calls,effective_dist_calls"
+    }
+
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{},{:.4},{:.1},{:.1},{:.1},{:.1}",
+            self.method,
+            self.param,
+            self.recall10,
+            self.qps,
+            self.mean_full_dist_calls,
+            self.mean_approx_calls,
+            self.effective_dist_calls
+        )
+    }
+}
+
+/// Generic searcher closure signature: (query, ef, visited, stats) -> ids.
+type SearchFn<'a> = dyn Fn(&[f32], usize, &mut VisitedSet, &mut SearchStats) -> Vec<crate::graph::search::Neighbor>
+    + 'a;
+
+fn run_sweep(
+    method: &str,
+    data: &Matrix,
+    queries: &Matrix,
+    gt: &[Vec<u32>],
+    k: usize,
+    efs: &[usize],
+    rank: usize,
+    search: &SearchFn,
+) -> Vec<SweepPoint> {
+    let mut vis = VisitedSet::new(data.rows());
+    let m = data.cols();
+    let mut out = Vec::new();
+    for &ef in efs {
+        // Warmup pass (stabilizes caches), then timed pass.
+        for qi in 0..queries.rows().min(8) {
+            let mut st = SearchStats::default();
+            search(queries.row(qi), ef, &mut vis, &mut st);
+        }
+        let mut stats = SearchStats::default();
+        let mut total_recall = 0.0;
+        let t0 = Instant::now();
+        for qi in 0..queries.rows() {
+            let res = search(queries.row(qi), ef, &mut vis, &mut stats);
+            total_recall += recall(&res[..res.len().min(k)], &gt[qi]);
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let nq = queries.rows() as f64;
+        out.push(SweepPoint {
+            method: method.to_string(),
+            param: format!("ef={ef}"),
+            recall10: total_recall / nq,
+            qps: nq / secs.max(1e-9),
+            mean_full_dist_calls: stats.dist_calls as f64 / nq,
+            mean_approx_calls: stats.approx_calls as f64 / nq,
+            effective_dist_calls: stats.effective_dist_calls(rank, m) / nq,
+        });
+    }
+    out
+}
+
+pub const DEFAULT_EFS: &[usize] = &[10, 20, 40, 80, 160, 320];
+
+pub fn sweep_hnsw(ds: &Dataset, gt: &[Vec<u32>], h: &Hnsw, efs: &[usize], k: usize) -> Vec<SweepPoint> {
+    run_sweep(
+        "hnsw",
+        &ds.data,
+        &ds.queries,
+        gt,
+        k,
+        efs,
+        0,
+        &|q, ef, vis, st| h.search(&ds.data, q, k, ef, vis, Some(st)),
+    )
+}
+
+pub fn sweep_finger(
+    ds: &Dataset,
+    gt: &[Vec<u32>],
+    f: &FingerHnsw,
+    efs: &[usize],
+    k: usize,
+    label: &str,
+) -> Vec<SweepPoint> {
+    run_sweep(
+        label,
+        &ds.data,
+        &ds.queries,
+        gt,
+        k,
+        efs,
+        f.index.rank,
+        &|q, ef, vis, st| f.search(&ds.data, q, k, ef, vis, Some(st)),
+    )
+}
+
+/// Like `sweep_finger` but over borrowed (graph, index) — lets ablations
+/// share one graph across many index variants.
+pub fn sweep_finger_borrowed(
+    ds: &Dataset,
+    gt: &[Vec<u32>],
+    hnsw: &Hnsw,
+    index: &crate::finger::construct::FingerIndex,
+    efs: &[usize],
+    k: usize,
+    label: &str,
+) -> Vec<SweepPoint> {
+    run_sweep(
+        label,
+        &ds.data,
+        &ds.queries,
+        gt,
+        k,
+        efs,
+        index.rank,
+        &|q, ef, vis, st| {
+            crate::finger::search::search_hnsw_with_index(
+                hnsw, index, &ds.data, q, k, ef, vis, Some(st),
+            )
+        },
+    )
+}
+
+pub fn sweep_vamana(ds: &Dataset, gt: &[Vec<u32>], v: &Vamana, efs: &[usize], k: usize) -> Vec<SweepPoint> {
+    run_sweep(
+        "vamana",
+        &ds.data,
+        &ds.queries,
+        gt,
+        k,
+        efs,
+        0,
+        &|q, ef, vis, st| v.search(&ds.data, q, k, ef, vis, Some(st)),
+    )
+}
+
+pub fn sweep_nndescent(
+    ds: &Dataset,
+    gt: &[Vec<u32>],
+    g: &NnDescent,
+    efs: &[usize],
+    k: usize,
+) -> Vec<SweepPoint> {
+    run_sweep(
+        "nndescent",
+        &ds.data,
+        &ds.queries,
+        gt,
+        k,
+        efs,
+        0,
+        &|q, ef, vis, st| g.search(&ds.data, q, k, ef, vis, Some(st)),
+    )
+}
+
+/// IVF-PQ sweeps over n_probe rather than ef.
+pub fn sweep_ivfpq(
+    ds: &Dataset,
+    gt: &[Vec<u32>],
+    ivf: &IvfPq,
+    probes: &[usize],
+    k: usize,
+) -> Vec<SweepPoint> {
+    let mut out = Vec::new();
+    let nq = ds.queries.rows() as f64;
+    for &p in probes {
+        let mut total_recall = 0.0;
+        let mut scored_total = 0u64;
+        let t0 = Instant::now();
+        for qi in 0..ds.queries.rows() {
+            let (res, scored) = ivf.search(&ds.data, ds.queries.row(qi), k, p, 10 * k);
+            scored_total += scored;
+            total_recall += recall(&res, &gt[qi]);
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        out.push(SweepPoint {
+            method: "ivfpq".into(),
+            param: format!("nprobe={p}"),
+            recall10: total_recall / nq,
+            qps: nq / secs.max(1e-9),
+            mean_full_dist_calls: (10 * k) as f64,
+            mean_approx_calls: scored_total as f64 / nq,
+            effective_dist_calls: 0.0,
+        });
+    }
+    out
+}
+
+/// Write points as CSV.
+pub fn to_csv(points: &[SweepPoint]) -> String {
+    let mut s = String::from(SweepPoint::csv_header());
+    s.push('\n');
+    for p in points {
+        s.push_str(&p.to_csv());
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::distance::Metric;
+    use crate::data::groundtruth::exact_knn;
+    use crate::data::synth::tiny;
+    use crate::graph::hnsw::HnswParams;
+
+    #[test]
+    fn sweep_recall_monotone_in_ef() {
+        let ds = tiny(111, 500, 16, Metric::L2);
+        let h = Hnsw::build(&ds.data, HnswParams { m: 8, ef_construction: 60, ..Default::default() });
+        let gt = exact_knn(&ds.data, &ds.queries, 10);
+        let pts = sweep_hnsw(&ds, &gt, &h, &[10, 160], 10);
+        assert_eq!(pts.len(), 2);
+        assert!(pts[1].recall10 >= pts[0].recall10 - 0.02);
+        assert!(pts[0].qps > 0.0);
+        assert!(pts[1].mean_full_dist_calls > pts[0].mean_full_dist_calls);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let p = SweepPoint {
+            method: "x".into(),
+            param: "ef=1".into(),
+            recall10: 0.5,
+            qps: 100.0,
+            mean_full_dist_calls: 10.0,
+            mean_approx_calls: 0.0,
+            effective_dist_calls: 10.0,
+        };
+        let csv = to_csv(&[p]);
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("method,"));
+    }
+}

@@ -1,0 +1,217 @@
+//! Algorithm 3: the FINGER approximate distance, scalar hot path.
+//!
+//! Per expanded center `c` the query-side quantities are computed once
+//! (`QueryCenter::new`), then each neighbor edge costs one r-dimensional
+//! dot product plus a handful of scalar ops — the paper's m-dim -> r-dim
+//! reduction. The per-edge arrays live in `FingerIndex`, laid out SoA on
+//! the base graph's edge slots so this loop is branch-light and
+//! auto-vectorizes (DESIGN.md §4).
+
+use crate::core::distance::dot;
+use crate::finger::construct::FingerIndex;
+
+/// Query-side state for the whole search (computed once per query).
+pub struct QueryState {
+    /// P·q (r floats).
+    pub pq: Vec<f32>,
+    /// ||q||^2.
+    pub q_sqnorm: f32,
+}
+
+impl QueryState {
+    pub fn new(index: &FingerIndex, q: &[f32]) -> QueryState {
+        QueryState {
+            pq: crate::finger::construct::project(&index.proj, q),
+            q_sqnorm: crate::core::distance::norm_sq(q),
+        }
+    }
+}
+
+/// Upper bound on the projection rank, sized so `QueryCenter` fits on the
+/// stack (the paper never goes past r = 48; Supplementary E).
+pub const MAX_RANK: usize = 64;
+
+/// Query-vs-center state, valid while expanding one center node c
+/// (Supplementary G: everything here comes from already-known scalars).
+/// Perf note (EXPERIMENTS.md §Perf): `pq_res` is a fixed inline array, not
+/// a Vec — one `QueryCenter` is built per node expansion, and the heap
+/// allocation showed up in the search profile.
+pub struct QueryCenter {
+    /// Signed projection length of q onto c.
+    pub q_proj: f32,
+    /// ||q_res||.
+    pub q_res_norm: f32,
+    /// P·q_res (first `rank` entries valid).
+    pub pq_res: [f32; MAX_RANK],
+    /// ||P q_res||.
+    pub pq_res_norm: f32,
+}
+
+impl QueryCenter {
+    /// `dist_qc_sq` is the already-computed ||q - c||^2 (the center was
+    /// popped from the candidate queue, so its exact distance is known).
+    pub fn new(index: &FingerIndex, qs: &QueryState, c: u32, dist_qc_sq: f32) -> QueryCenter {
+        let r = index.rank;
+        debug_assert!(r <= MAX_RANK);
+        let ci = c as usize;
+        let c_sq = index.c_sqnorm[ci].max(1e-12);
+        let c_n = index.c_norm[ci].max(1e-12);
+        // q^T c = (||q||^2 + ||c||^2 - ||q-c||^2) / 2
+        let qtc = 0.5 * (qs.q_sqnorm + index.c_sqnorm[ci] - dist_qc_sq);
+        let t_q = qtc / c_sq;
+        let q_proj = qtc / c_n;
+        let q_res_sq = (qs.q_sqnorm - q_proj * q_proj).max(0.0);
+        // P q_res = P q - t_q * P c
+        let pc = &index.pc[ci * r..(ci + 1) * r];
+        let mut pq_res = [0.0f32; MAX_RANK];
+        let mut norm_sq = 0.0f32;
+        for k in 0..r {
+            let v = qs.pq[k] - t_q * pc[k];
+            pq_res[k] = v;
+            norm_sq += v * v;
+        }
+        QueryCenter {
+            q_proj,
+            q_res_norm: q_res_sq.sqrt(),
+            pq_res,
+            pq_res_norm: norm_sq.sqrt(),
+        }
+    }
+}
+
+/// Approximate squared distance for the edge at `slot` (Algorithm 3).
+#[inline]
+pub fn approx_dist_sq(index: &FingerIndex, qc: &QueryCenter, slot: usize) -> f32 {
+    let r = index.rank;
+    let pres = &index.edge_pres[slot * r..(slot + 1) * r];
+    let denom = (qc.pq_res_norm * index.edge_pres_norm[slot]).max(1e-12);
+    let t_hat = dot(&qc.pq_res[..r], pres) / denom;
+    let m = &index.matching;
+    let t = (t_hat - m.mu_hat) * (m.sigma / m.sigma_hat.max(1e-12)) + m.mu + m.eps;
+    let dp = index.edge_proj[slot];
+    let dn = index.edge_res_norm[slot];
+    let proj_term = qc.q_proj - dp;
+    proj_term * proj_term + qc.q_res_norm * qc.q_res_norm + dn * dn
+        - 2.0 * qc.q_res_norm * dn * t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::distance::{l2_sq, Metric};
+    use crate::core::matrix::Matrix;
+    use crate::data::synth::tiny;
+    use crate::finger::construct::{FingerIndex, FingerParams};
+    use crate::graph::hnsw::{Hnsw, HnswParams};
+
+    /// Full-rank FINGER with identity matching must reproduce exact
+    /// distances (Eq. 2 is an identity when P captures everything).
+    #[test]
+    fn full_rank_identity_matching_is_exact() {
+        let ds = tiny(61, 200, 8, Metric::L2);
+        let h = Hnsw::build(&ds.data, HnswParams { m: 6, ef_construction: 40, ..Default::default() });
+        let f = FingerIndex::build(
+            &ds.data,
+            &h.base,
+            FingerParams {
+                rank: 8, // == dim: lossless projection
+                distribution_matching: false,
+                error_correction: false,
+                ..Default::default()
+            },
+        );
+        let q = ds.queries.row(0);
+        let qs = QueryState::new(&f, q);
+        let mut checked = 0;
+        for c in 0..ds.data.rows() as u32 {
+            let dqc = l2_sq(q, ds.data.row(c as usize));
+            let qc = QueryCenter::new(&f, &qs, c, dqc);
+            for (j, &d) in h.base.neighbors(c).iter().enumerate() {
+                let slot = h.base.edge_slot(c, j);
+                let approx = approx_dist_sq(&f, &qc, slot);
+                let exact = l2_sq(q, ds.data.row(d as usize));
+                assert!(
+                    (approx - exact).abs() < 2e-2 * (1.0 + exact),
+                    "edge ({c},{d}): approx {approx} exact {exact}"
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked > 100);
+    }
+
+    /// Low-rank approximation should correlate strongly with exact
+    /// distances on clustered data.
+    #[test]
+    fn low_rank_approximation_correlates() {
+        let ds = tiny(62, 400, 32, Metric::L2);
+        let h = Hnsw::build(&ds.data, HnswParams { m: 8, ef_construction: 60, ..Default::default() });
+        let f = FingerIndex::build(&ds.data, &h.base, FingerParams { rank: 8, ..Default::default() });
+        let mut approxs = Vec::new();
+        let mut exacts = Vec::new();
+        for qi in 0..ds.queries.rows().min(8) {
+            let q = ds.queries.row(qi);
+            let qs = QueryState::new(&f, q);
+            for c in (0..ds.data.rows() as u32).step_by(17) {
+                let dqc = l2_sq(q, ds.data.row(c as usize));
+                let qc = QueryCenter::new(&f, &qs, c, dqc);
+                for (j, &d) in h.base.neighbors(c).iter().enumerate() {
+                    let slot = h.base.edge_slot(c, j);
+                    approxs.push(approx_dist_sq(&f, &qc, slot));
+                    exacts.push(l2_sq(q, ds.data.row(d as usize)));
+                }
+            }
+        }
+        let corr = crate::core::stats::pearson(&approxs, &exacts);
+        assert!(corr > 0.9, "correlation = {corr}");
+    }
+
+    /// QueryCenter scalars must agree with direct computation.
+    #[test]
+    fn query_center_scalars_match_direct() {
+        let ds = tiny(63, 100, 16, Metric::L2);
+        let h = Hnsw::build(&ds.data, HnswParams { m: 6, ef_construction: 30, ..Default::default() });
+        let f = FingerIndex::build(&ds.data, &h.base, FingerParams { rank: 16, ..Default::default() });
+        let q = ds.queries.row(3);
+        let c = 7u32;
+        let xc = ds.data.row(c as usize);
+        let dqc = l2_sq(q, xc);
+        let qs = QueryState::new(&f, q);
+        let qc = QueryCenter::new(&f, &qs, c, dqc);
+        // Direct decomposition
+        let csq = crate::core::distance::norm_sq(xc);
+        let t = crate::core::distance::dot(q, xc) / csq;
+        let qp_direct = t * csq.sqrt();
+        let qres: Vec<f32> = q.iter().zip(xc).map(|(&a, &b)| a - t * b).collect();
+        assert!((qc.q_proj - qp_direct).abs() < 1e-3 * (1.0 + qp_direct.abs()));
+        assert!(
+            (qc.q_res_norm - crate::core::distance::norm(&qres)).abs() < 1e-3,
+            "{} vs {}",
+            qc.q_res_norm,
+            crate::core::distance::norm(&qres)
+        );
+    }
+
+    #[test]
+    fn zero_query_is_stable() {
+        let ds = tiny(64, 100, 8, Metric::L2);
+        let h = Hnsw::build(&ds.data, HnswParams { m: 6, ef_construction: 30, ..Default::default() });
+        let f = FingerIndex::build(&ds.data, &h.base, FingerParams { rank: 8, ..Default::default() });
+        let q = vec![0.0f32; 8];
+        let qs = QueryState::new(&f, &q);
+        let dqc = l2_sq(&q, ds.data.row(0));
+        let qc = QueryCenter::new(&f, &qs, 0, dqc);
+        for (j, _) in h.base.neighbors(0).iter().enumerate() {
+            let slot = h.base.edge_slot(0, j);
+            assert!(approx_dist_sq(&f, &qc, slot).is_finite());
+        }
+    }
+
+    /// Matrix sanity for the helper used everywhere.
+    #[test]
+    fn project_is_linear() {
+        let proj = Matrix::from_rows(&[vec![1.0, 0.0, 0.0], vec![0.0, 2.0, 0.0]]);
+        let p = crate::finger::construct::project(&proj, &[3.0, 4.0, 5.0]);
+        assert_eq!(p, vec![3.0, 8.0]);
+    }
+}

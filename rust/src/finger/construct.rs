@@ -1,0 +1,402 @@
+//! FINGER index construction — Algorithm 2 of the paper.
+//!
+//! Given an existing search graph G = (D, E):
+//!  1. For each node c, compute residual vectors of its neighbors w.r.t. c
+//!     and collect a subsample into D_res.
+//!  2. P = top-r left singular basis of D_res (Prop. 3.1, via
+//!     `core::linalg::finger_projection`).
+//!  3. Sample neighbor pairs (d, d') per node; X = true residual cosines,
+//!     Y = rank-r approximated cosines. Fit Gaussians: (mu, sigma) from X,
+//!     (mu_hat, sigma_hat) from Y, and the mean-L1 error-correction term
+//!     eps = mean |(Y_i - mu_hat) sigma/sigma_hat + mu - X_i|.
+//!  4. Precompute per-node (||c||, ||c||^2, P c) and per-edge
+//!     (d_proj, ||d_res||, P d_res, ||P d_res||) tables, laid out
+//!     structure-of-arrays on the base graph's stable edge slots.
+
+use crate::core::distance::{cosine, dot, norm_sq};
+use crate::core::linalg::finger_projection;
+use crate::core::matrix::Matrix;
+use crate::core::rng::Pcg32;
+use crate::core::stats;
+use crate::graph::adjacency::FlatAdj;
+
+/// Construction parameters.
+#[derive(Clone, Debug)]
+pub struct FingerParams {
+    /// Rank r of the projection (paper: multiples of 8 for SIMD).
+    pub rank: usize,
+    /// Cap on residual vectors fed to the SVD (uniform subsample).
+    pub max_svd_samples: usize,
+    /// Enable distribution matching (ablation: Figure 6 "no-DM").
+    pub distribution_matching: bool,
+    /// Enable the additive mean-L1 error-correction term.
+    pub error_correction: bool,
+    pub seed: u64,
+}
+
+impl Default for FingerParams {
+    fn default() -> Self {
+        Self {
+            rank: 16,
+            max_svd_samples: 8192,
+            distribution_matching: true,
+            error_correction: true,
+            seed: 42,
+        }
+    }
+}
+
+/// Distribution-matching parameters (Algorithm 2 outputs).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MatchParams {
+    pub mu: f32,
+    pub sigma: f32,
+    pub mu_hat: f32,
+    pub sigma_hat: f32,
+    pub eps: f32,
+    /// Pearson correlation between X and Y — Supplementary E's rank-
+    /// selection diagnostic.
+    pub correlation: f32,
+}
+
+/// The built FINGER side-index over a base graph.
+pub struct FingerIndex {
+    pub rank: usize,
+    /// r × m projection (rows orthonormal).
+    pub proj: Matrix,
+    pub matching: MatchParams,
+    pub params: FingerParams,
+
+    // Per-node tables (length n).
+    pub c_norm: Vec<f32>,
+    pub c_sqnorm: Vec<f32>,
+    /// P·c, n × r row-major.
+    pub pc: Vec<f32>,
+
+    // Per-edge tables aligned with the base adjacency's edge slots.
+    /// Signed projection length of d onto c: (c.d/||c||).
+    pub edge_proj: Vec<f32>,
+    /// ||d_res||.
+    pub edge_res_norm: Vec<f32>,
+    /// ||P d_res||.
+    pub edge_pres_norm: Vec<f32>,
+    /// P·d_res, slots × r row-major.
+    pub edge_pres: Vec<f32>,
+}
+
+impl FingerIndex {
+    /// Algorithm 2. `adj` is the base-layer adjacency of any search graph.
+    pub fn build(data: &Matrix, adj: &FlatAdj, params: FingerParams) -> FingerIndex {
+        let n = data.rows();
+        let m = data.cols();
+        let r = params.rank.min(m);
+        let mut rng = Pcg32::new(params.seed);
+
+        // ---- Pass 1: sample residuals for the SVD and pairs for matching.
+        let mut res_samples = Matrix::zeros(0, 0);
+        let mut pair_nodes: Vec<(u32, u32, u32)> = Vec::new(); // (c, d, d')
+        for c in 0..n as u32 {
+            let nbs = adj.neighbors(c);
+            if nbs.len() < 2 {
+                continue;
+            }
+            let i = rng.gen_range(nbs.len());
+            let mut j = rng.gen_range(nbs.len());
+            while j == i {
+                j = rng.gen_range(nbs.len());
+            }
+            let (d, dp) = (nbs[i], nbs[j]);
+            pair_nodes.push((c, d, dp));
+            // Residual of d w.r.t. c, added to the SVD pool (reservoir-less
+            // subsample: accept while under cap, else skip pseudo-randomly).
+            if res_samples.rows() < params.max_svd_samples {
+                res_samples.push_row(&residual(data, c, d));
+            } else if rng.next_f32() < 0.05 {
+                let slot = rng.gen_range(params.max_svd_samples);
+                let rres = residual(data, c, d);
+                res_samples.row_mut(slot).copy_from_slice(&rres);
+            }
+        }
+        if res_samples.rows() == 0 {
+            // Degenerate graph (no node with 2+ neighbors): fall back to
+            // random rows as "residuals" so we still produce a basis.
+            for _ in 0..r.max(8) {
+                let i = rng.gen_range(n);
+                res_samples.push_row(data.row(i));
+            }
+        }
+
+        // ---- SVD: top-r basis of the residual pool (Prop. 3.1).
+        let eb = finger_projection(&res_samples, r, params.seed ^ 0xABCD);
+        let proj = eb.basis; // r × m
+
+        // ---- Distribution matching: X true cosines, Y projected cosines.
+        let mut xs = Vec::with_capacity(pair_nodes.len());
+        let mut ys = Vec::with_capacity(pair_nodes.len());
+        for &(c, d, dp) in &pair_nodes {
+            let rd = residual(data, c, d);
+            let rdp = residual(data, c, dp);
+            let pd = project(&proj, &rd);
+            let pdp = project(&proj, &rdp);
+            xs.push(cosine(&rd, &rdp));
+            ys.push(cosine(&pd, &pdp));
+        }
+        let matching = fit_matching(&xs, &ys, &params);
+
+        // ---- Per-node and per-edge precomputation.
+        let mut c_norm = vec![0.0f32; n];
+        let mut c_sqnorm = vec![0.0f32; n];
+        let mut pc = vec![0.0f32; n * r];
+        for c in 0..n {
+            let x = data.row(c);
+            let sq = norm_sq(x);
+            c_sqnorm[c] = sq;
+            c_norm[c] = sq.sqrt();
+            let p = project(&proj, x);
+            pc[c * r..(c + 1) * r].copy_from_slice(&p);
+        }
+
+        let slots = adj.total_slots();
+        let mut edge_proj = vec![0.0f32; slots];
+        let mut edge_res_norm = vec![0.0f32; slots];
+        let mut edge_pres_norm = vec![0.0f32; slots];
+        let mut edge_pres = vec![0.0f32; slots * r];
+        for c in 0..n as u32 {
+            let xc = data.row(c as usize);
+            let csq = c_sqnorm[c as usize].max(1e-12);
+            let cn = c_norm[c as usize].max(1e-12);
+            for (j, &d) in adj.neighbors(c).iter().enumerate() {
+                let slot = adj.edge_slot(c, j);
+                let xd = data.row(d as usize);
+                let t = dot(xc, xd) / csq; // projection coefficient
+                edge_proj[slot] = t * cn; // signed length along c
+                // d_res = d - t*c
+                let mut dres = vec![0.0f32; m];
+                for k in 0..m {
+                    dres[k] = xd[k] - t * xc[k];
+                }
+                edge_res_norm[slot] = norm_sq(&dres).sqrt();
+                let p = project(&proj, &dres);
+                edge_pres_norm[slot] = norm_sq(&p).sqrt();
+                edge_pres[slot * r..(slot + 1) * r].copy_from_slice(&p);
+            }
+        }
+
+        FingerIndex {
+            rank: r,
+            proj,
+            matching,
+            params,
+            c_norm,
+            c_sqnorm,
+            pc,
+            edge_proj,
+            edge_res_norm,
+            edge_pres_norm,
+            edge_pres,
+        }
+    }
+
+    /// Additional memory footprint in bytes (Table 1's "(r+2)·|E|·4" plus
+    /// per-node tables).
+    pub fn nbytes(&self) -> usize {
+        4 * (self.c_norm.len()
+            + self.c_sqnorm.len()
+            + self.pc.len()
+            + self.edge_proj.len()
+            + self.edge_res_norm.len()
+            + self.edge_pres_norm.len()
+            + self.edge_pres.len())
+    }
+}
+
+/// Residual of `d` w.r.t. center `c` (Eq. 1).
+fn residual(data: &Matrix, c: u32, d: u32) -> Vec<f32> {
+    let xc = data.row(c as usize);
+    let xd = data.row(d as usize);
+    let csq = norm_sq(xc).max(1e-12);
+    let t = dot(xc, xd) / csq;
+    xd.iter().zip(xc).map(|(&dv, &cv)| dv - t * cv).collect()
+}
+
+/// P·x for the r × m projection.
+pub fn project(proj: &Matrix, x: &[f32]) -> Vec<f32> {
+    (0..proj.rows()).map(|i| dot(proj.row(i), x)).collect()
+}
+
+/// Fit the Gaussian matching parameters from true (X) and approximated (Y)
+/// cosine samples — Algorithm 2 lines 8-11.
+pub fn fit_matching(xs: &[f32], ys: &[f32], params: &FingerParams) -> MatchParams {
+    if xs.is_empty() {
+        return MatchParams {
+            mu: 0.0,
+            sigma: 1.0,
+            mu_hat: 0.0,
+            sigma_hat: 1.0,
+            eps: 0.0,
+            correlation: 0.0,
+        };
+    }
+    let (mu, sigma) = (stats::mean(xs), stats::stddev(xs).max(1e-6));
+    let (mu_hat, sigma_hat) = (stats::mean(ys), stats::stddev(ys).max(1e-6));
+    let correlation = stats::pearson(xs, ys);
+    let (mu, sigma, mu_hat, sigma_hat) = if params.distribution_matching {
+        (mu, sigma, mu_hat, sigma_hat)
+    } else {
+        (0.0, 1.0, 0.0, 1.0) // identity transform
+    };
+    let eps = if params.error_correction {
+        let n = xs.len() as f32;
+        xs.iter()
+            .zip(ys)
+            .map(|(&x, &y)| ((y - mu_hat) * (sigma / sigma_hat) + mu - x).abs())
+            .sum::<f32>()
+            / n
+    } else {
+        0.0
+    };
+    MatchParams {
+        mu,
+        sigma,
+        mu_hat,
+        sigma_hat,
+        eps,
+        correlation,
+    }
+}
+
+/// Supplementary E's rule of thumb: grow r in steps of 8 until the X/Y
+/// correlation exceeds `threshold` (default 0.7). Returns (rank, corr)
+/// pairs tried and the chosen index.
+pub fn select_rank(
+    data: &Matrix,
+    adj: &FlatAdj,
+    threshold: f32,
+    max_rank: usize,
+    seed: u64,
+) -> (Vec<(usize, f32)>, usize) {
+    let mut tried = Vec::new();
+    let mut rank = 8;
+    loop {
+        let idx = FingerIndex::build(
+            data,
+            adj,
+            FingerParams {
+                rank,
+                seed,
+                ..Default::default()
+            },
+        );
+        tried.push((rank, idx.matching.correlation));
+        if idx.matching.correlation >= threshold || rank >= max_rank {
+            break;
+        }
+        rank += 8;
+    }
+    let chosen = tried.len() - 1;
+    (tried, chosen)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::distance::Metric;
+    use crate::data::synth::tiny;
+    use crate::graph::hnsw::{Hnsw, HnswParams};
+
+    fn build_small() -> (crate::data::synth::Dataset, Hnsw, FingerIndex) {
+        let ds = tiny(51, 400, 32, Metric::L2);
+        let h = Hnsw::build(&ds.data, HnswParams { m: 8, ef_construction: 60, ..Default::default() });
+        let f = FingerIndex::build(&ds.data, &h.base, FingerParams { rank: 8, ..Default::default() });
+        (ds, h, f)
+    }
+
+    #[test]
+    fn tables_have_expected_shapes() {
+        let (ds, h, f) = build_small();
+        let n = ds.data.rows();
+        assert_eq!(f.c_norm.len(), n);
+        assert_eq!(f.pc.len(), n * f.rank);
+        assert_eq!(f.edge_proj.len(), h.base.total_slots());
+        assert_eq!(f.edge_pres.len(), h.base.total_slots() * f.rank);
+    }
+
+    #[test]
+    fn projection_rows_orthonormal() {
+        let (_, _, f) = build_small();
+        for i in 0..f.rank {
+            for j in 0..f.rank {
+                let d = dot(f.proj.row(i), f.proj.row(j));
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((d - want).abs() < 1e-2, "({i},{j}) = {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn edge_tables_consistent_with_decomposition() {
+        // For every edge (c, d): ||d||^2 == dp^2 + ||d_res||^2 (orthogonal
+        // decomposition), and P d_res norm <= d_res norm.
+        let (ds, h, f) = build_small();
+        for c in 0..ds.data.rows() as u32 {
+            for (j, &d) in h.base.neighbors(c).iter().enumerate() {
+                let slot = h.base.edge_slot(c, j);
+                let dsq = norm_sq(ds.data.row(d as usize));
+                let recon = f.edge_proj[slot].powi(2) + f.edge_res_norm[slot].powi(2);
+                assert!(
+                    (dsq - recon).abs() < 1e-2 * (1.0 + dsq),
+                    "edge ({c},{d}): {dsq} vs {recon}"
+                );
+                assert!(f.edge_pres_norm[slot] <= f.edge_res_norm[slot] + 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn matching_params_sane() {
+        let (_, _, f) = build_small();
+        let m = f.matching;
+        assert!(m.sigma > 0.0 && m.sigma_hat > 0.0);
+        assert!(m.mu.abs() < 1.0 && m.mu_hat.abs() < 1.0);
+        assert!(m.eps >= 0.0 && m.eps < 1.0);
+        assert!(m.correlation > 0.2, "corr = {}", m.correlation);
+    }
+
+    #[test]
+    fn no_dm_yields_identity_transform() {
+        let ds = tiny(52, 300, 16, Metric::L2);
+        let h = Hnsw::build(&ds.data, HnswParams { m: 8, ef_construction: 40, ..Default::default() });
+        let f = FingerIndex::build(
+            &ds.data,
+            &h.base,
+            FingerParams { rank: 8, distribution_matching: false, error_correction: false, ..Default::default() },
+        );
+        assert_eq!(f.matching.mu, 0.0);
+        assert_eq!(f.matching.sigma, 1.0);
+        assert_eq!(f.matching.eps, 0.0);
+    }
+
+    #[test]
+    fn higher_rank_improves_correlation() {
+        let ds = tiny(53, 500, 48, Metric::L2);
+        let h = Hnsw::build(&ds.data, HnswParams { m: 8, ef_construction: 60, ..Default::default() });
+        let f8 = FingerIndex::build(&ds.data, &h.base, FingerParams { rank: 8, ..Default::default() });
+        let f32_ = FingerIndex::build(&ds.data, &h.base, FingerParams { rank: 32, ..Default::default() });
+        assert!(
+            f32_.matching.correlation >= f8.matching.correlation - 0.05,
+            "r8 {} vs r32 {}",
+            f8.matching.correlation,
+            f32_.matching.correlation
+        );
+    }
+
+    #[test]
+    fn rank_selection_terminates() {
+        let ds = tiny(54, 300, 32, Metric::L2);
+        let h = Hnsw::build(&ds.data, HnswParams { m: 8, ef_construction: 40, ..Default::default() });
+        let (tried, chosen) = select_rank(&ds.data, &h.base, 0.7, 32, 1);
+        assert!(!tried.is_empty());
+        assert!(chosen < tried.len());
+        assert!(tried[chosen].0 <= 32);
+    }
+}

@@ -1,0 +1,105 @@
+//! Inner-product distance variant (Supplementary A of the paper).
+//!
+//! For maximum-inner-product search the decomposition is
+//!
+//! ```text
+//! qᵀd = q_projᵀ d_proj + q_resᵀ d_res
+//!     = qp·dp + ||q_res||·||d_res||·cos(q_res, d_res)
+//! ```
+//!
+//! (projections are along the same center c, so their inner product is the
+//! product of signed lengths). The same rank-r cosine estimator and
+//! distribution matching apply unchanged; only the combination formula
+//! differs. Angular/cosine similarity = inner product on normalized
+//! vectors, which is how the angular datasets are served.
+
+use crate::core::distance::dot;
+use crate::finger::approx::QueryCenter;
+use crate::finger::construct::FingerIndex;
+
+/// Approximate inner product qᵀd for the edge at `slot` (Supplementary A).
+/// NOTE: *larger* is better for IP search; callers negate when plugging
+/// into min-heap machinery.
+#[inline]
+pub fn approx_ip(index: &FingerIndex, qc: &QueryCenter, slot: usize) -> f32 {
+    let r = index.rank;
+    let pres = &index.edge_pres[slot * r..(slot + 1) * r];
+    let denom = (qc.pq_res_norm * index.edge_pres_norm[slot]).max(1e-12);
+    let t_hat = dot(&qc.pq_res[..r], pres) / denom;
+    let m = &index.matching;
+    let t = (t_hat - m.mu_hat) * (m.sigma / m.sigma_hat.max(1e-12)) + m.mu + m.eps;
+    qc.q_proj * index.edge_proj[slot] + qc.q_res_norm * index.edge_res_norm[slot] * t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::distance::{l2_sq, Metric};
+    use crate::data::synth::tiny;
+    use crate::finger::approx::QueryState;
+    use crate::finger::construct::FingerParams;
+    use crate::graph::hnsw::{Hnsw, HnswParams};
+
+    /// Full-rank + identity matching: the IP estimate must be exact.
+    #[test]
+    fn full_rank_ip_is_exact() {
+        let ds = tiny(601, 200, 8, Metric::L2);
+        let h = Hnsw::build(&ds.data, HnswParams { m: 6, ef_construction: 40, ..Default::default() });
+        let f = crate::finger::construct::FingerIndex::build(
+            &ds.data,
+            &h.base,
+            FingerParams {
+                rank: 8,
+                distribution_matching: false,
+                error_correction: false,
+                ..Default::default()
+            },
+        );
+        let q = ds.queries.row(0);
+        let qs = QueryState::new(&f, q);
+        for c in 0..ds.data.rows() as u32 {
+            let dqc = l2_sq(q, ds.data.row(c as usize));
+            let qc = QueryCenter::new(&f, &qs, c, dqc);
+            for (j, &d) in h.base.neighbors(c).iter().enumerate() {
+                let slot = h.base.edge_slot(c, j);
+                let approx = approx_ip(&f, &qc, slot);
+                let exact = dot(q, ds.data.row(d as usize));
+                assert!(
+                    (approx - exact).abs() < 2e-2 * (1.0 + exact.abs()),
+                    "edge ({c},{d}): {approx} vs {exact}"
+                );
+            }
+        }
+    }
+
+    /// L2 and IP estimates must be mutually consistent:
+    /// ||q-d||² = ||q||² + ||d||² − 2 qᵀd.
+    #[test]
+    fn ip_and_l2_estimates_consistent() {
+        let ds = tiny(602, 300, 24, Metric::L2);
+        let h = Hnsw::build(&ds.data, HnswParams { m: 8, ef_construction: 40, ..Default::default() });
+        let f = crate::finger::construct::FingerIndex::build(
+            &ds.data,
+            &h.base,
+            FingerParams { rank: 8, ..Default::default() },
+        );
+        let q = ds.queries.row(1);
+        let qs = QueryState::new(&f, q);
+        let qsq = crate::core::distance::norm_sq(q);
+        for c in (0..ds.data.rows() as u32).step_by(13) {
+            let dqc = l2_sq(q, ds.data.row(c as usize));
+            let qc = QueryCenter::new(&f, &qs, c, dqc);
+            for (j, &d) in h.base.neighbors(c).iter().enumerate() {
+                let slot = h.base.edge_slot(c, j);
+                let ip = approx_ip(&f, &qc, slot);
+                let l2 = crate::finger::approx::approx_dist_sq(&f, &qc, slot);
+                let dsq = crate::core::distance::norm_sq(ds.data.row(d as usize));
+                let reconstructed = qsq + dsq - 2.0 * ip;
+                assert!(
+                    (l2 - reconstructed).abs() < 1e-2 * (1.0 + l2.abs()),
+                    "edge ({c},{d}): l2 {l2} vs reconstructed {reconstructed}"
+                );
+            }
+        }
+    }
+}

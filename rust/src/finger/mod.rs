@@ -1,0 +1,13 @@
+//! The paper's contribution: FINGER index construction (Algorithm 2), the
+//! approximate distance (Algorithm 3), the screened greedy search
+//! (Algorithm 4), and the RPLSH ablation baseline.
+
+pub mod approx;
+pub mod construct;
+pub mod ip;
+pub mod rplsh;
+pub mod search;
+
+pub use approx::{approx_dist_sq, QueryCenter, QueryState};
+pub use construct::{FingerIndex, FingerParams, MatchParams};
+pub use search::{finger_beam_search, FingerHnsw};

@@ -1,0 +1,258 @@
+//! Algorithm 4: approximate greedy graph search.
+//!
+//! Identical control flow to Algorithm 1 except neighbor screening: once
+//! the top-results queue is full, each neighbor is first scored with the
+//! FINGER approximate distance; only if the approximation beats the upper
+//! bound is the exact m-dimensional distance computed (Supplementary G —
+//! the candidate queue only ever holds *exact* distances, so termination
+//! logic is unchanged and the search cannot stop early due to
+//! approximation error).
+
+use std::collections::BinaryHeap;
+
+use crate::core::distance::l2_sq;
+use crate::core::matrix::Matrix;
+use crate::finger::approx::{approx_dist_sq, QueryCenter, QueryState};
+use crate::finger::construct::FingerIndex;
+use crate::graph::adjacency::FlatAdj;
+use crate::graph::search::{MinNeighbor, Neighbor, SearchStats};
+use crate::graph::visited::VisitedSet;
+
+/// FINGER-screened beam search over one adjacency layer.
+#[allow(clippy::too_many_arguments)]
+pub fn finger_beam_search(
+    data: &Matrix,
+    adj: &FlatAdj,
+    index: &FingerIndex,
+    entry: u32,
+    q: &[f32],
+    ef: usize,
+    visited: &mut VisitedSet,
+    mut stats: Option<&mut SearchStats>,
+) -> Vec<Neighbor> {
+    visited.clear();
+    visited.insert(entry);
+    let qs = QueryState::new(index, q);
+    let d0 = l2_sq(q, data.row(entry as usize));
+    if let Some(s) = stats.as_deref_mut() {
+        s.dist_calls += 1;
+    }
+
+    let mut cands: BinaryHeap<MinNeighbor> = BinaryHeap::new();
+    let mut top: BinaryHeap<Neighbor> = BinaryHeap::new();
+    cands.push(MinNeighbor(Neighbor { dist: d0, id: entry }));
+    top.push(Neighbor { dist: d0, id: entry });
+
+    while let Some(MinNeighbor(cur)) = cands.pop() {
+        let ub = top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
+        if cur.dist > ub && top.len() >= ef {
+            break;
+        }
+        if let Some(s) = stats.as_deref_mut() {
+            s.hops += 1;
+        }
+        // Lazily built: only pay the query-center setup if we actually
+        // screen at least one neighbor approximately.
+        let mut qc: Option<QueryCenter> = None;
+        for (j, &nb) in adj.neighbors(cur.id).iter().enumerate() {
+            if !visited.insert(nb) {
+                continue;
+            }
+            let ub_now = top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
+            let full = top.len() >= ef;
+            if full {
+                // Screen with Algorithm 3 before paying the m-dim distance.
+                let qc = qc.get_or_insert_with(|| QueryCenter::new(index, &qs, cur.id, cur.dist));
+                let slot = adj.edge_slot(cur.id, j);
+                let approx = approx_dist_sq(index, qc, slot);
+                if let Some(s) = stats.as_deref_mut() {
+                    s.approx_calls += 1;
+                }
+                if approx > ub_now {
+                    continue; // screened out: skip the exact computation
+                }
+            }
+            let d = l2_sq(q, data.row(nb as usize));
+            if let Some(s) = stats.as_deref_mut() {
+                s.dist_calls += 1;
+            }
+            if !full || d < ub_now {
+                cands.push(MinNeighbor(Neighbor { dist: d, id: nb }));
+                top.push(Neighbor { dist: d, id: nb });
+                if top.len() > ef {
+                    top.pop();
+                }
+            }
+        }
+    }
+
+    let mut out: Vec<Neighbor> = top.into_vec();
+    out.sort();
+    out
+}
+
+/// FINGER-screened HNSW search over *borrowed* graph + index (lets callers
+/// share one graph across many FINGER/RPLSH index variants — the Figure 6
+/// ablation sweeps dozens of (rank, scheme) combinations on one graph).
+pub fn search_hnsw_with_index(
+    hnsw: &crate::graph::hnsw::Hnsw,
+    index: &FingerIndex,
+    data: &Matrix,
+    q: &[f32],
+    k: usize,
+    ef: usize,
+    visited: &mut VisitedSet,
+    mut stats: Option<&mut SearchStats>,
+) -> Vec<Neighbor> {
+    let mut cur = hnsw.entry;
+    for l in (1..=hnsw.max_level).rev() {
+        cur = crate::graph::search::greedy_descent(
+            data,
+            &hnsw.upper[l - 1],
+            cur,
+            q,
+            stats.as_deref_mut(),
+        )
+        .id;
+    }
+    let mut res = finger_beam_search(data, &hnsw.base, index, cur, q, ef.max(k), visited, stats);
+    res.truncate(k);
+    res
+}
+
+/// HNSW + FINGER: exact greedy descent on the upper layers (they are tiny),
+/// FINGER-screened beam search on the base layer — matching the paper's
+/// HNSW-FINGER system.
+pub struct FingerHnsw {
+    pub hnsw: crate::graph::hnsw::Hnsw,
+    pub index: FingerIndex,
+}
+
+impl FingerHnsw {
+    pub fn build(
+        data: &Matrix,
+        hnsw_params: crate::graph::hnsw::HnswParams,
+        finger_params: crate::finger::construct::FingerParams,
+    ) -> FingerHnsw {
+        let hnsw = crate::graph::hnsw::Hnsw::build(data, hnsw_params);
+        let index = FingerIndex::build(data, &hnsw.base, finger_params);
+        FingerHnsw { hnsw, index }
+    }
+
+    pub fn search(
+        &self,
+        data: &Matrix,
+        q: &[f32],
+        k: usize,
+        ef: usize,
+        visited: &mut VisitedSet,
+        stats: Option<&mut SearchStats>,
+    ) -> Vec<Neighbor> {
+        search_hnsw_with_index(&self.hnsw, &self.index, data, q, k, ef, visited, stats)
+    }
+
+    /// Total index bytes: graph adjacency + FINGER tables.
+    pub fn nbytes(&self) -> usize {
+        self.hnsw.nbytes() + self.index.nbytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::distance::Metric;
+    use crate::data::groundtruth::exact_knn;
+    use crate::data::synth::tiny;
+    use crate::finger::construct::FingerParams;
+    use crate::graph::hnsw::HnswParams;
+
+    fn avg_recall(
+        fh: &FingerHnsw,
+        ds: &crate::data::synth::Dataset,
+        gt: &[Vec<u32>],
+        ef: usize,
+        stats: Option<&mut SearchStats>,
+    ) -> f64 {
+        let mut vis = VisitedSet::new(ds.data.rows());
+        let mut total = 0.0;
+        let mut stats = stats;
+        for qi in 0..ds.queries.rows() {
+            let res = fh.search(&ds.data, ds.queries.row(qi), 10, ef, &mut vis, stats.as_deref_mut());
+            let hits = res.iter().filter(|n| gt[qi].contains(&n.id)).count();
+            total += hits as f64 / 10.0;
+        }
+        total / ds.queries.rows() as f64
+    }
+
+    #[test]
+    fn finger_maintains_high_recall() {
+        let ds = tiny(71, 800, 32, Metric::L2);
+        let fh = FingerHnsw::build(
+            &ds.data,
+            HnswParams { m: 12, ef_construction: 80, ..Default::default() },
+            FingerParams { rank: 16, ..Default::default() },
+        );
+        let gt = exact_knn(&ds.data, &ds.queries, 10);
+        let r = avg_recall(&fh, &ds, &gt, 80, None);
+        assert!(r > 0.85, "recall@10 = {r}");
+    }
+
+    #[test]
+    fn finger_reduces_full_distance_calls() {
+        let ds = tiny(72, 800, 48, Metric::L2);
+        let hnsw_p = HnswParams { m: 12, ef_construction: 80, ..Default::default() };
+        let fh = FingerHnsw::build(&ds.data, hnsw_p.clone(), FingerParams { rank: 8, ..Default::default() });
+        let gt = exact_knn(&ds.data, &ds.queries, 10);
+
+        let mut finger_stats = SearchStats::default();
+        let r_f = avg_recall(&fh, &ds, &gt, 60, Some(&mut finger_stats));
+
+        // Baseline: plain HNSW search on the same graph.
+        let mut vis = VisitedSet::new(ds.data.rows());
+        let mut plain_stats = SearchStats::default();
+        for qi in 0..ds.queries.rows() {
+            fh.hnsw.search(&ds.data, ds.queries.row(qi), 10, 60, &mut vis, Some(&mut plain_stats));
+        }
+
+        assert!(
+            finger_stats.dist_calls < plain_stats.dist_calls,
+            "finger {} vs plain {} full-distance calls",
+            finger_stats.dist_calls,
+            plain_stats.dist_calls
+        );
+        assert!(finger_stats.approx_calls > 0);
+        assert!(r_f > 0.8, "recall with screening = {r_f}");
+    }
+
+    #[test]
+    fn results_sorted_and_unique() {
+        let ds = tiny(73, 300, 16, Metric::L2);
+        let fh = FingerHnsw::build(
+            &ds.data,
+            HnswParams { m: 8, ef_construction: 40, ..Default::default() },
+            FingerParams { rank: 8, ..Default::default() },
+        );
+        let mut vis = VisitedSet::new(ds.data.rows());
+        let res = fh.search(&ds.data, ds.queries.row(0), 10, 50, &mut vis, None);
+        for w in res.windows(2) {
+            assert!(w[0].dist <= w[1].dist);
+        }
+        let mut ids: Vec<u32> = res.iter().map(|n| n.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), res.len());
+    }
+
+    #[test]
+    fn angular_dataset_works() {
+        let ds = tiny(74, 500, 24, Metric::Angular);
+        let fh = FingerHnsw::build(
+            &ds.data,
+            HnswParams { m: 8, ef_construction: 60, ..Default::default() },
+            FingerParams { rank: 8, ..Default::default() },
+        );
+        let gt = exact_knn(&ds.data, &ds.queries, 10);
+        let r = avg_recall(&fh, &ds, &gt, 60, None);
+        assert!(r > 0.8, "angular recall@10 = {r}");
+    }
+}

@@ -1,0 +1,125 @@
+//! Flat fixed-capacity adjacency storage. One contiguous `u32` buffer with
+//! a per-node length; cache-friendly neighbor iteration and stable edge
+//! slots, which the FINGER index keys its per-edge arrays on.
+
+/// Fixed-capacity flat adjacency list.
+#[derive(Clone, Debug)]
+pub struct FlatAdj {
+    neighbors: Vec<u32>,
+    len: Vec<u32>,
+    cap: usize,
+}
+
+impl FlatAdj {
+    pub fn new(n: usize, cap: usize) -> Self {
+        Self {
+            neighbors: vec![u32::MAX; n * cap],
+            len: vec![0; n],
+            cap,
+        }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.len.len()
+    }
+
+    #[inline]
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    #[inline]
+    pub fn degree(&self, u: u32) -> usize {
+        self.len[u as usize] as usize
+    }
+
+    #[inline]
+    pub fn neighbors(&self, u: u32) -> &[u32] {
+        let base = u as usize * self.cap;
+        &self.neighbors[base..base + self.degree(u)]
+    }
+
+    /// Stable global slot index of edge (u, j) — position j in u's list.
+    #[inline]
+    pub fn edge_slot(&self, u: u32, j: usize) -> usize {
+        u as usize * self.cap + j
+    }
+
+    /// Total edge slots (n * cap) — sizing for per-edge side arrays.
+    #[inline]
+    pub fn total_slots(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    /// Append a neighbor; returns false if at capacity.
+    pub fn push(&mut self, u: u32, v: u32) -> bool {
+        let d = self.degree(u);
+        if d >= self.cap {
+            return false;
+        }
+        self.neighbors[u as usize * self.cap + d] = v;
+        self.len[u as usize] = (d + 1) as u32;
+        true
+    }
+
+    /// Replace u's neighbor list (truncated at capacity).
+    pub fn set(&mut self, u: u32, list: &[u32]) {
+        let k = list.len().min(self.cap);
+        let base = u as usize * self.cap;
+        self.neighbors[base..base + k].copy_from_slice(&list[..k]);
+        self.len[u as usize] = k as u32;
+    }
+
+    /// Does u already link to v?
+    pub fn contains(&self, u: u32, v: u32) -> bool {
+        self.neighbors(u).contains(&v)
+    }
+
+    /// Total directed edge count.
+    pub fn num_edges(&self) -> usize {
+        self.len.iter().map(|&l| l as usize).sum()
+    }
+
+    /// Memory footprint in bytes.
+    pub fn nbytes(&self) -> usize {
+        self.neighbors.len() * 4 + self.len.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_read() {
+        let mut a = FlatAdj::new(3, 2);
+        assert!(a.push(0, 1));
+        assert!(a.push(0, 2));
+        assert!(!a.push(0, 1), "capacity respected");
+        assert_eq!(a.neighbors(0), &[1, 2]);
+        assert_eq!(a.neighbors(1), &[] as &[u32]);
+        assert_eq!(a.num_edges(), 2);
+    }
+
+    #[test]
+    fn set_replaces_and_truncates() {
+        let mut a = FlatAdj::new(2, 3);
+        a.set(1, &[5, 6, 7, 8]);
+        assert_eq!(a.neighbors(1), &[5, 6, 7]);
+        a.set(1, &[9]);
+        assert_eq!(a.neighbors(1), &[9]);
+    }
+
+    #[test]
+    fn edge_slots_are_stable_and_disjoint() {
+        let a = FlatAdj::new(4, 3);
+        let mut seen = std::collections::HashSet::new();
+        for u in 0..4u32 {
+            for j in 0..3 {
+                assert!(seen.insert(a.edge_slot(u, j)));
+            }
+        }
+        assert_eq!(a.total_slots(), 12);
+    }
+}

@@ -1,0 +1,54 @@
+//! Brute-force exact scan — baseline and correctness anchor.
+
+use crate::core::distance::l2_sq;
+use crate::core::matrix::Matrix;
+use crate::graph::search::Neighbor;
+
+/// Exact top-k by linear scan (single query).
+pub fn scan(data: &Matrix, q: &[f32], k: usize) -> Vec<Neighbor> {
+    let k = k.min(data.rows());
+    let mut best: Vec<Neighbor> = Vec::with_capacity(k + 1);
+    let mut worst = f32::INFINITY;
+    for i in 0..data.rows() {
+        let d = l2_sq(q, data.row(i));
+        if best.len() < k {
+            best.push(Neighbor { dist: d, id: i as u32 });
+            best.sort();
+            worst = best.last().unwrap().dist;
+        } else if d < worst {
+            *best.last_mut().unwrap() = Neighbor { dist: d, id: i as u32 };
+            best.sort();
+            worst = best.last().unwrap().dist;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Pcg32;
+
+    #[test]
+    fn matches_full_sort() {
+        let mut rng = Pcg32::new(1);
+        let mut data = Matrix::zeros(0, 0);
+        for _ in 0..200 {
+            let row: Vec<f32> = (0..6).map(|_| rng.next_gaussian()).collect();
+            data.push_row(&row);
+        }
+        let q: Vec<f32> = (0..6).map(|_| rng.next_gaussian()).collect();
+        let got = scan(&data, &q, 7);
+        let mut all: Vec<Neighbor> = (0..200)
+            .map(|i| Neighbor { dist: l2_sq(&q, data.row(i)), id: i as u32 })
+            .collect();
+        all.sort();
+        assert_eq!(got, all[..7].to_vec());
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let data = Matrix::from_rows(&[vec![1.0], vec![2.0]]);
+        assert_eq!(scan(&data, &[0.0], 10).len(), 2);
+    }
+}

@@ -1,0 +1,327 @@
+//! HNSW (Malkov & Yashunin, TPAMI 2018) — the base graph FINGER is built
+//! on in the paper. Standard construction: geometric level assignment,
+//! greedy descent through upper layers, beam search + neighbor-selection
+//! heuristic at each level, bidirectional linking with pruning.
+
+use crate::core::distance::l2_sq;
+use crate::core::matrix::Matrix;
+use crate::core::rng::Pcg32;
+use crate::graph::adjacency::FlatAdj;
+use crate::graph::search::{beam_search, greedy_descent, Neighbor, SearchStats};
+use crate::graph::visited::VisitedSet;
+
+/// HNSW build parameters.
+#[derive(Clone, Debug)]
+pub struct HnswParams {
+    /// Max out-degree at upper layers; layer 0 allows 2M.
+    pub m: usize,
+    pub ef_construction: usize,
+    pub seed: u64,
+    /// Use the diversity heuristic (Algorithm 4 of the HNSW paper) for
+    /// neighbor selection rather than plain nearest.
+    pub heuristic: bool,
+}
+
+impl Default for HnswParams {
+    fn default() -> Self {
+        Self {
+            m: 16,
+            ef_construction: 100,
+            seed: 42,
+            heuristic: true,
+        }
+    }
+}
+
+/// A built HNSW index.
+pub struct Hnsw {
+    pub params: HnswParams,
+    /// Layer 0 adjacency (capacity 2M).
+    pub base: FlatAdj,
+    /// Upper layers, index 0 = layer 1.
+    pub upper: Vec<FlatAdj>,
+    pub levels: Vec<u8>,
+    pub entry: u32,
+    pub max_level: usize,
+}
+
+impl Hnsw {
+    /// Build over `data` (rows are points).
+    pub fn build(data: &Matrix, params: HnswParams) -> Hnsw {
+        let n = data.rows();
+        assert!(n > 0, "empty dataset");
+        let m = params.m;
+        let ml = 1.0 / (m as f64).ln().max(1e-9);
+        let mut rng = Pcg32::new(params.seed);
+
+        // Pre-assign levels so layer storage can be allocated once.
+        let levels: Vec<u8> = (0..n)
+            .map(|_| {
+                let u = rng.next_f64().max(1e-12);
+                ((-u.ln() * ml).floor() as usize).min(12) as u8
+            })
+            .collect();
+        let max_level = levels.iter().copied().max().unwrap_or(0) as usize;
+
+        let mut g = Hnsw {
+            base: FlatAdj::new(n, 2 * m),
+            upper: (0..max_level).map(|_| FlatAdj::new(n, m)).collect(),
+            levels,
+            entry: 0,
+            max_level: 0,
+            params,
+        };
+
+        let mut visited = VisitedSet::new(n);
+        // Insert points one by one (point 0 initializes the graph).
+        g.max_level = g.levels[0] as usize;
+        for i in 1..n {
+            g.insert(data, i as u32, &mut visited);
+        }
+        g
+    }
+
+    fn layer(&self, l: usize) -> &FlatAdj {
+        if l == 0 {
+            &self.base
+        } else {
+            &self.upper[l - 1]
+        }
+    }
+
+    fn layer_mut(&mut self, l: usize) -> &mut FlatAdj {
+        if l == 0 {
+            &mut self.base
+        } else {
+            &mut self.upper[l - 1]
+        }
+    }
+
+    fn insert(&mut self, data: &Matrix, id: u32, visited: &mut VisitedSet) {
+        let q = data.row(id as usize);
+        let node_level = self.levels[id as usize] as usize;
+        let mut cur = self.entry;
+
+        // Descend from the top to node_level+1 greedily.
+        let top = self.max_level;
+        for l in (node_level + 1..=top).rev() {
+            cur = greedy_descent(data, self.layer(l), cur, q, None).id;
+        }
+
+        // Insert at each level from min(top, node_level) down to 0.
+        for l in (0..=node_level.min(top)).rev() {
+            let found = beam_search(
+                data,
+                self.layer(l),
+                cur,
+                q,
+                self.params.ef_construction,
+                visited,
+                None,
+            );
+            cur = found.first().map(|n| n.id).unwrap_or(cur);
+            let cap = if l == 0 { 2 * self.params.m } else { self.params.m };
+            let selected = if self.params.heuristic {
+                select_heuristic(data, &found, cap)
+            } else {
+                found.iter().take(cap).copied().collect()
+            };
+            // Link bidirectionally with pruning.
+            let list: Vec<u32> = selected.iter().map(|n| n.id).collect();
+            self.layer_mut(l).set(id, &list);
+            for nb in list {
+                self.link_with_prune(data, l, nb, id, cap);
+            }
+        }
+
+        if node_level > self.max_level {
+            self.max_level = node_level;
+            self.entry = id;
+        }
+    }
+
+    /// Add edge u->v; if over capacity, re-select neighbors.
+    ///
+    /// Perf note (EXPERIMENTS.md §Perf): on overflow we prune down to
+    /// `cap - slack` rather than exactly `cap`, leaving headroom so the
+    /// O(cap²)-distance heuristic runs once per ~slack insertions instead
+    /// of on every backward edge. This cut high-dimensional build time
+    /// ~4-5x at equal search recall (degree bound unchanged).
+    fn link_with_prune(&mut self, data: &Matrix, l: usize, u: u32, v: u32, cap: usize) {
+        if self.layer(l).contains(u, v) {
+            return;
+        }
+        if self.layer_mut(l).push(u, v) {
+            return;
+        }
+        // Over capacity: gather current + v, re-select with slack.
+        let slack = (cap / 8).max(1);
+        let target = cap.saturating_sub(slack).max(1);
+        let xu = data.row(u as usize);
+        let mut cands: Vec<Neighbor> = self
+            .layer(l)
+            .neighbors(u)
+            .iter()
+            .map(|&w| Neighbor {
+                dist: l2_sq(xu, data.row(w as usize)),
+                id: w,
+            })
+            .collect();
+        cands.push(Neighbor {
+            dist: l2_sq(xu, data.row(v as usize)),
+            id: v,
+        });
+        cands.sort();
+        let selected = if self.params.heuristic {
+            select_heuristic(data, &cands, target)
+        } else {
+            cands.into_iter().take(target).collect()
+        };
+        let list: Vec<u32> = selected.iter().map(|n| n.id).collect();
+        self.layer_mut(l).set(u, &list);
+    }
+
+    /// Search: greedy descent through upper layers, beam at layer 0.
+    pub fn search(
+        &self,
+        data: &Matrix,
+        q: &[f32],
+        k: usize,
+        ef: usize,
+        visited: &mut VisitedSet,
+        mut stats: Option<&mut SearchStats>,
+    ) -> Vec<Neighbor> {
+        let mut cur = self.entry;
+        for l in (1..=self.max_level).rev() {
+            cur = greedy_descent(data, self.layer(l), cur, q, stats.as_deref_mut()).id;
+        }
+        let mut res = beam_search(data, &self.base, cur, q, ef.max(k), visited, stats);
+        res.truncate(k);
+        res
+    }
+
+    /// Index memory footprint in bytes (adjacency only; data stored apart).
+    pub fn nbytes(&self) -> usize {
+        self.base.nbytes() + self.upper.iter().map(|l| l.nbytes()).sum::<usize>()
+    }
+}
+
+/// HNSW's neighbor-selection heuristic: keep a candidate only if it is
+/// closer to the query point than to every already-kept neighbor
+/// (diversity pruning). Falls back to nearest-fill if underfull.
+pub fn select_heuristic(data: &Matrix, cands: &[Neighbor], cap: usize) -> Vec<Neighbor> {
+    let mut kept: Vec<Neighbor> = Vec::with_capacity(cap);
+    for &c in cands {
+        if kept.len() >= cap {
+            break;
+        }
+        let xc = data.row(c.id as usize);
+        let diverse = kept
+            .iter()
+            .all(|k| l2_sq(xc, data.row(k.id as usize)) > c.dist);
+        if diverse {
+            kept.push(c);
+        }
+    }
+    if kept.len() < cap {
+        for &c in cands {
+            if kept.len() >= cap {
+                break;
+            }
+            if !kept.iter().any(|k| k.id == c.id) {
+                kept.push(c);
+            }
+        }
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::groundtruth::exact_knn;
+    use crate::data::synth::tiny;
+    use crate::core::distance::Metric;
+
+    fn recall(found: &[Neighbor], gt: &[u32]) -> f64 {
+        let hits = found.iter().filter(|n| gt.contains(&n.id)).count();
+        hits as f64 / gt.len() as f64
+    }
+
+    #[test]
+    fn high_recall_on_tiny_dataset() {
+        let ds = tiny(7, 800, 24, Metric::L2);
+        let h = Hnsw::build(&ds.data, HnswParams { m: 12, ef_construction: 80, ..Default::default() });
+        let gt = exact_knn(&ds.data, &ds.queries, 10);
+        let mut vis = VisitedSet::new(ds.data.rows());
+        let mut total = 0.0;
+        for qi in 0..ds.queries.rows() {
+            let res = h.search(&ds.data, ds.queries.row(qi), 10, 80, &mut vis, None);
+            total += recall(&res, &gt[qi]);
+        }
+        let avg = total / ds.queries.rows() as f64;
+        assert!(avg > 0.9, "recall@10 = {avg}");
+    }
+
+    #[test]
+    fn search_returns_k_sorted() {
+        let ds = tiny(8, 300, 16, Metric::L2);
+        let h = Hnsw::build(&ds.data, HnswParams::default());
+        let mut vis = VisitedSet::new(ds.data.rows());
+        let res = h.search(&ds.data, ds.queries.row(0), 5, 50, &mut vis, None);
+        assert_eq!(res.len(), 5);
+        for w in res.windows(2) {
+            assert!(w[0].dist <= w[1].dist);
+        }
+    }
+
+    #[test]
+    fn degrees_bounded() {
+        let ds = tiny(9, 400, 8, Metric::L2);
+        let p = HnswParams { m: 8, ef_construction: 40, ..Default::default() };
+        let h = Hnsw::build(&ds.data, p.clone());
+        for u in 0..ds.data.rows() as u32 {
+            assert!(h.base.degree(u) <= 2 * p.m);
+            for l in &h.upper {
+                assert!(l.degree(u) <= p.m);
+            }
+        }
+    }
+
+    #[test]
+    fn entry_point_has_max_level() {
+        let ds = tiny(10, 500, 8, Metric::L2);
+        let h = Hnsw::build(&ds.data, HnswParams::default());
+        assert_eq!(h.levels[h.entry as usize] as usize, h.max_level);
+    }
+
+    #[test]
+    fn heuristic_prefers_diverse_neighbors() {
+        // Three collinear points: b between a and target. Heuristic should
+        // drop the redundant farther point along the same direction.
+        let data = Matrix::from_rows(&[
+            vec![0.0, 0.0],  // query point (id 0)
+            vec![1.0, 0.0],  // close
+            vec![2.0, 0.0],  // same direction, farther
+            vec![0.0, 1.2],  // different direction
+        ]);
+        let q = data.row(0);
+        let mut cands: Vec<Neighbor> = (1..4u32)
+            .map(|i| Neighbor { dist: l2_sq(q, data.row(i as usize)), id: i })
+            .collect();
+        cands.sort();
+        let kept = select_heuristic(&data, &cands, 2);
+        let ids: Vec<u32> = kept.iter().map(|n| n.id).collect();
+        assert!(ids.contains(&1));
+        assert!(ids.contains(&3), "diverse direction kept: {ids:?}");
+    }
+
+    #[test]
+    fn deterministic_build() {
+        let ds = tiny(11, 200, 8, Metric::L2);
+        let a = Hnsw::build(&ds.data, HnswParams::default());
+        let b = Hnsw::build(&ds.data, HnswParams::default());
+        assert_eq!(a.entry, b.entry);
+        assert_eq!(a.base.num_edges(), b.base.num_edges());
+    }
+}

@@ -1,0 +1,16 @@
+//! Graph substrates: adjacency storage, Algorithm 1 search, and the three
+//! graph-construction families the paper benchmarks (HNSW, Vamana,
+//! NN-descent) plus brute force.
+
+pub mod adjacency;
+pub mod bruteforce;
+pub mod earlyterm;
+pub mod hnsw;
+pub mod nndescent;
+pub mod search;
+pub mod vamana;
+pub mod visited;
+
+pub use adjacency::FlatAdj;
+pub use search::{Neighbor, SearchStats};
+pub use visited::VisitedSet;

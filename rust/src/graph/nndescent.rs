@@ -1,0 +1,258 @@
+//! NN-descent KNN-graph construction (Dong, Moses & Li, WWW 2011) — the
+//! PyNNDescent-style baseline of the paper's Figures 1/5/8. Builds an
+//! approximate K-NN graph by iterated local joins, then diversity-prunes
+//! and symmetrizes it into a searchable graph.
+
+use crate::core::distance::l2_sq;
+use crate::core::matrix::Matrix;
+use crate::core::rng::Pcg32;
+use crate::graph::adjacency::FlatAdj;
+use crate::graph::hnsw::select_heuristic;
+use crate::graph::search::{beam_search, Neighbor, SearchStats};
+use crate::graph::visited::VisitedSet;
+
+#[derive(Clone, Debug)]
+pub struct NnDescentParams {
+    /// K of the intermediate KNN graph.
+    pub k: usize,
+    /// Sampled neighbors per local join.
+    pub sample: usize,
+    pub iters: usize,
+    /// Final searchable-graph degree cap.
+    pub degree: usize,
+    pub seed: u64,
+    /// Diversity-prune (PyNNDescent does this for its search graph).
+    pub prune: bool,
+}
+
+impl Default for NnDescentParams {
+    fn default() -> Self {
+        Self {
+            k: 24,
+            sample: 12,
+            iters: 6,
+            degree: 32,
+            seed: 42,
+            prune: true,
+        }
+    }
+}
+
+pub struct NnDescent {
+    pub params: NnDescentParams,
+    pub adj: FlatAdj,
+    /// Entry probes: the search starts from the nearest of these
+    /// (KNN graphs lack HNSW's navigable hierarchy, so a handful of probes
+    /// substitutes for the coarse descent — PyNNDescent does the same with
+    /// its random-projection-forest init).
+    pub entry_probes: Vec<u32>,
+}
+
+/// Per-node bounded candidate list (max-heap by distance, dedup by id).
+struct KnnList {
+    items: Vec<Neighbor>,
+    cap: usize,
+}
+
+impl KnnList {
+    fn new(cap: usize) -> Self {
+        Self {
+            items: Vec::with_capacity(cap + 1),
+            cap,
+        }
+    }
+
+    /// Insert; returns true if the list changed.
+    fn offer(&mut self, cand: Neighbor) -> bool {
+        if self.items.iter().any(|x| x.id == cand.id) {
+            return false;
+        }
+        if self.items.len() < self.cap {
+            self.items.push(cand);
+            self.items.sort();
+            return true;
+        }
+        if cand.dist >= self.items[self.cap - 1].dist {
+            return false;
+        }
+        self.items[self.cap - 1] = cand;
+        self.items.sort();
+        true
+    }
+}
+
+impl NnDescent {
+    pub fn build(data: &Matrix, params: NnDescentParams) -> NnDescent {
+        let n = data.rows();
+        assert!(n > 1);
+        let k = params.k.min(n - 1);
+        let mut rng = Pcg32::new(params.seed);
+
+        // Random initialization.
+        let mut lists: Vec<KnnList> = (0..n).map(|_| KnnList::new(k)).collect();
+        for u in 0..n {
+            while lists[u].items.len() < k {
+                let v = rng.gen_range(n);
+                if v != u {
+                    let cand = Neighbor {
+                        dist: l2_sq(data.row(u), data.row(v)),
+                        id: v as u32,
+                    };
+                    lists[u].offer(cand);
+                }
+            }
+        }
+
+        // Iterated local joins: for each u, sample pairs among (neighbors ∪
+        // reverse neighbors) and try cross-linking them.
+        for _it in 0..params.iters {
+            // Reverse adjacency sample.
+            let mut reverse: Vec<Vec<u32>> = vec![Vec::new(); n];
+            for u in 0..n {
+                for nb in &lists[u].items {
+                    let r = &mut reverse[nb.id as usize];
+                    if r.len() < params.sample {
+                        r.push(u as u32);
+                    }
+                }
+            }
+            let mut updates = 0usize;
+            for u in 0..n {
+                let mut pool: Vec<u32> =
+                    lists[u].items.iter().map(|x| x.id).collect();
+                pool.extend_from_slice(&reverse[u]);
+                pool.sort_unstable();
+                pool.dedup();
+                if pool.len() > params.sample * 2 {
+                    rng.shuffle(&mut pool);
+                    pool.truncate(params.sample * 2);
+                }
+                for i in 0..pool.len() {
+                    for j in i + 1..pool.len() {
+                        let (a, b) = (pool[i], pool[j]);
+                        if a == b {
+                            continue;
+                        }
+                        let d = l2_sq(data.row(a as usize), data.row(b as usize));
+                        if lists[a as usize].offer(Neighbor { dist: d, id: b }) {
+                            updates += 1;
+                        }
+                        if lists[b as usize].offer(Neighbor { dist: d, id: a }) {
+                            updates += 1;
+                        }
+                    }
+                }
+            }
+            if updates == 0 {
+                break; // converged
+            }
+        }
+
+        // Convert to a searchable graph: optional diversity prune, then
+        // add reverse edges up to the degree cap.
+        let mut adj = FlatAdj::new(n, params.degree);
+        for u in 0..n {
+            let kept = if params.prune {
+                select_heuristic(data, &lists[u].items, params.degree)
+            } else {
+                lists[u].items.iter().take(params.degree).copied().collect()
+            };
+            let ids: Vec<u32> = kept.iter().map(|x| x.id).collect();
+            adj.set(u as u32, &ids);
+        }
+        for u in 0..n as u32 {
+            let nbs: Vec<u32> = adj.neighbors(u).to_vec();
+            for v in nbs {
+                if !adj.contains(v, u) {
+                    adj.push(v, u); // best-effort; ignore overflow
+                }
+            }
+        }
+
+        let entry_probes: Vec<u32> = (0..16.min(n)).map(|_| rng.gen_range(n) as u32).collect();
+        NnDescent {
+            params,
+            adj,
+            entry_probes,
+        }
+    }
+
+    pub fn search(
+        &self,
+        data: &Matrix,
+        q: &[f32],
+        k: usize,
+        ef: usize,
+        visited: &mut VisitedSet,
+        mut stats: Option<&mut SearchStats>,
+    ) -> Vec<Neighbor> {
+        // Nearest probe as the entry point.
+        let mut entry = self.entry_probes[0];
+        let mut best = f32::INFINITY;
+        for &p in &self.entry_probes {
+            let d = l2_sq(q, data.row(p as usize));
+            if d < best {
+                best = d;
+                entry = p;
+            }
+        }
+        if let Some(s) = stats.as_deref_mut() {
+            s.dist_calls += self.entry_probes.len() as u64;
+        }
+        let mut res = beam_search(data, &self.adj, entry, q, ef.max(k), visited, stats);
+        res.truncate(k);
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::distance::Metric;
+    use crate::data::groundtruth::exact_knn;
+    use crate::data::synth::tiny;
+
+    #[test]
+    fn knn_list_bounded_and_sorted() {
+        let mut l = KnnList::new(3);
+        for (d, id) in [(5.0, 1u32), (2.0, 2), (9.0, 3), (1.0, 4), (3.0, 5)] {
+            l.offer(Neighbor { dist: d, id });
+        }
+        assert_eq!(l.items.len(), 3);
+        let ids: Vec<u32> = l.items.iter().map(|x| x.id).collect();
+        assert_eq!(ids, vec![4, 2, 5]);
+    }
+
+    #[test]
+    fn knn_list_rejects_duplicates() {
+        let mut l = KnnList::new(2);
+        assert!(l.offer(Neighbor { dist: 1.0, id: 7 }));
+        assert!(!l.offer(Neighbor { dist: 0.5, id: 7 }));
+    }
+
+    #[test]
+    fn reasonable_recall_on_tiny() {
+        let ds = tiny(31, 600, 16, Metric::L2);
+        let g = NnDescent::build(&ds.data, NnDescentParams::default());
+        let gt = exact_knn(&ds.data, &ds.queries, 10);
+        let mut vis = VisitedSet::new(ds.data.rows());
+        let mut total = 0.0;
+        for qi in 0..ds.queries.rows() {
+            let res = g.search(&ds.data, ds.queries.row(qi), 10, 80, &mut vis, None);
+            let hits = res.iter().filter(|n| gt[qi].contains(&n.id)).count();
+            total += hits as f64 / 10.0;
+        }
+        let avg = total / ds.queries.rows() as f64;
+        assert!(avg > 0.8, "recall@10 = {avg}");
+    }
+
+    #[test]
+    fn degrees_bounded() {
+        let ds = tiny(32, 300, 8, Metric::L2);
+        let p = NnDescentParams { degree: 10, ..Default::default() };
+        let g = NnDescent::build(&ds.data, p);
+        for u in 0..ds.data.rows() as u32 {
+            assert!(g.adj.degree(u) <= 10);
+        }
+    }
+}

@@ -1,0 +1,317 @@
+//! Algorithm 1: greedy best-first graph search, with the instrumentation
+//! that produces the paper's Figure 2 observation (what fraction of
+//! distance computations exceed the current upper bound and therefore
+//! cannot influence the search).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::core::distance::l2_sq;
+use crate::core::matrix::Matrix;
+use crate::graph::adjacency::FlatAdj;
+use crate::graph::visited::VisitedSet;
+
+/// (distance, id) with max-heap ordering by distance.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Neighbor {
+    pub dist: f32,
+    pub id: u32,
+}
+
+impl Eq for Neighbor {}
+
+impl Ord for Neighbor {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.dist
+            .partial_cmp(&other.dist)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| self.id.cmp(&other.id))
+    }
+}
+
+impl PartialOrd for Neighbor {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-heap adapter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MinNeighbor(pub Neighbor);
+
+impl Ord for MinNeighbor {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.0.cmp(&self.0)
+    }
+}
+
+impl PartialOrd for MinNeighbor {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Per-search instrumentation. `per_hop` buckets (total, non-influential)
+/// distance-computation counts by node-expansion index — Figure 2's x-axis.
+#[derive(Clone, Debug, Default)]
+pub struct SearchStats {
+    /// Full (m-dimensional) distance computations.
+    pub dist_calls: u64,
+    /// Approximate (r-dimensional) computations (FINGER path only).
+    pub approx_calls: u64,
+    /// Distance computations that exceeded the upper bound while the top
+    /// queue was full (could not influence results).
+    pub wasted: u64,
+    /// Node expansions.
+    pub hops: u64,
+    /// (total, wasted) full-distance counts per expansion index.
+    pub per_hop: Vec<(u64, u64)>,
+}
+
+impl SearchStats {
+    pub fn record(&mut self, hop: usize, wasted: bool) {
+        self.dist_calls += 1;
+        if self.per_hop.len() <= hop {
+            self.per_hop.resize(hop + 1, (0, 0));
+        }
+        self.per_hop[hop].0 += 1;
+        if wasted {
+            self.wasted += 1;
+            self.per_hop[hop].1 += 1;
+        }
+    }
+
+    pub fn merge(&mut self, other: &SearchStats) {
+        self.dist_calls += other.dist_calls;
+        self.approx_calls += other.approx_calls;
+        self.wasted += other.wasted;
+        self.hops += other.hops;
+        if self.per_hop.len() < other.per_hop.len() {
+            self.per_hop.resize(other.per_hop.len(), (0, 0));
+        }
+        for (i, &(t, w)) in other.per_hop.iter().enumerate() {
+            self.per_hop[i].0 += t;
+            self.per_hop[i].1 += w;
+        }
+    }
+
+    /// Effective number of full-distance calls given approximation rank r
+    /// and data dimension m (the paper's Figure 6 x-axis: a + b·r/m).
+    pub fn effective_dist_calls(&self, r: usize, m: usize) -> f64 {
+        self.dist_calls as f64 + self.approx_calls as f64 * (r as f64 / m as f64)
+    }
+}
+
+/// Greedy best-first search (Algorithm 1) over one adjacency layer.
+/// Returns up to `ef` nearest (ascending). `entry` must be a valid node.
+pub fn beam_search(
+    data: &Matrix,
+    adj: &FlatAdj,
+    entry: u32,
+    q: &[f32],
+    ef: usize,
+    visited: &mut VisitedSet,
+    mut stats: Option<&mut SearchStats>,
+) -> Vec<Neighbor> {
+    visited.clear();
+    visited.insert(entry);
+    let d0 = l2_sq(q, data.row(entry as usize));
+    if let Some(s) = stats.as_deref_mut() {
+        s.dist_calls += 1;
+    }
+
+    // Candidate queue (min by dist) and top results (max by dist).
+    let mut cands: BinaryHeap<MinNeighbor> = BinaryHeap::new();
+    let mut top: BinaryHeap<Neighbor> = BinaryHeap::new();
+    cands.push(MinNeighbor(Neighbor { dist: d0, id: entry }));
+    top.push(Neighbor { dist: d0, id: entry });
+
+    let mut hop = 0usize;
+    while let Some(MinNeighbor(cur)) = cands.pop() {
+        let ub = top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
+        if cur.dist > ub && top.len() >= ef {
+            break; // Algorithm 1 line 5: nearest candidate beyond the bound
+        }
+        if let Some(s) = stats.as_deref_mut() {
+            s.hops += 1;
+        }
+        for &nb in adj.neighbors(cur.id) {
+            if !visited.insert(nb) {
+                continue;
+            }
+            let d = l2_sq(q, data.row(nb as usize));
+            let ub_now = top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
+            let full = top.len() >= ef;
+            if let Some(s) = stats.as_deref_mut() {
+                s.record(hop, full && d > ub_now);
+            }
+            if !full || d < ub_now {
+                cands.push(MinNeighbor(Neighbor { dist: d, id: nb }));
+                top.push(Neighbor { dist: d, id: nb });
+                if top.len() > ef {
+                    top.pop();
+                }
+            }
+        }
+        hop += 1;
+    }
+
+    let mut out: Vec<Neighbor> = top.into_vec();
+    out.sort();
+    out
+}
+
+/// Greedy descent: walk to the locally nearest node (ef = 1). Used for
+/// HNSW upper layers.
+pub fn greedy_descent(
+    data: &Matrix,
+    adj: &FlatAdj,
+    entry: u32,
+    q: &[f32],
+    stats: Option<&mut SearchStats>,
+) -> Neighbor {
+    let mut cur = Neighbor {
+        dist: l2_sq(q, data.row(entry as usize)),
+        id: entry,
+    };
+    let mut calls = 1u64;
+    loop {
+        let mut improved = false;
+        for &nb in adj.neighbors(cur.id) {
+            let d = l2_sq(q, data.row(nb as usize));
+            calls += 1;
+            if d < cur.dist {
+                cur = Neighbor { dist: d, id: nb };
+                improved = true;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    if let Some(s) = stats {
+        s.dist_calls += calls;
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Pcg32;
+
+    /// Fully-connected small graph: beam search must find the exact NN.
+    #[test]
+    fn exact_on_complete_graph() {
+        let mut rng = Pcg32::new(1);
+        let n = 60;
+        let mut data = Matrix::zeros(0, 0);
+        for _ in 0..n {
+            let row: Vec<f32> = (0..6).map(|_| rng.next_gaussian()).collect();
+            data.push_row(&row);
+        }
+        let mut adj = FlatAdj::new(n, n - 1);
+        for u in 0..n as u32 {
+            for v in 0..n as u32 {
+                if u != v {
+                    adj.push(u, v);
+                }
+            }
+        }
+        let mut vis = VisitedSet::new(n);
+        let q: Vec<f32> = (0..6).map(|_| rng.next_gaussian()).collect();
+        let res = beam_search(&data, &adj, 0, &q, 5, &mut vis, None);
+        // Naive top-5
+        let mut all: Vec<Neighbor> = (0..n)
+            .map(|i| Neighbor {
+                dist: l2_sq(&q, data.row(i)),
+                id: i as u32,
+            })
+            .collect();
+        all.sort();
+        let want: Vec<u32> = all[..5].iter().map(|x| x.id).collect();
+        let got: Vec<u32> = res[..5].iter().map(|x| x.id).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn results_sorted_ascending() {
+        let mut rng = Pcg32::new(2);
+        let n = 40;
+        let mut data = Matrix::zeros(0, 0);
+        for _ in 0..n {
+            data.push_row(&[rng.next_gaussian(), rng.next_gaussian()]);
+        }
+        let mut adj = FlatAdj::new(n, 6);
+        for u in 0..n as u32 {
+            for k in 1..=6u32 {
+                adj.push(u, (u + k) % n as u32);
+            }
+        }
+        let mut vis = VisitedSet::new(n);
+        let res = beam_search(&data, &adj, 0, &[0.0, 0.0], 10, &mut vis, None);
+        for w in res.windows(2) {
+            assert!(w[0].dist <= w[1].dist);
+        }
+        assert!(res.len() <= 10);
+    }
+
+    #[test]
+    fn stats_count_wasted_computations() {
+        let mut rng = Pcg32::new(3);
+        let n = 200;
+        let mut data = Matrix::zeros(0, 0);
+        for _ in 0..n {
+            let row: Vec<f32> = (0..8).map(|_| rng.next_gaussian()).collect();
+            data.push_row(&row);
+        }
+        let mut adj = FlatAdj::new(n, 8);
+        for u in 0..n as u32 {
+            for k in 1..=8u32 {
+                adj.push(u, (u * 7 + k * 13) % n as u32);
+            }
+        }
+        let mut vis = VisitedSet::new(n);
+        let mut stats = SearchStats::default();
+        let q: Vec<f32> = (0..8).map(|_| rng.next_gaussian()).collect();
+        beam_search(&data, &adj, 0, &q, 4, &mut vis, Some(&mut stats));
+        assert!(stats.dist_calls > 0);
+        assert!(stats.hops > 0);
+        assert!(stats.wasted <= stats.dist_calls);
+        let bucket_total: u64 = stats.per_hop.iter().map(|x| x.0).sum();
+        assert_eq!(bucket_total + 1, stats.dist_calls); // +1 for the entry
+    }
+
+    #[test]
+    fn greedy_descent_reaches_local_min() {
+        // A path graph embedded on a line: descent from one end must walk
+        // toward the query's side.
+        let n = 20;
+        let mut data = Matrix::zeros(0, 0);
+        for i in 0..n {
+            data.push_row(&[i as f32]);
+        }
+        let mut adj = FlatAdj::new(n, 2);
+        for u in 0..n as u32 {
+            if u > 0 {
+                adj.push(u, u - 1);
+            }
+            if (u as usize) < n - 1 {
+                adj.push(u, u + 1);
+            }
+        }
+        let got = greedy_descent(&data, &adj, 0, &[17.2], None);
+        assert_eq!(got.id, 17);
+    }
+
+    #[test]
+    fn effective_calls_formula() {
+        let s = SearchStats {
+            dist_calls: 100,
+            approx_calls: 200,
+            ..Default::default()
+        };
+        let eff = s.effective_dist_calls(16, 128);
+        assert!((eff - (100.0 + 200.0 * 0.125)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,240 @@
+//! Vamana graph (DiskANN, Jayaram Subramanya et al., NeurIPS 2019) — the
+//! flat-graph baseline in the paper's Figures 1/5/8. Random R-regular
+//! initialization, then two refinement passes of greedy-search +
+//! alpha-robust pruning from the dataset medoid.
+
+use crate::core::distance::l2_sq;
+use crate::core::matrix::Matrix;
+use crate::core::rng::Pcg32;
+use crate::graph::adjacency::FlatAdj;
+use crate::graph::search::{beam_search, Neighbor, SearchStats};
+use crate::graph::visited::VisitedSet;
+
+#[derive(Clone, Debug)]
+pub struct VamanaParams {
+    /// Max out-degree R.
+    pub r: usize,
+    /// Construction beam width L.
+    pub l: usize,
+    /// Pruning slack alpha >= 1.
+    pub alpha: f32,
+    pub seed: u64,
+    pub passes: usize,
+}
+
+impl Default for VamanaParams {
+    fn default() -> Self {
+        Self {
+            r: 32,
+            l: 80,
+            alpha: 1.2,
+            seed: 42,
+            passes: 2,
+        }
+    }
+}
+
+pub struct Vamana {
+    pub params: VamanaParams,
+    pub adj: FlatAdj,
+    pub medoid: u32,
+}
+
+impl Vamana {
+    pub fn build(data: &Matrix, params: VamanaParams) -> Vamana {
+        let n = data.rows();
+        assert!(n > 0);
+        let mut rng = Pcg32::new(params.seed);
+
+        // Random R-regular initialization.
+        let mut adj = FlatAdj::new(n, params.r);
+        for u in 0..n as u32 {
+            let mut picks = Vec::with_capacity(params.r);
+            while picks.len() < params.r.min(n - 1) {
+                let v = rng.gen_range(n) as u32;
+                if v != u && !picks.contains(&v) {
+                    picks.push(v);
+                }
+            }
+            adj.set(u, &picks);
+        }
+
+        let medoid = find_medoid(data, &mut rng);
+        let mut g = Vamana { params, adj, medoid };
+
+        let mut visited = VisitedSet::new(n);
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        for _pass in 0..g.params.passes {
+            rng.shuffle(&mut order);
+            for &u in &order {
+                let q = data.row(u as usize);
+                let mut found = beam_search(
+                    data, &g.adj, g.medoid, q, g.params.l, &mut visited, None,
+                );
+                found.retain(|c| c.id != u);
+                let pruned = robust_prune(data, u, &found, g.params.alpha, g.params.r);
+                let list: Vec<u32> = pruned.iter().map(|c| c.id).collect();
+                g.adj.set(u, &list);
+                // Backward edges with pruning on overflow.
+                for c in pruned {
+                    g.add_edge_with_prune(data, c.id, u);
+                }
+            }
+        }
+        g
+    }
+
+    fn add_edge_with_prune(&mut self, data: &Matrix, u: u32, v: u32) {
+        if self.adj.contains(u, v) {
+            return;
+        }
+        if self.adj.push(u, v) {
+            return;
+        }
+        let xu = data.row(u as usize);
+        let mut cands: Vec<Neighbor> = self
+            .adj
+            .neighbors(u)
+            .iter()
+            .map(|&w| Neighbor {
+                dist: l2_sq(xu, data.row(w as usize)),
+                id: w,
+            })
+            .collect();
+        cands.push(Neighbor {
+            dist: l2_sq(xu, data.row(v as usize)),
+            id: v,
+        });
+        cands.sort();
+        let pruned = robust_prune(data, u, &cands, self.params.alpha, self.params.r);
+        let list: Vec<u32> = pruned.iter().map(|c| c.id).collect();
+        self.adj.set(u, &list);
+    }
+
+    pub fn search(
+        &self,
+        data: &Matrix,
+        q: &[f32],
+        k: usize,
+        ef: usize,
+        visited: &mut VisitedSet,
+        stats: Option<&mut SearchStats>,
+    ) -> Vec<Neighbor> {
+        let mut res = beam_search(data, &self.adj, self.medoid, q, ef.max(k), visited, stats);
+        res.truncate(k);
+        res
+    }
+}
+
+/// Approximate medoid: the sample point minimizing distance to a random
+/// probe set (exact medoid is O(n^2)).
+fn find_medoid(data: &Matrix, rng: &mut Pcg32) -> u32 {
+    let n = data.rows();
+    let probes: Vec<usize> = (0..64.min(n)).map(|_| rng.gen_range(n)).collect();
+    let cands: Vec<usize> = (0..256.min(n)).map(|_| rng.gen_range(n)).collect();
+    let mut best = (f32::INFINITY, 0u32);
+    for &c in &cands {
+        let s: f32 = probes.iter().map(|&p| l2_sq(data.row(c), data.row(p))).sum();
+        if s < best.0 {
+            best = (s, c as u32);
+        }
+    }
+    best.1
+}
+
+/// DiskANN's alpha-RobustPrune over a candidate list sorted ascending.
+pub fn robust_prune(
+    data: &Matrix,
+    u: u32,
+    cands: &[Neighbor],
+    alpha: f32,
+    r: usize,
+) -> Vec<Neighbor> {
+    let mut kept: Vec<Neighbor> = Vec::with_capacity(r);
+    let mut pool: Vec<Neighbor> = cands.to_vec();
+    pool.sort();
+    pool.dedup_by_key(|c| c.id);
+    let mut removed = vec![false; pool.len()];
+    for i in 0..pool.len() {
+        if removed[i] || pool[i].id == u {
+            continue;
+        }
+        kept.push(pool[i]);
+        if kept.len() >= r {
+            break;
+        }
+        let xp = data.row(pool[i].id as usize);
+        for (j, c) in pool.iter().enumerate().skip(i + 1) {
+            if removed[j] {
+                continue;
+            }
+            // Remove c if p is sufficiently closer to c than u is.
+            if alpha * l2_sq(xp, data.row(c.id as usize)) <= c.dist {
+                removed[j] = true;
+            }
+        }
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::distance::Metric;
+    use crate::data::groundtruth::exact_knn;
+    use crate::data::synth::tiny;
+
+    #[test]
+    fn reasonable_recall_on_tiny() {
+        let ds = tiny(21, 600, 16, Metric::L2);
+        let v = Vamana::build(&ds.data, VamanaParams::default());
+        let gt = exact_knn(&ds.data, &ds.queries, 10);
+        let mut vis = VisitedSet::new(ds.data.rows());
+        let mut total = 0.0;
+        for qi in 0..ds.queries.rows() {
+            let res = v.search(&ds.data, ds.queries.row(qi), 10, 80, &mut vis, None);
+            let hits = res.iter().filter(|n| gt[qi].contains(&n.id)).count();
+            total += hits as f64 / 10.0;
+        }
+        let avg = total / ds.queries.rows() as f64;
+        assert!(avg > 0.85, "recall@10 = {avg}");
+    }
+
+    #[test]
+    fn degree_bounded_by_r() {
+        let ds = tiny(22, 300, 8, Metric::L2);
+        let p = VamanaParams { r: 12, ..Default::default() };
+        let v = Vamana::build(&ds.data, p);
+        for u in 0..ds.data.rows() as u32 {
+            assert!(v.adj.degree(u) <= 12);
+        }
+    }
+
+    #[test]
+    fn no_self_loops() {
+        let ds = tiny(23, 200, 8, Metric::L2);
+        let v = Vamana::build(&ds.data, VamanaParams::default());
+        for u in 0..ds.data.rows() as u32 {
+            assert!(!v.adj.neighbors(u).contains(&u));
+        }
+    }
+
+    #[test]
+    fn robust_prune_keeps_nearest() {
+        let data = Matrix::from_rows(&[
+            vec![0.0, 0.0],
+            vec![1.0, 0.0],
+            vec![1.1, 0.0],
+            vec![0.0, 2.0],
+        ]);
+        let q = data.row(0);
+        let mut cands: Vec<Neighbor> = (1..4u32)
+            .map(|i| Neighbor { dist: l2_sq(q, data.row(i as usize)), id: i })
+            .collect();
+        cands.sort();
+        let kept = robust_prune(&data, 0, &cands, 1.2, 2);
+        // Nearest (id 1) always kept; id 2 dominated by id 1.
+        assert_eq!(kept[0].id, 1);
+        assert!(kept.iter().any(|c| c.id == 3));
+    }
+}

@@ -1,0 +1,87 @@
+//! Epoch-stamped visited set — O(1) clear between queries, no hashing on
+//! the hot path (DESIGN.md §7: one of the L3 optimizations; a HashSet here
+//! costs ~2x end-to-end search latency).
+
+/// Visited marker over a fixed universe of node ids.
+#[derive(Clone, Debug)]
+pub struct VisitedSet {
+    stamp: Vec<u32>,
+    epoch: u32,
+}
+
+impl VisitedSet {
+    pub fn new(n: usize) -> Self {
+        Self {
+            stamp: vec![0; n],
+            epoch: 0,
+        }
+    }
+
+    /// Begin a new query: invalidates all marks in O(1) (amortized).
+    pub fn clear(&mut self) {
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // Wrapped: must actually reset the stamps once every 2^32 queries.
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.epoch = 1;
+        }
+    }
+
+    #[inline]
+    pub fn contains(&self, id: u32) -> bool {
+        self.stamp[id as usize] == self.epoch
+    }
+
+    /// Mark visited. Returns true if it was newly inserted.
+    #[inline]
+    pub fn insert(&mut self, id: u32) -> bool {
+        let s = &mut self.stamp[id as usize];
+        if *s == self.epoch {
+            false
+        } else {
+            *s = self.epoch;
+            true
+        }
+    }
+
+    pub fn len_universe(&self) -> usize {
+        self.stamp.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_and_contains() {
+        let mut v = VisitedSet::new(10);
+        v.clear();
+        assert!(!v.contains(3));
+        assert!(v.insert(3));
+        assert!(v.contains(3));
+        assert!(!v.insert(3));
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut v = VisitedSet::new(4);
+        v.clear();
+        v.insert(1);
+        v.clear();
+        assert!(!v.contains(1));
+        assert!(v.insert(1));
+    }
+
+    #[test]
+    fn epoch_wraparound_safe() {
+        let mut v = VisitedSet::new(2);
+        v.epoch = u32::MAX - 1;
+        v.clear(); // -> MAX
+        v.insert(0);
+        v.clear(); // wraps -> full reset -> 1
+        assert!(!v.contains(0));
+        v.insert(1);
+        assert!(v.contains(1));
+    }
+}

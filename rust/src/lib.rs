@@ -1,0 +1,28 @@
+//! # finger-ann
+//!
+//! A from-scratch reproduction of **FINGER: Fast Inference for Graph-based
+//! Approximate Nearest Neighbor Search** (Chen et al., WWW 2023) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! * [`core`] — distances, RNG, dense linear algebra, stats, JSON.
+//! * [`data`] — synthetic benchmark datasets, fvecs/ivecs IO, ground truth.
+//! * [`graph`] — HNSW / Vamana / NN-descent substrates + Algorithm 1 search.
+//! * [`finger`] — the paper's contribution: Algorithms 2–4 and RPLSH.
+//! * [`quant`] — IVF-PQ quantization baselines (Figure 7).
+//! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts.
+//! * [`router`] — serving layer: dynamic batching, workers, metrics.
+//! * [`eval`] — recall/throughput harnesses regenerating every figure.
+//!
+//! See DESIGN.md for the paper-to-module map and EXPERIMENTS.md for
+//! measured results.
+
+pub mod cli;
+pub mod core;
+pub mod data;
+pub mod eval;
+pub mod finger;
+pub mod graph;
+pub mod quant;
+pub mod router;
+pub mod runtime;
+pub mod testutil;

@@ -1,0 +1,275 @@
+//! `finger` — the launcher: dataset generation, index building, search,
+//! serving, and the per-figure benchmark harnesses.
+//!
+//! Usage:
+//!   finger gen-data   --dataset sift-sim-128 --scale 1.0 --out data/
+//!   finger search     --dataset sift-sim-128 --method finger --ef 80
+//!   finger serve      --dataset sift-sim-128 --addr 127.0.0.1:7771 [--rerank]
+//!   finger bench      <figure1|figure2|figure3|figure4|figure5|figure6|
+//!                      figure7|figure8|table1|rank-selection|all>
+//!                     [--scale 1.0] [--out results/]
+//!   finger info       # artifacts manifest summary
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use finger_ann::cli::Args;
+use finger_ann::data::groundtruth::exact_knn;
+use finger_ann::data::{io as dio, spec_by_name};
+use finger_ann::eval::figures;
+use finger_ann::finger::construct::FingerParams;
+use finger_ann::finger::search::FingerHnsw;
+use finger_ann::graph::hnsw::{Hnsw, HnswParams};
+use finger_ann::graph::visited::VisitedSet;
+use finger_ann::router::{IndexKind, ServeIndex, Server, ServerConfig};
+use finger_ann::runtime::{default_artifacts_dir, service::RerankService, Manifest};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "gen-data" => gen_data(&args),
+        "build" => build(&args),
+        "search" => search(&args),
+        "serve" => serve(&args),
+        "bench" => bench(&args),
+        "info" => info(),
+        _ => help(),
+    }
+}
+
+fn help() {
+    println!(
+        "finger — FINGER (WWW 2023) reproduction\n\
+         commands:\n\
+         \u{20}  gen-data --dataset NAME [--scale F] [--out DIR]\n\
+         \u{20}  build    --dataset NAME [--scale F] [--rank R] [--out index.bin]\n\
+         \u{20}  search   --dataset NAME [--scale F] [--method hnsw|finger] [--ef N] [--k N]\n\
+         \u{20}  serve    --dataset NAME [--scale F] [--addr A] [--workers N] [--rerank]\n\
+         \u{20}  bench    FIGURE [--scale F] [--out DIR]   (figure1..figure8, table1, rank-selection, all)\n\
+         \u{20}  info"
+    );
+}
+
+fn dataset_from_args(args: &Args) -> finger_ann::data::Dataset {
+    let name = args.get("dataset").unwrap_or("sift-sim-128");
+    let scale = args.get_f64("scale", 0.25);
+    let spec = spec_by_name(name, scale).unwrap_or_else(|| {
+        eprintln!("unknown dataset '{name}'; known: fashion-sim-784 sift-sim-128 gist-sim-960 nytimes-sim-256 glove-sim-100 deep-sim-96");
+        std::process::exit(2);
+    });
+    println!("generating {} (n={}, dim={})...", spec.name, spec.n, spec.dim);
+    spec.generate()
+}
+
+fn gen_data(args: &Args) {
+    let ds = dataset_from_args(args);
+    let out = PathBuf::from(args.get("out").unwrap_or("data"));
+    std::fs::create_dir_all(&out).expect("mkdir");
+    dio::write_fvecs(&out.join(format!("{}.base.fvecs", ds.name)), &ds.data).unwrap();
+    dio::write_fvecs(&out.join(format!("{}.query.fvecs", ds.name)), &ds.queries).unwrap();
+    let gt = exact_knn(&ds.data, &ds.queries, 100);
+    dio::write_ivecs(&out.join(format!("{}.gt.ivecs", ds.name)), &gt).unwrap();
+    println!(
+        "wrote {}.base/query.fvecs + gt.ivecs to {}",
+        ds.name,
+        out.display()
+    );
+}
+
+/// Build an HNSW-FINGER index and persist it as a serving bundle.
+fn build(args: &Args) {
+    let ds = dataset_from_args(args);
+    let rank = args.get_usize("rank", 16);
+    let m = args.get_usize("M", 16);
+    let out = PathBuf::from(args.get("out").unwrap_or("index.bin"));
+    let t0 = Instant::now();
+    let fh = FingerHnsw::build(
+        &ds.data,
+        HnswParams { m, ef_construction: args.get_usize("efc", 120), ..Default::default() },
+        FingerParams { rank, ..Default::default() },
+    );
+    println!(
+        "built in {:.1}s ({:.1} MB, corr={:.3})",
+        t0.elapsed().as_secs_f64(),
+        fh.nbytes() as f64 / 1e6,
+        fh.index.matching.correlation
+    );
+    finger_ann::data::persist::save_bundle(&out, &ds.data, &fh).expect("save bundle");
+    println!("saved bundle to {}", out.display());
+}
+
+fn search(args: &Args) {
+    let ds = dataset_from_args(args);
+    let method = args.get("method").unwrap_or("finger");
+    let ef = args.get_usize("ef", 80);
+    let k = args.get_usize("k", 10);
+    let m = args.get_usize("M", 16);
+
+    println!("building {method} index...");
+    let t0 = Instant::now();
+    let hnsw = Hnsw::build(&ds.data, HnswParams { m, ef_construction: 120, ..Default::default() });
+    let gt = exact_knn(&ds.data, &ds.queries, k);
+
+    let run = |search: &dyn Fn(&[f32], &mut VisitedSet) -> Vec<finger_ann::graph::Neighbor>| {
+        let mut vis_local = VisitedSet::new(ds.data.rows());
+        let t = Instant::now();
+        let mut rec = 0.0;
+        for qi in 0..ds.queries.rows() {
+            let res = search(ds.queries.row(qi), &mut vis_local);
+            rec += finger_ann::eval::recall(&res, &gt[qi]);
+        }
+        let secs = t.elapsed().as_secs_f64();
+        (
+            rec / ds.queries.rows() as f64,
+            ds.queries.rows() as f64 / secs,
+        )
+    };
+
+    match method {
+        "hnsw" => {
+            println!("built in {:.1}s", t0.elapsed().as_secs_f64());
+            let (rec, qps) = run(&|q, vis| hnsw.search(&ds.data, q, k, ef, vis, None));
+            println!("hnsw: recall@{k}={rec:.4} QPS={qps:.0} (ef={ef})");
+        }
+        "finger" => {
+            let rank = args.get_usize("rank", 16);
+            let fidx = finger_ann::finger::construct::FingerIndex::build(
+                &ds.data,
+                &hnsw.base,
+                FingerParams { rank, ..Default::default() },
+            );
+            println!(
+                "built in {:.1}s (finger corr={:.3})",
+                t0.elapsed().as_secs_f64(),
+                fidx.matching.correlation
+            );
+            let fh = FingerHnsw { hnsw, index: fidx };
+            let (rec, qps) = run(&|q, vis| fh.search(&ds.data, q, k, ef, vis, None));
+            println!("hnsw-finger: recall@{k}={rec:.4} QPS={qps:.0} (ef={ef}, r={rank})");
+        }
+        other => {
+            eprintln!("unknown method '{other}' (hnsw|finger)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn serve(args: &Args) {
+    // Either load a prebuilt bundle (`--index path`) or build in-process.
+    let (data, fh) = if let Some(path) = args.get("index") {
+        println!("loading bundle {path}...");
+        finger_ann::data::persist::load_bundle(std::path::Path::new(path)).expect("load bundle")
+    } else {
+        let ds = dataset_from_args(args);
+        let rank = args.get_usize("rank", 16);
+        println!("building HNSW-FINGER index...");
+        let fh = FingerHnsw::build(
+            &ds.data,
+            HnswParams { m: 16, ef_construction: 120, ..Default::default() },
+            FingerParams { rank, ..Default::default() },
+        );
+        (ds.data, fh)
+    };
+    let dim = data.cols();
+    let index = Arc::new(ServeIndex {
+        data,
+        kind: IndexKind::Finger(fh),
+        ef_search: args.get_usize("ef", 80),
+    });
+
+    let rerank = if args.has_flag("rerank") {
+        let data = Arc::new(index.data.clone());
+        match RerankService::start(default_artifacts_dir(), dim, data) {
+            Ok(svc) => {
+                println!("PJRT rerank service up (panel width {})", svc.max_cands);
+                Some(Arc::new(svc))
+            }
+            Err(e) => {
+                eprintln!("rerank service unavailable ({e:#}); serving without");
+                None
+            }
+        }
+    } else {
+        None
+    };
+
+    let config = ServerConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:7771").to_string(),
+        workers: args.get_usize("workers", 4),
+        max_batch: args.get_usize("max-batch", 8),
+        use_pjrt_rerank: rerank.is_some(),
+        ..Default::default()
+    };
+    let server = Server::start(index, config.clone(), rerank).expect("bind");
+    println!(
+        "serving {}-dim index on {} ({} workers, max_batch {})",
+        dim, server.local_addr, config.workers, config.max_batch
+    );
+    println!("protocol: one JSON per line: {{\"id\":1,\"vector\":[..],\"k\":10}}");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(10));
+        println!("{}", server.metrics.summary());
+    }
+}
+
+fn bench(args: &Args) {
+    let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let scale = args.get_f64("scale", 0.25);
+    let out = PathBuf::from(args.get("out").unwrap_or("results"));
+    println!("benchmark scale={scale} out={}", out.display());
+    let t0 = Instant::now();
+    match what {
+        // Figure 1 is the baseline subset of Figure 5; same harness.
+        "figure1" | "figure5" => figures::figure5(&out, scale, false),
+        "figure8" => figures::figure5(&out, scale, true),
+        "figure2" => figures::figure2(&out, scale),
+        "figure3" => figures::figure3(&out, scale),
+        "figure4" => figures::figure4(&out, scale),
+        "figure6" => figures::figure6(&out, scale),
+        "figure7" => figures::figure7(&out, scale),
+        "table1" => figures::table1(&out, scale),
+        "rank-selection" => figures::rank_selection(&out, scale),
+        "all" => {
+            figures::figure2(&out, scale);
+            figures::figure3(&out, scale);
+            figures::figure4(&out, scale);
+            figures::figure5(&out, scale, false);
+            figures::figure6(&out, scale);
+            figures::figure7(&out, scale);
+            figures::figure5(&out, scale, true); // figure 8
+            figures::table1(&out, scale);
+            figures::rank_selection(&out, scale);
+        }
+        other => {
+            eprintln!("unknown bench '{other}'");
+            std::process::exit(2);
+        }
+    }
+    println!("bench '{what}' finished in {:.1}s", t0.elapsed().as_secs_f64());
+}
+
+fn info() {
+    let dir = default_artifacts_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts in {}:", dir.display());
+            for (name, a) in &m.artifacts {
+                println!(
+                    "  {:<28} kind={:<9} inputs={} outputs={} meta={:?}",
+                    name,
+                    a.kind,
+                    a.inputs.len(),
+                    a.outputs.len(),
+                    a.meta
+                );
+            }
+        }
+        Err(e) => {
+            eprintln!("no artifacts at {} ({e:#}); run `make artifacts`", dir.display());
+            std::process::exit(1);
+        }
+    }
+}

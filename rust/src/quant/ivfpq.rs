@@ -1,0 +1,155 @@
+//! IVF-PQ: coarse inverted-file quantizer + PQ residual scoring with exact
+//! re-ranking — the stand-in for ScaNN / Faiss-IVFPQFS in Figure 7
+//! (DESIGN.md §5: same algorithmic family, same tradeoff shape).
+
+use crate::core::distance::l2_sq;
+use crate::core::matrix::Matrix;
+use crate::graph::search::Neighbor;
+use crate::quant::kmeans::KMeans;
+use crate::quant::pq::{Pq, PqParams};
+
+#[derive(Clone, Debug)]
+pub struct IvfPqParams {
+    /// Number of coarse cells.
+    pub n_list: usize,
+    pub pq: PqParams,
+    pub kmeans_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for IvfPqParams {
+    fn default() -> Self {
+        Self {
+            n_list: 64,
+            pq: PqParams::default(),
+            kmeans_iters: 15,
+            seed: 42,
+        }
+    }
+}
+
+pub struct IvfPq {
+    pub params: IvfPqParams,
+    pub coarse: KMeans,
+    /// Inverted lists: point ids per cell.
+    pub lists: Vec<Vec<u32>>,
+    pub pq: Pq,
+}
+
+impl IvfPq {
+    pub fn train(data: &Matrix, params: IvfPqParams) -> IvfPq {
+        let coarse = KMeans::train(data, params.n_list, params.kmeans_iters, params.seed);
+        let mut lists: Vec<Vec<u32>> = vec![Vec::new(); coarse.k()];
+        for i in 0..data.rows() {
+            lists[coarse.assign(data.row(i))].push(i as u32);
+        }
+        // PQ trained on raw vectors (residual encoding would be slightly
+        // better; raw keeps the ADC table query-global, which is what the
+        // fast-scan variants exploit).
+        let pq = Pq::train(data, params.pq.clone());
+        IvfPq {
+            params,
+            coarse,
+            lists,
+            pq,
+        }
+    }
+
+    /// Search: probe the `n_probe` nearest cells, score members by ADC,
+    /// keep `rerank` best, re-rank those exactly, return top-k.
+    pub fn search(
+        &self,
+        data: &Matrix,
+        q: &[f32],
+        k: usize,
+        n_probe: usize,
+        rerank: usize,
+    ) -> (Vec<Neighbor>, u64) {
+        // Rank cells by centroid distance.
+        let mut cells: Vec<(f32, usize)> = (0..self.coarse.k())
+            .map(|c| (l2_sq(q, self.coarse.centroids.row(c)), c))
+            .collect();
+        cells.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+        let table = self.pq.adc_table(q);
+        let mut cands: Vec<Neighbor> = Vec::new();
+        let mut scored = 0u64;
+        for &(_, cell) in cells.iter().take(n_probe.max(1)) {
+            for &id in &self.lists[cell] {
+                cands.push(Neighbor {
+                    dist: self.pq.adc_dist(&table, id as usize),
+                    id,
+                });
+                scored += 1;
+            }
+        }
+        cands.sort();
+        cands.truncate(rerank.max(k));
+
+        // Exact re-rank (this is the path the Rust runtime can offload to
+        // the PJRT rerank artifact; see runtime::engine).
+        let mut exact: Vec<Neighbor> = cands
+            .into_iter()
+            .map(|c| Neighbor {
+                dist: l2_sq(q, data.row(c.id as usize)),
+                id: c.id,
+            })
+            .collect();
+        exact.sort();
+        exact.truncate(k);
+        (exact, scored)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::distance::Metric;
+    use crate::data::groundtruth::exact_knn;
+    use crate::data::synth::tiny;
+
+    #[test]
+    fn all_points_indexed_once() {
+        let ds = tiny(95, 300, 16, Metric::L2);
+        let ivf = IvfPq::train(&ds.data, IvfPqParams { n_list: 16, ..Default::default() });
+        let total: usize = ivf.lists.iter().map(|l| l.len()).sum();
+        assert_eq!(total, 300);
+        let mut seen = vec![false; 300];
+        for l in &ivf.lists {
+            for &id in l {
+                assert!(!seen[id as usize]);
+                seen[id as usize] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn recall_improves_with_probes() {
+        let ds = tiny(96, 800, 24, Metric::L2);
+        let ivf = IvfPq::train(&ds.data, IvfPqParams { n_list: 32, ..Default::default() });
+        let gt = exact_knn(&ds.data, &ds.queries, 10);
+        let recall_at = |n_probe: usize| {
+            let mut total = 0.0;
+            for qi in 0..ds.queries.rows() {
+                let (res, _) = ivf.search(&ds.data, ds.queries.row(qi), 10, n_probe, 100);
+                let hits = res.iter().filter(|n| gt[qi].contains(&n.id)).count();
+                total += hits as f64 / 10.0;
+            }
+            total / ds.queries.rows() as f64
+        };
+        let r1 = recall_at(1);
+        let r16 = recall_at(16);
+        assert!(r16 > r1, "recall@1probe {r1} vs @16probe {r16}");
+        assert!(r16 > 0.85, "r16 = {r16}");
+    }
+
+    #[test]
+    fn scored_counts_probed_cells_only() {
+        let ds = tiny(97, 200, 8, Metric::L2);
+        let ivf = IvfPq::train(&ds.data, IvfPqParams { n_list: 8, ..Default::default() });
+        let (_, scored_1) = ivf.search(&ds.data, ds.queries.row(0), 5, 1, 20);
+        let (_, scored_all) = ivf.search(&ds.data, ds.queries.row(0), 5, 8, 20);
+        assert!(scored_1 < scored_all);
+        assert_eq!(scored_all, 200);
+    }
+}

@@ -1,0 +1,181 @@
+//! Lloyd's k-means with k-means++ seeding — substrate for PQ / IVF.
+
+use crate::core::distance::l2_sq;
+use crate::core::matrix::Matrix;
+use crate::core::rng::Pcg32;
+
+#[derive(Clone, Debug)]
+pub struct KMeans {
+    /// k × m centroids.
+    pub centroids: Matrix,
+}
+
+impl KMeans {
+    /// Train on rows of `data` restricted to columns [col_lo, col_hi).
+    pub fn train_subspace(
+        data: &Matrix,
+        col_lo: usize,
+        col_hi: usize,
+        k: usize,
+        iters: usize,
+        seed: u64,
+    ) -> KMeans {
+        let n = data.rows();
+        let m = col_hi - col_lo;
+        assert!(n > 0 && k > 0);
+        let k = k.min(n);
+        let mut rng = Pcg32::new(seed);
+
+        let row = |i: usize| &data.row(i)[col_lo..col_hi];
+
+        // k-means++ seeding.
+        let mut centroids = Matrix::zeros(0, 0);
+        centroids.push_row(row(rng.gen_range(n)));
+        let mut d2: Vec<f32> = (0..n)
+            .map(|i| l2_sq(row(i), centroids.row(0)))
+            .collect();
+        while centroids.rows() < k {
+            let total: f64 = d2.iter().map(|&x| x as f64).sum();
+            let pick = if total <= 0.0 {
+                rng.gen_range(n)
+            } else {
+                let mut target = rng.next_f64() * total;
+                let mut idx = n - 1;
+                for (i, &x) in d2.iter().enumerate() {
+                    target -= x as f64;
+                    if target <= 0.0 {
+                        idx = i;
+                        break;
+                    }
+                }
+                idx
+            };
+            centroids.push_row(row(pick));
+            let c = centroids.rows() - 1;
+            for i in 0..n {
+                let d = l2_sq(row(i), centroids.row(c));
+                if d < d2[i] {
+                    d2[i] = d;
+                }
+            }
+        }
+
+        // Lloyd iterations.
+        let mut assign = vec![0usize; n];
+        for _ in 0..iters {
+            let mut changed = false;
+            for i in 0..n {
+                let mut best = (f32::INFINITY, 0usize);
+                for c in 0..centroids.rows() {
+                    let d = l2_sq(row(i), centroids.row(c));
+                    if d < best.0 {
+                        best = (d, c);
+                    }
+                }
+                if assign[i] != best.1 {
+                    assign[i] = best.1;
+                    changed = true;
+                }
+            }
+            if !changed {
+                break;
+            }
+            let mut sums = vec![0.0f64; centroids.rows() * m];
+            let mut counts = vec![0usize; centroids.rows()];
+            for i in 0..n {
+                let c = assign[i];
+                counts[c] += 1;
+                for (j, &v) in row(i).iter().enumerate() {
+                    sums[c * m + j] += v as f64;
+                }
+            }
+            for c in 0..centroids.rows() {
+                if counts[c] == 0 {
+                    // Re-seed empty cluster at a random point.
+                    let p = rng.gen_range(n);
+                    centroids.row_mut(c).copy_from_slice(row(p));
+                    continue;
+                }
+                for j in 0..m {
+                    centroids.row_mut(c)[j] = (sums[c * m + j] / counts[c] as f64) as f32;
+                }
+            }
+        }
+        KMeans { centroids }
+    }
+
+    pub fn train(data: &Matrix, k: usize, iters: usize, seed: u64) -> KMeans {
+        Self::train_subspace(data, 0, data.cols(), k, iters, seed)
+    }
+
+    /// Nearest centroid index for `x` (in the trained subspace's width).
+    pub fn assign(&self, x: &[f32]) -> usize {
+        let mut best = (f32::INFINITY, 0usize);
+        for c in 0..self.centroids.rows() {
+            let d = l2_sq(x, self.centroids.row(c));
+            if d < best.0 {
+                best = (d, c);
+            }
+        }
+        best.1
+    }
+
+    pub fn k(&self) -> usize {
+        self.centroids.rows()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_blob_data(seed: u64) -> Matrix {
+        let mut rng = Pcg32::new(seed);
+        let mut m = Matrix::zeros(0, 0);
+        for i in 0..200 {
+            let base = if i % 2 == 0 { -5.0 } else { 5.0 };
+            m.push_row(&[base + 0.3 * rng.next_gaussian(), 0.3 * rng.next_gaussian()]);
+        }
+        m
+    }
+
+    #[test]
+    fn separates_two_blobs() {
+        let data = two_blob_data(1);
+        let km = KMeans::train(&data, 2, 20, 7);
+        let c0 = km.centroids.row(0)[0];
+        let c1 = km.centroids.row(1)[0];
+        assert!(c0 * c1 < 0.0, "centroids on opposite sides: {c0} {c1}");
+        assert!((c0.abs() - 5.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn assignment_is_nearest() {
+        let data = two_blob_data(2);
+        let km = KMeans::train(&data, 2, 20, 3);
+        let a = km.assign(&[-5.0, 0.0]);
+        let b = km.assign(&[5.0, 0.0]);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let data = Matrix::from_rows(&[vec![0.0], vec![1.0]]);
+        let km = KMeans::train(&data, 10, 5, 1);
+        assert!(km.k() <= 2);
+    }
+
+    #[test]
+    fn subspace_training_ignores_other_columns() {
+        let mut rng = Pcg32::new(4);
+        let mut m = Matrix::zeros(0, 0);
+        for i in 0..100 {
+            let x = if i % 2 == 0 { -3.0 } else { 3.0 };
+            m.push_row(&[1000.0 * rng.next_gaussian(), x + 0.1 * rng.next_gaussian()]);
+        }
+        let km = KMeans::train_subspace(&m, 1, 2, 2, 20, 5);
+        assert_eq!(km.centroids.cols(), 1);
+        let spread = (km.centroids.row(0)[0] - km.centroids.row(1)[0]).abs();
+        assert!(spread > 4.0, "spread {spread}");
+    }
+}

@@ -1,0 +1,10 @@
+//! Quantization baselines for Figure 7: k-means, Product Quantization
+//! with ADC, and IVF-PQ with exact re-ranking.
+
+pub mod ivfpq;
+pub mod kmeans;
+pub mod pq;
+
+pub use ivfpq::{IvfPq, IvfPqParams};
+pub use kmeans::KMeans;
+pub use pq::{Pq, PqParams};

@@ -1,0 +1,186 @@
+//! Product Quantization (Jégou et al., TPAMI 2011) with ADC lookup —
+//! substrate for the IVF-PQ baseline of Figure 7.
+//!
+//! The feature space is split into `n_sub` contiguous subspaces, each
+//! quantized by its own 2^nbits-codeword k-means codebook. A query builds
+//! a (n_sub × k) distance table once; per-candidate scoring is then n_sub
+//! table lookups — the "fast-scan" style arithmetic-intensity reduction
+//! the paper's quantization comparators (ScaNN, Faiss-IVFPQFS) rely on.
+
+use crate::core::matrix::Matrix;
+use crate::quant::kmeans::KMeans;
+
+#[derive(Clone, Debug)]
+pub struct PqParams {
+    /// Number of subquantizers (must divide dim... or last gets remainder).
+    pub n_sub: usize,
+    /// Codebook bits per subquantizer (k = 2^nbits, typically 4 or 8).
+    pub nbits: usize,
+    pub kmeans_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for PqParams {
+    fn default() -> Self {
+        Self {
+            n_sub: 8,
+            nbits: 8,
+            kmeans_iters: 15,
+            seed: 42,
+        }
+    }
+}
+
+pub struct Pq {
+    pub params: PqParams,
+    /// Per-subspace codebooks.
+    pub books: Vec<KMeans>,
+    /// Subspace column ranges.
+    pub ranges: Vec<(usize, usize)>,
+    /// Encoded dataset: n × n_sub codes.
+    pub codes: Vec<u8>,
+    pub n: usize,
+}
+
+impl Pq {
+    pub fn train(data: &Matrix, params: PqParams) -> Pq {
+        let m = data.cols();
+        let n_sub = params.n_sub.min(m);
+        let k = 1usize << params.nbits;
+        assert!(k <= 256, "codes stored as u8");
+
+        // Contiguous ranges, remainder to the last subspace.
+        let base = m / n_sub;
+        let mut ranges = Vec::with_capacity(n_sub);
+        for s in 0..n_sub {
+            let lo = s * base;
+            let hi = if s == n_sub - 1 { m } else { lo + base };
+            ranges.push((lo, hi));
+        }
+
+        let books: Vec<KMeans> = ranges
+            .iter()
+            .enumerate()
+            .map(|(s, &(lo, hi))| {
+                KMeans::train_subspace(data, lo, hi, k, params.kmeans_iters, params.seed + s as u64)
+            })
+            .collect();
+
+        // Encode.
+        let n = data.rows();
+        let mut codes = vec![0u8; n * n_sub];
+        for i in 0..n {
+            for (s, &(lo, hi)) in ranges.iter().enumerate() {
+                codes[i * n_sub + s] = books[s].assign(&data.row(i)[lo..hi]) as u8;
+            }
+        }
+
+        Pq {
+            params,
+            books,
+            ranges,
+            codes,
+            n,
+        }
+    }
+
+    /// Build the ADC table for a query: (n_sub × k) squared distances from
+    /// each query sub-vector to each codeword.
+    pub fn adc_table(&self, q: &[f32]) -> Vec<f32> {
+        let k = 1usize << self.params.nbits;
+        let n_sub = self.ranges.len();
+        let mut table = vec![0.0f32; n_sub * k];
+        for (s, &(lo, hi)) in self.ranges.iter().enumerate() {
+            let sub = &q[lo..hi];
+            let book = &self.books[s];
+            for c in 0..book.k() {
+                table[s * k + c] = crate::core::distance::l2_sq(sub, book.centroids.row(c));
+            }
+        }
+        table
+    }
+
+    /// Approximate squared distance of encoded point `i` via the ADC table.
+    #[inline]
+    pub fn adc_dist(&self, table: &[f32], i: usize) -> f32 {
+        let k = 1usize << self.params.nbits;
+        let n_sub = self.ranges.len();
+        let codes = &self.codes[i * n_sub..(i + 1) * n_sub];
+        let mut acc = 0.0f32;
+        for (s, &c) in codes.iter().enumerate() {
+            acc += table[s * k + c as usize];
+        }
+        acc
+    }
+
+    /// Bytes per encoded vector.
+    pub fn code_bytes(&self) -> usize {
+        self.ranges.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::distance::l2_sq;
+    use crate::core::rng::Pcg32;
+    use crate::data::synth::tiny;
+    use crate::core::distance::Metric;
+
+    #[test]
+    fn adc_approximates_true_distance() {
+        let ds = tiny(91, 500, 32, Metric::L2);
+        let pq = Pq::train(&ds.data, PqParams { n_sub: 8, nbits: 6, ..Default::default() });
+        let q = ds.queries.row(0);
+        let table = pq.adc_table(q);
+        let mut adc = Vec::new();
+        let mut exact = Vec::new();
+        for i in 0..ds.data.rows() {
+            adc.push(pq.adc_dist(&table, i));
+            exact.push(l2_sq(q, ds.data.row(i)));
+        }
+        let corr = crate::core::stats::pearson(&adc, &exact);
+        assert!(corr > 0.9, "ADC correlation = {corr}");
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let ds = tiny(92, 200, 16, Metric::L2);
+        let pq = Pq::train(&ds.data, PqParams { n_sub: 4, nbits: 4, ..Default::default() });
+        assert!(pq.codes.iter().all(|&c| (c as usize) < 16));
+        assert_eq!(pq.codes.len(), 200 * 4);
+    }
+
+    #[test]
+    fn ragged_dim_handled() {
+        // dim 10 with 4 subspaces -> ranges 2,2,2,4
+        let mut rng = Pcg32::new(1);
+        let mut data = Matrix::zeros(0, 0);
+        for _ in 0..64 {
+            let row: Vec<f32> = (0..10).map(|_| rng.next_gaussian()).collect();
+            data.push_row(&row);
+        }
+        let pq = Pq::train(&data, PqParams { n_sub: 4, nbits: 4, ..Default::default() });
+        assert_eq!(pq.ranges.last().unwrap().1, 10);
+        let q: Vec<f32> = (0..10).map(|_| rng.next_gaussian()).collect();
+        let t = pq.adc_table(&q);
+        assert!(pq.adc_dist(&t, 0).is_finite());
+    }
+
+    #[test]
+    fn reconstruction_better_with_more_bits() {
+        let ds = tiny(93, 400, 16, Metric::L2);
+        let q = ds.queries.row(0);
+        let err = |nbits: usize| {
+            let pq = Pq::train(&ds.data, PqParams { n_sub: 4, nbits, ..Default::default() });
+            let t = pq.adc_table(q);
+            let mut e = 0.0f64;
+            for i in 0..ds.data.rows() {
+                let d = l2_sq(q, ds.data.row(i));
+                e += (pq.adc_dist(&t, i) - d).abs() as f64 / (1.0 + d as f64);
+            }
+            e
+        };
+        assert!(err(6) < err(2), "6-bit should beat 2-bit");
+    }
+}

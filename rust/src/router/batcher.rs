@@ -1,0 +1,190 @@
+//! Dynamic batcher: requests accumulate in a bounded queue; a batch is
+//! released when it reaches `max_batch` or the oldest request has waited
+//! `max_wait`. Backpressure = bounded queue, reject on overflow (the
+//! caller surfaces the rejection to the client).
+//!
+//! Invariants (proptested in rust/tests/router_props.rs):
+//!  * every submitted request appears in exactly one batch;
+//!  * batch size never exceeds `max_batch`;
+//!  * within a batch, requests preserve FIFO submission order.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// A queued unit of work.
+pub struct Pending<T> {
+    pub item: T,
+    pub enqueued_at: Instant,
+}
+
+struct State<T> {
+    queue: VecDeque<Pending<T>>,
+    closed: bool,
+}
+
+pub struct Batcher<T> {
+    state: Mutex<State<T>>,
+    cv: Condvar,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub max_queue: usize,
+}
+
+/// Submission error: queue full or batcher closed.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    Full,
+    Closed,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(max_batch: usize, max_wait: Duration, max_queue: usize) -> Batcher<T> {
+        assert!(max_batch > 0 && max_queue >= max_batch);
+        Batcher {
+            state: Mutex::new(State {
+                queue: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            max_batch,
+            max_wait,
+            max_queue,
+        }
+    }
+
+    /// Enqueue one request.
+    pub fn submit(&self, item: T) -> Result<(), SubmitError> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(SubmitError::Closed);
+        }
+        if st.queue.len() >= self.max_queue {
+            return Err(SubmitError::Full);
+        }
+        st.queue.push_back(Pending {
+            item,
+            enqueued_at: Instant::now(),
+        });
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Block until a batch is ready (full, or oldest item timed out, or
+    /// closed-and-draining). Returns None only when closed and empty.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.queue.is_empty() {
+                let oldest = st.queue.front().unwrap().enqueued_at;
+                let waited = oldest.elapsed();
+                if st.queue.len() >= self.max_batch || waited >= self.max_wait || st.closed {
+                    let n = st.queue.len().min(self.max_batch);
+                    let batch: Vec<T> = st.queue.drain(..n).map(|p| p.item).collect();
+                    return Some(batch);
+                }
+                // Wait out the remaining window (or a new arrival).
+                let remaining = self.max_wait - waited;
+                let (guard, _) = self.cv.wait_timeout(st, remaining).unwrap();
+                st = guard;
+            } else if st.closed {
+                return None;
+            } else {
+                let (guard, _) = self.cv.wait_timeout(st, self.max_wait).unwrap();
+                st = guard;
+            }
+        }
+    }
+
+    /// Close: pending items still drain via `next_batch`.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn batches_at_max_batch() {
+        let b = Batcher::new(4, Duration::from_secs(10), 64);
+        for i in 0..4 {
+            b.submit(i).unwrap();
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn times_out_partial_batch() {
+        let b = Batcher::new(100, Duration::from_millis(20), 1000);
+        b.submit(7).unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![7]);
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn rejects_on_overflow() {
+        let b = Batcher::new(2, Duration::from_secs(1), 2);
+        b.submit(1).unwrap();
+        b.submit(2).unwrap();
+        assert_eq!(b.submit(3), Err(SubmitError::Full));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b = Batcher::new(10, Duration::from_secs(10), 100);
+        b.submit(1).unwrap();
+        b.submit(2).unwrap();
+        b.close();
+        assert_eq!(b.next_batch().unwrap(), vec![1, 2]);
+        assert!(b.next_batch().is_none());
+        assert_eq!(b.submit(3), Err(SubmitError::Closed));
+    }
+
+    #[test]
+    fn concurrent_producers_all_delivered() {
+        let b = Arc::new(Batcher::new(8, Duration::from_millis(5), 10_000));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let b = Arc::clone(&b);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100u64 {
+                    while b.submit(t * 1000 + i).is_err() {
+                        std::thread::yield_now();
+                    }
+                }
+            }));
+        }
+        let consumer = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || {
+                let mut seen = Vec::new();
+                while let Some(batch) = b.next_batch() {
+                    assert!(batch.len() <= 8);
+                    seen.extend(batch);
+                }
+                seen
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        b.close();
+        let mut seen = consumer.join().unwrap();
+        seen.sort_unstable();
+        assert_eq!(seen.len(), 400);
+        seen.dedup();
+        assert_eq!(seen.len(), 400, "every request delivered exactly once");
+    }
+}

@@ -1,0 +1,132 @@
+//! Serving metrics: counters + a fixed-bucket latency histogram, all
+//! lock-free on the record path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log-spaced latency buckets in microseconds.
+const BUCKETS_US: &[u64] = &[
+    10, 20, 50, 100, 200, 500, 1_000, 2_000, 5_000, 10_000, 20_000, 50_000, 100_000, 500_000,
+];
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub errors: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_queries: AtomicU64,
+    pub rejected: AtomicU64,
+    latency_buckets: [AtomicU64; 15],
+    latency_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_latency_us(&self, us: u64) {
+        let mut b = BUCKETS_US.len(); // overflow bucket
+        for (i, &lim) in BUCKETS_US.iter().enumerate() {
+            if us <= lim {
+                b = i;
+                break;
+            }
+        }
+        self.latency_buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+        self.responses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_queries.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    /// Approximate percentile from the histogram (upper bucket edge).
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        let counts: Vec<u64> = self
+            .latency_buckets
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return BUCKETS_US.get(i).copied().unwrap_or(1_000_000);
+            }
+        }
+        1_000_000
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.responses.load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_queries.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} responses={} errors={} rejected={} batches={} mean_batch={:.2} mean_lat={:.0}us p50={}us p99={}us",
+            self.requests.load(Ordering::Relaxed),
+            self.responses.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.mean_latency_us(),
+            self.latency_percentile_us(50.0),
+            self.latency_percentile_us(99.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_monotone() {
+        let m = Metrics::new();
+        for us in [5u64, 15, 80, 300, 2_000, 40_000] {
+            m.record_latency_us(us);
+        }
+        let p50 = m.latency_percentile_us(50.0);
+        let p99 = m.latency_percentile_us(99.0);
+        assert!(p50 <= p99);
+        assert!(p50 >= 10);
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let m = Metrics::new();
+        m.record_batch(4);
+        m.record_batch(8);
+        assert_eq!(m.mean_batch_size(), 6.0);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_percentile_us(99.0), 0);
+        assert_eq!(m.mean_latency_us(), 0.0);
+    }
+}

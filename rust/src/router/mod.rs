@@ -1,0 +1,12 @@
+//! The serving layer (L3 coordination): JSON-line protocol, dynamic
+//! batcher with backpressure, worker pool, and metrics.
+
+pub mod batcher;
+pub mod metrics;
+pub mod protocol;
+pub mod server;
+
+pub use batcher::{Batcher, SubmitError};
+pub use metrics::Metrics;
+pub use protocol::{QueryRequest, QueryResponse};
+pub use server::{Client, IndexKind, ServeIndex, Server, ServerConfig};

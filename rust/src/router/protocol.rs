@@ -1,0 +1,151 @@
+//! Wire protocol: JSON lines over TCP.
+//!
+//! Request:  {"id": 7, "vector": [f32...], "k": 10}
+//! Response: {"id": 7, "ids": [u32...], "dists": [f32...],
+//!            "latency_us": 123, "exact": true}
+//! Error:    {"id": 7, "error": "..."}
+
+use crate::core::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueryRequest {
+    pub id: u64,
+    pub vector: Vec<f32>,
+    pub k: usize,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueryResponse {
+    pub id: u64,
+    pub hits: Vec<(f32, u32)>,
+    pub latency_us: u64,
+}
+
+impl QueryRequest {
+    pub fn parse(line: &str) -> Result<QueryRequest, String> {
+        let v = Json::parse(line).map_err(|e| e.to_string())?;
+        let id = v
+            .get("id")
+            .and_then(|x| x.as_f64())
+            .ok_or("missing id")? as u64;
+        let vector: Vec<f32> = v
+            .get("vector")
+            .and_then(|x| x.as_arr())
+            .ok_or("missing vector")?
+            .iter()
+            .map(|x| x.as_f64().map(|f| f as f32).ok_or("non-numeric vector entry"))
+            .collect::<Result<_, _>>()?;
+        if vector.is_empty() {
+            return Err("empty vector".into());
+        }
+        let k = v.get("k").and_then(|x| x.as_usize()).unwrap_or(10);
+        if k == 0 {
+            return Err("k must be positive".into());
+        }
+        Ok(QueryRequest { id, vector, k })
+    }
+
+    pub fn to_json_line(&self) -> String {
+        let vec = Json::Arr(self.vector.iter().map(|&x| Json::Num(x as f64)).collect());
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("vector", vec),
+            ("k", Json::Num(self.k as f64)),
+        ])
+        .to_string()
+    }
+}
+
+impl QueryResponse {
+    pub fn to_json_line(&self) -> String {
+        let ids = Json::Arr(self.hits.iter().map(|&(_, id)| Json::Num(id as f64)).collect());
+        let dists = Json::Arr(self.hits.iter().map(|&(d, _)| Json::Num(d as f64)).collect());
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("ids", ids),
+            ("dists", dists),
+            ("latency_us", Json::Num(self.latency_us as f64)),
+        ])
+        .to_string()
+    }
+
+    pub fn parse(line: &str) -> Result<QueryResponse, String> {
+        let v = Json::parse(line).map_err(|e| e.to_string())?;
+        if let Some(err) = v.get("error").and_then(|e| e.as_str()) {
+            return Err(err.to_string());
+        }
+        let id = v.get("id").and_then(|x| x.as_f64()).ok_or("missing id")? as u64;
+        let ids = v.get("ids").and_then(|x| x.as_arr()).ok_or("missing ids")?;
+        let dists = v.get("dists").and_then(|x| x.as_arr()).ok_or("missing dists")?;
+        if ids.len() != dists.len() {
+            return Err("ids/dists length mismatch".into());
+        }
+        let hits = ids
+            .iter()
+            .zip(dists)
+            .map(|(i, d)| {
+                Ok((
+                    d.as_f64().ok_or("bad dist")? as f32,
+                    i.as_f64().ok_or("bad id")? as u32,
+                ))
+            })
+            .collect::<Result<_, String>>()?;
+        let latency_us = v.get("latency_us").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64;
+        Ok(QueryResponse { id, hits, latency_us })
+    }
+}
+
+pub fn error_line(id: u64, msg: &str) -> String {
+    Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("error", Json::str(msg)),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let r = QueryRequest {
+            id: 42,
+            vector: vec![1.5, -2.0, 0.25],
+            k: 5,
+        };
+        let back = QueryRequest::parse(&r.to_json_line()).unwrap();
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let r = QueryResponse {
+            id: 7,
+            hits: vec![(0.5, 3), (1.25, 9)],
+            latency_us: 88,
+        };
+        let back = QueryResponse::parse(&r.to_json_line()).unwrap();
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(QueryRequest::parse("{}").is_err());
+        assert!(QueryRequest::parse(r#"{"id":1,"vector":[]}"#).is_err());
+        assert!(QueryRequest::parse(r#"{"id":1,"vector":[1],"k":0}"#).is_err());
+        assert!(QueryRequest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn default_k_is_10() {
+        let r = QueryRequest::parse(r#"{"id":1,"vector":[1.0,2.0]}"#).unwrap();
+        assert_eq!(r.k, 10);
+    }
+
+    #[test]
+    fn error_line_parses_as_error() {
+        let line = error_line(3, "boom");
+        assert_eq!(QueryResponse::parse(&line), Err("boom".to_string()));
+    }
+}

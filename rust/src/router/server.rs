@@ -1,0 +1,423 @@
+//! The serving coordinator: TCP JSON-line frontend, dynamic batcher,
+//! worker pool over a shared index, optional PJRT exact re-rank.
+//!
+//! Topology (vLLM-router-shaped, scaled to one process):
+//!
+//!   conn threads ──submit──▶ Batcher ──next_batch──▶ worker threads
+//!        ▲                                               │
+//!        └────────────── mpsc per request ◀──────────────┘
+//!
+//! Workers own their scratch (visited set) and search the shared
+//! `ServeIndex`; the optional PJRT `rerank` executable re-scores the
+//! graph's candidate set through the AOT JAX/Pallas artifact so final
+//! distances come from the L1 kernel (exactness cross-check + the
+//! "Python-free request path" demonstration).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::core::matrix::Matrix;
+use crate::finger::search::FingerHnsw;
+use crate::graph::hnsw::Hnsw;
+use crate::graph::search::SearchStats;
+use crate::graph::visited::VisitedSet;
+use crate::router::batcher::{Batcher, SubmitError};
+use crate::router::metrics::Metrics;
+use crate::router::protocol::{error_line, QueryRequest, QueryResponse};
+use crate::runtime::service::RerankService;
+
+/// Which index the server searches.
+pub enum IndexKind {
+    Hnsw(Hnsw),
+    Finger(FingerHnsw),
+}
+
+/// Shared, immutable serving state.
+pub struct ServeIndex {
+    pub data: Matrix,
+    pub kind: IndexKind,
+    pub ef_search: usize,
+}
+
+impl ServeIndex {
+    pub fn search(
+        &self,
+        q: &[f32],
+        k: usize,
+        vis: &mut VisitedSet,
+        stats: Option<&mut SearchStats>,
+    ) -> Vec<(f32, u32)> {
+        let res = match &self.kind {
+            IndexKind::Hnsw(h) => h.search(&self.data, q, k, self.ef_search, vis, stats),
+            IndexKind::Finger(f) => f.search(&self.data, q, k, self.ef_search, vis, stats),
+        };
+        res.into_iter().map(|n| (n.dist, n.id)).collect()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.data.cols()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.rows() == 0
+    }
+}
+
+/// One queued query with its response channel.
+pub struct Job {
+    pub req: QueryRequest,
+    pub submitted: Instant,
+    pub resp: mpsc::Sender<QueryResponse>,
+}
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub addr: String,
+    pub workers: usize,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub max_queue: usize,
+    /// Re-rank candidates through the PJRT artifact when available.
+    pub use_pjrt_rerank: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7771".into(),
+            workers: 4,
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            max_queue: 4096,
+            use_pjrt_rerank: false,
+        }
+    }
+}
+
+/// A running server (handle for shutdown + metrics).
+pub struct Server {
+    pub metrics: Arc<Metrics>,
+    pub local_addr: std::net::SocketAddr,
+    batcher: Arc<Batcher<Job>>,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start listening + worker pool. `rerank` is an optional PJRT
+    /// executor service (a dedicated thread owning the compiled artifact;
+    /// see `runtime::service`) shared by all workers.
+    pub fn start(
+        index: Arc<ServeIndex>,
+        config: ServerConfig,
+        rerank: Option<Arc<RerankService>>,
+    ) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(&config.addr)?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let metrics = Arc::new(Metrics::new());
+        let batcher: Arc<Batcher<Job>> = Arc::new(Batcher::new(
+            config.max_batch,
+            config.max_wait,
+            config.max_queue,
+        ));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut threads = Vec::new();
+
+        // Worker pool.
+        for wid in 0..config.workers.max(1) {
+            let batcher = Arc::clone(&batcher);
+            let index = Arc::clone(&index);
+            let metrics = Arc::clone(&metrics);
+            let rerank = rerank.clone();
+            let use_rerank = config.use_pjrt_rerank;
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("finger-worker-{wid}"))
+                    .spawn(move || {
+                        let mut vis = VisitedSet::new(index.len());
+                        while let Some(batch) = batcher.next_batch() {
+                            metrics.record_batch(batch.len());
+                            for job in batch {
+                                let hits = index.search(&job.req.vector, job.req.k, &mut vis, None);
+                                let hits = match (&rerank, use_rerank) {
+                                    (Some(svc), true) => {
+                                        let ids: Vec<u32> =
+                                            hits.iter().map(|&(_, id)| id).collect();
+                                        svc.rerank(&job.req.vector, &ids, job.req.k)
+                                            .unwrap_or(hits)
+                                    }
+                                    _ => hits,
+                                };
+                                let latency_us = job.submitted.elapsed().as_micros() as u64;
+                                metrics.record_latency_us(latency_us);
+                                // Receiver may have hung up; that's fine.
+                                let _ = job.resp.send(QueryResponse {
+                                    id: job.req.id,
+                                    hits,
+                                    latency_us,
+                                });
+                            }
+                        }
+                    })
+                    .unwrap(),
+            );
+        }
+
+        // Accept loop.
+        {
+            let batcher = Arc::clone(&batcher);
+            let metrics = Arc::clone(&metrics);
+            let stop = Arc::clone(&stop);
+            let dim = index.dim();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("finger-accept".into())
+                    .spawn(move || {
+                        let conn_id = Arc::new(AtomicU64::new(0));
+                        loop {
+                            if stop.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            match listener.accept() {
+                                Ok((stream, _)) => {
+                                    let batcher = Arc::clone(&batcher);
+                                    let metrics = Arc::clone(&metrics);
+                                    let cid = conn_id.fetch_add(1, Ordering::Relaxed);
+                                    std::thread::Builder::new()
+                                        .name(format!("finger-conn-{cid}"))
+                                        .spawn(move || {
+                                            handle_conn(stream, &batcher, &metrics, dim)
+                                        })
+                                        .ok();
+                                }
+                                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                    std::thread::sleep(Duration::from_millis(2));
+                                }
+                                Err(_) => break,
+                            }
+                        }
+                    })
+                    .unwrap(),
+            );
+        }
+
+        Ok(Server {
+            metrics,
+            local_addr,
+            batcher,
+            stop,
+            threads,
+        })
+    }
+
+    /// Submit a query in-process (bypasses TCP; used by benches/tests).
+    pub fn submit_local(&self, req: QueryRequest) -> Result<mpsc::Receiver<QueryResponse>, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.batcher.submit(Job {
+            req,
+            submitted: Instant::now(),
+            resp: tx,
+        })?;
+        Ok(rx)
+    }
+
+    pub fn shutdown(self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.batcher.close();
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, batcher: &Batcher<Job>, metrics: &Metrics, dim: usize) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let req = match QueryRequest::parse(&line) {
+            Ok(r) if r.vector.len() == dim => r,
+            Ok(r) => {
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = writeln!(
+                    writer,
+                    "{}",
+                    error_line(r.id, &format!("dim mismatch: got {}, want {dim}", r.vector.len()))
+                );
+                continue;
+            }
+            Err(e) => {
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = writeln!(writer, "{}", error_line(0, &e));
+                continue;
+            }
+        };
+        let (tx, rx) = mpsc::channel();
+        let job = Job {
+            req,
+            submitted: Instant::now(),
+            resp: tx,
+        };
+        let id = job.req.id;
+        match batcher.submit(job) {
+            Ok(()) => match rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(resp) => {
+                    let _ = writeln!(writer, "{}", resp.to_json_line());
+                }
+                Err(_) => {
+                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = writeln!(writer, "{}", error_line(id, "timeout"));
+                }
+            },
+            Err(SubmitError::Full) => {
+                metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = writeln!(writer, "{}", error_line(id, "overloaded"));
+            }
+            Err(SubmitError::Closed) => {
+                let _ = writeln!(writer, "{}", error_line(id, "shutting down"));
+                break;
+            }
+        }
+    }
+}
+
+/// Minimal blocking client for examples and tests.
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    pub fn query(&mut self, req: &QueryRequest) -> Result<QueryResponse, String> {
+        writeln!(self.stream, "{}", req.to_json_line()).map_err(|e| e.to_string())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line).map_err(|e| e.to_string())?;
+        QueryResponse::parse(line.trim())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::distance::Metric;
+    use crate::data::synth::tiny;
+    use crate::finger::construct::FingerParams;
+    use crate::graph::hnsw::HnswParams;
+
+    fn test_index() -> Arc<ServeIndex> {
+        let ds = tiny(201, 400, 16, Metric::L2);
+        let fh = FingerHnsw::build(
+            &ds.data,
+            HnswParams { m: 8, ef_construction: 40, ..Default::default() },
+            FingerParams { rank: 8, ..Default::default() },
+        );
+        Arc::new(ServeIndex {
+            data: ds.data,
+            kind: IndexKind::Finger(fh),
+            ef_search: 40,
+        })
+    }
+
+    fn cfg() -> ServerConfig {
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 2,
+            max_batch: 4,
+            max_wait: Duration::from_micros(100),
+            max_queue: 256,
+            use_pjrt_rerank: false,
+        }
+    }
+
+    #[test]
+    fn local_submit_roundtrip() {
+        let index = test_index();
+        let q = index.data.row(5).to_vec();
+        let server = Server::start(Arc::clone(&index), cfg(), None).unwrap();
+        let rx = server
+            .submit_local(QueryRequest { id: 1, vector: q, k: 5 })
+            .unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.id, 1);
+        assert_eq!(resp.hits.len(), 5);
+        assert_eq!(resp.hits[0].1, 5, "self-query returns itself first");
+        server.shutdown();
+    }
+
+    #[test]
+    fn tcp_roundtrip_and_errors() {
+        let index = test_index();
+        let server = Server::start(Arc::clone(&index), cfg(), None).unwrap();
+        let mut client = Client::connect(&server.local_addr).unwrap();
+
+        let q = index.data.row(3).to_vec();
+        let resp = client.query(&QueryRequest { id: 9, vector: q, k: 3 }).unwrap();
+        assert_eq!(resp.id, 9);
+        assert_eq!(resp.hits[0].1, 3);
+
+        // Dim mismatch -> error response.
+        let err = client.query(&QueryRequest { id: 10, vector: vec![1.0, 2.0], k: 3 });
+        assert!(err.is_err());
+
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_all_answered() {
+        let index = test_index();
+        let server = Arc::new(Server::start(Arc::clone(&index), cfg(), None).unwrap());
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let server = Arc::clone(&server);
+            let index = Arc::clone(&index);
+            handles.push(std::thread::spawn(move || {
+                let mut ok = 0;
+                for i in 0..50u64 {
+                    let qid = ((t * 50 + i) as usize) % index.len();
+                    let rx = server
+                        .submit_local(QueryRequest {
+                            id: t * 1000 + i,
+                            vector: index.data.row(qid).to_vec(),
+                            k: 5,
+                        })
+                        .unwrap();
+                    let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+                    assert_eq!(resp.id, t * 1000 + i);
+                    ok += 1;
+                }
+                ok
+            }));
+        }
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 200);
+        let server = Arc::try_unwrap(server).ok().unwrap();
+        assert_eq!(server.metrics.responses.load(Ordering::Relaxed), 200);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,326 @@
+//! PJRT execution engine: loads `artifacts/*.hlo.txt` (AOT-lowered JAX +
+//! Pallas, see `python/compile/aot.py`), compiles them once on the CPU
+//! PJRT client, and serves batched executions from the Rust hot path.
+//!
+//! Interchange is HLO *text* — jax >= 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Inputs are padded to each artifact's static shapes: queries replicate
+//! row 0 semantics are avoided by masking on the caller side; candidate
+//! slots are padded with `PAD_SQNORM` so they sort last in top-k.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::core::matrix::Matrix;
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+
+/// Squared-norm value for padded candidate slots — large enough to lose
+/// every comparison, small enough to stay finite through f32 arithmetic.
+pub const PAD_SQNORM: f32 = 1e30;
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The engine: one PJRT client + all compiled artifacts.
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and load the manifest (does not compile
+    /// anything yet — call `compile` per artifact).
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(Engine { client, manifest })
+    }
+
+    /// Compile one artifact by name.
+    pub fn compile(&self, name: &str) -> Result<Executable> {
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named {name}"))?
+            .clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        Ok(Executable { spec, exe })
+    }
+
+    /// Compile the rerank artifact matching a data dimension.
+    pub fn compile_rerank_for_dim(&self, dim: usize) -> Result<Executable> {
+        let name = self
+            .manifest
+            .rerank_for_dim(dim)
+            .ok_or_else(|| anyhow!("no rerank artifact for dim {dim}"))?
+            .name
+            .clone();
+        self.compile(&name)
+    }
+}
+
+/// Result of a rerank execution: global ids + squared distances per query.
+#[derive(Clone, Debug, Default)]
+pub struct RerankResult {
+    /// Per query row: (distance, candidate id) ascending.
+    pub hits: Vec<Vec<(f32, u32)>>,
+}
+
+impl Executable {
+    /// Raw execute with literals.
+    fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.spec.name))?;
+        bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))
+    }
+
+    /// Exact top-k re-rank via the `rerank` artifact. `queries` is B' × m
+    /// (B' <= artifact batch), `cand_ids` the global ids of candidate rows
+    /// in `data`. Inputs are padded to the artifact's static shapes.
+    pub fn rerank(
+        &self,
+        data: &Matrix,
+        queries: &Matrix,
+        cand_ids: &[u32],
+    ) -> Result<RerankResult> {
+        anyhow::ensure!(self.spec.kind == "rerank", "not a rerank artifact");
+        let b = self.spec.meta["batch"];
+        let c = self.spec.meta["cands"];
+        let m = self.spec.meta["dim"];
+        let k = self.spec.meta["k"];
+        anyhow::ensure!(queries.cols() == m, "query dim {} != {}", queries.cols(), m);
+        anyhow::ensure!(queries.rows() <= b, "batch overflow");
+        anyhow::ensure!(cand_ids.len() <= c, "candidate overflow");
+
+        // Pad queries to (b, m) by repeating the last row (results sliced).
+        let mut qbuf = vec![0.0f32; b * m];
+        for i in 0..b {
+            let src = queries.row(i.min(queries.rows().saturating_sub(1)));
+            qbuf[i * m..(i + 1) * m].copy_from_slice(src);
+        }
+        // Gather + pad candidates; padded slots get PAD_SQNORM.
+        let mut cbuf = vec![0.0f32; c * m];
+        let mut sq = vec![PAD_SQNORM; c];
+        for (j, &id) in cand_ids.iter().enumerate() {
+            let row = data.row(id as usize);
+            cbuf[j * m..(j + 1) * m].copy_from_slice(row);
+            sq[j] = crate::core::distance::norm_sq(row);
+        }
+
+        let ql = xla::Literal::vec1(&qbuf)
+            .reshape(&[b as i64, m as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let cl = xla::Literal::vec1(&cbuf)
+            .reshape(&[c as i64, m as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let sl = xla::Literal::vec1(&sq);
+
+        let out = self.run(&[ql, cl, sl])?;
+        let (dist_l, idx_l) = out.to_tuple2().map_err(|e| anyhow!("{e:?}"))?;
+        let dists: Vec<f32> = dist_l.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let idxs: Vec<i32> = idx_l.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+
+        let mut hits = Vec::with_capacity(queries.rows());
+        for qi in 0..queries.rows() {
+            let mut row = Vec::with_capacity(k);
+            for j in 0..k {
+                let pos = idxs[qi * k + j];
+                if pos < 0 || pos as usize >= cand_ids.len() {
+                    continue; // padded slot leaked into top-k (fewer cands than k)
+                }
+                row.push((dists[qi * k + j], cand_ids[pos as usize]));
+            }
+            hits.push(row);
+        }
+        Ok(RerankResult { hits })
+    }
+
+    /// Batched squared-L2 scoring via a `score_l2` artifact: returns the
+    /// (queries x cand_ids) panel, unpadded.
+    pub fn score_l2(
+        &self,
+        data: &Matrix,
+        queries: &Matrix,
+        cand_ids: &[u32],
+    ) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(self.spec.kind == "score_l2", "not a score artifact");
+        let b = self.spec.meta["batch"];
+        let c = self.spec.meta["cands"];
+        let m = self.spec.meta["dim"];
+        anyhow::ensure!(queries.cols() == m && queries.rows() <= b && cand_ids.len() <= c);
+
+        let mut qbuf = vec![0.0f32; b * m];
+        for i in 0..b {
+            let src = queries.row(i.min(queries.rows().saturating_sub(1)));
+            qbuf[i * m..(i + 1) * m].copy_from_slice(src);
+        }
+        let mut cbuf = vec![0.0f32; c * m];
+        let mut sq = vec![0.0f32; c];
+        for (j, &id) in cand_ids.iter().enumerate() {
+            let row = data.row(id as usize);
+            cbuf[j * m..(j + 1) * m].copy_from_slice(row);
+            sq[j] = crate::core::distance::norm_sq(row);
+        }
+        let ql = xla::Literal::vec1(&qbuf)
+            .reshape(&[b as i64, m as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let cl = xla::Literal::vec1(&cbuf)
+            .reshape(&[c as i64, m as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let sl = xla::Literal::vec1(&sq);
+        let out = self.run(&[ql, cl, sl])?;
+        let panel = out.to_tuple1().map_err(|e| anyhow!("{e:?}"))?;
+        let flat: Vec<f32> = panel.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let mut rows = Vec::with_capacity(queries.rows());
+        for qi in 0..queries.rows() {
+            rows.push(flat[qi * c..qi * c + cand_ids.len()].to_vec());
+        }
+        Ok(rows)
+    }
+}
+
+/// Locate the artifacts directory: $FINGER_ARTIFACTS or ./artifacts.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("FINGER_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::distance::l2_sq;
+    use crate::core::rng::Pcg32;
+
+    fn artifacts_available() -> bool {
+        default_artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn rerank_matches_cpu_exact() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let engine = Engine::new(&default_artifacts_dir()).unwrap();
+        let exe = engine.compile("rerank_b4_c64_d32_k5").unwrap();
+
+        let mut rng = Pcg32::new(11);
+        let mut data = Matrix::zeros(0, 0);
+        for _ in 0..100 {
+            let row: Vec<f32> = (0..32).map(|_| rng.next_gaussian()).collect();
+            data.push_row(&row);
+        }
+        let mut queries = Matrix::zeros(0, 0);
+        for _ in 0..3 {
+            let row: Vec<f32> = (0..32).map(|_| rng.next_gaussian()).collect();
+            queries.push_row(&row);
+        }
+        let cand_ids: Vec<u32> = (0..60).collect();
+        let res = exe.rerank(&data, &queries, &cand_ids).unwrap();
+        assert_eq!(res.hits.len(), 3);
+        for qi in 0..3 {
+            // CPU-exact top-5 among the candidate set.
+            let q = queries.row(qi);
+            let mut exact: Vec<(f32, u32)> = cand_ids
+                .iter()
+                .map(|&id| (l2_sq(q, data.row(id as usize)), id))
+                .collect();
+            exact.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let want: Vec<u32> = exact[..5].iter().map(|x| x.1).collect();
+            let got: Vec<u32> = res.hits[qi].iter().map(|x| x.1).collect();
+            assert_eq!(got, want, "query {qi}");
+            for (j, &(d, id)) in res.hits[qi].iter().enumerate() {
+                let true_d = l2_sq(q, data.row(id as usize));
+                assert!((d - true_d).abs() < 1e-2 * (1.0 + true_d), "dist {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn rerank_with_fewer_candidates_than_panel() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let engine = Engine::new(&default_artifacts_dir()).unwrap();
+        let exe = engine.compile("rerank_b4_c64_d32_k5").unwrap();
+        let mut rng = Pcg32::new(12);
+        let mut data = Matrix::zeros(0, 0);
+        for _ in 0..10 {
+            let row: Vec<f32> = (0..32).map(|_| rng.next_gaussian()).collect();
+            data.push_row(&row);
+        }
+        let queries = Matrix::from_rows(&[data.row(0).to_vec()]);
+        let cand_ids: Vec<u32> = (0..10).collect();
+        let res = exe.rerank(&data, &queries, &cand_ids).unwrap();
+        // Self-match must rank first with ~zero distance.
+        assert_eq!(res.hits[0][0].1, 0);
+        assert!(res.hits[0][0].0 < 1e-3);
+        // Padded slots must never appear.
+        assert!(res.hits[0].iter().all(|&(_, id)| id < 10));
+    }
+
+    #[test]
+    fn score_l2_panel_matches_cpu() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let engine = Engine::new(&default_artifacts_dir()).unwrap();
+        let exe = engine.compile("score_l2_b8_c256_d128").unwrap();
+        let mut rng = Pcg32::new(13);
+        let mut data = Matrix::zeros(0, 0);
+        for _ in 0..300 {
+            let row: Vec<f32> = (0..128).map(|_| rng.next_gaussian()).collect();
+            data.push_row(&row);
+        }
+        let mut queries = Matrix::zeros(0, 0);
+        for _ in 0..5 {
+            let row: Vec<f32> = (0..128).map(|_| rng.next_gaussian()).collect();
+            queries.push_row(&row);
+        }
+        let cand_ids: Vec<u32> = (0..200).collect();
+        let rows = exe.score_l2(&data, &queries, &cand_ids).unwrap();
+        assert_eq!(rows.len(), 5);
+        assert_eq!(rows[0].len(), 200);
+        for qi in 0..5 {
+            for (j, &id) in cand_ids.iter().enumerate().step_by(37) {
+                let want = l2_sq(queries.row(qi), data.row(id as usize));
+                let got = rows[qi][j];
+                assert!((got - want).abs() < 1e-2 * (1.0 + want), "({qi},{j}): {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn missing_artifact_name_errors() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let engine = Engine::new(&default_artifacts_dir()).unwrap();
+        assert!(engine.compile("nonexistent").is_err());
+    }
+}

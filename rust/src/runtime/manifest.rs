@@ -1,0 +1,157 @@
+//! Parse `artifacts/manifest.json` emitted by `python/compile/aot.py` —
+//! names, shapes and output layouts of every AOT-compiled HLO module.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::core::json::Json;
+
+/// One tensor's static shape + dtype.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// kind-specific integers (batch, cands, dim, k, rank) when present.
+    pub meta: BTreeMap<String, usize>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn tensor_list(v: &Json) -> Result<Vec<TensorSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array of tensors"))?
+        .iter()
+        .map(|t| {
+            let shape = t
+                .get("shape")
+                .and_then(|s| s.as_arr())
+                .ok_or_else(|| anyhow!("tensor missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = t
+                .get("dtype")
+                .and_then(|d| d.as_str())
+                .unwrap_or("f32")
+                .to_string();
+            Ok(TensorSpec { shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let root = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        let arts = root
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, v) in arts {
+            let file = v
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?;
+            let mut meta = BTreeMap::new();
+            for key in ["batch", "cands", "dim", "k", "rank"] {
+                if let Some(n) = v.get(key).and_then(|x| x.as_usize()) {
+                    meta.insert(key.to_string(), n);
+                }
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    kind: v
+                        .get("kind")
+                        .and_then(|k| k.as_str())
+                        .unwrap_or("unknown")
+                        .to_string(),
+                    file: dir.join(file),
+                    inputs: tensor_list(v.get("inputs").unwrap_or(&Json::Arr(vec![])))?,
+                    outputs: tensor_list(v.get("outputs").unwrap_or(&Json::Arr(vec![])))?,
+                    meta,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    /// Find the first artifact matching a predicate.
+    pub fn find(&self, pred: impl Fn(&ArtifactSpec) -> bool) -> Option<&ArtifactSpec> {
+        self.artifacts.values().find(|a| pred(a))
+    }
+
+    /// Find a rerank artifact for the given data dimension.
+    pub fn rerank_for_dim(&self, dim: usize) -> Option<&ArtifactSpec> {
+        self.find(|a| a.kind == "rerank" && a.meta.get("dim") == Some(&dim))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let json = r#"{"format":"hlo-text","artifacts":{
+            "rerank_b4_c64_d32_k5":{"kind":"rerank","batch":4,"cands":64,"dim":32,"k":5,
+              "file":"rerank_b4_c64_d32_k5.hlo.txt",
+              "inputs":[{"shape":[4,32],"dtype":"float32"},{"shape":[64,32],"dtype":"float32"},{"shape":[64],"dtype":"float32"}],
+              "outputs":[{"shape":[4,5],"dtype":"f32"},{"shape":[4,5],"dtype":"i32"}]}}}"#;
+        std::fs::write(dir.join("manifest.json"), json).unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join(format!("finger_manifest_{}", std::process::id()));
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let a = &m.artifacts["rerank_b4_c64_d32_k5"];
+        assert_eq!(a.kind, "rerank");
+        assert_eq!(a.meta["dim"], 32);
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[0].shape, vec![4, 32]);
+        assert_eq!(a.outputs[1].dtype, "i32");
+        assert_eq!(a.inputs[0].numel(), 128);
+        assert!(m.rerank_for_dim(32).is_some());
+        assert!(m.rerank_for_dim(999).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = std::env::temp_dir().join("finger_manifest_missing_xyz");
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

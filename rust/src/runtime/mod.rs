@@ -1,0 +1,10 @@
+//! Runtime: PJRT client wrapping the `xla` crate — loads and executes the
+//! AOT artifacts produced by `python/compile/aot.py`. Python never runs at
+//! request time; the HLO text modules are self-contained.
+
+pub mod engine;
+pub mod manifest;
+pub mod service;
+
+pub use engine::{default_artifacts_dir, Engine, Executable, RerankResult, PAD_SQNORM};
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};

@@ -1,0 +1,170 @@
+//! RerankService: a dedicated executor thread that owns the PJRT client +
+//! compiled executable (the `xla` crate's handles are `Rc`-based and not
+//! Send/Sync), serving re-rank calls to the router's worker pool over
+//! channels. This mirrors how real serving stacks pin an accelerator
+//! runtime to an executor thread.
+
+use std::sync::{mpsc, Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::core::matrix::Matrix;
+use crate::runtime::engine::Engine;
+
+struct Call {
+    query: Vec<f32>,
+    cand_ids: Vec<u32>,
+    k: usize,
+    resp: mpsc::Sender<Result<Vec<(f32, u32)>, String>>,
+}
+
+/// Handle to the executor thread. Clone-able across workers.
+pub struct RerankService {
+    tx: Mutex<mpsc::Sender<Call>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    pub max_cands: usize,
+    pub dim: usize,
+}
+
+impl RerankService {
+    /// Spawn the executor thread: it creates the PJRT client, compiles the
+    /// rerank artifact for `dim`, then serves calls until dropped.
+    pub fn start(artifacts_dir: std::path::PathBuf, dim: usize, data: Arc<Matrix>) -> Result<RerankService> {
+        let (tx, rx) = mpsc::channel::<Call>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<usize, String>>();
+        let handle = std::thread::Builder::new()
+            .name("finger-pjrt".into())
+            .spawn(move || {
+                let exe = match Engine::new(&artifacts_dir)
+                    .and_then(|e| e.compile_rerank_for_dim(dim))
+                {
+                    Ok(exe) => {
+                        let cands = exe.spec.meta.get("cands").copied().unwrap_or(0);
+                        let _ = ready_tx.send(Ok(cands));
+                        exe
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                while let Ok(call) = rx.recv() {
+                    let queries = Matrix::from_rows(&[call.query.clone()]);
+                    let out = exe
+                        .rerank(&data, &queries, &call.cand_ids)
+                        .map(|r| {
+                            let mut row = r.hits.into_iter().next().unwrap_or_default();
+                            row.truncate(call.k);
+                            row
+                        })
+                        .map_err(|e| format!("{e:#}"));
+                    let _ = call.resp.send(out);
+                }
+            })
+            .map_err(|e| anyhow!("spawn: {e}"))?;
+        let max_cands = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("pjrt thread died during init"))?
+            .map_err(|e| anyhow!("{e}"))?;
+        Ok(RerankService {
+            tx: Mutex::new(tx),
+            handle: Some(handle),
+            max_cands,
+            dim,
+        })
+    }
+
+    /// Blocking re-rank of `cand_ids` (truncated to the artifact's panel
+    /// width) against `query`; returns top-k (dist, id) ascending.
+    pub fn rerank(&self, query: &[f32], cand_ids: &[u32], k: usize) -> Result<Vec<(f32, u32)>> {
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let ids: Vec<u32> = cand_ids.iter().copied().take(self.max_cands).collect();
+        {
+            let tx = self.tx.lock().unwrap();
+            tx.send(Call {
+                query: query.to_vec(),
+                cand_ids: ids,
+                k,
+                resp: resp_tx,
+            })
+            .map_err(|_| anyhow!("pjrt thread gone"))?;
+        }
+        resp_rx
+            .recv()
+            .map_err(|_| anyhow!("pjrt thread gone"))?
+            .map_err(|e| anyhow!("{e}"))
+    }
+}
+
+impl Drop for RerankService {
+    fn drop(&mut self) {
+        // Closing the channel stops the executor thread.
+        {
+            let (dummy_tx, _dummy_rx) = mpsc::channel();
+            let mut guard = self.tx.lock().unwrap();
+            *guard = dummy_tx;
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::distance::l2_sq;
+    use crate::core::rng::Pcg32;
+    use crate::runtime::default_artifacts_dir;
+
+    #[test]
+    fn service_reranks_from_many_threads() {
+        if !default_artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rng = Pcg32::new(3);
+        let mut data = Matrix::zeros(0, 0);
+        for _ in 0..128 {
+            let row: Vec<f32> = (0..32).map(|_| rng.next_gaussian()).collect();
+            data.push_row(&row);
+        }
+        let data = Arc::new(data);
+        let svc = Arc::new(
+            RerankService::start(default_artifacts_dir(), 32, Arc::clone(&data)).unwrap(),
+        );
+        assert_eq!(svc.max_cands, 64);
+
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let svc = Arc::clone(&svc);
+            let data = Arc::clone(&data);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Pcg32::new(100 + t);
+                for _ in 0..10 {
+                    let q: Vec<f32> = (0..32).map(|_| rng.next_gaussian()).collect();
+                    let ids: Vec<u32> = (0..50).collect();
+                    let hits = svc.rerank(&q, &ids, 5).unwrap();
+                    assert_eq!(hits.len(), 5);
+                    // Spot-check first hit distance.
+                    let want = l2_sq(&q, data.row(hits[0].1 as usize));
+                    assert!((hits[0].0 - want).abs() < 1e-2 * (1.0 + want));
+                    // Ascending.
+                    for w in hits.windows(2) {
+                        assert!(w[0].0 <= w[1].0);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn service_errors_without_artifacts() {
+        let bogus = std::path::PathBuf::from("/nonexistent/artifacts");
+        let data = Arc::new(Matrix::zeros(1, 4));
+        assert!(RerankService::start(bogus, 4, data).is_err());
+    }
+}

@@ -1,0 +1,49 @@
+//! Miniature property-testing harness (the offline environment carries no
+//! proptest). `forall` runs a closure over `n` seeded random cases and
+//! reports the first failing seed; failures are reproducible by
+//! construction because all generators take the seed explicitly.
+
+use crate::core::rng::Pcg32;
+
+/// Run `f` over `cases` deterministic seeds. On panic or `false`, panics
+/// with the failing seed so the case can be replayed.
+pub fn forall(name: &str, cases: u64, f: impl Fn(&mut Pcg32) -> bool) {
+    for case in 0..cases {
+        let seed = 0x9E37_79B9 ^ (case * 0x1000_0001);
+        let mut rng = Pcg32::new(seed);
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        match ok {
+            Ok(true) => {}
+            Ok(false) => panic!("property '{name}' failed at case {case} (seed {seed:#x})"),
+            Err(e) => panic!(
+                "property '{name}' panicked at case {case} (seed {seed:#x}): {:?}",
+                e.downcast_ref::<&str>()
+            ),
+        }
+    }
+}
+
+/// Random f32 vector generator.
+pub fn vec_f32(rng: &mut Pcg32, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.next_gaussian()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("addition commutes", 20, |rng| {
+            let a = rng.next_f32();
+            let b = rng.next_f32();
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at case")]
+    fn failing_property_reports_seed() {
+        forall("always false", 3, |_| false);
+    }
+}

@@ -1,0 +1,185 @@
+//! Integration tests across the whole stack: graph + FINGER + router +
+//! PJRT runtime, exercising the same composition as examples/serve_e2e.rs.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use finger_ann::core::distance::Metric;
+use finger_ann::data::groundtruth::exact_knn;
+use finger_ann::data::synth::tiny;
+use finger_ann::eval::recall_ids;
+use finger_ann::finger::construct::FingerParams;
+use finger_ann::finger::search::FingerHnsw;
+use finger_ann::graph::hnsw::HnswParams;
+use finger_ann::router::{Client, IndexKind, QueryRequest, ServeIndex, Server, ServerConfig};
+use finger_ann::runtime::{default_artifacts_dir, service::RerankService};
+
+fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}
+
+fn build_index(n: usize, dim: usize, seed: u64) -> Arc<ServeIndex> {
+    let ds = tiny(seed, n, dim, Metric::L2);
+    let fh = FingerHnsw::build(
+        &ds.data,
+        HnswParams { m: 12, ef_construction: 80, ..Default::default() },
+        FingerParams { rank: 8, ..Default::default() },
+    );
+    Arc::new(ServeIndex {
+        data: ds.data,
+        kind: IndexKind::Finger(fh),
+        ef_search: 64,
+    })
+}
+
+#[test]
+fn served_results_match_direct_search() {
+    let index = build_index(500, 24, 301);
+    let server = Server::start(
+        Arc::clone(&index),
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 2,
+            max_batch: 4,
+            max_wait: Duration::from_micros(100),
+            max_queue: 256,
+            use_pjrt_rerank: false,
+        },
+        None,
+    )
+    .unwrap();
+    let mut client = Client::connect(&server.local_addr).unwrap();
+
+    let mut vis = finger_ann::graph::visited::VisitedSet::new(index.len());
+    for qi in [0usize, 7, 42] {
+        let q = index.data.row(qi).to_vec();
+        let served = client
+            .query(&QueryRequest { id: qi as u64, vector: q.clone(), k: 5 })
+            .unwrap();
+        let direct = index.search(&q, 5, &mut vis, None);
+        let served_ids: Vec<u32> = served.hits.iter().map(|&(_, id)| id).collect();
+        let direct_ids: Vec<u32> = direct.iter().map(|&(_, id)| id).collect();
+        assert_eq!(served_ids, direct_ids, "query {qi}");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn served_recall_matches_offline_recall() {
+    let ds = tiny(302, 600, 16, Metric::L2);
+    let gt = exact_knn(&ds.data, &ds.queries, 10);
+    let fh = FingerHnsw::build(
+        &ds.data,
+        HnswParams { m: 12, ef_construction: 80, ..Default::default() },
+        FingerParams { rank: 8, ..Default::default() },
+    );
+    let queries = ds.queries.clone();
+    let index = Arc::new(ServeIndex {
+        data: ds.data,
+        kind: IndexKind::Finger(fh),
+        ef_search: 64,
+    });
+    let server = Server::start(Arc::clone(&index), ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 4,
+        max_batch: 8,
+        max_wait: Duration::from_micros(100),
+        max_queue: 1024,
+        use_pjrt_rerank: false,
+    }, None).unwrap();
+
+    let mut total = 0.0;
+    for qi in 0..queries.rows() {
+        let rx = server
+            .submit_local(QueryRequest {
+                id: qi as u64,
+                vector: queries.row(qi).to_vec(),
+                k: 10,
+            })
+            .unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let ids: Vec<u32> = resp.hits.iter().map(|&(_, id)| id).collect();
+        total += recall_ids(&ids, &gt[qi]);
+    }
+    let avg = total / queries.rows() as f64;
+    assert!(avg > 0.85, "served recall@10 = {avg}");
+    server.shutdown();
+}
+
+#[test]
+fn pjrt_rerank_returns_exact_distances() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    // dim must match an AOT rerank artifact (32).
+    let index = build_index(400, 32, 303);
+    let svc = RerankService::start(
+        default_artifacts_dir(),
+        32,
+        Arc::new(index.data.clone()),
+    )
+    .unwrap();
+    let server = Server::start(
+        Arc::clone(&index),
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 2,
+            max_batch: 4,
+            max_wait: Duration::from_micros(100),
+            max_queue: 256,
+            use_pjrt_rerank: true,
+        },
+        Some(Arc::new(svc)),
+    )
+    .unwrap();
+
+    let q = index.data.row(9).to_vec();
+    let rx = server
+        .submit_local(QueryRequest { id: 1, vector: q.clone(), k: 5 })
+        .unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    assert_eq!(resp.hits[0].1, 9, "self-query top hit");
+    // Distances must be the exact L2 values computed by the Pallas kernel.
+    for &(d, id) in &resp.hits {
+        let want = finger_ann::core::distance::l2_sq(&q, index.data.row(id as usize));
+        assert!((d - want).abs() < 1e-2 * (1.0 + want), "{d} vs {want}");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn overload_rejections_are_reported() {
+    let index = build_index(300, 16, 304);
+    let server = Server::start(
+        Arc::clone(&index),
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 1,
+            max_batch: 1,
+            max_wait: Duration::from_millis(20),
+            max_queue: 1, // absurdly small: force rejections
+            use_pjrt_rerank: false,
+        },
+        None,
+    )
+    .unwrap();
+    let mut rejected = 0;
+    let mut accepted_rx = Vec::new();
+    for i in 0..50u64 {
+        match server.submit_local(QueryRequest {
+            id: i,
+            vector: index.data.row(0).to_vec(),
+            k: 3,
+        }) {
+            Ok(rx) => accepted_rx.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    // Every accepted request must still be answered.
+    for rx in accepted_rx {
+        rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    }
+    assert!(rejected > 0, "tiny queue must reject under burst");
+    server.shutdown();
+}

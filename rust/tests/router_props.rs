@@ -1,0 +1,134 @@
+//! Property tests on the serving coordinator's invariants (DESIGN.md §6):
+//! exactly-once delivery, bounded batches, FIFO within a window, and
+//! backpressure behavior — run over randomized schedules via the in-tree
+//! property harness (no proptest in the offline environment).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use finger_ann::core::rng::Pcg32;
+use finger_ann::router::batcher::{Batcher, SubmitError};
+use finger_ann::testutil::forall;
+
+#[test]
+fn prop_every_request_in_exactly_one_batch() {
+    forall("exactly-once delivery", 10, |rng: &mut Pcg32| {
+        let max_batch = 1 + rng.gen_range(8);
+        let n_items = 50 + rng.gen_range(200);
+        let b: Arc<Batcher<u64>> = Arc::new(Batcher::new(
+            max_batch,
+            Duration::from_micros(200),
+            10_000,
+        ));
+        let producer = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || {
+                for i in 0..n_items as u64 {
+                    b.submit(i).unwrap();
+                    if i % 7 == 0 {
+                        std::thread::yield_now();
+                    }
+                }
+                b.close();
+            })
+        };
+        let mut seen = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            assert!(batch.len() <= max_batch, "batch size bound violated");
+            seen.extend(batch);
+        }
+        producer.join().unwrap();
+        seen.sort_unstable();
+        let expect: Vec<u64> = (0..n_items as u64).collect();
+        seen == expect
+    });
+}
+
+#[test]
+fn prop_fifo_order_single_producer() {
+    forall("FIFO within single producer", 10, |rng: &mut Pcg32| {
+        let max_batch = 1 + rng.gen_range(6);
+        let n = 100 + rng.gen_range(100);
+        let b: Batcher<u64> = Batcher::new(max_batch, Duration::from_micros(100), 10_000);
+        for i in 0..n as u64 {
+            b.submit(i).unwrap();
+        }
+        b.close();
+        let mut last = None;
+        while let Some(batch) = b.next_batch() {
+            for x in batch {
+                if let Some(prev) = last {
+                    assert!(x > prev, "out of order: {x} after {prev}");
+                }
+                last = Some(x);
+            }
+        }
+        last == Some(n as u64 - 1)
+    });
+}
+
+#[test]
+fn prop_backpressure_rejects_never_loses() {
+    forall("backpressure accounting", 8, |rng: &mut Pcg32| {
+        let cap = 4 + rng.gen_range(12);
+        let b: Arc<Batcher<u64>> = Arc::new(Batcher::new(cap, Duration::from_millis(50), cap));
+        let accepted = Arc::new(AtomicU64::new(0));
+        let rejected = Arc::new(AtomicU64::new(0));
+        let mut producers = Vec::new();
+        for t in 0..3u64 {
+            let b = Arc::clone(&b);
+            let accepted = Arc::clone(&accepted);
+            let rejected = Arc::clone(&rejected);
+            producers.push(std::thread::spawn(move || {
+                for i in 0..100u64 {
+                    match b.submit(t * 1000 + i) {
+                        Ok(()) => {
+                            accepted.fetch_add(1, Ordering::SeqCst);
+                        }
+                        Err(SubmitError::Full) => {
+                            rejected.fetch_add(1, Ordering::SeqCst);
+                        }
+                        Err(SubmitError::Closed) => unreachable!(),
+                    }
+                }
+            }));
+        }
+        let consumer = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || {
+                let mut count = 0u64;
+                while let Some(batch) = b.next_batch() {
+                    count += batch.len() as u64;
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+                count
+            })
+        };
+        for p in producers {
+            p.join().unwrap();
+        }
+        b.close();
+        let delivered = consumer.join().unwrap();
+        // Conservation: accepted == delivered, accepted + rejected == offered.
+        let acc = accepted.load(Ordering::SeqCst);
+        let rej = rejected.load(Ordering::SeqCst);
+        assert_eq!(acc + rej, 300, "offered requests accounted");
+        delivered == acc
+    });
+}
+
+#[test]
+fn prop_batch_never_mixes_after_close_drain() {
+    // After close(), all remaining items must still drain in order.
+    let b: Batcher<u32> = Batcher::new(3, Duration::from_secs(1), 100);
+    for i in 0..10 {
+        b.submit(i).unwrap();
+    }
+    b.close();
+    let mut all = Vec::new();
+    while let Some(batch) = b.next_batch() {
+        all.extend(batch);
+    }
+    assert_eq!(all, (0..10).collect::<Vec<_>>());
+}
