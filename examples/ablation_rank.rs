@@ -1,6 +1,8 @@
 //! Ablation driver: how the FINGER rank r trades approximation quality
 //! (angle-estimate correlation, Supplementary E) against screening
-//! effectiveness (effective distance calls) and recall.
+//! effectiveness (effective distance calls) and recall. One shared HNSW
+//! graph, many side-index variants, all searched through the borrowed
+//! `FingerView` implementor of `AnnIndex`.
 //!
 //!   cargo run --release --example ablation_rank
 
@@ -10,8 +12,8 @@ use finger_ann::eval::recall;
 use finger_ann::finger::construct::{FingerIndex, FingerParams};
 use finger_ann::finger::rplsh::build_rplsh_index;
 use finger_ann::graph::hnsw::{Hnsw, HnswParams};
-use finger_ann::graph::search::SearchStats;
-use finger_ann::graph::visited::VisitedSet;
+use finger_ann::index::impls::FingerView;
+use finger_ann::index::{AnnIndex, SearchContext, SearchParams};
 
 fn main() {
     let spec = spec_by_name("glove-sim-100", 0.2).unwrap();
@@ -25,30 +27,36 @@ fn main() {
         HnswParams { m: 16, ef_construction: 120, ..Default::default() },
     );
 
+    let mut ctx = SearchContext::for_universe(ds.data.rows()).with_stats();
+    let params = SearchParams::new(10).with_ef(80);
     println!(
         "{:<10} {:>6} {:>8} {:>10} {:>12} {:>10}",
         "scheme", "rank", "corr", "recall@10", "eff. calls", "QPS"
     );
     for rank in [8usize, 16, 24, 32, 48] {
         for scheme in ["finger", "rplsh"] {
-            let params = FingerParams { rank, ..Default::default() };
+            let fparams = FingerParams { rank, ..Default::default() };
             let idx = if scheme == "rplsh" {
-                build_rplsh_index(&ds.data, &hnsw.base, params)
+                build_rplsh_index(&ds.data, &hnsw.base, fparams)
             } else {
-                FingerIndex::build(&ds.data, &hnsw.base, params)
+                FingerIndex::build(&ds.data, &hnsw.base, fparams)
             };
             let corr = idx.matching.correlation;
-            let mut vis = VisitedSet::new(ds.data.rows());
-            let mut stats = SearchStats::default();
+            let view = FingerView {
+                data: &ds.data,
+                hnsw: &hnsw,
+                findex: &idx,
+                label: scheme,
+            };
+            ctx.reset_stats();
             let t0 = std::time::Instant::now();
             let mut rec = 0.0;
             for qi in 0..ds.queries.rows() {
-                let res = finger_ann::finger::search::search_hnsw_with_index(
-                    &hnsw, &idx, &ds.data, ds.queries.row(qi), 10, 80, &mut vis, Some(&mut stats),
-                );
+                let res = view.search(ds.queries.row(qi), &params, &mut ctx);
                 rec += recall(&res, &gt[qi]);
             }
             let nq = ds.queries.rows() as f64;
+            let stats = ctx.take_stats();
             println!(
                 "{:<10} {:>6} {:>8.3} {:>10.4} {:>12.1} {:>10.0}",
                 scheme,

@@ -4,28 +4,29 @@
 //!
 //!   cargo run --release --example observation_wasted
 
+use std::sync::Arc;
+
 use finger_ann::data::spec_by_name;
-use finger_ann::graph::hnsw::{Hnsw, HnswParams};
-use finger_ann::graph::search::SearchStats;
-use finger_ann::graph::visited::VisitedSet;
+use finger_ann::graph::hnsw::HnswParams;
+use finger_ann::index::impls::HnswIndex;
+use finger_ann::index::{AnnIndex, SearchContext, SearchParams};
 
 fn main() {
     for name in ["fashion-sim-784", "glove-sim-100"] {
         let spec = spec_by_name(name, 0.2).unwrap();
         println!("\ndataset: {} (n={}, dim={})", spec.name, spec.n, spec.dim);
         let ds = spec.generate();
-        let h = Hnsw::build(
-            &ds.data,
+        let h = HnswIndex::build(
+            Arc::clone(&ds.data),
             HnswParams { m: 16, ef_construction: 120, ..Default::default() },
         );
 
-        let mut vis = VisitedSet::new(ds.data.rows());
-        let mut agg = SearchStats::default();
+        let mut ctx = SearchContext::for_universe(h.len()).with_stats();
+        let params = SearchParams::new(10).with_ef(128);
         for qi in 0..ds.queries.rows() {
-            let mut st = SearchStats::default();
-            h.search(&ds.data, ds.queries.row(qi), 10, 128, &mut vis, Some(&mut st));
-            agg.merge(&st);
+            h.search(ds.queries.row(qi), &params, &mut ctx);
         }
+        let agg = ctx.take_stats();
 
         let hops = agg.per_hop.len().max(1);
         println!("search phase (decile) -> fraction of distance computations > upper bound");

@@ -1,18 +1,19 @@
 //! Quickstart: build an HNSW-FINGER index over a synthetic dataset, search
-//! it, and compare against plain HNSW and exact ground truth.
+//! it through the unified `AnnIndex` API, and compare against plain HNSW
+//! and exact ground truth.
 //!
 //!   cargo run --release --example quickstart
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use finger_ann::data::groundtruth::exact_knn;
 use finger_ann::data::spec_by_name;
 use finger_ann::eval::recall;
 use finger_ann::finger::construct::FingerParams;
-use finger_ann::finger::search::FingerHnsw;
 use finger_ann::graph::hnsw::HnswParams;
-use finger_ann::graph::search::SearchStats;
-use finger_ann::graph::visited::VisitedSet;
+use finger_ann::index::impls::FingerHnswIndex;
+use finger_ann::index::{AnnIndex, SearchContext, SearchParams};
 
 fn main() {
     // 1. Data: a scaled-down SIFT-like benchmark (20k x 128 at scale 1.0).
@@ -21,10 +22,11 @@ fn main() {
     let ds = spec.generate();
     let gt = exact_knn(&ds.data, &ds.queries, 10);
 
-    // 2. Index: HNSW base graph + FINGER side index (Algorithm 2).
+    // 2. Index: HNSW base graph + FINGER side index (Algorithm 2), behind
+    //    the `AnnIndex` trait like every other family.
     let t0 = Instant::now();
-    let index = FingerHnsw::build(
-        &ds.data,
+    let index = FingerHnswIndex::build(
+        Arc::clone(&ds.data),
         HnswParams { m: 16, ef_construction: 120, ..Default::default() },
         FingerParams { rank: 16, ..Default::default() },
     );
@@ -32,20 +34,22 @@ fn main() {
         "index built in {:.1}s ({} MB, angle-estimate correlation {:.3})",
         t0.elapsed().as_secs_f64(),
         index.nbytes() as f64 / 1e6,
-        index.index.matching.correlation
+        index.inner.index.matching.correlation
     );
 
-    // 3. Search (Algorithm 4) and evaluate.
-    let mut vis = VisitedSet::new(ds.data.rows());
-    let mut stats = SearchStats::default();
+    // 3. Search (Algorithm 4) and evaluate. One pooled context; no
+    //    per-query allocation in the hot loop.
+    let mut ctx = SearchContext::for_universe(index.len()).with_stats();
+    let params = SearchParams::new(10).with_ef(80);
     let t0 = Instant::now();
     let mut total_recall = 0.0;
     for qi in 0..ds.queries.rows() {
-        let res = index.search(&ds.data, ds.queries.row(qi), 10, 80, &mut vis, Some(&mut stats));
+        let res = index.search(ds.queries.row(qi), &params, &mut ctx);
         total_recall += recall(&res, &gt[qi]);
     }
     let secs = t0.elapsed().as_secs_f64();
     let nq = ds.queries.rows() as f64;
+    let stats = ctx.take_stats();
     println!(
         "hnsw-finger: recall@10 = {:.4}, QPS = {:.0}",
         total_recall / nq,
@@ -58,17 +62,15 @@ fn main() {
         100.0 * (1.0 - stats.dist_calls as f64 / (stats.dist_calls + stats.approx_calls) as f64)
     );
 
-    // 4. Plain HNSW on the same graph for comparison.
-    let mut plain = SearchStats::default();
+    // 4. Plain HNSW on the same graph for comparison (family-level API).
     let t0 = Instant::now();
     let mut plain_recall = 0.0;
     for qi in 0..ds.queries.rows() {
-        let res = index
-            .hnsw
-            .search(&ds.data, ds.queries.row(qi), 10, 80, &mut vis, Some(&mut plain));
+        let res = index.inner.hnsw.search(&ds.data, ds.queries.row(qi), &params, &mut ctx);
         plain_recall += recall(&res, &gt[qi]);
     }
     let plain_secs = t0.elapsed().as_secs_f64();
+    let plain = ctx.take_stats();
     println!(
         "hnsw (same graph): recall@10 = {:.4}, QPS = {:.0}, {:.0} full dist calls/query",
         plain_recall / nq,

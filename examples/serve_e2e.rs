@@ -1,7 +1,7 @@
-//! End-to-end serving driver (EXPERIMENTS.md §E2E): build an HNSW-FINGER
-//! index, start the full router (TCP, dynamic batcher, worker pool, PJRT
-//! exact re-rank through the AOT JAX/Pallas artifact), fire batched
-//! requests from concurrent clients, and report latency/throughput/recall.
+//! End-to-end serving driver: build an HNSW-FINGER index, start the full
+//! router (TCP, dynamic batcher, worker pool, PJRT exact re-rank through
+//! the AOT JAX/Pallas artifact when available), fire batched requests from
+//! concurrent clients, and report latency/throughput/recall.
 //!
 //!   make artifacts && cargo run --release --example serve_e2e
 
@@ -12,9 +12,9 @@ use finger_ann::data::groundtruth::exact_knn;
 use finger_ann::data::spec_by_name;
 use finger_ann::eval::recall_ids;
 use finger_ann::finger::construct::FingerParams;
-use finger_ann::finger::search::FingerHnsw;
 use finger_ann::graph::hnsw::HnswParams;
-use finger_ann::router::{Client, IndexKind, QueryRequest, ServeIndex, Server, ServerConfig};
+use finger_ann::index::impls::FingerHnswIndex;
+use finger_ann::router::{Client, QueryRequest, ServeIndex, Server, ServerConfig};
 use finger_ann::runtime::{default_artifacts_dir, service::RerankService};
 
 fn main() {
@@ -25,8 +25,8 @@ fn main() {
     let gt = exact_knn(&ds.data, &ds.queries, 10);
 
     let t0 = Instant::now();
-    let fh = FingerHnsw::build(
-        &ds.data,
+    let fh = FingerHnswIndex::build(
+        Arc::clone(&ds.data),
         HnswParams { m: 16, ef_construction: 120, ..Default::default() },
         FingerParams { rank: 16, ..Default::default() },
     );
@@ -34,18 +34,14 @@ fn main() {
 
     let queries = ds.queries.clone();
     let dim = ds.data.cols();
-    let index = Arc::new(ServeIndex {
-        data: ds.data,
-        kind: IndexKind::Finger(fh),
-        ef_search: 80,
-    });
+    let index = Arc::new(ServeIndex::new(Box::new(fh), 80));
 
     // PJRT re-rank service: final distances come from the AOT-compiled
     // JAX/Pallas kernel, demonstrating the Python-free request path.
     let rerank = match RerankService::start(
         default_artifacts_dir(),
         dim,
-        Arc::new(index.data.clone()),
+        Arc::new(index.data().clone()),
     ) {
         Ok(svc) => {
             println!("PJRT rerank online (panel width {})", svc.max_cands);

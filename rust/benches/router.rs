@@ -9,25 +9,21 @@ use std::time::{Duration, Instant};
 
 use finger_ann::data::spec_by_name;
 use finger_ann::finger::construct::FingerParams;
-use finger_ann::finger::search::FingerHnsw;
 use finger_ann::graph::hnsw::HnswParams;
-use finger_ann::router::{IndexKind, QueryRequest, ServeIndex, Server, ServerConfig};
+use finger_ann::index::impls::FingerHnswIndex;
+use finger_ann::router::{QueryRequest, ServeIndex, Server, ServerConfig};
 
 fn main() {
     let spec = spec_by_name("sift-sim-128", 0.1).unwrap();
     println!("dataset: {} (n={}, dim={})", spec.name, spec.n, spec.dim);
     let ds = spec.generate();
-    let fh = FingerHnsw::build(
-        &ds.data,
+    let fh = FingerHnswIndex::build(
+        Arc::clone(&ds.data),
         HnswParams { m: 16, ef_construction: 100, ..Default::default() },
         FingerParams { rank: 16, ..Default::default() },
     );
     let queries = ds.queries.clone();
-    let index = Arc::new(ServeIndex {
-        data: ds.data,
-        kind: IndexKind::Finger(fh),
-        ef_search: 60,
-    });
+    let index = Arc::new(ServeIndex::new(Box::new(fh), 60));
 
     println!(
         "{:>8} {:>8} {:>10} {:>12} {:>12} {:>12}",

@@ -1,8 +1,10 @@
 //! End-to-end search benchmark: HNSW vs HNSW-FINGER per-query latency and
-//! throughput at matched ef — the microbench behind Figures 5/8.
+//! throughput at matched ef — the microbench behind Figures 5/8. Both
+//! methods run through `&dyn AnnIndex` with one pooled `SearchContext`.
 //!
 //!   cargo bench --bench search
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use finger_ann::data::groundtruth::exact_knn;
@@ -10,9 +12,9 @@ use finger_ann::data::spec_by_name;
 use finger_ann::eval::recall;
 use finger_ann::finger::construct::{FingerIndex, FingerParams};
 use finger_ann::finger::search::FingerHnsw;
-use finger_ann::graph::hnsw::{Hnsw, HnswParams};
-use finger_ann::graph::search::SearchStats;
-use finger_ann::graph::visited::VisitedSet;
+use finger_ann::graph::hnsw::HnswParams;
+use finger_ann::index::impls::{FingerHnswIndex, HnswIndex};
+use finger_ann::index::{AnnIndex, SearchContext, SearchParams};
 
 fn main() {
     for name in ["sift-sim-128", "gist-sim-960"] {
@@ -20,41 +22,51 @@ fn main() {
         println!("\n=== {} (n={}, dim={}) ===", spec.name, spec.n, spec.dim);
         let ds = spec.generate();
         let gt = exact_knn(&ds.data, &ds.queries, 10);
-        let hnsw = Hnsw::build(&ds.data, HnswParams { m: 16, ef_construction: 120, ..Default::default() });
-        let rank = if name.starts_with("gist") { 16 } else { 16 };
-        let fidx = FingerIndex::build(&ds.data, &hnsw.base, FingerParams { rank, ..Default::default() });
-        let fh = FingerHnsw { hnsw, index: fidx };
+        let hnsw = HnswIndex::build(
+            Arc::clone(&ds.data),
+            HnswParams { m: 16, ef_construction: 120, ..Default::default() },
+        );
+        let rank = 16;
+        let fidx = FingerIndex::build(
+            &ds.data,
+            &hnsw.graph.base,
+            FingerParams { rank, ..Default::default() },
+        );
+        let fh = FingerHnswIndex::from_parts(
+            Arc::clone(&ds.data),
+            FingerHnsw { hnsw: hnsw.graph, index: fidx },
+        );
 
-        let mut vis = VisitedSet::new(ds.data.rows());
+        let mut ctx = SearchContext::for_universe(ds.data.rows()).with_stats();
         println!(
             "{:<14} {:>5} {:>10} {:>10} {:>12} {:>12}",
             "method", "ef", "recall@10", "QPS", "us/query", "dist calls"
         );
         for ef in [20usize, 40, 80, 160] {
+            let params = SearchParams::new(10).with_ef(ef);
             for method in ["hnsw", "hnsw-finger"] {
+                let index: &dyn AnnIndex = &fh;
+                let search = |q: &[f32], ctx: &mut SearchContext| {
+                    if method == "hnsw" {
+                        fh.inner.hnsw.search(&ds.data, q, &params, ctx)
+                    } else {
+                        index.search(q, &params, ctx)
+                    }
+                };
                 // Warmup
                 for qi in 0..ds.queries.rows().min(8) {
-                    let q = ds.queries.row(qi);
-                    if method == "hnsw" {
-                        fh.hnsw.search(&ds.data, q, 10, ef, &mut vis, None);
-                    } else {
-                        fh.search(&ds.data, q, 10, ef, &mut vis, None);
-                    }
+                    search(ds.queries.row(qi), &mut ctx);
                 }
-                let mut stats = SearchStats::default();
+                ctx.reset_stats();
                 let mut rec = 0.0;
                 let t0 = Instant::now();
                 for qi in 0..ds.queries.rows() {
-                    let q = ds.queries.row(qi);
-                    let res = if method == "hnsw" {
-                        fh.hnsw.search(&ds.data, q, 10, ef, &mut vis, Some(&mut stats))
-                    } else {
-                        fh.search(&ds.data, q, 10, ef, &mut vis, Some(&mut stats))
-                    };
+                    let res = search(ds.queries.row(qi), &mut ctx);
                     rec += recall(&res, &gt[qi]);
                 }
                 let secs = t0.elapsed().as_secs_f64();
                 let nq = ds.queries.rows() as f64;
+                let stats = ctx.take_stats();
                 println!(
                     "{:<14} {:>5} {:>10.4} {:>10.0} {:>12.1} {:>12.0}",
                     method,

@@ -1,0 +1,130 @@
+//! Minimal error plumbing standing in for the `anyhow` crate — the build
+//! environment is fully offline, so the crate carries no external
+//! dependencies. Provides the same surface the runtime layer uses:
+//! [`Error`], [`Result`], the [`anyhow!`]/[`ensure!`] macros, and the
+//! [`Context`] extension trait.
+
+use std::fmt;
+
+/// A string-backed error with an optional chain of context frames.
+/// Context added later wraps earlier messages, so `Display` prints
+/// outermost-first, `: `-separated — matching `anyhow`'s `{:#}` format.
+pub struct Error {
+    msg: String,
+    /// Context frames, innermost first.
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error {
+            msg: m.to_string(),
+            chain: Vec::new(),
+        }
+    }
+
+    /// Wrap with an outer context frame.
+    pub fn wrap(mut self, c: impl fmt::Display) -> Error {
+        self.chain.push(c.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for c in self.chain.iter().rev() {
+            write!(f, "{c}: ")?;
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to any displayable error (mirrors `anyhow::Context`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string (mirrors `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::core::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an [`Error`] unless the condition holds (mirrors
+/// `anyhow::ensure!`).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::core::error::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::core::error::Error::msg(format!($($arg)+)));
+        }
+    };
+}
+
+pub use crate::{anyhow, ensure};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        ensure!(1 + 1 == 3, "math is broken: {}", 1 + 1);
+        Ok(7)
+    }
+
+    #[test]
+    fn macro_and_context_chain() {
+        let e = anyhow!("inner {}", 42);
+        let e = Result::<()>::Err(e).context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer: inner 42");
+        assert_eq!(format!("{e:#}"), "outer: inner 42");
+        assert_eq!(format!("{e:?}"), "outer: inner 42");
+    }
+
+    #[test]
+    fn ensure_returns_error() {
+        let e = fails().unwrap_err();
+        assert!(format!("{e}").contains("math is broken: 2"));
+    }
+
+    #[test]
+    fn with_context_on_io() {
+        let r: std::io::Result<()> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "gone",
+        ));
+        let e = r.with_context(|| format!("reading {}", "x.json")).unwrap_err();
+        assert_eq!(format!("{e}"), "reading x.json: gone");
+    }
+}

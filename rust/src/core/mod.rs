@@ -2,6 +2,7 @@
 //! statistics, and a minimal JSON codec.
 
 pub mod distance;
+pub mod error;
 pub mod json;
 pub mod linalg;
 pub mod matrix;

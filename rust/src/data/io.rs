@@ -115,6 +115,11 @@ impl<W: Write> BinWriter<W> {
         Ok(())
     }
 
+    pub fn u8_slice(&mut self, v: &[u8]) -> io::Result<()> {
+        self.u64(v.len() as u64)?;
+        self.w.write_all(v)
+    }
+
     pub fn matrix(&mut self, m: &Matrix) -> io::Result<()> {
         self.u64(m.rows() as u64)?;
         self.u64(m.cols() as u64)?;
@@ -156,6 +161,13 @@ impl<R: Read> BinReader<R> {
             .chunks_exact(4)
             .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
             .collect())
+    }
+
+    pub fn u8_slice(&mut self) -> io::Result<Vec<u8>> {
+        let n = self.u64()? as usize;
+        let mut buf = vec![0u8; n];
+        self.r.read_exact(&mut buf)?;
+        Ok(buf)
     }
 
     pub fn matrix(&mut self) -> io::Result<Matrix> {
@@ -213,6 +225,7 @@ mod tests {
             w.u64(42).unwrap();
             w.f32_slice(&[1.5, -2.5]).unwrap();
             w.u32_slice(&[9, 10, 11]).unwrap();
+            w.u8_slice(&[1, 2, 255]).unwrap();
             w.matrix(&Matrix::from_rows(&[vec![1.0, 2.0]])).unwrap();
         }
         {
@@ -220,6 +233,7 @@ mod tests {
             assert_eq!(r.u64().unwrap(), 42);
             assert_eq!(r.f32_slice().unwrap(), vec![1.5, -2.5]);
             assert_eq!(r.u32_slice().unwrap(), vec![9, 10, 11]);
+            assert_eq!(r.u8_slice().unwrap(), vec![1, 2, 255]);
             assert_eq!(r.matrix().unwrap().row(0), &[1.0, 2.0]);
         }
         std::fs::remove_file(&p).ok();

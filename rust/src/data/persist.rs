@@ -1,22 +1,41 @@
-//! Index persistence: save/load the HNSW graph and the FINGER side-index
-//! to a single binary file, so serving restarts skip the build (a
-//! production requirement; Table 1 builds are minutes at full scale).
+//! Index persistence: tagged `save_index`/`load_index` for every
+//! [`AnnIndex`](crate::index::AnnIndex) implementor, so serving restarts
+//! skip the build (a production requirement; Table 1 builds are minutes at
+//! full scale).
 //!
 //! Format (little-endian, length-prefixed; see `data::io::BinWriter`):
-//!   magic "FNGR" u32 | version u64 | section tags.
+//!   magic "FNGR" u64 | version u64 | kind tag u64 | data matrix |
+//!   family payload (written by the implementor's `save_payload`).
 
 use std::io;
 use std::path::Path;
+use std::sync::Arc;
 
-use crate::core::matrix::Matrix;
 use crate::data::io::{BinReader, BinWriter};
 use crate::finger::construct::{FingerIndex, FingerParams, MatchParams};
 use crate::finger::search::FingerHnsw;
 use crate::graph::adjacency::FlatAdj;
 use crate::graph::hnsw::{Hnsw, HnswParams};
+use crate::graph::nndescent::{NnDescent, NnDescentParams};
+use crate::graph::vamana::{Vamana, VamanaParams};
+use crate::index::impls::{
+    BruteForce, FingerHnswIndex, HnswIndex, IvfPqIndex, NnDescentIndex, VamanaIndex,
+};
+use crate::index::AnnIndex;
+use crate::quant::ivfpq::{IvfPq, IvfPqParams};
+use crate::quant::kmeans::KMeans;
+use crate::quant::pq::{Pq, PqParams};
 
 const MAGIC: u64 = 0x464E_4752; // "FNGR"
-const VERSION: u64 = 2;
+const VERSION: u64 = 3;
+
+/// Stable family tags (never renumber).
+pub const TAG_HNSW: u64 = 1;
+pub const TAG_FINGER: u64 = 2;
+pub const TAG_VAMANA: u64 = 3;
+pub const TAG_NNDESCENT: u64 = 4;
+pub const TAG_IVFPQ: u64 = 5;
+pub const TAG_BRUTEFORCE: u64 = 6;
 
 fn bad(msg: &str) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg)
@@ -48,6 +67,8 @@ fn read_adj<R: io::Read>(r: &mut BinReader<R>) -> io::Result<FlatAdj> {
     }
     Ok(a)
 }
+
+// ------------------------------------------------------ family payloads
 
 pub fn save_hnsw<W: io::Write>(w: &mut BinWriter<W>, h: &Hnsw) -> io::Result<()> {
     w.u64(h.params.m as u64)?;
@@ -153,30 +174,306 @@ pub fn load_finger<R: io::Read>(r: &mut BinReader<R>) -> io::Result<FingerIndex>
     })
 }
 
-/// Save a complete serving bundle: data matrix + HNSW + FINGER.
-pub fn save_bundle(path: &Path, data: &Matrix, fh: &FingerHnsw) -> io::Result<()> {
-    let mut w = BinWriter::new(io::BufWriter::new(std::fs::File::create(path)?));
-    w.u64(MAGIC)?;
-    w.u64(VERSION)?;
-    w.matrix(data)?;
-    save_hnsw(&mut w, &fh.hnsw)?;
-    save_finger(&mut w, &fh.index)
+pub fn save_vamana<W: io::Write>(w: &mut BinWriter<W>, v: &Vamana) -> io::Result<()> {
+    w.u64(v.params.r as u64)?;
+    w.u64(v.params.l as u64)?;
+    w.f32_slice(&[v.params.alpha])?;
+    w.u64(v.params.seed)?;
+    w.u64(v.params.passes as u64)?;
+    w.u64(v.medoid as u64)?;
+    write_adj(w, &v.adj)
 }
 
-/// Load a serving bundle saved by `save_bundle`.
-pub fn load_bundle(path: &Path) -> io::Result<(Matrix, FingerHnsw)> {
+pub fn load_vamana<R: io::Read>(r: &mut BinReader<R>) -> io::Result<Vamana> {
+    let rr = r.u64()? as usize;
+    let l = r.u64()? as usize;
+    let av = r.f32_slice()?;
+    if av.len() != 1 {
+        return Err(bad("vamana alpha"));
+    }
+    let seed = r.u64()?;
+    let passes = r.u64()? as usize;
+    let medoid = r.u64()? as u32;
+    let adj = read_adj(r)?;
+    Ok(Vamana {
+        params: VamanaParams {
+            r: rr,
+            l,
+            alpha: av[0],
+            seed,
+            passes,
+        },
+        adj,
+        medoid,
+    })
+}
+
+pub fn save_nndescent<W: io::Write>(w: &mut BinWriter<W>, g: &NnDescent) -> io::Result<()> {
+    w.u64(g.params.k as u64)?;
+    w.u64(g.params.sample as u64)?;
+    w.u64(g.params.iters as u64)?;
+    w.u64(g.params.degree as u64)?;
+    w.u64(g.params.seed)?;
+    w.u64(g.params.prune as u64)?;
+    w.u32_slice(&g.entry_probes)?;
+    write_adj(w, &g.adj)
+}
+
+pub fn load_nndescent<R: io::Read>(r: &mut BinReader<R>) -> io::Result<NnDescent> {
+    let k = r.u64()? as usize;
+    let sample = r.u64()? as usize;
+    let iters = r.u64()? as usize;
+    let degree = r.u64()? as usize;
+    let seed = r.u64()?;
+    let prune = r.u64()? != 0;
+    let entry_probes = r.u32_slice()?;
+    if entry_probes.is_empty() {
+        return Err(bad("nndescent entry probes"));
+    }
+    let adj = read_adj(r)?;
+    Ok(NnDescent {
+        params: NnDescentParams {
+            k,
+            sample,
+            iters,
+            degree,
+            seed,
+            prune,
+        },
+        adj,
+        entry_probes,
+    })
+}
+
+pub fn save_ivfpq<W: io::Write>(w: &mut BinWriter<W>, q: &IvfPq) -> io::Result<()> {
+    w.u64(q.params.n_list as u64)?;
+    w.u64(q.params.kmeans_iters as u64)?;
+    w.u64(q.params.seed)?;
+    w.matrix(&q.coarse.centroids)?;
+    w.u64(q.lists.len() as u64)?;
+    for list in &q.lists {
+        w.u32_slice(list)?;
+    }
+    // PQ: params, per-subspace codebooks, column ranges, codes.
+    w.u64(q.pq.params.n_sub as u64)?;
+    w.u64(q.pq.params.nbits as u64)?;
+    w.u64(q.pq.params.kmeans_iters as u64)?;
+    w.u64(q.pq.params.seed)?;
+    w.u64(q.pq.books.len() as u64)?;
+    for b in &q.pq.books {
+        w.matrix(&b.centroids)?;
+    }
+    let ranges: Vec<u32> = q
+        .pq
+        .ranges
+        .iter()
+        .flat_map(|&(lo, hi)| [lo as u32, hi as u32])
+        .collect();
+    w.u32_slice(&ranges)?;
+    w.u8_slice(&q.pq.codes)?;
+    w.u64(q.pq.n as u64)
+}
+
+pub fn load_ivfpq<R: io::Read>(r: &mut BinReader<R>) -> io::Result<IvfPq> {
+    let n_list = r.u64()? as usize;
+    let kmeans_iters = r.u64()? as usize;
+    let seed = r.u64()?;
+    let centroids = r.matrix()?;
+    let n_lists = r.u64()? as usize;
+    if n_lists != centroids.rows() {
+        return Err(bad("ivfpq list/centroid mismatch"));
+    }
+    let mut lists = Vec::with_capacity(n_lists);
+    for _ in 0..n_lists {
+        lists.push(r.u32_slice()?);
+    }
+    let n_sub = r.u64()? as usize;
+    let nbits = r.u64()? as usize;
+    let pq_iters = r.u64()? as usize;
+    let pq_seed = r.u64()?;
+    let n_books = r.u64()? as usize;
+    let mut books = Vec::with_capacity(n_books);
+    for _ in 0..n_books {
+        books.push(KMeans {
+            centroids: r.matrix()?,
+        });
+    }
+    let flat = r.u32_slice()?;
+    if flat.len() != 2 * n_books {
+        return Err(bad("ivfpq ranges"));
+    }
+    let ranges: Vec<(usize, usize)> = flat
+        .chunks_exact(2)
+        .map(|c| (c[0] as usize, c[1] as usize))
+        .collect();
+    let codes = r.u8_slice()?;
+    let n = r.u64()? as usize;
+    if codes.len() != n * n_books {
+        return Err(bad("ivfpq code shape"));
+    }
+    let pq_params = PqParams {
+        n_sub,
+        nbits,
+        kmeans_iters: pq_iters,
+        seed: pq_seed,
+    };
+    Ok(IvfPq {
+        params: IvfPqParams {
+            n_list,
+            pq: pq_params.clone(),
+            kmeans_iters,
+            seed,
+        },
+        coarse: KMeans { centroids },
+        lists,
+        pq: Pq {
+            params: pq_params,
+            books,
+            ranges,
+            codes,
+            n,
+        },
+    })
+}
+
+// ---------------------------------------------------- load-time validation
+//
+// Family loaders only check shapes they can see locally; `load_index`
+// additionally validates every stored node id against the data matrix, so
+// a corrupt file fails with `InvalidData` at load instead of panicking
+// out-of-bounds on the first query.
+
+fn check_id(id: u32, n: usize) -> io::Result<()> {
+    if id as usize >= n {
+        return Err(bad("node id out of range"));
+    }
+    Ok(())
+}
+
+fn check_adj(a: &FlatAdj, n: usize) -> io::Result<()> {
+    if a.n() != n {
+        return Err(bad("adjacency size mismatch"));
+    }
+    for u in 0..n as u32 {
+        if a.neighbors(u).iter().any(|&v| v as usize >= n) {
+            return Err(bad("edge id out of range"));
+        }
+    }
+    Ok(())
+}
+
+fn validate_hnsw(h: &Hnsw, n: usize) -> io::Result<()> {
+    check_id(h.entry, n)?;
+    if h.levels.len() != n {
+        return Err(bad("levels length mismatch"));
+    }
+    check_adj(&h.base, n)?;
+    for l in &h.upper {
+        check_adj(l, n)?;
+    }
+    Ok(())
+}
+
+fn validate_finger(f: &FingerIndex, h: &Hnsw, n: usize) -> io::Result<()> {
+    if f.rank == 0 || f.rank > crate::finger::approx::MAX_RANK {
+        return Err(bad("implausible finger rank"));
+    }
+    if f.c_norm.len() != n || f.c_sqnorm.len() != n || f.pc.len() != n * f.rank {
+        return Err(bad("finger per-node arrays mismatch"));
+    }
+    let slots = h.base.total_slots();
+    if f.edge_proj.len() != slots
+        || f.edge_res_norm.len() != slots
+        || f.edge_pres_norm.len() != slots
+        || f.edge_pres.len() != slots * f.rank
+    {
+        return Err(bad("finger per-edge arrays mismatch"));
+    }
+    Ok(())
+}
+
+fn validate_ivfpq(q: &IvfPq, n: usize, dim: usize) -> io::Result<()> {
+    for list in &q.lists {
+        for &id in list {
+            check_id(id, n)?;
+        }
+    }
+    if q.pq.n != n {
+        return Err(bad("pq row count mismatch"));
+    }
+    for &(lo, hi) in &q.pq.ranges {
+        if lo > hi || hi > dim {
+            return Err(bad("pq subspace range out of bounds"));
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------- tagged bundles
+
+/// Save any `AnnIndex` implementor: header + data matrix + family payload.
+pub fn save_index(path: &Path, index: &dyn AnnIndex) -> io::Result<()> {
+    let mut file = io::BufWriter::new(std::fs::File::create(path)?);
+    {
+        let sink: &mut dyn io::Write = &mut file;
+        let mut w = BinWriter::new(sink);
+        w.u64(MAGIC)?;
+        w.u64(VERSION)?;
+        w.u64(index.kind_tag())?;
+        w.matrix(index.data())?;
+        index.save_payload(&mut w)?;
+    }
+    io::Write::flush(&mut file)
+}
+
+/// Load an index saved by [`save_index`], dispatching on the kind tag.
+pub fn load_index(path: &Path) -> io::Result<Box<dyn AnnIndex>> {
     let mut r = BinReader::new(io::BufReader::new(std::fs::File::open(path)?));
     if r.u64()? != MAGIC {
-        return Err(bad("not a finger-ann bundle"));
+        return Err(bad("not a finger-ann index file"));
     }
     let version = r.u64()?;
     if version != VERSION {
-        return Err(bad("unsupported bundle version"));
+        return Err(bad("unsupported index version"));
     }
-    let data = r.matrix()?;
-    let hnsw = load_hnsw(&mut r)?;
-    let index = load_finger(&mut r)?;
-    Ok((data, FingerHnsw { hnsw, index }))
+    let tag = r.u64()?;
+    let data = Arc::new(r.matrix()?);
+    let n = data.rows();
+    Ok(match tag {
+        TAG_HNSW => {
+            let hnsw = load_hnsw(&mut r)?;
+            validate_hnsw(&hnsw, n)?;
+            Box::new(HnswIndex::from_parts(data, hnsw))
+        }
+        TAG_FINGER => {
+            let hnsw = load_hnsw(&mut r)?;
+            let index = load_finger(&mut r)?;
+            validate_hnsw(&hnsw, n)?;
+            validate_finger(&index, &hnsw, n)?;
+            Box::new(FingerHnswIndex::from_parts(data, FingerHnsw { hnsw, index }))
+        }
+        TAG_VAMANA => {
+            let v = load_vamana(&mut r)?;
+            check_id(v.medoid, n)?;
+            check_adj(&v.adj, n)?;
+            Box::new(VamanaIndex::from_parts(data, v))
+        }
+        TAG_NNDESCENT => {
+            let g = load_nndescent(&mut r)?;
+            for &p in &g.entry_probes {
+                check_id(p, n)?;
+            }
+            check_adj(&g.adj, n)?;
+            Box::new(NnDescentIndex::from_parts(data, g))
+        }
+        TAG_IVFPQ => {
+            let q = load_ivfpq(&mut r)?;
+            validate_ivfpq(&q, n, data.cols())?;
+            Box::new(IvfPqIndex::from_parts(data, q))
+        }
+        TAG_BRUTEFORCE => Box::new(BruteForce::new(data)),
+        _ => return Err(bad("unknown index kind tag")),
+    })
 }
 
 #[cfg(test)]
@@ -184,61 +481,83 @@ mod tests {
     use super::*;
     use crate::core::distance::Metric;
     use crate::data::synth::tiny;
-    use crate::graph::visited::VisitedSet;
+    use crate::graph::hnsw::HnswParams;
+    use crate::index::{SearchContext, SearchParams};
 
     fn tmp(name: &str) -> std::path::PathBuf {
         std::env::temp_dir().join(format!("finger_persist_{}_{name}", std::process::id()))
     }
 
     #[test]
-    fn bundle_roundtrip_preserves_search_results() {
-        let ds = tiny(401, 400, 24, Metric::L2);
-        let fh = FingerHnsw::build(
-            &ds.data,
-            HnswParams { m: 8, ef_construction: 60, ..Default::default() },
-            FingerParams { rank: 8, ..Default::default() },
-        );
-        let path = tmp("bundle.bin");
-        save_bundle(&path, &ds.data, &fh).unwrap();
-        let (data2, fh2) = load_bundle(&path).unwrap();
-        assert_eq!(ds.data, data2);
-
-        let mut vis = VisitedSet::new(ds.data.rows());
-        for qi in 0..ds.queries.rows() {
-            let q = ds.queries.row(qi);
-            let a = fh.search(&ds.data, q, 10, 60, &mut vis, None);
-            let b = fh2.search(&data2, q, 10, 60, &mut vis, None);
-            let ai: Vec<u32> = a.iter().map(|n| n.id).collect();
-            let bi: Vec<u32> = b.iter().map(|n| n.id).collect();
-            assert_eq!(ai, bi, "query {qi}");
+    fn roundtrip_preserves_search_results_for_every_family() {
+        let ds = tiny(401, 300, 16, Metric::L2);
+        let mut ctx = SearchContext::new();
+        let params = SearchParams::new(10).with_ef(40);
+        for index in crate::index::build_all_families(Arc::clone(&ds.data)) {
+            let path = tmp(&format!("{}.idx", index.name()));
+            save_index(&path, index.as_ref()).unwrap();
+            let loaded = load_index(&path).unwrap();
+            assert_eq!(loaded.name(), index.name());
+            assert_eq!(loaded.len(), index.len());
+            assert_eq!(loaded.dim(), index.dim());
+            for qi in 0..ds.queries.rows() {
+                let q = ds.queries.row(qi);
+                let a: Vec<u32> = index.search(q, &params, &mut ctx).iter().map(|n| n.id).collect();
+                let b: Vec<u32> = loaded.search(q, &params, &mut ctx).iter().map(|n| n.id).collect();
+                assert_eq!(a, b, "{} query {qi}", index.name());
+            }
+            std::fs::remove_file(&path).ok();
         }
-        std::fs::remove_file(&path).ok();
     }
 
     #[test]
     fn rejects_bad_magic() {
         let path = tmp("junk.bin");
         std::fs::write(&path, [0u8; 64]).unwrap();
-        assert!(load_bundle(&path).is_err());
+        assert!(load_index(&path).is_err());
         std::fs::remove_file(&path).ok();
     }
 
     #[test]
-    fn adjacency_roundtrip_preserves_slots() {
+    fn rejects_out_of_range_node_ids() {
+        let ds = tiny(403, 50, 4, Metric::L2);
+        let mut v = VamanaIndex::build(
+            Arc::clone(&ds.data),
+            VamanaParams { r: 8, ..Default::default() },
+        );
+        v.graph.medoid = 1000; // corrupt: points past the data matrix
+        let path = tmp("corrupt.idx");
+        save_index(&path, &v).unwrap();
+        let err = load_index(&path).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn finger_roundtrip_preserves_edge_slots() {
         let ds = tiny(402, 100, 8, Metric::L2);
-        let fh = FingerHnsw::build(
-            &ds.data,
+        let fh = FingerHnswIndex::build(
+            Arc::clone(&ds.data),
             HnswParams { m: 6, ef_construction: 30, ..Default::default() },
             FingerParams { rank: 8, ..Default::default() },
         );
-        let path = tmp("adj.bin");
-        save_bundle(&path, &ds.data, &fh).unwrap();
-        let (_, fh2) = load_bundle(&path).unwrap();
+        let path = tmp("adj.idx");
+        save_index(&path, &fh).unwrap();
+        let loaded = load_index(&path).unwrap();
+        assert_eq!(loaded.kind_tag(), TAG_FINGER);
+        // Downcast-free check: re-load through the family loader.
+        let mut r = BinReader::new(io::BufReader::new(std::fs::File::open(&path).unwrap()));
+        r.u64().unwrap(); // magic
+        r.u64().unwrap(); // version
+        r.u64().unwrap(); // tag
+        r.matrix().unwrap();
+        let hnsw2 = load_hnsw(&mut r).unwrap();
+        let index2 = load_finger(&mut r).unwrap();
         for u in 0..100u32 {
-            assert_eq!(fh.hnsw.base.neighbors(u), fh2.hnsw.base.neighbors(u));
-            for j in 0..fh.hnsw.base.degree(u) {
-                let s = fh.hnsw.base.edge_slot(u, j);
-                assert_eq!(fh.index.edge_proj[s], fh2.index.edge_proj[s]);
+            assert_eq!(fh.inner.hnsw.base.neighbors(u), hnsw2.base.neighbors(u));
+            for j in 0..fh.inner.hnsw.base.degree(u) {
+                let s = fh.inner.hnsw.base.edge_slot(u, j);
+                assert_eq!(fh.inner.index.edge_proj[s], index2.edge_proj[s]);
             }
         }
         std::fs::remove_file(&path).ok();

@@ -9,16 +9,20 @@
 //! explicitly: each cluster is `center + A·z + σ·noise` with `A` an
 //! (ambient × intrinsic) random map and `z` standard normal.
 
+use std::sync::Arc;
+
 use crate::core::distance::{normalize, Metric};
 use crate::core::matrix::Matrix;
 use crate::core::rng::Pcg32;
 
-/// A fully materialized benchmark dataset.
+/// A fully materialized benchmark dataset. The base matrix is behind an
+/// `Arc` so every index built over it shares one copy (the `AnnIndex`
+/// implementors hold `Arc<Matrix>` handles).
 #[derive(Clone, Debug)]
 pub struct Dataset {
     pub name: String,
     pub metric: Metric,
-    pub data: Matrix,
+    pub data: Arc<Matrix>,
     pub queries: Matrix,
 }
 
@@ -98,7 +102,7 @@ impl SynthSpec {
         Dataset {
             name: self.name.clone(),
             metric: self.metric,
-            data,
+            data: Arc::new(data),
             queries,
         }
     }

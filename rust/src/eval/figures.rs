@@ -1,8 +1,12 @@
 //! Figure/table harnesses: one function per paper artifact, each writing
 //! CSV series into the results directory and printing a summary table.
-//! DESIGN.md §3 maps figure → harness → modules.
+//! The README's layer map links figure → harness → modules.
+//!
+//! Every searchable thing here goes through `&dyn AnnIndex` + the shared
+//! sweep harness — no per-family glue.
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::core::distance::{cosine, dot, norm_sq};
@@ -15,11 +19,14 @@ use crate::finger::construct::{FingerIndex, FingerParams};
 use crate::finger::rplsh::build_rplsh_index;
 use crate::finger::search::FingerHnsw;
 use crate::graph::hnsw::{Hnsw, HnswParams};
-use crate::graph::nndescent::{NnDescent, NnDescentParams};
+use crate::graph::nndescent::NnDescentParams;
 use crate::graph::search::SearchStats;
-use crate::graph::vamana::{Vamana, VamanaParams};
-use crate::graph::visited::VisitedSet;
-use crate::quant::ivfpq::{IvfPq, IvfPqParams};
+use crate::graph::vamana::VamanaParams;
+use crate::index::impls::{
+    FingerHnswIndex, FingerView, HnswIndex, IvfPqIndex, NnDescentIndex, VamanaIndex,
+};
+use crate::index::{SearchContext, SearchParams};
+use crate::quant::ivfpq::IvfPqParams;
 
 pub fn write_csv(dir: &Path, name: &str, content: &str) {
     std::fs::create_dir_all(dir).ok();
@@ -70,36 +77,48 @@ pub fn figure5(out: &Path, scale: f64, with_rplsh: bool) {
 
         let hnsw_params = HnswParams { m: 16, ef_construction: 120, ..Default::default() };
         let t0 = Instant::now();
-        let hnsw = Hnsw::build(&ds.data, hnsw_params.clone());
+        let hnsw = HnswIndex::build(Arc::clone(&ds.data), hnsw_params);
         println!("  hnsw built in {:.1}s", t0.elapsed().as_secs_f64());
-        points.extend(sweep::sweep_hnsw(&ds, &gt, &hnsw, DEFAULT_EFS, 10));
+        points.extend(sweep::sweep_efs(&hnsw, &ds.queries, &gt, 10, DEFAULT_EFS));
 
         let t0 = Instant::now();
-        let findex = FingerIndex::build(&ds.data, &hnsw.base, FingerParams { rank, ..Default::default() });
+        let findex =
+            FingerIndex::build(&ds.data, &hnsw.graph.base, FingerParams { rank, ..Default::default() });
         println!(
             "  finger index (r={rank}) built in {:.1}s, corr={:.3}",
             t0.elapsed().as_secs_f64(),
             findex.matching.correlation
         );
-        let fh = FingerHnsw { hnsw, index: findex };
-        points.extend(sweep::sweep_finger(&ds, &gt, &fh, DEFAULT_EFS, 10, "hnsw-finger"));
+        let fh = FingerHnswIndex::from_parts(
+            Arc::clone(&ds.data),
+            FingerHnsw { hnsw: hnsw.graph, index: findex },
+        );
+        points.extend(sweep::sweep_efs(&fh, &ds.queries, &gt, 10, DEFAULT_EFS));
 
         if with_rplsh {
-            let ridx = build_rplsh_index(&ds.data, &fh.hnsw.base, FingerParams { rank, ..Default::default() });
-            let rh = FingerHnsw { hnsw: fh.hnsw, index: ridx };
-            points.extend(sweep::sweep_finger(&ds, &gt, &rh, DEFAULT_EFS, 10, "hnsw-rplsh"));
-            // fh moved; rebuild for the remaining baselines is unnecessary.
+            let ridx = build_rplsh_index(
+                &ds.data,
+                &fh.inner.hnsw.base,
+                FingerParams { rank, ..Default::default() },
+            );
+            let rh = FingerView {
+                data: &ds.data,
+                hnsw: &fh.inner.hnsw,
+                findex: &ridx,
+                label: "hnsw-rplsh",
+            };
+            points.extend(sweep::sweep_efs(&rh, &ds.queries, &gt, 10, DEFAULT_EFS));
         }
 
         let t0 = Instant::now();
-        let vam = Vamana::build(&ds.data, VamanaParams::default());
+        let vam = VamanaIndex::build(Arc::clone(&ds.data), VamanaParams::default());
         println!("  vamana built in {:.1}s", t0.elapsed().as_secs_f64());
-        points.extend(sweep::sweep_vamana(&ds, &gt, &vam, DEFAULT_EFS, 10));
+        points.extend(sweep::sweep_efs(&vam, &ds.queries, &gt, 10, DEFAULT_EFS));
 
         let t0 = Instant::now();
-        let nnd = NnDescent::build(&ds.data, NnDescentParams::default());
+        let nnd = NnDescentIndex::build(Arc::clone(&ds.data), NnDescentParams::default());
         println!("  nndescent built in {:.1}s", t0.elapsed().as_secs_f64());
-        points.extend(sweep::sweep_nndescent(&ds, &gt, &nnd, DEFAULT_EFS, 10));
+        points.extend(sweep::sweep_efs(&nnd, &ds.queries, &gt, 10, DEFAULT_EFS));
 
         print_points(&points);
         let fname = format!(
@@ -132,13 +151,12 @@ pub fn figure2(out: &Path, scale: f64) {
         let spec = crate::data::synth::spec_by_name(name, scale).unwrap();
         let (ds, _gt) = materialize(&spec);
         let h = Hnsw::build(&ds.data, HnswParams { m: 16, ef_construction: 120, ..Default::default() });
-        let mut vis = VisitedSet::new(ds.data.rows());
-        let mut agg = SearchStats::default();
+        let mut ctx = SearchContext::new().with_stats();
+        let params = SearchParams::new(10).with_ef(128);
         for qi in 0..ds.queries.rows() {
-            let mut st = SearchStats::default();
-            h.search(&ds.data, ds.queries.row(qi), 10, 128, &mut vis, Some(&mut st));
-            agg.merge(&st);
+            h.search(&ds.data, ds.queries.row(qi), &params, &mut ctx);
         }
+        let agg: SearchStats = ctx.take_stats();
         // Bucket per-hop counts into deciles of the search.
         let hops = agg.per_hop.len().max(1);
         let mut deciles = vec![(0u64, 0u64); 10];
@@ -287,7 +305,8 @@ pub fn figure4(out: &Path, scale: f64) {
 
 /// Figure 6: ablation — approximation error and recall vs effective
 /// distance calls, FINGER vs RPLSH, each with and without distribution
-/// matching, sweeping rank.
+/// matching, sweeping rank. One shared graph, many side-index variants,
+/// all searched through the borrowed `FingerView` implementor.
 pub fn figure6(out: &Path, scale: f64) {
     println!("== Figure 6: ablation (FINGER vs RPLSH, +/- distribution matching) ==");
     let mut err_csv = String::from("dataset,scheme,rank,approx_error_pct,effective_ratio\n");
@@ -340,8 +359,13 @@ pub fn figure6(out: &Path, scale: f64) {
                 ));
 
                 // Recall vs effective calls (shared graph, screened search).
-                let pts =
-                    sweep::sweep_finger_borrowed(&ds, &gt, &hnsw, &idx, &[20, 60, 160], 10, scheme);
+                let view = FingerView {
+                    data: &ds.data,
+                    hnsw: &hnsw,
+                    findex: &idx,
+                    label: scheme,
+                };
+                let pts = sweep::sweep_efs(&view, &ds.queries, &gt, 10, &[20, 60, 160]);
                 for p in &pts {
                     rec_csv.push_str(&format!(
                         "{name},{scheme},{rank},{},{:.4},{:.1}\n",
@@ -369,18 +393,20 @@ pub fn figure7(out: &Path, scale: f64) {
         let (ds, gt) = materialize(&spec);
         let mut points = Vec::new();
 
-        let hnsw = Hnsw::build(&ds.data, HnswParams { m: 16, ef_construction: 120, ..Default::default() });
         let rank = paper_rank(&ds.name);
-        let fidx = FingerIndex::build(&ds.data, &hnsw.base, FingerParams { rank, ..Default::default() });
-        let fh = FingerHnsw { hnsw, index: fidx };
-        points.extend(sweep::sweep_finger(&ds, &gt, &fh, DEFAULT_EFS, 10, "hnsw-finger"));
+        let fh = FingerHnswIndex::build(
+            Arc::clone(&ds.data),
+            HnswParams { m: 16, ef_construction: 120, ..Default::default() },
+            FingerParams { rank, ..Default::default() },
+        );
+        points.extend(sweep::sweep_efs(&fh, &ds.queries, &gt, 10, DEFAULT_EFS));
 
         let nlist = (ds.data.rows() as f64).sqrt() as usize;
-        let ivf = IvfPq::train(
-            &ds.data,
+        let ivf = IvfPqIndex::build(
+            Arc::clone(&ds.data),
             IvfPqParams { n_list: nlist.max(16), ..Default::default() },
         );
-        points.extend(sweep::sweep_ivfpq(&ds, &gt, &ivf, &[1, 2, 4, 8, 16, 32], 10));
+        points.extend(sweep::sweep_probes(&ivf, &ds.queries, &gt, 10, &[1, 2, 4, 8, 16, 32]));
 
         print_points(&points);
         write_csv(out, &format!("figure7_{}.csv", ds.name), &sweep::to_csv(&points));

@@ -1,20 +1,17 @@
-//! ANN-benchmark-style sweeps: run a method across its search-time
-//! hyper-parameter grid, measuring throughput (single-thread QPS) and
+//! ANN-benchmark-style sweeps: run any [`AnnIndex`] across a grid of
+//! [`SearchParams`], measuring throughput (single-thread QPS) and
 //! recall@10 at each point — the data behind every throughput/recall
 //! curve in the paper (Figures 1, 5, 7, 8).
+//!
+//! The old per-family closure shims (`SearchFn`) are gone: the harness
+//! sweeps `&dyn AnnIndex` directly, so any implementor — including ones
+//! loaded from disk — gets a curve with zero glue code.
 
 use std::time::Instant;
 
 use crate::core::matrix::Matrix;
-use crate::data::synth::Dataset;
 use crate::eval::recall::recall;
-use crate::finger::search::FingerHnsw;
-use crate::graph::hnsw::Hnsw;
-use crate::graph::nndescent::NnDescent;
-use crate::graph::search::SearchStats;
-use crate::graph::vamana::Vamana;
-use crate::graph::visited::VisitedSet;
-use crate::quant::ivfpq::IvfPq;
+use crate::index::{AnnIndex, SearchContext, SearchParams};
 
 /// One measured point of a throughput/recall curve.
 #[derive(Clone, Debug)]
@@ -48,41 +45,58 @@ impl SweepPoint {
     }
 }
 
-/// Generic searcher closure signature: (query, ef, visited, stats) -> ids.
-type SearchFn<'a> = dyn Fn(&[f32], usize, &mut VisitedSet, &mut SearchStats) -> Vec<crate::graph::search::Neighbor>
-    + 'a;
+pub const DEFAULT_EFS: &[usize] = &[10, 20, 40, 80, 160, 320];
+pub const DEFAULT_PROBES: &[usize] = &[1, 2, 4, 8, 16, 32];
 
-fn run_sweep(
-    method: &str,
-    data: &Matrix,
+/// `ef`-grid for graph families: one labeled params per beam width.
+pub fn ef_grid(k: usize, efs: &[usize]) -> Vec<(String, SearchParams)> {
+    efs.iter()
+        .map(|&ef| (format!("ef={ef}"), SearchParams::new(k).with_ef(ef)))
+        .collect()
+}
+
+/// `n_probe`-grid for IVF-PQ.
+pub fn probe_grid(k: usize, probes: &[usize]) -> Vec<(String, SearchParams)> {
+    probes
+        .iter()
+        .map(|&p| (format!("nprobe={p}"), SearchParams::new(k).with_probes(p)))
+        .collect()
+}
+
+/// Sweep `index` over a labeled parameter grid. `label` overrides the
+/// index's own name in the output (useful for ablation variants); pass
+/// `None` to use `index.name()`.
+pub fn run_sweep(
+    label: Option<&str>,
+    index: &dyn AnnIndex,
     queries: &Matrix,
     gt: &[Vec<u32>],
     k: usize,
-    efs: &[usize],
-    rank: usize,
-    search: &SearchFn,
+    grid: &[(String, SearchParams)],
 ) -> Vec<SweepPoint> {
-    let mut vis = VisitedSet::new(data.rows());
-    let m = data.cols();
+    let method = label.unwrap_or_else(|| index.name());
+    let m = index.dim();
+    let rank = index.approx_rank();
+    let mut ctx = SearchContext::for_universe(index.len()).with_stats();
     let mut out = Vec::new();
-    for &ef in efs {
-        // Warmup pass (stabilizes caches), then timed pass.
+    for (param_label, params) in grid {
+        // Warmup pass (stabilizes caches and pooled buffers), then timed.
         for qi in 0..queries.rows().min(8) {
-            let mut st = SearchStats::default();
-            search(queries.row(qi), ef, &mut vis, &mut st);
+            index.search(queries.row(qi), params, &mut ctx);
         }
-        let mut stats = SearchStats::default();
+        ctx.reset_stats();
         let mut total_recall = 0.0;
         let t0 = Instant::now();
         for qi in 0..queries.rows() {
-            let res = search(queries.row(qi), ef, &mut vis, &mut stats);
+            let res = index.search(queries.row(qi), params, &mut ctx);
             total_recall += recall(&res[..res.len().min(k)], &gt[qi]);
         }
         let secs = t0.elapsed().as_secs_f64();
         let nq = queries.rows() as f64;
+        let stats = ctx.take_stats();
         out.push(SweepPoint {
             method: method.to_string(),
-            param: format!("ef={ef}"),
+            param: param_label.clone(),
             recall10: total_recall / nq,
             qps: nq / secs.max(1e-9),
             mean_full_dist_calls: stats.dist_calls as f64 / nq,
@@ -93,131 +107,26 @@ fn run_sweep(
     out
 }
 
-pub const DEFAULT_EFS: &[usize] = &[10, 20, 40, 80, 160, 320];
-
-pub fn sweep_hnsw(ds: &Dataset, gt: &[Vec<u32>], h: &Hnsw, efs: &[usize], k: usize) -> Vec<SweepPoint> {
-    run_sweep(
-        "hnsw",
-        &ds.data,
-        &ds.queries,
-        gt,
-        k,
-        efs,
-        0,
-        &|q, ef, vis, st| h.search(&ds.data, q, k, ef, vis, Some(st)),
-    )
-}
-
-pub fn sweep_finger(
-    ds: &Dataset,
+/// Convenience: sweep a graph-family index over the default `ef` grid.
+pub fn sweep_efs(
+    index: &dyn AnnIndex,
+    queries: &Matrix,
     gt: &[Vec<u32>],
-    f: &FingerHnsw,
-    efs: &[usize],
     k: usize,
-    label: &str,
-) -> Vec<SweepPoint> {
-    run_sweep(
-        label,
-        &ds.data,
-        &ds.queries,
-        gt,
-        k,
-        efs,
-        f.index.rank,
-        &|q, ef, vis, st| f.search(&ds.data, q, k, ef, vis, Some(st)),
-    )
-}
-
-/// Like `sweep_finger` but over borrowed (graph, index) — lets ablations
-/// share one graph across many index variants.
-pub fn sweep_finger_borrowed(
-    ds: &Dataset,
-    gt: &[Vec<u32>],
-    hnsw: &Hnsw,
-    index: &crate::finger::construct::FingerIndex,
     efs: &[usize],
-    k: usize,
-    label: &str,
 ) -> Vec<SweepPoint> {
-    run_sweep(
-        label,
-        &ds.data,
-        &ds.queries,
-        gt,
-        k,
-        efs,
-        index.rank,
-        &|q, ef, vis, st| {
-            crate::finger::search::search_hnsw_with_index(
-                hnsw, index, &ds.data, q, k, ef, vis, Some(st),
-            )
-        },
-    )
+    run_sweep(None, index, queries, gt, k, &ef_grid(k, efs))
 }
 
-pub fn sweep_vamana(ds: &Dataset, gt: &[Vec<u32>], v: &Vamana, efs: &[usize], k: usize) -> Vec<SweepPoint> {
-    run_sweep(
-        "vamana",
-        &ds.data,
-        &ds.queries,
-        gt,
-        k,
-        efs,
-        0,
-        &|q, ef, vis, st| v.search(&ds.data, q, k, ef, vis, Some(st)),
-    )
-}
-
-pub fn sweep_nndescent(
-    ds: &Dataset,
+/// Convenience: sweep IVF-PQ over an `n_probe` grid.
+pub fn sweep_probes(
+    index: &dyn AnnIndex,
+    queries: &Matrix,
     gt: &[Vec<u32>],
-    g: &NnDescent,
-    efs: &[usize],
     k: usize,
-) -> Vec<SweepPoint> {
-    run_sweep(
-        "nndescent",
-        &ds.data,
-        &ds.queries,
-        gt,
-        k,
-        efs,
-        0,
-        &|q, ef, vis, st| g.search(&ds.data, q, k, ef, vis, Some(st)),
-    )
-}
-
-/// IVF-PQ sweeps over n_probe rather than ef.
-pub fn sweep_ivfpq(
-    ds: &Dataset,
-    gt: &[Vec<u32>],
-    ivf: &IvfPq,
     probes: &[usize],
-    k: usize,
 ) -> Vec<SweepPoint> {
-    let mut out = Vec::new();
-    let nq = ds.queries.rows() as f64;
-    for &p in probes {
-        let mut total_recall = 0.0;
-        let mut scored_total = 0u64;
-        let t0 = Instant::now();
-        for qi in 0..ds.queries.rows() {
-            let (res, scored) = ivf.search(&ds.data, ds.queries.row(qi), k, p, 10 * k);
-            scored_total += scored;
-            total_recall += recall(&res, &gt[qi]);
-        }
-        let secs = t0.elapsed().as_secs_f64();
-        out.push(SweepPoint {
-            method: "ivfpq".into(),
-            param: format!("nprobe={p}"),
-            recall10: total_recall / nq,
-            qps: nq / secs.max(1e-9),
-            mean_full_dist_calls: (10 * k) as f64,
-            mean_approx_calls: scored_total as f64 / nq,
-            effective_dist_calls: 0.0,
-        });
-    }
-    out
+    run_sweep(None, index, queries, gt, k, &probe_grid(k, probes))
 }
 
 /// Write points as CSV.
@@ -238,17 +147,50 @@ mod tests {
     use crate::data::groundtruth::exact_knn;
     use crate::data::synth::tiny;
     use crate::graph::hnsw::HnswParams;
+    use crate::index::impls::{BruteForce, HnswIndex, IvfPqIndex};
+    use crate::quant::ivfpq::IvfPqParams;
+    use std::sync::Arc;
 
     #[test]
     fn sweep_recall_monotone_in_ef() {
         let ds = tiny(111, 500, 16, Metric::L2);
-        let h = Hnsw::build(&ds.data, HnswParams { m: 8, ef_construction: 60, ..Default::default() });
+        let h = HnswIndex::build(
+            Arc::clone(&ds.data),
+            HnswParams { m: 8, ef_construction: 60, ..Default::default() },
+        );
         let gt = exact_knn(&ds.data, &ds.queries, 10);
-        let pts = sweep_hnsw(&ds, &gt, &h, &[10, 160], 10);
+        let pts = sweep_efs(&h, &ds.queries, &gt, 10, &[10, 160]);
         assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].method, "hnsw");
         assert!(pts[1].recall10 >= pts[0].recall10 - 0.02);
         assert!(pts[0].qps > 0.0);
         assert!(pts[1].mean_full_dist_calls > pts[0].mean_full_dist_calls);
+    }
+
+    #[test]
+    fn same_harness_sweeps_every_kind() {
+        let ds = tiny(112, 300, 16, Metric::L2);
+        let gt = exact_knn(&ds.data, &ds.queries, 10);
+        let bf = BruteForce::new(Arc::clone(&ds.data));
+        let ivf = IvfPqIndex::build(
+            Arc::clone(&ds.data),
+            IvfPqParams { n_list: 8, ..Default::default() },
+        );
+        let indexes: Vec<&dyn AnnIndex> = vec![&bf, &ivf];
+        for index in indexes {
+            let grid = if index.name() == "ivfpq" {
+                probe_grid(10, &[2, 8])
+            } else {
+                ef_grid(10, &[10])
+            };
+            let pts = run_sweep(None, index, &ds.queries, &gt, 10, &grid);
+            assert!(!pts.is_empty());
+            assert_eq!(pts[0].method, index.name());
+            assert!(pts.iter().all(|p| p.recall10 > 0.0));
+        }
+        // Brute force is exact by construction.
+        let pts = sweep_efs(&bf, &ds.queries, &gt, 10, &[10]);
+        assert!((pts[0].recall10 - 1.0).abs() < 1e-9);
     }
 
     #[test]

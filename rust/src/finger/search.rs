@@ -8,18 +8,15 @@
 //! logic is unchanged and the search cannot stop early due to
 //! approximation error).
 
-use std::collections::BinaryHeap;
-
 use crate::core::distance::l2_sq;
 use crate::core::matrix::Matrix;
 use crate::finger::approx::{approx_dist_sq, QueryCenter, QueryState};
 use crate::finger::construct::FingerIndex;
 use crate::graph::adjacency::FlatAdj;
-use crate::graph::search::{MinNeighbor, Neighbor, SearchStats};
-use crate::graph::visited::VisitedSet;
+use crate::graph::search::{MinNeighbor, Neighbor};
+use crate::index::context::{SearchContext, SearchParams};
 
 /// FINGER-screened beam search over one adjacency layer.
-#[allow(clippy::too_many_arguments)]
 pub fn finger_beam_search(
     data: &Matrix,
     adj: &FlatAdj,
@@ -27,96 +24,85 @@ pub fn finger_beam_search(
     entry: u32,
     q: &[f32],
     ef: usize,
-    visited: &mut VisitedSet,
-    mut stats: Option<&mut SearchStats>,
+    ctx: &mut SearchContext,
 ) -> Vec<Neighbor> {
-    visited.clear();
-    visited.insert(entry);
+    ctx.begin(data.rows());
+    ctx.visited.insert(entry);
     let qs = QueryState::new(index, q);
     let d0 = l2_sq(q, data.row(entry as usize));
-    if let Some(s) = stats.as_deref_mut() {
-        s.dist_calls += 1;
+    if ctx.stats_enabled {
+        ctx.stats.dist_calls += 1;
     }
 
-    let mut cands: BinaryHeap<MinNeighbor> = BinaryHeap::new();
-    let mut top: BinaryHeap<Neighbor> = BinaryHeap::new();
-    cands.push(MinNeighbor(Neighbor { dist: d0, id: entry }));
-    top.push(Neighbor { dist: d0, id: entry });
+    ctx.cands.push(MinNeighbor(Neighbor { dist: d0, id: entry }));
+    ctx.top.push(Neighbor { dist: d0, id: entry });
 
-    while let Some(MinNeighbor(cur)) = cands.pop() {
-        let ub = top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
-        if cur.dist > ub && top.len() >= ef {
+    while let Some(MinNeighbor(cur)) = ctx.cands.pop() {
+        let ub = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
+        if cur.dist > ub && ctx.top.len() >= ef {
             break;
         }
-        if let Some(s) = stats.as_deref_mut() {
-            s.hops += 1;
+        if ctx.stats_enabled {
+            ctx.stats.hops += 1;
         }
         // Lazily built: only pay the query-center setup if we actually
         // screen at least one neighbor approximately.
         let mut qc: Option<QueryCenter> = None;
         for (j, &nb) in adj.neighbors(cur.id).iter().enumerate() {
-            if !visited.insert(nb) {
+            if !ctx.visited.insert(nb) {
                 continue;
             }
-            let ub_now = top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
-            let full = top.len() >= ef;
+            let ub_now = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
+            let full = ctx.top.len() >= ef;
             if full {
                 // Screen with Algorithm 3 before paying the m-dim distance.
                 let qc = qc.get_or_insert_with(|| QueryCenter::new(index, &qs, cur.id, cur.dist));
                 let slot = adj.edge_slot(cur.id, j);
                 let approx = approx_dist_sq(index, qc, slot);
-                if let Some(s) = stats.as_deref_mut() {
-                    s.approx_calls += 1;
+                if ctx.stats_enabled {
+                    ctx.stats.approx_calls += 1;
                 }
                 if approx > ub_now {
                     continue; // screened out: skip the exact computation
                 }
             }
             let d = l2_sq(q, data.row(nb as usize));
-            if let Some(s) = stats.as_deref_mut() {
-                s.dist_calls += 1;
+            if ctx.stats_enabled {
+                ctx.stats.dist_calls += 1;
             }
             if !full || d < ub_now {
-                cands.push(MinNeighbor(Neighbor { dist: d, id: nb }));
-                top.push(Neighbor { dist: d, id: nb });
-                if top.len() > ef {
-                    top.pop();
+                ctx.cands.push(MinNeighbor(Neighbor { dist: d, id: nb }));
+                ctx.top.push(Neighbor { dist: d, id: nb });
+                if ctx.top.len() > ef {
+                    ctx.top.pop();
                 }
             }
         }
     }
 
-    let mut out: Vec<Neighbor> = top.into_vec();
-    out.sort();
-    out
+    ctx.drain_top()
 }
 
 /// FINGER-screened HNSW search over *borrowed* graph + index (lets callers
 /// share one graph across many FINGER/RPLSH index variants — the Figure 6
 /// ablation sweeps dozens of (rank, scheme) combinations on one graph).
+///
+/// `params.patience` is ignored: screening already cheapens the work that
+/// early termination would skip, and mixing both would change Algorithm 4.
 pub fn search_hnsw_with_index(
     hnsw: &crate::graph::hnsw::Hnsw,
     index: &FingerIndex,
     data: &Matrix,
     q: &[f32],
-    k: usize,
-    ef: usize,
-    visited: &mut VisitedSet,
-    mut stats: Option<&mut SearchStats>,
+    params: &SearchParams,
+    ctx: &mut SearchContext,
 ) -> Vec<Neighbor> {
     let mut cur = hnsw.entry;
     for l in (1..=hnsw.max_level).rev() {
-        cur = crate::graph::search::greedy_descent(
-            data,
-            &hnsw.upper[l - 1],
-            cur,
-            q,
-            stats.as_deref_mut(),
-        )
-        .id;
+        cur = crate::graph::search::greedy_descent(data, &hnsw.upper[l - 1], cur, q, ctx).id;
     }
-    let mut res = finger_beam_search(data, &hnsw.base, index, cur, q, ef.max(k), visited, stats);
-    res.truncate(k);
+    let mut res = finger_beam_search(data, &hnsw.base, index, cur, q, params.beam_width(), ctx);
+    res.truncate(params.k);
     res
 }
 
@@ -143,12 +129,10 @@ impl FingerHnsw {
         &self,
         data: &Matrix,
         q: &[f32],
-        k: usize,
-        ef: usize,
-        visited: &mut VisitedSet,
-        stats: Option<&mut SearchStats>,
+        params: &SearchParams,
+        ctx: &mut SearchContext,
     ) -> Vec<Neighbor> {
-        search_hnsw_with_index(&self.hnsw, &self.index, data, q, k, ef, visited, stats)
+        search_hnsw_with_index(&self.hnsw, &self.index, data, q, params, ctx)
     }
 
     /// Total index bytes: graph adjacency + FINGER tables.
@@ -171,13 +155,12 @@ mod tests {
         ds: &crate::data::synth::Dataset,
         gt: &[Vec<u32>],
         ef: usize,
-        stats: Option<&mut SearchStats>,
+        ctx: &mut SearchContext,
     ) -> f64 {
-        let mut vis = VisitedSet::new(ds.data.rows());
+        let params = SearchParams::new(10).with_ef(ef);
         let mut total = 0.0;
-        let mut stats = stats;
         for qi in 0..ds.queries.rows() {
-            let res = fh.search(&ds.data, ds.queries.row(qi), 10, ef, &mut vis, stats.as_deref_mut());
+            let res = fh.search(&ds.data, ds.queries.row(qi), &params, ctx);
             let hits = res.iter().filter(|n| gt[qi].contains(&n.id)).count();
             total += hits as f64 / 10.0;
         }
@@ -193,7 +176,8 @@ mod tests {
             FingerParams { rank: 16, ..Default::default() },
         );
         let gt = exact_knn(&ds.data, &ds.queries, 10);
-        let r = avg_recall(&fh, &ds, &gt, 80, None);
+        let mut ctx = SearchContext::new();
+        let r = avg_recall(&fh, &ds, &gt, 80, &mut ctx);
         assert!(r > 0.85, "recall@10 = {r}");
     }
 
@@ -204,15 +188,16 @@ mod tests {
         let fh = FingerHnsw::build(&ds.data, hnsw_p.clone(), FingerParams { rank: 8, ..Default::default() });
         let gt = exact_knn(&ds.data, &ds.queries, 10);
 
-        let mut finger_stats = SearchStats::default();
-        let r_f = avg_recall(&fh, &ds, &gt, 60, Some(&mut finger_stats));
+        let mut ctx = SearchContext::new().with_stats();
+        let r_f = avg_recall(&fh, &ds, &gt, 60, &mut ctx);
+        let finger_stats = ctx.take_stats();
 
         // Baseline: plain HNSW search on the same graph.
-        let mut vis = VisitedSet::new(ds.data.rows());
-        let mut plain_stats = SearchStats::default();
+        let params = SearchParams::new(10).with_ef(60);
         for qi in 0..ds.queries.rows() {
-            fh.hnsw.search(&ds.data, ds.queries.row(qi), 10, 60, &mut vis, Some(&mut plain_stats));
+            fh.hnsw.search(&ds.data, ds.queries.row(qi), &params, &mut ctx);
         }
+        let plain_stats = ctx.take_stats();
 
         assert!(
             finger_stats.dist_calls < plain_stats.dist_calls,
@@ -232,8 +217,8 @@ mod tests {
             HnswParams { m: 8, ef_construction: 40, ..Default::default() },
             FingerParams { rank: 8, ..Default::default() },
         );
-        let mut vis = VisitedSet::new(ds.data.rows());
-        let res = fh.search(&ds.data, ds.queries.row(0), 10, 50, &mut vis, None);
+        let mut ctx = SearchContext::new();
+        let res = fh.search(&ds.data, ds.queries.row(0), &SearchParams::new(10).with_ef(50), &mut ctx);
         for w in res.windows(2) {
             assert!(w[0].dist <= w[1].dist);
         }
@@ -252,7 +237,8 @@ mod tests {
             FingerParams { rank: 8, ..Default::default() },
         );
         let gt = exact_knn(&ds.data, &ds.queries, 10);
-        let r = avg_recall(&fh, &ds, &gt, 60, None);
+        let mut ctx = SearchContext::new();
+        let r = avg_recall(&fh, &ds, &gt, 60, &mut ctx);
         assert!(r > 0.8, "angular recall@10 = {r}");
     }
 }

@@ -5,19 +5,17 @@
 //! consecutive node expansions that fail to improve the top-k upper
 //! bound. We use a fixed patience (the paper's learned predictor is
 //! approximated by its best static setting) — it is the natural
-//! alternative strategy to FINGER and a useful comparison series.
-
-use std::collections::BinaryHeap;
+//! alternative strategy to FINGER and a useful comparison series. Reach it
+//! uniformly via `SearchParams::with_patience` on any graph family.
 
 use crate::core::distance::l2_sq;
 use crate::core::matrix::Matrix;
 use crate::graph::adjacency::FlatAdj;
-use crate::graph::search::{MinNeighbor, Neighbor, SearchStats};
-use crate::graph::visited::VisitedSet;
+use crate::graph::search::{MinNeighbor, Neighbor};
+use crate::index::context::SearchContext;
 
 /// Beam search with early termination after `patience` non-improving
 /// expansions (Algorithm 1 + stall counter).
-#[allow(clippy::too_many_arguments)]
 pub fn beam_search_early_term(
     data: &Matrix,
     adj: &FlatAdj,
@@ -25,51 +23,48 @@ pub fn beam_search_early_term(
     q: &[f32],
     ef: usize,
     patience: usize,
-    visited: &mut VisitedSet,
-    mut stats: Option<&mut SearchStats>,
+    ctx: &mut SearchContext,
 ) -> Vec<Neighbor> {
-    visited.clear();
-    visited.insert(entry);
+    ctx.begin(data.rows());
+    ctx.visited.insert(entry);
     let d0 = l2_sq(q, data.row(entry as usize));
-    if let Some(s) = stats.as_deref_mut() {
-        s.dist_calls += 1;
+    if ctx.stats_enabled {
+        ctx.stats.dist_calls += 1;
     }
-    let mut cands = BinaryHeap::new();
-    let mut top: BinaryHeap<Neighbor> = BinaryHeap::new();
-    cands.push(MinNeighbor(Neighbor { dist: d0, id: entry }));
-    top.push(Neighbor { dist: d0, id: entry });
+    ctx.cands.push(MinNeighbor(Neighbor { dist: d0, id: entry }));
+    ctx.top.push(Neighbor { dist: d0, id: entry });
 
     let mut stall = 0usize;
-    while let Some(MinNeighbor(cur)) = cands.pop() {
-        let ub = top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
-        if cur.dist > ub && top.len() >= ef {
+    while let Some(MinNeighbor(cur)) = ctx.cands.pop() {
+        let ub = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
+        if cur.dist > ub && ctx.top.len() >= ef {
             break;
         }
-        if stall >= patience && top.len() >= ef {
+        if stall >= patience && ctx.top.len() >= ef {
             break; // early termination: no progress for `patience` hops
         }
-        if let Some(s) = stats.as_deref_mut() {
-            s.hops += 1;
+        if ctx.stats_enabled {
+            ctx.stats.hops += 1;
         }
-        let ub_before = top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
+        let ub_before = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
         let mut improved = false;
         for &nb in adj.neighbors(cur.id) {
-            if !visited.insert(nb) {
+            if !ctx.visited.insert(nb) {
                 continue;
             }
             let d = l2_sq(q, data.row(nb as usize));
-            let ub_now = top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
-            let full = top.len() >= ef;
-            if let Some(s) = stats.as_deref_mut() {
-                s.record(0, full && d > ub_now);
+            let ub_now = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
+            let full = ctx.top.len() >= ef;
+            if ctx.stats_enabled {
+                ctx.stats.record(0, full && d > ub_now);
             }
             if !full || d < ub_now {
-                cands.push(MinNeighbor(Neighbor { dist: d, id: nb }));
-                top.push(Neighbor { dist: d, id: nb });
-                if top.len() > ef {
-                    top.pop();
+                ctx.cands.push(MinNeighbor(Neighbor { dist: d, id: nb }));
+                ctx.top.push(Neighbor { dist: d, id: nb });
+                if ctx.top.len() > ef {
+                    ctx.top.pop();
                 }
-                if top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY) < ub_before {
+                if ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY) < ub_before {
                     improved = true;
                 }
             }
@@ -80,9 +75,7 @@ pub fn beam_search_early_term(
             stall += 1;
         }
     }
-    let mut out: Vec<Neighbor> = top.into_vec();
-    out.sort();
-    out
+    ctx.drain_top()
 }
 
 #[cfg(test)]
@@ -93,26 +86,24 @@ mod tests {
     use crate::data::synth::tiny;
     use crate::eval::recall::recall;
     use crate::graph::hnsw::{Hnsw, HnswParams};
+    use crate::index::context::SearchParams;
 
     #[test]
     fn early_termination_trades_recall_for_speed() {
         let ds = tiny(501, 800, 32, Metric::L2);
         let h = Hnsw::build(&ds.data, HnswParams { m: 12, ef_construction: 80, ..Default::default() });
         let gt = exact_knn(&ds.data, &ds.queries, 10);
-        let mut vis = VisitedSet::new(ds.data.rows());
 
         let run = |patience: usize| {
-            let mut stats = SearchStats::default();
+            let mut ctx = SearchContext::new().with_stats();
             let mut rec = 0.0;
-            let mut vis = VisitedSet::new(ds.data.rows());
             for qi in 0..ds.queries.rows() {
                 let res = beam_search_early_term(
-                    &ds.data, &h.base, h.entry, ds.queries.row(qi), 64, patience, &mut vis,
-                    Some(&mut stats),
+                    &ds.data, &h.base, h.entry, ds.queries.row(qi), 64, patience, &mut ctx,
                 );
                 rec += recall(&res[..res.len().min(10)], &gt[qi]);
             }
-            (rec / ds.queries.rows() as f64, stats.dist_calls)
+            (rec / ds.queries.rows() as f64, ctx.stats.dist_calls)
         };
 
         let (rec_tight, calls_tight) = run(2);
@@ -120,21 +111,34 @@ mod tests {
         assert!(calls_tight < calls_loose, "{calls_tight} vs {calls_loose}");
         assert!(rec_loose >= rec_tight - 1e-9);
         assert!(rec_tight > 0.5, "patience=2 recall collapsed: {rec_tight}");
-        let _ = &mut vis;
     }
 
     #[test]
     fn huge_patience_equals_plain_beam() {
         let ds = tiny(502, 300, 16, Metric::L2);
         let h = Hnsw::build(&ds.data, HnswParams { m: 8, ef_construction: 40, ..Default::default() });
-        let mut vis = VisitedSet::new(ds.data.rows());
+        let mut ctx = SearchContext::new();
         for qi in 0..5 {
             let q = ds.queries.row(qi);
-            let a = beam_search_early_term(&ds.data, &h.base, h.entry, q, 32, usize::MAX, &mut vis, None);
-            let b = crate::graph::search::beam_search(&ds.data, &h.base, h.entry, q, 32, &mut vis, None);
+            let a = beam_search_early_term(&ds.data, &h.base, h.entry, q, 32, usize::MAX, &mut ctx);
+            let b = crate::graph::search::beam_search(&ds.data, &h.base, h.entry, q, 32, &mut ctx);
             let ai: Vec<u32> = a.iter().map(|n| n.id).collect();
             let bi: Vec<u32> = b.iter().map(|n| n.id).collect();
             assert_eq!(ai, bi, "query {qi}");
         }
+    }
+
+    #[test]
+    fn patience_reachable_through_params() {
+        let ds = tiny(503, 400, 16, Metric::L2);
+        let h = Hnsw::build(&ds.data, HnswParams { m: 8, ef_construction: 40, ..Default::default() });
+        let mut ctx = SearchContext::new().with_stats();
+        let plain = SearchParams::new(10).with_ef(64);
+        h.search(&ds.data, ds.queries.row(0), &plain, &mut ctx);
+        let calls_plain = ctx.take_stats().dist_calls;
+        let tight = SearchParams::new(10).with_ef(64).with_patience(1);
+        h.search(&ds.data, ds.queries.row(0), &tight, &mut ctx);
+        let calls_tight = ctx.take_stats().dist_calls;
+        assert!(calls_tight <= calls_plain);
     }
 }

@@ -7,8 +7,9 @@ use crate::core::distance::l2_sq;
 use crate::core::matrix::Matrix;
 use crate::core::rng::Pcg32;
 use crate::graph::adjacency::FlatAdj;
-use crate::graph::search::{beam_search, greedy_descent, Neighbor, SearchStats};
-use crate::graph::visited::VisitedSet;
+use crate::graph::earlyterm::beam_search_early_term;
+use crate::graph::search::{beam_search, greedy_descent, Neighbor};
+use crate::index::context::{SearchContext, SearchParams};
 
 /// HNSW build parameters.
 #[derive(Clone, Debug)]
@@ -72,11 +73,13 @@ impl Hnsw {
             params,
         };
 
-        let mut visited = VisitedSet::new(n);
+        // One pooled context for the whole build: the construction-time
+        // beam searches reuse the same heaps and visited set.
+        let mut ctx = SearchContext::for_universe(n);
         // Insert points one by one (point 0 initializes the graph).
         g.max_level = g.levels[0] as usize;
         for i in 1..n {
-            g.insert(data, i as u32, &mut visited);
+            g.insert(data, i as u32, &mut ctx);
         }
         g
     }
@@ -97,7 +100,7 @@ impl Hnsw {
         }
     }
 
-    fn insert(&mut self, data: &Matrix, id: u32, visited: &mut VisitedSet) {
+    fn insert(&mut self, data: &Matrix, id: u32, ctx: &mut SearchContext) {
         let q = data.row(id as usize);
         let node_level = self.levels[id as usize] as usize;
         let mut cur = self.entry;
@@ -105,7 +108,7 @@ impl Hnsw {
         // Descend from the top to node_level+1 greedily.
         let top = self.max_level;
         for l in (node_level + 1..=top).rev() {
-            cur = greedy_descent(data, self.layer(l), cur, q, None).id;
+            cur = greedy_descent(data, self.layer(l), cur, q, ctx).id;
         }
 
         // Insert at each level from min(top, node_level) down to 0.
@@ -116,8 +119,7 @@ impl Hnsw {
                 cur,
                 q,
                 self.params.ef_construction,
-                visited,
-                None,
+                ctx,
             );
             cur = found.first().map(|n| n.id).unwrap_or(cur);
             let cap = if l == 0 { 2 * self.params.m } else { self.params.m };
@@ -182,21 +184,24 @@ impl Hnsw {
     }
 
     /// Search: greedy descent through upper layers, beam at layer 0.
+    /// Honors `params.patience` (early termination) when set.
     pub fn search(
         &self,
         data: &Matrix,
         q: &[f32],
-        k: usize,
-        ef: usize,
-        visited: &mut VisitedSet,
-        mut stats: Option<&mut SearchStats>,
+        params: &SearchParams,
+        ctx: &mut SearchContext,
     ) -> Vec<Neighbor> {
         let mut cur = self.entry;
         for l in (1..=self.max_level).rev() {
-            cur = greedy_descent(data, self.layer(l), cur, q, stats.as_deref_mut()).id;
+            cur = greedy_descent(data, self.layer(l), cur, q, ctx).id;
         }
-        let mut res = beam_search(data, &self.base, cur, q, ef.max(k), visited, stats);
-        res.truncate(k);
+        let ef = params.beam_width();
+        let mut res = match params.patience {
+            Some(p) => beam_search_early_term(data, &self.base, cur, q, ef, p, ctx),
+            None => beam_search(data, &self.base, cur, q, ef, ctx),
+        };
+        res.truncate(params.k);
         res
     }
 
@@ -253,10 +258,11 @@ mod tests {
         let ds = tiny(7, 800, 24, Metric::L2);
         let h = Hnsw::build(&ds.data, HnswParams { m: 12, ef_construction: 80, ..Default::default() });
         let gt = exact_knn(&ds.data, &ds.queries, 10);
-        let mut vis = VisitedSet::new(ds.data.rows());
+        let mut ctx = SearchContext::new();
+        let params = SearchParams::new(10).with_ef(80);
         let mut total = 0.0;
         for qi in 0..ds.queries.rows() {
-            let res = h.search(&ds.data, ds.queries.row(qi), 10, 80, &mut vis, None);
+            let res = h.search(&ds.data, ds.queries.row(qi), &params, &mut ctx);
             total += recall(&res, &gt[qi]);
         }
         let avg = total / ds.queries.rows() as f64;
@@ -267,8 +273,8 @@ mod tests {
     fn search_returns_k_sorted() {
         let ds = tiny(8, 300, 16, Metric::L2);
         let h = Hnsw::build(&ds.data, HnswParams::default());
-        let mut vis = VisitedSet::new(ds.data.rows());
-        let res = h.search(&ds.data, ds.queries.row(0), 5, 50, &mut vis, None);
+        let mut ctx = SearchContext::new();
+        let res = h.search(&ds.data, ds.queries.row(0), &SearchParams::new(5).with_ef(50), &mut ctx);
         assert_eq!(res.len(), 5);
         for w in res.windows(2) {
             assert!(w[0].dist <= w[1].dist);

@@ -12,5 +12,5 @@ pub mod vamana;
 pub mod visited;
 
 pub use adjacency::FlatAdj;
-pub use search::{Neighbor, SearchStats};
+pub use search::{MinNeighbor, Neighbor, SearchStats};
 pub use visited::VisitedSet;

@@ -7,9 +7,10 @@ use crate::core::distance::l2_sq;
 use crate::core::matrix::Matrix;
 use crate::core::rng::Pcg32;
 use crate::graph::adjacency::FlatAdj;
+use crate::graph::earlyterm::beam_search_early_term;
 use crate::graph::hnsw::select_heuristic;
-use crate::graph::search::{beam_search, Neighbor, SearchStats};
-use crate::graph::visited::VisitedSet;
+use crate::graph::search::{beam_search, Neighbor};
+use crate::index::context::{SearchContext, SearchParams};
 
 #[derive(Clone, Debug)]
 pub struct NnDescentParams {
@@ -177,14 +178,13 @@ impl NnDescent {
         }
     }
 
+    /// Beam search from the nearest entry probe; honors `params.patience`.
     pub fn search(
         &self,
         data: &Matrix,
         q: &[f32],
-        k: usize,
-        ef: usize,
-        visited: &mut VisitedSet,
-        mut stats: Option<&mut SearchStats>,
+        params: &SearchParams,
+        ctx: &mut SearchContext,
     ) -> Vec<Neighbor> {
         // Nearest probe as the entry point.
         let mut entry = self.entry_probes[0];
@@ -196,11 +196,15 @@ impl NnDescent {
                 entry = p;
             }
         }
-        if let Some(s) = stats.as_deref_mut() {
-            s.dist_calls += self.entry_probes.len() as u64;
+        if ctx.stats_enabled {
+            ctx.stats.dist_calls += self.entry_probes.len() as u64;
         }
-        let mut res = beam_search(data, &self.adj, entry, q, ef.max(k), visited, stats);
-        res.truncate(k);
+        let ef = params.beam_width();
+        let mut res = match params.patience {
+            Some(p) => beam_search_early_term(data, &self.adj, entry, q, ef, p, ctx),
+            None => beam_search(data, &self.adj, entry, q, ef, ctx),
+        };
+        res.truncate(params.k);
         res
     }
 }
@@ -235,10 +239,11 @@ mod tests {
         let ds = tiny(31, 600, 16, Metric::L2);
         let g = NnDescent::build(&ds.data, NnDescentParams::default());
         let gt = exact_knn(&ds.data, &ds.queries, 10);
-        let mut vis = VisitedSet::new(ds.data.rows());
+        let mut ctx = SearchContext::new();
+        let params = SearchParams::new(10).with_ef(80);
         let mut total = 0.0;
         for qi in 0..ds.queries.rows() {
-            let res = g.search(&ds.data, ds.queries.row(qi), 10, 80, &mut vis, None);
+            let res = g.search(&ds.data, ds.queries.row(qi), &params, &mut ctx);
             let hits = res.iter().filter(|n| gt[qi].contains(&n.id)).count();
             total += hits as f64 / 10.0;
         }

@@ -2,20 +2,35 @@
 //! that produces the paper's Figure 2 observation (what fraction of
 //! distance computations exceed the current upper bound and therefore
 //! cannot influence the search).
+//!
+//! All searches run over a pooled [`SearchContext`] (visited set + both
+//! heaps + stats), so the hot loop performs no per-query heap allocation.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
 
 use crate::core::distance::l2_sq;
 use crate::core::matrix::Matrix;
 use crate::graph::adjacency::FlatAdj;
-use crate::graph::visited::VisitedSet;
+use crate::index::context::SearchContext;
 
 /// (distance, id) with max-heap ordering by distance.
-#[derive(Clone, Copy, Debug, PartialEq)]
+///
+/// Ordering is `f32::total_cmp`, so NaN distances (e.g. from corrupt input
+/// vectors) sort deterministically *after* every real distance instead of
+/// silently corrupting heap order the way `partial_cmp(..).unwrap_or(Equal)`
+/// did — a NaN candidate can never shadow a real one at the heap top.
+#[derive(Clone, Copy, Debug)]
 pub struct Neighbor {
     pub dist: f32,
     pub id: u32,
+}
+
+/// Equality must agree with `Ord` (total order), so it also goes through
+/// `total_cmp` — two NaN-distance neighbors with the same id are equal.
+impl PartialEq for Neighbor {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
 }
 
 impl Eq for Neighbor {}
@@ -23,8 +38,7 @@ impl Eq for Neighbor {}
 impl Ord for Neighbor {
     fn cmp(&self, other: &Self) -> Ordering {
         self.dist
-            .partial_cmp(&other.dist)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&other.dist)
             .then_with(|| self.id.cmp(&other.id))
     }
 }
@@ -35,7 +49,9 @@ impl PartialOrd for Neighbor {
     }
 }
 
-/// Min-heap adapter.
+/// Min-heap adapter. The single source of ordering truth is
+/// [`Neighbor::cmp`]; this only flips the operand order, so the two heaps
+/// can never disagree on how ties or NaNs rank.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct MinNeighbor(pub Neighbor);
 
@@ -110,55 +126,49 @@ pub fn beam_search(
     entry: u32,
     q: &[f32],
     ef: usize,
-    visited: &mut VisitedSet,
-    mut stats: Option<&mut SearchStats>,
+    ctx: &mut SearchContext,
 ) -> Vec<Neighbor> {
-    visited.clear();
-    visited.insert(entry);
+    ctx.begin(data.rows());
+    ctx.visited.insert(entry);
     let d0 = l2_sq(q, data.row(entry as usize));
-    if let Some(s) = stats.as_deref_mut() {
-        s.dist_calls += 1;
+    if ctx.stats_enabled {
+        ctx.stats.dist_calls += 1;
     }
 
-    // Candidate queue (min by dist) and top results (max by dist).
-    let mut cands: BinaryHeap<MinNeighbor> = BinaryHeap::new();
-    let mut top: BinaryHeap<Neighbor> = BinaryHeap::new();
-    cands.push(MinNeighbor(Neighbor { dist: d0, id: entry }));
-    top.push(Neighbor { dist: d0, id: entry });
+    ctx.cands.push(MinNeighbor(Neighbor { dist: d0, id: entry }));
+    ctx.top.push(Neighbor { dist: d0, id: entry });
 
     let mut hop = 0usize;
-    while let Some(MinNeighbor(cur)) = cands.pop() {
-        let ub = top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
-        if cur.dist > ub && top.len() >= ef {
+    while let Some(MinNeighbor(cur)) = ctx.cands.pop() {
+        let ub = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
+        if cur.dist > ub && ctx.top.len() >= ef {
             break; // Algorithm 1 line 5: nearest candidate beyond the bound
         }
-        if let Some(s) = stats.as_deref_mut() {
-            s.hops += 1;
+        if ctx.stats_enabled {
+            ctx.stats.hops += 1;
         }
         for &nb in adj.neighbors(cur.id) {
-            if !visited.insert(nb) {
+            if !ctx.visited.insert(nb) {
                 continue;
             }
             let d = l2_sq(q, data.row(nb as usize));
-            let ub_now = top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
-            let full = top.len() >= ef;
-            if let Some(s) = stats.as_deref_mut() {
-                s.record(hop, full && d > ub_now);
+            let ub_now = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
+            let full = ctx.top.len() >= ef;
+            if ctx.stats_enabled {
+                ctx.stats.record(hop, full && d > ub_now);
             }
             if !full || d < ub_now {
-                cands.push(MinNeighbor(Neighbor { dist: d, id: nb }));
-                top.push(Neighbor { dist: d, id: nb });
-                if top.len() > ef {
-                    top.pop();
+                ctx.cands.push(MinNeighbor(Neighbor { dist: d, id: nb }));
+                ctx.top.push(Neighbor { dist: d, id: nb });
+                if ctx.top.len() > ef {
+                    ctx.top.pop();
                 }
             }
         }
         hop += 1;
     }
 
-    let mut out: Vec<Neighbor> = top.into_vec();
-    out.sort();
-    out
+    ctx.drain_top()
 }
 
 /// Greedy descent: walk to the locally nearest node (ef = 1). Used for
@@ -168,7 +178,7 @@ pub fn greedy_descent(
     adj: &FlatAdj,
     entry: u32,
     q: &[f32],
-    stats: Option<&mut SearchStats>,
+    ctx: &mut SearchContext,
 ) -> Neighbor {
     let mut cur = Neighbor {
         dist: l2_sq(q, data.row(entry as usize)),
@@ -189,8 +199,8 @@ pub fn greedy_descent(
             break;
         }
     }
-    if let Some(s) = stats {
-        s.dist_calls += calls;
+    if ctx.stats_enabled {
+        ctx.stats.dist_calls += calls;
     }
     cur
 }
@@ -218,9 +228,9 @@ mod tests {
                 }
             }
         }
-        let mut vis = VisitedSet::new(n);
+        let mut ctx = SearchContext::new();
         let q: Vec<f32> = (0..6).map(|_| rng.next_gaussian()).collect();
-        let res = beam_search(&data, &adj, 0, &q, 5, &mut vis, None);
+        let res = beam_search(&data, &adj, 0, &q, 5, &mut ctx);
         // Naive top-5
         let mut all: Vec<Neighbor> = (0..n)
             .map(|i| Neighbor {
@@ -248,8 +258,8 @@ mod tests {
                 adj.push(u, (u + k) % n as u32);
             }
         }
-        let mut vis = VisitedSet::new(n);
-        let res = beam_search(&data, &adj, 0, &[0.0, 0.0], 10, &mut vis, None);
+        let mut ctx = SearchContext::new();
+        let res = beam_search(&data, &adj, 0, &[0.0, 0.0], 10, &mut ctx);
         for w in res.windows(2) {
             assert!(w[0].dist <= w[1].dist);
         }
@@ -271,15 +281,28 @@ mod tests {
                 adj.push(u, (u * 7 + k * 13) % n as u32);
             }
         }
-        let mut vis = VisitedSet::new(n);
-        let mut stats = SearchStats::default();
+        let mut ctx = SearchContext::new().with_stats();
         let q: Vec<f32> = (0..8).map(|_| rng.next_gaussian()).collect();
-        beam_search(&data, &adj, 0, &q, 4, &mut vis, Some(&mut stats));
+        beam_search(&data, &adj, 0, &q, 4, &mut ctx);
+        let stats = ctx.take_stats();
         assert!(stats.dist_calls > 0);
         assert!(stats.hops > 0);
         assert!(stats.wasted <= stats.dist_calls);
         let bucket_total: u64 = stats.per_hop.iter().map(|x| x.0).sum();
         assert_eq!(bucket_total + 1, stats.dist_calls); // +1 for the entry
+    }
+
+    #[test]
+    fn disabled_stats_stay_zero() {
+        let data = Matrix::from_rows(&[vec![0.0], vec![1.0], vec![2.0]]);
+        let mut adj = FlatAdj::new(3, 2);
+        adj.push(0, 1);
+        adj.push(1, 2);
+        adj.push(2, 0);
+        let mut ctx = SearchContext::new();
+        beam_search(&data, &adj, 0, &[1.5], 2, &mut ctx);
+        assert_eq!(ctx.stats.dist_calls, 0);
+        assert_eq!(ctx.stats.hops, 0);
     }
 
     #[test]
@@ -300,7 +323,8 @@ mod tests {
                 adj.push(u, u + 1);
             }
         }
-        let got = greedy_descent(&data, &adj, 0, &[17.2], None);
+        let mut ctx = SearchContext::new();
+        let got = greedy_descent(&data, &adj, 0, &[17.2], &mut ctx);
         assert_eq!(got.id, 17);
     }
 
@@ -313,5 +337,39 @@ mod tests {
         };
         let eff = s.effective_dist_calls(16, 128);
         assert!((eff - (100.0 + 200.0 * 0.125)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nan_distance_sorts_last() {
+        let a = Neighbor { dist: 1.0, id: 1 };
+        let b = Neighbor { dist: f32::NAN, id: 0 };
+        assert_eq!(a.cmp(&b), Ordering::Less);
+        assert_eq!(b.cmp(&a), Ordering::Greater);
+        // Min-heap adapter mirrors the same order.
+        assert_eq!(MinNeighbor(a).cmp(&MinNeighbor(b)), Ordering::Greater);
+        // Eq agrees with Ord even on NaN (total order).
+        assert_eq!(b, Neighbor { dist: f32::NAN, id: 0 });
+        assert_ne!(a, b);
+        let mut v = vec![b, a];
+        v.sort();
+        assert_eq!(v[0].id, 1, "real distance ranks before NaN");
+    }
+
+    #[test]
+    fn nan_query_still_terminates() {
+        // A NaN query poisons every distance; the search must terminate
+        // and return finite-length output instead of corrupting the heap.
+        let data = Matrix::from_rows(&[vec![0.0], vec![1.0], vec![2.0], vec![3.0]]);
+        let mut adj = FlatAdj::new(4, 3);
+        for u in 0..4u32 {
+            for v in 0..4u32 {
+                if u != v {
+                    adj.push(u, v);
+                }
+            }
+        }
+        let mut ctx = SearchContext::new();
+        let res = beam_search(&data, &adj, 0, &[f32::NAN], 2, &mut ctx);
+        assert!(res.len() <= 2);
     }
 }

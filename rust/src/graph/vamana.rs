@@ -7,8 +7,9 @@ use crate::core::distance::l2_sq;
 use crate::core::matrix::Matrix;
 use crate::core::rng::Pcg32;
 use crate::graph::adjacency::FlatAdj;
-use crate::graph::search::{beam_search, Neighbor, SearchStats};
-use crate::graph::visited::VisitedSet;
+use crate::graph::earlyterm::beam_search_early_term;
+use crate::graph::search::{beam_search, Neighbor};
+use crate::index::context::{SearchContext, SearchParams};
 
 #[derive(Clone, Debug)]
 pub struct VamanaParams {
@@ -62,15 +63,13 @@ impl Vamana {
         let medoid = find_medoid(data, &mut rng);
         let mut g = Vamana { params, adj, medoid };
 
-        let mut visited = VisitedSet::new(n);
+        let mut ctx = SearchContext::for_universe(n);
         let mut order: Vec<u32> = (0..n as u32).collect();
         for _pass in 0..g.params.passes {
             rng.shuffle(&mut order);
             for &u in &order {
                 let q = data.row(u as usize);
-                let mut found = beam_search(
-                    data, &g.adj, g.medoid, q, g.params.l, &mut visited, None,
-                );
+                let mut found = beam_search(data, &g.adj, g.medoid, q, g.params.l, &mut ctx);
                 found.retain(|c| c.id != u);
                 let pruned = robust_prune(data, u, &found, g.params.alpha, g.params.r);
                 let list: Vec<u32> = pruned.iter().map(|c| c.id).collect();
@@ -111,17 +110,20 @@ impl Vamana {
         self.adj.set(u, &list);
     }
 
+    /// Beam search from the medoid; honors `params.patience` when set.
     pub fn search(
         &self,
         data: &Matrix,
         q: &[f32],
-        k: usize,
-        ef: usize,
-        visited: &mut VisitedSet,
-        stats: Option<&mut SearchStats>,
+        params: &SearchParams,
+        ctx: &mut SearchContext,
     ) -> Vec<Neighbor> {
-        let mut res = beam_search(data, &self.adj, self.medoid, q, ef.max(k), visited, stats);
-        res.truncate(k);
+        let ef = params.beam_width();
+        let mut res = match params.patience {
+            Some(p) => beam_search_early_term(data, &self.adj, self.medoid, q, ef, p, ctx),
+            None => beam_search(data, &self.adj, self.medoid, q, ef, ctx),
+        };
+        res.truncate(params.k);
         res
     }
 }
@@ -189,10 +191,11 @@ mod tests {
         let ds = tiny(21, 600, 16, Metric::L2);
         let v = Vamana::build(&ds.data, VamanaParams::default());
         let gt = exact_knn(&ds.data, &ds.queries, 10);
-        let mut vis = VisitedSet::new(ds.data.rows());
+        let mut ctx = SearchContext::new();
+        let params = SearchParams::new(10).with_ef(80);
         let mut total = 0.0;
         for qi in 0..ds.queries.rows() {
-            let res = v.search(&ds.data, ds.queries.row(qi), 10, 80, &mut vis, None);
+            let res = v.search(&ds.data, ds.queries.row(qi), &params, &mut ctx);
             let hits = res.iter().filter(|n| gt[qi].contains(&n.id)).count();
             total += hits as f64 / 10.0;
         }

@@ -47,6 +47,15 @@ impl VisitedSet {
     pub fn len_universe(&self) -> usize {
         self.stamp.len()
     }
+
+    /// Grow the universe to cover node ids `< n` (no-op if large enough).
+    /// New slots are unstamped, so they read as unvisited in the current
+    /// epoch. Lets one pooled set serve indexes of different sizes.
+    pub fn ensure_universe(&mut self, n: usize) {
+        if n > self.stamp.len() {
+            self.stamp.resize(n, 0);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -71,6 +80,20 @@ mod tests {
         v.clear();
         assert!(!v.contains(1));
         assert!(v.insert(1));
+    }
+
+    #[test]
+    fn ensure_universe_grows_unvisited() {
+        let mut v = VisitedSet::new(2);
+        v.clear();
+        v.insert(1);
+        v.ensure_universe(8);
+        assert_eq!(v.len_universe(), 8);
+        assert!(v.contains(1), "existing marks survive growth");
+        assert!(!v.contains(7));
+        assert!(v.insert(7));
+        v.ensure_universe(4); // shrink request is a no-op
+        assert_eq!(v.len_universe(), 8);
     }
 
     #[test]

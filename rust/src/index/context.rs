@@ -1,0 +1,231 @@
+//! Search-time knobs ([`SearchParams`]) and pooled per-thread scratch
+//! ([`SearchContext`]) shared by every [`crate::index::AnnIndex`]
+//! implementor.
+//!
+//! The context owns the visited set, both beam-search heaps, a candidate
+//! pool, and the stats accumulator. All of them keep their capacity
+//! across queries, so after a short warmup the beam-search hot loop does
+//! no heap allocation at all — previously every call built two fresh
+//! `BinaryHeap`s and every call site hand-threaded `&mut VisitedSet` plus
+//! `Option<&mut SearchStats>`.
+
+use std::collections::BinaryHeap;
+
+use crate::graph::search::{MinNeighbor, Neighbor, SearchStats};
+use crate::graph::visited::VisitedSet;
+
+/// Builder-style search parameters understood by all index families.
+/// Graph families read `ef`/`patience`; IVF-PQ reads `n_probe`/`rerank`;
+/// everyone reads `k`. Unknown knobs are ignored by design so one params
+/// value can drive a heterogeneous fleet of indexes.
+#[derive(Clone, Debug)]
+pub struct SearchParams {
+    /// Number of neighbors to return.
+    pub k: usize,
+    /// Beam width for graph search (clamped up to `k` internally).
+    pub ef: usize,
+    /// Early-termination budget: stop after this many consecutive
+    /// non-improving node expansions (`None` = run Algorithm 1 to the
+    /// natural termination condition). Graph families only; the
+    /// FINGER-screened search ignores it (screening already removes the
+    /// work early termination would skip).
+    pub patience: Option<usize>,
+    /// IVF-PQ: number of coarse cells probed.
+    pub n_probe: usize,
+    /// IVF-PQ: re-rank the ADC shortlist with exact distances.
+    pub rerank: bool,
+    /// IVF-PQ: shortlist depth kept for re-ranking (0 = auto, `10 * k`).
+    pub rerank_depth: usize,
+}
+
+impl SearchParams {
+    pub fn new(k: usize) -> SearchParams {
+        SearchParams {
+            k,
+            ef: k,
+            patience: None,
+            n_probe: 8,
+            rerank: true,
+            rerank_depth: 0,
+        }
+    }
+
+    pub fn with_ef(mut self, ef: usize) -> SearchParams {
+        self.ef = ef;
+        self
+    }
+
+    pub fn with_patience(mut self, patience: usize) -> SearchParams {
+        self.patience = Some(patience);
+        self
+    }
+
+    pub fn with_probes(mut self, n_probe: usize) -> SearchParams {
+        self.n_probe = n_probe;
+        self
+    }
+
+    pub fn with_rerank(mut self, rerank: bool) -> SearchParams {
+        self.rerank = rerank;
+        self
+    }
+
+    pub fn with_rerank_depth(mut self, depth: usize) -> SearchParams {
+        self.rerank_depth = depth;
+        self
+    }
+
+    /// Effective beam width (`ef` never below `k`).
+    pub fn beam_width(&self) -> usize {
+        self.ef.max(self.k)
+    }
+
+    /// Effective IVF-PQ re-rank depth.
+    pub fn rerank_width(&self) -> usize {
+        let d = if self.rerank_depth == 0 {
+            10 * self.k
+        } else {
+            self.rerank_depth
+        };
+        d.max(self.k)
+    }
+}
+
+impl Default for SearchParams {
+    fn default() -> SearchParams {
+        SearchParams::new(10)
+    }
+}
+
+/// Reusable per-thread search scratch. Create one per worker/benchmark
+/// thread and pass it to every search; it grows to the largest index it
+/// has seen and then stops allocating.
+pub struct SearchContext {
+    /// Epoch-stamped visited marker (grows via [`VisitedSet::ensure_universe`]).
+    pub visited: VisitedSet,
+    /// Candidate queue (min-heap by distance).
+    pub cands: BinaryHeap<MinNeighbor>,
+    /// Current top results (max-heap by distance).
+    pub top: BinaryHeap<Neighbor>,
+    /// Scratch candidate pool (IVF-PQ ADC shortlist, rerank staging).
+    pub pool: Vec<Neighbor>,
+    /// Accumulated instrumentation; only written when `stats_enabled`.
+    pub stats: SearchStats,
+    /// Toggle for stats recording (off = zero bookkeeping on the hot path).
+    pub stats_enabled: bool,
+}
+
+impl SearchContext {
+    /// Empty context; grows on first use.
+    pub fn new() -> SearchContext {
+        SearchContext {
+            visited: VisitedSet::new(0),
+            cands: BinaryHeap::new(),
+            top: BinaryHeap::new(),
+            pool: Vec::new(),
+            stats: SearchStats::default(),
+            stats_enabled: false,
+        }
+    }
+
+    /// Context pre-sized for a universe of `n` points.
+    pub fn for_universe(n: usize) -> SearchContext {
+        let mut ctx = SearchContext::new();
+        ctx.reserve(n);
+        ctx
+    }
+
+    /// Enable stats recording (builder form).
+    pub fn with_stats(mut self) -> SearchContext {
+        self.stats_enabled = true;
+        self
+    }
+
+    /// Make sure the visited set covers node ids `< n`.
+    pub fn reserve(&mut self, n: usize) {
+        self.visited.ensure_universe(n);
+    }
+
+    /// Start a query over a universe of `n` points: sizes the visited set
+    /// and clears the heaps; retained capacity makes this allocation-free
+    /// once warm.
+    pub fn begin(&mut self, n: usize) {
+        self.reserve(n);
+        self.visited.clear();
+        self.cands.clear();
+        self.top.clear();
+    }
+
+    /// Drain `top` into an ascending (dist, id) vector, keeping the heap's
+    /// buffer for the next query.
+    pub fn drain_top(&mut self) -> Vec<Neighbor> {
+        let mut out: Vec<Neighbor> = Vec::with_capacity(self.top.len());
+        while let Some(n) = self.top.pop() {
+            out.push(n);
+        }
+        out.reverse();
+        out
+    }
+
+    /// Take the accumulated stats, leaving a fresh accumulator.
+    pub fn take_stats(&mut self) -> SearchStats {
+        std::mem::take(&mut self.stats)
+    }
+
+    /// Reset the stats accumulator.
+    pub fn reset_stats(&mut self) {
+        self.stats = SearchStats::default();
+    }
+}
+
+impl Default for SearchContext {
+    fn default() -> SearchContext {
+        SearchContext::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_builder_defaults() {
+        let p = SearchParams::new(5);
+        assert_eq!(p.k, 5);
+        assert_eq!(p.beam_width(), 5);
+        assert_eq!(p.rerank_width(), 50);
+        let p = p.with_ef(80).with_patience(3).with_probes(4).with_rerank_depth(7);
+        assert_eq!(p.beam_width(), 80);
+        assert_eq!(p.patience, Some(3));
+        assert_eq!(p.n_probe, 4);
+        assert_eq!(p.rerank_width(), 7);
+        let p = p.with_rerank(false);
+        assert!(!p.rerank);
+    }
+
+    #[test]
+    fn drain_top_ascending_and_reusable() {
+        let mut ctx = SearchContext::new();
+        for (dist, id) in [(3.0, 1u32), (1.0, 2), (2.0, 3)] {
+            ctx.top.push(Neighbor { dist, id });
+        }
+        let out = ctx.drain_top();
+        let ids: Vec<u32> = out.iter().map(|n| n.id).collect();
+        assert_eq!(ids, vec![2, 3, 1]);
+        assert!(ctx.top.is_empty());
+        ctx.top.push(Neighbor { dist: 0.5, id: 9 });
+        assert_eq!(ctx.drain_top()[0].id, 9);
+    }
+
+    #[test]
+    fn begin_clears_and_grows() {
+        let mut ctx = SearchContext::new();
+        ctx.begin(10);
+        assert!(ctx.visited.insert(7));
+        ctx.cands.push(MinNeighbor(Neighbor { dist: 1.0, id: 7 }));
+        ctx.begin(20);
+        assert!(ctx.cands.is_empty());
+        assert!(!ctx.visited.contains(7), "fresh epoch after begin");
+        assert!(ctx.visited.insert(19));
+    }
+}

@@ -1,0 +1,419 @@
+//! [`AnnIndex`] implementors: one thin wrapper per family pairing a
+//! shared data matrix (`Arc<Matrix>` — datasets are shared, not copied,
+//! across index variants) with the family's graph/codebook state. The
+//! family modules keep their borrowed-data search methods; these wrappers
+//! are the self-contained objects the server, sweeps, CLI, and
+//! persistence operate on.
+
+use std::io;
+use std::sync::Arc;
+
+use crate::core::matrix::Matrix;
+use crate::data::io::BinWriter;
+use crate::data::persist;
+use crate::finger::construct::{FingerIndex, FingerParams};
+use crate::finger::search::{search_hnsw_with_index, FingerHnsw};
+use crate::graph::bruteforce::scan;
+use crate::graph::hnsw::{Hnsw, HnswParams};
+use crate::graph::nndescent::{NnDescent, NnDescentParams};
+use crate::graph::search::Neighbor;
+use crate::graph::vamana::{Vamana, VamanaParams};
+use crate::index::context::{SearchContext, SearchParams};
+use crate::index::AnnIndex;
+use crate::quant::ivfpq::{IvfPq, IvfPqParams};
+
+type PayloadWriter<'a, 'b> = &'a mut BinWriter<&'b mut dyn io::Write>;
+
+/// One small instance of every family over `data` — shared by the
+/// persistence-roundtrip and trait-conformance suites (and handy for
+/// demos), so a new family is registered in exactly one place.
+pub fn build_all_families(data: Arc<Matrix>) -> Vec<Box<dyn AnnIndex>> {
+    vec![
+        Box::new(BruteForce::new(Arc::clone(&data))),
+        Box::new(HnswIndex::build(
+            Arc::clone(&data),
+            HnswParams { m: 12, ef_construction: 80, ..Default::default() },
+        )),
+        Box::new(FingerHnswIndex::build(
+            Arc::clone(&data),
+            HnswParams { m: 12, ef_construction: 80, ..Default::default() },
+            FingerParams { rank: 8, ..Default::default() },
+        )),
+        Box::new(VamanaIndex::build(Arc::clone(&data), VamanaParams::default())),
+        Box::new(NnDescentIndex::build(
+            Arc::clone(&data),
+            NnDescentParams::default(),
+        )),
+        Box::new(IvfPqIndex::build(
+            data,
+            IvfPqParams { n_list: 16, ..Default::default() },
+        )),
+    ]
+}
+
+/// Exact linear scan — the reference implementor every other family is
+/// conformance-tested against.
+pub struct BruteForce {
+    pub data: Arc<Matrix>,
+}
+
+impl BruteForce {
+    pub fn new(data: Arc<Matrix>) -> BruteForce {
+        BruteForce { data }
+    }
+}
+
+impl AnnIndex for BruteForce {
+    fn name(&self) -> &'static str {
+        "bruteforce"
+    }
+
+    fn dim(&self) -> usize {
+        self.data.cols()
+    }
+
+    fn len(&self) -> usize {
+        self.data.rows()
+    }
+
+    fn data(&self) -> &Matrix {
+        &self.data
+    }
+
+    fn nbytes(&self) -> usize {
+        0
+    }
+
+    fn search(&self, q: &[f32], params: &SearchParams, ctx: &mut SearchContext) -> Vec<Neighbor> {
+        if ctx.stats_enabled {
+            ctx.stats.dist_calls += self.data.rows() as u64;
+        }
+        scan(&self.data, q, params.k)
+    }
+
+    fn kind_tag(&self) -> u64 {
+        persist::TAG_BRUTEFORCE
+    }
+
+    fn save_payload(&self, _w: PayloadWriter) -> io::Result<()> {
+        Ok(()) // nothing beyond the data matrix
+    }
+}
+
+/// Plain HNSW (Algorithm 1 search).
+pub struct HnswIndex {
+    pub data: Arc<Matrix>,
+    pub graph: Hnsw,
+}
+
+impl HnswIndex {
+    pub fn build(data: Arc<Matrix>, params: HnswParams) -> HnswIndex {
+        let graph = Hnsw::build(&data, params);
+        HnswIndex { data, graph }
+    }
+
+    pub fn from_parts(data: Arc<Matrix>, graph: Hnsw) -> HnswIndex {
+        HnswIndex { data, graph }
+    }
+}
+
+impl AnnIndex for HnswIndex {
+    fn name(&self) -> &'static str {
+        "hnsw"
+    }
+
+    fn dim(&self) -> usize {
+        self.data.cols()
+    }
+
+    fn len(&self) -> usize {
+        self.data.rows()
+    }
+
+    fn data(&self) -> &Matrix {
+        &self.data
+    }
+
+    fn nbytes(&self) -> usize {
+        self.graph.nbytes()
+    }
+
+    fn search(&self, q: &[f32], params: &SearchParams, ctx: &mut SearchContext) -> Vec<Neighbor> {
+        self.graph.search(&self.data, q, params, ctx)
+    }
+
+    fn kind_tag(&self) -> u64 {
+        persist::TAG_HNSW
+    }
+
+    fn save_payload(&self, w: PayloadWriter) -> io::Result<()> {
+        persist::save_hnsw(w, &self.graph)
+    }
+}
+
+/// HNSW + FINGER screening (the paper's system).
+pub struct FingerHnswIndex {
+    pub data: Arc<Matrix>,
+    pub inner: FingerHnsw,
+}
+
+impl FingerHnswIndex {
+    pub fn build(
+        data: Arc<Matrix>,
+        hnsw_params: HnswParams,
+        finger_params: FingerParams,
+    ) -> FingerHnswIndex {
+        let inner = FingerHnsw::build(&data, hnsw_params, finger_params);
+        FingerHnswIndex { data, inner }
+    }
+
+    pub fn from_parts(data: Arc<Matrix>, inner: FingerHnsw) -> FingerHnswIndex {
+        FingerHnswIndex { data, inner }
+    }
+}
+
+impl AnnIndex for FingerHnswIndex {
+    fn name(&self) -> &'static str {
+        "hnsw-finger"
+    }
+
+    fn dim(&self) -> usize {
+        self.data.cols()
+    }
+
+    fn len(&self) -> usize {
+        self.data.rows()
+    }
+
+    fn data(&self) -> &Matrix {
+        &self.data
+    }
+
+    fn nbytes(&self) -> usize {
+        self.inner.nbytes()
+    }
+
+    fn approx_rank(&self) -> usize {
+        self.inner.index.rank
+    }
+
+    fn search(&self, q: &[f32], params: &SearchParams, ctx: &mut SearchContext) -> Vec<Neighbor> {
+        self.inner.search(&self.data, q, params, ctx)
+    }
+
+    fn kind_tag(&self) -> u64 {
+        persist::TAG_FINGER
+    }
+
+    fn save_payload(&self, w: PayloadWriter) -> io::Result<()> {
+        persist::save_hnsw(w, &self.inner.hnsw)?;
+        persist::save_finger(w, &self.inner.index)
+    }
+}
+
+/// Borrowing FINGER adapter: one shared HNSW graph, many FINGER/RPLSH
+/// side-index variants — the Figure 6 ablation shape. Searchable through
+/// `&dyn AnnIndex` like everything else, without moving the graph.
+pub struct FingerView<'a> {
+    pub data: &'a Matrix,
+    pub hnsw: &'a Hnsw,
+    pub findex: &'a FingerIndex,
+    /// Label shown by sweeps ("finger", "rplsh", ...).
+    pub label: &'static str,
+}
+
+impl AnnIndex for FingerView<'_> {
+    fn name(&self) -> &'static str {
+        self.label
+    }
+
+    fn dim(&self) -> usize {
+        self.data.cols()
+    }
+
+    fn len(&self) -> usize {
+        self.data.rows()
+    }
+
+    fn data(&self) -> &Matrix {
+        self.data
+    }
+
+    fn nbytes(&self) -> usize {
+        self.hnsw.nbytes() + self.findex.nbytes()
+    }
+
+    fn approx_rank(&self) -> usize {
+        self.findex.rank
+    }
+
+    fn search(&self, q: &[f32], params: &SearchParams, ctx: &mut SearchContext) -> Vec<Neighbor> {
+        search_hnsw_with_index(self.hnsw, self.findex, self.data, q, params, ctx)
+    }
+
+    fn kind_tag(&self) -> u64 {
+        persist::TAG_FINGER
+    }
+
+    fn save_payload(&self, w: PayloadWriter) -> io::Result<()> {
+        persist::save_hnsw(w, self.hnsw)?;
+        persist::save_finger(w, self.findex)
+    }
+}
+
+/// Vamana / DiskANN flat graph.
+pub struct VamanaIndex {
+    pub data: Arc<Matrix>,
+    pub graph: Vamana,
+}
+
+impl VamanaIndex {
+    pub fn build(data: Arc<Matrix>, params: VamanaParams) -> VamanaIndex {
+        let graph = Vamana::build(&data, params);
+        VamanaIndex { data, graph }
+    }
+
+    pub fn from_parts(data: Arc<Matrix>, graph: Vamana) -> VamanaIndex {
+        VamanaIndex { data, graph }
+    }
+}
+
+impl AnnIndex for VamanaIndex {
+    fn name(&self) -> &'static str {
+        "vamana"
+    }
+
+    fn dim(&self) -> usize {
+        self.data.cols()
+    }
+
+    fn len(&self) -> usize {
+        self.data.rows()
+    }
+
+    fn data(&self) -> &Matrix {
+        &self.data
+    }
+
+    fn nbytes(&self) -> usize {
+        self.graph.adj.nbytes()
+    }
+
+    fn search(&self, q: &[f32], params: &SearchParams, ctx: &mut SearchContext) -> Vec<Neighbor> {
+        self.graph.search(&self.data, q, params, ctx)
+    }
+
+    fn kind_tag(&self) -> u64 {
+        persist::TAG_VAMANA
+    }
+
+    fn save_payload(&self, w: PayloadWriter) -> io::Result<()> {
+        persist::save_vamana(w, &self.graph)
+    }
+}
+
+/// NN-descent KNN graph.
+pub struct NnDescentIndex {
+    pub data: Arc<Matrix>,
+    pub graph: NnDescent,
+}
+
+impl NnDescentIndex {
+    pub fn build(data: Arc<Matrix>, params: NnDescentParams) -> NnDescentIndex {
+        let graph = NnDescent::build(&data, params);
+        NnDescentIndex { data, graph }
+    }
+
+    pub fn from_parts(data: Arc<Matrix>, graph: NnDescent) -> NnDescentIndex {
+        NnDescentIndex { data, graph }
+    }
+}
+
+impl AnnIndex for NnDescentIndex {
+    fn name(&self) -> &'static str {
+        "nndescent"
+    }
+
+    fn dim(&self) -> usize {
+        self.data.cols()
+    }
+
+    fn len(&self) -> usize {
+        self.data.rows()
+    }
+
+    fn data(&self) -> &Matrix {
+        &self.data
+    }
+
+    fn nbytes(&self) -> usize {
+        self.graph.adj.nbytes()
+    }
+
+    fn search(&self, q: &[f32], params: &SearchParams, ctx: &mut SearchContext) -> Vec<Neighbor> {
+        self.graph.search(&self.data, q, params, ctx)
+    }
+
+    fn kind_tag(&self) -> u64 {
+        persist::TAG_NNDESCENT
+    }
+
+    fn save_payload(&self, w: PayloadWriter) -> io::Result<()> {
+        persist::save_nndescent(w, &self.graph)
+    }
+}
+
+/// IVF-PQ with exact re-rank.
+pub struct IvfPqIndex {
+    pub data: Arc<Matrix>,
+    pub quant: IvfPq,
+}
+
+impl IvfPqIndex {
+    pub fn build(data: Arc<Matrix>, params: IvfPqParams) -> IvfPqIndex {
+        let quant = IvfPq::train(&data, params);
+        IvfPqIndex { data, quant }
+    }
+
+    pub fn from_parts(data: Arc<Matrix>, quant: IvfPq) -> IvfPqIndex {
+        IvfPqIndex { data, quant }
+    }
+}
+
+impl AnnIndex for IvfPqIndex {
+    fn name(&self) -> &'static str {
+        "ivfpq"
+    }
+
+    fn dim(&self) -> usize {
+        self.data.cols()
+    }
+
+    fn len(&self) -> usize {
+        self.data.rows()
+    }
+
+    fn data(&self) -> &Matrix {
+        &self.data
+    }
+
+    fn nbytes(&self) -> usize {
+        let q = &self.quant;
+        q.coarse.centroids.nbytes()
+            + q.lists.iter().map(|l| l.len() * 4).sum::<usize>()
+            + q.pq.codes.len()
+            + q.pq.books.iter().map(|b| b.centroids.nbytes()).sum::<usize>()
+    }
+
+    fn search(&self, q: &[f32], params: &SearchParams, ctx: &mut SearchContext) -> Vec<Neighbor> {
+        self.quant.search(&self.data, q, params, ctx)
+    }
+
+    fn kind_tag(&self) -> u64 {
+        persist::TAG_IVFPQ
+    }
+
+    fn save_payload(&self, w: PayloadWriter) -> io::Result<()> {
+        persist::save_ivfpq(w, &self.quant)
+    }
+}

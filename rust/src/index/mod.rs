@@ -1,0 +1,86 @@
+//! One search API across every index family.
+//!
+//! [`AnnIndex`] is the uniform interface the sweep harness, the router
+//! server, the CLI, and persistence all speak. Implementors own (a shared
+//! handle to) their data matrix, so a `&dyn AnnIndex` is self-contained:
+//! `search` takes only the query, the [`SearchParams`] knobs, and a pooled
+//! [`SearchContext`] for scratch.
+//!
+//! Implementors (see [`impls`]):
+//!
+//! | name            | family                         | module            |
+//! |-----------------|--------------------------------|-------------------|
+//! | `bruteforce`    | exact linear scan              | `graph::bruteforce` |
+//! | `hnsw`          | HNSW (Algorithm 1 search)      | `graph::hnsw`     |
+//! | `hnsw-finger`   | HNSW + FINGER screening        | `finger::search`  |
+//! | `vamana`        | DiskANN flat graph             | `graph::vamana`   |
+//! | `nndescent`     | NN-descent KNN graph           | `graph::nndescent`|
+//! | `ivfpq`         | IVF-PQ + exact re-rank         | `quant::ivfpq`    |
+
+pub mod context;
+pub mod impls;
+
+pub use context::{SearchContext, SearchParams};
+pub use impls::{
+    build_all_families, BruteForce, FingerHnswIndex, FingerView, HnswIndex, IvfPqIndex,
+    NnDescentIndex, VamanaIndex,
+};
+
+use std::io;
+
+use crate::core::matrix::Matrix;
+use crate::data::io::BinWriter;
+use crate::graph::search::Neighbor;
+
+/// A searchable ANN index over an owned/shared data matrix.
+///
+/// `Send + Sync` is a supertrait so a `Box<dyn AnnIndex>` can be shared
+/// across the router's worker pool behind an `Arc`.
+pub trait AnnIndex: Send + Sync {
+    /// Stable family name (used as method label and CLI `--method` value).
+    fn name(&self) -> &'static str;
+
+    /// Data dimensionality.
+    fn dim(&self) -> usize;
+
+    /// Number of indexed points.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The indexed data matrix (row id == point id).
+    fn data(&self) -> &Matrix;
+
+    /// Index memory footprint in bytes (excluding the data matrix).
+    fn nbytes(&self) -> usize;
+
+    /// Approximation rank for effective-distance accounting (Figure 6's
+    /// `a + b·r/m` x-axis); 0 for families with no approximate scoring.
+    fn approx_rank(&self) -> usize {
+        0
+    }
+
+    /// Top-`params.k` neighbors of `q`, ascending by distance.
+    fn search(&self, q: &[f32], params: &SearchParams, ctx: &mut SearchContext) -> Vec<Neighbor>;
+
+    /// Search every row of `queries`; default loops `search` reusing `ctx`.
+    fn batch_search(
+        &self,
+        queries: &Matrix,
+        params: &SearchParams,
+        ctx: &mut SearchContext,
+    ) -> Vec<Vec<Neighbor>> {
+        (0..queries.rows())
+            .map(|qi| self.search(queries.row(qi), params, ctx))
+            .collect()
+    }
+
+    /// Persistence tag (see `data::persist`); stable across versions.
+    fn kind_tag(&self) -> u64;
+
+    /// Serialize the family payload (graph/codebooks — everything except
+    /// the data matrix, which `data::persist::save_index` writes).
+    fn save_payload(&self, w: &mut BinWriter<&mut dyn io::Write>) -> io::Result<()>;
+}

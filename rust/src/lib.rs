@@ -4,17 +4,22 @@
 //! Approximate Nearest Neighbor Search** (Chen et al., WWW 2023) as a
 //! three-layer Rust + JAX + Pallas system.
 //!
-//! * [`core`] — distances, RNG, dense linear algebra, stats, JSON.
-//! * [`data`] — synthetic benchmark datasets, fvecs/ivecs IO, ground truth.
+//! * [`core`] — distances, RNG, dense linear algebra, stats, JSON, errors.
+//! * [`data`] — synthetic benchmark datasets, fvecs/ivecs IO, ground truth,
+//!   tagged index persistence.
 //! * [`graph`] — HNSW / Vamana / NN-descent substrates + Algorithm 1 search.
 //! * [`finger`] — the paper's contribution: Algorithms 2–4 and RPLSH.
 //! * [`quant`] — IVF-PQ quantization baselines (Figure 7).
-//! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts.
-//! * [`router`] — serving layer: dynamic batching, workers, metrics.
+//! * [`index`] — the unified [`index::AnnIndex`] trait + pooled
+//!   [`index::SearchContext`]: one search API across all families.
+//! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts
+//!   (stubbed offline; see `runtime::xla_stub`).
+//! * [`router`] — serving layer: dynamic batching, workers, metrics, any
+//!   `AnnIndex` behind the server.
 //! * [`eval`] — recall/throughput harnesses regenerating every figure.
 //!
-//! See DESIGN.md for the paper-to-module map and EXPERIMENTS.md for
-//! measured results.
+//! See the repository `README.md` for the paper-to-module map and the
+//! `AnnIndex` API tour.
 
 pub mod cli;
 pub mod core;
@@ -22,6 +27,7 @@ pub mod data;
 pub mod eval;
 pub mod finger;
 pub mod graph;
+pub mod index;
 pub mod quant;
 pub mod router;
 pub mod runtime;

@@ -1,10 +1,16 @@
 //! `finger` — the launcher: dataset generation, index building, search,
 //! serving, and the per-figure benchmark harnesses.
 //!
+//! Every command that touches an index takes the same `--method` flag
+//! (bruteforce | hnsw | finger | vamana | nndescent | ivfpq) and goes
+//! through the unified `AnnIndex` trait.
+//!
 //! Usage:
 //!   finger gen-data   --dataset sift-sim-128 --scale 1.0 --out data/
-//!   finger search     --dataset sift-sim-128 --method finger --ef 80
-//!   finger serve      --dataset sift-sim-128 --addr 127.0.0.1:7771 [--rerank]
+//!   finger build      --dataset sift-sim-128 --method finger --out index.bin
+//!   finger search     --dataset sift-sim-128 --method vamana --ef 80
+//!   finger serve      --dataset sift-sim-128 --method ivfpq --addr 127.0.0.1:7771
+//!   finger serve      --index index.bin [--rerank]
 //!   finger bench      <figure1|figure2|figure3|figure4|figure5|figure6|
 //!                      figure7|figure8|table1|rank-selection|all>
 //!                     [--scale 1.0] [--out results/]
@@ -15,15 +21,24 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use finger_ann::cli::Args;
+use finger_ann::core::matrix::Matrix;
 use finger_ann::data::groundtruth::exact_knn;
+use finger_ann::data::persist::{load_index, save_index};
 use finger_ann::data::{io as dio, spec_by_name};
 use finger_ann::eval::figures;
 use finger_ann::finger::construct::FingerParams;
-use finger_ann::finger::search::FingerHnsw;
-use finger_ann::graph::hnsw::{Hnsw, HnswParams};
-use finger_ann::graph::visited::VisitedSet;
-use finger_ann::router::{IndexKind, ServeIndex, Server, ServerConfig};
+use finger_ann::graph::hnsw::HnswParams;
+use finger_ann::graph::nndescent::NnDescentParams;
+use finger_ann::graph::vamana::VamanaParams;
+use finger_ann::index::impls::{
+    BruteForce, FingerHnswIndex, HnswIndex, IvfPqIndex, NnDescentIndex, VamanaIndex,
+};
+use finger_ann::index::{AnnIndex, SearchContext, SearchParams};
+use finger_ann::quant::ivfpq::IvfPqParams;
+use finger_ann::router::{ServeIndex, Server, ServerConfig};
 use finger_ann::runtime::{default_artifacts_dir, service::RerankService, Manifest};
+
+const METHODS: &str = "bruteforce|hnsw|finger|vamana|nndescent|ivfpq";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -45,9 +60,10 @@ fn help() {
         "finger — FINGER (WWW 2023) reproduction\n\
          commands:\n\
          \u{20}  gen-data --dataset NAME [--scale F] [--out DIR]\n\
-         \u{20}  build    --dataset NAME [--scale F] [--rank R] [--out index.bin]\n\
-         \u{20}  search   --dataset NAME [--scale F] [--method hnsw|finger] [--ef N] [--k N]\n\
-         \u{20}  serve    --dataset NAME [--scale F] [--addr A] [--workers N] [--rerank]\n\
+         \u{20}  build    --dataset NAME [--method {METHODS}] [--scale F] [--rank R] [--out index.bin]\n\
+         \u{20}  search   --dataset NAME [--method {METHODS}] [--ef N] [--k N] [--nprobe N] [--patience N]\n\
+         \u{20}  serve    --dataset NAME [--method {METHODS}] [--addr A] [--workers N] [--rerank]\n\
+         \u{20}  serve    --index index.bin [--addr A] [--workers N] [--rerank]\n\
          \u{20}  bench    FIGURE [--scale F] [--out DIR]   (figure1..figure8, table1, rank-selection, all)\n\
          \u{20}  info"
     );
@@ -62,6 +78,53 @@ fn dataset_from_args(args: &Args) -> finger_ann::data::Dataset {
     });
     println!("generating {} (n={}, dim={})...", spec.name, spec.n, spec.dim);
     spec.generate()
+}
+
+/// Build any index family over `data` — the single construction path used
+/// by `build`, `search`, and `serve`.
+fn build_method(method: &str, data: Arc<Matrix>, args: &Args) -> Box<dyn AnnIndex> {
+    let m = args.get_usize("M", 16);
+    let efc = args.get_usize("efc", 120);
+    let rank = args.get_usize("rank", 16);
+    match method {
+        "bruteforce" => Box::new(BruteForce::new(data)),
+        "hnsw" => Box::new(HnswIndex::build(
+            data,
+            HnswParams { m, ef_construction: efc, ..Default::default() },
+        )),
+        "finger" | "hnsw-finger" => Box::new(FingerHnswIndex::build(
+            data,
+            HnswParams { m, ef_construction: efc, ..Default::default() },
+            FingerParams { rank, ..Default::default() },
+        )),
+        "vamana" => Box::new(VamanaIndex::build(
+            data,
+            VamanaParams { r: args.get_usize("R", 32), ..Default::default() },
+        )),
+        "nndescent" => Box::new(NnDescentIndex::build(
+            data,
+            NnDescentParams { degree: args.get_usize("degree", 32), ..Default::default() },
+        )),
+        "ivfpq" => Box::new(IvfPqIndex::build(
+            data,
+            IvfPqParams { n_list: args.get_usize("nlist", 64), ..Default::default() },
+        )),
+        other => {
+            eprintln!("unknown method '{other}' ({METHODS})");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Search-time parameters from the shared CLI flags.
+fn params_from_args(args: &Args, k: usize) -> SearchParams {
+    let mut p = SearchParams::new(k)
+        .with_ef(args.get_usize("ef", 80))
+        .with_probes(args.get_usize("nprobe", 8));
+    if let Some(patience) = args.get("patience").and_then(|s| s.parse().ok()) {
+        p = p.with_patience(patience);
+    }
+    p
 }
 
 fn gen_data(args: &Args) {
@@ -79,109 +142,80 @@ fn gen_data(args: &Args) {
     );
 }
 
-/// Build an HNSW-FINGER index and persist it as a serving bundle.
+/// Build any index family and persist it as a tagged bundle.
 fn build(args: &Args) {
     let ds = dataset_from_args(args);
-    let rank = args.get_usize("rank", 16);
-    let m = args.get_usize("M", 16);
+    let method = args.get("method").unwrap_or("finger");
     let out = PathBuf::from(args.get("out").unwrap_or("index.bin"));
     let t0 = Instant::now();
-    let fh = FingerHnsw::build(
-        &ds.data,
-        HnswParams { m, ef_construction: args.get_usize("efc", 120), ..Default::default() },
-        FingerParams { rank, ..Default::default() },
-    );
+    let index = build_method(method, Arc::clone(&ds.data), args);
     println!(
-        "built in {:.1}s ({:.1} MB, corr={:.3})",
+        "built {} in {:.1}s ({:.1} MB index side data)",
+        index.name(),
         t0.elapsed().as_secs_f64(),
-        fh.nbytes() as f64 / 1e6,
-        fh.index.matching.correlation
+        index.nbytes() as f64 / 1e6,
     );
-    finger_ann::data::persist::save_bundle(&out, &ds.data, &fh).expect("save bundle");
-    println!("saved bundle to {}", out.display());
+    save_index(&out, index.as_ref()).expect("save index");
+    println!("saved {} bundle to {}", index.name(), out.display());
 }
 
 fn search(args: &Args) {
     let ds = dataset_from_args(args);
     let method = args.get("method").unwrap_or("finger");
-    let ef = args.get_usize("ef", 80);
     let k = args.get_usize("k", 10);
-    let m = args.get_usize("M", 16);
+    let params = params_from_args(args, k);
 
     println!("building {method} index...");
     let t0 = Instant::now();
-    let hnsw = Hnsw::build(&ds.data, HnswParams { m, ef_construction: 120, ..Default::default() });
+    let index = build_method(method, Arc::clone(&ds.data), args);
+    println!("built in {:.1}s", t0.elapsed().as_secs_f64());
     let gt = exact_knn(&ds.data, &ds.queries, k);
 
-    let run = |search: &dyn Fn(&[f32], &mut VisitedSet) -> Vec<finger_ann::graph::Neighbor>| {
-        let mut vis_local = VisitedSet::new(ds.data.rows());
-        let t = Instant::now();
-        let mut rec = 0.0;
-        for qi in 0..ds.queries.rows() {
-            let res = search(ds.queries.row(qi), &mut vis_local);
-            rec += finger_ann::eval::recall(&res, &gt[qi]);
-        }
-        let secs = t.elapsed().as_secs_f64();
-        (
-            rec / ds.queries.rows() as f64,
-            ds.queries.rows() as f64 / secs,
-        )
-    };
-
-    match method {
-        "hnsw" => {
-            println!("built in {:.1}s", t0.elapsed().as_secs_f64());
-            let (rec, qps) = run(&|q, vis| hnsw.search(&ds.data, q, k, ef, vis, None));
-            println!("hnsw: recall@{k}={rec:.4} QPS={qps:.0} (ef={ef})");
-        }
-        "finger" => {
-            let rank = args.get_usize("rank", 16);
-            let fidx = finger_ann::finger::construct::FingerIndex::build(
-                &ds.data,
-                &hnsw.base,
-                FingerParams { rank, ..Default::default() },
-            );
-            println!(
-                "built in {:.1}s (finger corr={:.3})",
-                t0.elapsed().as_secs_f64(),
-                fidx.matching.correlation
-            );
-            let fh = FingerHnsw { hnsw, index: fidx };
-            let (rec, qps) = run(&|q, vis| fh.search(&ds.data, q, k, ef, vis, None));
-            println!("hnsw-finger: recall@{k}={rec:.4} QPS={qps:.0} (ef={ef}, r={rank})");
-        }
-        other => {
-            eprintln!("unknown method '{other}' (hnsw|finger)");
-            std::process::exit(2);
-        }
+    let mut ctx = SearchContext::for_universe(index.len()).with_stats();
+    let t = Instant::now();
+    let mut rec = 0.0;
+    for qi in 0..ds.queries.rows() {
+        let res = index.search(ds.queries.row(qi), &params, &mut ctx);
+        rec += finger_ann::eval::recall(&res, &gt[qi]);
     }
+    let secs = t.elapsed().as_secs_f64();
+    let nq = ds.queries.rows() as f64;
+    let stats = ctx.take_stats();
+    println!(
+        "{}: recall@{k}={:.4} QPS={:.0} (ef={}, nprobe={}) — {:.0} full + {:.0} approx dist calls/query",
+        index.name(),
+        rec / nq,
+        nq / secs,
+        params.ef,
+        params.n_probe,
+        stats.dist_calls as f64 / nq,
+        stats.approx_calls as f64 / nq,
+    );
 }
 
 fn serve(args: &Args) {
-    // Either load a prebuilt bundle (`--index path`) or build in-process.
-    let (data, fh) = if let Some(path) = args.get("index") {
-        println!("loading bundle {path}...");
-        finger_ann::data::persist::load_bundle(std::path::Path::new(path)).expect("load bundle")
+    // Either load a prebuilt tagged bundle (`--index path`, any family) or
+    // build the requested `--method` in-process.
+    let index: Box<dyn AnnIndex> = if let Some(path) = args.get("index") {
+        println!("loading index bundle {path}...");
+        load_index(std::path::Path::new(path)).expect("load index")
     } else {
         let ds = dataset_from_args(args);
-        let rank = args.get_usize("rank", 16);
-        println!("building HNSW-FINGER index...");
-        let fh = FingerHnsw::build(
-            &ds.data,
-            HnswParams { m: 16, ef_construction: 120, ..Default::default() },
-            FingerParams { rank, ..Default::default() },
-        );
-        (ds.data, fh)
+        let method = args.get("method").unwrap_or("finger");
+        println!("building {method} index...");
+        build_method(method, Arc::clone(&ds.data), args)
     };
-    let dim = data.cols();
-    let index = Arc::new(ServeIndex {
-        data,
-        kind: IndexKind::Finger(fh),
-        ef_search: args.get_usize("ef", 80),
+    let dim = index.dim();
+    let name = index.name();
+    // Same knob surface as `search`: --ef/--nprobe/--patience all apply
+    // (k still comes per request).
+    let serve_index = Arc::new(ServeIndex {
+        index,
+        params: params_from_args(args, 10),
     });
 
     let rerank = if args.has_flag("rerank") {
-        let data = Arc::new(index.data.clone());
+        let data = Arc::new(serve_index.data().clone());
         match RerankService::start(default_artifacts_dir(), dim, data) {
             Ok(svc) => {
                 println!("PJRT rerank service up (panel width {})", svc.max_cands);
@@ -203,10 +237,10 @@ fn serve(args: &Args) {
         use_pjrt_rerank: rerank.is_some(),
         ..Default::default()
     };
-    let server = Server::start(index, config.clone(), rerank).expect("bind");
+    let server = Server::start(serve_index, config.clone(), rerank).expect("bind");
     println!(
-        "serving {}-dim index on {} ({} workers, max_batch {})",
-        dim, server.local_addr, config.workers, config.max_batch
+        "serving {name} ({dim}-dim) on {} ({} workers, max_batch {})",
+        server.local_addr, config.workers, config.max_batch
     );
     println!("protocol: one JSON per line: {{\"id\":1,\"vector\":[..],\"k\":10}}");
     loop {

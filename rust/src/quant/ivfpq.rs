@@ -5,6 +5,7 @@
 use crate::core::distance::l2_sq;
 use crate::core::matrix::Matrix;
 use crate::graph::search::Neighbor;
+use crate::index::context::{SearchContext, SearchParams};
 use crate::quant::kmeans::KMeans;
 use crate::quant::pq::{Pq, PqParams};
 
@@ -55,49 +56,65 @@ impl IvfPq {
         }
     }
 
-    /// Search: probe the `n_probe` nearest cells, score members by ADC,
-    /// keep `rerank` best, re-rank those exactly, return top-k.
+    /// Search: probe `params.n_probe` nearest cells, score members by ADC
+    /// (counted as `approx_calls`), keep the best `params.rerank_width()`,
+    /// re-rank those exactly when `params.rerank` (counted as
+    /// `dist_calls`), return top-k. The ADC shortlist lives in the pooled
+    /// `ctx.pool`, so the scoring loop does not allocate once warm.
     pub fn search(
         &self,
         data: &Matrix,
         q: &[f32],
-        k: usize,
-        n_probe: usize,
-        rerank: usize,
-    ) -> (Vec<Neighbor>, u64) {
+        params: &SearchParams,
+        ctx: &mut SearchContext,
+    ) -> Vec<Neighbor> {
+        let k = params.k;
         // Rank cells by centroid distance.
         let mut cells: Vec<(f32, usize)> = (0..self.coarse.k())
             .map(|c| (l2_sq(q, self.coarse.centroids.row(c)), c))
             .collect();
-        cells.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        cells.sort_by(|a, b| a.0.total_cmp(&b.0));
 
         let table = self.pq.adc_table(q);
-        let mut cands: Vec<Neighbor> = Vec::new();
+        ctx.pool.clear();
         let mut scored = 0u64;
-        for &(_, cell) in cells.iter().take(n_probe.max(1)) {
+        for &(_, cell) in cells.iter().take(params.n_probe.max(1)) {
             for &id in &self.lists[cell] {
-                cands.push(Neighbor {
+                ctx.pool.push(Neighbor {
                     dist: self.pq.adc_dist(&table, id as usize),
                     id,
                 });
                 scored += 1;
             }
         }
-        cands.sort();
-        cands.truncate(rerank.max(k));
+        if ctx.stats_enabled {
+            ctx.stats.approx_calls += scored;
+        }
+        ctx.pool.sort();
+
+        if !params.rerank {
+            // Pure ADC ranking — no exact distance computations at all.
+            ctx.pool.truncate(k);
+            return ctx.pool.clone();
+        }
+        ctx.pool.truncate(params.rerank_width());
 
         // Exact re-rank (this is the path the Rust runtime can offload to
         // the PJRT rerank artifact; see runtime::engine).
-        let mut exact: Vec<Neighbor> = cands
-            .into_iter()
+        let mut exact: Vec<Neighbor> = ctx
+            .pool
+            .iter()
             .map(|c| Neighbor {
                 dist: l2_sq(q, data.row(c.id as usize)),
                 id: c.id,
             })
             .collect();
+        if ctx.stats_enabled {
+            ctx.stats.dist_calls += exact.len() as u64;
+        }
         exact.sort();
         exact.truncate(k);
-        (exact, scored)
+        exact
     }
 }
 
@@ -128,10 +145,12 @@ mod tests {
         let ds = tiny(96, 800, 24, Metric::L2);
         let ivf = IvfPq::train(&ds.data, IvfPqParams { n_list: 32, ..Default::default() });
         let gt = exact_knn(&ds.data, &ds.queries, 10);
-        let recall_at = |n_probe: usize| {
+        let mut ctx = SearchContext::new();
+        let mut recall_at = |n_probe: usize| {
+            let params = SearchParams::new(10).with_probes(n_probe).with_rerank_depth(100);
             let mut total = 0.0;
             for qi in 0..ds.queries.rows() {
-                let (res, _) = ivf.search(&ds.data, ds.queries.row(qi), 10, n_probe, 100);
+                let res = ivf.search(&ds.data, ds.queries.row(qi), &params, &mut ctx);
                 let hits = res.iter().filter(|n| gt[qi].contains(&n.id)).count();
                 total += hits as f64 / 10.0;
             }
@@ -147,9 +166,28 @@ mod tests {
     fn scored_counts_probed_cells_only() {
         let ds = tiny(97, 200, 8, Metric::L2);
         let ivf = IvfPq::train(&ds.data, IvfPqParams { n_list: 8, ..Default::default() });
-        let (_, scored_1) = ivf.search(&ds.data, ds.queries.row(0), 5, 1, 20);
-        let (_, scored_all) = ivf.search(&ds.data, ds.queries.row(0), 5, 8, 20);
+        let mut ctx = SearchContext::new().with_stats();
+        let p = SearchParams::new(5).with_rerank_depth(20);
+        ivf.search(&ds.data, ds.queries.row(0), &p.clone().with_probes(1), &mut ctx);
+        let scored_1 = ctx.take_stats().approx_calls;
+        ivf.search(&ds.data, ds.queries.row(0), &p.with_probes(8), &mut ctx);
+        let scored_all = ctx.take_stats().approx_calls;
         assert!(scored_1 < scored_all);
         assert_eq!(scored_all, 200);
+    }
+
+    #[test]
+    fn rerank_toggle_controls_exact_calls() {
+        let ds = tiny(98, 300, 16, Metric::L2);
+        let ivf = IvfPq::train(&ds.data, IvfPqParams { n_list: 8, ..Default::default() });
+        let mut ctx = SearchContext::new().with_stats();
+        let base = SearchParams::new(5).with_probes(4);
+        ivf.search(&ds.data, ds.queries.row(0), &base, &mut ctx);
+        let with_rerank = ctx.take_stats();
+        assert_eq!(with_rerank.dist_calls, base.rerank_width() as u64);
+        ivf.search(&ds.data, ds.queries.row(0), &base.with_rerank(false), &mut ctx);
+        let without = ctx.take_stats();
+        assert_eq!(without.dist_calls, 0, "rerank off must not touch raw vectors");
+        assert!(without.approx_calls > 0);
     }
 }

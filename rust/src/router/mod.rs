@@ -1,5 +1,5 @@
 //! The serving layer (L3 coordination): JSON-line protocol, dynamic
-//! batcher with backpressure, worker pool, and metrics.
+//! batcher with backpressure, worker pool over any `AnnIndex`, metrics.
 
 pub mod batcher;
 pub mod metrics;
@@ -9,4 +9,4 @@ pub mod server;
 pub use batcher::{Batcher, SubmitError};
 pub use metrics::Metrics;
 pub use protocol::{QueryRequest, QueryResponse};
-pub use server::{Client, IndexKind, ServeIndex, Server, ServerConfig};
+pub use server::{Client, ServeIndex, Server, ServerConfig};

@@ -7,11 +7,13 @@
 //!        ▲                                               │
 //!        └────────────── mpsc per request ◀──────────────┘
 //!
-//! Workers own their scratch (visited set) and search the shared
-//! `ServeIndex`; the optional PJRT `rerank` executable re-scores the
-//! graph's candidate set through the AOT JAX/Pallas artifact so final
-//! distances come from the L1 kernel (exactness cross-check + the
-//! "Python-free request path" demonstration).
+//! Workers own their scratch (a pooled `SearchContext`) and search the
+//! shared [`ServeIndex`] — any [`AnnIndex`] implementor, so the same
+//! server binary fronts HNSW, HNSW-FINGER, Vamana, NN-descent, IVF-PQ, or
+//! brute force. The optional PJRT `rerank` executable re-scores the
+//! candidate set through the AOT JAX/Pallas artifact so final distances
+//! come from the L1 kernel (exactness cross-check + the "Python-free
+//! request path" demonstration).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -20,53 +22,49 @@ use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use crate::core::matrix::Matrix;
-use crate::finger::search::FingerHnsw;
-use crate::graph::hnsw::Hnsw;
-use crate::graph::search::SearchStats;
-use crate::graph::visited::VisitedSet;
+use crate::index::{AnnIndex, SearchContext, SearchParams};
 use crate::router::batcher::{Batcher, SubmitError};
 use crate::router::metrics::Metrics;
 use crate::router::protocol::{error_line, QueryRequest, QueryResponse};
 use crate::runtime::service::RerankService;
 
-/// Which index the server searches.
-pub enum IndexKind {
-    Hnsw(Hnsw),
-    Finger(FingerHnsw),
-}
-
-/// Shared, immutable serving state.
+/// Shared, immutable serving state: any index family behind one API.
 pub struct ServeIndex {
-    pub data: Matrix,
-    pub kind: IndexKind,
-    pub ef_search: usize,
+    pub index: Box<dyn AnnIndex>,
+    /// Serving-time defaults; `k` is overridden per request.
+    pub params: SearchParams,
 }
 
 impl ServeIndex {
-    pub fn search(
-        &self,
-        q: &[f32],
-        k: usize,
-        vis: &mut VisitedSet,
-        stats: Option<&mut SearchStats>,
-    ) -> Vec<(f32, u32)> {
-        let res = match &self.kind {
-            IndexKind::Hnsw(h) => h.search(&self.data, q, k, self.ef_search, vis, stats),
-            IndexKind::Finger(f) => f.search(&self.data, q, k, self.ef_search, vis, stats),
-        };
-        res.into_iter().map(|n| (n.dist, n.id)).collect()
+    pub fn new(index: Box<dyn AnnIndex>, ef_search: usize) -> ServeIndex {
+        let params = SearchParams::new(10).with_ef(ef_search);
+        ServeIndex { index, params }
+    }
+
+    pub fn search(&self, q: &[f32], k: usize, ctx: &mut SearchContext) -> Vec<(f32, u32)> {
+        let mut p = self.params.clone();
+        p.k = k;
+        self.index
+            .search(q, &p, ctx)
+            .into_iter()
+            .map(|n| (n.dist, n.id))
+            .collect()
+    }
+
+    pub fn data(&self) -> &Matrix {
+        self.index.data()
     }
 
     pub fn dim(&self) -> usize {
-        self.data.cols()
+        self.index.dim()
     }
 
     pub fn len(&self) -> usize {
-        self.data.rows()
+        self.index.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.data.rows() == 0
+        self.index.is_empty()
     }
 }
 
@@ -143,11 +141,11 @@ impl Server {
                 std::thread::Builder::new()
                     .name(format!("finger-worker-{wid}"))
                     .spawn(move || {
-                        let mut vis = VisitedSet::new(index.len());
+                        let mut ctx = SearchContext::for_universe(index.len());
                         while let Some(batch) = batcher.next_batch() {
                             metrics.record_batch(batch.len());
                             for job in batch {
-                                let hits = index.search(&job.req.vector, job.req.k, &mut vis, None);
+                                let hits = index.search(&job.req.vector, job.req.k, &mut ctx);
                                 let hits = match (&rerank, use_rerank) {
                                     (Some(svc), true) => {
                                         let ids: Vec<u32> =
@@ -329,19 +327,19 @@ mod tests {
     use crate::data::synth::tiny;
     use crate::finger::construct::FingerParams;
     use crate::graph::hnsw::HnswParams;
+    use crate::graph::nndescent::NnDescentParams;
+    use crate::graph::vamana::VamanaParams;
+    use crate::index::impls::{FingerHnswIndex, IvfPqIndex, NnDescentIndex, VamanaIndex};
+    use crate::quant::ivfpq::IvfPqParams;
 
     fn test_index() -> Arc<ServeIndex> {
         let ds = tiny(201, 400, 16, Metric::L2);
-        let fh = FingerHnsw::build(
-            &ds.data,
+        let fh = FingerHnswIndex::build(
+            Arc::clone(&ds.data),
             HnswParams { m: 8, ef_construction: 40, ..Default::default() },
             FingerParams { rank: 8, ..Default::default() },
         );
-        Arc::new(ServeIndex {
-            data: ds.data,
-            kind: IndexKind::Finger(fh),
-            ef_search: 40,
-        })
+        Arc::new(ServeIndex::new(Box::new(fh), 40))
     }
 
     fn cfg() -> ServerConfig {
@@ -358,7 +356,7 @@ mod tests {
     #[test]
     fn local_submit_roundtrip() {
         let index = test_index();
-        let q = index.data.row(5).to_vec();
+        let q = index.data().row(5).to_vec();
         let server = Server::start(Arc::clone(&index), cfg(), None).unwrap();
         let rx = server
             .submit_local(QueryRequest { id: 1, vector: q, k: 5 })
@@ -376,7 +374,7 @@ mod tests {
         let server = Server::start(Arc::clone(&index), cfg(), None).unwrap();
         let mut client = Client::connect(&server.local_addr).unwrap();
 
-        let q = index.data.row(3).to_vec();
+        let q = index.data().row(3).to_vec();
         let resp = client.query(&QueryRequest { id: 9, vector: q, k: 3 }).unwrap();
         assert_eq!(resp.id, 9);
         assert_eq!(resp.hits[0].1, 3);
@@ -403,7 +401,7 @@ mod tests {
                     let rx = server
                         .submit_local(QueryRequest {
                             id: t * 1000 + i,
-                            vector: index.data.row(qid).to_vec(),
+                            vector: index.data().row(qid).to_vec(),
                             k: 5,
                         })
                         .unwrap();
@@ -419,5 +417,39 @@ mod tests {
         let server = Arc::try_unwrap(server).ok().unwrap();
         assert_eq!(server.metrics.responses.load(Ordering::Relaxed), 200);
         server.shutdown();
+    }
+
+    /// The families the old two-variant `IndexKind` enum could not serve
+    /// now run behind the same server unchanged.
+    #[test]
+    fn serves_every_index_family() {
+        let ds = tiny(205, 300, 12, Metric::L2);
+        let indexes: Vec<Box<dyn AnnIndex>> = vec![
+            Box::new(VamanaIndex::build(
+                Arc::clone(&ds.data),
+                VamanaParams { r: 12, ..Default::default() },
+            )),
+            Box::new(NnDescentIndex::build(
+                Arc::clone(&ds.data),
+                NnDescentParams { degree: 12, ..Default::default() },
+            )),
+            Box::new(IvfPqIndex::build(
+                Arc::clone(&ds.data),
+                IvfPqParams { n_list: 8, ..Default::default() },
+            )),
+        ];
+        for idx in indexes {
+            let name = idx.name();
+            let serve = Arc::new(ServeIndex::new(idx, 48));
+            let server = Server::start(Arc::clone(&serve), cfg(), None).unwrap();
+            let q = serve.data().row(7).to_vec();
+            let rx = server
+                .submit_local(QueryRequest { id: 7, vector: q, k: 5 })
+                .unwrap();
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.hits.len(), 5, "{name}");
+            assert_eq!(resp.hits[0].1, 7, "{name}: self-query top hit");
+            server.shutdown();
+        }
     }
 }

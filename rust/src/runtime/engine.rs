@@ -4,7 +4,11 @@
 //!
 //! Interchange is HLO *text* — jax >= 0.5 serializes protos with 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md).
+//! reassigns ids.
+//!
+//! In offline builds the `xla` crate is replaced by
+//! [`crate::runtime::xla_stub`]; every PJRT entry point then errors and
+//! callers fall back to the CPU-exact path (see the stub's docs).
 //!
 //! Inputs are padded to each artifact's static shapes: queries replicate
 //! row 0 semantics are avoided by masking on the caller side; candidate
@@ -12,9 +16,9 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, Result};
-
+use crate::core::error::{anyhow, ensure, Result};
 use crate::core::matrix::Matrix;
+use crate::runtime::xla_stub as xla;
 use crate::runtime::manifest::{ArtifactSpec, Manifest};
 
 /// Squared-norm value for padded candidate slots — large enough to lose
@@ -104,14 +108,14 @@ impl Executable {
         queries: &Matrix,
         cand_ids: &[u32],
     ) -> Result<RerankResult> {
-        anyhow::ensure!(self.spec.kind == "rerank", "not a rerank artifact");
+        ensure!(self.spec.kind == "rerank", "not a rerank artifact");
         let b = self.spec.meta["batch"];
         let c = self.spec.meta["cands"];
         let m = self.spec.meta["dim"];
         let k = self.spec.meta["k"];
-        anyhow::ensure!(queries.cols() == m, "query dim {} != {}", queries.cols(), m);
-        anyhow::ensure!(queries.rows() <= b, "batch overflow");
-        anyhow::ensure!(cand_ids.len() <= c, "candidate overflow");
+        ensure!(queries.cols() == m, "query dim {} != {}", queries.cols(), m);
+        ensure!(queries.rows() <= b, "batch overflow");
+        ensure!(cand_ids.len() <= c, "candidate overflow");
 
         // Pad queries to (b, m) by repeating the last row (results sliced).
         let mut qbuf = vec![0.0f32; b * m];
@@ -164,11 +168,11 @@ impl Executable {
         queries: &Matrix,
         cand_ids: &[u32],
     ) -> Result<Vec<Vec<f32>>> {
-        anyhow::ensure!(self.spec.kind == "score_l2", "not a score artifact");
+        ensure!(self.spec.kind == "score_l2", "not a score artifact");
         let b = self.spec.meta["batch"];
         let c = self.spec.meta["cands"];
         let m = self.spec.meta["dim"];
-        anyhow::ensure!(queries.cols() == m && queries.rows() <= b && cand_ids.len() <= c);
+        ensure!(queries.cols() == m && queries.rows() <= b && cand_ids.len() <= c);
 
         let mut qbuf = vec![0.0f32; b * m];
         for i in 0..b {

@@ -4,8 +4,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
-
+use crate::core::error::{anyhow, Context, Result};
 use crate::core::json::Json;
 
 /// One tensor's static shape + dtype.

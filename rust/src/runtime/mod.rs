@@ -5,6 +5,7 @@
 pub mod engine;
 pub mod manifest;
 pub mod service;
+pub mod xla_stub;
 
 pub use engine::{default_artifacts_dir, Engine, Executable, RerankResult, PAD_SQNORM};
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};

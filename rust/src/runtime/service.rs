@@ -6,8 +6,7 @@
 
 use std::sync::{mpsc, Arc, Mutex};
 
-use anyhow::{anyhow, Result};
-
+use crate::core::error::{anyhow, Result};
 use crate::core::matrix::Matrix;
 use crate::runtime::engine::Engine;
 

@@ -1,0 +1,105 @@
+//! Offline stub of the `xla` crate surface used by [`crate::runtime`].
+//!
+//! The build environment has no crates.io access and no `xla_extension`
+//! shared library, so the PJRT client cannot exist here. This module
+//! mirrors the exact API shape `engine.rs` consumes; every entry point
+//! that would touch PJRT returns an error, which the callers already
+//! handle gracefully (the rerank service reports itself unavailable and
+//! the server falls back to CPU-exact distances).
+//!
+//! To run against real PJRT, replace the `use crate::runtime::xla_stub as
+//! xla;` imports in `engine.rs` with the real `xla` crate and add it to
+//! `Cargo.toml`.
+
+#![allow(clippy::unnecessary_wraps)]
+
+/// Stub error: carries a static reason; `Debug` matches how the engine
+/// formats xla errors (`{e:?}`).
+pub struct XlaError(pub &'static str);
+
+impl std::fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+const UNAVAILABLE: &str = "xla_extension unavailable (stub build; see runtime::xla_stub)";
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(XlaError(UNAVAILABLE))
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(XlaError(UNAVAILABLE))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(XlaError(UNAVAILABLE))
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(XlaError(UNAVAILABLE))
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        Err(XlaError(UNAVAILABLE))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_v: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        Err(XlaError(UNAVAILABLE))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        Err(XlaError(UNAVAILABLE))
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal, XlaError> {
+        Err(XlaError(UNAVAILABLE))
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal), XlaError> {
+        Err(XlaError(UNAVAILABLE))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{err:?}").contains("unavailable"));
+    }
+}

@@ -1,0 +1,199 @@
+//! Trait-conformance suite: every `AnnIndex` implementor must satisfy the
+//! same contract — exactness against brute force on an easy instance,
+//! ascending unique results, honest metadata, batch == sequential, and
+//! sane stats bookkeeping — all through `&dyn AnnIndex` with one shared
+//! pooled `SearchContext`.
+
+use std::sync::Arc;
+
+use finger_ann::core::distance::Metric;
+use finger_ann::data::groundtruth::exact_knn;
+use finger_ann::data::synth::{tiny, Dataset};
+use finger_ann::graph::hnsw::HnswParams;
+use finger_ann::graph::nndescent::NnDescentParams;
+use finger_ann::graph::vamana::VamanaParams;
+use finger_ann::index::impls::{BruteForce, HnswIndex, NnDescentIndex, VamanaIndex};
+use finger_ann::index::{build_all_families, AnnIndex, SearchContext, SearchParams};
+
+/// All six families over one dataset — the single registry shared with the
+/// persistence-roundtrip suite.
+fn all_indexes(ds: &Dataset) -> Vec<Box<dyn AnnIndex>> {
+    build_all_families(Arc::clone(&ds.data))
+}
+
+/// Generous per-family search settings: wide beams / many probes, so every
+/// family is operating in its high-recall regime.
+fn conformance_params() -> SearchParams {
+    SearchParams::new(10).with_ef(120).with_probes(16)
+}
+
+#[test]
+fn names_and_metadata_are_honest() {
+    let ds = tiny(601, 400, 16, Metric::L2);
+    let indexes = all_indexes(&ds);
+    let names: Vec<&str> = indexes.iter().map(|i| i.name()).collect();
+    assert_eq!(
+        names,
+        vec!["bruteforce", "hnsw", "hnsw-finger", "vamana", "nndescent", "ivfpq"]
+    );
+    for index in &indexes {
+        assert_eq!(index.len(), 400, "{}", index.name());
+        assert_eq!(index.dim(), 16, "{}", index.name());
+        assert!(!index.is_empty());
+        assert_eq!(index.data().rows(), 400);
+        if index.name() == "bruteforce" {
+            assert_eq!(index.nbytes(), 0);
+            assert_eq!(index.approx_rank(), 0);
+        } else {
+            assert!(index.nbytes() > 0, "{}", index.name());
+        }
+        if index.name() == "hnsw-finger" {
+            assert_eq!(index.approx_rank(), 8);
+        }
+    }
+}
+
+#[test]
+fn every_family_finds_nearest_neighbors() {
+    let ds = tiny(602, 500, 16, Metric::L2);
+    let gt = exact_knn(&ds.data, &ds.queries, 10);
+    let params = conformance_params();
+    let mut ctx = SearchContext::new();
+    for index in all_indexes(&ds) {
+        let mut total = 0.0;
+        for qi in 0..ds.queries.rows() {
+            let res = index.search(ds.queries.row(qi), &params, &mut ctx);
+            let hits = res.iter().filter(|n| gt[qi].contains(&n.id)).count();
+            total += hits as f64 / 10.0;
+        }
+        let avg = total / ds.queries.rows() as f64;
+        let floor = if index.name() == "bruteforce" { 0.999 } else { 0.7 };
+        assert!(avg > floor, "{}: recall@10 = {avg}", index.name());
+    }
+}
+
+#[test]
+fn results_ascending_unique_and_k_bounded() {
+    let ds = tiny(603, 300, 12, Metric::L2);
+    let params = conformance_params();
+    let mut ctx = SearchContext::new();
+    for index in all_indexes(&ds) {
+        for qi in 0..4 {
+            let res = index.search(ds.queries.row(qi), &params, &mut ctx);
+            assert!(res.len() <= params.k, "{}", index.name());
+            assert!(!res.is_empty(), "{}", index.name());
+            for w in res.windows(2) {
+                assert!(w[0].dist <= w[1].dist, "{}: not ascending", index.name());
+            }
+            let mut ids: Vec<u32> = res.iter().map(|n| n.id).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), res.len(), "{}: duplicate ids", index.name());
+            assert!(ids.iter().all(|&id| (id as usize) < index.len()));
+        }
+    }
+}
+
+#[test]
+fn batch_search_matches_sequential() {
+    let ds = tiny(604, 300, 12, Metric::L2);
+    let params = conformance_params();
+    let mut ctx = SearchContext::new();
+    for index in all_indexes(&ds) {
+        let batched = index.batch_search(&ds.queries, &params, &mut ctx);
+        assert_eq!(batched.len(), ds.queries.rows());
+        for qi in 0..ds.queries.rows() {
+            let single = index.search(ds.queries.row(qi), &params, &mut ctx);
+            let a: Vec<u32> = batched[qi].iter().map(|n| n.id).collect();
+            let b: Vec<u32> = single.iter().map(|n| n.id).collect();
+            assert_eq!(a, b, "{} query {qi}", index.name());
+        }
+    }
+}
+
+#[test]
+fn stats_invariants_hold_for_every_family() {
+    let ds = tiny(605, 300, 12, Metric::L2);
+    let params = conformance_params();
+    let mut ctx = SearchContext::new().with_stats();
+    for index in all_indexes(&ds) {
+        ctx.reset_stats();
+        index.search(ds.queries.row(0), &params, &mut ctx);
+        let stats = ctx.take_stats();
+        let name = index.name();
+        assert!(
+            stats.dist_calls > 0 || stats.approx_calls > 0,
+            "{name}: no work recorded"
+        );
+        assert!(stats.wasted <= stats.dist_calls, "{name}");
+        if name == "bruteforce" {
+            assert_eq!(stats.dist_calls, index.len() as u64, "{name}");
+        }
+        if name == "hnsw-finger" || name == "ivfpq" {
+            assert!(stats.approx_calls > 0, "{name}: approximate path unused");
+        }
+        // Disabled stats must record nothing.
+        ctx.stats_enabled = false;
+        index.search(ds.queries.row(0), &params, &mut ctx);
+        assert_eq!(ctx.stats.dist_calls, 0, "{name}: wrote stats while disabled");
+        ctx.stats_enabled = true;
+    }
+}
+
+#[test]
+fn one_context_serves_indexes_of_different_sizes() {
+    let small = tiny(606, 120, 8, Metric::L2);
+    let large = tiny(607, 900, 8, Metric::L2);
+    let params = conformance_params();
+    let mut ctx = SearchContext::new();
+    // Alternate between universes; the pooled visited set must grow and
+    // stay correct in both directions.
+    let a = BruteForce::new(Arc::clone(&small.data));
+    let b = HnswIndex::build(
+        Arc::clone(&large.data),
+        HnswParams { m: 8, ef_construction: 60, ..Default::default() },
+    );
+    for round in 0..3 {
+        let ra = a.search(small.queries.row(round), &params, &mut ctx);
+        assert!(ra.iter().all(|n| (n.id as usize) < small.data.rows()));
+        let rb = b.search(large.queries.row(round), &params, &mut ctx);
+        assert!(rb.iter().all(|n| (n.id as usize) < large.data.rows()));
+    }
+    // Exactness survives the round trips.
+    let gt = exact_knn(&small.data, &small.queries, 10);
+    let res = a.search(small.queries.row(0), &params, &mut ctx);
+    let ids: Vec<u32> = res.iter().map(|n| n.id).collect();
+    assert_eq!(ids, gt[0]);
+}
+
+#[test]
+fn early_termination_budget_reduces_work_uniformly() {
+    let ds = tiny(608, 600, 16, Metric::L2);
+    let mut ctx = SearchContext::new().with_stats();
+    // Graph families accept the patience knob through the same params.
+    let graphs: Vec<Box<dyn AnnIndex>> = vec![
+        Box::new(HnswIndex::build(
+            Arc::clone(&ds.data),
+            HnswParams { m: 12, ef_construction: 80, ..Default::default() },
+        )),
+        Box::new(VamanaIndex::build(Arc::clone(&ds.data), VamanaParams::default())),
+        Box::new(NnDescentIndex::build(
+            Arc::clone(&ds.data),
+            NnDescentParams::default(),
+        )),
+    ];
+    for index in graphs {
+        let wide = SearchParams::new(10).with_ef(160);
+        let budgeted = SearchParams::new(10).with_ef(160).with_patience(1);
+        ctx.reset_stats();
+        for qi in 0..ds.queries.rows() {
+            index.search(ds.queries.row(qi), &wide, &mut ctx);
+        }
+        let full = ctx.take_stats().dist_calls;
+        for qi in 0..ds.queries.rows() {
+            index.search(ds.queries.row(qi), &budgeted, &mut ctx);
+        }
+        let cut = ctx.take_stats().dist_calls;
+        assert!(cut < full, "{}: {cut} !< {full}", index.name());
+    }
+}

@@ -9,9 +9,10 @@ use finger_ann::data::groundtruth::exact_knn;
 use finger_ann::data::synth::tiny;
 use finger_ann::eval::recall_ids;
 use finger_ann::finger::construct::FingerParams;
-use finger_ann::finger::search::FingerHnsw;
 use finger_ann::graph::hnsw::HnswParams;
-use finger_ann::router::{Client, IndexKind, QueryRequest, ServeIndex, Server, ServerConfig};
+use finger_ann::index::impls::FingerHnswIndex;
+use finger_ann::index::SearchContext;
+use finger_ann::router::{Client, QueryRequest, ServeIndex, Server, ServerConfig};
 use finger_ann::runtime::{default_artifacts_dir, service::RerankService};
 
 fn artifacts_available() -> bool {
@@ -20,16 +21,12 @@ fn artifacts_available() -> bool {
 
 fn build_index(n: usize, dim: usize, seed: u64) -> Arc<ServeIndex> {
     let ds = tiny(seed, n, dim, Metric::L2);
-    let fh = FingerHnsw::build(
-        &ds.data,
+    let fh = FingerHnswIndex::build(
+        Arc::clone(&ds.data),
         HnswParams { m: 12, ef_construction: 80, ..Default::default() },
         FingerParams { rank: 8, ..Default::default() },
     );
-    Arc::new(ServeIndex {
-        data: ds.data,
-        kind: IndexKind::Finger(fh),
-        ef_search: 64,
-    })
+    Arc::new(ServeIndex::new(Box::new(fh), 64))
 }
 
 #[test]
@@ -50,13 +47,13 @@ fn served_results_match_direct_search() {
     .unwrap();
     let mut client = Client::connect(&server.local_addr).unwrap();
 
-    let mut vis = finger_ann::graph::visited::VisitedSet::new(index.len());
+    let mut ctx = SearchContext::new();
     for qi in [0usize, 7, 42] {
-        let q = index.data.row(qi).to_vec();
+        let q = index.data().row(qi).to_vec();
         let served = client
             .query(&QueryRequest { id: qi as u64, vector: q.clone(), k: 5 })
             .unwrap();
-        let direct = index.search(&q, 5, &mut vis, None);
+        let direct = index.search(&q, 5, &mut ctx);
         let served_ids: Vec<u32> = served.hits.iter().map(|&(_, id)| id).collect();
         let direct_ids: Vec<u32> = direct.iter().map(|&(_, id)| id).collect();
         assert_eq!(served_ids, direct_ids, "query {qi}");
@@ -68,17 +65,13 @@ fn served_results_match_direct_search() {
 fn served_recall_matches_offline_recall() {
     let ds = tiny(302, 600, 16, Metric::L2);
     let gt = exact_knn(&ds.data, &ds.queries, 10);
-    let fh = FingerHnsw::build(
-        &ds.data,
+    let fh = FingerHnswIndex::build(
+        Arc::clone(&ds.data),
         HnswParams { m: 12, ef_construction: 80, ..Default::default() },
         FingerParams { rank: 8, ..Default::default() },
     );
     let queries = ds.queries.clone();
-    let index = Arc::new(ServeIndex {
-        data: ds.data,
-        kind: IndexKind::Finger(fh),
-        ef_search: 64,
-    });
+    let index = Arc::new(ServeIndex::new(Box::new(fh), 64));
     let server = Server::start(Arc::clone(&index), ServerConfig {
         addr: "127.0.0.1:0".into(),
         workers: 4,
@@ -117,7 +110,7 @@ fn pjrt_rerank_returns_exact_distances() {
     let svc = RerankService::start(
         default_artifacts_dir(),
         32,
-        Arc::new(index.data.clone()),
+        Arc::new(index.data().clone()),
     )
     .unwrap();
     let server = Server::start(
@@ -134,7 +127,7 @@ fn pjrt_rerank_returns_exact_distances() {
     )
     .unwrap();
 
-    let q = index.data.row(9).to_vec();
+    let q = index.data().row(9).to_vec();
     let rx = server
         .submit_local(QueryRequest { id: 1, vector: q.clone(), k: 5 })
         .unwrap();
@@ -142,7 +135,7 @@ fn pjrt_rerank_returns_exact_distances() {
     assert_eq!(resp.hits[0].1, 9, "self-query top hit");
     // Distances must be the exact L2 values computed by the Pallas kernel.
     for &(d, id) in &resp.hits {
-        let want = finger_ann::core::distance::l2_sq(&q, index.data.row(id as usize));
+        let want = finger_ann::core::distance::l2_sq(&q, index.data().row(id as usize));
         assert!((d - want).abs() < 1e-2 * (1.0 + want), "{d} vs {want}");
     }
     server.shutdown();
@@ -169,7 +162,7 @@ fn overload_rejections_are_reported() {
     for i in 0..50u64 {
         match server.submit_local(QueryRequest {
             id: i,
-            vector: index.data.row(0).to_vec(),
+            vector: index.data().row(0).to_vec(),
             k: 3,
         }) {
             Ok(rx) => accepted_rx.push(rx),
