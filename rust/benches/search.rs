@@ -14,7 +14,7 @@ use finger_ann::finger::construct::{FingerIndex, FingerParams};
 use finger_ann::finger::search::FingerHnsw;
 use finger_ann::graph::hnsw::HnswParams;
 use finger_ann::index::impls::{FingerHnswIndex, HnswIndex};
-use finger_ann::index::{AnnIndex, SearchContext, SearchParams};
+use finger_ann::index::{AnnIndex, SearchContext, SearchParams, ShardSpec, ShardedIndex};
 
 fn main() {
     for name in ["sift-sim-128", "gist-sim-960"] {
@@ -77,6 +77,73 @@ fn main() {
                     stats.dist_calls as f64 / nq
                 );
             }
+        }
+    }
+    sharded_vs_flat();
+}
+
+/// Sharded vs flat HNSW throughput at matched ef: the sequential
+/// single-query scatter and the shard-parallel `batch_search` path (the
+/// one the router's dynamic batcher drives).
+fn sharded_vs_flat() {
+    let spec = spec_by_name("sift-sim-128", 0.25).unwrap();
+    println!(
+        "\n=== sharded vs flat hnsw ({}, n={}, dim={}) ===",
+        spec.name, spec.n, spec.dim
+    );
+    let ds = spec.generate();
+    let gt = exact_knn(&ds.data, &ds.queries, 10);
+    let hnsw_params = HnswParams { m: 16, ef_construction: 120, ..Default::default() };
+
+    let mut indexes: Vec<(String, Box<dyn AnnIndex>)> = vec![(
+        "hnsw-flat".to_string(),
+        Box::new(HnswIndex::build(Arc::clone(&ds.data), hnsw_params.clone())),
+    )];
+    for s in [2usize, 4, 8] {
+        let t0 = Instant::now();
+        let sharded = ShardedIndex::build(
+            Arc::clone(&ds.data),
+            &ShardSpec { n_shards: s, ..Default::default() },
+            |sub| -> Box<dyn AnnIndex> {
+                Box::new(HnswIndex::build(sub, hnsw_params.clone()))
+            },
+        );
+        println!("  built {s} shards in {:.1}s", t0.elapsed().as_secs_f64());
+        indexes.push((format!("hnsw-sharded-{s}x"), Box::new(sharded)));
+    }
+
+    let mut ctx = SearchContext::for_universe(ds.data.rows());
+    println!(
+        "{:<18} {:>5} {:>10} {:>13} {:>13}",
+        "index", "ef", "recall@10", "QPS(single)", "QPS(batch)"
+    );
+    let nq = ds.queries.rows() as f64;
+    for ef in [40usize, 80] {
+        let params = SearchParams::new(10).with_ef(ef);
+        for (label, index) in &indexes {
+            let index = index.as_ref();
+            for qi in 0..ds.queries.rows().min(8) {
+                index.search(ds.queries.row(qi), &params, &mut ctx);
+            }
+            let t0 = Instant::now();
+            let mut rec = 0.0;
+            for qi in 0..ds.queries.rows() {
+                let res = index.search(ds.queries.row(qi), &params, &mut ctx);
+                rec += recall(&res, &gt[qi]);
+            }
+            let single_qps = nq / t0.elapsed().as_secs_f64();
+            let t1 = Instant::now();
+            let batched = index.batch_search(&ds.queries, &params, &mut ctx);
+            let batch_qps = nq / t1.elapsed().as_secs_f64();
+            assert_eq!(batched.len(), ds.queries.rows());
+            println!(
+                "{:<18} {:>5} {:>10.4} {:>13.0} {:>13.0}",
+                label,
+                ef,
+                rec / nq,
+                single_qps,
+                batch_qps
+            );
         }
     }
 }

@@ -132,6 +132,29 @@ pub struct BinReader<R: Read> {
     r: R,
 }
 
+/// Read exactly `len` untrusted bytes, growing the buffer in bounded
+/// chunks: a corrupt length prefix (e.g. u64::MAX in a damaged index
+/// file) then fails with `UnexpectedEof` once the stream runs out,
+/// instead of aborting the process on a terabyte-sized up-front
+/// allocation.
+fn read_exact_len<R: Read>(r: &mut R, len: usize) -> io::Result<Vec<u8>> {
+    const CHUNK: usize = 1 << 20;
+    let mut buf = Vec::with_capacity(len.min(CHUNK));
+    let mut remaining = len;
+    while remaining > 0 {
+        let take = remaining.min(CHUNK);
+        let old = buf.len();
+        buf.resize(old + take, 0);
+        r.read_exact(&mut buf[old..])?;
+        remaining -= take;
+    }
+    Ok(buf)
+}
+
+fn bad_len() -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, "implausible slice length")
+}
+
 impl<R: Read> BinReader<R> {
     pub fn new(r: R) -> Self {
         Self { r }
@@ -145,8 +168,8 @@ impl<R: Read> BinReader<R> {
 
     pub fn f32_slice(&mut self) -> io::Result<Vec<f32>> {
         let n = self.u64()? as usize;
-        let mut buf = vec![0u8; n * 4];
-        self.r.read_exact(&mut buf)?;
+        let bytes = n.checked_mul(4).ok_or_else(bad_len)?;
+        let buf = read_exact_len(&mut self.r, bytes)?;
         Ok(buf
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
@@ -155,8 +178,8 @@ impl<R: Read> BinReader<R> {
 
     pub fn u32_slice(&mut self) -> io::Result<Vec<u32>> {
         let n = self.u64()? as usize;
-        let mut buf = vec![0u8; n * 4];
-        self.r.read_exact(&mut buf)?;
+        let bytes = n.checked_mul(4).ok_or_else(bad_len)?;
+        let buf = read_exact_len(&mut self.r, bytes)?;
         Ok(buf
             .chunks_exact(4)
             .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
@@ -165,16 +188,15 @@ impl<R: Read> BinReader<R> {
 
     pub fn u8_slice(&mut self) -> io::Result<Vec<u8>> {
         let n = self.u64()? as usize;
-        let mut buf = vec![0u8; n];
-        self.r.read_exact(&mut buf)?;
-        Ok(buf)
+        read_exact_len(&mut self.r, n)
     }
 
     pub fn matrix(&mut self) -> io::Result<Matrix> {
         let rows = self.u64()? as usize;
         let cols = self.u64()? as usize;
+        let numel = rows.checked_mul(cols).ok_or_else(bad_len)?;
         let data = self.f32_slice()?;
-        if data.len() != rows * cols {
+        if data.len() != numel {
             return Err(io::Error::new(io::ErrorKind::InvalidData, "matrix shape"));
         }
         Ok(Matrix::from_vec(data, rows, cols))
@@ -237,6 +259,27 @@ mod tests {
             assert_eq!(r.matrix().unwrap().row(0), &[1.0, 2.0]);
         }
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn huge_length_prefix_errors_instead_of_allocating() {
+        // A corrupt length prefix must fail with an io::Error (EOF or
+        // InvalidData), never attempt the multi-terabyte allocation.
+        let mut evil = Vec::new();
+        evil.extend_from_slice(&u64::MAX.to_le_bytes());
+        evil.extend_from_slice(&[1, 2, 3, 4]);
+        let mut r = BinReader::new(&evil[..]);
+        assert!(r.u32_slice().is_err());
+        let mut r = BinReader::new(&evil[..]);
+        assert!(r.f32_slice().is_err());
+        let mut r = BinReader::new(&evil[..]);
+        assert!(r.u8_slice().is_err());
+        // Matrix with overflowing rows*cols.
+        let mut evil = Vec::new();
+        evil.extend_from_slice(&(u64::MAX / 2).to_le_bytes()); // rows
+        evil.extend_from_slice(&8u64.to_le_bytes()); // cols
+        let mut r = BinReader::new(&evil[..]);
+        assert!(r.matrix().is_err());
     }
 
     #[test]

@@ -6,6 +6,16 @@
 //! Format (little-endian, length-prefixed; see `data::io::BinWriter`):
 //!   magic "FNGR" u64 | version u64 | kind tag u64 | data matrix |
 //!   family payload (written by the implementor's `save_payload`).
+//!
+//! Version history: v3 added the tagged single-index bundle; v4 adds the
+//! sharded bundle (`TAG_SHARDED`): the payload is a shard manifest
+//! (strategy, probe fraction, per-shard global-id maps + centroids)
+//! followed by one nested tagged sub-index bundle per shard, each with
+//! its own data matrix. v3 files still load; sharded bundles require v4.
+//! The manifest is fully validated at load — coverage (every point in
+//! exactly one shard), ascending id maps, shard rows bitwise-equal to the
+//! parent matrix — so a corrupt or truncated file fails with
+//! `InvalidData` instead of serving wrong ids.
 
 use std::io;
 use std::path::Path;
@@ -21,13 +31,16 @@ use crate::graph::vamana::{Vamana, VamanaParams};
 use crate::index::impls::{
     BruteForce, FingerHnswIndex, HnswIndex, IvfPqIndex, NnDescentIndex, VamanaIndex,
 };
+use crate::index::sharded::{ShardParts, ShardStrategy, ShardedIndex};
 use crate::index::AnnIndex;
 use crate::quant::ivfpq::{IvfPq, IvfPqParams};
 use crate::quant::kmeans::KMeans;
 use crate::quant::pq::{Pq, PqParams};
 
 const MAGIC: u64 = 0x464E_4752; // "FNGR"
-const VERSION: u64 = 3;
+const VERSION: u64 = 4;
+/// Oldest format still readable (v3 single-index bundles).
+const MIN_VERSION: u64 = 3;
 
 /// Stable family tags (never renumber).
 pub const TAG_HNSW: u64 = 1;
@@ -36,6 +49,7 @@ pub const TAG_VAMANA: u64 = 3;
 pub const TAG_NNDESCENT: u64 = 4;
 pub const TAG_IVFPQ: u64 = 5;
 pub const TAG_BRUTEFORCE: u64 = 6;
+pub const TAG_SHARDED: u64 = 7;
 
 fn bad(msg: &str) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg)
@@ -433,33 +447,49 @@ pub fn load_index(path: &Path) -> io::Result<Box<dyn AnnIndex>> {
         return Err(bad("not a finger-ann index file"));
     }
     let version = r.u64()?;
-    if version != VERSION {
+    if !(MIN_VERSION..=VERSION).contains(&version) {
         return Err(bad("unsupported index version"));
     }
     let tag = r.u64()?;
     let data = Arc::new(r.matrix()?);
+    if tag == TAG_SHARDED {
+        if version < 4 {
+            return Err(bad("sharded bundles require format v4"));
+        }
+        return Ok(Box::new(load_sharded(&mut r, data)?));
+    }
+    load_family(tag, data, &mut r)
+}
+
+/// Load + validate one non-sharded family payload (the body shared by the
+/// top-level loader and each nested shard bundle).
+fn load_family<R: io::Read>(
+    tag: u64,
+    data: Arc<crate::core::matrix::Matrix>,
+    r: &mut BinReader<R>,
+) -> io::Result<Box<dyn AnnIndex>> {
     let n = data.rows();
     Ok(match tag {
         TAG_HNSW => {
-            let hnsw = load_hnsw(&mut r)?;
+            let hnsw = load_hnsw(r)?;
             validate_hnsw(&hnsw, n)?;
             Box::new(HnswIndex::from_parts(data, hnsw))
         }
         TAG_FINGER => {
-            let hnsw = load_hnsw(&mut r)?;
-            let index = load_finger(&mut r)?;
+            let hnsw = load_hnsw(r)?;
+            let index = load_finger(r)?;
             validate_hnsw(&hnsw, n)?;
             validate_finger(&index, &hnsw, n)?;
             Box::new(FingerHnswIndex::from_parts(data, FingerHnsw { hnsw, index }))
         }
         TAG_VAMANA => {
-            let v = load_vamana(&mut r)?;
+            let v = load_vamana(r)?;
             check_id(v.medoid, n)?;
             check_adj(&v.adj, n)?;
             Box::new(VamanaIndex::from_parts(data, v))
         }
         TAG_NNDESCENT => {
-            let g = load_nndescent(&mut r)?;
+            let g = load_nndescent(r)?;
             for &p in &g.entry_probes {
                 check_id(p, n)?;
             }
@@ -467,13 +497,82 @@ pub fn load_index(path: &Path) -> io::Result<Box<dyn AnnIndex>> {
             Box::new(NnDescentIndex::from_parts(data, g))
         }
         TAG_IVFPQ => {
-            let q = load_ivfpq(&mut r)?;
+            let q = load_ivfpq(r)?;
             validate_ivfpq(&q, n, data.cols())?;
             Box::new(IvfPqIndex::from_parts(data, q))
         }
         TAG_BRUTEFORCE => Box::new(BruteForce::new(data)),
         _ => return Err(bad("unknown index kind tag")),
     })
+}
+
+/// Load + validate a sharded bundle: manifest first, then one nested
+/// tagged sub-index per shard. Rejects anything short of a full, exact
+/// partition of the parent matrix.
+fn load_sharded<R: io::Read>(
+    r: &mut BinReader<R>,
+    data: Arc<crate::core::matrix::Matrix>,
+) -> io::Result<ShardedIndex> {
+    let n = data.rows();
+    let dim = data.cols();
+    let strategy =
+        ShardStrategy::from_tag(r.u64()?).ok_or_else(|| bad("unknown shard strategy"))?;
+    let fv = r.f32_slice()?;
+    if fv.len() != 1 || !fv[0].is_finite() || fv[0] <= 0.0 || fv[0] > 1.0 {
+        return Err(bad("implausible min_shard_frac"));
+    }
+    let s = r.u64()? as usize;
+    if s == 0 || s > n.max(1) {
+        return Err(bad("implausible shard count"));
+    }
+    let mut seen = vec![false; n];
+    let mut parts: Vec<ShardParts> = Vec::with_capacity(s);
+    for _ in 0..s {
+        let global_ids = r.u32_slice()?;
+        if global_ids.is_empty() {
+            return Err(bad("empty shard in manifest"));
+        }
+        if global_ids.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(bad("shard id map not ascending"));
+        }
+        for &g in &global_ids {
+            let gi = g as usize;
+            if gi >= n {
+                return Err(bad("shard id out of range"));
+            }
+            if seen[gi] {
+                return Err(bad("point assigned to two shards"));
+            }
+            seen[gi] = true;
+        }
+        let centroid = r.f32_slice()?;
+        if centroid.len() != dim {
+            return Err(bad("shard centroid shape mismatch"));
+        }
+        let sub_tag = r.u64()?;
+        if sub_tag == TAG_SHARDED {
+            return Err(bad("nested sharded index"));
+        }
+        let sub = Arc::new(r.matrix()?);
+        if sub.rows() != global_ids.len() || sub.cols() != dim {
+            return Err(bad("shard data shape mismatch"));
+        }
+        for (j, &g) in global_ids.iter().enumerate() {
+            let same = sub
+                .row(j)
+                .iter()
+                .zip(data.row(g as usize))
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            if !same {
+                return Err(bad("shard rows diverge from parent matrix"));
+            }
+        }
+        parts.push((load_family(sub_tag, sub, r)?, global_ids, centroid));
+    }
+    if !seen.iter().all(|&x| x) {
+        return Err(bad("shard manifest does not cover every point"));
+    }
+    Ok(ShardedIndex::from_parts(data, parts, strategy, fv[0], 0))
 }
 
 #[cfg(test)]
@@ -502,12 +601,83 @@ mod tests {
             assert_eq!(loaded.dim(), index.dim());
             for qi in 0..ds.queries.rows() {
                 let q = ds.queries.row(qi);
-                let a: Vec<u32> = index.search(q, &params, &mut ctx).iter().map(|n| n.id).collect();
-                let b: Vec<u32> = loaded.search(q, &params, &mut ctx).iter().map(|n| n.id).collect();
+                let a: Vec<u32> =
+                    index.search(q, &params, &mut ctx).iter().map(|n| n.id).collect();
+                let b: Vec<u32> =
+                    loaded.search(q, &params, &mut ctx).iter().map(|n| n.id).collect();
                 assert_eq!(a, b, "{} query {qi}", index.name());
             }
             std::fs::remove_file(&path).ok();
         }
+    }
+
+    #[test]
+    fn sharded_roundtrip_preserves_results_for_every_family() {
+        let ds = tiny(405, 240, 12, Metric::L2);
+        let mut ctx = SearchContext::new();
+        let params = SearchParams::new(10).with_ef(40);
+        for index in crate::index::build_all_families_sharded(Arc::clone(&ds.data), 3) {
+            let path = tmp(&format!("{}.idx", index.name()));
+            save_index(&path, index.as_ref()).unwrap();
+            let loaded = load_index(&path).unwrap();
+            assert_eq!(loaded.name(), index.name());
+            assert_eq!(loaded.kind_tag(), TAG_SHARDED);
+            assert_eq!(loaded.len(), index.len());
+            for qi in 0..ds.queries.rows() {
+                let q = ds.queries.row(qi);
+                let a: Vec<u32> =
+                    index.search(q, &params, &mut ctx).iter().map(|n| n.id).collect();
+                let b: Vec<u32> =
+                    loaded.search(q, &params, &mut ctx).iter().map(|n| n.id).collect();
+                assert_eq!(a, b, "{} query {qi}", index.name());
+            }
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn sharded_rejects_corrupt_and_truncated_manifests() {
+        use crate::index::sharded::{ShardSpec, ShardedIndex};
+        let ds = tiny(406, 60, 6, Metric::L2);
+        let spec = ShardSpec { n_shards: 3, ..Default::default() };
+        let idx = ShardedIndex::build(Arc::clone(&ds.data), &spec, |sub| -> Box<dyn AnnIndex> {
+            Box::new(crate::index::impls::BruteForce::new(sub))
+        });
+        let path = tmp("sharded_ok.idx");
+        save_index(&path, &idx).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        // Truncation anywhere in the manifest/sub-bundles must fail cleanly.
+        for cut in [bytes.len() / 4, bytes.len() / 2, bytes.len() - 3] {
+            let p = tmp(&format!("sharded_trunc_{cut}.idx"));
+            std::fs::write(&p, &bytes[..cut]).unwrap();
+            assert!(load_index(&p).is_err(), "truncated at {cut} still loaded");
+            std::fs::remove_file(&p).ok();
+        }
+
+        // Flip the shard count (first manifest word after strategy+frac):
+        // header = 3 u64 + matrix (2 u64 + len u64 + n*dim f32), then
+        // strategy u64 + frac (len u64 + 1 f32) + n_shards u64.
+        let n_shards_off = 8 * 3 + (8 * 2 + 8 + 60 * 6 * 4) + 8 + (8 + 4);
+        let mut corrupt = bytes.clone();
+        corrupt[n_shards_off..n_shards_off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let p = tmp("sharded_badcount.idx");
+        std::fs::write(&p, &corrupt).unwrap();
+        let err = load_index(&p).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        std::fs::remove_file(&p).ok();
+
+        // Corrupt a global id inside the first shard's id map so the
+        // partition no longer covers every point.
+        let ids_off = n_shards_off + 8 + 8; // + n_shards u64 + id-slice len u64
+        let mut corrupt = bytes.clone();
+        corrupt[ids_off..ids_off + 4].copy_from_slice(&3u32.to_le_bytes());
+        let p = tmp("sharded_badids.idx");
+        std::fs::write(&p, &corrupt).unwrap();
+        let err = load_index(&p).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

@@ -7,10 +7,12 @@
 //! sweeps `&dyn AnnIndex` directly, so any implementor — including ones
 //! loaded from disk — gets a curve with zero glue code.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::core::matrix::Matrix;
 use crate::eval::recall::recall;
+use crate::index::sharded::{ShardSpec, ShardedIndex};
 use crate::index::{AnnIndex, SearchContext, SearchParams};
 
 /// One measured point of a throughput/recall curve.
@@ -118,6 +120,36 @@ pub fn sweep_efs(
     run_sweep(None, index, queries, gt, k, &ef_grid(k, efs))
 }
 
+/// Sweep shard counts the way `sweep_efs` sweeps beam widths: for each
+/// `S` in `shard_counts`, partition `data` under `spec` (its `n_shards`
+/// is overridden), build one sub-index per shard with `build_shard`, and
+/// measure the sharded index at fixed `params`. Points are labeled
+/// `shards=S`, so the resulting CSV plots a throughput/recall curve along
+/// the data-parallelism axis.
+pub fn sweep_shard_counts<F>(
+    label: &str,
+    data: &Arc<Matrix>,
+    queries: &Matrix,
+    gt: &[Vec<u32>],
+    k: usize,
+    shard_counts: &[usize],
+    spec: &ShardSpec,
+    params: &SearchParams,
+    build_shard: F,
+) -> Vec<SweepPoint>
+where
+    F: Fn(Arc<Matrix>) -> Box<dyn AnnIndex> + Sync,
+{
+    let mut out = Vec::new();
+    for &s in shard_counts {
+        let spec = ShardSpec { n_shards: s, ..spec.clone() };
+        let index = ShardedIndex::build(Arc::clone(data), &spec, &build_shard);
+        let grid = vec![(format!("shards={s}"), params.clone())];
+        out.extend(run_sweep(Some(label), &index, queries, gt, k, &grid));
+    }
+    out
+}
+
 /// Convenience: sweep IVF-PQ over an `n_probe` grid.
 pub fn sweep_probes(
     index: &dyn AnnIndex,
@@ -191,6 +223,31 @@ mod tests {
         // Brute force is exact by construction.
         let pts = sweep_efs(&bf, &ds.queries, &gt, 10, &[10]);
         assert!((pts[0].recall10 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shard_count_sweep_produces_labeled_points() {
+        let ds = tiny(113, 400, 12, Metric::L2);
+        let gt = exact_knn(&ds.data, &ds.queries, 10);
+        let pts = sweep_shard_counts(
+            "sharded-bf",
+            &ds.data,
+            &ds.queries,
+            &gt,
+            10,
+            &[1, 2, 4],
+            &ShardSpec::default(),
+            &SearchParams::new(10),
+            |sub| -> Box<dyn AnnIndex> { Box::new(BruteForce::new(sub)) },
+        );
+        assert_eq!(pts.len(), 3);
+        let labels: Vec<&str> = pts.iter().map(|p| p.param.as_str()).collect();
+        assert_eq!(labels, vec!["shards=1", "shards=2", "shards=4"]);
+        // Brute force stays exact at every shard count.
+        for p in &pts {
+            assert_eq!(p.method, "sharded-bf");
+            assert!((p.recall10 - 1.0).abs() < 1e-9, "{}: {}", p.param, p.recall10);
+        }
     }
 
     #[test]

@@ -27,6 +27,9 @@ type PayloadWriter<'a, 'b> = &'a mut BinWriter<&'b mut dyn io::Write>;
 /// One small instance of every family over `data` — shared by the
 /// persistence-roundtrip and trait-conformance suites (and handy for
 /// demos), so a new family is registered in exactly one place.
+/// When adding a family here, mirror it in
+/// [`crate::index::sharded::build_all_families_sharded`] (and its label
+/// match) so the sharded conformance coverage keeps pace.
 pub fn build_all_families(data: Arc<Matrix>) -> Vec<Box<dyn AnnIndex>> {
     vec![
         Box::new(BruteForce::new(Arc::clone(&data))),

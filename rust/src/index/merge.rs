@@ -1,0 +1,110 @@
+//! Scatter-gather result merging for [`crate::index::sharded::ShardedIndex`].
+//!
+//! Each shard returns its local top-k ascending by `Neighbor`'s total
+//! order (distance, then id). After local→global id remapping the lists
+//! stay sorted — shard membership is recorded in ascending global-id
+//! order, so the remap is monotone — and a k-way streaming merge yields
+//! the global top-k without materializing the full union. Because global
+//! ids are unique across shards, the merged order is exactly the
+//! brute-force total order over the union, ties included (proven in
+//! `rust/tests/shard_props.rs`).
+
+use std::collections::BinaryHeap;
+
+use crate::graph::search::{MinNeighbor, Neighbor};
+
+/// Rewrite shard-local ids to global ids in place. `global_ids[local]`
+/// must be the global row id of the shard's local row `local`.
+pub fn remap_to_global(res: &mut [Neighbor], global_ids: &[u32]) {
+    for n in res.iter_mut() {
+        n.id = global_ids[n.id as usize];
+    }
+}
+
+/// Streaming k-way merge of ascending per-shard result lists into the
+/// global top-`k`, ascending by (distance, id). Pops one head at a time
+/// from a heap of list cursors, so cost is O(k log S) after the heap is
+/// seeded — it never sorts the whole union.
+pub fn merge_topk(lists: &[Vec<Neighbor>], k: usize) -> Vec<Neighbor> {
+    // Heap entries are (head, list index); `MinNeighbor` flips the max-heap
+    // so the smallest (dist, id) pops first. The list index only breaks
+    // exact (dist, id) duplicates, which cannot occur for distinct points.
+    let mut heap: BinaryHeap<(MinNeighbor, usize)> = BinaryHeap::with_capacity(lists.len());
+    let mut cursor = vec![0usize; lists.len()];
+    for (li, list) in lists.iter().enumerate() {
+        if let Some(&head) = list.first() {
+            heap.push((MinNeighbor(head), li));
+            cursor[li] = 1;
+        }
+    }
+    let total: usize = lists.iter().map(|l| l.len()).sum();
+    let mut out = Vec::with_capacity(k.min(total));
+    while out.len() < k {
+        let Some((MinNeighbor(nb), li)) = heap.pop() else {
+            break;
+        };
+        out.push(nb);
+        if cursor[li] < lists[li].len() {
+            heap.push((MinNeighbor(lists[li][cursor[li]]), li));
+            cursor[li] += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nb(dist: f32, id: u32) -> Neighbor {
+        Neighbor { dist, id }
+    }
+
+    #[test]
+    fn merges_sorted_lists_ascending() {
+        let lists = vec![
+            vec![nb(0.1, 3), nb(0.5, 1), nb(2.0, 9)],
+            vec![nb(0.2, 4), nb(0.3, 7)],
+            vec![nb(1.0, 0)],
+        ];
+        let got = merge_topk(&lists, 4);
+        let ids: Vec<u32> = got.iter().map(|n| n.id).collect();
+        assert_eq!(ids, vec![3, 4, 7, 1]);
+        for w in got.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn ties_break_by_global_id() {
+        let lists = vec![
+            vec![nb(1.0, 5), nb(1.0, 8)],
+            vec![nb(1.0, 2), nb(1.0, 6)],
+        ];
+        let ids: Vec<u32> = merge_topk(&lists, 3).iter().map(|n| n.id).collect();
+        assert_eq!(ids, vec![2, 5, 6]);
+    }
+
+    #[test]
+    fn k_beyond_total_returns_everything() {
+        let lists = vec![vec![nb(0.5, 1)], Vec::new(), vec![nb(0.2, 2)]];
+        let got = merge_topk(&lists, 10);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].id, 2);
+    }
+
+    #[test]
+    fn empty_input_is_empty() {
+        assert!(merge_topk(&[], 5).is_empty());
+        assert!(merge_topk(&[Vec::new(), Vec::new()], 5).is_empty());
+        assert!(merge_topk(&[vec![nb(1.0, 1)]], 0).is_empty());
+    }
+
+    #[test]
+    fn remap_rewrites_local_ids() {
+        let mut res = vec![nb(0.1, 0), nb(0.2, 2), nb(0.3, 1)];
+        remap_to_global(&mut res, &[10, 20, 30]);
+        let ids: Vec<u32> = res.iter().map(|n| n.id).collect();
+        assert_eq!(ids, vec![10, 30, 20]);
+    }
+}

@@ -16,15 +16,19 @@
 //! | `vamana`        | DiskANN flat graph             | `graph::vamana`   |
 //! | `nndescent`     | NN-descent KNN graph           | `graph::nndescent`|
 //! | `ivfpq`         | IVF-PQ + exact re-rank         | `quant::ivfpq`    |
+//! | `sharded-*`     | scatter-gather over any family | `index::sharded`  |
 
 pub mod context;
 pub mod impls;
+pub mod merge;
+pub mod sharded;
 
 pub use context::{SearchContext, SearchParams};
 pub use impls::{
     build_all_families, BruteForce, FingerHnswIndex, FingerView, HnswIndex, IvfPqIndex,
     NnDescentIndex, VamanaIndex,
 };
+pub use sharded::{build_all_families_sharded, ShardSpec, ShardStrategy, ShardedIndex};
 
 use std::io;
 

@@ -1,0 +1,698 @@
+//! Sharded scatter-gather index: data parallelism on top of any
+//! [`AnnIndex`] family (the orthogonal axis to FINGER's per-query
+//! speedup — partitioned deployments are how graph indexes reach
+//! billion-scale in practice).
+//!
+//! A [`ShardedIndex`] partitions the dataset across `S` shards
+//! (round-robin or k-means assignment), builds one self-contained
+//! sub-index per shard in parallel, and implements [`AnnIndex`] itself:
+//! a query scatters to the probed shards, each shard answers from its own
+//! local id space, results are remapped local→global and k-way merged
+//! (see [`crate::index::merge`]). `batch_search` fans a whole query batch
+//! out across shards — one worker per shard, each with its own pooled
+//! [`SearchContext`] — which is what the router's dynamic batcher feeds.
+//!
+//! The `min_shard_frac` knob trades speed for recall: probe only the
+//! nearest `ceil(frac·S)` shards by query-to-centroid distance instead of
+//! all of them (1.0, the default, probes everything and is exact with a
+//! brute-force sub-index).
+
+use std::io;
+use std::sync::{Arc, Mutex};
+
+use crate::core::distance::l2_sq;
+use crate::core::matrix::Matrix;
+use crate::core::threads::{default_threads, parallel_for};
+use crate::data::io::BinWriter;
+use crate::data::persist;
+use crate::graph::search::{Neighbor, SearchStats};
+use crate::index::context::{SearchContext, SearchParams};
+use crate::index::merge::{merge_topk, remap_to_global};
+use crate::index::AnnIndex;
+use crate::quant::kmeans::KMeans;
+
+/// How points are assigned to shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardStrategy {
+    /// Point `i` goes to shard `i % S` — balanced by construction, every
+    /// shard sees the full data distribution.
+    RoundRobin,
+    /// K-means clustering with `S` centroids — locality-preserving, so
+    /// low `min_shard_frac` probes lose little recall.
+    KMeans,
+}
+
+impl ShardStrategy {
+    pub fn parse(s: &str) -> Option<ShardStrategy> {
+        match s {
+            "round-robin" | "roundrobin" | "rr" => Some(ShardStrategy::RoundRobin),
+            "kmeans" | "k-means" => Some(ShardStrategy::KMeans),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardStrategy::RoundRobin => "round-robin",
+            ShardStrategy::KMeans => "kmeans",
+        }
+    }
+
+    /// Stable persistence tag (never renumber).
+    pub fn tag(self) -> u64 {
+        match self {
+            ShardStrategy::RoundRobin => 0,
+            ShardStrategy::KMeans => 1,
+        }
+    }
+
+    pub fn from_tag(tag: u64) -> Option<ShardStrategy> {
+        match tag {
+            0 => Some(ShardStrategy::RoundRobin),
+            1 => Some(ShardStrategy::KMeans),
+            _ => None,
+        }
+    }
+}
+
+/// Build-time sharding configuration.
+#[derive(Clone, Debug)]
+pub struct ShardSpec {
+    /// Number of shards (clamped to `[1, n]` at build).
+    pub n_shards: usize,
+    pub strategy: ShardStrategy,
+    /// Seed for k-means assignment (round-robin ignores it).
+    pub seed: u64,
+    pub kmeans_iters: usize,
+    /// Worker threads for the per-shard builds and batched scatter
+    /// (0 = [`default_threads`]).
+    pub threads: usize,
+}
+
+impl Default for ShardSpec {
+    fn default() -> ShardSpec {
+        ShardSpec {
+            n_shards: 4,
+            strategy: ShardStrategy::RoundRobin,
+            seed: 42,
+            kmeans_iters: 10,
+            threads: 0,
+        }
+    }
+}
+
+/// One shard: a self-contained sub-index over a copy of its rows, the
+/// local→global id map (ascending, so remapping preserves result order),
+/// the shard centroid for probe ranking, and a pooled search context for
+/// the parallel batch path.
+pub struct Shard {
+    pub index: Box<dyn AnnIndex>,
+    /// `global_ids[local_row] = global_row`; strictly ascending.
+    pub global_ids: Vec<u32>,
+    /// Mean of the shard's rows (probe ordering for `min_shard_frac`).
+    pub centroid: Vec<f32>,
+    /// Per-shard scratch so the scatter phase of `batch_search` needs no
+    /// allocation or sharing across worker threads.
+    ctx: Mutex<SearchContext>,
+}
+
+/// One shard's parts for [`ShardedIndex::from_parts`]: (sub-index,
+/// ascending global ids, centroid).
+pub type ShardParts = (Box<dyn AnnIndex>, Vec<u32>, Vec<f32>);
+
+/// A sharded index over any `AnnIndex` family. See the module docs.
+pub struct ShardedIndex {
+    /// The full (unpartitioned) data matrix; row id == global id.
+    pub data: Arc<Matrix>,
+    pub shards: Vec<Shard>,
+    pub strategy: ShardStrategy,
+    /// Fraction of shards probed per query, in (0, 1]; 1.0 = all.
+    min_shard_frac: f32,
+    threads: usize,
+    label: &'static str,
+}
+
+/// Assign every row to a shard under `spec.strategy`, then rebalance so no
+/// shard is empty (k-means can starve a centroid; an empty shard cannot
+/// host a graph index). Deterministic for a fixed spec.
+pub fn assign_shards(data: &Matrix, n_shards: usize, spec: &ShardSpec) -> Vec<u32> {
+    let n = data.rows();
+    let s = n_shards.max(1);
+    let mut assignment: Vec<u32> = match spec.strategy {
+        ShardStrategy::RoundRobin => (0..n).map(|i| (i % s) as u32).collect(),
+        ShardStrategy::KMeans => {
+            let km = KMeans::train(data, s, spec.kmeans_iters, spec.seed);
+            (0..n).map(|i| km.assign(data.row(i)) as u32).collect()
+        }
+    };
+    rebalance(&mut assignment, s);
+    assignment
+}
+
+/// Move points from the largest shard into empty ones until every shard
+/// is populated (requires `n >= s`; callers clamp). Deterministic: the
+/// donor is the last-largest shard, the moved point its highest id.
+fn rebalance(assignment: &mut [u32], s: usize) {
+    if assignment.len() < s {
+        return;
+    }
+    loop {
+        let mut counts = vec![0usize; s];
+        for &a in assignment.iter() {
+            counts[a as usize] += 1;
+        }
+        let Some(empty) = counts.iter().position(|&c| c == 0) else {
+            return;
+        };
+        let donor = counts
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, &c)| c)
+            .map(|(i, _)| i)
+            .unwrap();
+        let victim = assignment
+            .iter()
+            .rposition(|&a| a as usize == donor)
+            .unwrap();
+        assignment[victim] = empty as u32;
+    }
+}
+
+fn centroid_of(m: &Matrix) -> Vec<f32> {
+    let (rows, cols) = (m.rows(), m.cols());
+    let mut acc = vec![0.0f64; cols];
+    for i in 0..rows {
+        for (a, &v) in acc.iter_mut().zip(m.row(i)) {
+            *a += v as f64;
+        }
+    }
+    let inv = 1.0 / rows.max(1) as f64;
+    acc.into_iter().map(|a| (a * inv) as f32).collect()
+}
+
+/// Static display label: "sharded-<family>" for a homogeneous fleet.
+fn sharded_label(inner: &str) -> &'static str {
+    match inner {
+        "bruteforce" => "sharded-bruteforce",
+        "hnsw" => "sharded-hnsw",
+        "hnsw-finger" => "sharded-hnsw-finger",
+        "vamana" => "sharded-vamana",
+        "nndescent" => "sharded-nndescent",
+        "ivfpq" => "sharded-ivfpq",
+        _ => "sharded",
+    }
+}
+
+impl ShardedIndex {
+    /// Partition `data` per `spec` and build one sub-index per shard with
+    /// `build_shard` (called with the shard's own `Arc<Matrix>`), fanning
+    /// the builds out over [`parallel_for`].
+    pub fn build<F>(data: Arc<Matrix>, spec: &ShardSpec, build_shard: F) -> ShardedIndex
+    where
+        F: Fn(Arc<Matrix>) -> Box<dyn AnnIndex> + Sync,
+    {
+        let n = data.rows();
+        let s = spec.n_shards.max(1).min(n.max(1));
+        let assignment = assign_shards(&data, s, spec);
+        let mut members: Vec<Vec<u32>> = vec![Vec::new(); s];
+        for (i, &a) in assignment.iter().enumerate() {
+            members[a as usize].push(i as u32);
+        }
+        let dim = data.cols();
+        let subdata: Vec<Arc<Matrix>> = members
+            .iter()
+            .map(|ids| {
+                let mut m = Matrix::zeros(0, dim);
+                for &id in ids {
+                    m.push_row(data.row(id as usize));
+                }
+                Arc::new(m)
+            })
+            .collect();
+
+        let threads = if spec.threads == 0 { default_threads() } else { spec.threads };
+        let slots: Vec<Mutex<Option<Box<dyn AnnIndex>>>> =
+            (0..s).map(|_| Mutex::new(None)).collect();
+        parallel_for(s, threads, |si| {
+            let built = build_shard(Arc::clone(&subdata[si]));
+            *slots[si].lock().unwrap() = Some(built);
+        });
+
+        let parts: Vec<ShardParts> = slots
+            .into_iter()
+            .zip(members)
+            .zip(&subdata)
+            .map(|((slot, global_ids), sub)| {
+                let index = slot.into_inner().unwrap().expect("shard build produced no index");
+                (index, global_ids, centroid_of(sub))
+            })
+            .collect();
+        ShardedIndex::from_parts(data, parts, spec.strategy, 1.0, threads)
+    }
+
+    /// Assemble from prebuilt shards (the persistence loader's entry).
+    /// Each tuple is (sub-index, ascending global ids, centroid).
+    pub fn from_parts(
+        data: Arc<Matrix>,
+        parts: Vec<ShardParts>,
+        strategy: ShardStrategy,
+        min_shard_frac: f32,
+        threads: usize,
+    ) -> ShardedIndex {
+        assert!(!parts.is_empty(), "sharded index needs at least one shard");
+        let first = parts[0].0.name();
+        let homogeneous = parts.iter().all(|(ix, _, _)| ix.name() == first);
+        let label = if homogeneous { sharded_label(first) } else { "sharded" };
+        let shards = parts
+            .into_iter()
+            .map(|(index, global_ids, centroid)| Shard {
+                index,
+                global_ids,
+                centroid,
+                ctx: Mutex::new(SearchContext::new()),
+            })
+            .collect();
+        ShardedIndex {
+            data,
+            shards,
+            strategy,
+            min_shard_frac: 1.0f32.min(min_shard_frac.max(1e-6)),
+            threads: if threads == 0 { default_threads() } else { threads },
+            label,
+        }
+    }
+
+    /// Probe only the nearest `ceil(frac · S)` shards per query.
+    pub fn with_min_shard_frac(mut self, frac: f32) -> ShardedIndex {
+        self.min_shard_frac = 1.0f32.min(frac.max(1e-6));
+        self
+    }
+
+    pub fn min_shard_frac(&self) -> f32 {
+        self.min_shard_frac
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shards probed per query under the current `min_shard_frac`.
+    pub fn probe_count(&self) -> usize {
+        let s = self.shards.len();
+        (((self.min_shard_frac as f64) * s as f64).ceil() as usize).clamp(1, s)
+    }
+
+    /// Reconstruct the point→shard assignment (determinism checks).
+    pub fn assignment(&self) -> Vec<u32> {
+        let mut out = vec![0u32; self.data.rows()];
+        for (si, shard) in self.shards.iter().enumerate() {
+            for &gid in &shard.global_ids {
+                out[gid as usize] = si as u32;
+            }
+        }
+        out
+    }
+
+    /// Shard indices to probe for `q`, ascending. With a partial probe the
+    /// shards are ranked by centroid distance (counted as `dist_calls`).
+    fn probe_set(&self, q: &[f32], ctx: &mut SearchContext) -> Vec<usize> {
+        let s = self.shards.len();
+        let p = self.probe_count();
+        if p >= s {
+            return (0..s).collect();
+        }
+        if ctx.stats_enabled {
+            ctx.stats.dist_calls += s as u64;
+        }
+        let mut order: Vec<(f32, usize)> = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, sh)| (l2_sq(q, &sh.centroid), i))
+            .collect();
+        order.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        order.truncate(p);
+        let mut probe: Vec<usize> = order.into_iter().map(|(_, i)| i).collect();
+        probe.sort_unstable();
+        probe
+    }
+}
+
+impl AnnIndex for ShardedIndex {
+    fn name(&self) -> &'static str {
+        self.label
+    }
+
+    fn dim(&self) -> usize {
+        self.data.cols()
+    }
+
+    fn len(&self) -> usize {
+        self.data.rows()
+    }
+
+    fn data(&self) -> &Matrix {
+        &self.data
+    }
+
+    fn nbytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|sh| {
+                sh.index.nbytes()
+                    + sh.index.data().nbytes() // per-shard row copy
+                    + sh.global_ids.len() * 4
+                    + sh.centroid.len() * 4
+            })
+            .sum()
+    }
+
+    fn approx_rank(&self) -> usize {
+        self.shards.iter().map(|sh| sh.index.approx_rank()).max().unwrap_or(0)
+    }
+
+    /// Scatter to the probed shards sequentially (the caller's pooled
+    /// context serves every shard), remap, merge. Parallelism across
+    /// shards lives in `batch_search`.
+    fn search(&self, q: &[f32], params: &SearchParams, ctx: &mut SearchContext) -> Vec<Neighbor> {
+        let probe = self.probe_set(q, ctx);
+        let mut lists: Vec<Vec<Neighbor>> = Vec::with_capacity(probe.len());
+        for &si in &probe {
+            let shard = &self.shards[si];
+            let mut res = shard.index.search(q, params, ctx);
+            remap_to_global(&mut res, &shard.global_ids);
+            lists.push(res);
+        }
+        merge_topk(&lists, params.k)
+    }
+
+    /// Fan the whole batch out across shards: one worker per shard, each
+    /// answering every query that probes it with the shard's own pooled
+    /// context, then a per-query merge. Identical results to looping
+    /// `search` (both run the same per-shard searches and the same
+    /// deterministic merge).
+    fn batch_search(
+        &self,
+        queries: &Matrix,
+        params: &SearchParams,
+        ctx: &mut SearchContext,
+    ) -> Vec<Vec<Neighbor>> {
+        let nq = queries.rows();
+        let s = self.shards.len();
+        if nq == 0 {
+            return Vec::new();
+        }
+        // Scoped-thread scatter only pays off when there is real fan-out;
+        // a single query or single shard runs sequentially on the caller's
+        // context (identical results — same searches, same merge).
+        if nq == 1 || s == 1 || self.threads == 1 {
+            return (0..nq)
+                .map(|qi| self.search(queries.row(qi), params, ctx))
+                .collect();
+        }
+        let probe: Vec<Vec<usize>> = (0..nq)
+            .map(|qi| self.probe_set(queries.row(qi), ctx))
+            .collect();
+        let want_stats = ctx.stats_enabled;
+        let slots: Vec<Mutex<Vec<Option<Vec<Neighbor>>>>> =
+            (0..s).map(|_| Mutex::new(Vec::new())).collect();
+        // Per-call stats accumulator: each worker drains its shard's stats
+        // while still holding that shard's context lock, so a concurrent
+        // batch_search on the same index can never steal or clobber them.
+        // Merge order across shards is scheduling-dependent but `merge`
+        // only sums, so the aggregate stays deterministic.
+        let agg_stats = Mutex::new(SearchStats::default());
+        parallel_for(s, self.threads, |si| {
+            let shard = &self.shards[si];
+            let mut out: Vec<Option<Vec<Neighbor>>> = vec![None; nq];
+            let mut sctx = shard.ctx.lock().unwrap();
+            sctx.stats_enabled = want_stats;
+            if want_stats {
+                sctx.reset_stats();
+            }
+            for qi in 0..nq {
+                if probe[qi].contains(&si) {
+                    let mut res = shard.index.search(queries.row(qi), params, &mut sctx);
+                    remap_to_global(&mut res, &shard.global_ids);
+                    out[qi] = Some(res);
+                }
+            }
+            if want_stats {
+                let stats = sctx.take_stats();
+                agg_stats.lock().unwrap().merge(&stats);
+            }
+            *slots[si].lock().unwrap() = out;
+        });
+        let mut per_shard: Vec<Vec<Option<Vec<Neighbor>>>> =
+            slots.into_iter().map(|m| m.into_inner().unwrap()).collect();
+        if want_stats {
+            ctx.stats.merge(&agg_stats.into_inner().unwrap());
+        }
+        (0..nq)
+            .map(|qi| {
+                let lists: Vec<Vec<Neighbor>> = probe[qi]
+                    .iter()
+                    .map(|&si| per_shard[si][qi].take().expect("probed shard answered"))
+                    .collect();
+                merge_topk(&lists, params.k)
+            })
+            .collect()
+    }
+
+    fn kind_tag(&self) -> u64 {
+        persist::TAG_SHARDED
+    }
+
+    /// Shard manifest + nested tagged sub-index bundles (format v4):
+    /// strategy | min_shard_frac | S | per shard: global_ids, centroid,
+    /// sub tag, sub data matrix, sub payload.
+    ///
+    /// Each nested bundle deliberately repeats the shard's rows even
+    /// though they duplicate slices of the parent matrix: every sub-bundle
+    /// is then exactly the standard `tag | data | payload` family body, so
+    /// the loader reuses `persist::load_family` verbatim and a future
+    /// multi-process deployment can ship one self-contained bundle per
+    /// shard node. The loader cross-checks the copies bitwise against the
+    /// parent, so the redundancy also acts as corruption detection. Cost:
+    /// the vector payload is stored twice per file.
+    fn save_payload(&self, w: &mut BinWriter<&mut dyn io::Write>) -> io::Result<()> {
+        w.u64(self.strategy.tag())?;
+        w.f32_slice(&[self.min_shard_frac])?;
+        w.u64(self.shards.len() as u64)?;
+        for shard in &self.shards {
+            w.u32_slice(&shard.global_ids)?;
+            w.f32_slice(&shard.centroid)?;
+            w.u64(shard.index.kind_tag())?;
+            w.matrix(shard.index.data())?;
+            shard.index.save_payload(w)?;
+        }
+        Ok(())
+    }
+}
+
+/// Sharded twin of [`crate::index::impls::build_all_families`]: every
+/// family wrapped in a `ShardedIndex`, same one-registration point for the
+/// conformance and persistence suites.
+///
+/// Kept in sync with the flat registry BY HAND — when a family is added
+/// there, add it here and to [`sharded_label`] too. Parameters
+/// intentionally differ where shard size demands it (e.g. `n_list: 8`
+/// here vs 16 flat: each shard holds ~n/S points, so fewer coarse cells).
+pub fn build_all_families_sharded(data: Arc<Matrix>, n_shards: usize) -> Vec<Box<dyn AnnIndex>> {
+    use crate::finger::construct::FingerParams;
+    use crate::graph::hnsw::HnswParams;
+    use crate::graph::nndescent::NnDescentParams;
+    use crate::graph::vamana::VamanaParams;
+    use crate::index::impls::{
+        BruteForce, FingerHnswIndex, HnswIndex, IvfPqIndex, NnDescentIndex, VamanaIndex,
+    };
+    use crate::quant::ivfpq::IvfPqParams;
+
+    let spec = ShardSpec { n_shards, ..Default::default() };
+    vec![
+        Box::new(ShardedIndex::build(Arc::clone(&data), &spec, |sub| -> Box<dyn AnnIndex> {
+            Box::new(BruteForce::new(sub))
+        })),
+        Box::new(ShardedIndex::build(Arc::clone(&data), &spec, |sub| -> Box<dyn AnnIndex> {
+            Box::new(HnswIndex::build(
+                sub,
+                HnswParams { m: 12, ef_construction: 80, ..Default::default() },
+            ))
+        })),
+        Box::new(ShardedIndex::build(Arc::clone(&data), &spec, |sub| -> Box<dyn AnnIndex> {
+            Box::new(FingerHnswIndex::build(
+                sub,
+                HnswParams { m: 12, ef_construction: 80, ..Default::default() },
+                FingerParams { rank: 8, ..Default::default() },
+            ))
+        })),
+        Box::new(ShardedIndex::build(Arc::clone(&data), &spec, |sub| -> Box<dyn AnnIndex> {
+            Box::new(VamanaIndex::build(sub, VamanaParams::default()))
+        })),
+        Box::new(ShardedIndex::build(Arc::clone(&data), &spec, |sub| -> Box<dyn AnnIndex> {
+            Box::new(NnDescentIndex::build(sub, NnDescentParams::default()))
+        })),
+        Box::new(ShardedIndex::build(data, &spec, |sub| -> Box<dyn AnnIndex> {
+            Box::new(IvfPqIndex::build(
+                sub,
+                IvfPqParams { n_list: 8, ..Default::default() },
+            ))
+        })),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::distance::Metric;
+    use crate::data::synth::tiny;
+    use crate::graph::bruteforce::scan;
+    use crate::index::impls::BruteForce;
+
+    fn sharded_bf(ds: &crate::data::Dataset, spec: &ShardSpec) -> ShardedIndex {
+        ShardedIndex::build(Arc::clone(&ds.data), spec, |sub| -> Box<dyn AnnIndex> {
+            Box::new(BruteForce::new(sub))
+        })
+    }
+
+    #[test]
+    fn round_robin_assignment_is_balanced() {
+        let ds = tiny(801, 103, 8, Metric::L2);
+        let spec = ShardSpec { n_shards: 4, ..Default::default() };
+        let idx = sharded_bf(&ds, &spec);
+        assert_eq!(idx.n_shards(), 4);
+        let sizes: Vec<usize> = idx.shards.iter().map(|s| s.global_ids.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 103);
+        assert!(sizes.iter().all(|&s| s == 25 || s == 26), "{sizes:?}");
+        // id i lives in shard i % 4 with ascending global ids.
+        for (si, shard) in idx.shards.iter().enumerate() {
+            assert!(shard.global_ids.windows(2).all(|w| w[0] < w[1]));
+            assert!(shard.global_ids.iter().all(|&g| g as usize % 4 == si));
+        }
+    }
+
+    #[test]
+    fn kmeans_assignment_covers_every_point_nonempty() {
+        let ds = tiny(802, 200, 8, Metric::L2);
+        let spec = ShardSpec {
+            n_shards: 6,
+            strategy: ShardStrategy::KMeans,
+            ..Default::default()
+        };
+        let idx = sharded_bf(&ds, &spec);
+        let mut seen = vec![false; 200];
+        for shard in &idx.shards {
+            assert!(!shard.global_ids.is_empty(), "empty shard after rebalance");
+            for &g in &shard.global_ids {
+                assert!(!seen[g as usize], "point {g} in two shards");
+                seen[g as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shard_count_clamped_to_n() {
+        let ds = tiny(803, 5, 4, Metric::L2);
+        let spec = ShardSpec { n_shards: 64, ..Default::default() };
+        let idx = sharded_bf(&ds, &spec);
+        assert_eq!(idx.n_shards(), 5);
+        assert!(idx.shards.iter().all(|s| s.global_ids.len() == 1));
+    }
+
+    #[test]
+    fn sharded_bruteforce_is_exact() {
+        let ds = tiny(804, 300, 12, Metric::L2);
+        for s in [1usize, 3, 7] {
+            let spec = ShardSpec { n_shards: s, ..Default::default() };
+            let idx = sharded_bf(&ds, &spec);
+            let mut ctx = SearchContext::new();
+            let params = SearchParams::new(10);
+            for qi in 0..ds.queries.rows() {
+                let q = ds.queries.row(qi);
+                let got = idx.search(q, &params, &mut ctx);
+                let want = scan(&ds.data, q, 10);
+                assert_eq!(got, want, "S={s} query {qi}");
+            }
+        }
+    }
+
+    #[test]
+    fn rebalance_fills_empty_shards() {
+        let mut a = vec![0u32, 0, 0, 0, 2];
+        rebalance(&mut a, 4);
+        let mut counts = [0usize; 4];
+        for &x in &a {
+            counts[x as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+    }
+
+    #[test]
+    fn min_shard_frac_controls_probe_count() {
+        let ds = tiny(805, 160, 8, Metric::L2);
+        let spec = ShardSpec { n_shards: 8, ..Default::default() };
+        let idx = sharded_bf(&ds, &spec);
+        assert_eq!(idx.probe_count(), 8);
+        let idx = idx.with_min_shard_frac(0.25);
+        assert_eq!(idx.probe_count(), 2);
+        let idx = idx.with_min_shard_frac(0.01);
+        assert_eq!(idx.probe_count(), 1);
+        // Partial probe still returns k well-formed ascending results.
+        let mut ctx = SearchContext::new();
+        let res = idx.search(ds.queries.row(0), &SearchParams::new(5), &mut ctx);
+        assert_eq!(res.len(), 5);
+        assert!(res.windows(2).all(|w| w[0].dist <= w[1].dist));
+    }
+
+    #[test]
+    fn kmeans_partial_probe_keeps_most_recall() {
+        // Clustered data + kmeans shards: probing half the shards should
+        // still find most true neighbors (locality), and full probe is exact.
+        let ds = tiny(806, 400, 16, Metric::L2);
+        let spec = ShardSpec {
+            n_shards: 4,
+            strategy: ShardStrategy::KMeans,
+            ..Default::default()
+        };
+        let idx = sharded_bf(&ds, &spec).with_min_shard_frac(0.5);
+        let mut ctx = SearchContext::new();
+        let params = SearchParams::new(10);
+        let mut total = 0.0;
+        for qi in 0..ds.queries.rows() {
+            let q = ds.queries.row(qi);
+            let got = idx.search(q, &params, &mut ctx);
+            let want = scan(&ds.data, q, 10);
+            let hits = got.iter().filter(|n| want.iter().any(|w| w.id == n.id)).count();
+            total += hits as f64 / 10.0;
+        }
+        let recall = total / ds.queries.rows() as f64;
+        assert!(recall > 0.6, "half-probe recall {recall}");
+    }
+
+    #[test]
+    fn batch_matches_sequential_and_merges_stats() {
+        let ds = tiny(807, 250, 8, Metric::L2);
+        let spec = ShardSpec { n_shards: 3, ..Default::default() };
+        let idx = sharded_bf(&ds, &spec);
+        let params = SearchParams::new(7);
+        let mut ctx = SearchContext::new().with_stats();
+        let batched = idx.batch_search(&ds.queries, &params, &mut ctx);
+        let batch_stats = ctx.take_stats();
+        assert_eq!(batch_stats.dist_calls, (250 * ds.queries.rows()) as u64);
+        for qi in 0..ds.queries.rows() {
+            let single = idx.search(ds.queries.row(qi), &params, &mut ctx);
+            assert_eq!(batched[qi], single, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn strategy_tags_roundtrip() {
+        for s in [ShardStrategy::RoundRobin, ShardStrategy::KMeans] {
+            assert_eq!(ShardStrategy::from_tag(s.tag()), Some(s));
+            assert_eq!(ShardStrategy::parse(s.name()), Some(s));
+        }
+        assert_eq!(ShardStrategy::from_tag(9), None);
+        assert_eq!(ShardStrategy::parse("zipf"), None);
+    }
+}

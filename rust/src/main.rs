@@ -3,7 +3,10 @@
 //!
 //! Every command that touches an index takes the same `--method` flag
 //! (bruteforce | hnsw | finger | vamana | nndescent | ivfpq) and goes
-//! through the unified `AnnIndex` trait.
+//! through the unified `AnnIndex` trait. Adding `--shards S` (with
+//! optional `--shard-strategy round-robin|kmeans` and
+//! `--min-shard-frac F`) partitions the dataset and builds the chosen
+//! method per shard behind a scatter-gather `ShardedIndex`.
 //!
 //! Usage:
 //!   finger gen-data   --dataset sift-sim-128 --scale 1.0 --out data/
@@ -33,7 +36,9 @@ use finger_ann::graph::vamana::VamanaParams;
 use finger_ann::index::impls::{
     BruteForce, FingerHnswIndex, HnswIndex, IvfPqIndex, NnDescentIndex, VamanaIndex,
 };
-use finger_ann::index::{AnnIndex, SearchContext, SearchParams};
+use finger_ann::index::{
+    AnnIndex, SearchContext, SearchParams, ShardSpec, ShardStrategy, ShardedIndex,
+};
 use finger_ann::quant::ivfpq::IvfPqParams;
 use finger_ann::router::{ServeIndex, Server, ServerConfig};
 use finger_ann::runtime::{default_artifacts_dir, service::RerankService, Manifest};
@@ -65,7 +70,9 @@ fn help() {
          \u{20}  serve    --dataset NAME [--method {METHODS}] [--addr A] [--workers N] [--rerank]\n\
          \u{20}  serve    --index index.bin [--addr A] [--workers N] [--rerank]\n\
          \u{20}  bench    FIGURE [--scale F] [--out DIR]   (figure1..figure8, table1, rank-selection, all)\n\
-         \u{20}  info"
+         \u{20}  info\n\
+         sharding (build/search/serve): --shards S [--shard-strategy round-robin|kmeans]\n\
+         \u{20}                         [--min-shard-frac F]   (probe the nearest F·S shards, 0<F<=1)"
     );
 }
 
@@ -116,6 +123,44 @@ fn build_method(method: &str, data: Arc<Matrix>, args: &Args) -> Box<dyn AnnInde
     }
 }
 
+/// Build the requested index, sharded when `--shards S` (S > 1) is given:
+/// the dataset is partitioned per `--shard-strategy` and `--method` is
+/// built per shard, all behind the same `Box<dyn AnnIndex>`.
+fn build_index(args: &Args, data: Arc<Matrix>) -> Box<dyn AnnIndex> {
+    let method = args.get("method").unwrap_or("finger");
+    let shards = args.get_usize("shards", 1);
+    if shards <= 1 {
+        return build_method(method, data, args);
+    }
+    let strategy_name = args.get("shard-strategy").unwrap_or("round-robin");
+    let strategy = ShardStrategy::parse(strategy_name).unwrap_or_else(|| {
+        eprintln!("unknown shard strategy '{strategy_name}' (round-robin|kmeans)");
+        std::process::exit(2);
+    });
+    let spec = ShardSpec { n_shards: shards, strategy, ..Default::default() };
+    // Reject rather than clamp: a typo'd fraction would otherwise silently
+    // probe one shard and collapse recall.
+    let frac = match args.get("min-shard-frac") {
+        None => 1.0f32,
+        Some(raw) => match raw.parse::<f32>() {
+            Ok(f) if f > 0.0 && f <= 1.0 => f,
+            _ => {
+                eprintln!("--min-shard-frac must be in (0, 1], got '{raw}'");
+                std::process::exit(2);
+            }
+        },
+    };
+    let index = ShardedIndex::build(data, &spec, |sub| build_method(method, sub, args))
+        .with_min_shard_frac(frac);
+    println!(
+        "sharded across {} {} shards (probing {}/query)",
+        index.n_shards(),
+        strategy.name(),
+        index.probe_count()
+    );
+    Box::new(index)
+}
+
 /// Search-time parameters from the shared CLI flags.
 fn params_from_args(args: &Args, k: usize) -> SearchParams {
     let mut p = SearchParams::new(k)
@@ -145,10 +190,9 @@ fn gen_data(args: &Args) {
 /// Build any index family and persist it as a tagged bundle.
 fn build(args: &Args) {
     let ds = dataset_from_args(args);
-    let method = args.get("method").unwrap_or("finger");
     let out = PathBuf::from(args.get("out").unwrap_or("index.bin"));
     let t0 = Instant::now();
-    let index = build_method(method, Arc::clone(&ds.data), args);
+    let index = build_index(args, Arc::clone(&ds.data));
     println!(
         "built {} in {:.1}s ({:.1} MB index side data)",
         index.name(),
@@ -167,7 +211,7 @@ fn search(args: &Args) {
 
     println!("building {method} index...");
     let t0 = Instant::now();
-    let index = build_method(method, Arc::clone(&ds.data), args);
+    let index = build_index(args, Arc::clone(&ds.data));
     println!("built in {:.1}s", t0.elapsed().as_secs_f64());
     let gt = exact_knn(&ds.data, &ds.queries, k);
 
@@ -197,13 +241,24 @@ fn serve(args: &Args) {
     // Either load a prebuilt tagged bundle (`--index path`, any family) or
     // build the requested `--method` in-process.
     let index: Box<dyn AnnIndex> = if let Some(path) = args.get("index") {
+        // A prebuilt bundle carries its own shard layout and probe
+        // fraction; accepting build-time shard flags here would silently
+        // ignore them, so reject the combination outright.
+        for flag in ["shards", "shard-strategy", "min-shard-frac"] {
+            if args.get(flag).is_some() {
+                eprintln!(
+                    "--{flag} only applies when building (it is baked into the \
+                     bundle); rebuild with `finger build --shards ...` instead"
+                );
+                std::process::exit(2);
+            }
+        }
         println!("loading index bundle {path}...");
         load_index(std::path::Path::new(path)).expect("load index")
     } else {
         let ds = dataset_from_args(args);
-        let method = args.get("method").unwrap_or("finger");
-        println!("building {method} index...");
-        build_method(method, Arc::clone(&ds.data), args)
+        println!("building {} index...", args.get("method").unwrap_or("finger"));
+        build_index(args, Arc::clone(&ds.data))
     };
     let dim = index.dim();
     let name = index.name();

@@ -144,8 +144,8 @@ impl Server {
                         let mut ctx = SearchContext::for_universe(index.len());
                         while let Some(batch) = batcher.next_batch() {
                             metrics.record_batch(batch.len());
-                            for job in batch {
-                                let hits = index.search(&job.req.vector, job.req.k, &mut ctx);
+                            let all_hits = batch_hits(&index, &batch, &mut ctx);
+                            for (job, hits) in batch.into_iter().zip(all_hits) {
                                 let hits = match (&rerank, use_rerank) {
                                     (Some(svc), true) => {
                                         let ids: Vec<u32> =
@@ -218,7 +218,10 @@ impl Server {
     }
 
     /// Submit a query in-process (bypasses TCP; used by benches/tests).
-    pub fn submit_local(&self, req: QueryRequest) -> Result<mpsc::Receiver<QueryResponse>, SubmitError> {
+    pub fn submit_local(
+        &self,
+        req: QueryRequest,
+    ) -> Result<mpsc::Receiver<QueryResponse>, SubmitError> {
         let (tx, rx) = mpsc::channel();
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         self.batcher.submit(Job {
@@ -236,6 +239,40 @@ impl Server {
             let _ = t.join();
         }
     }
+}
+
+/// Resolve one dynamic batch. When every request matches the index
+/// dimension and asks for the same `k`, the whole batch goes through
+/// `AnnIndex::batch_search` — one call, which a `ShardedIndex` scatters
+/// across shards in parallel, so batched queries fan out across shards
+/// and not just across requests. Mixed `k`s (or mixed dimensions, only
+/// reachable via `submit_local`) fall back to per-job searches: sharing
+/// one widened search would let a co-batched request's `k` change this
+/// request's beam width, making responses depend on batch composition.
+fn batch_hits(index: &ServeIndex, batch: &[Job], ctx: &mut SearchContext) -> Vec<Vec<(f32, u32)>> {
+    let dim = index.dim();
+    let uniform = batch.len() > 1
+        && batch
+            .iter()
+            .all(|j| j.req.vector.len() == dim && j.req.k == batch[0].req.k);
+    if uniform {
+        let mut queries = Matrix::zeros(0, dim);
+        for job in batch {
+            queries.push_row(&job.req.vector);
+        }
+        let mut p = index.params.clone();
+        p.k = batch[0].req.k;
+        return index
+            .index
+            .batch_search(&queries, &p, ctx)
+            .into_iter()
+            .map(|res| res.into_iter().map(|n| (n.dist, n.id)).collect())
+            .collect();
+    }
+    batch
+        .iter()
+        .map(|job| index.search(&job.req.vector, job.req.k, ctx))
+        .collect()
 }
 
 fn handle_conn(stream: TcpStream, batcher: &Batcher<Job>, metrics: &Metrics, dim: usize) {
@@ -329,7 +366,8 @@ mod tests {
     use crate::graph::hnsw::HnswParams;
     use crate::graph::nndescent::NnDescentParams;
     use crate::graph::vamana::VamanaParams;
-    use crate::index::impls::{FingerHnswIndex, IvfPqIndex, NnDescentIndex, VamanaIndex};
+    use crate::index::impls::{FingerHnswIndex, HnswIndex, IvfPqIndex, NnDescentIndex, VamanaIndex};
+    use crate::index::sharded::{ShardSpec, ShardedIndex};
     use crate::quant::ivfpq::IvfPqParams;
 
     fn test_index() -> Arc<ServeIndex> {
@@ -416,6 +454,77 @@ mod tests {
         assert_eq!(total, 200);
         let server = Arc::try_unwrap(server).ok().unwrap();
         assert_eq!(server.metrics.responses.load(Ordering::Relaxed), 200);
+        server.shutdown();
+    }
+
+    /// The worker's batch path (one `batch_search` per dynamic batch, so a
+    /// sharded index scatters the whole batch across shards) must return
+    /// exactly what each request would get searched alone — responses may
+    /// never depend on what a request happened to be batched with.
+    #[test]
+    fn batch_path_matches_individual_search_on_sharded_index() {
+        let ds = tiny(206, 300, 12, Metric::L2);
+        let spec = ShardSpec { n_shards: 3, ..Default::default() };
+        let sharded = ShardedIndex::build(Arc::clone(&ds.data), &spec, |sub| -> Box<dyn AnnIndex> {
+            Box::new(HnswIndex::build(
+                sub,
+                HnswParams { m: 8, ef_construction: 40, ..Default::default() },
+            ))
+        });
+        let serve = ServeIndex::new(Box::new(sharded), 48);
+        let mut ctx = SearchContext::new();
+        let jobs = |ks: &[usize]| -> Vec<Job> {
+            ks.iter()
+                .enumerate()
+                .map(|(i, &k)| {
+                    let (tx, _rx) = mpsc::channel();
+                    Job {
+                        req: QueryRequest {
+                            id: i as u64,
+                            vector: ds.queries.row(i).to_vec(),
+                            k,
+                        },
+                        submitted: Instant::now(),
+                        resp: tx,
+                    }
+                })
+                .collect()
+        };
+        // Uniform k exercises the fan-out batch path; mixed k falls back
+        // to per-job searches. Either way: identical to searching alone.
+        for ks in [vec![5usize; 5], vec![3, 7, 5, 10, 4]] {
+            let batch = jobs(&ks);
+            let all = batch_hits(&serve, &batch, &mut ctx);
+            assert_eq!(all.len(), batch.len());
+            for (job, hits) in batch.iter().zip(&all) {
+                assert_eq!(hits.len(), job.req.k, "request {}", job.req.id);
+                let alone = serve.search(&job.req.vector, job.req.k, &mut ctx);
+                assert_eq!(*hits, alone, "request {} (ks {ks:?})", job.req.id);
+            }
+        }
+    }
+
+    /// End-to-end: a sharded index behind the TCP server answers exactly
+    /// like any other family.
+    #[test]
+    fn serves_sharded_index() {
+        let ds = tiny(207, 300, 12, Metric::L2);
+        let spec = ShardSpec { n_shards: 4, ..Default::default() };
+        let sharded = ShardedIndex::build(Arc::clone(&ds.data), &spec, |sub| -> Box<dyn AnnIndex> {
+            Box::new(HnswIndex::build(
+                sub,
+                HnswParams { m: 8, ef_construction: 40, ..Default::default() },
+            ))
+        });
+        let serve = Arc::new(ServeIndex::new(Box::new(sharded), 48));
+        let server = Server::start(Arc::clone(&serve), cfg(), None).unwrap();
+        let q = serve.data().row(11).to_vec();
+        let rx = server
+            .submit_local(QueryRequest { id: 11, vector: q, k: 5 })
+            .unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.hits.len(), 5);
+        assert_eq!(resp.hits[0].1, 11, "self-query returns its global id");
         server.shutdown();
     }
 

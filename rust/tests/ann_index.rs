@@ -2,7 +2,8 @@
 //! same contract — exactness against brute force on an easy instance,
 //! ascending unique results, honest metadata, batch == sequential, and
 //! sane stats bookkeeping — all through `&dyn AnnIndex` with one shared
-//! pooled `SearchContext`.
+//! pooled `SearchContext`. The sharded wrapper of every family runs the
+//! same checks as the flat families.
 
 use std::sync::Arc;
 
@@ -13,12 +14,16 @@ use finger_ann::graph::hnsw::HnswParams;
 use finger_ann::graph::nndescent::NnDescentParams;
 use finger_ann::graph::vamana::VamanaParams;
 use finger_ann::index::impls::{BruteForce, HnswIndex, NnDescentIndex, VamanaIndex};
-use finger_ann::index::{build_all_families, AnnIndex, SearchContext, SearchParams};
+use finger_ann::index::{
+    build_all_families, build_all_families_sharded, AnnIndex, SearchContext, SearchParams,
+};
 
-/// All six families over one dataset — the single registry shared with the
-/// persistence-roundtrip suite.
+/// All six flat families plus their sharded wrappers over one dataset —
+/// the single registry shared with the persistence-roundtrip suite.
 fn all_indexes(ds: &Dataset) -> Vec<Box<dyn AnnIndex>> {
-    build_all_families(Arc::clone(&ds.data))
+    let mut v = build_all_families(Arc::clone(&ds.data));
+    v.extend(build_all_families_sharded(Arc::clone(&ds.data), 3));
+    v
 }
 
 /// Generous per-family search settings: wide beams / many probes, so every
@@ -34,7 +39,20 @@ fn names_and_metadata_are_honest() {
     let names: Vec<&str> = indexes.iter().map(|i| i.name()).collect();
     assert_eq!(
         names,
-        vec!["bruteforce", "hnsw", "hnsw-finger", "vamana", "nndescent", "ivfpq"]
+        vec![
+            "bruteforce",
+            "hnsw",
+            "hnsw-finger",
+            "vamana",
+            "nndescent",
+            "ivfpq",
+            "sharded-bruteforce",
+            "sharded-hnsw",
+            "sharded-hnsw-finger",
+            "sharded-vamana",
+            "sharded-nndescent",
+            "sharded-ivfpq",
+        ]
     );
     for index in &indexes {
         assert_eq!(index.len(), 400, "{}", index.name());
@@ -47,8 +65,8 @@ fn names_and_metadata_are_honest() {
         } else {
             assert!(index.nbytes() > 0, "{}", index.name());
         }
-        if index.name() == "hnsw-finger" {
-            assert_eq!(index.approx_rank(), 8);
+        if index.name() == "hnsw-finger" || index.name() == "sharded-hnsw-finger" {
+            assert_eq!(index.approx_rank(), 8, "{}", index.name());
         }
     }
 }
@@ -67,7 +85,8 @@ fn every_family_finds_nearest_neighbors() {
             total += hits as f64 / 10.0;
         }
         let avg = total / ds.queries.rows() as f64;
-        let floor = if index.name() == "bruteforce" { 0.999 } else { 0.7 };
+        let exact = index.name() == "bruteforce" || index.name() == "sharded-bruteforce";
+        let floor = if exact { 0.999 } else { 0.7 };
         assert!(avg > floor, "{}: recall@10 = {avg}", index.name());
     }
 }
@@ -126,10 +145,11 @@ fn stats_invariants_hold_for_every_family() {
             "{name}: no work recorded"
         );
         assert!(stats.wasted <= stats.dist_calls, "{name}");
-        if name == "bruteforce" {
+        if name == "bruteforce" || name == "sharded-bruteforce" {
+            // Full-probe scatter over brute-force shards sums to one scan.
             assert_eq!(stats.dist_calls, index.len() as u64, "{name}");
         }
-        if name == "hnsw-finger" || name == "ivfpq" {
+        if name == "hnsw-finger" || name == "ivfpq" || name == "sharded-ivfpq" {
             assert!(stats.approx_calls > 0, "{name}: approximate path unused");
         }
         // Disabled stats must record nothing.

@@ -1,0 +1,302 @@
+//! Deterministic test harness for the sharded scatter-gather engine.
+//!
+//! Properties (randomized over seeds via `testutil::forall`):
+//!  * merged top-k over shards == brute-force top-k over the union, for
+//!    random datasets, shard counts, ks, and both assignment strategies;
+//!  * returned ids survive local→global remapping (the distance reported
+//!    for an id equals the distance recomputed from the global matrix);
+//!  * the merge is stable under NaN-free ties (duplicated points resolve
+//!    by ascending global id, exactly like the unsharded scan).
+//!
+//! Plus the recall-preservation, determinism, and persistence round-trip
+//! suites for graph-family shards.
+
+use std::sync::Arc;
+
+use finger_ann::core::distance::{l2_sq, Metric};
+use finger_ann::core::matrix::Matrix;
+use finger_ann::core::rng::Pcg32;
+use finger_ann::data::groundtruth::exact_knn;
+use finger_ann::data::persist::{load_index, save_index};
+use finger_ann::data::synth::tiny;
+use finger_ann::finger::construct::FingerParams;
+use finger_ann::graph::bruteforce::scan;
+use finger_ann::graph::hnsw::HnswParams;
+use finger_ann::index::impls::{BruteForce, FingerHnswIndex, HnswIndex};
+use finger_ann::index::{
+    AnnIndex, SearchContext, SearchParams, ShardSpec, ShardStrategy, ShardedIndex,
+};
+use finger_ann::testutil::{forall, vec_f32};
+
+fn random_matrix(rng: &mut Pcg32, n: usize, dim: usize) -> Arc<Matrix> {
+    let mut m = Matrix::zeros(0, dim);
+    for _ in 0..n {
+        m.push_row(&vec_f32(rng, dim));
+    }
+    Arc::new(m)
+}
+
+fn sharded_bruteforce(data: &Arc<Matrix>, spec: &ShardSpec) -> ShardedIndex {
+    ShardedIndex::build(Arc::clone(data), spec, |sub| -> Box<dyn AnnIndex> {
+        Box::new(BruteForce::new(sub))
+    })
+}
+
+/// Merged shard top-k equals brute force over the union — exactly, ids
+/// and distances, for random (n, dim, S, k, strategy).
+#[test]
+fn merged_topk_equals_bruteforce_over_union() {
+    forall("sharded top-k == union top-k", 12, |rng| {
+        let n = 50 + rng.gen_range(250);
+        let dim = 2 + rng.gen_range(14);
+        let s = 1 + rng.gen_range(9);
+        let k = 1 + rng.gen_range(15);
+        let strategy = if rng.gen_range(2) == 0 {
+            ShardStrategy::RoundRobin
+        } else {
+            ShardStrategy::KMeans
+        };
+        let data = random_matrix(rng, n, dim);
+        let spec = ShardSpec { n_shards: s, strategy, ..Default::default() };
+        let idx = sharded_bruteforce(&data, &spec);
+        let mut ctx = SearchContext::new();
+        let params = SearchParams::new(k);
+        for _ in 0..4 {
+            let q = vec_f32(rng, dim);
+            let got = idx.search(&q, &params, &mut ctx);
+            let want = scan(&data, &q, k);
+            if got != want {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+/// Every returned id is a valid global id whose recomputed distance from
+/// the *global* matrix matches the reported distance bit-for-bit — i.e.
+/// local ids never leak through the remap.
+#[test]
+fn ids_survive_local_to_global_remap() {
+    forall("remapped ids are global", 10, |rng| {
+        let n = 60 + rng.gen_range(200);
+        let dim = 4 + rng.gen_range(12);
+        let s = 2 + rng.gen_range(6);
+        let data = random_matrix(rng, n, dim);
+        let spec = ShardSpec {
+            n_shards: s,
+            strategy: ShardStrategy::KMeans,
+            ..Default::default()
+        };
+        let idx = sharded_bruteforce(&data, &spec);
+        let mut ctx = SearchContext::new();
+        let params = SearchParams::new(10);
+        for _ in 0..4 {
+            let q = vec_f32(rng, dim);
+            for nb in idx.search(&q, &params, &mut ctx) {
+                if nb.id as usize >= n {
+                    return false;
+                }
+                if nb.dist.to_bits() != l2_sq(&q, data.row(nb.id as usize)).to_bits() {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+/// NaN-free ties: with every point duplicated several times, distances
+/// collide massively across shards; the merge must still reproduce the
+/// unsharded scan's deterministic (distance, ascending id) order.
+#[test]
+fn merge_is_stable_under_ties() {
+    forall("tie-stable merge", 8, |rng| {
+        let dim = 3 + rng.gen_range(6);
+        let distinct = 20 + rng.gen_range(20);
+        let copies = 4;
+        let protos: Vec<Vec<f32>> = (0..distinct).map(|_| vec_f32(rng, dim)).collect();
+        let mut m = Matrix::zeros(0, dim);
+        // Interleave the copies so duplicates land in different shards.
+        for _copy in 0..copies {
+            for p in &protos {
+                m.push_row(p);
+            }
+        }
+        let data = Arc::new(m);
+        let s = 2 + rng.gen_range(5);
+        let spec = ShardSpec { n_shards: s, ..Default::default() };
+        let idx = sharded_bruteforce(&data, &spec);
+        let mut ctx = SearchContext::new();
+        let k = copies * 2 + 1; // forces tie groups to be split at k
+        let params = SearchParams::new(k);
+        for p in protos.iter().take(4) {
+            let got = idx.search(p, &params, &mut ctx);
+            let want = scan(&data, p, k);
+            if got != want {
+                return false;
+            }
+            // The duplicates of the query point itself must come first, in
+            // ascending global-id order.
+            let lead: Vec<u32> = got.iter().take(copies).map(|nb| nb.id).collect();
+            if lead.windows(2).any(|w| w[0] >= w[1]) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+/// Recall preservation: sharding an HNSW / HNSW-FINGER index across 4
+/// shards at equal ef keeps recall@10 within 2 points of the flat index.
+#[test]
+fn sharded_graph_recall_within_two_points_of_flat() {
+    let ds = tiny(901, 1200, 24, Metric::L2);
+    let gt = exact_knn(&ds.data, &ds.queries, 10);
+    let hnsw_params = HnswParams { m: 12, ef_construction: 80, ..Default::default() };
+    let finger_params = FingerParams { rank: 8, ..Default::default() };
+    let params = SearchParams::new(10).with_ef(64);
+    let spec = ShardSpec { n_shards: 4, ..Default::default() };
+    let mut ctx = SearchContext::new();
+
+    let mut recall_of = |index: &dyn AnnIndex| -> f64 {
+        let mut total = 0.0;
+        for qi in 0..ds.queries.rows() {
+            let res = index.search(ds.queries.row(qi), &params, &mut ctx);
+            let hits = res.iter().filter(|n| gt[qi].contains(&n.id)).count();
+            total += hits as f64 / 10.0;
+        }
+        total / ds.queries.rows() as f64
+    };
+
+    let flat_hnsw = HnswIndex::build(Arc::clone(&ds.data), hnsw_params.clone());
+    let sharded_hnsw = ShardedIndex::build(Arc::clone(&ds.data), &spec, {
+        let hp = hnsw_params.clone();
+        move |sub| -> Box<dyn AnnIndex> { Box::new(HnswIndex::build(sub, hp.clone())) }
+    });
+    let r_flat = recall_of(&flat_hnsw);
+    let r_sharded = recall_of(&sharded_hnsw);
+    assert!(
+        r_sharded >= r_flat - 0.02,
+        "sharded hnsw recall {r_sharded} vs flat {r_flat}"
+    );
+
+    let flat_finger =
+        FingerHnswIndex::build(Arc::clone(&ds.data), hnsw_params.clone(), finger_params.clone());
+    let sharded_finger = ShardedIndex::build(Arc::clone(&ds.data), &spec, {
+        let (hp, fp) = (hnsw_params.clone(), finger_params.clone());
+        move |sub| -> Box<dyn AnnIndex> {
+            Box::new(FingerHnswIndex::build(sub, hp.clone(), fp.clone()))
+        }
+    });
+    let r_flat = recall_of(&flat_finger);
+    let r_sharded = recall_of(&sharded_finger);
+    assert!(
+        r_sharded >= r_flat - 0.02,
+        "sharded hnsw-finger recall {r_sharded} vs flat {r_flat}"
+    );
+}
+
+/// Fixed seeds ⇒ two builds produce identical shard assignments and
+/// identical search results, for both strategies, sequential and batched.
+#[test]
+fn builds_are_deterministic() {
+    let ds = tiny(902, 500, 12, Metric::L2);
+    for strategy in [ShardStrategy::RoundRobin, ShardStrategy::KMeans] {
+        let spec = ShardSpec { n_shards: 5, strategy, seed: 7, ..Default::default() };
+        let build = || {
+            ShardedIndex::build(Arc::clone(&ds.data), &spec, |sub| -> Box<dyn AnnIndex> {
+                Box::new(HnswIndex::build(
+                    sub,
+                    HnswParams { m: 8, ef_construction: 60, ..Default::default() },
+                ))
+            })
+        };
+        let a = build();
+        let b = build();
+        assert_eq!(a.assignment(), b.assignment(), "{strategy:?} assignment");
+        let params = SearchParams::new(10).with_ef(50);
+        let mut ctx = SearchContext::new();
+        let batched_a = a.batch_search(&ds.queries, &params, &mut ctx);
+        for qi in 0..ds.queries.rows() {
+            let ra = a.search(ds.queries.row(qi), &params, &mut ctx);
+            let rb = b.search(ds.queries.row(qi), &params, &mut ctx);
+            assert_eq!(ra, rb, "{strategy:?} query {qi}");
+            assert_eq!(batched_a[qi], ra, "{strategy:?} batch vs single, query {qi}");
+        }
+    }
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("finger_shard_props_{}_{name}", std::process::id()))
+}
+
+/// v4 persistence round-trip: identical post-load results (including a
+/// partial-probe configuration, proving the manifest carries centroids
+/// and `min_shard_frac`), and clean rejection of truncated files.
+#[test]
+fn persistence_roundtrip_and_truncation() {
+    let ds = tiny(903, 400, 10, Metric::L2);
+    let spec = ShardSpec {
+        n_shards: 4,
+        strategy: ShardStrategy::KMeans,
+        ..Default::default()
+    };
+    let idx = ShardedIndex::build(Arc::clone(&ds.data), &spec, |sub| -> Box<dyn AnnIndex> {
+        Box::new(HnswIndex::build(
+            sub,
+            HnswParams { m: 8, ef_construction: 60, ..Default::default() },
+        ))
+    })
+    .with_min_shard_frac(0.5);
+    assert_eq!(idx.probe_count(), 2);
+
+    let path = tmp("roundtrip.idx");
+    save_index(&path, &idx).unwrap();
+    let loaded = load_index(&path).unwrap();
+    assert_eq!(loaded.name(), "sharded-hnsw");
+    assert_eq!(loaded.len(), 400);
+    assert_eq!(loaded.dim(), 10);
+
+    let params = SearchParams::new(10).with_ef(50);
+    let mut ctx = SearchContext::new();
+    for qi in 0..ds.queries.rows() {
+        let a = idx.search(ds.queries.row(qi), &params, &mut ctx);
+        let b = loaded.search(ds.queries.row(qi), &params, &mut ctx);
+        assert_eq!(a, b, "query {qi} diverged after round-trip");
+    }
+
+    // Any truncation must be rejected, never half-loaded.
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    for frac in [0.1, 0.5, 0.9, 0.999] {
+        let cut = ((bytes.len() as f64) * frac) as usize;
+        let p = tmp(&format!("trunc_{cut}.idx"));
+        std::fs::write(&p, &bytes[..cut]).unwrap();
+        assert!(load_index(&p).is_err(), "truncated to {cut} bytes still loaded");
+        std::fs::remove_file(&p).ok();
+    }
+}
+
+/// Stats flow through the scatter-gather paths: work is recorded when
+/// enabled (both sequential and batched) and never when disabled.
+#[test]
+fn stats_propagate_through_shards() {
+    let ds = tiny(904, 300, 8, Metric::L2);
+    let spec = ShardSpec { n_shards: 3, ..Default::default() };
+    let idx = sharded_bruteforce(&ds.data, &spec);
+    let params = SearchParams::new(5);
+    let mut ctx = SearchContext::new().with_stats();
+    idx.search(ds.queries.row(0), &params, &mut ctx);
+    assert_eq!(ctx.take_stats().dist_calls, 300, "sequential scatter");
+    idx.batch_search(&ds.queries, &params, &mut ctx);
+    assert_eq!(
+        ctx.take_stats().dist_calls,
+        300 * ds.queries.rows() as u64,
+        "batched scatter"
+    );
+    ctx.stats_enabled = false;
+    idx.search(ds.queries.row(0), &params, &mut ctx);
+    idx.batch_search(&ds.queries, &params, &mut ctx);
+    assert_eq!(ctx.stats.dist_calls, 0, "disabled stats must stay silent");
+}
