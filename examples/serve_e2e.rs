@@ -41,7 +41,7 @@ fn main() {
     let rerank = match RerankService::start(
         default_artifacts_dir(),
         dim,
-        Arc::new(index.data().clone()),
+        Arc::new(index.data_clone()),
     ) {
         Ok(svc) => {
             println!("PJRT rerank online (panel width {})", svc.max_cands);

@@ -11,11 +11,17 @@
 //! sharded bundle (`TAG_SHARDED`): the payload is a shard manifest
 //! (strategy, probe fraction, per-shard global-id maps + centroids)
 //! followed by one nested tagged sub-index bundle per shard, each with
-//! its own data matrix. v3 files still load; sharded bundles require v4.
-//! The manifest is fully validated at load — coverage (every point in
-//! exactly one shard), ascending id maps, shard rows bitwise-equal to the
-//! parent matrix — so a corrupt or truncated file fails with
-//! `InvalidData` instead of serving wrong ids.
+//! its own data matrix. v5 adds the **mutation section** for the mutable
+//! families (bruteforce, hnsw, hnsw-finger, and the sharded parent): the
+//! next-id watermark, the row→external-id map, and the tombstone list —
+//! so a churned index serves the same live set after a restart. v3 and v4
+//! files still load (their mutation state is the identity); sharded
+//! bundles require v4+.
+//! Everything is fully validated at load — live-set coverage (every live
+//! point in exactly one shard), ascending id maps, shard rows
+//! bitwise-equal to the parent matrix, watermark/tombstone consistency —
+//! so a corrupt or truncated file fails with `InvalidData` instead of
+//! serving wrong ids.
 
 use std::io;
 use std::path::Path;
@@ -31,6 +37,7 @@ use crate::graph::vamana::{Vamana, VamanaParams};
 use crate::index::impls::{
     BruteForce, FingerHnswIndex, HnswIndex, IvfPqIndex, NnDescentIndex, VamanaIndex,
 };
+use crate::index::mutable::LiveIds;
 use crate::index::sharded::{ShardParts, ShardStrategy, ShardedIndex};
 use crate::index::AnnIndex;
 use crate::quant::ivfpq::{IvfPq, IvfPqParams};
@@ -38,7 +45,7 @@ use crate::quant::kmeans::KMeans;
 use crate::quant::pq::{Pq, PqParams};
 
 const MAGIC: u64 = 0x464E_4752; // "FNGR"
-const VERSION: u64 = 4;
+const VERSION: u64 = 5;
 /// Oldest format still readable (v3 single-index bundles).
 const MIN_VERSION: u64 = 3;
 
@@ -456,37 +463,61 @@ pub fn load_index(path: &Path) -> io::Result<Box<dyn AnnIndex>> {
         if version < 4 {
             return Err(bad("sharded bundles require format v4"));
         }
-        return Ok(Box::new(load_sharded(&mut r, data)?));
+        return Ok(Box::new(load_sharded(&mut r, data, version)?));
     }
-    load_family(tag, data, &mut r)
+    load_family(tag, data, &mut r, version).map(|(index, _)| index)
+}
+
+/// Read a family's v5 mutation section; older versions get the identity
+/// mapping (everything live, watermark == row count).
+fn load_live<R: io::Read>(r: &mut BinReader<R>, version: u64, n: usize) -> io::Result<LiveIds> {
+    if version >= 5 {
+        LiveIds::load(r, n)
+    } else {
+        Ok(LiveIds::fresh(n))
+    }
 }
 
 /// Load + validate one non-sharded family payload (the body shared by the
-/// top-level loader and each nested shard bundle).
+/// top-level loader and each nested shard bundle). Also returns the
+/// family's mutation state so the sharded loader can cross-check its
+/// manifest against each shard's live set.
 fn load_family<R: io::Read>(
     tag: u64,
     data: Arc<crate::core::matrix::Matrix>,
     r: &mut BinReader<R>,
-) -> io::Result<Box<dyn AnnIndex>> {
+    version: u64,
+) -> io::Result<(Box<dyn AnnIndex>, LiveIds)> {
     let n = data.rows();
     Ok(match tag {
         TAG_HNSW => {
             let hnsw = load_hnsw(r)?;
             validate_hnsw(&hnsw, n)?;
-            Box::new(HnswIndex::from_parts(data, hnsw))
+            let live = load_live(r, version, n)?;
+            (
+                Box::new(HnswIndex::from_parts(data, hnsw).with_live(live.clone())),
+                live,
+            )
         }
         TAG_FINGER => {
             let hnsw = load_hnsw(r)?;
             let index = load_finger(r)?;
             validate_hnsw(&hnsw, n)?;
             validate_finger(&index, &hnsw, n)?;
-            Box::new(FingerHnswIndex::from_parts(data, FingerHnsw { hnsw, index }))
+            let live = load_live(r, version, n)?;
+            (
+                Box::new(
+                    FingerHnswIndex::from_parts(data, FingerHnsw { hnsw, index })
+                        .with_live(live.clone()),
+                ),
+                live,
+            )
         }
         TAG_VAMANA => {
             let v = load_vamana(r)?;
             check_id(v.medoid, n)?;
             check_adj(&v.adj, n)?;
-            Box::new(VamanaIndex::from_parts(data, v))
+            (Box::new(VamanaIndex::from_parts(data, v)), LiveIds::fresh(n))
         }
         TAG_NNDESCENT => {
             let g = load_nndescent(r)?;
@@ -494,24 +525,36 @@ fn load_family<R: io::Read>(
                 check_id(p, n)?;
             }
             check_adj(&g.adj, n)?;
-            Box::new(NnDescentIndex::from_parts(data, g))
+            (
+                Box::new(NnDescentIndex::from_parts(data, g)),
+                LiveIds::fresh(n),
+            )
         }
         TAG_IVFPQ => {
             let q = load_ivfpq(r)?;
             validate_ivfpq(&q, n, data.cols())?;
-            Box::new(IvfPqIndex::from_parts(data, q))
+            (Box::new(IvfPqIndex::from_parts(data, q)), LiveIds::fresh(n))
         }
-        TAG_BRUTEFORCE => Box::new(BruteForce::new(data)),
+        TAG_BRUTEFORCE => {
+            let live = load_live(r, version, n)?;
+            (
+                Box::new(BruteForce::new(data).with_live(live.clone())),
+                live,
+            )
+        }
         _ => return Err(bad("unknown index kind tag")),
     })
 }
 
 /// Load + validate a sharded bundle: manifest first, then one nested
 /// tagged sub-index per shard. Rejects anything short of a full, exact
-/// partition of the parent matrix.
+/// partition of the parent's **live** set: every live parent row claimed
+/// by exactly one shard, bitwise-equal to that shard's copy, and every
+/// shard tombstone mirrored by the parent.
 fn load_sharded<R: io::Read>(
     r: &mut BinReader<R>,
     data: Arc<crate::core::matrix::Matrix>,
+    version: u64,
 ) -> io::Result<ShardedIndex> {
     let n = data.rows();
     let dim = data.cols();
@@ -521,11 +564,19 @@ fn load_sharded<R: io::Read>(
     if fv.len() != 1 || !fv[0].is_finite() || fv[0] <= 0.0 || fv[0] > 1.0 {
         return Err(bad("implausible min_shard_frac"));
     }
+    let parent_live = load_live(r, version, n)?;
     let s = r.u64()? as usize;
-    if s == 0 || s > n.max(1) {
+    // The id universe (watermark) bounds the shard count; for unmutated
+    // bundles it equals the row count, preserving the v4 check.
+    if s == 0 || s > (parent_live.next_id() as usize).max(1) {
         return Err(bad("implausible shard count"));
     }
     let mut seen = vec![false; n];
+    // Every global id is owned by exactly one shard for its whole life —
+    // tombstoned and reclaimed entries included. Without this, a crafted
+    // file could alias a dead row in one shard onto a live id in another
+    // and mis-route deletes.
+    let mut claimed: std::collections::HashSet<u32> = std::collections::HashSet::new();
     let mut parts: Vec<ShardParts> = Vec::with_capacity(s);
     for _ in 0..s {
         let global_ids = r.u32_slice()?;
@@ -536,14 +587,12 @@ fn load_sharded<R: io::Read>(
             return Err(bad("shard id map not ascending"));
         }
         for &g in &global_ids {
-            let gi = g as usize;
-            if gi >= n {
-                return Err(bad("shard id out of range"));
+            if g >= parent_live.next_id() {
+                return Err(bad("shard id above the parent watermark"));
             }
-            if seen[gi] {
-                return Err(bad("point assigned to two shards"));
+            if !claimed.insert(g) {
+                return Err(bad("global id claimed by two shards"));
             }
-            seen[gi] = true;
         }
         let centroid = r.f32_slice()?;
         if centroid.len() != dim {
@@ -554,25 +603,56 @@ fn load_sharded<R: io::Read>(
             return Err(bad("nested sharded index"));
         }
         let sub = Arc::new(r.matrix()?);
-        if sub.rows() != global_ids.len() || sub.cols() != dim {
+        if sub.cols() != dim {
             return Err(bad("shard data shape mismatch"));
         }
-        for (j, &g) in global_ids.iter().enumerate() {
+        let (sub_index, sub_live) = load_family(sub_tag, Arc::clone(&sub), r, version)?;
+        // The manifest row is indexed by the sub-index's local external
+        // ids, so it must cover exactly that id universe.
+        if global_ids.len() != sub_live.next_id() as usize {
+            return Err(bad("shard id map does not cover the sub-index id space"));
+        }
+        for row in 0..sub.rows() {
+            let e = sub_live.external_of(row) as usize; // < next_id, validated
+            let g = global_ids[e];
+            let p = parent_live.row_of(g);
+            if sub_live.is_dead_row(row) {
+                // A shard tombstone must be dead (or already reclaimed)
+                // in the parent too.
+                if let Some(p) = p {
+                    if !parent_live.is_dead_row(p) {
+                        return Err(bad("shard tombstone disagrees with parent"));
+                    }
+                }
+                continue;
+            }
+            let Some(p) = p else {
+                return Err(bad("live shard row missing from parent"));
+            };
+            if parent_live.is_dead_row(p) {
+                return Err(bad("parent tombstone disagrees with shard"));
+            }
+            if seen[p] {
+                return Err(bad("point assigned to two shards"));
+            }
+            seen[p] = true;
             let same = sub
-                .row(j)
+                .row(row)
                 .iter()
-                .zip(data.row(g as usize))
+                .zip(data.row(p))
                 .all(|(a, b)| a.to_bits() == b.to_bits());
             if !same {
                 return Err(bad("shard rows diverge from parent matrix"));
             }
         }
-        parts.push((load_family(sub_tag, sub, r)?, global_ids, centroid));
+        parts.push((sub_index, global_ids, centroid));
     }
-    if !seen.iter().all(|&x| x) {
-        return Err(bad("shard manifest does not cover every point"));
+    for row in 0..n {
+        if !parent_live.is_dead_row(row) && !seen[row] {
+            return Err(bad("shard manifest does not cover every live point"));
+        }
     }
-    Ok(ShardedIndex::from_parts(data, parts, strategy, fv[0], 0))
+    Ok(ShardedIndex::from_parts(data, parts, strategy, fv[0], 0).with_live(parent_live))
 }
 
 #[cfg(test)]
@@ -656,10 +736,12 @@ mod tests {
             std::fs::remove_file(&p).ok();
         }
 
-        // Flip the shard count (first manifest word after strategy+frac):
-        // header = 3 u64 + matrix (2 u64 + len u64 + n*dim f32), then
-        // strategy u64 + frac (len u64 + 1 f32) + n_shards u64.
-        let n_shards_off = 8 * 3 + (8 * 2 + 8 + 60 * 6 * 4) + 8 + (8 + 4);
+        // Flip the shard count (first manifest word after strategy, frac,
+        // and the v5 parent live section): header = 3 u64 + matrix
+        // (2 u64 + len u64 + n*dim f32), then strategy u64 + frac (len
+        // u64 + 1 f32) + live section (watermark u64 + row-id slice (len
+        // u64 + n u32) + empty dead slice (len u64)) + n_shards u64.
+        let n_shards_off = 8 * 3 + (8 * 2 + 8 + 60 * 6 * 4) + 8 + (8 + 4) + (8 + (8 + 60 * 4) + 8);
         let mut corrupt = bytes.clone();
         corrupt[n_shards_off..n_shards_off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
         let p = tmp("sharded_badcount.idx");
@@ -678,6 +760,46 @@ mod tests {
         let err = load_index(&p).unwrap_err();
         assert_eq!(err.kind(), io::ErrorKind::InvalidData);
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn v5_mutation_state_roundtrips() {
+        use crate::index::mutable::MutableAnnIndex;
+        let ds = tiny(407, 120, 8, Metric::L2);
+        let mut idx = HnswIndex::build(
+            Arc::clone(&ds.data),
+            HnswParams { m: 8, ef_construction: 40, ..Default::default() },
+        );
+        let mut ctx = SearchContext::new();
+        let v: Vec<f32> = ds.queries.row(0).to_vec();
+        let id = idx.insert(&v, &mut ctx).unwrap();
+        assert_eq!(id, 120);
+        idx.remove(3).unwrap();
+        idx.remove(77).unwrap();
+
+        let path = tmp("v5_mut.idx");
+        save_index(&path, &idx).unwrap();
+        let mut loaded = load_index(&path).unwrap();
+        let view = loaded.as_mutable_view().expect("hnsw stays mutable after load");
+        assert_eq!(view.live_len(), idx.live_len());
+        assert!(!view.is_live(3) && !view.is_live(77) && view.is_live(id));
+        assert_eq!(view.live_ids(), idx.live_ids());
+
+        let params = SearchParams::new(10).with_ef(200);
+        for qi in 0..ds.queries.rows() {
+            let a = idx.search(ds.queries.row(qi), &params, &mut ctx);
+            let b = loaded.search(ds.queries.row(qi), &params, &mut ctx);
+            assert_eq!(a, b, "query {qi}");
+        }
+
+        // The watermark survives: the next insert allocates the same id
+        // on both sides and never reuses the tombstoned ones.
+        let m = loaded.as_mutable().unwrap();
+        let a = idx.insert(&v, &mut ctx).unwrap();
+        let b = m.insert(&v, &mut ctx).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a, 121);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -6,4 +6,4 @@ pub mod recall;
 pub mod sweep;
 
 pub use recall::{recall, recall_ids};
-pub use sweep::{SweepPoint, DEFAULT_EFS, DEFAULT_PROBES};
+pub use sweep::{ChurnPoint, SweepPoint, DEFAULT_EFS, DEFAULT_PROBES};

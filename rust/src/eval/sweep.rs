@@ -11,7 +11,11 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::core::matrix::Matrix;
+use crate::core::rng::Pcg32;
 use crate::eval::recall::recall;
+use crate::eval::recall_ids;
+use crate::index::impls::BruteForce;
+use crate::index::mutable::MutableAnnIndex;
 use crate::index::sharded::{ShardSpec, ShardedIndex};
 use crate::index::{AnnIndex, SearchContext, SearchParams};
 
@@ -161,6 +165,124 @@ pub fn sweep_probes(
     run_sweep(None, index, queries, gt, k, &probe_grid(k, probes))
 }
 
+/// One step of a churn sweep: the index's quality against exact truth
+/// over its *current* live set, after this step's inserts and deletes.
+#[derive(Clone, Debug)]
+pub struct ChurnPoint {
+    pub step: usize,
+    /// Live points after this step.
+    pub live: usize,
+    /// Tombstoned fraction after this step (pre-compaction pressure).
+    pub tombstone_frac: f64,
+    /// Whether `compact()` rebuilt this step.
+    pub compacted: bool,
+    pub recall10: f64,
+    pub qps: f64,
+}
+
+impl ChurnPoint {
+    pub fn csv_header() -> &'static str {
+        "step,live,tombstone_frac,compacted,recall10,qps"
+    }
+
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{},{:.4},{},{:.4},{:.1}",
+            self.step, self.live, self.tombstone_frac, self.compacted, self.recall10, self.qps
+        )
+    }
+}
+
+/// Streaming-workload harness: interleave inserts, deletes, and query
+/// batches against a *freshly built* mutable index, measuring
+/// recall-over-time against an exact oracle that replays the identical
+/// mutation schedule on a mutable brute-force index (so both always hold
+/// the same live set under the same external ids). Deterministic for a
+/// fixed seed.
+#[allow(clippy::too_many_arguments)]
+pub fn churn_sweep(
+    index: &mut dyn MutableAnnIndex,
+    queries: &Matrix,
+    k: usize,
+    params: &SearchParams,
+    steps: usize,
+    inserts_per_step: usize,
+    deletes_per_step: usize,
+    seed: u64,
+) -> Vec<ChurnPoint> {
+    // Freshness means *identity ids* (0..n, nothing tombstoned), not just
+    // matching counts — a previously compacted or reloaded index has holes
+    // in its id space and would diverge from the identity-id oracle.
+    let identity: Vec<u32> = (0..index.len() as u32).collect();
+    assert!(
+        index.live_ids() == identity,
+        "churn_sweep starts from a freshly built index (identity external ids)"
+    );
+    let dim = index.dim();
+    let mut oracle = BruteForce::new(Arc::new(index.data().clone()));
+    let mut ctx = SearchContext::new();
+    let mut rng = Pcg32::new(seed);
+    let mut live: Vec<u32> = (0..index.len() as u32).collect();
+    let mut out = Vec::with_capacity(steps);
+    for step in 0..steps {
+        for _ in 0..inserts_per_step {
+            let v: Vec<f32> = (0..dim).map(|_| rng.next_gaussian()).collect();
+            let a = index.insert(&v, &mut ctx).expect("insert");
+            let b = oracle.insert(&v, &mut ctx).expect("oracle insert");
+            assert_eq!(a, b, "index and oracle id watermarks diverged");
+            live.push(a);
+        }
+        for _ in 0..deletes_per_step {
+            if live.len() <= k {
+                break;
+            }
+            let victim = live.swap_remove(rng.gen_range(live.len()));
+            index.remove(victim).expect("remove");
+            oracle.remove(victim).expect("oracle remove");
+        }
+        let tombstone_frac = index.tombstone_fraction();
+        let compacted = index.compact(&mut ctx).expect("compact");
+        oracle.compact(&mut ctx).expect("oracle compact");
+
+        // Only the index search is timed — the oracle's exact scan is
+        // measurement scaffolding and must not leak into the QPS curve.
+        let mut total = 0.0;
+        let mut search_secs = 0.0f64;
+        for qi in 0..queries.rows() {
+            let t0 = Instant::now();
+            let got = index.search(queries.row(qi), params, &mut ctx);
+            search_secs += t0.elapsed().as_secs_f64();
+            let got_ids: Vec<u32> = got.iter().map(|n| n.id).collect();
+            let want: Vec<u32> = oracle
+                .search(queries.row(qi), &SearchParams::new(k), &mut ctx)
+                .iter()
+                .map(|n| n.id)
+                .collect();
+            total += recall_ids(&got_ids, &want);
+        }
+        out.push(ChurnPoint {
+            step,
+            live: index.live_len(),
+            tombstone_frac,
+            compacted,
+            recall10: total / queries.rows().max(1) as f64,
+            qps: queries.rows() as f64 / search_secs.max(1e-9),
+        });
+    }
+    out
+}
+
+/// Write churn points as CSV.
+pub fn churn_to_csv(points: &[ChurnPoint]) -> String {
+    let mut s = String::from(ChurnPoint::csv_header());
+    s.push('\n');
+    for p in points {
+        s.push_str(&p.to_csv());
+        s.push('\n');
+    }
+    s
+}
+
 /// Write points as CSV.
 pub fn to_csv(points: &[SweepPoint]) -> String {
     let mut s = String::from(SweepPoint::csv_header());
@@ -248,6 +370,42 @@ mod tests {
             assert_eq!(p.method, "sharded-bf");
             assert!((p.recall10 - 1.0).abs() < 1e-9, "{}: {}", p.param, p.recall10);
         }
+    }
+
+    #[test]
+    fn churn_sweep_tracks_live_set_and_is_deterministic() {
+        let ds = tiny(114, 200, 8, Metric::L2);
+        let run = || {
+            let mut idx = HnswIndex::build(
+                Arc::clone(&ds.data),
+                HnswParams { m: 8, ef_construction: 60, ..Default::default() },
+            );
+            idx.set_compact_threshold(0.2);
+            let params = SearchParams::new(10).with_ef(400);
+            churn_sweep(&mut idx, &ds.queries, 10, &params, 6, 8, 12, 77)
+        };
+        let pts = run();
+        assert_eq!(pts.len(), 6);
+        assert!(pts.last().unwrap().live < 200, "net-negative churn shrinks the live set");
+        for p in &pts {
+            assert!(p.recall10 > 0.85, "step {}: recall {}", p.step, p.recall10);
+        }
+        assert!(
+            pts.iter().any(|p| p.compacted),
+            "accumulated tombstone pressure must cross the 0.2 threshold"
+        );
+        // Same seed, fresh index: identical curve (timing aside).
+        let pts2 = run();
+        for (a, b) in pts.iter().zip(&pts2) {
+            assert_eq!(a.live, b.live);
+            assert_eq!(a.recall10, b.recall10);
+            assert_eq!(a.compacted, b.compacted);
+            assert_eq!(a.tombstone_frac, b.tombstone_frac);
+        }
+        // CSV shape.
+        let csv = churn_to_csv(&pts);
+        assert_eq!(csv.lines().count(), 7);
+        assert!(csv.starts_with("step,"));
     }
 
     #[test]

@@ -197,6 +197,51 @@ impl FingerIndex {
         }
     }
 
+    /// Online insertion, part 1: extend the per-node tables for a freshly
+    /// appended row `id` and reserve its `base_cap` per-edge slots (they
+    /// land at the array tails because `FlatAdj::add_node` appends slots,
+    /// so every existing slot keeps its meaning). The projection basis and
+    /// matching parameters are kept as trained — they are re-fit from the
+    /// live set at the next compaction.
+    pub fn append_node(&mut self, data: &Matrix, id: u32, base_cap: usize) {
+        let r = self.rank;
+        let x = data.row(id as usize);
+        let sq = norm_sq(x);
+        self.c_sqnorm.push(sq);
+        self.c_norm.push(sq.sqrt());
+        self.pc.extend(project(&self.proj, x));
+        self.edge_proj.resize(self.edge_proj.len() + base_cap, 0.0);
+        self.edge_res_norm.resize(self.edge_res_norm.len() + base_cap, 0.0);
+        self.edge_pres_norm.resize(self.edge_pres_norm.len() + base_cap, 0.0);
+        self.edge_pres.resize(self.edge_pres.len() + base_cap * r, 0.0);
+    }
+
+    /// Online insertion, part 2: recompute the per-edge tables for every
+    /// current edge of `c` on the base layer — called for each node whose
+    /// neighbor list the graph insertion rewired (stale slots would
+    /// otherwise mis-screen). Mirrors the build-time per-edge pass.
+    pub fn refresh_node_edges(&mut self, data: &Matrix, adj: &FlatAdj, c: u32) {
+        let r = self.rank;
+        let m = data.cols();
+        let xc = data.row(c as usize);
+        let csq = self.c_sqnorm[c as usize].max(1e-12);
+        let cn = self.c_norm[c as usize].max(1e-12);
+        for (j, &d) in adj.neighbors(c).iter().enumerate() {
+            let slot = adj.edge_slot(c, j);
+            let xd = data.row(d as usize);
+            let t = dot(xc, xd) / csq;
+            self.edge_proj[slot] = t * cn;
+            let mut dres = vec![0.0f32; m];
+            for k in 0..m {
+                dres[k] = xd[k] - t * xc[k];
+            }
+            self.edge_res_norm[slot] = norm_sq(&dres).sqrt();
+            let p = project(&self.proj, &dres);
+            self.edge_pres_norm[slot] = norm_sq(&p).sqrt();
+            self.edge_pres[slot * r..(slot + 1) * r].copy_from_slice(&p);
+        }
+    }
+
     /// Additional memory footprint in bytes (Table 1's "(r+2)·|E|·4" plus
     /// per-node tables).
     pub fn nbytes(&self) -> usize {
@@ -346,6 +391,48 @@ mod tests {
                 assert!(
                     (dsq - recon).abs() < 1e-2 * (1.0 + dsq),
                     "edge ({c},{d}): {dsq} vs {recon}"
+                );
+                assert!(f.edge_pres_norm[slot] <= f.edge_res_norm[slot] + 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_tables_satisfy_build_invariants() {
+        use crate::core::matrix::Matrix;
+        use crate::index::context::SearchContext;
+        // Build over a prefix, stream the rest through the online path.
+        let ds = tiny(55, 300, 16, Metric::L2);
+        let mut m = Matrix::zeros(0, 16);
+        for i in 0..250 {
+            m.push_row(ds.data.row(i));
+        }
+        let mut h = Hnsw::build(&m, HnswParams { m: 8, ef_construction: 40, ..Default::default() });
+        let mut f = FingerIndex::build(&m, &h.base, FingerParams { rank: 8, ..Default::default() });
+        let mut ctx = SearchContext::new();
+        for i in 250..300 {
+            m.push_row(ds.data.row(i));
+            let touched = h.insert_node(&m, i as u32, &mut ctx);
+            f.append_node(&m, i as u32, h.base.cap());
+            for &u in &touched {
+                f.refresh_node_edges(&m, &h.base, u);
+            }
+        }
+        assert_eq!(f.c_norm.len(), 300);
+        assert_eq!(f.pc.len(), 300 * f.rank);
+        assert_eq!(f.edge_proj.len(), h.base.total_slots());
+        assert_eq!(f.edge_pres.len(), h.base.total_slots() * f.rank);
+        // Orthogonal decomposition must hold on every edge — a slot left
+        // stale by a rewired-but-unrefreshed list would break it, because
+        // the stored values belong to the old neighbor.
+        for c in 0..300u32 {
+            for (j, &d) in h.base.neighbors(c).iter().enumerate() {
+                let slot = h.base.edge_slot(c, j);
+                let dsq = norm_sq(m.row(d as usize));
+                let recon = f.edge_proj[slot].powi(2) + f.edge_res_norm[slot].powi(2);
+                assert!(
+                    (dsq - recon).abs() < 1e-2 * (1.0 + dsq),
+                    "stale edge ({c},{d}): {dsq} vs {recon}"
                 );
                 assert!(f.edge_pres_norm[slot] <= f.edge_res_norm[slot] + 1e-3);
             }

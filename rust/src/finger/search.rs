@@ -15,6 +15,7 @@ use crate::finger::construct::FingerIndex;
 use crate::graph::adjacency::FlatAdj;
 use crate::graph::search::{MinNeighbor, Neighbor};
 use crate::index::context::{SearchContext, SearchParams};
+use crate::index::mutable::LiveIds;
 
 /// FINGER-screened beam search over one adjacency layer.
 pub fn finger_beam_search(
@@ -83,6 +84,80 @@ pub fn finger_beam_search(
     ctx.drain_top()
 }
 
+/// Tombstone-aware FINGER-screened beam search: the online-update variant
+/// of [`finger_beam_search`]. Deleted nodes still route (they stay in the
+/// candidate queue) but never reach the top-results queue, so the upper
+/// bound screening compares against comes from live results only and a
+/// deleted row can never be emitted. Returns row ids.
+#[allow(clippy::too_many_arguments)]
+pub fn finger_beam_search_live(
+    data: &Matrix,
+    adj: &FlatAdj,
+    index: &FingerIndex,
+    entry: u32,
+    q: &[f32],
+    ef: usize,
+    live: &LiveIds,
+    ctx: &mut SearchContext,
+) -> Vec<Neighbor> {
+    ctx.begin(data.rows());
+    ctx.visited.insert(entry);
+    let qs = QueryState::new(index, q);
+    let d0 = l2_sq(q, data.row(entry as usize));
+    if ctx.stats_enabled {
+        ctx.stats.dist_calls += 1;
+    }
+
+    ctx.cands.push(MinNeighbor(Neighbor { dist: d0, id: entry }));
+    if !live.is_dead_row(entry as usize) {
+        ctx.top.push(Neighbor { dist: d0, id: entry });
+    }
+
+    while let Some(MinNeighbor(cur)) = ctx.cands.pop() {
+        let ub = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
+        if cur.dist > ub && ctx.top.len() >= ef {
+            break;
+        }
+        if ctx.stats_enabled {
+            ctx.stats.hops += 1;
+        }
+        let mut qc: Option<QueryCenter> = None;
+        for (j, &nb) in adj.neighbors(cur.id).iter().enumerate() {
+            if !ctx.visited.insert(nb) {
+                continue;
+            }
+            let ub_now = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
+            let full = ctx.top.len() >= ef;
+            if full {
+                let qc = qc.get_or_insert_with(|| QueryCenter::new(index, &qs, cur.id, cur.dist));
+                let slot = adj.edge_slot(cur.id, j);
+                let approx = approx_dist_sq(index, qc, slot);
+                if ctx.stats_enabled {
+                    ctx.stats.approx_calls += 1;
+                }
+                if approx > ub_now {
+                    continue;
+                }
+            }
+            let d = l2_sq(q, data.row(nb as usize));
+            if ctx.stats_enabled {
+                ctx.stats.dist_calls += 1;
+            }
+            if !full || d < ub_now {
+                ctx.cands.push(MinNeighbor(Neighbor { dist: d, id: nb }));
+                if !live.is_dead_row(nb as usize) {
+                    ctx.top.push(Neighbor { dist: d, id: nb });
+                    if ctx.top.len() > ef {
+                        ctx.top.pop();
+                    }
+                }
+            }
+        }
+    }
+
+    ctx.drain_top()
+}
+
 /// FINGER-screened HNSW search over *borrowed* graph + index (lets callers
 /// share one graph across many FINGER/RPLSH index variants — the Figure 6
 /// ablation sweeps dozens of (rank, scheme) combinations on one graph).
@@ -133,6 +208,36 @@ impl FingerHnsw {
         ctx: &mut SearchContext,
     ) -> Vec<Neighbor> {
         search_hnsw_with_index(&self.hnsw, &self.index, data, q, params, ctx)
+    }
+
+    /// Tombstone-aware variant of [`FingerHnsw::search`]: same routing,
+    /// but the base-layer beam never emits deleted rows. Returns row ids;
+    /// callers remap to external ids.
+    pub fn search_live(
+        &self,
+        data: &Matrix,
+        q: &[f32],
+        params: &SearchParams,
+        live: &LiveIds,
+        ctx: &mut SearchContext,
+    ) -> Vec<Neighbor> {
+        let mut cur = self.hnsw.entry;
+        for l in (1..=self.hnsw.max_level).rev() {
+            cur = crate::graph::search::greedy_descent(data, &self.hnsw.upper[l - 1], cur, q, ctx)
+                .id;
+        }
+        let mut res = finger_beam_search_live(
+            data,
+            &self.hnsw.base,
+            &self.index,
+            cur,
+            q,
+            params.beam_width(),
+            live,
+            ctx,
+        );
+        res.truncate(params.k);
+        res
     }
 
     /// Total index bytes: graph adjacency + FINGER tables.

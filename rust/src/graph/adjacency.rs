@@ -76,6 +76,15 @@ impl FlatAdj {
         self.neighbors(u).contains(&v)
     }
 
+    /// Append one node with an empty neighbor list (online insertion).
+    /// Its `cap` slots land at the tail of the buffer, so every existing
+    /// edge slot — and the FINGER per-edge tables keyed on them — stays
+    /// stable.
+    pub fn add_node(&mut self) {
+        self.neighbors.resize(self.neighbors.len() + self.cap, u32::MAX);
+        self.len.push(0);
+    }
+
     /// Total directed edge count.
     pub fn num_edges(&self) -> usize {
         self.len.iter().map(|&l| l as usize).sum()
@@ -109,6 +118,21 @@ mod tests {
         assert_eq!(a.neighbors(1), &[5, 6, 7]);
         a.set(1, &[9]);
         assert_eq!(a.neighbors(1), &[9]);
+    }
+
+    #[test]
+    fn add_node_keeps_existing_slots() {
+        let mut a = FlatAdj::new(2, 3);
+        a.set(0, &[1]);
+        a.set(1, &[0]);
+        let slot0 = a.edge_slot(0, 0);
+        a.add_node();
+        assert_eq!(a.n(), 3);
+        assert_eq!(a.degree(2), 0);
+        assert_eq!(a.edge_slot(0, 0), slot0, "old slots unchanged");
+        assert_eq!(a.total_slots(), 9);
+        assert!(a.push(2, 0));
+        assert_eq!(a.neighbors(2), &[0]);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 use crate::core::distance::l2_sq;
 use crate::core::matrix::Matrix;
 use crate::graph::search::Neighbor;
+use crate::index::mutable::LiveIds;
 
 /// Exact top-k by linear scan (single query).
 pub fn scan(data: &Matrix, q: &[f32], k: usize) -> Vec<Neighbor> {
@@ -21,6 +22,37 @@ pub fn scan(data: &Matrix, q: &[f32], k: usize) -> Vec<Neighbor> {
             worst = best.last().unwrap().dist;
         }
     }
+    best
+}
+
+/// Exact top-k over the live rows only, emitting **external** ids.
+/// Tie-breaking matches [`scan`] exactly: candidates are ordered by
+/// `(dist, row)` during the scan and rows are remapped to external ids at
+/// the end — the remap is monotone (`LiveIds` keeps its map ascending), so
+/// the result order equals a scan ordered by `(dist, external id)`.
+pub fn scan_live(data: &Matrix, q: &[f32], k: usize, live: &LiveIds) -> Vec<Neighbor> {
+    let k = k.min(live.live_len());
+    let mut best: Vec<Neighbor> = Vec::with_capacity(k + 1);
+    if k == 0 {
+        return best;
+    }
+    let mut worst = f32::INFINITY;
+    for row in 0..data.rows() {
+        if live.is_dead_row(row) {
+            continue;
+        }
+        let d = l2_sq(q, data.row(row));
+        if best.len() < k {
+            best.push(Neighbor { dist: d, id: row as u32 });
+            best.sort();
+            worst = best.last().unwrap().dist;
+        } else if d < worst {
+            *best.last_mut().unwrap() = Neighbor { dist: d, id: row as u32 };
+            best.sort();
+            worst = best.last().unwrap().dist;
+        }
+    }
+    live.remap_rows_to_external(&mut best);
     best
 }
 
@@ -50,5 +82,21 @@ mod tests {
     fn k_clamped_to_n() {
         let data = Matrix::from_rows(&[vec![1.0], vec![2.0]]);
         assert_eq!(scan(&data, &[0.0], 10).len(), 2);
+    }
+
+    #[test]
+    fn scan_live_filters_and_remaps() {
+        let data = Matrix::from_rows(&[vec![0.0], vec![1.0], vec![2.0], vec![3.0]]);
+        let mut live = LiveIds::fresh(4);
+        // Fresh identity: equals the plain scan.
+        assert_eq!(scan_live(&data, &[0.9], 2, &live), scan(&data, &[0.9], 2));
+        // Tombstone the nearest row: runner-ups take over, dead id absent.
+        live.kill_row(1);
+        let got = scan_live(&data, &[0.9], 2, &live);
+        let ids: Vec<u32> = got.iter().map(|n| n.id).collect();
+        assert_eq!(ids, vec![0, 2]);
+        // k clamps to the live count.
+        live.kill_row(3);
+        assert_eq!(scan_live(&data, &[0.9], 10, &live).len(), 2);
     }
 }

@@ -5,11 +5,12 @@
 
 use crate::core::distance::l2_sq;
 use crate::core::matrix::Matrix;
-use crate::core::rng::Pcg32;
+use crate::core::rng::{Pcg32, SplitMix64};
 use crate::graph::adjacency::FlatAdj;
 use crate::graph::earlyterm::beam_search_early_term;
-use crate::graph::search::{beam_search, greedy_descent, Neighbor};
+use crate::graph::search::{beam_search, beam_search_live, greedy_descent, Neighbor};
 use crate::index::context::{SearchContext, SearchParams};
+use crate::index::mutable::LiveIds;
 
 /// HNSW build parameters.
 #[derive(Clone, Debug)]
@@ -100,7 +101,12 @@ impl Hnsw {
         }
     }
 
-    fn insert(&mut self, data: &Matrix, id: u32, ctx: &mut SearchContext) {
+    /// Insert `id` into the graph structure (storage for it must already
+    /// exist at every layer). Returns the base-layer nodes whose neighbor
+    /// lists changed — `id` itself plus every back-linked neighbor — so
+    /// side indexes keyed on base edge slots (FINGER) can refresh exactly
+    /// the touched rows.
+    fn insert(&mut self, data: &Matrix, id: u32, ctx: &mut SearchContext) -> Vec<u32> {
         let q = data.row(id as usize);
         let node_level = self.levels[id as usize] as usize;
         let mut cur = self.entry;
@@ -112,6 +118,7 @@ impl Hnsw {
         }
 
         // Insert at each level from min(top, node_level) down to 0.
+        let mut base_touched: Vec<u32> = Vec::new();
         for l in (0..=node_level.min(top)).rev() {
             let found = beam_search(
                 data,
@@ -131,8 +138,24 @@ impl Hnsw {
             // Link bidirectionally with pruning.
             let list: Vec<u32> = selected.iter().map(|n| n.id).collect();
             self.layer_mut(l).set(id, &list);
-            for nb in list {
+            for &nb in &list {
                 self.link_with_prune(data, l, nb, id, cap);
+            }
+            if l == 0 {
+                // Reachability guarantee (FreshDiskANN-style): if pruning
+                // dropped every backward edge, the new node would be
+                // unreachable at the base layer. Force one in-link from
+                // its nearest selected neighbor — after an overflow
+                // re-selection that list sits below capacity (slack), so
+                // a plain push always fits.
+                if let Some(&u0) = list.first() {
+                    if !self.base.contains(u0, id) {
+                        let pushed = self.base.push(u0, id);
+                        debug_assert!(pushed, "slack-pruned list has room");
+                    }
+                }
+                base_touched.push(id);
+                base_touched.extend(&list);
             }
         }
 
@@ -140,6 +163,68 @@ impl Hnsw {
             self.max_level = node_level;
             self.entry = id;
         }
+        base_touched
+    }
+
+    /// Deterministic geometric level for an online-inserted node: a
+    /// private SplitMix64 stream keyed on (seed, id), so the same id
+    /// always draws the same level regardless of operation order.
+    fn sample_level(&self, id: u32) -> u8 {
+        let ml = 1.0 / (self.params.m as f64).ln().max(1e-9);
+        let key = self
+            .params
+            .seed
+            .wrapping_add(0x9E3779B97F4A7C15u64.wrapping_mul(id as u64 + 1));
+        let mut sm = SplitMix64::new(key);
+        let u = ((sm.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)).max(1e-12);
+        ((-u.ln() * ml).floor() as usize).min(12) as u8
+    }
+
+    /// Online insertion: grow every layer's storage by one node (its edge
+    /// slots land at the buffer tails, so existing slots stay stable),
+    /// sample its level, and run the standard construction-time insertion
+    /// reusing the pooled beam search. `data` must already contain the new
+    /// row, and row ids are append-only. Returns the base-layer nodes
+    /// whose adjacency changed (including `id`).
+    pub fn insert_node(&mut self, data: &Matrix, id: u32, ctx: &mut SearchContext) -> Vec<u32> {
+        assert_eq!(id as usize, self.levels.len(), "graph ids are append-only");
+        assert!(
+            (id as usize) < data.rows(),
+            "data row must be appended before graph insertion"
+        );
+        let level = self.sample_level(id) as usize;
+        self.levels.push(level as u8);
+        self.base.add_node();
+        for l in self.upper.iter_mut() {
+            l.add_node();
+        }
+        let n = self.levels.len();
+        while self.upper.len() < level {
+            self.upper.push(FlatAdj::new(n, self.params.m));
+        }
+        self.insert(data, id, ctx)
+    }
+
+    /// Tombstone-aware search: identical routing to [`Hnsw::search`], but
+    /// the base-layer beam traverses deleted nodes without ever emitting
+    /// them (see [`beam_search_live`]). `params.patience` is ignored —
+    /// early termination's stall counter is not defined over a filtered
+    /// emission stream. Returns row ids; callers remap to external ids.
+    pub fn search_live(
+        &self,
+        data: &Matrix,
+        q: &[f32],
+        params: &SearchParams,
+        live: &LiveIds,
+        ctx: &mut SearchContext,
+    ) -> Vec<Neighbor> {
+        let mut cur = self.entry;
+        for l in (1..=self.max_level).rev() {
+            cur = greedy_descent(data, self.layer(l), cur, q, ctx).id;
+        }
+        let mut res = beam_search_live(data, &self.base, cur, q, params.beam_width(), live, ctx);
+        res.truncate(params.k);
+        res
     }
 
     /// Add edge u->v; if over capacity, re-select neighbors.
@@ -320,6 +405,92 @@ mod tests {
         let ids: Vec<u32> = kept.iter().map(|n| n.id).collect();
         assert!(ids.contains(&1));
         assert!(ids.contains(&3), "diverse direction kept: {ids:?}");
+    }
+
+    #[test]
+    fn incremental_insert_matches_recall_of_static_build() {
+        // Build over a prefix, stream the rest in one by one: the grown
+        // graph must stay a working HNSW (bounded degrees, high recall,
+        // new points findable).
+        let ds = tiny(12, 500, 16, Metric::L2);
+        let n = ds.data.rows();
+        let prefix = 400;
+        let mut head = Matrix::zeros(0, ds.data.cols());
+        for i in 0..prefix {
+            head.push_row(ds.data.row(i));
+        }
+        let p = HnswParams { m: 12, ef_construction: 80, ..Default::default() };
+        let mut h = Hnsw::build(&head, p.clone());
+        let mut ctx = SearchContext::for_universe(n);
+        let mut grown = head.clone();
+        for i in prefix..n {
+            grown.push_row(ds.data.row(i));
+            let touched = h.insert_node(&grown, i as u32, &mut ctx);
+            assert!(touched.contains(&(i as u32)));
+            assert!(touched.iter().all(|&u| (u as usize) <= i));
+        }
+        assert_eq!(h.levels.len(), n);
+        for u in 0..n as u32 {
+            assert!(h.base.degree(u) <= 2 * p.m);
+            for l in &h.upper {
+                assert!(l.degree(u) <= p.m);
+            }
+        }
+        let gt = exact_knn(&ds.data, &ds.queries, 10);
+        let params = SearchParams::new(10).with_ef(80);
+        let mut total = 0.0;
+        for qi in 0..ds.queries.rows() {
+            let res = h.search(&grown, ds.queries.row(qi), &params, &mut ctx);
+            total += recall(&res, &gt[qi]);
+        }
+        let avg = total / ds.queries.rows() as f64;
+        assert!(avg > 0.85, "incremental recall@10 = {avg}");
+    }
+
+    #[test]
+    fn incremental_insert_is_deterministic() {
+        let ds = tiny(13, 200, 8, Metric::L2);
+        let grow = |()| {
+            let mut m = Matrix::zeros(0, ds.data.cols());
+            for i in 0..150 {
+                m.push_row(ds.data.row(i));
+            }
+            let mut h = Hnsw::build(&m, HnswParams::default());
+            let mut ctx = SearchContext::new();
+            for i in 150..200 {
+                m.push_row(ds.data.row(i));
+                h.insert_node(&m, i as u32, &mut ctx);
+            }
+            h
+        };
+        let a = grow(());
+        let b = grow(());
+        assert_eq!(a.entry, b.entry);
+        assert_eq!(a.max_level, b.max_level);
+        for u in 0..200u32 {
+            assert_eq!(a.base.neighbors(u), b.base.neighbors(u), "node {u}");
+        }
+    }
+
+    #[test]
+    fn search_live_skips_tombstones() {
+        let ds = tiny(14, 300, 8, Metric::L2);
+        let h = Hnsw::build(&ds.data, HnswParams { m: 8, ef_construction: 60, ..Default::default() });
+        let mut live = LiveIds::fresh(300);
+        // Tombstone the exact nearest neighbor of query 0.
+        let mut ctx = SearchContext::new();
+        let params = SearchParams::new(5).with_ef(300);
+        let q = ds.queries.row(0);
+        let before = h.search_live(&ds.data, q, &params, &live, &mut ctx);
+        let nearest = before[0].id;
+        live.kill_row(nearest as usize);
+        let after = h.search_live(&ds.data, q, &params, &live, &mut ctx);
+        assert!(after.iter().all(|n| n.id != nearest));
+        assert_eq!(after.len(), 5);
+        assert_eq!(
+            after[0], before[1],
+            "runner-up becomes nearest once the winner is tombstoned"
+        );
     }
 
     #[test]

@@ -12,6 +12,7 @@ use crate::core::distance::l2_sq;
 use crate::core::matrix::Matrix;
 use crate::graph::adjacency::FlatAdj;
 use crate::index::context::SearchContext;
+use crate::index::mutable::LiveIds;
 
 /// (distance, id) with max-heap ordering by distance.
 ///
@@ -171,6 +172,70 @@ pub fn beam_search(
     ctx.drain_top()
 }
 
+/// Tombstone-aware beam search (the online-update variant of Algorithm 1):
+/// deleted nodes are *traversed* — they stay in the candidate queue so
+/// graph connectivity through them survives — but never *emitted*: the
+/// top-results queue only ever admits live rows, so a deleted id cannot
+/// appear in the output, and the upper bound driving termination comes
+/// from live results only. Returns up to `ef` nearest live rows
+/// (ascending), still in the graph's row id space — callers remap rows to
+/// external ids.
+pub fn beam_search_live(
+    data: &Matrix,
+    adj: &FlatAdj,
+    entry: u32,
+    q: &[f32],
+    ef: usize,
+    live: &LiveIds,
+    ctx: &mut SearchContext,
+) -> Vec<Neighbor> {
+    ctx.begin(data.rows());
+    ctx.visited.insert(entry);
+    let d0 = l2_sq(q, data.row(entry as usize));
+    if ctx.stats_enabled {
+        ctx.stats.dist_calls += 1;
+    }
+
+    ctx.cands.push(MinNeighbor(Neighbor { dist: d0, id: entry }));
+    if !live.is_dead_row(entry as usize) {
+        ctx.top.push(Neighbor { dist: d0, id: entry });
+    }
+
+    let mut hop = 0usize;
+    while let Some(MinNeighbor(cur)) = ctx.cands.pop() {
+        let ub = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
+        if cur.dist > ub && ctx.top.len() >= ef {
+            break;
+        }
+        if ctx.stats_enabled {
+            ctx.stats.hops += 1;
+        }
+        for &nb in adj.neighbors(cur.id) {
+            if !ctx.visited.insert(nb) {
+                continue;
+            }
+            let d = l2_sq(q, data.row(nb as usize));
+            let ub_now = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
+            let full = ctx.top.len() >= ef;
+            if ctx.stats_enabled {
+                ctx.stats.record(hop, full && d > ub_now);
+            }
+            if !full || d < ub_now {
+                ctx.cands.push(MinNeighbor(Neighbor { dist: d, id: nb }));
+                if !live.is_dead_row(nb as usize) {
+                    ctx.top.push(Neighbor { dist: d, id: nb });
+                    if ctx.top.len() > ef {
+                        ctx.top.pop();
+                    }
+                }
+            }
+        }
+        hop += 1;
+    }
+
+    ctx.drain_top()
+}
+
 /// Greedy descent: walk to the locally nearest node (ef = 1). Used for
 /// HNSW upper layers.
 pub fn greedy_descent(
@@ -264,6 +329,56 @@ mod tests {
             assert!(w[0].dist <= w[1].dist);
         }
         assert!(res.len() <= 10);
+    }
+
+    #[test]
+    fn live_beam_traverses_tombstones_but_never_emits_them() {
+        // Path graph on a line: 0 - 1 - 2 - 3. Tombstone the middle node
+        // 1; nodes 2 and 3 are only reachable through it.
+        let data = Matrix::from_rows(&[vec![0.0], vec![1.0], vec![2.0], vec![3.0]]);
+        let mut adj = FlatAdj::new(4, 2);
+        for u in 0..4u32 {
+            if u > 0 {
+                adj.push(u, u - 1);
+            }
+            if u < 3 {
+                adj.push(u, u + 1);
+            }
+        }
+        let mut live = LiveIds::fresh(4);
+        live.kill_row(1);
+        let mut ctx = SearchContext::new();
+        let res = beam_search_live(&data, &adj, 0, &[1.0], 4, &live, &mut ctx);
+        assert!(res.iter().all(|n| n.id != 1), "tombstoned id emitted");
+        assert!(
+            res.iter().any(|n| n.id == 2) && res.iter().any(|n| n.id == 3),
+            "connectivity through the tombstone lost: {res:?}"
+        );
+        let ids: Vec<u32> = res.iter().map(|n| n.id).collect();
+        assert_eq!(ids, vec![0, 2, 3], "(dist, id) ascending over live rows");
+    }
+
+    #[test]
+    fn live_beam_with_nothing_dead_matches_plain() {
+        let mut rng = Pcg32::new(11);
+        let n = 80;
+        let mut data = Matrix::zeros(0, 0);
+        for _ in 0..n {
+            let row: Vec<f32> = (0..4).map(|_| rng.next_gaussian()).collect();
+            data.push_row(&row);
+        }
+        let mut adj = FlatAdj::new(n, 6);
+        for u in 0..n as u32 {
+            for k in 1..=6u32 {
+                adj.push(u, (u * 5 + k * 11) % n as u32);
+            }
+        }
+        let live = LiveIds::fresh(n);
+        let mut ctx = SearchContext::new();
+        let q: Vec<f32> = (0..4).map(|_| rng.next_gaussian()).collect();
+        let a = beam_search_live(&data, &adj, 0, &q, 8, &live, &mut ctx);
+        let b = beam_search(&data, &adj, 0, &q, 8, &mut ctx);
+        assert_eq!(a, b);
     }
 
     #[test]

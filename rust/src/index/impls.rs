@@ -13,16 +13,63 @@ use crate::data::io::BinWriter;
 use crate::data::persist;
 use crate::finger::construct::{FingerIndex, FingerParams};
 use crate::finger::search::{search_hnsw_with_index, FingerHnsw};
-use crate::graph::bruteforce::scan;
+use crate::graph::bruteforce::{scan, scan_live};
 use crate::graph::hnsw::{Hnsw, HnswParams};
 use crate::graph::nndescent::{NnDescent, NnDescentParams};
 use crate::graph::search::Neighbor;
 use crate::graph::vamana::{Vamana, VamanaParams};
 use crate::index::context::{SearchContext, SearchParams};
+use crate::index::mutable::{LiveIds, MutableAnnIndex, MutateError, DEFAULT_COMPACT_THRESHOLD};
 use crate::index::AnnIndex;
 use crate::quant::ivfpq::{IvfPq, IvfPqParams};
 
+/// Rebuild a matrix from the live rows named by `keep`, in order (shared
+/// by every family's compaction, including the sharded parent's).
+pub(crate) fn gather_rows(data: &Matrix, keep: &[usize]) -> Arc<Matrix> {
+    let mut m = Matrix::zeros(0, data.cols());
+    for &row in keep {
+        m.push_row(data.row(row));
+    }
+    Arc::new(m)
+}
+
 type PayloadWriter<'a, 'b> = &'a mut BinWriter<&'b mut dyn io::Write>;
+
+/// The [`MutableAnnIndex`] methods that are pure [`LiveIds`] bookkeeping,
+/// identical for every flat family (`insert`/`compact` stay hand-written
+/// per family). One definition, so the delete/report semantics cannot
+/// drift between implementors.
+macro_rules! delegate_live_bookkeeping {
+    () => {
+        fn remove(&mut self, id: u32) -> Result<(), MutateError> {
+            let row = self.live.row_of(id).ok_or(MutateError::UnknownId(id))?;
+            if !self.live.kill_row(row) {
+                return Err(MutateError::AlreadyDeleted(id));
+            }
+            Ok(())
+        }
+
+        fn live_len(&self) -> usize {
+            self.live.live_len()
+        }
+
+        fn is_live(&self, id: u32) -> bool {
+            self.live.is_live(id)
+        }
+
+        fn live_ids(&self) -> Vec<u32> {
+            self.live.live_ids()
+        }
+
+        fn tombstone_fraction(&self) -> f64 {
+            self.live.tombstone_fraction()
+        }
+
+        fn set_compact_threshold(&mut self, frac: f64) {
+            self.compact_threshold = frac;
+        }
+    };
+}
 
 /// One small instance of every family over `data` — shared by the
 /// persistence-roundtrip and trait-conformance suites (and handy for
@@ -55,14 +102,29 @@ pub fn build_all_families(data: Arc<Matrix>) -> Vec<Box<dyn AnnIndex>> {
 }
 
 /// Exact linear scan — the reference implementor every other family is
-/// conformance-tested against.
+/// conformance-tested against. Fully mutable: inserts append rows,
+/// deletes tombstone them out of the scan, compaction drops them.
 pub struct BruteForce {
     pub data: Arc<Matrix>,
+    live: LiveIds,
+    compact_threshold: f64,
 }
 
 impl BruteForce {
     pub fn new(data: Arc<Matrix>) -> BruteForce {
-        BruteForce { data }
+        let live = LiveIds::fresh(data.rows());
+        BruteForce { data, live, compact_threshold: DEFAULT_COMPACT_THRESHOLD }
+    }
+
+    /// Restore persisted mutation state (the v5 loader's entry).
+    pub fn with_live(mut self, live: LiveIds) -> BruteForce {
+        assert_eq!(live.n_rows(), self.data.rows(), "live map must cover the rows");
+        self.live = live;
+        self
+    }
+
+    pub fn live(&self) -> &LiveIds {
+        &self.live
     }
 }
 
@@ -88,35 +150,88 @@ impl AnnIndex for BruteForce {
     }
 
     fn search(&self, q: &[f32], params: &SearchParams, ctx: &mut SearchContext) -> Vec<Neighbor> {
-        if ctx.stats_enabled {
-            ctx.stats.dist_calls += self.data.rows() as u64;
+        if self.live.is_identity() {
+            if ctx.stats_enabled {
+                ctx.stats.dist_calls += self.data.rows() as u64;
+            }
+            return scan(&self.data, q, params.k);
         }
-        scan(&self.data, q, params.k)
+        if ctx.stats_enabled {
+            ctx.stats.dist_calls += self.live.live_len() as u64;
+        }
+        scan_live(&self.data, q, params.k, &self.live)
+    }
+
+    fn as_mutable(&mut self) -> Option<&mut dyn MutableAnnIndex> {
+        Some(self)
+    }
+
+    fn as_mutable_view(&self) -> Option<&dyn MutableAnnIndex> {
+        Some(self)
     }
 
     fn kind_tag(&self) -> u64 {
         persist::TAG_BRUTEFORCE
     }
 
-    fn save_payload(&self, _w: PayloadWriter) -> io::Result<()> {
-        Ok(()) // nothing beyond the data matrix
+    fn save_payload(&self, w: PayloadWriter) -> io::Result<()> {
+        self.live.save(w) // nothing else beyond the data matrix
     }
 }
 
-/// Plain HNSW (Algorithm 1 search).
+impl MutableAnnIndex for BruteForce {
+    fn insert(&mut self, v: &[f32], _ctx: &mut SearchContext) -> Result<u32, MutateError> {
+        if self.data.cols() != 0 && v.len() != self.data.cols() {
+            return Err(MutateError::DimMismatch { got: v.len(), want: self.data.cols() });
+        }
+        Arc::make_mut(&mut self.data).push_row(v);
+        Ok(self.live.alloc())
+    }
+
+    fn compact(&mut self, _ctx: &mut SearchContext) -> Result<bool, MutateError> {
+        if !self.live.should_compact(self.compact_threshold) {
+            return Ok(false);
+        }
+        self.data = gather_rows(&self.data, &self.live.compact_plan());
+        self.live.apply_compact();
+        Ok(true)
+    }
+
+    delegate_live_bookkeeping!();
+}
+
+/// Plain HNSW (Algorithm 1 search). Mutable: inserts run the incremental
+/// construction-time insertion over the pooled beam search; deletes are
+/// tombstones consulted at result emission but not during traversal (so
+/// graph connectivity survives); compaction rebuilds over the live set
+/// once the tombstone fraction crosses the threshold.
 pub struct HnswIndex {
     pub data: Arc<Matrix>,
     pub graph: Hnsw,
+    live: LiveIds,
+    compact_threshold: f64,
 }
 
 impl HnswIndex {
     pub fn build(data: Arc<Matrix>, params: HnswParams) -> HnswIndex {
         let graph = Hnsw::build(&data, params);
-        HnswIndex { data, graph }
+        HnswIndex::from_parts(data, graph)
     }
 
     pub fn from_parts(data: Arc<Matrix>, graph: Hnsw) -> HnswIndex {
-        HnswIndex { data, graph }
+        let live = LiveIds::fresh(data.rows());
+        HnswIndex { data, graph, live, compact_threshold: DEFAULT_COMPACT_THRESHOLD }
+    }
+
+    /// Restore persisted mutation state (the v5 loader's entry).
+    pub fn with_live(mut self, live: LiveIds) -> HnswIndex {
+        assert_eq!(live.n_rows(), self.data.rows(), "live map must cover the rows");
+        self.live = live;
+        self
+    }
+
+    pub fn live(&self) -> &LiveIds {
+        &self.live
     }
 }
 
@@ -142,7 +257,24 @@ impl AnnIndex for HnswIndex {
     }
 
     fn search(&self, q: &[f32], params: &SearchParams, ctx: &mut SearchContext) -> Vec<Neighbor> {
-        self.graph.search(&self.data, q, params, ctx)
+        if self.live.is_identity() {
+            return self.graph.search(&self.data, q, params, ctx);
+        }
+        let mut res = if self.live.any_dead() {
+            self.graph.search_live(&self.data, q, params, &self.live, ctx)
+        } else {
+            self.graph.search(&self.data, q, params, ctx)
+        };
+        self.live.remap_rows_to_external(&mut res);
+        res
+    }
+
+    fn as_mutable(&mut self) -> Option<&mut dyn MutableAnnIndex> {
+        Some(self)
+    }
+
+    fn as_mutable_view(&self) -> Option<&dyn MutableAnnIndex> {
+        Some(self)
     }
 
     fn kind_tag(&self) -> u64 {
@@ -150,14 +282,49 @@ impl AnnIndex for HnswIndex {
     }
 
     fn save_payload(&self, w: PayloadWriter) -> io::Result<()> {
-        persist::save_hnsw(w, &self.graph)
+        persist::save_hnsw(w, &self.graph)?;
+        self.live.save(w)
     }
 }
 
-/// HNSW + FINGER screening (the paper's system).
+impl MutableAnnIndex for HnswIndex {
+    fn insert(&mut self, v: &[f32], ctx: &mut SearchContext) -> Result<u32, MutateError> {
+        if v.len() != self.data.cols() {
+            return Err(MutateError::DimMismatch { got: v.len(), want: self.data.cols() });
+        }
+        let row = self.data.rows() as u32;
+        Arc::make_mut(&mut self.data).push_row(v);
+        let id = self.live.alloc();
+        self.graph.insert_node(&self.data, row, ctx);
+        Ok(id)
+    }
+
+    fn compact(&mut self, _ctx: &mut SearchContext) -> Result<bool, MutateError> {
+        // A graph index cannot rebuild over zero points; an all-dead index
+        // keeps its tombstoned state (searches already return nothing).
+        if !self.live.should_compact(self.compact_threshold) || self.live.live_len() == 0 {
+            return Ok(false);
+        }
+        let data = gather_rows(&self.data, &self.live.compact_plan());
+        self.graph = Hnsw::build(&data, self.graph.params.clone());
+        self.data = data;
+        self.live.apply_compact();
+        Ok(true)
+    }
+
+    delegate_live_bookkeeping!();
+}
+
+/// HNSW + FINGER screening (the paper's system). Mutable: inserts extend
+/// the graph incrementally and refresh exactly the FINGER per-edge table
+/// rows the insertion rewired; deletes are emission-time tombstones;
+/// compaction rebuilds the graph over the live set and **re-trains the
+/// FINGER residual bases** (projection, matching, tables) on it.
 pub struct FingerHnswIndex {
     pub data: Arc<Matrix>,
     pub inner: FingerHnsw,
+    live: LiveIds,
+    compact_threshold: f64,
 }
 
 impl FingerHnswIndex {
@@ -167,11 +334,23 @@ impl FingerHnswIndex {
         finger_params: FingerParams,
     ) -> FingerHnswIndex {
         let inner = FingerHnsw::build(&data, hnsw_params, finger_params);
-        FingerHnswIndex { data, inner }
+        FingerHnswIndex::from_parts(data, inner)
     }
 
     pub fn from_parts(data: Arc<Matrix>, inner: FingerHnsw) -> FingerHnswIndex {
-        FingerHnswIndex { data, inner }
+        let live = LiveIds::fresh(data.rows());
+        FingerHnswIndex { data, inner, live, compact_threshold: DEFAULT_COMPACT_THRESHOLD }
+    }
+
+    /// Restore persisted mutation state (the v5 loader's entry).
+    pub fn with_live(mut self, live: LiveIds) -> FingerHnswIndex {
+        assert_eq!(live.n_rows(), self.data.rows(), "live map must cover the rows");
+        self.live = live;
+        self
+    }
+
+    pub fn live(&self) -> &LiveIds {
+        &self.live
     }
 }
 
@@ -201,7 +380,24 @@ impl AnnIndex for FingerHnswIndex {
     }
 
     fn search(&self, q: &[f32], params: &SearchParams, ctx: &mut SearchContext) -> Vec<Neighbor> {
-        self.inner.search(&self.data, q, params, ctx)
+        if self.live.is_identity() {
+            return self.inner.search(&self.data, q, params, ctx);
+        }
+        let mut res = if self.live.any_dead() {
+            self.inner.search_live(&self.data, q, params, &self.live, ctx)
+        } else {
+            self.inner.search(&self.data, q, params, ctx)
+        };
+        self.live.remap_rows_to_external(&mut res);
+        res
+    }
+
+    fn as_mutable(&mut self) -> Option<&mut dyn MutableAnnIndex> {
+        Some(self)
+    }
+
+    fn as_mutable_view(&self) -> Option<&dyn MutableAnnIndex> {
+        Some(self)
     }
 
     fn kind_tag(&self) -> u64 {
@@ -210,8 +406,47 @@ impl AnnIndex for FingerHnswIndex {
 
     fn save_payload(&self, w: PayloadWriter) -> io::Result<()> {
         persist::save_hnsw(w, &self.inner.hnsw)?;
-        persist::save_finger(w, &self.inner.index)
+        persist::save_finger(w, &self.inner.index)?;
+        self.live.save(w)
     }
+}
+
+impl MutableAnnIndex for FingerHnswIndex {
+    fn insert(&mut self, v: &[f32], ctx: &mut SearchContext) -> Result<u32, MutateError> {
+        if v.len() != self.data.cols() {
+            return Err(MutateError::DimMismatch { got: v.len(), want: self.data.cols() });
+        }
+        let row = self.data.rows() as u32;
+        Arc::make_mut(&mut self.data).push_row(v);
+        let id = self.live.alloc();
+        let touched = self.inner.hnsw.insert_node(&self.data, row, ctx);
+        self.inner
+            .index
+            .append_node(&self.data, row, self.inner.hnsw.base.cap());
+        for &u in &touched {
+            self.inner
+                .index
+                .refresh_node_edges(&self.data, &self.inner.hnsw.base, u);
+        }
+        Ok(id)
+    }
+
+    fn compact(&mut self, _ctx: &mut SearchContext) -> Result<bool, MutateError> {
+        if !self.live.should_compact(self.compact_threshold) || self.live.live_len() == 0 {
+            return Ok(false);
+        }
+        let data = gather_rows(&self.data, &self.live.compact_plan());
+        let hnsw_params = self.inner.hnsw.params.clone();
+        let finger_params = self.inner.index.params.clone();
+        // Full retrain: fresh graph + fresh FINGER residual bases fit to
+        // the live distribution.
+        self.inner = FingerHnsw::build(&data, hnsw_params, finger_params);
+        self.data = data;
+        self.live.apply_compact();
+        Ok(true)
+    }
+
+    delegate_live_bookkeeping!();
 }
 
 /// Borrowing FINGER adapter: one shared HNSW graph, many FINGER/RPLSH
@@ -260,7 +495,10 @@ impl AnnIndex for FingerView<'_> {
 
     fn save_payload(&self, w: PayloadWriter) -> io::Result<()> {
         persist::save_hnsw(w, self.hnsw)?;
-        persist::save_finger(w, self.findex)
+        persist::save_finger(w, self.findex)?;
+        // A borrowed view has no mutation state; the v5 TAG_FINGER body
+        // still carries a (trivial) live section so it loads uniformly.
+        LiveIds::fresh(self.data.rows()).save(w)
     }
 }
 

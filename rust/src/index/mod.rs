@@ -21,6 +21,7 @@
 pub mod context;
 pub mod impls;
 pub mod merge;
+pub mod mutable;
 pub mod sharded;
 
 pub use context::{SearchContext, SearchParams};
@@ -28,6 +29,7 @@ pub use impls::{
     build_all_families, BruteForce, FingerHnswIndex, FingerView, HnswIndex, IvfPqIndex,
     NnDescentIndex, VamanaIndex,
 };
+pub use mutable::{LiveIds, MutableAnnIndex, MutateError, DEFAULT_COMPACT_THRESHOLD};
 pub use sharded::{build_all_families_sharded, ShardSpec, ShardStrategy, ShardedIndex};
 
 use std::io;
@@ -79,6 +81,19 @@ pub trait AnnIndex: Send + Sync {
         (0..queries.rows())
             .map(|qi| self.search(queries.row(qi), params, ctx))
             .collect()
+    }
+
+    /// The mutation plane ([`MutableAnnIndex`]), if this family supports
+    /// online insert/delete/compact. Families that cannot mutate return
+    /// `None` — callers report "unsupported" instead of panicking.
+    fn as_mutable(&mut self) -> Option<&mut dyn MutableAnnIndex> {
+        None
+    }
+
+    /// Read-only view of the mutation plane (live counts, tombstone
+    /// fraction). `Some` exactly when [`AnnIndex::as_mutable`] is.
+    fn as_mutable_view(&self) -> Option<&dyn MutableAnnIndex> {
+        None
     }
 
     /// Persistence tag (see `data::persist`); stable across versions.

@@ -1,0 +1,405 @@
+//! The mutation plane: incremental insert, tombstone delete, and
+//! threshold-gated compaction behind the [`AnnIndex`] families that can
+//! support them (FreshDiskANN-style update scheme, scaled to this repo).
+//!
+//! Identity is external: every point carries a stable **external id**
+//! assigned at insert time from a monotone watermark ([`LiveIds::next_id`]).
+//! Searches emit external ids, deletes address external ids, and
+//! compaction — which drops tombstoned rows and rebuilds the graph over
+//! the survivors — never renumbers anything a client has seen. Internally
+//! each index keeps a dense row space (`row_ids[row] = external id`,
+//! strictly ascending, so the row→external remap is monotone and
+//! preserves the `(distance, id)` result order that the shard merge and
+//! the brute-force oracle agree on).
+//!
+//! Deletes are tombstones: a bitset consulted when *emitting* results but
+//! not when traversing the graph, so connectivity through deleted nodes
+//! survives (see `graph::search::beam_search_live`). `compact()` rebuilds
+//! once the tombstone fraction crosses a threshold; the FINGER family
+//! re-trains its residual bases on the live set when it does.
+
+use std::fmt;
+use std::io;
+
+use crate::data::io::{BinReader, BinWriter};
+use crate::graph::search::Neighbor;
+use crate::index::context::SearchContext;
+use crate::index::AnnIndex;
+
+/// Default tombstone fraction above which `compact()` rebuilds.
+pub const DEFAULT_COMPACT_THRESHOLD: f64 = 0.3;
+
+/// Why a mutation was rejected. Mutations never panic on bad input —
+/// unsupported families and stale ids report structured errors instead.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MutateError {
+    /// The index family does not implement the mutation plane.
+    Unsupported(&'static str),
+    /// Inserted vector has the wrong dimensionality.
+    DimMismatch { got: usize, want: usize },
+    /// No live or tombstoned point carries this external id (never
+    /// assigned, or reclaimed by compaction).
+    UnknownId(u32),
+    /// The id exists but was already tombstoned.
+    AlreadyDeleted(u32),
+}
+
+impl fmt::Display for MutateError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MutateError::Unsupported(name) => {
+                write!(f, "index family '{name}' does not support mutation")
+            }
+            MutateError::DimMismatch { got, want } => {
+                write!(f, "vector dim mismatch: got {got}, want {want}")
+            }
+            MutateError::UnknownId(id) => write!(f, "unknown id {id}"),
+            MutateError::AlreadyDeleted(id) => write!(f, "id {id} already deleted"),
+        }
+    }
+}
+
+impl std::error::Error for MutateError {}
+
+/// Extension trait for index families that serve a live, churning corpus.
+///
+/// Obtain it through [`AnnIndex::as_mutable`] (families that cannot
+/// mutate return `None` — cleanly unsupported, never a panic). All
+/// methods keep the implementor consistent with its [`AnnIndex`] view:
+/// after any interleaving of calls, `search` over the live set equals
+/// brute force over the live set (proven in `rust/tests/mutation_props.rs`).
+pub trait MutableAnnIndex: AnnIndex {
+    /// Add a vector; returns its permanent external id. `ctx` is search
+    /// scratch for the incremental graph insertion.
+    fn insert(&mut self, v: &[f32], ctx: &mut SearchContext) -> Result<u32, MutateError>;
+
+    /// Tombstone an external id. The point stops being emitted
+    /// immediately; its graph node keeps routing until `compact()`.
+    fn remove(&mut self, id: u32) -> Result<(), MutateError>;
+
+    /// Rebuild over the live set if the tombstone fraction has crossed
+    /// the compaction threshold. Returns whether a rebuild happened.
+    /// External ids and the watermark survive compaction.
+    fn compact(&mut self, ctx: &mut SearchContext) -> Result<bool, MutateError>;
+
+    /// Number of live (non-tombstoned) points.
+    fn live_len(&self) -> usize;
+
+    /// Is this external id currently live?
+    fn is_live(&self, id: u32) -> bool;
+
+    /// All live external ids, ascending.
+    fn live_ids(&self) -> Vec<u32>;
+
+    /// Tombstoned fraction of the stored rows (0 when empty).
+    fn tombstone_fraction(&self) -> f64;
+
+    /// Set the tombstone fraction at which `compact()` rebuilds
+    /// (composite indexes forward it to their sub-indexes).
+    fn set_compact_threshold(&mut self, frac: f64);
+}
+
+/// External-id bookkeeping shared by every mutable family: the
+/// row→external map, the tombstone bitset, and the next-id watermark.
+///
+/// Invariants (enforced at load, maintained by construction):
+/// `row_ids` is strictly ascending, every entry is `< next_id`, and the
+/// bitset covers exactly the rows.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LiveIds {
+    /// `row_ids[row]` = external id of that row; strictly ascending.
+    row_ids: Vec<u32>,
+    /// Tombstone bitset over rows (1 = deleted).
+    bits: Vec<u64>,
+    n_dead: usize,
+    /// Watermark: the next external id `alloc` hands out. Monotone for
+    /// the lifetime of the index, including across compactions.
+    next_id: u32,
+}
+
+impl LiveIds {
+    /// Identity mapping over `n` freshly built rows (ids `0..n`).
+    pub fn fresh(n: usize) -> LiveIds {
+        LiveIds {
+            row_ids: (0..n as u32).collect(),
+            bits: vec![0u64; n.div_ceil(64)],
+            n_dead: 0,
+            next_id: n as u32,
+        }
+    }
+
+    /// Reassemble from persisted parts (validated by the caller; see
+    /// [`LiveIds::load`]).
+    fn from_parts(row_ids: Vec<u32>, dead_rows: &[u32], next_id: u32) -> LiveIds {
+        let mut live = LiveIds {
+            bits: vec![0u64; row_ids.len().div_ceil(64)],
+            row_ids,
+            n_dead: 0,
+            next_id,
+        };
+        for &d in dead_rows {
+            live.kill_row(d as usize);
+        }
+        live
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.row_ids.len()
+    }
+
+    pub fn live_len(&self) -> usize {
+        self.row_ids.len() - self.n_dead
+    }
+
+    pub fn n_dead(&self) -> usize {
+        self.n_dead
+    }
+
+    pub fn next_id(&self) -> u32 {
+        self.next_id
+    }
+
+    pub fn any_dead(&self) -> bool {
+        self.n_dead > 0
+    }
+
+    /// True while external ids coincide with row ids and nothing is
+    /// tombstoned — the fast path where mutated-index searches reduce to
+    /// the plain static ones.
+    pub fn is_identity(&self) -> bool {
+        self.n_dead == 0 && self.next_id as usize == self.row_ids.len()
+    }
+
+    pub fn tombstone_fraction(&self) -> f64 {
+        if self.row_ids.is_empty() {
+            0.0
+        } else {
+            self.n_dead as f64 / self.row_ids.len() as f64
+        }
+    }
+
+    /// Has the tombstone fraction crossed `threshold` (and is there
+    /// anything to reclaim)?
+    pub fn should_compact(&self, threshold: f64) -> bool {
+        self.n_dead > 0 && self.tombstone_fraction() >= threshold
+    }
+
+    #[inline]
+    pub fn is_dead_row(&self, row: usize) -> bool {
+        (self.bits[row >> 6] >> (row & 63)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn external_of(&self, row: usize) -> u32 {
+        self.row_ids[row]
+    }
+
+    /// Row currently holding external id `id` (live or tombstoned);
+    /// `None` if the id was never assigned or was reclaimed by a
+    /// compaction. Binary search — `row_ids` is strictly ascending.
+    pub fn row_of(&self, id: u32) -> Option<usize> {
+        self.row_ids.binary_search(&id).ok()
+    }
+
+    pub fn is_live(&self, id: u32) -> bool {
+        self.row_of(id).is_some_and(|row| !self.is_dead_row(row))
+    }
+
+    /// All live external ids, ascending.
+    pub fn live_ids(&self) -> Vec<u32> {
+        (0..self.row_ids.len())
+            .filter(|&row| !self.is_dead_row(row))
+            .map(|row| self.row_ids[row])
+            .collect()
+    }
+
+    /// Register a newly appended row; returns its external id (the
+    /// watermark value).
+    pub fn alloc(&mut self) -> u32 {
+        let id = self.next_id;
+        self.row_ids.push(id);
+        self.next_id += 1;
+        if self.row_ids.len() > self.bits.len() * 64 {
+            self.bits.push(0);
+        }
+        id
+    }
+
+    /// Tombstone a row. Returns false if it was already dead.
+    pub fn kill_row(&mut self, row: usize) -> bool {
+        if self.is_dead_row(row) {
+            return false;
+        }
+        self.bits[row >> 6] |= 1u64 << (row & 63);
+        self.n_dead += 1;
+        true
+    }
+
+    /// Rows that survive a compaction, ascending.
+    pub fn compact_plan(&self) -> Vec<usize> {
+        (0..self.row_ids.len())
+            .filter(|&row| !self.is_dead_row(row))
+            .collect()
+    }
+
+    /// Drop tombstoned rows from the map (the caller rebuilds its data /
+    /// graph over `compact_plan()` in the same order). The watermark is
+    /// untouched, so reclaimed ids are never reissued.
+    pub fn apply_compact(&mut self) {
+        let keep = self.compact_plan();
+        self.row_ids = keep.iter().map(|&row| self.row_ids[row]).collect();
+        self.bits = vec![0u64; self.row_ids.len().div_ceil(64)];
+        self.n_dead = 0;
+    }
+
+    /// Rewrite beam-search row ids to external ids in place. Monotone
+    /// (`row_ids` ascending), so ascending `(dist, id)` order survives.
+    pub fn remap_rows_to_external(&self, res: &mut [Neighbor]) {
+        for n in res.iter_mut() {
+            n.id = self.row_ids[n.id as usize];
+        }
+    }
+
+    // ------------------------------------------------- persistence (v5)
+
+    /// Serialize the mutation section (format v5): watermark, row→external
+    /// map, tombstoned row list.
+    pub fn save(&self, w: &mut BinWriter<&mut dyn io::Write>) -> io::Result<()> {
+        w.u64(self.next_id as u64)?;
+        w.u32_slice(&self.row_ids)?;
+        let dead: Vec<u32> = (0..self.row_ids.len() as u32)
+            .filter(|&row| self.is_dead_row(row as usize))
+            .collect();
+        w.u32_slice(&dead)
+    }
+
+    /// Read + validate a mutation section written by [`LiveIds::save`].
+    /// `n_rows` is the data-matrix row count the section must cover.
+    /// Corrupt or truncated sections fail with `InvalidData`/EOF errors,
+    /// never a panic.
+    pub fn load<R: io::Read>(r: &mut BinReader<R>, n_rows: usize) -> io::Result<LiveIds> {
+        let invalid = |msg: &str| io::Error::new(io::ErrorKind::InvalidData, msg.to_string());
+        let next_id = r.u64()?;
+        if next_id > u32::MAX as u64 {
+            return Err(invalid("implausible id watermark"));
+        }
+        let row_ids = r.u32_slice()?;
+        if row_ids.len() != n_rows {
+            return Err(invalid("row-id map does not cover the data matrix"));
+        }
+        if row_ids.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(invalid("row-id map not strictly ascending"));
+        }
+        if row_ids.iter().any(|&id| id as u64 >= next_id) {
+            return Err(invalid("row id at or above the watermark"));
+        }
+        let dead = r.u32_slice()?;
+        if dead.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(invalid("tombstone list not strictly ascending"));
+        }
+        if dead.iter().any(|&d| d as usize >= n_rows) {
+            return Err(invalid("tombstoned row out of range"));
+        }
+        Ok(LiveIds::from_parts(row_ids, &dead, next_id as u32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_is_identity() {
+        let live = LiveIds::fresh(5);
+        assert!(live.is_identity());
+        assert_eq!(live.live_len(), 5);
+        assert_eq!(live.next_id(), 5);
+        assert_eq!(live.live_ids(), vec![0, 1, 2, 3, 4]);
+        assert!(!live.any_dead());
+        assert_eq!(live.tombstone_fraction(), 0.0);
+    }
+
+    #[test]
+    fn alloc_kill_compact_lifecycle() {
+        let mut live = LiveIds::fresh(3);
+        assert_eq!(live.alloc(), 3);
+        assert_eq!(live.alloc(), 4);
+        assert!(live.kill_row(1));
+        assert!(!live.kill_row(1), "double kill reports false");
+        assert!(live.kill_row(3));
+        assert_eq!(live.live_len(), 3);
+        assert_eq!(live.live_ids(), vec![0, 2, 4]);
+        assert!(!live.is_live(1));
+        assert!(live.is_live(4));
+        assert!((live.tombstone_fraction() - 0.4).abs() < 1e-12);
+        assert!(live.should_compact(0.4));
+        assert!(!live.should_compact(0.5));
+
+        live.apply_compact();
+        assert_eq!(live.n_rows(), 3);
+        assert_eq!(live.live_ids(), vec![0, 2, 4]);
+        assert_eq!(live.next_id(), 5, "watermark survives compaction");
+        assert!(!live.is_identity(), "external ids keep their holes");
+        assert_eq!(live.row_of(2), Some(1));
+        assert_eq!(live.row_of(1), None, "reclaimed id is unknown");
+        assert_eq!(live.alloc(), 5, "reclaimed ids are never reissued");
+    }
+
+    #[test]
+    fn remap_is_monotone() {
+        let mut live = LiveIds::fresh(4);
+        live.kill_row(1);
+        live.apply_compact(); // rows now map to ids [0, 2, 3]
+        let mut res = vec![
+            Neighbor { dist: 0.1, id: 0 },
+            Neighbor { dist: 0.2, id: 1 },
+            Neighbor { dist: 0.2, id: 2 },
+        ];
+        live.remap_rows_to_external(&mut res);
+        let ids: Vec<u32> = res.iter().map(|n| n.id).collect();
+        assert_eq!(ids, vec![0, 2, 3]);
+        assert!(res.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_rejection() {
+        let mut live = LiveIds::fresh(6);
+        live.alloc();
+        live.kill_row(2);
+        live.kill_row(5);
+
+        let mut buf = Vec::new();
+        {
+            let sink: &mut dyn io::Write = &mut buf;
+            let mut w = BinWriter::new(sink);
+            live.save(&mut w).unwrap();
+        }
+        let mut r = BinReader::new(&buf[..]);
+        let back = LiveIds::load(&mut r, 7).unwrap();
+        assert_eq!(back, live);
+
+        // Wrong row count rejected.
+        let mut r = BinReader::new(&buf[..]);
+        assert!(LiveIds::load(&mut r, 9).is_err());
+
+        // Truncation rejected with an error, not a panic.
+        let mut r = BinReader::new(&buf[..buf.len() - 3]);
+        assert!(LiveIds::load(&mut r, 7).is_err());
+
+        // Out-of-range tombstone rejected (last 4 bytes are the final
+        // dead-row entry).
+        let mut corrupt = buf.clone();
+        let n = corrupt.len();
+        corrupt[n - 4..].copy_from_slice(&999u32.to_le_bytes());
+        let mut r = BinReader::new(&corrupt[..]);
+        assert!(LiveIds::load(&mut r, 7).is_err());
+    }
+
+    #[test]
+    fn mutate_error_messages() {
+        assert!(MutateError::Unsupported("ivfpq").to_string().contains("ivfpq"));
+        assert!(MutateError::DimMismatch { got: 3, want: 8 }.to_string().contains("3"));
+        assert!(MutateError::UnknownId(7).to_string().contains('7'));
+        assert!(MutateError::AlreadyDeleted(9).to_string().contains('9'));
+    }
+}

@@ -28,6 +28,7 @@ use crate::data::persist;
 use crate::graph::search::{Neighbor, SearchStats};
 use crate::index::context::{SearchContext, SearchParams};
 use crate::index::merge::{merge_topk, remap_to_global};
+use crate::index::mutable::{LiveIds, MutableAnnIndex, MutateError, DEFAULT_COMPACT_THRESHOLD};
 use crate::index::AnnIndex;
 use crate::quant::kmeans::KMeans;
 
@@ -107,7 +108,13 @@ impl Default for ShardSpec {
 /// the parallel batch path.
 pub struct Shard {
     pub index: Box<dyn AnnIndex>,
-    /// `global_ids[local_row] = global_row`; strictly ascending.
+    /// `global_ids[local external id] = global external id`; strictly
+    /// ascending (both sides are assigned monotonically). For a freshly
+    /// built shard local external ids coincide with local rows, so this
+    /// is the classic local-row→global-row map; after online mutation the
+    /// sub-index keeps emitting its stable local external ids, so entries
+    /// for tombstoned-and-compacted points simply go stale without ever
+    /// being looked up.
     pub global_ids: Vec<u32>,
     /// Mean of the shard's rows (probe ordering for `min_shard_frac`).
     pub centroid: Vec<f32>,
@@ -122,7 +129,8 @@ pub type ShardParts = (Box<dyn AnnIndex>, Vec<u32>, Vec<f32>);
 
 /// A sharded index over any `AnnIndex` family. See the module docs.
 pub struct ShardedIndex {
-    /// The full (unpartitioned) data matrix; row id == global id.
+    /// The full (unpartitioned) data matrix; `live` maps its rows to
+    /// global external ids (identity until mutated).
     pub data: Arc<Matrix>,
     pub shards: Vec<Shard>,
     pub strategy: ShardStrategy,
@@ -130,6 +138,9 @@ pub struct ShardedIndex {
     min_shard_frac: f32,
     threads: usize,
     label: &'static str,
+    /// Global external-id bookkeeping over the parent matrix.
+    live: LiveIds,
+    compact_threshold: f64,
 }
 
 /// Assign every row to a shard under `spec.strategy`, then rebalance so no
@@ -272,6 +283,7 @@ impl ShardedIndex {
                 ctx: Mutex::new(SearchContext::new()),
             })
             .collect();
+        let live = LiveIds::fresh(data.rows());
         ShardedIndex {
             data,
             shards,
@@ -279,7 +291,20 @@ impl ShardedIndex {
             min_shard_frac: 1.0f32.min(min_shard_frac.max(1e-6)),
             threads: if threads == 0 { default_threads() } else { threads },
             label,
+            live,
+            compact_threshold: DEFAULT_COMPACT_THRESHOLD,
         }
+    }
+
+    /// Restore persisted parent mutation state (the v5 loader's entry).
+    pub fn with_live(mut self, live: LiveIds) -> ShardedIndex {
+        assert_eq!(live.n_rows(), self.data.rows(), "live map must cover the rows");
+        self.live = live;
+        self
+    }
+
+    pub fn live(&self) -> &LiveIds {
+        &self.live
     }
 
     /// Probe only the nearest `ceil(frac · S)` shards per query.
@@ -302,12 +327,17 @@ impl ShardedIndex {
         (((self.min_shard_frac as f64) * s as f64).ceil() as usize).clamp(1, s)
     }
 
-    /// Reconstruct the point→shard assignment (determinism checks).
+    /// Reconstruct the row→shard assignment (determinism checks). After
+    /// online mutation the manifest may carry stale entries for reclaimed
+    /// ids; those are skipped, so the result always covers exactly the
+    /// current rows.
     pub fn assignment(&self) -> Vec<u32> {
         let mut out = vec![0u32; self.data.rows()];
         for (si, shard) in self.shards.iter().enumerate() {
             for &gid in &shard.global_ids {
-                out[gid as usize] = si as u32;
+                if let Some(row) = self.live.row_of(gid) {
+                    out[row] = si as u32;
+                }
             }
         }
         out
@@ -459,13 +489,31 @@ impl AnnIndex for ShardedIndex {
             .collect()
     }
 
+    fn as_mutable(&mut self) -> Option<&mut dyn MutableAnnIndex> {
+        // The fleet mutates as one: every shard family must support it.
+        if self.shards.iter().all(|s| s.index.as_mutable_view().is_some()) {
+            Some(self)
+        } else {
+            None
+        }
+    }
+
+    fn as_mutable_view(&self) -> Option<&dyn MutableAnnIndex> {
+        if self.shards.iter().all(|s| s.index.as_mutable_view().is_some()) {
+            Some(self)
+        } else {
+            None
+        }
+    }
+
     fn kind_tag(&self) -> u64 {
         persist::TAG_SHARDED
     }
 
-    /// Shard manifest + nested tagged sub-index bundles (format v4):
-    /// strategy | min_shard_frac | S | per shard: global_ids, centroid,
-    /// sub tag, sub data matrix, sub payload.
+    /// Shard manifest + nested tagged sub-index bundles (format v5):
+    /// strategy | min_shard_frac | parent live section | S | per shard:
+    /// global_ids, centroid, sub tag, sub data matrix, sub payload (which
+    /// for mutable families ends with the shard's own live section).
     ///
     /// Each nested bundle deliberately repeats the shard's rows even
     /// though they duplicate slices of the parent matrix: every sub-bundle
@@ -478,6 +526,7 @@ impl AnnIndex for ShardedIndex {
     fn save_payload(&self, w: &mut BinWriter<&mut dyn io::Write>) -> io::Result<()> {
         w.u64(self.strategy.tag())?;
         w.f32_slice(&[self.min_shard_frac])?;
+        self.live.save(w)?;
         w.u64(self.shards.len() as u64)?;
         for shard in &self.shards {
             w.u32_slice(&shard.global_ids)?;
@@ -487,6 +536,128 @@ impl AnnIndex for ShardedIndex {
             shard.index.save_payload(w)?;
         }
         Ok(())
+    }
+}
+
+impl MutableAnnIndex for ShardedIndex {
+    /// Route the insert to one shard: nearest centroid under k-means
+    /// assignment (locality), least-loaded (by live count, ties to the
+    /// lowest shard index) under round-robin (balance). The new point
+    /// gets the next global external id; the chosen shard's sub-index
+    /// assigns the matching local external id and `global_ids` grows by
+    /// one entry — both sides monotone, so the remap stays ascending.
+    fn insert(&mut self, v: &[f32], ctx: &mut SearchContext) -> Result<u32, MutateError> {
+        if v.len() != self.data.cols() {
+            return Err(MutateError::DimMismatch { got: v.len(), want: self.data.cols() });
+        }
+        let si = match self.strategy {
+            ShardStrategy::KMeans => self
+                .shards
+                .iter()
+                .enumerate()
+                .map(|(i, sh)| (l2_sq(v, &sh.centroid), i))
+                .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)))
+                .map(|(_, i)| i)
+                .unwrap(),
+            ShardStrategy::RoundRobin => self
+                .shards
+                .iter()
+                .enumerate()
+                .map(|(i, sh)| {
+                    let load = sh
+                        .index
+                        .as_mutable_view()
+                        .map(|m| m.live_len())
+                        .unwrap_or_else(|| sh.index.len());
+                    (load, i)
+                })
+                .min()
+                .map(|(_, i)| i)
+                .unwrap(),
+        };
+        {
+            let shard = &mut self.shards[si];
+            let expected = shard.global_ids.len();
+            let sub = shard
+                .index
+                .as_mutable()
+                .ok_or(MutateError::Unsupported("sharded"))?;
+            let local = sub.insert(v, ctx)?;
+            debug_assert_eq!(local as usize, expected, "shard id spaces are append-only");
+        }
+        Arc::make_mut(&mut self.data).push_row(v);
+        let id = self.live.alloc();
+        self.shards[si].global_ids.push(id);
+        Ok(id)
+    }
+
+    fn remove(&mut self, id: u32) -> Result<(), MutateError> {
+        let row = self.live.row_of(id).ok_or(MutateError::UnknownId(id))?;
+        if self.live.is_dead_row(row) {
+            return Err(MutateError::AlreadyDeleted(id));
+        }
+        // The owning shard is the one whose (ascending) global-id map
+        // contains the id; forward the delete in its local id space.
+        let mut owner = None;
+        for (si, shard) in self.shards.iter().enumerate() {
+            if let Ok(local) = shard.global_ids.binary_search(&id) {
+                owner = Some((si, local as u32));
+                break;
+            }
+        }
+        let (si, local) = owner.ok_or(MutateError::UnknownId(id))?;
+        let sub = self.shards[si]
+            .index
+            .as_mutable()
+            .ok_or(MutateError::Unsupported("sharded"))?;
+        sub.remove(local)?;
+        self.live.kill_row(row);
+        Ok(())
+    }
+
+    /// Targeted compaction: every shard decides from its own tombstone
+    /// pressure (the threshold is forwarded by
+    /// [`MutableAnnIndex::set_compact_threshold`]); the parent matrix
+    /// compacts independently once its own fraction crosses the
+    /// threshold. Global external ids survive both.
+    fn compact(&mut self, ctx: &mut SearchContext) -> Result<bool, MutateError> {
+        let mut any = false;
+        for shard in &mut self.shards {
+            if let Some(sub) = shard.index.as_mutable() {
+                any |= sub.compact(ctx)?;
+            }
+        }
+        if self.live.should_compact(self.compact_threshold) {
+            self.data = crate::index::impls::gather_rows(&self.data, &self.live.compact_plan());
+            self.live.apply_compact();
+            any = true;
+        }
+        Ok(any)
+    }
+
+    fn live_len(&self) -> usize {
+        self.live.live_len()
+    }
+
+    fn is_live(&self, id: u32) -> bool {
+        self.live.is_live(id)
+    }
+
+    fn live_ids(&self) -> Vec<u32> {
+        self.live.live_ids()
+    }
+
+    fn tombstone_fraction(&self) -> f64 {
+        self.live.tombstone_fraction()
+    }
+
+    fn set_compact_threshold(&mut self, frac: f64) {
+        self.compact_threshold = frac;
+        for shard in &mut self.shards {
+            if let Some(sub) = shard.index.as_mutable() {
+                sub.set_compact_threshold(frac);
+            }
+        }
     }
 }
 
@@ -683,6 +854,69 @@ mod tests {
         for qi in 0..ds.queries.rows() {
             let single = idx.search(ds.queries.row(qi), &params, &mut ctx);
             assert_eq!(batched[qi], single, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn sharded_mutation_lifecycle() {
+        let ds = tiny(808, 120, 8, Metric::L2);
+        let spec = ShardSpec { n_shards: 3, ..Default::default() };
+        let mut idx = sharded_bf(&ds, &spec);
+        let mut ctx = SearchContext::new();
+
+        // Insert a far-away point: gets the watermark id, becomes findable.
+        let v: Vec<f32> = (0..8).map(|i| 100.0 + i as f32).collect();
+        let id = idx.insert(&v, &mut ctx).unwrap();
+        assert_eq!(id, 120);
+        assert_eq!(idx.live_len(), 121);
+        assert_eq!(idx.len(), 121);
+        let got = idx.search(&v, &SearchParams::new(1), &mut ctx);
+        assert_eq!(got[0].id, 120);
+
+        // Delete it: never emitted again, structured errors on re-delete.
+        idx.remove(120).unwrap();
+        assert_eq!(idx.live_len(), 120);
+        let got = idx.search(&v, &SearchParams::new(3), &mut ctx);
+        assert!(got.iter().all(|n| n.id != 120));
+        assert_eq!(idx.remove(120), Err(MutateError::AlreadyDeleted(120)));
+        assert_eq!(idx.remove(999), Err(MutateError::UnknownId(999)));
+        assert_eq!(
+            idx.insert(&[1.0, 2.0], &mut ctx),
+            Err(MutateError::DimMismatch { got: 2, want: 8 })
+        );
+
+        // Forced compaction reclaims the tombstone; the survivors are the
+        // original points and search stays exact.
+        idx.set_compact_threshold(0.0);
+        assert!(idx.compact(&mut ctx).unwrap());
+        assert_eq!(idx.live_len(), 120);
+        assert_eq!(idx.len(), 120);
+        assert_eq!(idx.remove(120), Err(MutateError::UnknownId(120)), "id reclaimed");
+        for qi in 0..4 {
+            let q = ds.queries.row(qi);
+            let got = idx.search(q, &SearchParams::new(5), &mut ctx);
+            assert_eq!(got, scan(&ds.data, q, 5), "query {qi}");
+        }
+    }
+
+    #[test]
+    fn round_robin_insert_targets_least_loaded_shard() {
+        let ds = tiny(809, 10, 4, Metric::L2);
+        let spec = ShardSpec { n_shards: 3, ..Default::default() };
+        // 10 points round-robin over 3 shards: loads 4/3/3.
+        let mut idx = sharded_bf(&ds, &spec);
+        let mut ctx = SearchContext::new();
+        let sizes = |idx: &ShardedIndex| -> Vec<usize> {
+            idx.shards.iter().map(|s| s.global_ids.len()).collect()
+        };
+        assert_eq!(sizes(&idx), vec![4, 3, 3]);
+        idx.insert(&[0.0; 4], &mut ctx).unwrap(); // shard 1 (least, lowest index)
+        assert_eq!(sizes(&idx), vec![4, 4, 3]);
+        idx.insert(&[0.0; 4], &mut ctx).unwrap(); // shard 2
+        assert_eq!(sizes(&idx), vec![4, 4, 4]);
+        // Ascending global-id maps survive the appends.
+        for shard in &idx.shards {
+            assert!(shard.global_ids.windows(2).all(|w| w[0] < w[1]));
         }
     }
 

@@ -40,7 +40,7 @@ use finger_ann::index::{
     AnnIndex, SearchContext, SearchParams, ShardSpec, ShardStrategy, ShardedIndex,
 };
 use finger_ann::quant::ivfpq::IvfPqParams;
-use finger_ann::router::{ServeIndex, Server, ServerConfig};
+use finger_ann::router::{Client, MutOutcome, Request, ServeIndex, Server, ServerConfig};
 use finger_ann::runtime::{default_artifacts_dir, service::RerankService, Manifest};
 
 const METHODS: &str = "bruteforce|hnsw|finger|vamana|nndescent|ivfpq";
@@ -54,6 +54,9 @@ fn main() {
         "build" => build(&args),
         "search" => search(&args),
         "serve" => serve(&args),
+        "update" => update(&args),
+        "delete" => delete(&args),
+        "compact" => compact(&args),
         "bench" => bench(&args),
         "info" => info(),
         _ => help(),
@@ -69,7 +72,10 @@ fn help() {
          \u{20}  search   --dataset NAME [--method {METHODS}] [--ef N] [--k N] [--nprobe N] [--patience N]\n\
          \u{20}  serve    --dataset NAME [--method {METHODS}] [--addr A] [--workers N] [--rerank]\n\
          \u{20}  serve    --index index.bin [--addr A] [--workers N] [--rerank]\n\
-         \u{20}  bench    FIGURE [--scale F] [--out DIR]   (figure1..figure8, table1, rank-selection, all)\n\
+         \u{20}  update   --vector \"v1,v2,...\" [--addr A]   (insert into a running server)\n\
+         \u{20}  delete   --key ID [--addr A]               (tombstone a served point)\n\
+         \u{20}  compact  [--addr A]                        (reclaim tombstones if over threshold)\n\
+         \u{20}  bench    FIGURE [--scale F] [--out DIR]   (figure1..figure8, table1, rank-selection, churn, all)\n\
          \u{20}  info\n\
          sharding (build/search/serve): --shards S [--shard-strategy round-robin|kmeans]\n\
          \u{20}                         [--min-shard-frac F]   (probe the nearest F·S shards, 0<F<=1)"
@@ -264,13 +270,10 @@ fn serve(args: &Args) {
     let name = index.name();
     // Same knob surface as `search`: --ef/--nprobe/--patience all apply
     // (k still comes per request).
-    let serve_index = Arc::new(ServeIndex {
-        index,
-        params: params_from_args(args, 10),
-    });
+    let serve_index = Arc::new(ServeIndex::with_params(index, params_from_args(args, 10)));
 
     let rerank = if args.has_flag("rerank") {
-        let data = Arc::new(serve_index.data().clone());
+        let data = Arc::new(serve_index.data_clone());
         match RerankService::start(default_artifacts_dir(), dim, data) {
             Ok(svc) => {
                 println!("PJRT rerank service up (panel width {})", svc.max_cands);
@@ -304,6 +307,119 @@ fn serve(args: &Args) {
     }
 }
 
+fn mutation_addr(args: &Args) -> std::net::SocketAddr {
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7771");
+    addr.parse().unwrap_or_else(|_| {
+        eprintln!("bad --addr '{addr}'");
+        std::process::exit(2);
+    })
+}
+
+fn apply_mutation(args: &Args, req: Request) {
+    let addr = mutation_addr(args);
+    let mut client = Client::connect(&addr).unwrap_or_else(|e| {
+        eprintln!("cannot connect to {addr}: {e}");
+        std::process::exit(1);
+    });
+    match client.mutate(&req) {
+        Ok(resp) => match resp.outcome {
+            MutOutcome::Inserted(id) => println!("inserted id {id} ({} live)", resp.live),
+            MutOutcome::Deleted(id) => println!("deleted id {id} ({} live)", resp.live),
+            MutOutcome::Compacted(did) => println!(
+                "{} ({} live)",
+                if did { "compacted" } else { "below compaction threshold; not rebuilt" },
+                resp.live
+            ),
+        },
+        Err(e) => {
+            eprintln!("server rejected the mutation: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// `finger update --vector "v1,v2,..."` — online insert into a running
+/// server (the INSERT protocol verb).
+fn update(args: &Args) {
+    let Some(raw) = args.get("vector") else {
+        eprintln!("update requires --vector \"v1,v2,...\"");
+        std::process::exit(2);
+    };
+    let vector: Vec<f32> = raw
+        .split(',')
+        .map(|s| {
+            s.trim().parse::<f32>().unwrap_or_else(|_| {
+                eprintln!("bad vector component '{s}'");
+                std::process::exit(2);
+            })
+        })
+        .collect();
+    if vector.is_empty() {
+        eprintln!("empty vector");
+        std::process::exit(2);
+    }
+    apply_mutation(args, Request::Insert { id: 0, vector });
+}
+
+/// `finger delete --key ID` — tombstone a served point (DELETE verb).
+fn delete(args: &Args) {
+    let Some(key) = args.get("key").and_then(|s| s.parse::<u32>().ok()) else {
+        eprintln!("delete requires --key ID (a u32)");
+        std::process::exit(2);
+    };
+    apply_mutation(args, Request::Delete { id: 0, key });
+}
+
+/// `finger compact` — ask the server to reclaim tombstones (COMPACT verb).
+fn compact(args: &Args) {
+    apply_mutation(args, Request::Compact { id: 0 });
+}
+
+/// Churn sweep: interleaved insert/delete/query recall-over-time for the
+/// mutable families (the streaming-workload scenario).
+fn bench_churn(out: &std::path::Path, scale: f64) {
+    use finger_ann::core::distance::Metric;
+    use finger_ann::data::tiny;
+    use finger_ann::eval::sweep::{churn_sweep, churn_to_csv};
+    use finger_ann::index::MutableAnnIndex;
+
+    let n = ((4000.0 * scale) as usize).clamp(200, 20_000);
+    let ds = tiny(4242, n, 32, Metric::L2);
+    std::fs::create_dir_all(out).expect("mkdir");
+    let params = SearchParams::new(10).with_ef(120);
+    let mut csv_all = String::new();
+    for method in ["hnsw", "finger"] {
+        let mut index: Box<dyn AnnIndex> = match method {
+            "hnsw" => Box::new(HnswIndex::build(
+                Arc::clone(&ds.data),
+                HnswParams { m: 12, ef_construction: 80, ..Default::default() },
+            )),
+            _ => Box::new(FingerHnswIndex::build(
+                Arc::clone(&ds.data),
+                HnswParams { m: 12, ef_construction: 80, ..Default::default() },
+                FingerParams { rank: 8, ..Default::default() },
+            )),
+        };
+        let mutable = index.as_mutable().expect("graph families are mutable");
+        mutable.set_compact_threshold(0.25);
+        let ins = (n / 50).max(5);
+        let del = ins + ins / 2;
+        let points = churn_sweep(mutable, &ds.queries, 10, &params, 10, ins, del, 7);
+        println!("churn [{method}] (n={n}, +{ins}/-{del} per step):");
+        for p in &points {
+            println!(
+                "  step {:>2}: live {:>6}  tomb {:.3}  compacted {:<5}  recall@10 {:.4}  {:.0} QPS",
+                p.step, p.live, p.tombstone_frac, p.compacted, p.recall10, p.qps
+            );
+        }
+        csv_all.push_str(&format!("# method={method}\n"));
+        csv_all.push_str(&churn_to_csv(&points));
+    }
+    let path = out.join("churn.csv");
+    std::fs::write(&path, csv_all).expect("write churn.csv");
+    println!("wrote {}", path.display());
+}
+
 fn bench(args: &Args) {
     let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     let scale = args.get_f64("scale", 0.25);
@@ -321,6 +437,7 @@ fn bench(args: &Args) {
         "figure7" => figures::figure7(&out, scale),
         "table1" => figures::table1(&out, scale),
         "rank-selection" => figures::rank_selection(&out, scale),
+        "churn" => bench_churn(&out, scale),
         "all" => {
             figures::figure2(&out, scale);
             figures::figure3(&out, scale);
@@ -331,6 +448,7 @@ fn bench(args: &Args) {
             figures::figure5(&out, scale, true); // figure 8
             figures::table1(&out, scale);
             figures::rank_selection(&out, scale);
+            bench_churn(&out, scale);
         }
         other => {
             eprintln!("unknown bench '{other}'");

@@ -8,5 +8,5 @@ pub mod server;
 
 pub use batcher::{Batcher, SubmitError};
 pub use metrics::Metrics;
-pub use protocol::{QueryRequest, QueryResponse};
+pub use protocol::{MutOutcome, MutResponse, QueryRequest, QueryResponse, Request};
 pub use server::{Client, ServeIndex, Server, ServerConfig};

@@ -1,9 +1,23 @@
 //! Wire protocol: JSON lines over TCP.
 //!
-//! Request:  {"id": 7, "vector": [f32...], "k": 10}
-//! Response: {"id": 7, "ids": [u32...], "dists": [f32...],
-//!            "latency_us": 123, "exact": true}
-//! Error:    {"id": 7, "error": "..."}
+//! Search (the default when `op` is absent — wire-compatible with every
+//! older client):
+//!   Request:  {"id": 7, "vector": [f32...], "k": 10}
+//!   Response: {"id": 7, "ids": [u32...], "dists": [f32...],
+//!              "latency_us": 123}
+//!
+//! Mutation verbs (served concurrently with search batches; the server
+//! takes the index's write lock per mutation):
+//!   {"id": 8, "op": "insert", "vector": [f32...]}
+//!       -> {"id": 8, "inserted": <assigned id>, "live": <live count>}
+//!   {"id": 9, "op": "delete", "key": 42}
+//!       -> {"id": 9, "deleted": 42, "live": ...}
+//!   {"id": 10, "op": "compact"}
+//!       -> {"id": 10, "compacted": true|false, "live": ...}
+//!
+//! Every failure — malformed frame, unknown verb, unsupported family,
+//! stale id — is a structured `{"id": N, "error": "..."}` line on the
+//! same connection, never a disconnect.
 
 use crate::core::json::Json;
 
@@ -24,6 +38,12 @@ pub struct QueryResponse {
 impl QueryRequest {
     pub fn parse(line: &str) -> Result<QueryRequest, String> {
         let v = Json::parse(line).map_err(|e| e.to_string())?;
+        QueryRequest::from_json(&v)
+    }
+
+    /// Build from an already-parsed value (the framed [`Request::parse`]
+    /// path uses this so a search line is JSON-parsed exactly once).
+    pub fn from_json(v: &Json) -> Result<QueryRequest, String> {
         let id = v
             .get("id")
             .and_then(|x| x.as_f64())
@@ -103,6 +123,144 @@ pub fn error_line(id: u64, msg: &str) -> String {
     .to_string()
 }
 
+/// One parsed request frame: a search or one of the mutation verbs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Query(QueryRequest),
+    Insert { id: u64, vector: Vec<f32> },
+    Delete { id: u64, key: u32 },
+    Compact { id: u64 },
+}
+
+impl Request {
+    /// Parse a frame, dispatching on the optional `op` field (absent or
+    /// `"search"` = query, for wire compatibility with older clients).
+    pub fn parse(line: &str) -> Result<Request, String> {
+        let v = Json::parse(line).map_err(|e| e.to_string())?;
+        let op = v.get("op").and_then(|x| x.as_str()).unwrap_or("search");
+        match op {
+            "search" => QueryRequest::from_json(&v).map(Request::Query),
+            "insert" => {
+                let id = v.get("id").and_then(|x| x.as_f64()).ok_or("missing id")? as u64;
+                let vector: Vec<f32> = v
+                    .get("vector")
+                    .and_then(|x| x.as_arr())
+                    .ok_or("insert requires a vector")?
+                    .iter()
+                    .map(|x| x.as_f64().map(|f| f as f32).ok_or("non-numeric vector entry"))
+                    .collect::<Result<_, _>>()?;
+                if vector.is_empty() {
+                    return Err("empty vector".into());
+                }
+                Ok(Request::Insert { id, vector })
+            }
+            "delete" => {
+                let id = v.get("id").and_then(|x| x.as_f64()).ok_or("missing id")? as u64;
+                let key = v
+                    .get("key")
+                    .and_then(|x| x.as_f64())
+                    .ok_or("delete requires a key")?;
+                if !(0.0..=u32::MAX as f64).contains(&key) || key.fract() != 0.0 {
+                    return Err("key must be a u32".into());
+                }
+                Ok(Request::Delete { id, key: key as u32 })
+            }
+            "compact" => {
+                let id = v.get("id").and_then(|x| x.as_f64()).ok_or("missing id")? as u64;
+                Ok(Request::Compact { id })
+            }
+            other => Err(format!("unknown op '{other}'")),
+        }
+    }
+
+    /// Frame id for error reporting (0 when unparseable).
+    pub fn id(&self) -> u64 {
+        match self {
+            Request::Query(q) => q.id,
+            Request::Insert { id, .. } | Request::Delete { id, .. } | Request::Compact { id } => {
+                *id
+            }
+        }
+    }
+
+    pub fn to_json_line(&self) -> String {
+        match self {
+            Request::Query(q) => q.to_json_line(),
+            Request::Insert { id, vector } => Json::obj(vec![
+                ("id", Json::Num(*id as f64)),
+                ("op", Json::str("insert")),
+                (
+                    "vector",
+                    Json::Arr(vector.iter().map(|&x| Json::Num(x as f64)).collect()),
+                ),
+            ])
+            .to_string(),
+            Request::Delete { id, key } => Json::obj(vec![
+                ("id", Json::Num(*id as f64)),
+                ("op", Json::str("delete")),
+                ("key", Json::Num(*key as f64)),
+            ])
+            .to_string(),
+            Request::Compact { id } => Json::obj(vec![
+                ("id", Json::Num(*id as f64)),
+                ("op", Json::str("compact")),
+            ])
+            .to_string(),
+        }
+    }
+}
+
+/// What a mutation verb did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MutOutcome {
+    Inserted(u32),
+    Deleted(u32),
+    Compacted(bool),
+}
+
+/// Acknowledgement for a mutation verb, with the post-op live count.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MutResponse {
+    pub id: u64,
+    pub outcome: MutOutcome,
+    pub live: u64,
+}
+
+impl MutResponse {
+    pub fn to_json_line(&self) -> String {
+        let (key, val) = match self.outcome {
+            MutOutcome::Inserted(id) => ("inserted", Json::Num(id as f64)),
+            MutOutcome::Deleted(id) => ("deleted", Json::Num(id as f64)),
+            MutOutcome::Compacted(did) => ("compacted", Json::Bool(did)),
+        };
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            (key, val),
+            ("live", Json::Num(self.live as f64)),
+        ])
+        .to_string()
+    }
+
+    pub fn parse(line: &str) -> Result<MutResponse, String> {
+        let v = Json::parse(line).map_err(|e| e.to_string())?;
+        if let Some(err) = v.get("error").and_then(|e| e.as_str()) {
+            return Err(err.to_string());
+        }
+        let id = v.get("id").and_then(|x| x.as_f64()).ok_or("missing id")? as u64;
+        let live = v.get("live").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64;
+        let outcome = if let Some(x) = v.get("inserted").and_then(|x| x.as_f64()) {
+            MutOutcome::Inserted(x as u32)
+        } else if let Some(x) = v.get("deleted").and_then(|x| x.as_f64()) {
+            MutOutcome::Deleted(x as u32)
+        } else if let Some(b) = v.get("compacted").and_then(|x| x.as_bool()) {
+            MutOutcome::Compacted(b)
+        } else {
+            return Err("not a mutation acknowledgement".into());
+        };
+        Ok(MutResponse { id, outcome, live })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,5 +305,57 @@ mod tests {
     fn error_line_parses_as_error() {
         let line = error_line(3, "boom");
         assert_eq!(QueryResponse::parse(&line), Err("boom".to_string()));
+    }
+
+    #[test]
+    fn mutation_request_roundtrips() {
+        let frames = [
+            Request::Insert { id: 1, vector: vec![0.5, -1.0] },
+            Request::Delete { id: 2, key: 77 },
+            Request::Compact { id: 3 },
+            Request::Query(QueryRequest { id: 4, vector: vec![1.0], k: 2 }),
+        ];
+        for f in frames {
+            let back = Request::parse(&f.to_json_line()).unwrap();
+            assert_eq!(f, back);
+        }
+    }
+
+    #[test]
+    fn plain_search_frames_stay_wire_compatible() {
+        // No "op" field = search, exactly as older clients send it.
+        let r = Request::parse(r#"{"id":5,"vector":[1.0,2.0],"k":3}"#).unwrap();
+        assert_eq!(
+            r,
+            Request::Query(QueryRequest { id: 5, vector: vec![1.0, 2.0], k: 3 })
+        );
+        assert_eq!(r.id(), 5);
+    }
+
+    #[test]
+    fn malformed_mutation_frames_are_structured_errors() {
+        assert!(Request::parse(r#"{"id":1,"op":"insert"}"#).is_err());
+        assert!(Request::parse(r#"{"id":1,"op":"insert","vector":[]}"#).is_err());
+        assert!(Request::parse(r#"{"id":1,"op":"delete"}"#).is_err());
+        assert!(Request::parse(r#"{"id":1,"op":"delete","key":-3}"#).is_err());
+        assert!(Request::parse(r#"{"id":1,"op":"delete","key":1.5}"#).is_err());
+        assert!(Request::parse(r#"{"id":1,"op":"frobnicate"}"#).is_err());
+        assert!(Request::parse(r#"{"op":"compact"}"#).is_err(), "compact needs an id");
+    }
+
+    #[test]
+    fn mutation_response_roundtrips() {
+        for outcome in [
+            MutOutcome::Inserted(9),
+            MutOutcome::Deleted(4),
+            MutOutcome::Compacted(true),
+            MutOutcome::Compacted(false),
+        ] {
+            let resp = MutResponse { id: 11, outcome, live: 100 };
+            let back = MutResponse::parse(&resp.to_json_line()).unwrap();
+            assert_eq!(resp, back);
+        }
+        let line = error_line(3, "nope");
+        assert_eq!(MutResponse::parse(&line), Err("nope".to_string()));
     }
 }

@@ -10,61 +10,145 @@
 //! Workers own their scratch (a pooled `SearchContext`) and search the
 //! shared [`ServeIndex`] — any [`AnnIndex`] implementor, so the same
 //! server binary fronts HNSW, HNSW-FINGER, Vamana, NN-descent, IVF-PQ, or
-//! brute force. The optional PJRT `rerank` executable re-scores the
-//! candidate set through the AOT JAX/Pallas artifact so final distances
-//! come from the L1 kernel (exactness cross-check + the "Python-free
-//! request path" demonstration).
+//! brute force. The index sits behind an `RwLock`: search batches take
+//! shared read locks on the worker pool while the mutation verbs
+//! (`INSERT`/`DELETE`/`COMPACT`, applied on the connection threads) take
+//! brief write locks — live updates and query traffic interleave on one
+//! server. The optional PJRT `rerank` executable re-scores the candidate
+//! set through the AOT JAX/Pallas artifact so final distances come from
+//! the L1 kernel (exactness cross-check + the "Python-free request path"
+//! demonstration).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::core::matrix::Matrix;
 use crate::index::{AnnIndex, SearchContext, SearchParams};
 use crate::router::batcher::{Batcher, SubmitError};
 use crate::router::metrics::Metrics;
-use crate::router::protocol::{error_line, QueryRequest, QueryResponse};
+use crate::router::protocol::{
+    error_line, MutOutcome, MutResponse, QueryRequest, QueryResponse, Request,
+};
 use crate::runtime::service::RerankService;
 
-/// Shared, immutable serving state: any index family behind one API.
+/// Shared serving state: any index family behind one API. Reads (search)
+/// run concurrently; the mutation verbs serialize behind the write lock.
+///
+/// Note on compaction: `compact()` rebuilds the index under the write
+/// lock, so search traffic stalls for the duration of the rebuild — an
+/// explicit availability tradeoff at this scale (a snapshot-and-swap
+/// compactor can lift it later without changing the protocol).
 pub struct ServeIndex {
-    pub index: Box<dyn AnnIndex>,
+    pub index: RwLock<Box<dyn AnnIndex>>,
     /// Serving-time defaults; `k` is overridden per request.
     pub params: SearchParams,
+    /// Pooled scratch for the mutation path (one mutation at a time —
+    /// they hold the write lock — so one context suffices and inserts
+    /// reuse warm buffers instead of allocating under the lock).
+    mut_ctx: Mutex<SearchContext>,
+    /// Set once any mutation verb succeeds. The PJRT rerank path indexes
+    /// a startup snapshot of the data matrix by id, which stops being
+    /// valid the moment ids and rows can diverge — so rerank is bypassed
+    /// from then on.
+    mutated: AtomicBool,
 }
 
 impl ServeIndex {
     pub fn new(index: Box<dyn AnnIndex>, ef_search: usize) -> ServeIndex {
-        let params = SearchParams::new(10).with_ef(ef_search);
-        ServeIndex { index, params }
+        ServeIndex::with_params(index, SearchParams::new(10).with_ef(ef_search))
+    }
+
+    pub fn with_params(index: Box<dyn AnnIndex>, params: SearchParams) -> ServeIndex {
+        ServeIndex {
+            index: RwLock::new(index),
+            params,
+            mut_ctx: Mutex::new(SearchContext::new()),
+            mutated: AtomicBool::new(false),
+        }
+    }
+
+    /// Has any mutation verb been applied? (Disables the snapshot-based
+    /// PJRT rerank path.)
+    pub fn is_mutated(&self) -> bool {
+        self.mutated.load(Ordering::Acquire)
     }
 
     pub fn search(&self, q: &[f32], k: usize, ctx: &mut SearchContext) -> Vec<(f32, u32)> {
         let mut p = self.params.clone();
         p.k = k;
         self.index
+            .read()
+            .unwrap()
             .search(q, &p, ctx)
             .into_iter()
             .map(|n| (n.dist, n.id))
             .collect()
     }
 
-    pub fn data(&self) -> &Matrix {
-        self.index.data()
+    /// Apply one mutation verb under the write lock. Non-mutable families
+    /// and stale ids produce structured errors, never panics or drops.
+    /// Compaction rebuilds inline (see the struct docs for the tradeoff).
+    pub fn mutate(&self, req: &Request) -> Result<MutResponse, String> {
+        let mut guard = self.index.write().unwrap();
+        let dim = guard.dim();
+        let name = guard.name();
+        let Some(index) = guard.as_mutable() else {
+            return Err(format!("index family '{name}' does not support mutation"));
+        };
+        let mut ctx = self.mut_ctx.lock().unwrap();
+        let ctx = &mut *ctx;
+        let outcome = match req {
+            Request::Insert { vector, .. } => {
+                if vector.len() != dim {
+                    return Err(format!("dim mismatch: got {}, want {dim}", vector.len()));
+                }
+                let key = index.insert(vector, ctx).map_err(|e| e.to_string())?;
+                MutOutcome::Inserted(key)
+            }
+            Request::Delete { key, .. } => {
+                index.remove(*key).map_err(|e| e.to_string())?;
+                MutOutcome::Deleted(*key)
+            }
+            Request::Compact { .. } => {
+                MutOutcome::Compacted(index.compact(ctx).map_err(|e| e.to_string())?)
+            }
+            Request::Query(_) => return Err("not a mutation".into()),
+        };
+        // A compact that declined to rebuild changed nothing; everything
+        // else invalidates the rerank snapshot.
+        if !matches!(outcome, MutOutcome::Compacted(false)) {
+            self.mutated.store(true, Ordering::Release);
+        }
+        Ok(MutResponse {
+            id: req.id(),
+            outcome,
+            live: index.live_len() as u64,
+        })
+    }
+
+    /// Copy of one data row (test/bench convenience; takes the read lock).
+    pub fn row(&self, i: usize) -> Vec<f32> {
+        self.index.read().unwrap().data().row(i).to_vec()
+    }
+
+    /// Clone of the whole data matrix (rerank service setup).
+    pub fn data_clone(&self) -> Matrix {
+        self.index.read().unwrap().data().clone()
     }
 
     pub fn dim(&self) -> usize {
-        self.index.dim()
+        self.index.read().unwrap().dim()
     }
 
     pub fn len(&self) -> usize {
-        self.index.len()
+        self.index.read().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.index.is_empty()
+        self.index.read().unwrap().is_empty()
     }
 }
 
@@ -145,8 +229,14 @@ impl Server {
                         while let Some(batch) = batcher.next_batch() {
                             metrics.record_batch(batch.len());
                             let all_hits = batch_hits(&index, &batch, &mut ctx);
+                            // The rerank service scores against a startup
+                            // snapshot of the data matrix indexed by id;
+                            // once a mutation lands, ids and snapshot rows
+                            // can diverge, so the exact-rerank pass is
+                            // bypassed rather than served wrong.
+                            let rerank_ok = use_rerank && !index.is_mutated();
                             for (job, hits) in batch.into_iter().zip(all_hits) {
-                                let hits = match (&rerank, use_rerank) {
+                                let hits = match (&rerank, rerank_ok) {
                                     (Some(svc), true) => {
                                         let ids: Vec<u32> =
                                             hits.iter().map(|&(_, id)| id).collect();
@@ -175,7 +265,7 @@ impl Server {
             let batcher = Arc::clone(&batcher);
             let metrics = Arc::clone(&metrics);
             let stop = Arc::clone(&stop);
-            let dim = index.dim();
+            let index = Arc::clone(&index);
             threads.push(
                 std::thread::Builder::new()
                     .name("finger-accept".into())
@@ -189,11 +279,12 @@ impl Server {
                                 Ok((stream, _)) => {
                                     let batcher = Arc::clone(&batcher);
                                     let metrics = Arc::clone(&metrics);
+                                    let index = Arc::clone(&index);
                                     let cid = conn_id.fetch_add(1, Ordering::Relaxed);
                                     std::thread::Builder::new()
                                         .name(format!("finger-conn-{cid}"))
                                         .spawn(move || {
-                                            handle_conn(stream, &batcher, &metrics, dim)
+                                            handle_conn(stream, &batcher, &metrics, &index)
                                         })
                                         .ok();
                                 }
@@ -250,7 +341,11 @@ impl Server {
 /// one widened search would let a co-batched request's `k` change this
 /// request's beam width, making responses depend on batch composition.
 fn batch_hits(index: &ServeIndex, batch: &[Job], ctx: &mut SearchContext) -> Vec<Vec<(f32, u32)>> {
-    let dim = index.dim();
+    // One read-lock acquisition per dynamic batch: every search in the
+    // batch sees the same index snapshot, and concurrent mutation verbs
+    // wait at most one batch.
+    let ix = index.index.read().unwrap();
+    let dim = ix.dim();
     let uniform = batch.len() > 1
         && batch
             .iter()
@@ -262,8 +357,7 @@ fn batch_hits(index: &ServeIndex, batch: &[Job], ctx: &mut SearchContext) -> Vec
         }
         let mut p = index.params.clone();
         p.k = batch[0].req.k;
-        return index
-            .index
+        return ix
             .batch_search(&queries, &p, ctx)
             .into_iter()
             .map(|res| res.into_iter().map(|n| (n.dist, n.id)).collect())
@@ -271,15 +365,28 @@ fn batch_hits(index: &ServeIndex, batch: &[Job], ctx: &mut SearchContext) -> Vec
     }
     batch
         .iter()
-        .map(|job| index.search(&job.req.vector, job.req.k, ctx))
+        .map(|job| {
+            let mut p = index.params.clone();
+            p.k = job.req.k;
+            ix.search(&job.req.vector, &p, ctx)
+                .into_iter()
+                .map(|n| (n.dist, n.id))
+                .collect()
+        })
         .collect()
 }
 
-fn handle_conn(stream: TcpStream, batcher: &Batcher<Job>, metrics: &Metrics, dim: usize) {
+fn handle_conn(
+    stream: TcpStream,
+    batcher: &Batcher<Job>,
+    metrics: &Metrics,
+    index: &Arc<ServeIndex>,
+) {
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
+    let dim = index.dim();
     let reader = BufReader::new(stream);
     for line in reader.lines() {
         let line = match line {
@@ -290,9 +397,9 @@ fn handle_conn(stream: TcpStream, batcher: &Batcher<Job>, metrics: &Metrics, dim
             continue;
         }
         metrics.requests.fetch_add(1, Ordering::Relaxed);
-        let req = match QueryRequest::parse(&line) {
-            Ok(r) if r.vector.len() == dim => r,
-            Ok(r) => {
+        let req = match Request::parse(&line) {
+            Ok(Request::Query(r)) if r.vector.len() == dim => r,
+            Ok(Request::Query(r)) => {
                 metrics.errors.fetch_add(1, Ordering::Relaxed);
                 let _ = writeln!(
                     writer,
@@ -301,7 +408,22 @@ fn handle_conn(stream: TcpStream, batcher: &Batcher<Job>, metrics: &Metrics, dim
                 );
                 continue;
             }
+            // Mutation verbs apply on the connection thread (write lock)
+            // while search batches keep flowing through the worker pool.
+            Ok(mreq) => {
+                let reply = match index.mutate(&mreq) {
+                    Ok(resp) => resp.to_json_line(),
+                    Err(e) => {
+                        metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        error_line(mreq.id(), &e)
+                    }
+                };
+                let _ = writeln!(writer, "{reply}");
+                continue;
+            }
             Err(e) => {
+                // Malformed frames get a structured error on the same
+                // connection — the stream keeps serving.
                 metrics.errors.fetch_add(1, Ordering::Relaxed);
                 let _ = writeln!(writer, "{}", error_line(0, &e));
                 continue;
@@ -355,6 +477,21 @@ impl Client {
         self.reader.read_line(&mut line).map_err(|e| e.to_string())?;
         QueryResponse::parse(line.trim())
     }
+
+    /// Send a mutation verb and parse its acknowledgement.
+    pub fn mutate(&mut self, req: &Request) -> Result<MutResponse, String> {
+        let line = self.send_raw(&req.to_json_line()).map_err(|e| e.to_string())?;
+        MutResponse::parse(line.trim())
+    }
+
+    /// Send one raw frame and read one raw response line (protocol tests;
+    /// lets a test exercise malformed frames end to end).
+    pub fn send_raw(&mut self, frame: &str) -> std::io::Result<String> {
+        writeln!(self.stream, "{frame}")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(line)
+    }
 }
 
 #[cfg(test)]
@@ -394,7 +531,7 @@ mod tests {
     #[test]
     fn local_submit_roundtrip() {
         let index = test_index();
-        let q = index.data().row(5).to_vec();
+        let q = index.row(5);
         let server = Server::start(Arc::clone(&index), cfg(), None).unwrap();
         let rx = server
             .submit_local(QueryRequest { id: 1, vector: q, k: 5 })
@@ -412,7 +549,7 @@ mod tests {
         let server = Server::start(Arc::clone(&index), cfg(), None).unwrap();
         let mut client = Client::connect(&server.local_addr).unwrap();
 
-        let q = index.data().row(3).to_vec();
+        let q = index.row(3);
         let resp = client.query(&QueryRequest { id: 9, vector: q, k: 3 }).unwrap();
         assert_eq!(resp.id, 9);
         assert_eq!(resp.hits[0].1, 3);
@@ -439,7 +576,7 @@ mod tests {
                     let rx = server
                         .submit_local(QueryRequest {
                             id: t * 1000 + i,
-                            vector: index.data().row(qid).to_vec(),
+                            vector: index.row(qid),
                             k: 5,
                         })
                         .unwrap();
@@ -518,13 +655,77 @@ mod tests {
         });
         let serve = Arc::new(ServeIndex::new(Box::new(sharded), 48));
         let server = Server::start(Arc::clone(&serve), cfg(), None).unwrap();
-        let q = serve.data().row(11).to_vec();
+        let q = serve.row(11);
         let rx = server
             .submit_local(QueryRequest { id: 11, vector: q, k: 5 })
             .unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(resp.hits.len(), 5);
         assert_eq!(resp.hits[0].1, 11, "self-query returns its global id");
+        server.shutdown();
+    }
+
+    /// Mutation verbs flow over the same TCP connection as searches:
+    /// insert → findable, delete → never emitted again, compact → gated,
+    /// malformed frames → structured errors with the stream still up.
+    #[test]
+    fn mutation_verbs_served_alongside_search() {
+        let ds = tiny(208, 200, 8, Metric::L2);
+        let idx = HnswIndex::build(
+            Arc::clone(&ds.data),
+            HnswParams { m: 8, ef_construction: 40, ..Default::default() },
+        );
+        let serve = Arc::new(ServeIndex::new(Box::new(idx), 64));
+        let server = Server::start(Arc::clone(&serve), cfg(), None).unwrap();
+        let mut client = Client::connect(&server.local_addr).unwrap();
+
+        let v: Vec<f32> = (0..8).map(|i| 50.0 + i as f32).collect();
+        let ack = client.mutate(&Request::Insert { id: 1, vector: v.clone() }).unwrap();
+        assert_eq!(ack.outcome, MutOutcome::Inserted(200));
+        assert_eq!(ack.live, 201);
+        let resp = client.query(&QueryRequest { id: 2, vector: v.clone(), k: 1 }).unwrap();
+        assert_eq!(resp.hits[0].1, 200, "inserted point is served");
+
+        let ack = client.mutate(&Request::Delete { id: 3, key: 200 }).unwrap();
+        assert_eq!(ack.outcome, MutOutcome::Deleted(200));
+        assert_eq!(ack.live, 200);
+        let resp = client.query(&QueryRequest { id: 4, vector: v, k: 5 }).unwrap();
+        assert!(resp.hits.iter().all(|&(_, id)| id != 200), "deleted id emitted");
+
+        // One tombstone in 201 rows is far below the threshold.
+        let ack = client.mutate(&Request::Compact { id: 5 }).unwrap();
+        assert_eq!(ack.outcome, MutOutcome::Compacted(false));
+
+        // Stale delete and malformed frame: structured errors, and the
+        // connection keeps serving afterwards.
+        assert!(client.mutate(&Request::Delete { id: 6, key: 200 }).is_err());
+        let raw = client.send_raw(r#"{"id":7,"op":"insert"}"#).unwrap();
+        assert!(raw.contains("error"), "malformed frame answered in-band: {raw}");
+        let resp = client
+            .query(&QueryRequest { id: 8, vector: serve.row(0), k: 1 })
+            .unwrap();
+        assert_eq!(resp.id, 8);
+        server.shutdown();
+    }
+
+    /// A non-mutable family behind the server answers mutation verbs with
+    /// a structured "unsupported" error and keeps serving searches.
+    #[test]
+    fn non_mutable_family_reports_unsupported() {
+        let ds = tiny(209, 100, 8, Metric::L2);
+        let idx = VamanaIndex::build(
+            Arc::clone(&ds.data),
+            VamanaParams { r: 8, ..Default::default() },
+        );
+        let serve = Arc::new(ServeIndex::new(Box::new(idx), 48));
+        let server = Server::start(Arc::clone(&serve), cfg(), None).unwrap();
+        let mut client = Client::connect(&server.local_addr).unwrap();
+        let err = client
+            .mutate(&Request::Insert { id: 1, vector: serve.row(0) })
+            .unwrap_err();
+        assert!(err.contains("does not support mutation"), "{err}");
+        let resp = client.query(&QueryRequest { id: 2, vector: serve.row(0), k: 3 }).unwrap();
+        assert_eq!(resp.hits[0].1, 0);
         server.shutdown();
     }
 
@@ -551,7 +752,7 @@ mod tests {
             let name = idx.name();
             let serve = Arc::new(ServeIndex::new(idx, 48));
             let server = Server::start(Arc::clone(&serve), cfg(), None).unwrap();
-            let q = serve.data().row(7).to_vec();
+            let q = serve.row(7);
             let rx = server
                 .submit_local(QueryRequest { id: 7, vector: q, k: 5 })
                 .unwrap();

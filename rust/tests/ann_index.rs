@@ -7,15 +7,17 @@
 
 use std::sync::Arc;
 
-use finger_ann::core::distance::Metric;
+use finger_ann::core::distance::{l2_sq, Metric};
 use finger_ann::data::groundtruth::exact_knn;
 use finger_ann::data::synth::{tiny, Dataset};
 use finger_ann::graph::hnsw::HnswParams;
 use finger_ann::graph::nndescent::NnDescentParams;
+use finger_ann::graph::search::Neighbor;
 use finger_ann::graph::vamana::VamanaParams;
 use finger_ann::index::impls::{BruteForce, HnswIndex, NnDescentIndex, VamanaIndex};
 use finger_ann::index::{
-    build_all_families, build_all_families_sharded, AnnIndex, SearchContext, SearchParams,
+    build_all_families, build_all_families_sharded, AnnIndex, MutateError, SearchContext,
+    SearchParams,
 };
 
 /// All six flat families plus their sharded wrappers over one dataset —
@@ -184,6 +186,96 @@ fn one_context_serves_indexes_of_different_sizes() {
     let res = a.search(small.queries.row(0), &params, &mut ctx);
     let ids: Vec<u32> = res.iter().map(|n| n.id).collect();
     assert_eq!(ids, gt[0]);
+}
+
+/// Mutation lifecycle, run against every implementor: the mutable
+/// families must find a fresh insert, never return a removed id, and
+/// keep recall within 2 points across a forced compaction — while the
+/// non-mutable families cleanly report unsupported instead of panicking.
+#[test]
+fn mutation_lifecycle_conformance() {
+    let ds = tiny(609, 400, 16, Metric::L2);
+    let params = conformance_params();
+    let mut ctx = SearchContext::new();
+    let expect_mutable = [
+        "bruteforce",
+        "hnsw",
+        "hnsw-finger",
+        "sharded-bruteforce",
+        "sharded-hnsw",
+        "sharded-hnsw-finger",
+    ];
+    let mut seen_mutable = Vec::new();
+
+    for mut index in all_indexes(&ds) {
+        let name = index.name();
+        let Some(m) = index.as_mutable() else {
+            assert!(
+                !expect_mutable.contains(&name),
+                "{name}: expected to support mutation"
+            );
+            continue;
+        };
+        assert!(expect_mutable.contains(&name), "{name}: unexpectedly mutable");
+        seen_mutable.push(name);
+
+        // Insert-then-search finds the new vector (placed far from the
+        // data cloud so any sane index returns it first).
+        let v: Vec<f32> = (0..16).map(|j| 40.0 + j as f32).collect();
+        let id = m.insert(&v, &mut ctx).unwrap();
+        assert_eq!(id, 400, "{name}: watermark starts past the build");
+        assert_eq!(m.live_len(), 401, "{name}");
+        let got = m.search(&v, &params, &mut ctx);
+        assert_eq!(got[0].id, id, "{name}: inserted vector not found");
+
+        // Remove-then-search never returns it.
+        m.remove(id).unwrap();
+        let got = m.search(&v, &params, &mut ctx);
+        assert!(got.iter().all(|n| n.id != id), "{name}: removed id emitted");
+
+        // Build tombstone pressure, then force a compaction and require
+        // recall within 2 points of the pre-compaction index.
+        let dead: Vec<u32> = (0..50).collect();
+        for &d in &dead {
+            m.remove(d).unwrap();
+        }
+        let truth = |q: &[f32]| -> Vec<u32> {
+            let mut all: Vec<Neighbor> = (50..400u32)
+                .map(|i| Neighbor { dist: l2_sq(q, ds.data.row(i as usize)), id: i })
+                .collect();
+            all.sort();
+            all.truncate(params.k);
+            all.into_iter().map(|n| n.id).collect()
+        };
+        let mean_recall = |m: &mut dyn finger_ann::index::MutableAnnIndex,
+                           ctx: &mut SearchContext| {
+            let mut total = 0.0;
+            for qi in 0..ds.queries.rows() {
+                let q = ds.queries.row(qi);
+                let got = m.search(q, &params, ctx);
+                let want = truth(q);
+                let hits = got.iter().filter(|n| want.contains(&n.id)).count();
+                total += hits as f64 / want.len() as f64;
+            }
+            total / ds.queries.rows() as f64
+        };
+        let before = mean_recall(m, &mut ctx);
+        m.set_compact_threshold(0.0);
+        assert!(m.compact(&mut ctx).unwrap(), "{name}: forced compaction must rebuild");
+        assert_eq!(m.live_len(), 350, "{name}");
+        assert_eq!(m.tombstone_fraction(), 0.0, "{name}");
+        assert_eq!(m.remove(400), Err(MutateError::UnknownId(400)), "{name}: id reclaimed");
+        let after = mean_recall(m, &mut ctx);
+        assert!(
+            after >= before - 0.02,
+            "{name}: compaction dropped recall {before:.4} -> {after:.4}"
+        );
+        assert!(before > 0.7, "{name}: pre-compaction recall {before:.4}");
+    }
+    let mut expect = expect_mutable.to_vec();
+    expect.sort_unstable();
+    seen_mutable.sort_unstable();
+    assert_eq!(seen_mutable, expect, "mutable family set drifted");
 }
 
 #[test]

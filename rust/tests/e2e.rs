@@ -49,7 +49,7 @@ fn served_results_match_direct_search() {
 
     let mut ctx = SearchContext::new();
     for qi in [0usize, 7, 42] {
-        let q = index.data().row(qi).to_vec();
+        let q = index.row(qi);
         let served = client
             .query(&QueryRequest { id: qi as u64, vector: q.clone(), k: 5 })
             .unwrap();
@@ -110,7 +110,7 @@ fn pjrt_rerank_returns_exact_distances() {
     let svc = RerankService::start(
         default_artifacts_dir(),
         32,
-        Arc::new(index.data().clone()),
+        Arc::new(index.data_clone()),
     )
     .unwrap();
     let server = Server::start(
@@ -127,7 +127,7 @@ fn pjrt_rerank_returns_exact_distances() {
     )
     .unwrap();
 
-    let q = index.data().row(9).to_vec();
+    let q = index.row(9);
     let rx = server
         .submit_local(QueryRequest { id: 1, vector: q.clone(), k: 5 })
         .unwrap();
@@ -135,7 +135,7 @@ fn pjrt_rerank_returns_exact_distances() {
     assert_eq!(resp.hits[0].1, 9, "self-query top hit");
     // Distances must be the exact L2 values computed by the Pallas kernel.
     for &(d, id) in &resp.hits {
-        let want = finger_ann::core::distance::l2_sq(&q, index.data().row(id as usize));
+        let want = finger_ann::core::distance::l2_sq(&q, &index.row(id as usize));
         assert!((d - want).abs() < 1e-2 * (1.0 + want), "{d} vs {want}");
     }
     server.shutdown();
@@ -162,7 +162,7 @@ fn overload_rejections_are_reported() {
     for i in 0..50u64 {
         match server.submit_local(QueryRequest {
             id: i,
-            vector: index.data().row(0).to_vec(),
+            vector: index.row(0),
             k: 3,
         }) {
             Ok(rx) => accepted_rx.push(rx),

@@ -1,0 +1,301 @@
+//! Deterministic mutation harness: for seeded random interleavings of
+//! insert / remove / compact over every mutable family (flat and
+//! sharded), top-k over the live set must EQUAL brute force over the live
+//! set — ties included — deleted ids must never be emitted, and the same
+//! seed must yield bitwise-identical result streams across two runs.
+//!
+//! The harness is sized so equality is a *guarantee*, not a recall bet:
+//! with `m` chosen such that the base-layer capacity `2m` is at least
+//! `n_max - 1` and `ef_construction >= n_max`, every HNSW insertion links
+//! the new node to every existing node (the selection heuristic backfills
+//! to capacity), so layer 0 stays a complete graph through any
+//! interleaving; with the query beam width at least the universe size the
+//! top queue never fills, screening never activates, and the (filtered)
+//! beam search degenerates to an exact scan over the live component —
+//! which is the whole live set.
+
+use std::sync::Arc;
+
+use finger_ann::core::distance::{l2_sq, Metric};
+use finger_ann::core::matrix::Matrix;
+use finger_ann::core::rng::Pcg32;
+use finger_ann::data::persist::{load_index, save_index};
+use finger_ann::data::synth::tiny;
+use finger_ann::finger::construct::FingerParams;
+use finger_ann::graph::hnsw::HnswParams;
+use finger_ann::graph::search::Neighbor;
+use finger_ann::index::impls::{BruteForce, FingerHnswIndex, HnswIndex, VamanaIndex};
+use finger_ann::index::sharded::{ShardSpec, ShardedIndex};
+use finger_ann::index::{AnnIndex, MutableAnnIndex, MutateError, SearchContext, SearchParams};
+use finger_ann::testutil::forall;
+
+/// Initial corpus size; ops can add at most `MAX_OPS` more points, so the
+/// universe never exceeds `N0 + MAX_OPS`.
+const N0: usize = 24;
+const MAX_OPS: usize = 40;
+const DIM: usize = 6;
+const K: usize = 5;
+
+/// Base-layer capacity `2m = 64 >= N0 + MAX_OPS - 1`: the graph stays
+/// complete (see module docs), making brute-force equality exact.
+fn graph_params() -> HnswParams {
+    HnswParams { m: 32, ef_construction: 128, ..Default::default() }
+}
+
+fn query_params() -> SearchParams {
+    SearchParams::new(K).with_ef(4096)
+}
+
+const FAMILIES: &[&str] = &[
+    "bruteforce",
+    "hnsw",
+    "hnsw-finger",
+    "sharded-bruteforce",
+    "sharded-hnsw",
+];
+
+fn build_family(name: &str, data: &Arc<Matrix>) -> Box<dyn AnnIndex> {
+    let spec = ShardSpec { n_shards: 3, ..Default::default() };
+    match name {
+        "bruteforce" => Box::new(BruteForce::new(Arc::clone(data))),
+        "hnsw" => Box::new(HnswIndex::build(Arc::clone(data), graph_params())),
+        "hnsw-finger" => Box::new(FingerHnswIndex::build(
+            Arc::clone(data),
+            graph_params(),
+            FingerParams { rank: 4, ..Default::default() },
+        )),
+        "sharded-bruteforce" => Box::new(ShardedIndex::build(
+            Arc::clone(data),
+            &spec,
+            |sub| -> Box<dyn AnnIndex> { Box::new(BruteForce::new(sub)) },
+        )),
+        "sharded-hnsw" => Box::new(ShardedIndex::build(
+            Arc::clone(data),
+            &spec,
+            |sub| -> Box<dyn AnnIndex> { Box::new(HnswIndex::build(sub, graph_params())) },
+        )),
+        other => panic!("unknown family {other}"),
+    }
+}
+
+/// The oracle: live (external id, vector) pairs, exact top-k by
+/// `(distance, id)` with the same `l2_sq` the indexes use — so distances
+/// are bitwise comparable and ties break identically.
+struct Mirror {
+    live: Vec<(u32, Vec<f32>)>,
+}
+
+impl Mirror {
+    fn topk(&self, q: &[f32], k: usize) -> Vec<Neighbor> {
+        let mut all: Vec<Neighbor> = self
+            .live
+            .iter()
+            .map(|(id, v)| Neighbor { dist: l2_sq(q, v), id: *id })
+            .collect();
+        all.sort();
+        all.truncate(k);
+        all
+    }
+}
+
+/// Run one seeded interleaving against `index`, checking every query
+/// checkpoint against the mirror when `check` is set. Returns the stream
+/// of all emitted result lists (for the determinism property).
+fn run_episode(
+    index: &mut dyn MutableAnnIndex,
+    base: &Matrix,
+    seed: u64,
+    check: bool,
+) -> Vec<Vec<Neighbor>> {
+    index.set_compact_threshold(0.25);
+    let mut rng = Pcg32::new(seed ^ 0xC0FFEE);
+    let mut mirror = Mirror {
+        live: (0..N0).map(|i| (i as u32, base.row(i).to_vec())).collect(),
+    };
+    let mut next_id = N0 as u32;
+    let mut deleted: Vec<u32> = Vec::new();
+    let mut ctx = SearchContext::new();
+    let params = query_params();
+    let mut stream: Vec<Vec<Neighbor>> = Vec::new();
+
+    for _ in 0..MAX_OPS {
+        match rng.gen_range(100) {
+            // 40%: insert a fresh gaussian vector.
+            0..=39 => {
+                let v: Vec<f32> = (0..DIM).map(|_| rng.next_gaussian()).collect();
+                let id = index.insert(&v, &mut ctx).expect("insert");
+                assert_eq!(id, next_id, "watermark is monotone and gapless");
+                next_id += 1;
+                mirror.live.push((id, v));
+            }
+            // 25%: remove a random live id.
+            40..=64 => {
+                if mirror.live.is_empty() {
+                    assert!(index.remove(next_id).is_err());
+                    continue;
+                }
+                let at = rng.gen_range(mirror.live.len());
+                let (victim, _) = mirror.live.swap_remove(at);
+                index.remove(victim).expect("remove live id");
+                deleted.push(victim);
+                // Double-delete must be a structured error, not a panic.
+                assert!(matches!(
+                    index.remove(victim),
+                    Err(MutateError::AlreadyDeleted(_)) | Err(MutateError::UnknownId(_))
+                ));
+            }
+            // 10%: compaction (threshold-gated; ids must survive).
+            65..=74 => {
+                index.compact(&mut ctx).expect("compact");
+            }
+            // 25%: query checkpoint.
+            _ => {
+                let q: Vec<f32> = (0..DIM).map(|_| rng.next_gaussian()).collect();
+                let got = index.search(&q, &params, &mut ctx);
+                if check {
+                    let want = mirror.topk(&q, K);
+                    assert_eq!(got, want, "live top-{K} != brute force over live set");
+                    assert!(
+                        got.iter().all(|n| !deleted.contains(&n.id)),
+                        "deleted id emitted"
+                    );
+                }
+                stream.push(got);
+            }
+        }
+        if check {
+            assert_eq!(index.live_len(), mirror.live.len());
+        }
+    }
+
+    // Final checkpoint from fixed probes so every episode ends verified.
+    for probe in 0..3 {
+        let q: Vec<f32> = (0..DIM).map(|d| (probe * DIM + d) as f32 * 0.37 - 2.0).collect();
+        let got = index.search(&q, &params, &mut ctx);
+        if check {
+            assert_eq!(got, mirror.topk(&q, K), "final probe {probe}");
+        }
+        stream.push(got);
+    }
+    stream
+}
+
+#[test]
+fn prop_search_over_live_set_equals_brute_force() {
+    for family in FAMILIES {
+        forall(&format!("live-set exactness [{family}]"), 5, |rng: &mut Pcg32| {
+            let seed = rng.next_u64();
+            let ds = tiny(seed ^ 0xA5, N0, DIM, Metric::L2);
+            let mut index = build_family(family, &ds.data);
+            run_episode(index.as_mutable().expect(family), &ds.data, seed, true);
+            true
+        });
+    }
+}
+
+#[test]
+fn prop_same_seed_yields_identical_result_streams() {
+    for family in FAMILIES {
+        forall(&format!("determinism [{family}]"), 3, |rng: &mut Pcg32| {
+            let seed = rng.next_u64();
+            let ds = tiny(seed ^ 0x5A, N0, DIM, Metric::L2);
+            let mut a = build_family(family, &ds.data);
+            let mut b = build_family(family, &ds.data);
+            let sa = run_episode(a.as_mutable().unwrap(), &ds.data, seed, false);
+            let sb = run_episode(b.as_mutable().unwrap(), &ds.data, seed, false);
+            // Neighbor equality goes through f32::total_cmp, so equal
+            // streams are bitwise-identical distances and ids.
+            sa == sb
+        });
+    }
+}
+
+#[test]
+fn prop_v5_roundtrip_preserves_tombstones_and_watermark() {
+    for family in FAMILIES {
+        forall(&format!("v5 roundtrip [{family}]"), 3, |rng: &mut Pcg32| {
+            let seed = rng.next_u64();
+            let ds = tiny(seed ^ 0x3C, N0, DIM, Metric::L2);
+            let mut index = build_family(family, &ds.data);
+            run_episode(index.as_mutable().unwrap(), &ds.data, seed, false);
+
+            let path = std::env::temp_dir().join(format!(
+                "finger_mutation_props_{}_{family}_{seed:x}.idx",
+                std::process::id()
+            ));
+            save_index(&path, index.as_ref()).expect("save");
+            let mut loaded = load_index(&path).expect("load");
+            std::fs::remove_file(&path).ok();
+
+            let orig = index.as_mutable().unwrap();
+            let back = loaded.as_mutable().expect("family stays mutable after load");
+            assert_eq!(back.live_len(), orig.live_len(), "{family}: live count");
+            assert_eq!(back.live_ids(), orig.live_ids(), "{family}: live ids");
+            assert_eq!(
+                back.tombstone_fraction(),
+                orig.tombstone_fraction(),
+                "{family}: tombstone fraction"
+            );
+
+            let mut ctx = SearchContext::new();
+            let params = query_params();
+            for probe in 0..3 {
+                let q: Vec<f32> =
+                    (0..DIM).map(|d| (probe * DIM + d) as f32 * 0.23 - 1.5).collect();
+                let a = orig.search(&q, &params, &mut ctx);
+                let b = back.search(&q, &params, &mut ctx);
+                assert_eq!(a, b, "{family}: probe {probe} diverges after reload");
+            }
+
+            // The watermark survives: the next insert allocates the same
+            // id on both sides.
+            let v = vec![0.5f32; DIM];
+            let ia = orig.insert(&v, &mut ctx).unwrap();
+            let ib = back.insert(&v, &mut ctx).unwrap();
+            ia == ib
+        });
+    }
+}
+
+#[test]
+fn mutation_errors_are_structured_not_panics() {
+    let ds = tiny(901, N0, DIM, Metric::L2);
+    let mut ctx = SearchContext::new();
+    for family in FAMILIES {
+        let mut index = build_family(family, &ds.data);
+        let m = index.as_mutable().expect(family);
+        assert_eq!(
+            m.insert(&[1.0, 2.0], &mut ctx),
+            Err(MutateError::DimMismatch { got: 2, want: DIM }),
+            "{family}"
+        );
+        assert_eq!(m.remove(9999), Err(MutateError::UnknownId(9999)), "{family}");
+        m.remove(0).unwrap();
+        assert_eq!(m.remove(0), Err(MutateError::AlreadyDeleted(0)), "{family}");
+        assert!(!m.is_live(0));
+        assert!(m.is_live(1));
+        assert_eq!(m.live_len(), N0 - 1);
+        assert_eq!(m.live_ids().len(), N0 - 1);
+    }
+}
+
+#[test]
+fn non_mutable_families_cleanly_report_unsupported() {
+    let ds = tiny(902, 60, DIM, Metric::L2);
+    let mut vamana = VamanaIndex::build(
+        Arc::clone(&ds.data),
+        finger_ann::graph::vamana::VamanaParams { r: 8, ..Default::default() },
+    );
+    assert!(vamana.as_mutable().is_none());
+    assert!(vamana.as_mutable_view().is_none());
+    // A sharded fleet with a non-mutable member refuses mutation as a whole.
+    let spec = ShardSpec { n_shards: 2, ..Default::default() };
+    let mut sharded = ShardedIndex::build(Arc::clone(&ds.data), &spec, |sub| -> Box<dyn AnnIndex> {
+        Box::new(VamanaIndex::build(
+            sub,
+            finger_ann::graph::vamana::VamanaParams { r: 8, ..Default::default() },
+        ))
+    });
+    assert!(sharded.as_mutable().is_none());
+    assert!(sharded.as_mutable_view().is_none());
+}

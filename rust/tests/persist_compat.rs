@@ -1,0 +1,176 @@
+//! Golden-fixture persistence compatibility: checked-in v3 and v4 index
+//! files must keep loading on v5 code, bitwise-identical to a fresh build
+//! over the same data — and a corrupt or truncated v5 mutation section
+//! must be rejected with an error, never a panic.
+//!
+//! Fixture layout (both files share the 12x4 matrix with
+//! `val(i, j) = 0.5 * (i*4 + j) - 3.0`, every value exactly representable
+//! in f32 so bitwise comparison is meaningful):
+//!
+//! * `v3_bruteforce.idx` — magic | version 3 | tag 6 | matrix. The
+//!   bruteforce payload was empty in v3.
+//! * `v4_sharded.idx` — magic | version 4 | tag 7 | matrix | strategy 0
+//!   (round-robin) | frac [1.0] | S=2 | per shard: even/odd row ids,
+//!   centroid, sub tag 6, sub matrix. No mutation sections anywhere.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use finger_ann::core::matrix::Matrix;
+use finger_ann::data::persist::{load_index, save_index};
+use finger_ann::graph::bruteforce::scan;
+use finger_ann::index::impls::BruteForce;
+use finger_ann::index::{AnnIndex, MutableAnnIndex, SearchContext, SearchParams};
+
+const ROWS: usize = 12;
+const COLS: usize = 4;
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures")
+        .join(name)
+}
+
+/// The exact matrix baked into the fixtures.
+fn fixture_matrix() -> Matrix {
+    let mut m = Matrix::zeros(0, COLS);
+    for i in 0..ROWS {
+        let row: Vec<f32> = (0..COLS)
+            .map(|j| 0.5 * (i * COLS + j) as f32 - 3.0)
+            .collect();
+        m.push_row(&row);
+    }
+    m
+}
+
+fn probes() -> Vec<Vec<f32>> {
+    (0..5)
+        .map(|p| (0..COLS).map(|j| p as f32 * 1.3 + j as f32 * 0.1 - 2.0).collect())
+        .collect()
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("finger_compat_{}_{name}", std::process::id()))
+}
+
+fn assert_matrix_bitwise_equal(got: &Matrix, want: &Matrix) {
+    assert_eq!(got.rows(), want.rows());
+    assert_eq!(got.cols(), want.cols());
+    for i in 0..got.rows() {
+        for (a, b) in got.row(i).iter().zip(want.row(i)) {
+            assert_eq!(a.to_bits(), b.to_bits(), "row {i} diverges");
+        }
+    }
+}
+
+#[test]
+fn v3_fixture_loads_identical_to_fresh_build() {
+    let loaded = load_index(&fixture("v3_bruteforce.idx")).expect("v3 still loads");
+    assert_eq!(loaded.name(), "bruteforce");
+    assert_eq!(loaded.len(), ROWS);
+    assert_eq!(loaded.dim(), COLS);
+    let want = fixture_matrix();
+    assert_matrix_bitwise_equal(loaded.data(), &want);
+
+    let fresh = BruteForce::new(Arc::new(want));
+    let mut ctx = SearchContext::new();
+    let params = SearchParams::new(4);
+    for (i, q) in probes().iter().enumerate() {
+        let a = loaded.search(q, &params, &mut ctx);
+        let b = fresh.search(q, &params, &mut ctx);
+        assert_eq!(a, b, "probe {i}");
+    }
+    // Pre-v5 files load with identity mutation state and stay mutable.
+    let view = loaded.as_mutable_view().expect("bruteforce is mutable");
+    assert_eq!(view.live_len(), ROWS);
+    assert_eq!(view.tombstone_fraction(), 0.0);
+}
+
+#[test]
+fn v4_sharded_fixture_loads_identical_to_fresh_scan() {
+    let loaded = load_index(&fixture("v4_sharded.idx")).expect("v4 still loads");
+    assert_eq!(loaded.name(), "sharded-bruteforce");
+    assert_eq!(loaded.len(), ROWS);
+    let want = fixture_matrix();
+    assert_matrix_bitwise_equal(loaded.data(), &want);
+
+    let mut ctx = SearchContext::new();
+    let params = SearchParams::new(4);
+    for (i, q) in probes().iter().enumerate() {
+        let got = loaded.search(q, &params, &mut ctx);
+        let exact = scan(&want, q, 4);
+        assert_eq!(got, exact, "probe {i}: full-probe sharded != exact scan");
+    }
+    let view = loaded.as_mutable_view().expect("sharded bruteforce is mutable");
+    assert_eq!(view.live_len(), ROWS);
+}
+
+#[test]
+fn resaving_a_v3_fixture_as_v5_preserves_results() {
+    let loaded = load_index(&fixture("v3_bruteforce.idx")).unwrap();
+    let path = tmp("resave_v5.idx");
+    save_index(&path, loaded.as_ref()).unwrap();
+    let resaved = load_index(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let mut ctx = SearchContext::new();
+    let params = SearchParams::new(4);
+    for q in probes() {
+        let a = loaded.search(&q, &params, &mut ctx);
+        let b = resaved.search(&q, &params, &mut ctx);
+        assert_eq!(a, b);
+    }
+}
+
+#[test]
+fn corrupt_or_truncated_v5_tombstone_section_is_rejected() {
+    // Build a v5 bundle with a non-trivial mutation section: one insert,
+    // one delete. The bruteforce payload is exactly the live section, so
+    // it sits at the tail of the file: ... | watermark u64 | row-id slice
+    // | dead-row slice — whose final 4 bytes are the single dead entry.
+    let mut idx = BruteForce::new(Arc::new(fixture_matrix()));
+    let mut ctx = SearchContext::new();
+    idx.insert(&[9.0, 9.0, 9.0, 9.0], &mut ctx).unwrap();
+    idx.remove(5).unwrap();
+    let path = tmp("v5_tomb.idx");
+    save_index(&path, &idx).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    // Sanity: the intact bytes load and preserve the mutation state.
+    let p = tmp("v5_ok.idx");
+    std::fs::write(&p, &bytes).unwrap();
+    let ok = load_index(&p).unwrap();
+    assert_eq!(ok.as_mutable_view().unwrap().live_len(), ROWS);
+    assert!(!ok.as_mutable_view().unwrap().is_live(5));
+    std::fs::remove_file(&p).ok();
+
+    // Truncation anywhere in the tombstone section: clean error.
+    for cut in [bytes.len() - 3, bytes.len() - 9, bytes.len() - 20] {
+        let p = tmp(&format!("v5_trunc_{cut}.idx"));
+        std::fs::write(&p, &bytes[..cut]).unwrap();
+        assert!(load_index(&p).is_err(), "truncated at {cut} still loaded");
+        std::fs::remove_file(&p).ok();
+    }
+
+    // Out-of-range tombstoned row: InvalidData, not a panic.
+    let mut corrupt = bytes.clone();
+    let n = corrupt.len();
+    corrupt[n - 4..].copy_from_slice(&9999u32.to_le_bytes());
+    let p = tmp("v5_badrow.idx");
+    std::fs::write(&p, &corrupt).unwrap();
+    let err = load_index(&p).unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    std::fs::remove_file(&p).ok();
+
+    // Watermark below an assigned id: InvalidData. The watermark is the
+    // first u64 of the live section; for this bundle that is 8 (watermark)
+    // + 8 + 13*4 (row ids) + 8 + 4 (dead list) = 80 bytes from the end.
+    let mut corrupt = bytes;
+    let off = n - 80;
+    corrupt[off..off + 8].copy_from_slice(&1u64.to_le_bytes());
+    let p = tmp("v5_badmark.idx");
+    std::fs::write(&p, &corrupt).unwrap();
+    let err = load_index(&p).unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    std::fs::remove_file(&p).ok();
+}

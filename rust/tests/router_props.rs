@@ -7,8 +7,15 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use finger_ann::core::distance::Metric;
 use finger_ann::core::rng::Pcg32;
+use finger_ann::data::synth::tiny;
+use finger_ann::graph::hnsw::HnswParams;
+use finger_ann::index::impls::HnswIndex;
 use finger_ann::router::batcher::{Batcher, SubmitError};
+use finger_ann::router::{
+    Client, MutOutcome, QueryRequest, Request, ServeIndex, Server, ServerConfig,
+};
 use finger_ann::testutil::forall;
 
 #[test]
@@ -116,6 +123,115 @@ fn prop_backpressure_rejects_never_loses() {
         assert_eq!(acc + rej, 300, "offered requests accounted");
         delivered == acc
     });
+}
+
+/// A deterministic client interleaves INSERT/DELETE verbs with search
+/// requests over one TCP connection while a background thread keeps the
+/// worker pool busy with search batches: no search response issued after
+/// a delete acknowledgement may ever contain that deleted id, inserted
+/// ids follow the watermark exactly, and malformed mutation frames get
+/// structured in-band errors — the connection is never dropped.
+#[test]
+fn mutation_verbs_interleave_with_search_batches() {
+    let ds = tiny(310, 150, 8, Metric::L2);
+    let idx = HnswIndex::build(
+        Arc::clone(&ds.data),
+        HnswParams { m: 12, ef_construction: 80, ..Default::default() },
+    );
+    let serve = Arc::new(ServeIndex::new(Box::new(idx), 256));
+    let server = Arc::new(
+        Server::start(
+            Arc::clone(&serve),
+            ServerConfig {
+                addr: "127.0.0.1:0".into(),
+                workers: 2,
+                max_batch: 4,
+                max_wait: Duration::from_micros(100),
+                max_queue: 1024,
+                use_pjrt_rerank: false,
+            },
+            None,
+        )
+        .unwrap(),
+    );
+
+    // Concurrent search pressure through the batcher (not assertion-bearing
+    // beyond well-formedness — it exists so mutations really do interleave
+    // with in-flight search batches).
+    let bg = {
+        let server = Arc::clone(&server);
+        let probes: Vec<Vec<f32>> = (0..8).map(|i| serve.row(i * 7)).collect();
+        std::thread::spawn(move || {
+            for round in 0..120u64 {
+                let q = probes[(round % 8) as usize].clone();
+                let rx = server
+                    .submit_local(QueryRequest { id: 10_000 + round, vector: q, k: 10 })
+                    .unwrap();
+                let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+                assert!(resp.hits.len() <= 10);
+                assert!(!resp.hits.is_empty());
+            }
+        })
+    };
+
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    let mut rng = Pcg32::new(99);
+    let mut live: Vec<u32> = (0..150u32).collect();
+    let mut deleted: Vec<u32> = Vec::new();
+    let mut next = 150u32;
+    for step in 0..60u64 {
+        match rng.gen_range(3) {
+            0 => {
+                let v: Vec<f32> = (0..8).map(|_| rng.next_gaussian()).collect();
+                let ack = client.mutate(&Request::Insert { id: step, vector: v }).unwrap();
+                assert_eq!(ack.outcome, MutOutcome::Inserted(next), "watermark order");
+                assert_eq!(ack.live, live.len() as u64 + 1);
+                live.push(next);
+                next += 1;
+            }
+            1 if live.len() > 10 => {
+                let victim = live.swap_remove(rng.gen_range(live.len()));
+                let ack = client.mutate(&Request::Delete { id: step, key: victim }).unwrap();
+                assert_eq!(ack.outcome, MutOutcome::Deleted(victim));
+                deleted.push(victim);
+            }
+            _ => {
+                let q: Vec<f32> = (0..8).map(|_| rng.next_gaussian()).collect();
+                let resp = client.query(&QueryRequest { id: step, vector: q, k: 10 }).unwrap();
+                for &(_, id) in &resp.hits {
+                    assert!(
+                        !deleted.contains(&id),
+                        "step {step}: deleted id {id} in a search response"
+                    );
+                }
+            }
+        }
+    }
+
+    // Malformed mutation frames: structured error lines, same connection.
+    for frame in [
+        r#"{"id":1,"op":"insert"}"#,
+        r#"{"id":2,"op":"insert","vector":[]}"#,
+        r#"{"id":3,"op":"delete","key":"x"}"#,
+        r#"{"id":4,"op":"warp"}"#,
+        "not json at all",
+    ] {
+        let raw = client.send_raw(frame).unwrap();
+        assert!(
+            raw.contains("\"error\""),
+            "malformed frame {frame:?} answered with {raw:?}"
+        );
+    }
+    // ... and the stream still serves all verbs afterwards.
+    let resp = client
+        .query(&QueryRequest { id: 777, vector: serve.row(0), k: 1 })
+        .unwrap();
+    assert_eq!(resp.id, 777);
+    let ack = client.mutate(&Request::Compact { id: 778 }).unwrap();
+    assert!(matches!(ack.outcome, MutOutcome::Compacted(_)));
+
+    bg.join().unwrap();
+    Arc::try_unwrap(server).ok().unwrap().shutdown();
 }
 
 #[test]
