@@ -22,8 +22,9 @@ fn main() {
     let gt = exact_knn(&ds.data, &ds.queries, 10);
     let m = ds.data.cols();
 
-    let hnsw = Hnsw::build(
-        &ds.data,
+    let store = finger_ann::core::store::VectorStore::from_matrix(&ds.data);
+    let hnsw = Hnsw::build_with_store(
+        &store,
         HnswParams { m: 16, ef_construction: 120, ..Default::default() },
     );
 
@@ -44,6 +45,7 @@ fn main() {
             let corr = idx.matching.correlation;
             let view = FingerView {
                 data: &ds.data,
+                store: &store,
                 hnsw: &hnsw,
                 findex: &idx,
                 label: scheme,

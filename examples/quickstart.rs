@@ -66,7 +66,7 @@ fn main() {
     let t0 = Instant::now();
     let mut plain_recall = 0.0;
     for qi in 0..ds.queries.rows() {
-        let res = index.inner.hnsw.search(&ds.data, ds.queries.row(qi), &params, &mut ctx);
+        let res = index.inner.hnsw.search(index.store(), ds.queries.row(qi), &params, &mut ctx);
         plain_recall += recall(&res, &gt[qi]);
     }
     let plain_secs = t0.elapsed().as_secs_f64();

@@ -48,7 +48,7 @@ fn main() {
                 let index: &dyn AnnIndex = &fh;
                 let search = |q: &[f32], ctx: &mut SearchContext| {
                     if method == "hnsw" {
-                        fh.inner.hnsw.search(&ds.data, q, &params, ctx)
+                        fh.inner.hnsw.search(fh.store(), q, &params, ctx)
                     } else {
                         index.search(q, &params, ctx)
                     }

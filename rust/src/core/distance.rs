@@ -3,8 +3,25 @@
 //! Hardware adaptation (DESIGN.md §4): the paper's AVX2 C++ uses explicit
 //! 8-lane f32 intrinsics. Here the loops are written over fixed-width
 //! chunks so LLVM reliably auto-vectorizes them; `l2_sq` and `dot` compile
-//! to the same packed-FMA bodies on x86-64 and aarch64. Measured in
-//! `rust/benches/distance.rs`.
+//! to the same packed-FMA bodies on x86-64 and aarch64.
+//!
+//! ## The padded-store fast path
+//!
+//! Every kernel folds its tail elements (length not a multiple of
+//! [`LANES`]) into the *lane accumulators* rather than a scalar follow-up
+//! sum. That makes the result bitwise identical to running the kernel on
+//! zero-padded inputs, which is exactly what
+//! [`VectorStore`](crate::core::store::VectorStore) holds: rows padded to
+//! the lane width in aligned storage. Search paths score padded queries
+//! against padded rows, so the hot loop has no tail branch at all, and the
+//! batched kernels ([`l2_sq_batch4`], [`dot_batch4`]) compute one query
+//! against 4 rows per pass — the query chunk is loaded once and the four
+//! independent accumulator sets keep the FMA ports busy. Each row of a
+//! batch goes through the identical per-lane operation order as the
+//! single-row kernel, so batched and scalar scoring produce bitwise-equal
+//! distances (ties, NaNs and all) — pinned by tests here and in
+//! `rust/tests/ann_index.rs`. Measured in `rust/benches/distance.rs` and
+//! `finger bench hotpath`.
 
 /// Distance measure of a dataset. Angular datasets are normalized at load
 /// time, after which L2 ordering equals cosine ordering (the paper does the
@@ -34,9 +51,13 @@ impl Metric {
     }
 }
 
-const LANES: usize = 8;
+/// SIMD chunk width of every kernel; the padded row stride of
+/// [`VectorStore`](crate::core::store::VectorStore) is a multiple of this.
+pub const LANES: usize = 8;
 
-/// Squared L2 distance.
+/// Squared L2 distance. Tail elements fold into the lane accumulators, so
+/// zero-padding either input to a lane multiple does not change the result
+/// bit (see the module docs).
 #[inline]
 pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -52,15 +73,14 @@ pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
             acc[l] = d.mul_add(d, acc[l]);
         }
     }
-    let mut sum = acc.iter().sum::<f32>();
-    for i in chunks * LANES..n {
+    for (l, i) in (chunks * LANES..n).enumerate() {
         let d = a[i] - b[i];
-        sum = d.mul_add(d, sum);
+        acc[l] = d.mul_add(d, acc[l]);
     }
-    sum
+    acc.iter().sum()
 }
 
-/// Inner product.
+/// Inner product; same lane-folded tail contract as [`l2_sq`].
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -73,11 +93,93 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
             acc[l] = a[base + l].mul_add(b[base + l], acc[l]);
         }
     }
-    let mut sum = acc.iter().sum::<f32>();
-    for i in chunks * LANES..n {
-        sum = a[i].mul_add(b[i], sum);
+    for (l, i) in (chunks * LANES..n).enumerate() {
+        acc[l] = a[i].mul_add(b[i], acc[l]);
     }
-    sum
+    acc.iter().sum()
+}
+
+/// Squared L2 from one query to 4 rows in one pass: each query chunk is
+/// loaded once and amortized across four independent accumulator sets
+/// (ILP), the win the graph beam search batches neighbor blocks for.
+/// Each lane of the output is bitwise identical to
+/// `l2_sq(q, r_i)` — same operations in the same order per row.
+#[inline]
+pub fn l2_sq_batch4(q: &[f32], r0: &[f32], r1: &[f32], r2: &[f32], r3: &[f32]) -> [f32; 4] {
+    let n = q.len();
+    debug_assert!(r0.len() == n && r1.len() == n && r2.len() == n && r3.len() == n);
+    let chunks = n / LANES;
+    let mut a0 = [0.0f32; LANES];
+    let mut a1 = [0.0f32; LANES];
+    let mut a2 = [0.0f32; LANES];
+    let mut a3 = [0.0f32; LANES];
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            let qv = q[base + l];
+            let d0 = qv - r0[base + l];
+            a0[l] = d0.mul_add(d0, a0[l]);
+            let d1 = qv - r1[base + l];
+            a1[l] = d1.mul_add(d1, a1[l]);
+            let d2 = qv - r2[base + l];
+            a2[l] = d2.mul_add(d2, a2[l]);
+            let d3 = qv - r3[base + l];
+            a3[l] = d3.mul_add(d3, a3[l]);
+        }
+    }
+    for (l, i) in (chunks * LANES..n).enumerate() {
+        let qv = q[i];
+        let d0 = qv - r0[i];
+        a0[l] = d0.mul_add(d0, a0[l]);
+        let d1 = qv - r1[i];
+        a1[l] = d1.mul_add(d1, a1[l]);
+        let d2 = qv - r2[i];
+        a2[l] = d2.mul_add(d2, a2[l]);
+        let d3 = qv - r3[i];
+        a3[l] = d3.mul_add(d3, a3[l]);
+    }
+    [
+        a0.iter().sum(),
+        a1.iter().sum(),
+        a2.iter().sum(),
+        a3.iter().sum(),
+    ]
+}
+
+/// Inner product from one query to 4 rows in one pass; per-row bitwise
+/// identical to [`dot`].
+#[inline]
+pub fn dot_batch4(q: &[f32], r0: &[f32], r1: &[f32], r2: &[f32], r3: &[f32]) -> [f32; 4] {
+    let n = q.len();
+    debug_assert!(r0.len() == n && r1.len() == n && r2.len() == n && r3.len() == n);
+    let chunks = n / LANES;
+    let mut a0 = [0.0f32; LANES];
+    let mut a1 = [0.0f32; LANES];
+    let mut a2 = [0.0f32; LANES];
+    let mut a3 = [0.0f32; LANES];
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            let qv = q[base + l];
+            a0[l] = qv.mul_add(r0[base + l], a0[l]);
+            a1[l] = qv.mul_add(r1[base + l], a1[l]);
+            a2[l] = qv.mul_add(r2[base + l], a2[l]);
+            a3[l] = qv.mul_add(r3[base + l], a3[l]);
+        }
+    }
+    for (l, i) in (chunks * LANES..n).enumerate() {
+        let qv = q[i];
+        a0[l] = qv.mul_add(r0[i], a0[l]);
+        a1[l] = qv.mul_add(r1[i], a1[l]);
+        a2[l] = qv.mul_add(r2[i], a2[l]);
+        a3[l] = qv.mul_add(r3[i], a3[l]);
+    }
+    [
+        a0.iter().sum(),
+        a1.iter().sum(),
+        a2.iter().sum(),
+        a3.iter().sum(),
+    ]
 }
 
 /// Squared norm.
@@ -121,42 +223,120 @@ mod tests {
     use super::*;
     use crate::core::rng::Pcg32;
 
-    fn naive_l2(a: &[f32], b: &[f32]) -> f32 {
-        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+    /// The lengths the batching/padding properties must survive: empty,
+    /// sub-lane, exact-lane, lane+1, odd multi-chunk, and real data dims.
+    const LENS: &[usize] = &[0, 1, 7, 8, 9, 17, 100, 784];
+
+    fn naive_l2_f64(a: &[f32], b: &[f32]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| (x as f64 - y as f64).powi(2))
+            .sum()
     }
 
-    fn naive_dot(a: &[f32], b: &[f32]) -> f32 {
-        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    fn naive_dot_f64(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+    }
+
+    fn randv(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_gaussian()).collect()
+    }
+
+    fn pad(v: &[f32]) -> Vec<f32> {
+        let mut p = v.to_vec();
+        p.resize(v.len().div_ceil(LANES) * LANES, 0.0);
+        p
     }
 
     #[test]
-    fn l2_matches_naive_across_lengths() {
+    fn l2_matches_f64_reference_across_lengths() {
         let mut r = Pcg32::new(1);
-        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 100, 784, 960] {
-            let a: Vec<f32> = (0..n).map(|_| r.next_gaussian()).collect();
-            let b: Vec<f32> = (0..n).map(|_| r.next_gaussian()).collect();
-            let got = l2_sq(&a, &b);
-            let want = naive_l2(&a, &b);
+        for &n in LENS {
+            let a = randv(&mut r, n);
+            let b = randv(&mut r, n);
+            let got = l2_sq(&a, &b) as f64;
+            let want = naive_l2_f64(&a, &b);
             assert!(
-                (got - want).abs() <= 1e-3 * (1.0 + want.abs()),
+                (got - want).abs() <= 1e-4 * (1.0 + want.abs()),
                 "n={n} got={got} want={want}"
             );
         }
     }
 
     #[test]
-    fn dot_matches_naive_across_lengths() {
+    fn dot_matches_f64_reference_across_lengths() {
         let mut r = Pcg32::new(2);
-        for n in [0usize, 1, 5, 8, 13, 64, 100, 128] {
-            let a: Vec<f32> = (0..n).map(|_| r.next_gaussian()).collect();
-            let b: Vec<f32> = (0..n).map(|_| r.next_gaussian()).collect();
-            let got = dot(&a, &b);
-            let want = naive_dot(&a, &b);
+        for &n in LENS {
+            let a = randv(&mut r, n);
+            let b = randv(&mut r, n);
+            let got = dot(&a, &b) as f64;
+            let want = naive_dot_f64(&a, &b);
             assert!(
-                (got - want).abs() <= 1e-3 * (1.0 + want.abs()),
+                (got - want).abs() <= 1e-4 * (1.0 + want.abs()),
                 "n={n} got={got} want={want}"
             );
         }
+    }
+
+    #[test]
+    fn zero_padding_is_bitwise_invisible() {
+        // The VectorStore contract: kernels on zero-padded inputs equal
+        // the unpadded results bit-for-bit.
+        let mut r = Pcg32::new(3);
+        for &n in LENS {
+            let a = randv(&mut r, n);
+            let b = randv(&mut r, n);
+            assert_eq!(
+                l2_sq(&a, &b).to_bits(),
+                l2_sq(&pad(&a), &pad(&b)).to_bits(),
+                "l2 n={n}"
+            );
+            assert_eq!(
+                dot(&a, &b).to_bits(),
+                dot(&pad(&a), &pad(&b)).to_bits(),
+                "dot n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn batch4_bitwise_equals_single_row_kernels() {
+        let mut r = Pcg32::new(4);
+        for &n in LENS {
+            let q = randv(&mut r, n);
+            let rows: Vec<Vec<f32>> = (0..4).map(|_| randv(&mut r, n)).collect();
+            let l2 = l2_sq_batch4(&q, &rows[0], &rows[1], &rows[2], &rows[3]);
+            let ip = dot_batch4(&q, &rows[0], &rows[1], &rows[2], &rows[3]);
+            for i in 0..4 {
+                assert_eq!(l2[i].to_bits(), l2_sq(&q, &rows[i]).to_bits(), "l2 n={n} row {i}");
+                assert_eq!(ip[i].to_bits(), dot(&q, &rows[i]).to_bits(), "dot n={n} row {i}");
+            }
+            // Padded-tail variant: score against padded rows with a padded
+            // query — the combination the beam search actually runs.
+            let qp = pad(&q);
+            let rp: Vec<Vec<f32>> = rows.iter().map(|v| pad(v)).collect();
+            let l2p = l2_sq_batch4(&qp, &rp[0], &rp[1], &rp[2], &rp[3]);
+            for i in 0..4 {
+                assert_eq!(l2p[i].to_bits(), l2_sq(&q, &rows[i]).to_bits(), "pad n={n} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch4_propagates_nan_rows_identically() {
+        let mut r = Pcg32::new(5);
+        let n = 17;
+        let q = randv(&mut r, n);
+        let mut rows: Vec<Vec<f32>> = (0..4).map(|_| randv(&mut r, n)).collect();
+        rows[1][3] = f32::NAN; // one corrupt row must not poison its batchmates
+        rows[3][16] = f32::NAN; // NaN in the lane-folded tail
+        let got = l2_sq_batch4(&q, &rows[0], &rows[1], &rows[2], &rows[3]);
+        for i in 0..4 {
+            let single = l2_sq(&q, &rows[i]);
+            assert_eq!(got[i].to_bits(), single.to_bits(), "row {i}");
+        }
+        assert!(got[1].is_nan() && got[3].is_nan());
+        assert!(!got[0].is_nan() && !got[2].is_nan());
     }
 
     #[test]

@@ -8,4 +8,5 @@ pub mod linalg;
 pub mod matrix;
 pub mod rng;
 pub mod stats;
+pub mod store;
 pub mod threads;

@@ -1,0 +1,274 @@
+//! Cache-conscious query-time vector storage.
+//!
+//! [`Matrix`] stays the build/IO container; [`VectorStore`] is what the
+//! search paths hold. It owns a copy of the dataset rows in 64-byte-aligned
+//! storage with the dimension padded up to the 8-lane chunk width of the
+//! distance kernels, plus precomputed per-row squared norms. Padding is
+//! *numerically invisible*: the kernels in [`crate::core::distance`] fold
+//! their tail elements into the same lane accumulators a zero-padded row
+//! would use, so `l2_sq(q, m.row(i)) == l2_sq(qp, store.row(i))` bitwise
+//! for a zero-padded query `qp`. The padded rows exist purely so the hot
+//! loops see fixed-width, tail-free, aligned streams.
+
+use crate::core::distance::{norm_sq, LANES};
+use crate::core::matrix::Matrix;
+
+/// Target start alignment in bytes (one x86 cache line).
+const ALIGN_BYTES: usize = 64;
+/// Worst-case leading f32 slots needed to reach [`ALIGN_BYTES`].
+const ALIGN_SLACK: usize = ALIGN_BYTES / std::mem::size_of::<f32>();
+
+/// Aligned, lane-padded, read-optimized row storage with per-row squared
+/// norms. Append-only (online inserts push rows); rebuilt wholesale on
+/// compaction.
+///
+/// Each search-bearing index owns its store (the mutable families extend
+/// it in place on insert), so holding many wrappers over one dataset —
+/// the conformance-suite shape — duplicates the padded rows per wrapper.
+/// The L2 hot loop does not read `sq_norms` (L2 admission compares raw
+/// squared distances); the norms are kept per the store's design for
+/// norm-composed kernels (inner-product / cosine serving, where
+/// `q·r` + `||r||²` combine) and are maintained in lockstep so that path
+/// never needs a rescan.
+pub struct VectorStore {
+    /// `off` leading alignment slots, then `rows * padded` payload floats.
+    buf: Vec<f32>,
+    off: usize,
+    rows: usize,
+    cols: usize,
+    /// `cols` rounded up to a multiple of [`LANES`].
+    padded: usize,
+    sq_norms: Vec<f32>,
+}
+
+fn pad_up(cols: usize) -> usize {
+    cols.div_ceil(LANES.max(1)) * LANES
+}
+
+impl VectorStore {
+    /// Copy `m`'s rows into padded aligned storage.
+    pub fn from_matrix(m: &Matrix) -> VectorStore {
+        let mut s = VectorStore::with_dims(m.rows(), m.cols());
+        for i in 0..m.rows() {
+            s.append_padded(m.row(i));
+        }
+        s
+    }
+
+    /// Empty store pre-sized for `rows` rows of `cols` columns.
+    pub fn with_dims(rows: usize, cols: usize) -> VectorStore {
+        let padded = pad_up(cols);
+        let mut s = VectorStore {
+            buf: Vec::new(),
+            off: 0,
+            rows: 0,
+            cols,
+            padded,
+            sq_norms: Vec::with_capacity(rows),
+        };
+        s.reserve_rows(rows);
+        s
+    }
+
+    /// Make room for `extra` more rows, re-aligning the payload start if
+    /// the buffer had to move. Growth is amortized doubling, so the
+    /// realignment copy costs O(1) per appended element.
+    fn reserve_rows(&mut self, extra: usize) {
+        let body = (self.rows + extra) * self.padded;
+        if self.off + body <= self.buf.capacity() {
+            return;
+        }
+        let cap = (body + ALIGN_SLACK).max(self.buf.capacity() * 2 + ALIGN_SLACK);
+        let mut nb: Vec<f32> = Vec::with_capacity(cap);
+        // Best-effort 64-byte start; `align_offset` may decline (then the
+        // rows are still 32-byte aligned relative to each other because the
+        // stride is a multiple of LANES floats).
+        let noff = nb.as_ptr().align_offset(ALIGN_BYTES).min(ALIGN_SLACK);
+        nb.resize(noff, 0.0);
+        nb.extend_from_slice(&self.buf[self.off..self.off + self.rows * self.padded]);
+        self.buf = nb;
+        self.off = noff;
+    }
+
+    fn append_padded(&mut self, row: &[f32]) {
+        self.buf.extend_from_slice(row);
+        self.buf
+            .resize(self.off + (self.rows + 1) * self.padded, 0.0);
+        self.rows += 1;
+        self.sq_norms.push(norm_sq(row));
+    }
+
+    /// Append one row (online insertion mirror of `Matrix::push_row`).
+    /// An empty store adopts the first row's width.
+    pub fn push_row(&mut self, row: &[f32]) {
+        if self.rows == 0 && self.cols == 0 {
+            self.cols = row.len();
+            self.padded = pad_up(row.len());
+        }
+        assert_eq!(row.len(), self.cols, "row width mismatch");
+        self.reserve_rows(1);
+        self.append_padded(row);
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row stride in floats (`cols` padded to the kernel lane width).
+    #[inline]
+    pub fn padded_cols(&self) -> usize {
+        self.padded
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Padded row `i` (length [`VectorStore::padded_cols`], zero tail).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        let s = self.off + i * self.padded;
+        &self.buf[s..s + self.padded]
+    }
+
+    /// Logical row `i` (length [`VectorStore::cols`]).
+    #[inline]
+    pub fn row_logical(&self, i: usize) -> &[f32] {
+        &self.row(i)[..self.cols]
+    }
+
+    /// Precomputed `||row_i||^2`.
+    #[inline]
+    pub fn sq_norm(&self, i: usize) -> f32 {
+        self.sq_norms[i]
+    }
+
+    /// Zero-pad a query into `out` so it can be scored against padded rows
+    /// (callers reuse a pooled buffer; see `SearchContext::qbuf`).
+    #[inline]
+    pub fn pad_query(&self, q: &[f32], out: &mut Vec<f32>) {
+        debug_assert_eq!(q.len(), self.cols, "query dim mismatch");
+        out.clear();
+        out.extend_from_slice(q);
+        out.resize(self.padded, 0.0);
+    }
+
+    /// Payload bytes (padding included).
+    pub fn nbytes(&self) -> usize {
+        (self.rows * self.padded + self.sq_norms.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::distance::l2_sq;
+    use crate::core::rng::Pcg32;
+
+    fn random_matrix(seed: u64, rows: usize, cols: usize) -> Matrix {
+        let mut rng = Pcg32::new(seed);
+        let mut m = Matrix::zeros(0, cols);
+        for _ in 0..rows {
+            let row: Vec<f32> = (0..cols).map(|_| rng.next_gaussian()).collect();
+            m.push_row(&row);
+        }
+        m
+    }
+
+    #[test]
+    fn rows_roundtrip_with_zero_tails() {
+        for cols in [1usize, 7, 8, 9, 17, 100] {
+            let m = random_matrix(cols as u64, 5, cols);
+            let s = VectorStore::from_matrix(&m);
+            assert_eq!(s.rows(), 5);
+            assert_eq!(s.cols(), cols);
+            assert_eq!(s.padded_cols() % LANES, 0);
+            assert!(s.padded_cols() >= cols);
+            for i in 0..5 {
+                assert_eq!(s.row_logical(i), m.row(i));
+                assert!(s.row(i)[cols..].iter().all(|&x| x == 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn padding_is_numerically_invisible() {
+        // The contract everything rests on: distances over padded rows and
+        // padded queries are bitwise identical to the logical ones.
+        let m = random_matrix(9, 6, 13);
+        let s = VectorStore::from_matrix(&m);
+        let mut rng = Pcg32::new(10);
+        let q: Vec<f32> = (0..13).map(|_| rng.next_gaussian()).collect();
+        let mut qp = Vec::new();
+        s.pad_query(&q, &mut qp);
+        for i in 0..6 {
+            let logical = l2_sq(&q, m.row(i));
+            let padded = l2_sq(&qp, s.row(i));
+            assert_eq!(logical.to_bits(), padded.to_bits(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn sq_norms_match_kernel() {
+        let m = random_matrix(11, 8, 24);
+        let s = VectorStore::from_matrix(&m);
+        for i in 0..8 {
+            assert_eq!(s.sq_norm(i).to_bits(), norm_sq(m.row(i)).to_bits());
+        }
+    }
+
+    #[test]
+    fn push_row_grows_and_keeps_old_rows() {
+        let m = random_matrix(12, 3, 10);
+        let mut s = VectorStore::from_matrix(&m);
+        let snapshot: Vec<Vec<f32>> = (0..3).map(|i| s.row_logical(i).to_vec()).collect();
+        let mut rng = Pcg32::new(13);
+        for r in 0..40 {
+            let row: Vec<f32> = (0..10).map(|_| rng.next_gaussian()).collect();
+            s.push_row(&row);
+            assert_eq!(s.rows(), 4 + r);
+            assert_eq!(s.row_logical(3 + r), &row[..]);
+        }
+        for (i, want) in snapshot.iter().enumerate() {
+            assert_eq!(s.row_logical(i), &want[..], "row {i} moved by growth");
+        }
+    }
+
+    #[test]
+    fn empty_store_adopts_first_row_width() {
+        let mut s = VectorStore::from_matrix(&Matrix::zeros(0, 0));
+        assert!(s.is_empty());
+        s.push_row(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.cols(), 3);
+        assert_eq!(s.padded_cols(), LANES);
+        assert_eq!(s.row_logical(0), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn start_is_cacheline_aligned() {
+        let m = random_matrix(14, 64, 32);
+        let s = VectorStore::from_matrix(&m);
+        let addr = s.row(0).as_ptr() as usize;
+        // Best-effort: align_offset may decline in exotic environments, but
+        // on every real allocator this holds.
+        assert_eq!(addr % ALIGN_BYTES, 0, "payload start not 64B-aligned");
+    }
+
+    #[test]
+    fn nan_rows_survive_padding() {
+        let mut m = Matrix::zeros(0, 5);
+        m.push_row(&[1.0, f32::NAN, 3.0, 4.0, 5.0]);
+        let s = VectorStore::from_matrix(&m);
+        assert!(s.row_logical(0)[1].is_nan());
+        assert!(s.row(0)[5..].iter().all(|&x| x == 0.0));
+        assert!(s.sq_norm(0).is_nan());
+    }
+}

@@ -137,6 +137,7 @@ pub fn load_hnsw<R: io::Read>(r: &mut BinReader<R>) -> io::Result<Hnsw> {
 }
 
 pub fn save_finger<W: io::Write>(w: &mut BinWriter<W>, f: &FingerIndex) -> io::Result<()> {
+    use crate::finger::construct::EDGE_SCALARS;
     w.u64(f.rank as u64)?;
     w.matrix(&f.proj)?;
     let mp = &f.matching;
@@ -148,15 +149,34 @@ pub fn save_finger<W: io::Write>(w: &mut BinWriter<W>, f: &FingerIndex) -> io::R
     w.f32_slice(&f.c_norm)?;
     w.f32_slice(&f.c_sqnorm)?;
     w.f32_slice(&f.pc)?;
-    w.f32_slice(&f.edge_proj)?;
-    w.f32_slice(&f.edge_res_norm)?;
-    w.f32_slice(&f.edge_pres_norm)?;
-    w.f32_slice(&f.edge_pres)?;
+    // The on-disk format (stable since v3) stores the four per-edge arrays
+    // separately; in memory they live interleaved as SoA blocks.
+    // De-interleave on write so old files and new files stay identical.
+    let slots = f.edge_slots();
+    let mut proj = Vec::with_capacity(slots);
+    let mut res_norm = Vec::with_capacity(slots);
+    let mut pres_norm = Vec::with_capacity(slots);
+    let mut pres = Vec::with_capacity(slots * f.rank);
+    for s in 0..slots {
+        let b = f.edge_block(s);
+        proj.push(b[0]);
+        res_norm.push(b[1]);
+        pres_norm.push(b[2]);
+        pres.extend_from_slice(&b[EDGE_SCALARS..]);
+    }
+    w.f32_slice(&proj)?;
+    w.f32_slice(&res_norm)?;
+    w.f32_slice(&pres_norm)?;
+    w.f32_slice(&pres)?;
     Ok(())
 }
 
 pub fn load_finger<R: io::Read>(r: &mut BinReader<R>) -> io::Result<FingerIndex> {
+    use crate::finger::construct::EDGE_SCALARS;
     let rank = r.u64()? as usize;
+    if rank == 0 || rank > crate::finger::approx::MAX_RANK {
+        return Err(bad("implausible finger rank"));
+    }
     let proj = r.matrix()?;
     let mv = r.f32_slice()?;
     if mv.len() != 6 {
@@ -174,6 +194,30 @@ pub fn load_finger<R: io::Read>(r: &mut BinReader<R>) -> io::Result<FingerIndex>
     let distribution_matching = r.u64()? != 0;
     let error_correction = r.u64()? != 0;
     let seed = r.u64()?;
+    let c_norm = r.f32_slice()?;
+    let c_sqnorm = r.f32_slice()?;
+    let pc = r.f32_slice()?;
+    let edge_proj = r.f32_slice()?;
+    let edge_res_norm = r.f32_slice()?;
+    let edge_pres_norm = r.f32_slice()?;
+    let edge_pres = r.f32_slice()?;
+    let slots = edge_proj.len();
+    if edge_res_norm.len() != slots
+        || edge_pres_norm.len() != slots
+        || edge_pres.len() != slots * rank
+    {
+        return Err(bad("finger per-edge arrays mismatch"));
+    }
+    // Interleave the legacy arrays into the in-memory SoA blocks.
+    let stride = rank + EDGE_SCALARS;
+    let mut edge = vec![0.0f32; slots * stride];
+    for s in 0..slots {
+        let b = &mut edge[s * stride..(s + 1) * stride];
+        b[0] = edge_proj[s];
+        b[1] = edge_res_norm[s];
+        b[2] = edge_pres_norm[s];
+        b[EDGE_SCALARS..].copy_from_slice(&edge_pres[s * rank..(s + 1) * rank]);
+    }
     Ok(FingerIndex {
         rank,
         proj,
@@ -185,13 +229,10 @@ pub fn load_finger<R: io::Read>(r: &mut BinReader<R>) -> io::Result<FingerIndex>
             error_correction,
             seed,
         },
-        c_norm: r.f32_slice()?,
-        c_sqnorm: r.f32_slice()?,
-        pc: r.f32_slice()?,
-        edge_proj: r.f32_slice()?,
-        edge_res_norm: r.f32_slice()?,
-        edge_pres_norm: r.f32_slice()?,
-        edge_pres: r.f32_slice()?,
+        c_norm,
+        c_sqnorm,
+        pc,
+        edge,
     })
 }
 
@@ -403,12 +444,8 @@ fn validate_finger(f: &FingerIndex, h: &Hnsw, n: usize) -> io::Result<()> {
         return Err(bad("finger per-node arrays mismatch"));
     }
     let slots = h.base.total_slots();
-    if f.edge_proj.len() != slots
-        || f.edge_res_norm.len() != slots
-        || f.edge_pres_norm.len() != slots
-        || f.edge_pres.len() != slots * f.rank
-    {
-        return Err(bad("finger per-edge arrays mismatch"));
+    if f.edge.len() != slots * f.edge_stride() {
+        return Err(bad("finger per-edge table mismatch"));
     }
     Ok(())
 }
@@ -849,7 +886,8 @@ mod tests {
             assert_eq!(fh.inner.hnsw.base.neighbors(u), hnsw2.base.neighbors(u));
             for j in 0..fh.inner.hnsw.base.degree(u) {
                 let s = fh.inner.hnsw.base.edge_slot(u, j);
-                assert_eq!(fh.inner.index.edge_proj[s], index2.edge_proj[s]);
+                assert_eq!(fh.inner.index.edge_proj(s), index2.edge_proj(s));
+                assert_eq!(fh.inner.index.edge_block(s), index2.edge_block(s));
             }
         }
         std::fs::remove_file(&path).ok();

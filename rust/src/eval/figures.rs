@@ -11,6 +11,7 @@ use std::time::Instant;
 
 use crate::core::distance::{cosine, dot, norm_sq};
 use crate::core::matrix::Matrix;
+use crate::core::store::VectorStore;
 use crate::core::stats;
 use crate::data::groundtruth::exact_knn;
 use crate::data::synth::{registry, Dataset, SynthSpec};
@@ -103,6 +104,7 @@ pub fn figure5(out: &Path, scale: f64, with_rplsh: bool) {
             );
             let rh = FingerView {
                 data: &ds.data,
+                store: fh.store(),
                 hnsw: &fh.inner.hnsw,
                 findex: &ridx,
                 label: "hnsw-rplsh",
@@ -150,11 +152,12 @@ pub fn figure2(out: &Path, scale: f64) {
     for name in ["fashion-sim-784", "glove-sim-100"] {
         let spec = crate::data::synth::spec_by_name(name, scale).unwrap();
         let (ds, _gt) = materialize(&spec);
-        let h = Hnsw::build(&ds.data, HnswParams { m: 16, ef_construction: 120, ..Default::default() });
+        let store = VectorStore::from_matrix(&ds.data);
+        let h = Hnsw::build_with_store(&store, HnswParams { m: 16, ef_construction: 120, ..Default::default() });
         let mut ctx = SearchContext::new().with_stats();
         let params = SearchParams::new(10).with_ef(128);
         for qi in 0..ds.queries.rows() {
-            h.search(&ds.data, ds.queries.row(qi), &params, &mut ctx);
+            h.search(&store, ds.queries.row(qi), &params, &mut ctx);
         }
         let agg: SearchStats = ctx.take_stats();
         // Bucket per-hop counts into deciles of the search.
@@ -316,7 +319,8 @@ pub fn figure6(out: &Path, scale: f64) {
         let spec = crate::data::synth::spec_by_name(name, scale).unwrap();
         let (ds, gt) = materialize(&spec);
         let m = ds.data.cols();
-        let hnsw = Hnsw::build(&ds.data, HnswParams { m: 16, ef_construction: 120, ..Default::default() });
+        let store = VectorStore::from_matrix(&ds.data);
+        let hnsw = Hnsw::build_with_store(&store, HnswParams { m: 16, ef_construction: 120, ..Default::default() });
 
         for rank in [8usize, 16, 32] {
             for (scheme, dm) in [
@@ -361,6 +365,7 @@ pub fn figure6(out: &Path, scale: f64) {
                 // Recall vs effective calls (shared graph, screened search).
                 let view = FingerView {
                     data: &ds.data,
+                    store: &store,
                     hnsw: &hnsw,
                     findex: &idx,
                     label: scheme,

@@ -1,0 +1,197 @@
+//! `finger bench hotpath` — the reproducible hot-path microharness behind
+//! the repo's perf trajectory (`BENCH_hotpath.json`).
+//!
+//! Two sections, both hand-rolled (no criterion — the offline build has no
+//! dependencies):
+//!
+//! * **kernel** — raw ns/distance of the scalar [`l2_sq`] vs the 4-row
+//!   [`l2_sq_batch4`] over padded [`VectorStore`] rows, across dims.
+//! * **search** — end-to-end QPS, distance calls/query and inclusive
+//!   ns/distance for flat HNSW and FINGER-HNSW, each under batched and
+//!   scalar scoring (`SearchParams::with_scalar_kernels`). Before timing,
+//!   the harness *asserts* the two scoring modes return bitwise-identical
+//!   result streams — the bench doubles as the equality check.
+//!
+//! `ns_per_dist` in the search section is *inclusive*: elapsed wall time
+//! divided by the number of exact distance computations, so it also
+//! carries heap/visited/screening overhead — comparable across kernel
+//! modes on the same index, not a pure kernel number (that one is in the
+//! kernel section).
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::core::distance::{l2_sq, l2_sq_batch4};
+use crate::core::json::Json;
+use crate::core::matrix::Matrix;
+use crate::core::rng::Pcg32;
+use crate::core::store::VectorStore;
+use crate::data::spec_by_name;
+use crate::finger::construct::FingerParams;
+use crate::graph::hnsw::HnswParams;
+use crate::index::impls::{FingerHnswIndex, HnswIndex};
+use crate::index::{AnnIndex, SearchContext, SearchParams};
+
+/// Median-of-5 timed reps of `f`, returning ns per iteration.
+fn time_ns_per_iter<F: FnMut() -> f32>(iters: usize, mut f: F) -> f64 {
+    let mut sink = 0.0f32;
+    for _ in 0..iters / 10 + 1 {
+        sink += f(); // warmup
+    }
+    let mut reps: Vec<f64> = (0..5)
+        .map(|_| {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                sink += f();
+            }
+            t0.elapsed().as_nanos() as f64 / iters as f64
+        })
+        .collect();
+    reps.sort_by(|a, b| a.total_cmp(b));
+    std::hint::black_box(sink);
+    reps[2]
+}
+
+/// Kernel-level ns/dist: scalar vs batch4 over `rows` padded store rows.
+fn kernel_section(out: &mut Vec<Json>) {
+    let mut rng = Pcg32::new(0xBE7C);
+    for dim in [16usize, 128, 784] {
+        let rows = 1024usize;
+        let mut m = Matrix::zeros(0, dim);
+        for _ in 0..rows {
+            let row: Vec<f32> = (0..dim).map(|_| rng.next_gaussian()).collect();
+            m.push_row(&row);
+        }
+        let store = VectorStore::from_matrix(&m);
+        let q: Vec<f32> = (0..dim).map(|_| rng.next_gaussian()).collect();
+        let mut qp = Vec::new();
+        store.pad_query(&q, &mut qp);
+
+        let mut i = 0usize;
+        let scalar_ns = time_ns_per_iter(200_000, || {
+            i = (i + 1) % rows;
+            l2_sq(&qp, store.row(i))
+        });
+        let mut j = 0usize;
+        // One batch4 call scores 4 rows; divide by 4 for ns/dist.
+        let batch_ns = time_ns_per_iter(50_000, || {
+            j = (j + 4) % (rows - 3);
+            let d = l2_sq_batch4(
+                &qp,
+                store.row(j),
+                store.row(j + 1),
+                store.row(j + 2),
+                store.row(j + 3),
+            );
+            d[0] + d[1] + d[2] + d[3]
+        }) / 4.0;
+        println!(
+            "  kernel dim={dim:<4} scalar {scalar_ns:7.2} ns/dist   batch4 {batch_ns:7.2} ns/dist   ({:.2}x)",
+            scalar_ns / batch_ns.max(1e-9)
+        );
+        out.push(Json::obj(vec![
+            ("dim", Json::num(dim as f64)),
+            ("scalar_ns_per_dist", Json::num(scalar_ns)),
+            ("batch4_ns_per_dist", Json::num(batch_ns)),
+        ]));
+    }
+}
+
+/// Time one index under one kernel mode; returns the measured point.
+fn run_search(
+    label: &str,
+    kernel: &str,
+    index: &dyn AnnIndex,
+    queries: &Matrix,
+    params: &SearchParams,
+    ctx: &mut SearchContext,
+) -> Json {
+    let nq = queries.rows();
+    for qi in 0..nq.min(8) {
+        index.search(queries.row(qi), params, ctx);
+    }
+    ctx.reset_stats();
+    let t0 = Instant::now();
+    for qi in 0..nq {
+        std::hint::black_box(index.search(queries.row(qi), params, ctx));
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let stats = ctx.take_stats();
+    let qps = nq as f64 / secs.max(1e-9);
+    let dist_per_q = stats.dist_calls as f64 / nq as f64;
+    let approx_per_q = stats.approx_calls as f64 / nq as f64;
+    let ns_per_dist = secs * 1e9 / stats.dist_calls.max(1) as f64;
+    println!(
+        "  {label:<12} {kernel:<8} ef={:<4} QPS {qps:9.0}   {dist_per_q:7.1} dist/q   {approx_per_q:7.1} approx/q   {ns_per_dist:7.1} ns/dist (incl.)",
+        params.ef
+    );
+    Json::obj(vec![
+        ("index", Json::str(label)),
+        ("kernel", Json::str(kernel)),
+        ("ef", Json::num(params.ef as f64)),
+        ("qps", Json::num(qps)),
+        ("dist_calls_per_query", Json::num(dist_per_q)),
+        ("approx_calls_per_query", Json::num(approx_per_q)),
+        ("ns_per_dist_inclusive", Json::num(ns_per_dist)),
+    ])
+}
+
+/// The `finger bench hotpath` entry: writes `BENCH_hotpath.json` to `out`.
+pub fn bench_hotpath(out: &Path, scale: f64) {
+    println!("== hotpath: padded-store + batched-kernel data plane ==");
+    let spec = spec_by_name("sift-sim-128", scale).expect("known dataset");
+    println!("  dataset {} (n={}, dim={})", spec.name, spec.n, spec.dim);
+    let ds = spec.generate();
+
+    let mut kernel = Vec::new();
+    kernel_section(&mut kernel);
+
+    let hnsw_params = HnswParams { m: 16, ef_construction: 120, ..Default::default() };
+    let t0 = Instant::now();
+    let hnsw = HnswIndex::build(std::sync::Arc::clone(&ds.data), hnsw_params.clone());
+    let finger = FingerHnswIndex::build(
+        std::sync::Arc::clone(&ds.data),
+        hnsw_params,
+        FingerParams { rank: 16, ..Default::default() },
+    );
+    println!("  indexes built in {:.1}s", t0.elapsed().as_secs_f64());
+
+    let mut ctx = SearchContext::for_universe(ds.data.rows()).with_stats();
+    let indexes: [(&str, &dyn AnnIndex); 2] = [("hnsw", &hnsw), ("hnsw-finger", &finger)];
+    let ef = 80usize;
+    let batched = SearchParams::new(10).with_ef(ef);
+    let scalar = SearchParams::new(10).with_ef(ef).with_scalar_kernels(true);
+
+    // Correctness gate before timing: scalar and batched scoring must
+    // return bitwise-identical (dist, id) streams on every probe query.
+    for (label, index) in indexes {
+        for qi in 0..ds.queries.rows().min(25) {
+            let q = ds.queries.row(qi);
+            let a = index.search(q, &batched, &mut ctx);
+            let b = index.search(q, &scalar, &mut ctx);
+            assert_eq!(a, b, "{label}: scalar/batched streams diverge at query {qi}");
+        }
+    }
+    println!("  equality gate passed (scalar == batched, bitwise)");
+
+    let mut search = Vec::new();
+    for (label, index) in indexes {
+        search.push(run_search(label, "scalar", index, &ds.queries, &scalar, &mut ctx));
+        search.push(run_search(label, "batched", index, &ds.queries, &batched, &mut ctx));
+    }
+
+    let doc = Json::obj(vec![
+        ("schema", Json::str("hotpath-v1")),
+        ("dataset", Json::str(&ds.name)),
+        ("n", Json::num(ds.data.rows() as f64)),
+        ("dim", Json::num(ds.data.cols() as f64)),
+        ("scale", Json::num(scale)),
+        ("ef", Json::num(ef as f64)),
+        ("kernel", Json::Arr(kernel)),
+        ("search", Json::Arr(search)),
+    ]);
+    std::fs::create_dir_all(out).ok();
+    let path = out.join("BENCH_hotpath.json");
+    std::fs::write(&path, format!("{doc}\n")).expect("write BENCH_hotpath.json");
+    println!("  wrote {}", path.display());
+}

@@ -2,6 +2,7 @@
 //! harnesses regenerating every table and figure of the paper.
 
 pub mod figures;
+pub mod hotpath;
 pub mod recall;
 pub mod sweep;
 

@@ -3,9 +3,11 @@
 //! Per expanded center `c` the query-side quantities are computed once
 //! (`QueryCenter::new`), then each neighbor edge costs one r-dimensional
 //! dot product plus a handful of scalar ops — the paper's m-dim -> r-dim
-//! reduction. The per-edge arrays live in `FingerIndex`, laid out SoA on
-//! the base graph's edge slots so this loop is branch-light and
-//! auto-vectorizes (DESIGN.md §4).
+//! reduction. The per-edge data lives in `FingerIndex` as one interleaved
+//! block per edge slot (`[d_proj, ||d_res||, ||P d_res||, P·d_res]`), and
+//! a node's out-edges occupy consecutive slots — so screening one
+//! expansion is a single contiguous forward stream, not four parallel
+//! array walks (DESIGN.md §4).
 
 use crate::core::distance::dot;
 use crate::finger::construct::FingerIndex;
@@ -80,16 +82,18 @@ impl QueryCenter {
 }
 
 /// Approximate squared distance for the edge at `slot` (Algorithm 3).
+/// One contiguous block read: the three scalars and the projected
+/// residual arrive on the same cache lines.
 #[inline]
 pub fn approx_dist_sq(index: &FingerIndex, qc: &QueryCenter, slot: usize) -> f32 {
     let r = index.rank;
-    let pres = &index.edge_pres[slot * r..(slot + 1) * r];
-    let denom = (qc.pq_res_norm * index.edge_pres_norm[slot]).max(1e-12);
+    let b = index.edge_block(slot);
+    let (dp, dn, pn) = (b[0], b[1], b[2]);
+    let pres = &b[crate::finger::construct::EDGE_SCALARS..];
+    let denom = (qc.pq_res_norm * pn).max(1e-12);
     let t_hat = dot(&qc.pq_res[..r], pres) / denom;
     let m = &index.matching;
     let t = (t_hat - m.mu_hat) * (m.sigma / m.sigma_hat.max(1e-12)) + m.mu + m.eps;
-    let dp = index.edge_proj[slot];
-    let dn = index.edge_res_norm[slot];
     let proj_term = qc.q_proj - dp;
     proj_term * proj_term + qc.q_res_norm * qc.q_res_norm + dn * dn
         - 2.0 * qc.q_res_norm * dn * t

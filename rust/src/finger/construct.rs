@@ -59,6 +59,10 @@ pub struct MatchParams {
     pub correlation: f32,
 }
 
+/// Scalar lanes preceding the projected residual inside one interleaved
+/// edge block: `[d_proj, ||d_res||, ||P d_res||]`.
+pub const EDGE_SCALARS: usize = 3;
+
 /// The built FINGER side-index over a base graph.
 pub struct FingerIndex {
     pub rank: usize,
@@ -73,15 +77,16 @@ pub struct FingerIndex {
     /// P·c, n × r row-major.
     pub pc: Vec<f32>,
 
-    // Per-edge tables aligned with the base adjacency's edge slots.
-    /// Signed projection length of d onto c: (c.d/||c||).
-    pub edge_proj: Vec<f32>,
-    /// ||d_res||.
-    pub edge_res_norm: Vec<f32>,
-    /// ||P d_res||.
-    pub edge_pres_norm: Vec<f32>,
-    /// P·d_res, slots × r row-major.
-    pub edge_pres: Vec<f32>,
+    /// Per-edge table aligned with the base adjacency's edge slots, one
+    /// interleaved block of `rank + EDGE_SCALARS` floats per slot:
+    /// `[d_proj, ||d_res||, ||P d_res||, P·d_res[0..rank]]`.
+    /// A node's out-edges occupy consecutive slots, so Algorithm 3
+    /// screening of an expansion is one contiguous forward stream instead
+    /// of four parallel array walks (the old `edge_proj`/`edge_res_norm`/
+    /// `edge_pres_norm`/`edge_pres` quadruple). The on-disk format still
+    /// stores the four arrays separately (`data::persist::save_finger`),
+    /// so v3–v5 bundles are unaffected.
+    pub edge: Vec<f32>,
 }
 
 impl FingerIndex {
@@ -157,10 +162,8 @@ impl FingerIndex {
         }
 
         let slots = adj.total_slots();
-        let mut edge_proj = vec![0.0f32; slots];
-        let mut edge_res_norm = vec![0.0f32; slots];
-        let mut edge_pres_norm = vec![0.0f32; slots];
-        let mut edge_pres = vec![0.0f32; slots * r];
+        let stride = r + EDGE_SCALARS;
+        let mut edge = vec![0.0f32; slots * stride];
         for c in 0..n as u32 {
             let xc = data.row(c as usize);
             let csq = c_sqnorm[c as usize].max(1e-12);
@@ -169,16 +172,17 @@ impl FingerIndex {
                 let slot = adj.edge_slot(c, j);
                 let xd = data.row(d as usize);
                 let t = dot(xc, xd) / csq; // projection coefficient
-                edge_proj[slot] = t * cn; // signed length along c
                 // d_res = d - t*c
                 let mut dres = vec![0.0f32; m];
                 for k in 0..m {
                     dres[k] = xd[k] - t * xc[k];
                 }
-                edge_res_norm[slot] = norm_sq(&dres).sqrt();
                 let p = project(&proj, &dres);
-                edge_pres_norm[slot] = norm_sq(&p).sqrt();
-                edge_pres[slot * r..(slot + 1) * r].copy_from_slice(&p);
+                let b = &mut edge[slot * stride..(slot + 1) * stride];
+                b[0] = t * cn; // signed length along c
+                b[1] = norm_sq(&dres).sqrt();
+                b[2] = norm_sq(&p).sqrt();
+                b[EDGE_SCALARS..].copy_from_slice(&p);
             }
         }
 
@@ -190,11 +194,72 @@ impl FingerIndex {
             c_norm,
             c_sqnorm,
             pc,
-            edge_proj,
-            edge_res_norm,
-            edge_pres_norm,
-            edge_pres,
+            edge,
         }
+    }
+
+    /// Floats per interleaved edge block.
+    #[inline]
+    pub fn edge_stride(&self) -> usize {
+        self.rank + EDGE_SCALARS
+    }
+
+    /// Total edge slots covered by the table.
+    #[inline]
+    pub fn edge_slots(&self) -> usize {
+        self.edge.len() / self.edge_stride()
+    }
+
+    /// The whole interleaved block of `slot` (Algorithm 3 reads this once).
+    #[inline]
+    pub fn edge_block(&self, slot: usize) -> &[f32] {
+        let s = self.edge_stride();
+        &self.edge[slot * s..(slot + 1) * s]
+    }
+
+    /// Signed projection length of d onto c: (c·d/||c||).
+    #[inline]
+    pub fn edge_proj(&self, slot: usize) -> f32 {
+        self.edge[slot * self.edge_stride()]
+    }
+
+    /// ||d_res||.
+    #[inline]
+    pub fn edge_res_norm(&self, slot: usize) -> f32 {
+        self.edge[slot * self.edge_stride() + 1]
+    }
+
+    /// ||P d_res||.
+    #[inline]
+    pub fn edge_pres_norm(&self, slot: usize) -> f32 {
+        self.edge[slot * self.edge_stride() + 2]
+    }
+
+    /// P·d_res (rank floats).
+    #[inline]
+    pub fn edge_pres(&self, slot: usize) -> &[f32] {
+        &self.edge_block(slot)[EDGE_SCALARS..]
+    }
+
+    /// Overwrite one edge block; `||P d_res||` is derived from `pres`.
+    pub fn set_edge(&mut self, slot: usize, proj_len: f32, res_norm: f32, pres: &[f32]) {
+        debug_assert_eq!(pres.len(), self.rank);
+        let s = self.edge_stride();
+        let b = &mut self.edge[slot * s..(slot + 1) * s];
+        b[0] = proj_len;
+        b[1] = res_norm;
+        b[2] = norm_sq(pres).sqrt();
+        b[EDGE_SCALARS..].copy_from_slice(pres);
+    }
+
+    /// Overwrite only the projected-residual part of a block (the RPLSH
+    /// basis swap: `d_proj`/`||d_res||` are basis-independent).
+    pub fn set_edge_pres(&mut self, slot: usize, pres: &[f32]) {
+        debug_assert_eq!(pres.len(), self.rank);
+        let s = self.edge_stride();
+        let b = &mut self.edge[slot * s..(slot + 1) * s];
+        b[2] = norm_sq(pres).sqrt();
+        b[EDGE_SCALARS..].copy_from_slice(pres);
     }
 
     /// Online insertion, part 1: extend the per-node tables for a freshly
@@ -204,16 +269,13 @@ impl FingerIndex {
     /// matching parameters are kept as trained — they are re-fit from the
     /// live set at the next compaction.
     pub fn append_node(&mut self, data: &Matrix, id: u32, base_cap: usize) {
-        let r = self.rank;
         let x = data.row(id as usize);
         let sq = norm_sq(x);
         self.c_sqnorm.push(sq);
         self.c_norm.push(sq.sqrt());
         self.pc.extend(project(&self.proj, x));
-        self.edge_proj.resize(self.edge_proj.len() + base_cap, 0.0);
-        self.edge_res_norm.resize(self.edge_res_norm.len() + base_cap, 0.0);
-        self.edge_pres_norm.resize(self.edge_pres_norm.len() + base_cap, 0.0);
-        self.edge_pres.resize(self.edge_pres.len() + base_cap * r, 0.0);
+        let stride = self.edge_stride();
+        self.edge.resize(self.edge.len() + base_cap * stride, 0.0);
     }
 
     /// Online insertion, part 2: recompute the per-edge tables for every
@@ -221,7 +283,6 @@ impl FingerIndex {
     /// neighbor list the graph insertion rewired (stale slots would
     /// otherwise mis-screen). Mirrors the build-time per-edge pass.
     pub fn refresh_node_edges(&mut self, data: &Matrix, adj: &FlatAdj, c: u32) {
-        let r = self.rank;
         let m = data.cols();
         let xc = data.row(c as usize);
         let csq = self.c_sqnorm[c as usize].max(1e-12);
@@ -230,28 +291,19 @@ impl FingerIndex {
             let slot = adj.edge_slot(c, j);
             let xd = data.row(d as usize);
             let t = dot(xc, xd) / csq;
-            self.edge_proj[slot] = t * cn;
             let mut dres = vec![0.0f32; m];
             for k in 0..m {
                 dres[k] = xd[k] - t * xc[k];
             }
-            self.edge_res_norm[slot] = norm_sq(&dres).sqrt();
             let p = project(&self.proj, &dres);
-            self.edge_pres_norm[slot] = norm_sq(&p).sqrt();
-            self.edge_pres[slot * r..(slot + 1) * r].copy_from_slice(&p);
+            self.set_edge(slot, t * cn, norm_sq(&dres).sqrt(), &p);
         }
     }
 
     /// Additional memory footprint in bytes (Table 1's "(r+2)·|E|·4" plus
     /// per-node tables).
     pub fn nbytes(&self) -> usize {
-        4 * (self.c_norm.len()
-            + self.c_sqnorm.len()
-            + self.pc.len()
-            + self.edge_proj.len()
-            + self.edge_res_norm.len()
-            + self.edge_pres_norm.len()
-            + self.edge_pres.len())
+        4 * (self.c_norm.len() + self.c_sqnorm.len() + self.pc.len() + self.edge.len())
     }
 }
 
@@ -362,8 +414,9 @@ mod tests {
         let n = ds.data.rows();
         assert_eq!(f.c_norm.len(), n);
         assert_eq!(f.pc.len(), n * f.rank);
-        assert_eq!(f.edge_proj.len(), h.base.total_slots());
-        assert_eq!(f.edge_pres.len(), h.base.total_slots() * f.rank);
+        assert_eq!(f.edge_slots(), h.base.total_slots());
+        assert_eq!(f.edge.len(), h.base.total_slots() * (f.rank + EDGE_SCALARS));
+        assert_eq!(f.edge_pres(0).len(), f.rank);
     }
 
     #[test]
@@ -387,12 +440,12 @@ mod tests {
             for (j, &d) in h.base.neighbors(c).iter().enumerate() {
                 let slot = h.base.edge_slot(c, j);
                 let dsq = norm_sq(ds.data.row(d as usize));
-                let recon = f.edge_proj[slot].powi(2) + f.edge_res_norm[slot].powi(2);
+                let recon = f.edge_proj(slot).powi(2) + f.edge_res_norm(slot).powi(2);
                 assert!(
                     (dsq - recon).abs() < 1e-2 * (1.0 + dsq),
                     "edge ({c},{d}): {dsq} vs {recon}"
                 );
-                assert!(f.edge_pres_norm[slot] <= f.edge_res_norm[slot] + 1e-3);
+                assert!(f.edge_pres_norm(slot) <= f.edge_res_norm(slot) + 1e-3);
             }
         }
     }
@@ -407,12 +460,14 @@ mod tests {
         for i in 0..250 {
             m.push_row(ds.data.row(i));
         }
-        let mut h = Hnsw::build(&m, HnswParams { m: 8, ef_construction: 40, ..Default::default() });
+        let mut store = crate::core::store::VectorStore::from_matrix(&m);
+        let mut h = Hnsw::build_with_store(&store, HnswParams { m: 8, ef_construction: 40, ..Default::default() });
         let mut f = FingerIndex::build(&m, &h.base, FingerParams { rank: 8, ..Default::default() });
         let mut ctx = SearchContext::new();
         for i in 250..300 {
             m.push_row(ds.data.row(i));
-            let touched = h.insert_node(&m, i as u32, &mut ctx);
+            store.push_row(ds.data.row(i));
+            let touched = h.insert_node(&store, i as u32, &mut ctx);
             f.append_node(&m, i as u32, h.base.cap());
             for &u in &touched {
                 f.refresh_node_edges(&m, &h.base, u);
@@ -420,8 +475,7 @@ mod tests {
         }
         assert_eq!(f.c_norm.len(), 300);
         assert_eq!(f.pc.len(), 300 * f.rank);
-        assert_eq!(f.edge_proj.len(), h.base.total_slots());
-        assert_eq!(f.edge_pres.len(), h.base.total_slots() * f.rank);
+        assert_eq!(f.edge_slots(), h.base.total_slots());
         // Orthogonal decomposition must hold on every edge — a slot left
         // stale by a rewired-but-unrefreshed list would break it, because
         // the stored values belong to the old neighbor.
@@ -429,12 +483,12 @@ mod tests {
             for (j, &d) in h.base.neighbors(c).iter().enumerate() {
                 let slot = h.base.edge_slot(c, j);
                 let dsq = norm_sq(m.row(d as usize));
-                let recon = f.edge_proj[slot].powi(2) + f.edge_res_norm[slot].powi(2);
+                let recon = f.edge_proj(slot).powi(2) + f.edge_res_norm(slot).powi(2);
                 assert!(
                     (dsq - recon).abs() < 1e-2 * (1.0 + dsq),
                     "stale edge ({c},{d}): {dsq} vs {recon}"
                 );
-                assert!(f.edge_pres_norm[slot] <= f.edge_res_norm[slot] + 1e-3);
+                assert!(f.edge_pres_norm(slot) <= f.edge_res_norm(slot) + 1e-3);
             }
         }
     }

@@ -23,12 +23,14 @@ use crate::finger::construct::FingerIndex;
 #[inline]
 pub fn approx_ip(index: &FingerIndex, qc: &QueryCenter, slot: usize) -> f32 {
     let r = index.rank;
-    let pres = &index.edge_pres[slot * r..(slot + 1) * r];
-    let denom = (qc.pq_res_norm * index.edge_pres_norm[slot]).max(1e-12);
+    let b = index.edge_block(slot);
+    let (dp, dn, pn) = (b[0], b[1], b[2]);
+    let pres = &b[crate::finger::construct::EDGE_SCALARS..];
+    let denom = (qc.pq_res_norm * pn).max(1e-12);
     let t_hat = dot(&qc.pq_res[..r], pres) / denom;
     let m = &index.matching;
     let t = (t_hat - m.mu_hat) * (m.sigma / m.sigma_hat.max(1e-12)) + m.mu + m.eps;
-    qc.q_proj * index.edge_proj[slot] + qc.q_res_norm * index.edge_res_norm[slot] * t
+    qc.q_proj * dp + qc.q_res_norm * dn * t
 }
 
 #[cfg(test)]

@@ -109,25 +109,28 @@ impl FingerIndex {
     /// the RPLSH ablation; also exercised by tests to validate that
     /// construction is a pure function of (data, adj, proj).
     pub fn rebuild_with_projection(&mut self, data: &Matrix, adj: &FlatAdj, proj: Matrix) {
-        use crate::core::distance::{cosine, norm_sq};
+        use crate::core::distance::norm_sq;
+        use crate::core::distance::cosine;
+        use crate::finger::construct::EDGE_SCALARS;
         let n = data.rows();
         let m = data.cols();
         let r = proj.rows();
-        self.rank = r;
-        self.proj = proj;
+        let old_stride = self.edge_stride(); // still the old rank's stride
 
         // Per-node P·c.
         let mut pc = vec![0.0f32; n * r];
         for c in 0..n {
-            let p = crate::finger::construct::project(&self.proj, data.row(c));
+            let p = crate::finger::construct::project(&proj, data.row(c));
             pc[c * r..(c + 1) * r].copy_from_slice(&p);
         }
-        self.pc = pc;
 
-        // Per-edge tables.
+        // Per-edge blocks: `d_proj`/`||d_res||` are basis-independent and
+        // carried over from the old blocks; the projected residual and its
+        // norm are recomputed under the new basis. The rank (and therefore
+        // the block stride) may change, so the table is rebuilt wholesale.
         let slots = adj.total_slots();
-        let mut edge_pres = vec![0.0f32; slots * r];
-        let mut edge_pres_norm = vec![0.0f32; slots];
+        let new_stride = r + EDGE_SCALARS;
+        let mut edge = vec![0.0f32; slots * new_stride];
         for c in 0..n as u32 {
             let xc = data.row(c as usize);
             let csq = self.c_sqnorm[c as usize].max(1e-12);
@@ -139,13 +142,18 @@ impl FingerIndex {
                 for k in 0..m {
                     dres[k] = xd[k] - t * xc[k];
                 }
-                let p = crate::finger::construct::project(&self.proj, &dres);
-                edge_pres_norm[slot] = norm_sq(&p).sqrt();
-                edge_pres[slot * r..(slot + 1) * r].copy_from_slice(&p);
+                let p = crate::finger::construct::project(&proj, &dres);
+                let b = &mut edge[slot * new_stride..(slot + 1) * new_stride];
+                b[0] = self.edge[slot * old_stride];
+                b[1] = self.edge[slot * old_stride + 1];
+                b[2] = norm_sq(&p).sqrt();
+                b[EDGE_SCALARS..].copy_from_slice(&p);
             }
         }
-        self.edge_pres = edge_pres;
-        self.edge_pres_norm = edge_pres_norm;
+        self.rank = r;
+        self.proj = proj;
+        self.pc = pc;
+        self.edge = edge;
 
         // Refit distribution matching under the new basis.
         let mut rng = Pcg32::new(self.params.seed ^ 0x77);
@@ -250,8 +258,10 @@ mod tests {
         let mut rebuilt = crate::finger::construct::FingerIndex::build(&ds.data, &h.base, params);
         let proj = base.proj.clone();
         rebuilt.rebuild_with_projection(&ds.data, &h.base, proj);
-        // Same projection -> identical edge tables.
-        for (a, b) in base.edge_pres.iter().zip(&rebuilt.edge_pres) {
+        // Same projection -> identical edge blocks (scalars carried over,
+        // projected residuals recomputed to the same values).
+        assert_eq!(base.edge.len(), rebuilt.edge.len());
+        for (a, b) in base.edge.iter().zip(&rebuilt.edge) {
             assert!((a - b).abs() < 1e-5);
         }
     }

@@ -7,39 +7,115 @@
 //! the candidate queue only ever holds *exact* distances, so termination
 //! logic is unchanged and the search cannot stop early due to
 //! approximation error).
+//!
+//! Like the plain beam search there is exactly one copy of the hot loop,
+//! [`finger_beam_search_filtered`], generic over a [`LiveFilter`] and
+//! switchable between scalar and batched scoring. Batching here is
+//! restricted to where it cannot change decisions: while the top queue is
+//! still filling, every neighbor needs an exact distance anyway, so those
+//! are computed 4 rows per kernel pass; once the queue is full, screening
+//! depends on the *evolving* upper bound, so the screen→maybe-exact
+//! sequence stays per-neighbor (that stream is cheap — one contiguous
+//! SoA edge-block read per neighbor). Both modes therefore make identical
+//! admission and screening decisions and return bitwise-identical result
+//! streams with identical stats.
 
-use crate::core::distance::l2_sq;
+use crate::core::distance::{l2_sq, l2_sq_batch4};
 use crate::core::matrix::Matrix;
+use crate::core::store::VectorStore;
 use crate::finger::approx::{approx_dist_sq, QueryCenter, QueryState};
 use crate::finger::construct::FingerIndex;
 use crate::graph::adjacency::FlatAdj;
-use crate::graph::search::{MinNeighbor, Neighbor};
+use crate::graph::search::{AllLive, LiveFilter, MinNeighbor, Neighbor};
 use crate::index::context::{SearchContext, SearchParams};
 use crate::index::mutable::LiveIds;
 
-/// FINGER-screened beam search over one adjacency layer.
-pub fn finger_beam_search(
-    data: &Matrix,
+/// Process one gathered neighbor exactly the way the scalar Algorithm 4
+/// loop does: screen if the top queue is full, then (maybe) take the
+/// exact distance — `pre` supplies it when the fill-phase batch already
+/// computed it — and admit against the cached upper bound. All counting
+/// goes through `SearchStats::{record, record_approx}` so `per_hop` and
+/// `wasted` (the Figure 2 data) are populated on the FINGER path too.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn admit_screened<F: LiveFilter + ?Sized>(
+    store: &VectorStore,
+    index: &FingerIndex,
+    qs: &QueryState,
+    qp: &[f32],
+    cur: Neighbor,
+    nb: u32,
+    slot: usize,
+    pre: Option<f32>,
+    ef: usize,
+    hop: usize,
+    ub: &mut f32,
+    qc: &mut Option<QueryCenter>,
+    filter: &F,
+    ctx: &mut SearchContext,
+) {
+    let full = ctx.top.len() >= ef;
+    if full {
+        // Screen with Algorithm 3 before paying the m-dim distance.
+        let qc = qc.get_or_insert_with(|| QueryCenter::new(index, qs, cur.id, cur.dist));
+        let approx = approx_dist_sq(index, qc, slot);
+        if ctx.stats_enabled {
+            ctx.stats.record_approx();
+        }
+        if approx > *ub {
+            return; // screened out: the exact computation is skipped
+        }
+    }
+    let d = pre.unwrap_or_else(|| l2_sq(qp, store.row(nb as usize)));
+    if ctx.stats_enabled {
+        ctx.stats.record(hop, full && d > *ub);
+    }
+    if !full || d < *ub {
+        ctx.cands.push(MinNeighbor(Neighbor { dist: d, id: nb }));
+        if filter.emits(nb) {
+            ctx.top.push(Neighbor { dist: d, id: nb });
+            if ctx.top.len() > ef {
+                ctx.top.pop();
+            }
+            *ub = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
+        }
+    }
+}
+
+/// FINGER-screened beam search over one adjacency layer — the single hot
+/// loop behind [`finger_beam_search`] and [`finger_beam_search_live`].
+#[allow(clippy::too_many_arguments)]
+pub fn finger_beam_search_filtered<F: LiveFilter + ?Sized>(
+    store: &VectorStore,
     adj: &FlatAdj,
     index: &FingerIndex,
     entry: u32,
     q: &[f32],
     ef: usize,
+    filter: &F,
+    batched: bool,
     ctx: &mut SearchContext,
 ) -> Vec<Neighbor> {
-    ctx.begin(data.rows());
-    ctx.visited.insert(entry);
+    ctx.begin(store.rows());
+    let mut qp = std::mem::take(&mut ctx.qbuf);
+    let mut block = std::mem::take(&mut ctx.block);
+    let mut slots = std::mem::take(&mut ctx.slots);
+    store.pad_query(q, &mut qp);
+
     let qs = QueryState::new(index, q);
-    let d0 = l2_sq(q, data.row(entry as usize));
+    ctx.visited.insert(entry);
+    let d0 = l2_sq(&qp, store.row(entry as usize));
     if ctx.stats_enabled {
         ctx.stats.dist_calls += 1;
     }
-
     ctx.cands.push(MinNeighbor(Neighbor { dist: d0, id: entry }));
-    ctx.top.push(Neighbor { dist: d0, id: entry });
+    if filter.emits(entry) {
+        ctx.top.push(Neighbor { dist: d0, id: entry });
+    }
 
+    let mut hop = 0usize;
     while let Some(MinNeighbor(cur)) = ctx.cands.pop() {
-        let ub = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
+        let mut ub = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
         if cur.dist > ub && ctx.top.len() >= ef {
             break;
         }
@@ -49,39 +125,94 @@ pub fn finger_beam_search(
         // Lazily built: only pay the query-center setup if we actually
         // screen at least one neighbor approximately.
         let mut qc: Option<QueryCenter> = None;
+
+        // Gather the unvisited neighbors (and their stable edge slots)
+        // first; a node's slots are consecutive, so the screening phase
+        // below walks one contiguous SoA stream.
+        block.clear();
+        slots.clear();
         for (j, &nb) in adj.neighbors(cur.id).iter().enumerate() {
-            if !ctx.visited.insert(nb) {
-                continue;
-            }
-            let ub_now = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
-            let full = ctx.top.len() >= ef;
-            if full {
-                // Screen with Algorithm 3 before paying the m-dim distance.
-                let qc = qc.get_or_insert_with(|| QueryCenter::new(index, &qs, cur.id, cur.dist));
-                let slot = adj.edge_slot(cur.id, j);
-                let approx = approx_dist_sq(index, qc, slot);
-                if ctx.stats_enabled {
-                    ctx.stats.approx_calls += 1;
-                }
-                if approx > ub_now {
-                    continue; // screened out: skip the exact computation
-                }
-            }
-            let d = l2_sq(q, data.row(nb as usize));
-            if ctx.stats_enabled {
-                ctx.stats.dist_calls += 1;
-            }
-            if !full || d < ub_now {
-                ctx.cands.push(MinNeighbor(Neighbor { dist: d, id: nb }));
-                ctx.top.push(Neighbor { dist: d, id: nb });
-                if ctx.top.len() > ef {
-                    ctx.top.pop();
-                }
+            if ctx.visited.insert(nb) {
+                block.push(nb);
+                slots.push(adj.edge_slot(cur.id, j));
             }
         }
+
+        let mut i = 0;
+        while i < block.len() {
+            if batched && ctx.top.len() < ef && i + 4 <= block.len() {
+                // Fill phase: everything gets an exact distance anyway, so
+                // score 4 rows per kernel pass. If the queue fills inside
+                // this sub-block, `admit_screened` switches to screening
+                // for the rest — the precomputed distance is only used
+                // when the scalar path would have computed it, so
+                // decisions and stats stay identical.
+                let d4 = l2_sq_batch4(
+                    &qp,
+                    store.row(block[i] as usize),
+                    store.row(block[i + 1] as usize),
+                    store.row(block[i + 2] as usize),
+                    store.row(block[i + 3] as usize),
+                );
+                for (t, &d) in d4.iter().enumerate() {
+                    admit_screened(
+                        store,
+                        index,
+                        &qs,
+                        &qp,
+                        cur,
+                        block[i + t],
+                        slots[i + t],
+                        Some(d),
+                        ef,
+                        hop,
+                        &mut ub,
+                        &mut qc,
+                        filter,
+                        ctx,
+                    );
+                }
+                i += 4;
+            } else {
+                admit_screened(
+                    store,
+                    index,
+                    &qs,
+                    &qp,
+                    cur,
+                    block[i],
+                    slots[i],
+                    None,
+                    ef,
+                    hop,
+                    &mut ub,
+                    &mut qc,
+                    filter,
+                    ctx,
+                );
+                i += 1;
+            }
+        }
+        hop += 1;
     }
 
+    ctx.qbuf = qp;
+    ctx.block = block;
+    ctx.slots = slots;
     ctx.drain_top()
+}
+
+/// FINGER-screened beam search over one adjacency layer.
+pub fn finger_beam_search(
+    store: &VectorStore,
+    adj: &FlatAdj,
+    index: &FingerIndex,
+    entry: u32,
+    q: &[f32],
+    ef: usize,
+    ctx: &mut SearchContext,
+) -> Vec<Neighbor> {
+    finger_beam_search_filtered(store, adj, index, entry, q, ef, &AllLive, true, ctx)
 }
 
 /// Tombstone-aware FINGER-screened beam search: the online-update variant
@@ -91,7 +222,7 @@ pub fn finger_beam_search(
 /// deleted row can never be emitted. Returns row ids.
 #[allow(clippy::too_many_arguments)]
 pub fn finger_beam_search_live(
-    data: &Matrix,
+    store: &VectorStore,
     adj: &FlatAdj,
     index: &FingerIndex,
     entry: u32,
@@ -100,62 +231,7 @@ pub fn finger_beam_search_live(
     live: &LiveIds,
     ctx: &mut SearchContext,
 ) -> Vec<Neighbor> {
-    ctx.begin(data.rows());
-    ctx.visited.insert(entry);
-    let qs = QueryState::new(index, q);
-    let d0 = l2_sq(q, data.row(entry as usize));
-    if ctx.stats_enabled {
-        ctx.stats.dist_calls += 1;
-    }
-
-    ctx.cands.push(MinNeighbor(Neighbor { dist: d0, id: entry }));
-    if !live.is_dead_row(entry as usize) {
-        ctx.top.push(Neighbor { dist: d0, id: entry });
-    }
-
-    while let Some(MinNeighbor(cur)) = ctx.cands.pop() {
-        let ub = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
-        if cur.dist > ub && ctx.top.len() >= ef {
-            break;
-        }
-        if ctx.stats_enabled {
-            ctx.stats.hops += 1;
-        }
-        let mut qc: Option<QueryCenter> = None;
-        for (j, &nb) in adj.neighbors(cur.id).iter().enumerate() {
-            if !ctx.visited.insert(nb) {
-                continue;
-            }
-            let ub_now = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
-            let full = ctx.top.len() >= ef;
-            if full {
-                let qc = qc.get_or_insert_with(|| QueryCenter::new(index, &qs, cur.id, cur.dist));
-                let slot = adj.edge_slot(cur.id, j);
-                let approx = approx_dist_sq(index, qc, slot);
-                if ctx.stats_enabled {
-                    ctx.stats.approx_calls += 1;
-                }
-                if approx > ub_now {
-                    continue;
-                }
-            }
-            let d = l2_sq(q, data.row(nb as usize));
-            if ctx.stats_enabled {
-                ctx.stats.dist_calls += 1;
-            }
-            if !full || d < ub_now {
-                ctx.cands.push(MinNeighbor(Neighbor { dist: d, id: nb }));
-                if !live.is_dead_row(nb as usize) {
-                    ctx.top.push(Neighbor { dist: d, id: nb });
-                    if ctx.top.len() > ef {
-                        ctx.top.pop();
-                    }
-                }
-            }
-        }
-    }
-
-    ctx.drain_top()
+    finger_beam_search_filtered(store, adj, index, entry, q, ef, live, true, ctx)
 }
 
 /// FINGER-screened HNSW search over *borrowed* graph + index (lets callers
@@ -167,16 +243,26 @@ pub fn finger_beam_search_live(
 pub fn search_hnsw_with_index(
     hnsw: &crate::graph::hnsw::Hnsw,
     index: &FingerIndex,
-    data: &Matrix,
+    store: &VectorStore,
     q: &[f32],
     params: &SearchParams,
     ctx: &mut SearchContext,
 ) -> Vec<Neighbor> {
     let mut cur = hnsw.entry;
     for l in (1..=hnsw.max_level).rev() {
-        cur = crate::graph::search::greedy_descent(data, &hnsw.upper[l - 1], cur, q, ctx).id;
+        cur = crate::graph::search::greedy_descent(store, &hnsw.upper[l - 1], cur, q, ctx).id;
     }
-    let mut res = finger_beam_search(data, &hnsw.base, index, cur, q, params.beam_width(), ctx);
+    let mut res = finger_beam_search_filtered(
+        store,
+        &hnsw.base,
+        index,
+        cur,
+        q,
+        params.beam_width(),
+        &AllLive,
+        !params.scalar_kernels,
+        ctx,
+    );
     res.truncate(params.k);
     res
 }
@@ -195,19 +281,31 @@ impl FingerHnsw {
         hnsw_params: crate::graph::hnsw::HnswParams,
         finger_params: crate::finger::construct::FingerParams,
     ) -> FingerHnsw {
-        let hnsw = crate::graph::hnsw::Hnsw::build(data, hnsw_params);
+        let store = VectorStore::from_matrix(data);
+        FingerHnsw::build_with_store(data, &store, hnsw_params, finger_params)
+    }
+
+    /// Build against an existing padded store (`store` must mirror `data`
+    /// row-for-row; `data` is still needed for the FINGER residual SVD).
+    pub fn build_with_store(
+        data: &Matrix,
+        store: &VectorStore,
+        hnsw_params: crate::graph::hnsw::HnswParams,
+        finger_params: crate::finger::construct::FingerParams,
+    ) -> FingerHnsw {
+        let hnsw = crate::graph::hnsw::Hnsw::build_with_store(store, hnsw_params);
         let index = FingerIndex::build(data, &hnsw.base, finger_params);
         FingerHnsw { hnsw, index }
     }
 
     pub fn search(
         &self,
-        data: &Matrix,
+        store: &VectorStore,
         q: &[f32],
         params: &SearchParams,
         ctx: &mut SearchContext,
     ) -> Vec<Neighbor> {
-        search_hnsw_with_index(&self.hnsw, &self.index, data, q, params, ctx)
+        search_hnsw_with_index(&self.hnsw, &self.index, store, q, params, ctx)
     }
 
     /// Tombstone-aware variant of [`FingerHnsw::search`]: same routing,
@@ -215,7 +313,7 @@ impl FingerHnsw {
     /// callers remap to external ids.
     pub fn search_live(
         &self,
-        data: &Matrix,
+        store: &VectorStore,
         q: &[f32],
         params: &SearchParams,
         live: &LiveIds,
@@ -223,17 +321,18 @@ impl FingerHnsw {
     ) -> Vec<Neighbor> {
         let mut cur = self.hnsw.entry;
         for l in (1..=self.hnsw.max_level).rev() {
-            cur = crate::graph::search::greedy_descent(data, &self.hnsw.upper[l - 1], cur, q, ctx)
+            cur = crate::graph::search::greedy_descent(store, &self.hnsw.upper[l - 1], cur, q, ctx)
                 .id;
         }
-        let mut res = finger_beam_search_live(
-            data,
+        let mut res = finger_beam_search_filtered(
+            store,
             &self.hnsw.base,
             &self.index,
             cur,
             q,
             params.beam_width(),
             live,
+            !params.scalar_kernels,
             ctx,
         );
         res.truncate(params.k);
@@ -257,6 +356,7 @@ mod tests {
 
     fn avg_recall(
         fh: &FingerHnsw,
+        store: &VectorStore,
         ds: &crate::data::synth::Dataset,
         gt: &[Vec<u32>],
         ef: usize,
@@ -265,7 +365,7 @@ mod tests {
         let params = SearchParams::new(10).with_ef(ef);
         let mut total = 0.0;
         for qi in 0..ds.queries.rows() {
-            let res = fh.search(&ds.data, ds.queries.row(qi), &params, ctx);
+            let res = fh.search(store, ds.queries.row(qi), &params, ctx);
             let hits = res.iter().filter(|n| gt[qi].contains(&n.id)).count();
             total += hits as f64 / 10.0;
         }
@@ -275,32 +375,40 @@ mod tests {
     #[test]
     fn finger_maintains_high_recall() {
         let ds = tiny(71, 800, 32, Metric::L2);
-        let fh = FingerHnsw::build(
+        let store = VectorStore::from_matrix(&ds.data);
+        let fh = FingerHnsw::build_with_store(
             &ds.data,
+            &store,
             HnswParams { m: 12, ef_construction: 80, ..Default::default() },
             FingerParams { rank: 16, ..Default::default() },
         );
         let gt = exact_knn(&ds.data, &ds.queries, 10);
         let mut ctx = SearchContext::new();
-        let r = avg_recall(&fh, &ds, &gt, 80, &mut ctx);
+        let r = avg_recall(&fh, &store, &ds, &gt, 80, &mut ctx);
         assert!(r > 0.85, "recall@10 = {r}");
     }
 
     #[test]
     fn finger_reduces_full_distance_calls() {
         let ds = tiny(72, 800, 48, Metric::L2);
+        let store = VectorStore::from_matrix(&ds.data);
         let hnsw_p = HnswParams { m: 12, ef_construction: 80, ..Default::default() };
-        let fh = FingerHnsw::build(&ds.data, hnsw_p.clone(), FingerParams { rank: 8, ..Default::default() });
+        let fh = FingerHnsw::build_with_store(
+            &ds.data,
+            &store,
+            hnsw_p.clone(),
+            FingerParams { rank: 8, ..Default::default() },
+        );
         let gt = exact_knn(&ds.data, &ds.queries, 10);
 
         let mut ctx = SearchContext::new().with_stats();
-        let r_f = avg_recall(&fh, &ds, &gt, 60, &mut ctx);
+        let r_f = avg_recall(&fh, &store, &ds, &gt, 60, &mut ctx);
         let finger_stats = ctx.take_stats();
 
         // Baseline: plain HNSW search on the same graph.
         let params = SearchParams::new(10).with_ef(60);
         for qi in 0..ds.queries.rows() {
-            fh.hnsw.search(&ds.data, ds.queries.row(qi), &params, &mut ctx);
+            fh.hnsw.search(&store, ds.queries.row(qi), &params, &mut ctx);
         }
         let plain_stats = ctx.take_stats();
 
@@ -311,19 +419,80 @@ mod tests {
             plain_stats.dist_calls
         );
         assert!(finger_stats.approx_calls > 0);
+        // Satellite fix: the FINGER path now buckets its exact-distance
+        // work per hop, so Figure 2 data exists for screened searches too
+        // (only entry/descent distances live outside the buckets).
+        assert!(!finger_stats.per_hop.is_empty(), "per_hop not populated");
+        let bucket_total: u64 = finger_stats.per_hop.iter().map(|x| x.0).sum();
+        assert!(bucket_total > 0, "per_hop counted nothing");
+        assert!(bucket_total <= finger_stats.dist_calls);
+        assert!(
+            finger_stats.wasted <= finger_stats.dist_calls,
+            "wasted accounting broken"
+        );
         assert!(r_f > 0.8, "recall with screening = {r_f}");
+    }
+
+    /// Batched and scalar FINGER searches must return bitwise-identical
+    /// streams with identical stats — including with tombstones.
+    #[test]
+    fn batched_and_scalar_finger_streams_identical() {
+        let ds = tiny(75, 600, 28, Metric::L2); // dim not a lane multiple
+        let store = VectorStore::from_matrix(&ds.data);
+        let fh = FingerHnsw::build_with_store(
+            &ds.data,
+            &store,
+            HnswParams { m: 10, ef_construction: 60, ..Default::default() },
+            FingerParams { rank: 8, ..Default::default() },
+        );
+        let mut live = LiveIds::fresh(600);
+        for dead in [3usize, 77, 400, 401, 402] {
+            live.kill_row(dead);
+        }
+        let mut ctx = SearchContext::new().with_stats();
+        for qi in 0..ds.queries.rows().min(10) {
+            let q = ds.queries.row(qi);
+            for ef in [10usize, 40, 90] {
+                let b = finger_beam_search_filtered(
+                    &store, &fh.hnsw.base, &fh.index, fh.hnsw.entry, q, ef, &AllLive, true,
+                    &mut ctx,
+                );
+                let sb = ctx.take_stats();
+                let s = finger_beam_search_filtered(
+                    &store, &fh.hnsw.base, &fh.index, fh.hnsw.entry, q, ef, &AllLive, false,
+                    &mut ctx,
+                );
+                let ss = ctx.take_stats();
+                assert_eq!(b, s, "q{qi} ef={ef}");
+                assert_eq!(sb.dist_calls, ss.dist_calls, "q{qi} ef={ef}");
+                assert_eq!(sb.approx_calls, ss.approx_calls, "q{qi} ef={ef}");
+                assert_eq!(sb.wasted, ss.wasted, "q{qi} ef={ef}");
+                assert_eq!(sb.per_hop, ss.per_hop, "q{qi} ef={ef}");
+                let bl = finger_beam_search_filtered(
+                    &store, &fh.hnsw.base, &fh.index, fh.hnsw.entry, q, ef, &live, true,
+                    &mut ctx,
+                );
+                let sl = finger_beam_search_filtered(
+                    &store, &fh.hnsw.base, &fh.index, fh.hnsw.entry, q, ef, &live, false,
+                    &mut ctx,
+                );
+                assert_eq!(bl, sl, "live q{qi} ef={ef}");
+            }
+        }
     }
 
     #[test]
     fn results_sorted_and_unique() {
         let ds = tiny(73, 300, 16, Metric::L2);
-        let fh = FingerHnsw::build(
+        let store = VectorStore::from_matrix(&ds.data);
+        let fh = FingerHnsw::build_with_store(
             &ds.data,
+            &store,
             HnswParams { m: 8, ef_construction: 40, ..Default::default() },
             FingerParams { rank: 8, ..Default::default() },
         );
         let mut ctx = SearchContext::new();
-        let res = fh.search(&ds.data, ds.queries.row(0), &SearchParams::new(10).with_ef(50), &mut ctx);
+        let res = fh.search(&store, ds.queries.row(0), &SearchParams::new(10).with_ef(50), &mut ctx);
         for w in res.windows(2) {
             assert!(w[0].dist <= w[1].dist);
         }
@@ -336,14 +505,16 @@ mod tests {
     #[test]
     fn angular_dataset_works() {
         let ds = tiny(74, 500, 24, Metric::Angular);
-        let fh = FingerHnsw::build(
+        let store = VectorStore::from_matrix(&ds.data);
+        let fh = FingerHnsw::build_with_store(
             &ds.data,
+            &store,
             HnswParams { m: 8, ef_construction: 60, ..Default::default() },
             FingerParams { rank: 8, ..Default::default() },
         );
         let gt = exact_knn(&ds.data, &ds.queries, 10);
         let mut ctx = SearchContext::new();
-        let r = avg_recall(&fh, &ds, &gt, 60, &mut ctx);
+        let r = avg_recall(&fh, &store, &ds, &gt, 60, &mut ctx);
         assert!(r > 0.8, "angular recall@10 = {r}");
     }
 }

@@ -1,26 +1,54 @@
-//! Brute-force exact scan — baseline and correctness anchor.
+//! Brute-force exact scan — baseline and correctness anchor. Scans the
+//! padded [`VectorStore`] 4 rows per kernel pass; admission stays in row
+//! order, so results (ties included) are identical to a one-row-at-a-time
+//! scan with the same kernel.
 
-use crate::core::distance::l2_sq;
-use crate::core::matrix::Matrix;
+use crate::core::distance::{l2_sq, l2_sq_batch4};
+use crate::core::store::VectorStore;
 use crate::graph::search::Neighbor;
 use crate::index::mutable::LiveIds;
 
-/// Exact top-k by linear scan (single query).
-pub fn scan(data: &Matrix, q: &[f32], k: usize) -> Vec<Neighbor> {
-    let k = k.min(data.rows());
+/// Insert `(d, row)` into the bounded ascending best-list.
+#[inline]
+fn offer(best: &mut Vec<Neighbor>, worst: &mut f32, k: usize, d: f32, row: u32) {
+    if best.len() < k {
+        best.push(Neighbor { dist: d, id: row });
+        best.sort();
+        *worst = best.last().unwrap().dist;
+    } else if d < *worst {
+        *best.last_mut().unwrap() = Neighbor { dist: d, id: row };
+        best.sort();
+        *worst = best.last().unwrap().dist;
+    }
+}
+
+/// Exact top-k by linear scan (single query), batched 4 rows per pass.
+pub fn scan(store: &VectorStore, q: &[f32], k: usize) -> Vec<Neighbor> {
+    let n = store.rows();
+    let k = k.min(n);
     let mut best: Vec<Neighbor> = Vec::with_capacity(k + 1);
+    if k == 0 {
+        return best;
+    }
+    let mut qp = Vec::with_capacity(store.padded_cols());
+    store.pad_query(q, &mut qp);
     let mut worst = f32::INFINITY;
-    for i in 0..data.rows() {
-        let d = l2_sq(q, data.row(i));
-        if best.len() < k {
-            best.push(Neighbor { dist: d, id: i as u32 });
-            best.sort();
-            worst = best.last().unwrap().dist;
-        } else if d < worst {
-            *best.last_mut().unwrap() = Neighbor { dist: d, id: i as u32 };
-            best.sort();
-            worst = best.last().unwrap().dist;
+    let mut i = 0;
+    while i + 4 <= n {
+        let d4 = l2_sq_batch4(
+            &qp,
+            store.row(i),
+            store.row(i + 1),
+            store.row(i + 2),
+            store.row(i + 3),
+        );
+        for (t, &d) in d4.iter().enumerate() {
+            offer(&mut best, &mut worst, k, d, (i + t) as u32);
         }
+        i += 4;
+    }
+    for row in i..n {
+        offer(&mut best, &mut worst, k, l2_sq(&qp, store.row(row)), row as u32);
     }
     best
 }
@@ -30,27 +58,20 @@ pub fn scan(data: &Matrix, q: &[f32], k: usize) -> Vec<Neighbor> {
 /// `(dist, row)` during the scan and rows are remapped to external ids at
 /// the end — the remap is monotone (`LiveIds` keeps its map ascending), so
 /// the result order equals a scan ordered by `(dist, external id)`.
-pub fn scan_live(data: &Matrix, q: &[f32], k: usize, live: &LiveIds) -> Vec<Neighbor> {
+pub fn scan_live(store: &VectorStore, q: &[f32], k: usize, live: &LiveIds) -> Vec<Neighbor> {
     let k = k.min(live.live_len());
     let mut best: Vec<Neighbor> = Vec::with_capacity(k + 1);
     if k == 0 {
         return best;
     }
+    let mut qp = Vec::with_capacity(store.padded_cols());
+    store.pad_query(q, &mut qp);
     let mut worst = f32::INFINITY;
-    for row in 0..data.rows() {
+    for row in 0..store.rows() {
         if live.is_dead_row(row) {
             continue;
         }
-        let d = l2_sq(q, data.row(row));
-        if best.len() < k {
-            best.push(Neighbor { dist: d, id: row as u32 });
-            best.sort();
-            worst = best.last().unwrap().dist;
-        } else if d < worst {
-            *best.last_mut().unwrap() = Neighbor { dist: d, id: row as u32 };
-            best.sort();
-            worst = best.last().unwrap().dist;
-        }
+        offer(&mut best, &mut worst, k, l2_sq(&qp, store.row(row)), row as u32);
     }
     live.remap_rows_to_external(&mut best);
     best
@@ -59,6 +80,7 @@ pub fn scan_live(data: &Matrix, q: &[f32], k: usize, live: &LiveIds) -> Vec<Neig
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::matrix::Matrix;
     use crate::core::rng::Pcg32;
 
     #[test]
@@ -69,8 +91,9 @@ mod tests {
             let row: Vec<f32> = (0..6).map(|_| rng.next_gaussian()).collect();
             data.push_row(&row);
         }
+        let store = VectorStore::from_matrix(&data);
         let q: Vec<f32> = (0..6).map(|_| rng.next_gaussian()).collect();
-        let got = scan(&data, &q, 7);
+        let got = scan(&store, &q, 7);
         let mut all: Vec<Neighbor> = (0..200)
             .map(|i| Neighbor { dist: l2_sq(&q, data.row(i)), id: i as u32 })
             .collect();
@@ -79,24 +102,41 @@ mod tests {
     }
 
     #[test]
+    fn batched_scan_handles_ties_and_tails() {
+        // Duplicate rows force distance ties across 4-row batch borders;
+        // n not a multiple of 4 exercises the scalar remainder.
+        let mut data = Matrix::zeros(0, 3);
+        for i in 0..11 {
+            data.push_row(&[(i % 4) as f32, 0.0, 0.0]);
+        }
+        let store = VectorStore::from_matrix(&data);
+        let got = scan(&store, &[0.0, 0.0, 0.0], 5);
+        let ids: Vec<u32> = got.iter().map(|n| n.id).collect();
+        // dist 0: rows 0,4,8 (ascending ids); dist 1: rows 1,5.
+        assert_eq!(ids, vec![0, 4, 8, 1, 5]);
+    }
+
+    #[test]
     fn k_clamped_to_n() {
         let data = Matrix::from_rows(&[vec![1.0], vec![2.0]]);
-        assert_eq!(scan(&data, &[0.0], 10).len(), 2);
+        let store = VectorStore::from_matrix(&data);
+        assert_eq!(scan(&store, &[0.0], 10).len(), 2);
     }
 
     #[test]
     fn scan_live_filters_and_remaps() {
         let data = Matrix::from_rows(&[vec![0.0], vec![1.0], vec![2.0], vec![3.0]]);
+        let store = VectorStore::from_matrix(&data);
         let mut live = LiveIds::fresh(4);
         // Fresh identity: equals the plain scan.
-        assert_eq!(scan_live(&data, &[0.9], 2, &live), scan(&data, &[0.9], 2));
+        assert_eq!(scan_live(&store, &[0.9], 2, &live), scan(&store, &[0.9], 2));
         // Tombstone the nearest row: runner-ups take over, dead id absent.
         live.kill_row(1);
-        let got = scan_live(&data, &[0.9], 2, &live);
+        let got = scan_live(&store, &[0.9], 2, &live);
         let ids: Vec<u32> = got.iter().map(|n| n.id).collect();
         assert_eq!(ids, vec![0, 2]);
         // k clamps to the live count.
         live.kill_row(3);
-        assert_eq!(scan_live(&data, &[0.9], 10, &live).len(), 2);
+        assert_eq!(scan_live(&store, &[0.9], 10, &live).len(), 2);
     }
 }

@@ -7,9 +7,11 @@
 //! approximated by its best static setting) — it is the natural
 //! alternative strategy to FINGER and a useful comparison series. Reach it
 //! uniformly via `SearchParams::with_patience` on any graph family.
+//! Scoring is deliberately scalar: this is a baseline, and the stall
+//! counter is defined over per-neighbor admissions.
 
 use crate::core::distance::l2_sq;
-use crate::core::matrix::Matrix;
+use crate::core::store::VectorStore;
 use crate::graph::adjacency::FlatAdj;
 use crate::graph::search::{MinNeighbor, Neighbor};
 use crate::index::context::SearchContext;
@@ -17,7 +19,7 @@ use crate::index::context::SearchContext;
 /// Beam search with early termination after `patience` non-improving
 /// expansions (Algorithm 1 + stall counter).
 pub fn beam_search_early_term(
-    data: &Matrix,
+    store: &VectorStore,
     adj: &FlatAdj,
     entry: u32,
     q: &[f32],
@@ -25,9 +27,9 @@ pub fn beam_search_early_term(
     patience: usize,
     ctx: &mut SearchContext,
 ) -> Vec<Neighbor> {
-    ctx.begin(data.rows());
+    ctx.begin(store.rows());
     ctx.visited.insert(entry);
-    let d0 = l2_sq(q, data.row(entry as usize));
+    let d0 = l2_sq(q, store.row_logical(entry as usize));
     if ctx.stats_enabled {
         ctx.stats.dist_calls += 1;
     }
@@ -52,7 +54,7 @@ pub fn beam_search_early_term(
             if !ctx.visited.insert(nb) {
                 continue;
             }
-            let d = l2_sq(q, data.row(nb as usize));
+            let d = l2_sq(q, store.row_logical(nb as usize));
             let ub_now = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
             let full = ctx.top.len() >= ef;
             if ctx.stats_enabled {
@@ -91,6 +93,7 @@ mod tests {
     #[test]
     fn early_termination_trades_recall_for_speed() {
         let ds = tiny(501, 800, 32, Metric::L2);
+        let store = VectorStore::from_matrix(&ds.data);
         let h = Hnsw::build(&ds.data, HnswParams { m: 12, ef_construction: 80, ..Default::default() });
         let gt = exact_knn(&ds.data, &ds.queries, 10);
 
@@ -99,7 +102,7 @@ mod tests {
             let mut rec = 0.0;
             for qi in 0..ds.queries.rows() {
                 let res = beam_search_early_term(
-                    &ds.data, &h.base, h.entry, ds.queries.row(qi), 64, patience, &mut ctx,
+                    &store, &h.base, h.entry, ds.queries.row(qi), 64, patience, &mut ctx,
                 );
                 rec += recall(&res[..res.len().min(10)], &gt[qi]);
             }
@@ -116,12 +119,13 @@ mod tests {
     #[test]
     fn huge_patience_equals_plain_beam() {
         let ds = tiny(502, 300, 16, Metric::L2);
+        let store = VectorStore::from_matrix(&ds.data);
         let h = Hnsw::build(&ds.data, HnswParams { m: 8, ef_construction: 40, ..Default::default() });
         let mut ctx = SearchContext::new();
         for qi in 0..5 {
             let q = ds.queries.row(qi);
-            let a = beam_search_early_term(&ds.data, &h.base, h.entry, q, 32, usize::MAX, &mut ctx);
-            let b = crate::graph::search::beam_search(&ds.data, &h.base, h.entry, q, 32, &mut ctx);
+            let a = beam_search_early_term(&store, &h.base, h.entry, q, 32, usize::MAX, &mut ctx);
+            let b = crate::graph::search::beam_search(&store, &h.base, h.entry, q, 32, &mut ctx);
             let ai: Vec<u32> = a.iter().map(|n| n.id).collect();
             let bi: Vec<u32> = b.iter().map(|n| n.id).collect();
             assert_eq!(ai, bi, "query {qi}");
@@ -131,13 +135,14 @@ mod tests {
     #[test]
     fn patience_reachable_through_params() {
         let ds = tiny(503, 400, 16, Metric::L2);
+        let store = VectorStore::from_matrix(&ds.data);
         let h = Hnsw::build(&ds.data, HnswParams { m: 8, ef_construction: 40, ..Default::default() });
         let mut ctx = SearchContext::new().with_stats();
         let plain = SearchParams::new(10).with_ef(64);
-        h.search(&ds.data, ds.queries.row(0), &plain, &mut ctx);
+        h.search(&store, ds.queries.row(0), &plain, &mut ctx);
         let calls_plain = ctx.take_stats().dist_calls;
         let tight = SearchParams::new(10).with_ef(64).with_patience(1);
-        h.search(&ds.data, ds.queries.row(0), &tight, &mut ctx);
+        h.search(&store, ds.queries.row(0), &tight, &mut ctx);
         let calls_tight = ctx.take_stats().dist_calls;
         assert!(calls_tight <= calls_plain);
     }

@@ -1,14 +1,17 @@
 //! HNSW (Malkov & Yashunin, TPAMI 2018) — the base graph FINGER is built
 //! on in the paper. Standard construction: geometric level assignment,
 //! greedy descent through upper layers, beam search + neighbor-selection
-//! heuristic at each level, bidirectional linking with pruning.
+//! heuristic at each level, bidirectional linking with pruning. All
+//! distance work — construction and query — runs against a padded,
+//! aligned [`VectorStore`].
 
 use crate::core::distance::l2_sq;
 use crate::core::matrix::Matrix;
 use crate::core::rng::{Pcg32, SplitMix64};
+use crate::core::store::VectorStore;
 use crate::graph::adjacency::FlatAdj;
 use crate::graph::earlyterm::beam_search_early_term;
-use crate::graph::search::{beam_search, beam_search_live, greedy_descent, Neighbor};
+use crate::graph::search::{beam_search_filtered, greedy_descent, AllLive, Neighbor};
 use crate::index::context::{SearchContext, SearchParams};
 use crate::index::mutable::LiveIds;
 
@@ -48,9 +51,17 @@ pub struct Hnsw {
 }
 
 impl Hnsw {
-    /// Build over `data` (rows are points).
+    /// Build over `data` (rows are points). Convenience wrapper that pads
+    /// the data into a throwaway [`VectorStore`]; callers that keep a
+    /// store (the `AnnIndex` wrappers) use [`Hnsw::build_with_store`].
     pub fn build(data: &Matrix, params: HnswParams) -> Hnsw {
-        let n = data.rows();
+        let store = VectorStore::from_matrix(data);
+        Hnsw::build_with_store(&store, params)
+    }
+
+    /// Build over an existing padded store.
+    pub fn build_with_store(store: &VectorStore, params: HnswParams) -> Hnsw {
+        let n = store.rows();
         assert!(n > 0, "empty dataset");
         let m = params.m;
         let ml = 1.0 / (m as f64).ln().max(1e-9);
@@ -80,7 +91,7 @@ impl Hnsw {
         // Insert points one by one (point 0 initializes the graph).
         g.max_level = g.levels[0] as usize;
         for i in 1..n {
-            g.insert(data, i as u32, &mut ctx);
+            g.insert(store, i as u32, &mut ctx);
         }
         g
     }
@@ -106,32 +117,34 @@ impl Hnsw {
     /// lists changed — `id` itself plus every back-linked neighbor — so
     /// side indexes keyed on base edge slots (FINGER) can refresh exactly
     /// the touched rows.
-    fn insert(&mut self, data: &Matrix, id: u32, ctx: &mut SearchContext) -> Vec<u32> {
-        let q = data.row(id as usize);
+    fn insert(&mut self, store: &VectorStore, id: u32, ctx: &mut SearchContext) -> Vec<u32> {
+        let q = store.row_logical(id as usize);
         let node_level = self.levels[id as usize] as usize;
         let mut cur = self.entry;
 
         // Descend from the top to node_level+1 greedily.
         let top = self.max_level;
         for l in (node_level + 1..=top).rev() {
-            cur = greedy_descent(data, self.layer(l), cur, q, ctx).id;
+            cur = greedy_descent(store, self.layer(l), cur, q, ctx).id;
         }
 
         // Insert at each level from min(top, node_level) down to 0.
         let mut base_touched: Vec<u32> = Vec::new();
         for l in (0..=node_level.min(top)).rev() {
-            let found = beam_search(
-                data,
+            let found = beam_search_filtered(
+                store,
                 self.layer(l),
                 cur,
                 q,
                 self.params.ef_construction,
+                &AllLive,
+                true,
                 ctx,
             );
             cur = found.first().map(|n| n.id).unwrap_or(cur);
             let cap = if l == 0 { 2 * self.params.m } else { self.params.m };
             let selected = if self.params.heuristic {
-                select_heuristic(data, &found, cap)
+                select_heuristic(store, &found, cap)
             } else {
                 found.iter().take(cap).copied().collect()
             };
@@ -139,7 +152,7 @@ impl Hnsw {
             let list: Vec<u32> = selected.iter().map(|n| n.id).collect();
             self.layer_mut(l).set(id, &list);
             for &nb in &list {
-                self.link_with_prune(data, l, nb, id, cap);
+                self.link_with_prune(store, l, nb, id, cap);
             }
             if l == 0 {
                 // Reachability guarantee (FreshDiskANN-style): if pruning
@@ -183,13 +196,18 @@ impl Hnsw {
     /// Online insertion: grow every layer's storage by one node (its edge
     /// slots land at the buffer tails, so existing slots stay stable),
     /// sample its level, and run the standard construction-time insertion
-    /// reusing the pooled beam search. `data` must already contain the new
-    /// row, and row ids are append-only. Returns the base-layer nodes
+    /// reusing the pooled beam search. `store` must already contain the
+    /// new row, and row ids are append-only. Returns the base-layer nodes
     /// whose adjacency changed (including `id`).
-    pub fn insert_node(&mut self, data: &Matrix, id: u32, ctx: &mut SearchContext) -> Vec<u32> {
+    pub fn insert_node(
+        &mut self,
+        store: &VectorStore,
+        id: u32,
+        ctx: &mut SearchContext,
+    ) -> Vec<u32> {
         assert_eq!(id as usize, self.levels.len(), "graph ids are append-only");
         assert!(
-            (id as usize) < data.rows(),
+            (id as usize) < store.rows(),
             "data row must be appended before graph insertion"
         );
         let level = self.sample_level(id) as usize;
@@ -202,17 +220,18 @@ impl Hnsw {
         while self.upper.len() < level {
             self.upper.push(FlatAdj::new(n, self.params.m));
         }
-        self.insert(data, id, ctx)
+        self.insert(store, id, ctx)
     }
 
     /// Tombstone-aware search: identical routing to [`Hnsw::search`], but
     /// the base-layer beam traverses deleted nodes without ever emitting
-    /// them (see [`beam_search_live`]). `params.patience` is ignored —
+    /// them (see [`crate::graph::search::beam_search_live`]).
+    /// `params.patience` is ignored —
     /// early termination's stall counter is not defined over a filtered
     /// emission stream. Returns row ids; callers remap to external ids.
     pub fn search_live(
         &self,
-        data: &Matrix,
+        store: &VectorStore,
         q: &[f32],
         params: &SearchParams,
         live: &LiveIds,
@@ -220,9 +239,18 @@ impl Hnsw {
     ) -> Vec<Neighbor> {
         let mut cur = self.entry;
         for l in (1..=self.max_level).rev() {
-            cur = greedy_descent(data, self.layer(l), cur, q, ctx).id;
+            cur = greedy_descent(store, self.layer(l), cur, q, ctx).id;
         }
-        let mut res = beam_search_live(data, &self.base, cur, q, params.beam_width(), live, ctx);
+        let mut res = beam_search_filtered(
+            store,
+            &self.base,
+            cur,
+            q,
+            params.beam_width(),
+            live,
+            !params.scalar_kernels,
+            ctx,
+        );
         res.truncate(params.k);
         res
     }
@@ -234,7 +262,7 @@ impl Hnsw {
     /// O(cap²)-distance heuristic runs once per ~slack insertions instead
     /// of on every backward edge. This cut high-dimensional build time
     /// ~4-5x at equal search recall (degree bound unchanged).
-    fn link_with_prune(&mut self, data: &Matrix, l: usize, u: u32, v: u32, cap: usize) {
+    fn link_with_prune(&mut self, store: &VectorStore, l: usize, u: u32, v: u32, cap: usize) {
         if self.layer(l).contains(u, v) {
             return;
         }
@@ -244,23 +272,23 @@ impl Hnsw {
         // Over capacity: gather current + v, re-select with slack.
         let slack = (cap / 8).max(1);
         let target = cap.saturating_sub(slack).max(1);
-        let xu = data.row(u as usize);
+        let xu = store.row(u as usize);
         let mut cands: Vec<Neighbor> = self
             .layer(l)
             .neighbors(u)
             .iter()
             .map(|&w| Neighbor {
-                dist: l2_sq(xu, data.row(w as usize)),
+                dist: l2_sq(xu, store.row(w as usize)),
                 id: w,
             })
             .collect();
         cands.push(Neighbor {
-            dist: l2_sq(xu, data.row(v as usize)),
+            dist: l2_sq(xu, store.row(v as usize)),
             id: v,
         });
         cands.sort();
         let selected = if self.params.heuristic {
-            select_heuristic(data, &cands, target)
+            select_heuristic(store, &cands, target)
         } else {
             cands.into_iter().take(target).collect()
         };
@@ -269,22 +297,32 @@ impl Hnsw {
     }
 
     /// Search: greedy descent through upper layers, beam at layer 0.
-    /// Honors `params.patience` (early termination) when set.
+    /// Honors `params.patience` (early termination) and
+    /// `params.scalar_kernels` (forces unbatched scoring) when set.
     pub fn search(
         &self,
-        data: &Matrix,
+        store: &VectorStore,
         q: &[f32],
         params: &SearchParams,
         ctx: &mut SearchContext,
     ) -> Vec<Neighbor> {
         let mut cur = self.entry;
         for l in (1..=self.max_level).rev() {
-            cur = greedy_descent(data, self.layer(l), cur, q, ctx).id;
+            cur = greedy_descent(store, self.layer(l), cur, q, ctx).id;
         }
         let ef = params.beam_width();
         let mut res = match params.patience {
-            Some(p) => beam_search_early_term(data, &self.base, cur, q, ef, p, ctx),
-            None => beam_search(data, &self.base, cur, q, ef, ctx),
+            Some(p) => beam_search_early_term(store, &self.base, cur, q, ef, p, ctx),
+            None => beam_search_filtered(
+                store,
+                &self.base,
+                cur,
+                q,
+                ef,
+                &AllLive,
+                !params.scalar_kernels,
+                ctx,
+            ),
         };
         res.truncate(params.k);
         res
@@ -299,16 +337,16 @@ impl Hnsw {
 /// HNSW's neighbor-selection heuristic: keep a candidate only if it is
 /// closer to the query point than to every already-kept neighbor
 /// (diversity pruning). Falls back to nearest-fill if underfull.
-pub fn select_heuristic(data: &Matrix, cands: &[Neighbor], cap: usize) -> Vec<Neighbor> {
+pub fn select_heuristic(store: &VectorStore, cands: &[Neighbor], cap: usize) -> Vec<Neighbor> {
     let mut kept: Vec<Neighbor> = Vec::with_capacity(cap);
     for &c in cands {
         if kept.len() >= cap {
             break;
         }
-        let xc = data.row(c.id as usize);
+        let xc = store.row(c.id as usize);
         let diverse = kept
             .iter()
-            .all(|k| l2_sq(xc, data.row(k.id as usize)) > c.dist);
+            .all(|k| l2_sq(xc, store.row(k.id as usize)) > c.dist);
         if diverse {
             kept.push(c);
         }
@@ -329,9 +367,9 @@ pub fn select_heuristic(data: &Matrix, cands: &[Neighbor], cap: usize) -> Vec<Ne
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::distance::Metric;
     use crate::data::groundtruth::exact_knn;
     use crate::data::synth::tiny;
-    use crate::core::distance::Metric;
 
     fn recall(found: &[Neighbor], gt: &[u32]) -> f64 {
         let hits = found.iter().filter(|n| gt.contains(&n.id)).count();
@@ -341,13 +379,14 @@ mod tests {
     #[test]
     fn high_recall_on_tiny_dataset() {
         let ds = tiny(7, 800, 24, Metric::L2);
-        let h = Hnsw::build(&ds.data, HnswParams { m: 12, ef_construction: 80, ..Default::default() });
+        let store = VectorStore::from_matrix(&ds.data);
+        let h = Hnsw::build_with_store(&store, HnswParams { m: 12, ef_construction: 80, ..Default::default() });
         let gt = exact_knn(&ds.data, &ds.queries, 10);
         let mut ctx = SearchContext::new();
         let params = SearchParams::new(10).with_ef(80);
         let mut total = 0.0;
         for qi in 0..ds.queries.rows() {
-            let res = h.search(&ds.data, ds.queries.row(qi), &params, &mut ctx);
+            let res = h.search(&store, ds.queries.row(qi), &params, &mut ctx);
             total += recall(&res, &gt[qi]);
         }
         let avg = total / ds.queries.rows() as f64;
@@ -355,11 +394,27 @@ mod tests {
     }
 
     #[test]
+    fn build_with_store_matches_build_from_matrix() {
+        // The two construction entries share the insertion path, so the
+        // graphs must be identical edge-for-edge.
+        let ds = tiny(15, 300, 12, Metric::L2);
+        let store = VectorStore::from_matrix(&ds.data);
+        let a = Hnsw::build(&ds.data, HnswParams::default());
+        let b = Hnsw::build_with_store(&store, HnswParams::default());
+        assert_eq!(a.entry, b.entry);
+        assert_eq!(a.max_level, b.max_level);
+        for u in 0..300u32 {
+            assert_eq!(a.base.neighbors(u), b.base.neighbors(u), "node {u}");
+        }
+    }
+
+    #[test]
     fn search_returns_k_sorted() {
         let ds = tiny(8, 300, 16, Metric::L2);
-        let h = Hnsw::build(&ds.data, HnswParams::default());
+        let store = VectorStore::from_matrix(&ds.data);
+        let h = Hnsw::build_with_store(&store, HnswParams::default());
         let mut ctx = SearchContext::new();
-        let res = h.search(&ds.data, ds.queries.row(0), &SearchParams::new(5).with_ef(50), &mut ctx);
+        let res = h.search(&store, ds.queries.row(0), &SearchParams::new(5).with_ef(50), &mut ctx);
         assert_eq!(res.len(), 5);
         for w in res.windows(2) {
             assert!(w[0].dist <= w[1].dist);
@@ -396,12 +451,13 @@ mod tests {
             vec![2.0, 0.0],  // same direction, farther
             vec![0.0, 1.2],  // different direction
         ]);
+        let store = VectorStore::from_matrix(&data);
         let q = data.row(0);
         let mut cands: Vec<Neighbor> = (1..4u32)
             .map(|i| Neighbor { dist: l2_sq(q, data.row(i as usize)), id: i })
             .collect();
         cands.sort();
-        let kept = select_heuristic(&data, &cands, 2);
+        let kept = select_heuristic(&store, &cands, 2);
         let ids: Vec<u32> = kept.iter().map(|n| n.id).collect();
         assert!(ids.contains(&1));
         assert!(ids.contains(&3), "diverse direction kept: {ids:?}");
@@ -419,13 +475,13 @@ mod tests {
         for i in 0..prefix {
             head.push_row(ds.data.row(i));
         }
+        let mut store = VectorStore::from_matrix(&head);
         let p = HnswParams { m: 12, ef_construction: 80, ..Default::default() };
-        let mut h = Hnsw::build(&head, p.clone());
+        let mut h = Hnsw::build_with_store(&store, p.clone());
         let mut ctx = SearchContext::for_universe(n);
-        let mut grown = head.clone();
         for i in prefix..n {
-            grown.push_row(ds.data.row(i));
-            let touched = h.insert_node(&grown, i as u32, &mut ctx);
+            store.push_row(ds.data.row(i));
+            let touched = h.insert_node(&store, i as u32, &mut ctx);
             assert!(touched.contains(&(i as u32)));
             assert!(touched.iter().all(|&u| (u as usize) <= i));
         }
@@ -440,7 +496,7 @@ mod tests {
         let params = SearchParams::new(10).with_ef(80);
         let mut total = 0.0;
         for qi in 0..ds.queries.rows() {
-            let res = h.search(&grown, ds.queries.row(qi), &params, &mut ctx);
+            let res = h.search(&store, ds.queries.row(qi), &params, &mut ctx);
             total += recall(&res, &gt[qi]);
         }
         let avg = total / ds.queries.rows() as f64;
@@ -455,11 +511,12 @@ mod tests {
             for i in 0..150 {
                 m.push_row(ds.data.row(i));
             }
-            let mut h = Hnsw::build(&m, HnswParams::default());
+            let mut store = VectorStore::from_matrix(&m);
+            let mut h = Hnsw::build_with_store(&store, HnswParams::default());
             let mut ctx = SearchContext::new();
             for i in 150..200 {
-                m.push_row(ds.data.row(i));
-                h.insert_node(&m, i as u32, &mut ctx);
+                store.push_row(ds.data.row(i));
+                h.insert_node(&store, i as u32, &mut ctx);
             }
             h
         };
@@ -475,16 +532,17 @@ mod tests {
     #[test]
     fn search_live_skips_tombstones() {
         let ds = tiny(14, 300, 8, Metric::L2);
-        let h = Hnsw::build(&ds.data, HnswParams { m: 8, ef_construction: 60, ..Default::default() });
+        let store = VectorStore::from_matrix(&ds.data);
+        let h = Hnsw::build_with_store(&store, HnswParams { m: 8, ef_construction: 60, ..Default::default() });
         let mut live = LiveIds::fresh(300);
         // Tombstone the exact nearest neighbor of query 0.
         let mut ctx = SearchContext::new();
         let params = SearchParams::new(5).with_ef(300);
         let q = ds.queries.row(0);
-        let before = h.search_live(&ds.data, q, &params, &live, &mut ctx);
+        let before = h.search_live(&store, q, &params, &live, &mut ctx);
         let nearest = before[0].id;
         live.kill_row(nearest as usize);
-        let after = h.search_live(&ds.data, q, &params, &live, &mut ctx);
+        let after = h.search_live(&store, q, &params, &live, &mut ctx);
         assert!(after.iter().all(|n| n.id != nearest));
         assert_eq!(after.len(), 5);
         assert_eq!(

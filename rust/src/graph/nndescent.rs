@@ -6,10 +6,11 @@
 use crate::core::distance::l2_sq;
 use crate::core::matrix::Matrix;
 use crate::core::rng::Pcg32;
+use crate::core::store::VectorStore;
 use crate::graph::adjacency::FlatAdj;
 use crate::graph::earlyterm::beam_search_early_term;
 use crate::graph::hnsw::select_heuristic;
-use crate::graph::search::{beam_search, Neighbor};
+use crate::graph::search::{beam_search_filtered, AllLive, Neighbor};
 use crate::index::context::{SearchContext, SearchParams};
 
 #[derive(Clone, Debug)]
@@ -83,8 +84,15 @@ impl KnnList {
 }
 
 impl NnDescent {
+    /// Build over `data`, padding it into a throwaway store; callers that
+    /// keep a [`VectorStore`] use [`NnDescent::build_with_store`].
     pub fn build(data: &Matrix, params: NnDescentParams) -> NnDescent {
-        let n = data.rows();
+        let store = VectorStore::from_matrix(data);
+        NnDescent::build_with_store(&store, params)
+    }
+
+    pub fn build_with_store(store: &VectorStore, params: NnDescentParams) -> NnDescent {
+        let n = store.rows();
         assert!(n > 1);
         let k = params.k.min(n - 1);
         let mut rng = Pcg32::new(params.seed);
@@ -96,7 +104,7 @@ impl NnDescent {
                 let v = rng.gen_range(n);
                 if v != u {
                     let cand = Neighbor {
-                        dist: l2_sq(data.row(u), data.row(v)),
+                        dist: l2_sq(store.row(u), store.row(v)),
                         id: v as u32,
                     };
                     lists[u].offer(cand);
@@ -134,7 +142,7 @@ impl NnDescent {
                         if a == b {
                             continue;
                         }
-                        let d = l2_sq(data.row(a as usize), data.row(b as usize));
+                        let d = l2_sq(store.row(a as usize), store.row(b as usize));
                         if lists[a as usize].offer(Neighbor { dist: d, id: b }) {
                             updates += 1;
                         }
@@ -154,7 +162,7 @@ impl NnDescent {
         let mut adj = FlatAdj::new(n, params.degree);
         for u in 0..n {
             let kept = if params.prune {
-                select_heuristic(data, &lists[u].items, params.degree)
+                select_heuristic(store, &lists[u].items, params.degree)
             } else {
                 lists[u].items.iter().take(params.degree).copied().collect()
             };
@@ -178,10 +186,11 @@ impl NnDescent {
         }
     }
 
-    /// Beam search from the nearest entry probe; honors `params.patience`.
+    /// Beam search from the nearest entry probe; honors `params.patience`
+    /// and `params.scalar_kernels`.
     pub fn search(
         &self,
-        data: &Matrix,
+        store: &VectorStore,
         q: &[f32],
         params: &SearchParams,
         ctx: &mut SearchContext,
@@ -190,7 +199,7 @@ impl NnDescent {
         let mut entry = self.entry_probes[0];
         let mut best = f32::INFINITY;
         for &p in &self.entry_probes {
-            let d = l2_sq(q, data.row(p as usize));
+            let d = l2_sq(q, store.row_logical(p as usize));
             if d < best {
                 best = d;
                 entry = p;
@@ -201,8 +210,17 @@ impl NnDescent {
         }
         let ef = params.beam_width();
         let mut res = match params.patience {
-            Some(p) => beam_search_early_term(data, &self.adj, entry, q, ef, p, ctx),
-            None => beam_search(data, &self.adj, entry, q, ef, ctx),
+            Some(p) => beam_search_early_term(store, &self.adj, entry, q, ef, p, ctx),
+            None => beam_search_filtered(
+                store,
+                &self.adj,
+                entry,
+                q,
+                ef,
+                &AllLive,
+                !params.scalar_kernels,
+                ctx,
+            ),
         };
         res.truncate(params.k);
         res
@@ -237,13 +255,14 @@ mod tests {
     #[test]
     fn reasonable_recall_on_tiny() {
         let ds = tiny(31, 600, 16, Metric::L2);
-        let g = NnDescent::build(&ds.data, NnDescentParams::default());
+        let store = VectorStore::from_matrix(&ds.data);
+        let g = NnDescent::build_with_store(&store, NnDescentParams::default());
         let gt = exact_knn(&ds.data, &ds.queries, 10);
         let mut ctx = SearchContext::new();
         let params = SearchParams::new(10).with_ef(80);
         let mut total = 0.0;
         for qi in 0..ds.queries.rows() {
-            let res = g.search(&ds.data, ds.queries.row(qi), &params, &mut ctx);
+            let res = g.search(&store, ds.queries.row(qi), &params, &mut ctx);
             let hits = res.iter().filter(|n| gt[qi].contains(&n.id)).count();
             total += hits as f64 / 10.0;
         }

@@ -4,12 +4,25 @@
 //! cannot influence the search).
 //!
 //! All searches run over a pooled [`SearchContext`] (visited set + both
-//! heaps + stats), so the hot loop performs no per-query heap allocation.
+//! heaps + stats) and score against a padded, aligned
+//! [`VectorStore`] — no per-query heap allocation and no tail loops in
+//! the distance kernels.
+//!
+//! There is exactly **one** copy of the hot loop,
+//! [`beam_search_filtered`], generic over a [`LiveFilter`] (the
+//! tombstone-aware online variant is the same code with a bitset filter
+//! at result emission) and switchable between scalar and 4-row-batched
+//! scoring. The two scoring modes make identical admission decisions —
+//! the batched kernels return bitwise-equal distances and admissions are
+//! applied sequentially against the same evolving upper bound — so their
+//! result streams (and stats) are bitwise identical; `rust/tests/
+//! ann_index.rs` pins this end to end.
 
 use std::cmp::Ordering;
+use std::hint::black_box;
 
-use crate::core::distance::l2_sq;
-use crate::core::matrix::Matrix;
+use crate::core::distance::{l2_sq, l2_sq_batch4};
+use crate::core::store::VectorStore;
 use crate::graph::adjacency::FlatAdj;
 use crate::index::context::SearchContext;
 use crate::index::mutable::LiveIds;
@@ -86,6 +99,9 @@ pub struct SearchStats {
 }
 
 impl SearchStats {
+    /// Record one full-distance computation at expansion index `hop`.
+    /// Every screened/filtered search path counts through here so
+    /// `per_hop`/`wasted` (the Figure 2 data) stay populated uniformly.
     pub fn record(&mut self, hop: usize, wasted: bool) {
         self.dist_calls += 1;
         if self.per_hop.len() <= hop {
@@ -96,6 +112,12 @@ impl SearchStats {
             self.wasted += 1;
             self.per_hop[hop].1 += 1;
         }
+    }
+
+    /// Record one approximate (rank-r) scoring — the FINGER screening
+    /// counterpart of [`SearchStats::record`].
+    pub fn record_approx(&mut self) {
+        self.approx_calls += 1;
     }
 
     pub fn merge(&mut self, other: &SearchStats) {
@@ -119,57 +141,160 @@ impl SearchStats {
     }
 }
 
-/// Greedy best-first search (Algorithm 1) over one adjacency layer.
-/// Returns up to `ef` nearest (ascending). `entry` must be a valid node.
-pub fn beam_search(
-    data: &Matrix,
+/// Which rows may be *emitted* (admitted to the top-results queue).
+/// Traversal ignores it — dead nodes keep routing, live filtering happens
+/// at emission only, so connectivity through tombstones survives.
+pub trait LiveFilter {
+    fn emits(&self, row: u32) -> bool;
+}
+
+/// Every row emits (the static-index case); optimizes out entirely.
+pub struct AllLive;
+
+impl LiveFilter for AllLive {
+    #[inline]
+    fn emits(&self, _row: u32) -> bool {
+        true
+    }
+}
+
+impl LiveFilter for LiveIds {
+    #[inline]
+    fn emits(&self, row: u32) -> bool {
+        !self.is_dead_row(row as usize)
+    }
+}
+
+/// Greedy best-first search (Algorithm 1) over one adjacency layer —
+/// the single hot loop behind [`beam_search`], [`beam_search_live`], and
+/// the scalar-kernel mode of both.
+///
+/// Per expanded node the unvisited neighbors are gathered first, then
+/// scored — in blocks of 4 via [`l2_sq_batch4`] when `batched`, one at a
+/// time otherwise — and finally admitted sequentially against a locally
+/// cached upper bound (refreshed only when the top queue actually
+/// changes, instead of a `peek` per neighbor). Because the batch kernel
+/// is bitwise-equal to the scalar kernel per row and admission order is
+/// unchanged, both modes produce identical result streams and stats.
+#[allow(clippy::too_many_arguments)]
+pub fn beam_search_filtered<F: LiveFilter + ?Sized>(
+    store: &VectorStore,
     adj: &FlatAdj,
     entry: u32,
     q: &[f32],
     ef: usize,
+    filter: &F,
+    batched: bool,
     ctx: &mut SearchContext,
 ) -> Vec<Neighbor> {
-    ctx.begin(data.rows());
+    ctx.begin(store.rows());
+    // Pooled scratch, taken out so the heaps stay borrowable through ctx.
+    let mut qp = std::mem::take(&mut ctx.qbuf);
+    let mut block = std::mem::take(&mut ctx.block);
+    let mut dists = std::mem::take(&mut ctx.dists);
+    store.pad_query(q, &mut qp);
+
     ctx.visited.insert(entry);
-    let d0 = l2_sq(q, data.row(entry as usize));
+    let d0 = l2_sq(&qp, store.row(entry as usize));
     if ctx.stats_enabled {
         ctx.stats.dist_calls += 1;
     }
-
     ctx.cands.push(MinNeighbor(Neighbor { dist: d0, id: entry }));
-    ctx.top.push(Neighbor { dist: d0, id: entry });
+    if filter.emits(entry) {
+        ctx.top.push(Neighbor { dist: d0, id: entry });
+    }
 
     let mut hop = 0usize;
     while let Some(MinNeighbor(cur)) = ctx.cands.pop() {
-        let ub = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
+        let mut ub = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
         if cur.dist > ub && ctx.top.len() >= ef {
             break; // Algorithm 1 line 5: nearest candidate beyond the bound
         }
         if ctx.stats_enabled {
             ctx.stats.hops += 1;
         }
+
+        // Phase 1: gather this node's unvisited neighbors.
+        block.clear();
         for &nb in adj.neighbors(cur.id) {
-            if !ctx.visited.insert(nb) {
-                continue;
+            if ctx.visited.insert(nb) {
+                block.push(nb);
             }
-            let d = l2_sq(q, data.row(nb as usize));
-            let ub_now = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
+        }
+
+        // Phase 2: score the block (distances do not depend on admission
+        // order, so they batch freely).
+        dists.clear();
+        if batched {
+            let mut i = 0;
+            while i + 4 <= block.len() {
+                // Prefetch hint: touch the next block of rows early so
+                // their cache lines are in flight while this block's FMAs
+                // retire (plain reads — no intrinsics).
+                if i + 8 <= block.len() {
+                    for t in i + 4..i + 8 {
+                        black_box(store.row(block[t] as usize)[0]);
+                    }
+                }
+                let d4 = l2_sq_batch4(
+                    &qp,
+                    store.row(block[i] as usize),
+                    store.row(block[i + 1] as usize),
+                    store.row(block[i + 2] as usize),
+                    store.row(block[i + 3] as usize),
+                );
+                dists.extend_from_slice(&d4);
+                i += 4;
+            }
+            for &nb in &block[i..] {
+                dists.push(l2_sq(&qp, store.row(nb as usize)));
+            }
+        } else {
+            for &nb in &block[..] {
+                dists.push(l2_sq(&qp, store.row(nb as usize)));
+            }
+        }
+
+        // Phase 3: sequential admission — identical decisions to the
+        // one-at-a-time loop, with the upper bound kept in a local that is
+        // refreshed only when the top queue changes.
+        for (j, &nb) in block.iter().enumerate() {
+            let d = dists[j];
             let full = ctx.top.len() >= ef;
             if ctx.stats_enabled {
-                ctx.stats.record(hop, full && d > ub_now);
+                ctx.stats.record(hop, full && d > ub);
             }
-            if !full || d < ub_now {
+            if !full || d < ub {
                 ctx.cands.push(MinNeighbor(Neighbor { dist: d, id: nb }));
-                ctx.top.push(Neighbor { dist: d, id: nb });
-                if ctx.top.len() > ef {
-                    ctx.top.pop();
+                if filter.emits(nb) {
+                    ctx.top.push(Neighbor { dist: d, id: nb });
+                    if ctx.top.len() > ef {
+                        ctx.top.pop();
+                    }
+                    ub = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
                 }
             }
         }
         hop += 1;
     }
 
+    ctx.qbuf = qp;
+    ctx.block = block;
+    ctx.dists = dists;
     ctx.drain_top()
+}
+
+/// Greedy best-first search (Algorithm 1) over one adjacency layer.
+/// Returns up to `ef` nearest (ascending). `entry` must be a valid node.
+pub fn beam_search(
+    store: &VectorStore,
+    adj: &FlatAdj,
+    entry: u32,
+    q: &[f32],
+    ef: usize,
+    ctx: &mut SearchContext,
+) -> Vec<Neighbor> {
+    beam_search_filtered(store, adj, entry, q, ef, &AllLive, true, ctx)
 }
 
 /// Tombstone-aware beam search (the online-update variant of Algorithm 1):
@@ -181,7 +306,7 @@ pub fn beam_search(
 /// (ascending), still in the graph's row id space — callers remap rows to
 /// external ids.
 pub fn beam_search_live(
-    data: &Matrix,
+    store: &VectorStore,
     adj: &FlatAdj,
     entry: u32,
     q: &[f32],
@@ -189,71 +314,27 @@ pub fn beam_search_live(
     live: &LiveIds,
     ctx: &mut SearchContext,
 ) -> Vec<Neighbor> {
-    ctx.begin(data.rows());
-    ctx.visited.insert(entry);
-    let d0 = l2_sq(q, data.row(entry as usize));
-    if ctx.stats_enabled {
-        ctx.stats.dist_calls += 1;
-    }
-
-    ctx.cands.push(MinNeighbor(Neighbor { dist: d0, id: entry }));
-    if !live.is_dead_row(entry as usize) {
-        ctx.top.push(Neighbor { dist: d0, id: entry });
-    }
-
-    let mut hop = 0usize;
-    while let Some(MinNeighbor(cur)) = ctx.cands.pop() {
-        let ub = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
-        if cur.dist > ub && ctx.top.len() >= ef {
-            break;
-        }
-        if ctx.stats_enabled {
-            ctx.stats.hops += 1;
-        }
-        for &nb in adj.neighbors(cur.id) {
-            if !ctx.visited.insert(nb) {
-                continue;
-            }
-            let d = l2_sq(q, data.row(nb as usize));
-            let ub_now = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
-            let full = ctx.top.len() >= ef;
-            if ctx.stats_enabled {
-                ctx.stats.record(hop, full && d > ub_now);
-            }
-            if !full || d < ub_now {
-                ctx.cands.push(MinNeighbor(Neighbor { dist: d, id: nb }));
-                if !live.is_dead_row(nb as usize) {
-                    ctx.top.push(Neighbor { dist: d, id: nb });
-                    if ctx.top.len() > ef {
-                        ctx.top.pop();
-                    }
-                }
-            }
-        }
-        hop += 1;
-    }
-
-    ctx.drain_top()
+    beam_search_filtered(store, adj, entry, q, ef, live, true, ctx)
 }
 
 /// Greedy descent: walk to the locally nearest node (ef = 1). Used for
-/// HNSW upper layers.
+/// HNSW upper layers (tiny — scalar scoring is fine there).
 pub fn greedy_descent(
-    data: &Matrix,
+    store: &VectorStore,
     adj: &FlatAdj,
     entry: u32,
     q: &[f32],
     ctx: &mut SearchContext,
 ) -> Neighbor {
     let mut cur = Neighbor {
-        dist: l2_sq(q, data.row(entry as usize)),
+        dist: l2_sq(q, store.row_logical(entry as usize)),
         id: entry,
     };
     let mut calls = 1u64;
     loop {
         let mut improved = false;
         for &nb in adj.neighbors(cur.id) {
-            let d = l2_sq(q, data.row(nb as usize));
+            let d = l2_sq(q, store.row_logical(nb as usize));
             calls += 1;
             if d < cur.dist {
                 cur = Neighbor { dist: d, id: nb };
@@ -273,7 +354,12 @@ pub fn greedy_descent(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::matrix::Matrix;
     use crate::core::rng::Pcg32;
+
+    fn store_of(data: &Matrix) -> VectorStore {
+        VectorStore::from_matrix(data)
+    }
 
     /// Fully-connected small graph: beam search must find the exact NN.
     #[test]
@@ -285,6 +371,7 @@ mod tests {
             let row: Vec<f32> = (0..6).map(|_| rng.next_gaussian()).collect();
             data.push_row(&row);
         }
+        let store = store_of(&data);
         let mut adj = FlatAdj::new(n, n - 1);
         for u in 0..n as u32 {
             for v in 0..n as u32 {
@@ -295,7 +382,7 @@ mod tests {
         }
         let mut ctx = SearchContext::new();
         let q: Vec<f32> = (0..6).map(|_| rng.next_gaussian()).collect();
-        let res = beam_search(&data, &adj, 0, &q, 5, &mut ctx);
+        let res = beam_search(&store, &adj, 0, &q, 5, &mut ctx);
         // Naive top-5
         let mut all: Vec<Neighbor> = (0..n)
             .map(|i| Neighbor {
@@ -317,6 +404,7 @@ mod tests {
         for _ in 0..n {
             data.push_row(&[rng.next_gaussian(), rng.next_gaussian()]);
         }
+        let store = store_of(&data);
         let mut adj = FlatAdj::new(n, 6);
         for u in 0..n as u32 {
             for k in 1..=6u32 {
@@ -324,11 +412,58 @@ mod tests {
             }
         }
         let mut ctx = SearchContext::new();
-        let res = beam_search(&data, &adj, 0, &[0.0, 0.0], 10, &mut ctx);
+        let res = beam_search(&store, &adj, 0, &[0.0, 0.0], 10, &mut ctx);
         for w in res.windows(2) {
             assert!(w[0].dist <= w[1].dist);
         }
         assert!(res.len() <= 10);
+    }
+
+    /// The acceptance property at this layer: batched and scalar scoring
+    /// return bitwise-identical (dist, id) streams — seeded random graphs,
+    /// non-lane-multiple dims, a NaN row, and tombstones included.
+    #[test]
+    fn batched_and_scalar_streams_bitwise_identical() {
+        for seed in [3u64, 4, 5] {
+            let mut rng = Pcg32::new(seed);
+            let n = 300;
+            let dim = 13; // forces the lane-folded tail path
+            let mut data = Matrix::zeros(0, 0);
+            for _ in 0..n {
+                let row: Vec<f32> = (0..dim).map(|_| rng.next_gaussian()).collect();
+                data.push_row(&row);
+            }
+            data.row_mut(17)[4] = f32::NAN; // corrupt row must tie-break identically
+            let store = store_of(&data);
+            let mut adj = FlatAdj::new(n, 9);
+            for u in 0..n as u32 {
+                for k in 1..=9u32 {
+                    adj.push(u, (u * 7 + k * 13) % n as u32);
+                }
+            }
+            let mut live = LiveIds::fresh(n);
+            live.kill_row(5);
+            live.kill_row(42);
+            let mut ctx = SearchContext::new().with_stats();
+            for qi in 0..6 {
+                let q: Vec<f32> = (0..dim).map(|_| rng.next_gaussian()).collect();
+                for ef in [3usize, 16, 64] {
+                    let b = beam_search_filtered(&store, &adj, 0, &q, ef, &AllLive, true, &mut ctx);
+                    let sb = ctx.take_stats();
+                    let s = beam_search_filtered(&store, &adj, 0, &q, ef, &AllLive, false, &mut ctx);
+                    let ss = ctx.take_stats();
+                    // Neighbor eq goes through total_cmp: equal streams are
+                    // bitwise-equal distances and ids, NaN included.
+                    assert_eq!(b, s, "seed {seed} q{qi} ef={ef}");
+                    assert_eq!(sb.dist_calls, ss.dist_calls, "seed {seed} ef={ef}");
+                    assert_eq!(sb.wasted, ss.wasted, "seed {seed} ef={ef}");
+                    assert_eq!(sb.per_hop, ss.per_hop, "seed {seed} ef={ef}");
+                    let bl = beam_search_filtered(&store, &adj, 0, &q, ef, &live, true, &mut ctx);
+                    let sl = beam_search_filtered(&store, &adj, 0, &q, ef, &live, false, &mut ctx);
+                    assert_eq!(bl, sl, "live seed {seed} q{qi} ef={ef}");
+                }
+            }
+        }
     }
 
     #[test]
@@ -336,6 +471,7 @@ mod tests {
         // Path graph on a line: 0 - 1 - 2 - 3. Tombstone the middle node
         // 1; nodes 2 and 3 are only reachable through it.
         let data = Matrix::from_rows(&[vec![0.0], vec![1.0], vec![2.0], vec![3.0]]);
+        let store = store_of(&data);
         let mut adj = FlatAdj::new(4, 2);
         for u in 0..4u32 {
             if u > 0 {
@@ -348,7 +484,7 @@ mod tests {
         let mut live = LiveIds::fresh(4);
         live.kill_row(1);
         let mut ctx = SearchContext::new();
-        let res = beam_search_live(&data, &adj, 0, &[1.0], 4, &live, &mut ctx);
+        let res = beam_search_live(&store, &adj, 0, &[1.0], 4, &live, &mut ctx);
         assert!(res.iter().all(|n| n.id != 1), "tombstoned id emitted");
         assert!(
             res.iter().any(|n| n.id == 2) && res.iter().any(|n| n.id == 3),
@@ -367,6 +503,7 @@ mod tests {
             let row: Vec<f32> = (0..4).map(|_| rng.next_gaussian()).collect();
             data.push_row(&row);
         }
+        let store = store_of(&data);
         let mut adj = FlatAdj::new(n, 6);
         for u in 0..n as u32 {
             for k in 1..=6u32 {
@@ -376,8 +513,8 @@ mod tests {
         let live = LiveIds::fresh(n);
         let mut ctx = SearchContext::new();
         let q: Vec<f32> = (0..4).map(|_| rng.next_gaussian()).collect();
-        let a = beam_search_live(&data, &adj, 0, &q, 8, &live, &mut ctx);
-        let b = beam_search(&data, &adj, 0, &q, 8, &mut ctx);
+        let a = beam_search_live(&store, &adj, 0, &q, 8, &live, &mut ctx);
+        let b = beam_search(&store, &adj, 0, &q, 8, &mut ctx);
         assert_eq!(a, b);
     }
 
@@ -390,6 +527,7 @@ mod tests {
             let row: Vec<f32> = (0..8).map(|_| rng.next_gaussian()).collect();
             data.push_row(&row);
         }
+        let store = store_of(&data);
         let mut adj = FlatAdj::new(n, 8);
         for u in 0..n as u32 {
             for k in 1..=8u32 {
@@ -398,7 +536,7 @@ mod tests {
         }
         let mut ctx = SearchContext::new().with_stats();
         let q: Vec<f32> = (0..8).map(|_| rng.next_gaussian()).collect();
-        beam_search(&data, &adj, 0, &q, 4, &mut ctx);
+        beam_search(&store, &adj, 0, &q, 4, &mut ctx);
         let stats = ctx.take_stats();
         assert!(stats.dist_calls > 0);
         assert!(stats.hops > 0);
@@ -410,12 +548,13 @@ mod tests {
     #[test]
     fn disabled_stats_stay_zero() {
         let data = Matrix::from_rows(&[vec![0.0], vec![1.0], vec![2.0]]);
+        let store = store_of(&data);
         let mut adj = FlatAdj::new(3, 2);
         adj.push(0, 1);
         adj.push(1, 2);
         adj.push(2, 0);
         let mut ctx = SearchContext::new();
-        beam_search(&data, &adj, 0, &[1.5], 2, &mut ctx);
+        beam_search(&store, &adj, 0, &[1.5], 2, &mut ctx);
         assert_eq!(ctx.stats.dist_calls, 0);
         assert_eq!(ctx.stats.hops, 0);
     }
@@ -429,6 +568,7 @@ mod tests {
         for i in 0..n {
             data.push_row(&[i as f32]);
         }
+        let store = store_of(&data);
         let mut adj = FlatAdj::new(n, 2);
         for u in 0..n as u32 {
             if u > 0 {
@@ -439,7 +579,7 @@ mod tests {
             }
         }
         let mut ctx = SearchContext::new();
-        let got = greedy_descent(&data, &adj, 0, &[17.2], &mut ctx);
+        let got = greedy_descent(&store, &adj, 0, &[17.2], &mut ctx);
         assert_eq!(got.id, 17);
     }
 
@@ -452,6 +592,18 @@ mod tests {
         };
         let eff = s.effective_dist_calls(16, 128);
         assert!((eff - (100.0 + 200.0 * 0.125)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn record_approx_counts() {
+        let mut s = SearchStats::default();
+        s.record_approx();
+        s.record_approx();
+        s.record(0, true);
+        assert_eq!(s.approx_calls, 2);
+        assert_eq!(s.dist_calls, 1);
+        assert_eq!(s.wasted, 1);
+        assert_eq!(s.per_hop, vec![(1, 1)]);
     }
 
     #[test]
@@ -475,6 +627,7 @@ mod tests {
         // A NaN query poisons every distance; the search must terminate
         // and return finite-length output instead of corrupting the heap.
         let data = Matrix::from_rows(&[vec![0.0], vec![1.0], vec![2.0], vec![3.0]]);
+        let store = store_of(&data);
         let mut adj = FlatAdj::new(4, 3);
         for u in 0..4u32 {
             for v in 0..4u32 {
@@ -484,7 +637,7 @@ mod tests {
             }
         }
         let mut ctx = SearchContext::new();
-        let res = beam_search(&data, &adj, 0, &[f32::NAN], 2, &mut ctx);
+        let res = beam_search(&store, &adj, 0, &[f32::NAN], 2, &mut ctx);
         assert!(res.len() <= 2);
     }
 }

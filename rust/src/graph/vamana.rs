@@ -6,9 +6,10 @@
 use crate::core::distance::l2_sq;
 use crate::core::matrix::Matrix;
 use crate::core::rng::Pcg32;
+use crate::core::store::VectorStore;
 use crate::graph::adjacency::FlatAdj;
 use crate::graph::earlyterm::beam_search_early_term;
-use crate::graph::search::{beam_search, Neighbor};
+use crate::graph::search::{beam_search_filtered, AllLive, Neighbor};
 use crate::index::context::{SearchContext, SearchParams};
 
 #[derive(Clone, Debug)]
@@ -42,8 +43,15 @@ pub struct Vamana {
 }
 
 impl Vamana {
+    /// Build over `data`, padding it into a throwaway store; callers that
+    /// keep a [`VectorStore`] use [`Vamana::build_with_store`].
     pub fn build(data: &Matrix, params: VamanaParams) -> Vamana {
-        let n = data.rows();
+        let store = VectorStore::from_matrix(data);
+        Vamana::build_with_store(&store, params)
+    }
+
+    pub fn build_with_store(store: &VectorStore, params: VamanaParams) -> Vamana {
+        let n = store.rows();
         assert!(n > 0);
         let mut rng = Pcg32::new(params.seed);
 
@@ -60,7 +68,7 @@ impl Vamana {
             adj.set(u, &picks);
         }
 
-        let medoid = find_medoid(data, &mut rng);
+        let medoid = find_medoid(store, &mut rng);
         let mut g = Vamana { params, adj, medoid };
 
         let mut ctx = SearchContext::for_universe(n);
@@ -68,60 +76,72 @@ impl Vamana {
         for _pass in 0..g.params.passes {
             rng.shuffle(&mut order);
             for &u in &order {
-                let q = data.row(u as usize);
-                let mut found = beam_search(data, &g.adj, g.medoid, q, g.params.l, &mut ctx);
+                let q = store.row_logical(u as usize);
+                let mut found = beam_search_filtered(
+                    store, &g.adj, g.medoid, q, g.params.l, &AllLive, true, &mut ctx,
+                );
                 found.retain(|c| c.id != u);
-                let pruned = robust_prune(data, u, &found, g.params.alpha, g.params.r);
+                let pruned = robust_prune(store, u, &found, g.params.alpha, g.params.r);
                 let list: Vec<u32> = pruned.iter().map(|c| c.id).collect();
                 g.adj.set(u, &list);
                 // Backward edges with pruning on overflow.
                 for c in pruned {
-                    g.add_edge_with_prune(data, c.id, u);
+                    g.add_edge_with_prune(store, c.id, u);
                 }
             }
         }
         g
     }
 
-    fn add_edge_with_prune(&mut self, data: &Matrix, u: u32, v: u32) {
+    fn add_edge_with_prune(&mut self, store: &VectorStore, u: u32, v: u32) {
         if self.adj.contains(u, v) {
             return;
         }
         if self.adj.push(u, v) {
             return;
         }
-        let xu = data.row(u as usize);
+        let xu = store.row(u as usize);
         let mut cands: Vec<Neighbor> = self
             .adj
             .neighbors(u)
             .iter()
             .map(|&w| Neighbor {
-                dist: l2_sq(xu, data.row(w as usize)),
+                dist: l2_sq(xu, store.row(w as usize)),
                 id: w,
             })
             .collect();
         cands.push(Neighbor {
-            dist: l2_sq(xu, data.row(v as usize)),
+            dist: l2_sq(xu, store.row(v as usize)),
             id: v,
         });
         cands.sort();
-        let pruned = robust_prune(data, u, &cands, self.params.alpha, self.params.r);
+        let pruned = robust_prune(store, u, &cands, self.params.alpha, self.params.r);
         let list: Vec<u32> = pruned.iter().map(|c| c.id).collect();
         self.adj.set(u, &list);
     }
 
-    /// Beam search from the medoid; honors `params.patience` when set.
+    /// Beam search from the medoid; honors `params.patience` and
+    /// `params.scalar_kernels` when set.
     pub fn search(
         &self,
-        data: &Matrix,
+        store: &VectorStore,
         q: &[f32],
         params: &SearchParams,
         ctx: &mut SearchContext,
     ) -> Vec<Neighbor> {
         let ef = params.beam_width();
         let mut res = match params.patience {
-            Some(p) => beam_search_early_term(data, &self.adj, self.medoid, q, ef, p, ctx),
-            None => beam_search(data, &self.adj, self.medoid, q, ef, ctx),
+            Some(p) => beam_search_early_term(store, &self.adj, self.medoid, q, ef, p, ctx),
+            None => beam_search_filtered(
+                store,
+                &self.adj,
+                self.medoid,
+                q,
+                ef,
+                &AllLive,
+                !params.scalar_kernels,
+                ctx,
+            ),
         };
         res.truncate(params.k);
         res
@@ -130,13 +150,13 @@ impl Vamana {
 
 /// Approximate medoid: the sample point minimizing distance to a random
 /// probe set (exact medoid is O(n^2)).
-fn find_medoid(data: &Matrix, rng: &mut Pcg32) -> u32 {
-    let n = data.rows();
+fn find_medoid(store: &VectorStore, rng: &mut Pcg32) -> u32 {
+    let n = store.rows();
     let probes: Vec<usize> = (0..64.min(n)).map(|_| rng.gen_range(n)).collect();
     let cands: Vec<usize> = (0..256.min(n)).map(|_| rng.gen_range(n)).collect();
     let mut best = (f32::INFINITY, 0u32);
     for &c in &cands {
-        let s: f32 = probes.iter().map(|&p| l2_sq(data.row(c), data.row(p))).sum();
+        let s: f32 = probes.iter().map(|&p| l2_sq(store.row(c), store.row(p))).sum();
         if s < best.0 {
             best = (s, c as u32);
         }
@@ -146,7 +166,7 @@ fn find_medoid(data: &Matrix, rng: &mut Pcg32) -> u32 {
 
 /// DiskANN's alpha-RobustPrune over a candidate list sorted ascending.
 pub fn robust_prune(
-    data: &Matrix,
+    store: &VectorStore,
     u: u32,
     cands: &[Neighbor],
     alpha: f32,
@@ -165,13 +185,13 @@ pub fn robust_prune(
         if kept.len() >= r {
             break;
         }
-        let xp = data.row(pool[i].id as usize);
+        let xp = store.row(pool[i].id as usize);
         for (j, c) in pool.iter().enumerate().skip(i + 1) {
             if removed[j] {
                 continue;
             }
             // Remove c if p is sufficiently closer to c than u is.
-            if alpha * l2_sq(xp, data.row(c.id as usize)) <= c.dist {
+            if alpha * l2_sq(xp, store.row(c.id as usize)) <= c.dist {
                 removed[j] = true;
             }
         }
@@ -189,13 +209,14 @@ mod tests {
     #[test]
     fn reasonable_recall_on_tiny() {
         let ds = tiny(21, 600, 16, Metric::L2);
-        let v = Vamana::build(&ds.data, VamanaParams::default());
+        let store = VectorStore::from_matrix(&ds.data);
+        let v = Vamana::build_with_store(&store, VamanaParams::default());
         let gt = exact_knn(&ds.data, &ds.queries, 10);
         let mut ctx = SearchContext::new();
         let params = SearchParams::new(10).with_ef(80);
         let mut total = 0.0;
         for qi in 0..ds.queries.rows() {
-            let res = v.search(&ds.data, ds.queries.row(qi), &params, &mut ctx);
+            let res = v.search(&store, ds.queries.row(qi), &params, &mut ctx);
             let hits = res.iter().filter(|n| gt[qi].contains(&n.id)).count();
             total += hits as f64 / 10.0;
         }
@@ -230,12 +251,13 @@ mod tests {
             vec![1.1, 0.0],
             vec![0.0, 2.0],
         ]);
+        let store = VectorStore::from_matrix(&data);
         let q = data.row(0);
         let mut cands: Vec<Neighbor> = (1..4u32)
             .map(|i| Neighbor { dist: l2_sq(q, data.row(i as usize)), id: i })
             .collect();
         cands.sort();
-        let kept = robust_prune(&data, 0, &cands, 1.2, 2);
+        let kept = robust_prune(&store, 0, &cands, 1.2, 2);
         // Nearest (id 1) always kept; id 2 dominated by id 1.
         assert_eq!(kept[0].id, 1);
         assert!(kept.iter().any(|c| c.id == 3));

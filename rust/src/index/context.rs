@@ -36,6 +36,11 @@ pub struct SearchParams {
     pub rerank: bool,
     /// IVF-PQ: shortlist depth kept for re-ranking (0 = auto, `10 * k`).
     pub rerank_depth: usize,
+    /// Force the one-neighbor-at-a-time distance kernels instead of the
+    /// default 4-row batched scoring. The two paths return bitwise-identical
+    /// result streams (enforced by tests); this knob exists so the hotpath
+    /// benchmark and the equality tests can time/compare both.
+    pub scalar_kernels: bool,
 }
 
 impl SearchParams {
@@ -47,6 +52,7 @@ impl SearchParams {
             n_probe: 8,
             rerank: true,
             rerank_depth: 0,
+            scalar_kernels: false,
         }
     }
 
@@ -72,6 +78,12 @@ impl SearchParams {
 
     pub fn with_rerank_depth(mut self, depth: usize) -> SearchParams {
         self.rerank_depth = depth;
+        self
+    }
+
+    /// Use scalar (unbatched) distance scoring in the graph beam search.
+    pub fn with_scalar_kernels(mut self, scalar: bool) -> SearchParams {
+        self.scalar_kernels = scalar;
         self
     }
 
@@ -109,6 +121,17 @@ pub struct SearchContext {
     pub top: BinaryHeap<Neighbor>,
     /// Scratch candidate pool (IVF-PQ ADC shortlist, rerank staging).
     pub pool: Vec<Neighbor>,
+    /// Lane-padded query scratch (see `VectorStore::pad_query`): padded
+    /// once per search, so scoring against padded rows needs no per-call
+    /// tail handling or allocation.
+    pub qbuf: Vec<f32>,
+    /// Gathered unvisited neighbors of the node being expanded (the block
+    /// the batched kernels score 4 at a time).
+    pub block: Vec<u32>,
+    /// FINGER edge slots matching `block` entry-for-entry.
+    pub slots: Vec<usize>,
+    /// Distances matching `block` entry-for-entry.
+    pub dists: Vec<f32>,
     /// Accumulated instrumentation; only written when `stats_enabled`.
     pub stats: SearchStats,
     /// Toggle for stats recording (off = zero bookkeeping on the hot path).
@@ -123,6 +146,10 @@ impl SearchContext {
             cands: BinaryHeap::new(),
             top: BinaryHeap::new(),
             pool: Vec::new(),
+            qbuf: Vec::new(),
+            block: Vec::new(),
+            slots: Vec::new(),
+            dists: Vec::new(),
             stats: SearchStats::default(),
             stats_enabled: false,
         }
@@ -201,6 +228,9 @@ mod tests {
         assert_eq!(p.rerank_width(), 7);
         let p = p.with_rerank(false);
         assert!(!p.rerank);
+        assert!(!p.scalar_kernels);
+        let p = p.with_scalar_kernels(true);
+        assert!(p.scalar_kernels);
     }
 
     #[test]

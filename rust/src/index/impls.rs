@@ -4,11 +4,20 @@
 //! family modules keep their borrowed-data search methods; these wrappers
 //! are the self-contained objects the server, sweeps, CLI, and
 //! persistence operate on.
+//!
+//! Every search-bearing wrapper additionally owns a
+//! [`VectorStore`] — the padded, aligned query-time copy of the rows its
+//! hot loops score against. The `Matrix` stays the build/IO/persistence
+//! container; the store is rebuilt from it on load and compaction and
+//! extended in lockstep on insert. Padding is numerically invisible (see
+//! `core::distance`), so store-backed searches return bit-identical
+//! results to matrix-backed ones.
 
 use std::io;
 use std::sync::Arc;
 
 use crate::core::matrix::Matrix;
+use crate::core::store::VectorStore;
 use crate::data::io::BinWriter;
 use crate::data::persist;
 use crate::finger::construct::{FingerIndex, FingerParams};
@@ -103,9 +112,11 @@ pub fn build_all_families(data: Arc<Matrix>) -> Vec<Box<dyn AnnIndex>> {
 
 /// Exact linear scan — the reference implementor every other family is
 /// conformance-tested against. Fully mutable: inserts append rows,
-/// deletes tombstone them out of the scan, compaction drops them.
+/// deletes tombstone them out of the scan, compaction drops them. The
+/// scan itself runs batched over the padded store.
 pub struct BruteForce {
     pub data: Arc<Matrix>,
+    store: VectorStore,
     live: LiveIds,
     compact_threshold: f64,
 }
@@ -113,7 +124,8 @@ pub struct BruteForce {
 impl BruteForce {
     pub fn new(data: Arc<Matrix>) -> BruteForce {
         let live = LiveIds::fresh(data.rows());
-        BruteForce { data, live, compact_threshold: DEFAULT_COMPACT_THRESHOLD }
+        let store = VectorStore::from_matrix(&data);
+        BruteForce { data, store, live, compact_threshold: DEFAULT_COMPACT_THRESHOLD }
     }
 
     /// Restore persisted mutation state (the v5 loader's entry).
@@ -125,6 +137,10 @@ impl BruteForce {
 
     pub fn live(&self) -> &LiveIds {
         &self.live
+    }
+
+    pub fn store(&self) -> &VectorStore {
+        &self.store
     }
 }
 
@@ -154,12 +170,12 @@ impl AnnIndex for BruteForce {
             if ctx.stats_enabled {
                 ctx.stats.dist_calls += self.data.rows() as u64;
             }
-            return scan(&self.data, q, params.k);
+            return scan(&self.store, q, params.k);
         }
         if ctx.stats_enabled {
             ctx.stats.dist_calls += self.live.live_len() as u64;
         }
-        scan_live(&self.data, q, params.k, &self.live)
+        scan_live(&self.store, q, params.k, &self.live)
     }
 
     fn as_mutable(&mut self) -> Option<&mut dyn MutableAnnIndex> {
@@ -185,6 +201,7 @@ impl MutableAnnIndex for BruteForce {
             return Err(MutateError::DimMismatch { got: v.len(), want: self.data.cols() });
         }
         Arc::make_mut(&mut self.data).push_row(v);
+        self.store.push_row(v);
         Ok(self.live.alloc())
     }
 
@@ -193,6 +210,7 @@ impl MutableAnnIndex for BruteForce {
             return Ok(false);
         }
         self.data = gather_rows(&self.data, &self.live.compact_plan());
+        self.store = VectorStore::from_matrix(&self.data);
         self.live.apply_compact();
         Ok(true)
     }
@@ -208,19 +226,23 @@ impl MutableAnnIndex for BruteForce {
 pub struct HnswIndex {
     pub data: Arc<Matrix>,
     pub graph: Hnsw,
+    store: VectorStore,
     live: LiveIds,
     compact_threshold: f64,
 }
 
 impl HnswIndex {
     pub fn build(data: Arc<Matrix>, params: HnswParams) -> HnswIndex {
-        let graph = Hnsw::build(&data, params);
-        HnswIndex::from_parts(data, graph)
+        let store = VectorStore::from_matrix(&data);
+        let graph = Hnsw::build_with_store(&store, params);
+        let live = LiveIds::fresh(data.rows());
+        HnswIndex { data, graph, store, live, compact_threshold: DEFAULT_COMPACT_THRESHOLD }
     }
 
     pub fn from_parts(data: Arc<Matrix>, graph: Hnsw) -> HnswIndex {
+        let store = VectorStore::from_matrix(&data);
         let live = LiveIds::fresh(data.rows());
-        HnswIndex { data, graph, live, compact_threshold: DEFAULT_COMPACT_THRESHOLD }
+        HnswIndex { data, graph, store, live, compact_threshold: DEFAULT_COMPACT_THRESHOLD }
     }
 
     /// Restore persisted mutation state (the v5 loader's entry).
@@ -232,6 +254,12 @@ impl HnswIndex {
 
     pub fn live(&self) -> &LiveIds {
         &self.live
+    }
+
+    /// The padded query-time store (for callers that drive the family
+    /// search methods directly, e.g. benches).
+    pub fn store(&self) -> &VectorStore {
+        &self.store
     }
 }
 
@@ -258,12 +286,12 @@ impl AnnIndex for HnswIndex {
 
     fn search(&self, q: &[f32], params: &SearchParams, ctx: &mut SearchContext) -> Vec<Neighbor> {
         if self.live.is_identity() {
-            return self.graph.search(&self.data, q, params, ctx);
+            return self.graph.search(&self.store, q, params, ctx);
         }
         let mut res = if self.live.any_dead() {
-            self.graph.search_live(&self.data, q, params, &self.live, ctx)
+            self.graph.search_live(&self.store, q, params, &self.live, ctx)
         } else {
-            self.graph.search(&self.data, q, params, ctx)
+            self.graph.search(&self.store, q, params, ctx)
         };
         self.live.remap_rows_to_external(&mut res);
         res
@@ -294,8 +322,9 @@ impl MutableAnnIndex for HnswIndex {
         }
         let row = self.data.rows() as u32;
         Arc::make_mut(&mut self.data).push_row(v);
+        self.store.push_row(v);
         let id = self.live.alloc();
-        self.graph.insert_node(&self.data, row, ctx);
+        self.graph.insert_node(&self.store, row, ctx);
         Ok(id)
     }
 
@@ -306,7 +335,8 @@ impl MutableAnnIndex for HnswIndex {
             return Ok(false);
         }
         let data = gather_rows(&self.data, &self.live.compact_plan());
-        self.graph = Hnsw::build(&data, self.graph.params.clone());
+        self.store = VectorStore::from_matrix(&data);
+        self.graph = Hnsw::build_with_store(&self.store, self.graph.params.clone());
         self.data = data;
         self.live.apply_compact();
         Ok(true)
@@ -323,6 +353,7 @@ impl MutableAnnIndex for HnswIndex {
 pub struct FingerHnswIndex {
     pub data: Arc<Matrix>,
     pub inner: FingerHnsw,
+    store: VectorStore,
     live: LiveIds,
     compact_threshold: f64,
 }
@@ -333,13 +364,16 @@ impl FingerHnswIndex {
         hnsw_params: HnswParams,
         finger_params: FingerParams,
     ) -> FingerHnswIndex {
-        let inner = FingerHnsw::build(&data, hnsw_params, finger_params);
-        FingerHnswIndex::from_parts(data, inner)
+        let store = VectorStore::from_matrix(&data);
+        let inner = FingerHnsw::build_with_store(&data, &store, hnsw_params, finger_params);
+        let live = LiveIds::fresh(data.rows());
+        FingerHnswIndex { data, inner, store, live, compact_threshold: DEFAULT_COMPACT_THRESHOLD }
     }
 
     pub fn from_parts(data: Arc<Matrix>, inner: FingerHnsw) -> FingerHnswIndex {
+        let store = VectorStore::from_matrix(&data);
         let live = LiveIds::fresh(data.rows());
-        FingerHnswIndex { data, inner, live, compact_threshold: DEFAULT_COMPACT_THRESHOLD }
+        FingerHnswIndex { data, inner, store, live, compact_threshold: DEFAULT_COMPACT_THRESHOLD }
     }
 
     /// Restore persisted mutation state (the v5 loader's entry).
@@ -351,6 +385,12 @@ impl FingerHnswIndex {
 
     pub fn live(&self) -> &LiveIds {
         &self.live
+    }
+
+    /// The padded query-time store (for callers that drive the family
+    /// search methods directly, e.g. benches and the quickstart example).
+    pub fn store(&self) -> &VectorStore {
+        &self.store
     }
 }
 
@@ -381,12 +421,12 @@ impl AnnIndex for FingerHnswIndex {
 
     fn search(&self, q: &[f32], params: &SearchParams, ctx: &mut SearchContext) -> Vec<Neighbor> {
         if self.live.is_identity() {
-            return self.inner.search(&self.data, q, params, ctx);
+            return self.inner.search(&self.store, q, params, ctx);
         }
         let mut res = if self.live.any_dead() {
-            self.inner.search_live(&self.data, q, params, &self.live, ctx)
+            self.inner.search_live(&self.store, q, params, &self.live, ctx)
         } else {
-            self.inner.search(&self.data, q, params, ctx)
+            self.inner.search(&self.store, q, params, ctx)
         };
         self.live.remap_rows_to_external(&mut res);
         res
@@ -418,8 +458,9 @@ impl MutableAnnIndex for FingerHnswIndex {
         }
         let row = self.data.rows() as u32;
         Arc::make_mut(&mut self.data).push_row(v);
+        self.store.push_row(v);
         let id = self.live.alloc();
-        let touched = self.inner.hnsw.insert_node(&self.data, row, ctx);
+        let touched = self.inner.hnsw.insert_node(&self.store, row, ctx);
         self.inner
             .index
             .append_node(&self.data, row, self.inner.hnsw.base.cap());
@@ -440,7 +481,9 @@ impl MutableAnnIndex for FingerHnswIndex {
         let finger_params = self.inner.index.params.clone();
         // Full retrain: fresh graph + fresh FINGER residual bases fit to
         // the live distribution.
-        self.inner = FingerHnsw::build(&data, hnsw_params, finger_params);
+        self.store = VectorStore::from_matrix(&data);
+        self.inner =
+            FingerHnsw::build_with_store(&data, &self.store, hnsw_params, finger_params);
         self.data = data;
         self.live.apply_compact();
         Ok(true)
@@ -449,11 +492,13 @@ impl MutableAnnIndex for FingerHnswIndex {
     delegate_live_bookkeeping!();
 }
 
-/// Borrowing FINGER adapter: one shared HNSW graph, many FINGER/RPLSH
-/// side-index variants — the Figure 6 ablation shape. Searchable through
-/// `&dyn AnnIndex` like everything else, without moving the graph.
+/// Borrowing FINGER adapter: one shared HNSW graph (and one shared padded
+/// store), many FINGER/RPLSH side-index variants — the Figure 6 ablation
+/// shape. Searchable through `&dyn AnnIndex` like everything else,
+/// without moving the graph.
 pub struct FingerView<'a> {
     pub data: &'a Matrix,
+    pub store: &'a VectorStore,
     pub hnsw: &'a Hnsw,
     pub findex: &'a FingerIndex,
     /// Label shown by sweeps ("finger", "rplsh", ...).
@@ -486,7 +531,7 @@ impl AnnIndex for FingerView<'_> {
     }
 
     fn search(&self, q: &[f32], params: &SearchParams, ctx: &mut SearchContext) -> Vec<Neighbor> {
-        search_hnsw_with_index(self.hnsw, self.findex, self.data, q, params, ctx)
+        search_hnsw_with_index(self.hnsw, self.findex, self.store, q, params, ctx)
     }
 
     fn kind_tag(&self) -> u64 {
@@ -506,16 +551,19 @@ impl AnnIndex for FingerView<'_> {
 pub struct VamanaIndex {
     pub data: Arc<Matrix>,
     pub graph: Vamana,
+    store: VectorStore,
 }
 
 impl VamanaIndex {
     pub fn build(data: Arc<Matrix>, params: VamanaParams) -> VamanaIndex {
-        let graph = Vamana::build(&data, params);
-        VamanaIndex { data, graph }
+        let store = VectorStore::from_matrix(&data);
+        let graph = Vamana::build_with_store(&store, params);
+        VamanaIndex { data, graph, store }
     }
 
     pub fn from_parts(data: Arc<Matrix>, graph: Vamana) -> VamanaIndex {
-        VamanaIndex { data, graph }
+        let store = VectorStore::from_matrix(&data);
+        VamanaIndex { data, graph, store }
     }
 }
 
@@ -541,7 +589,7 @@ impl AnnIndex for VamanaIndex {
     }
 
     fn search(&self, q: &[f32], params: &SearchParams, ctx: &mut SearchContext) -> Vec<Neighbor> {
-        self.graph.search(&self.data, q, params, ctx)
+        self.graph.search(&self.store, q, params, ctx)
     }
 
     fn kind_tag(&self) -> u64 {
@@ -557,16 +605,19 @@ impl AnnIndex for VamanaIndex {
 pub struct NnDescentIndex {
     pub data: Arc<Matrix>,
     pub graph: NnDescent,
+    store: VectorStore,
 }
 
 impl NnDescentIndex {
     pub fn build(data: Arc<Matrix>, params: NnDescentParams) -> NnDescentIndex {
-        let graph = NnDescent::build(&data, params);
-        NnDescentIndex { data, graph }
+        let store = VectorStore::from_matrix(&data);
+        let graph = NnDescent::build_with_store(&store, params);
+        NnDescentIndex { data, graph, store }
     }
 
     pub fn from_parts(data: Arc<Matrix>, graph: NnDescent) -> NnDescentIndex {
-        NnDescentIndex { data, graph }
+        let store = VectorStore::from_matrix(&data);
+        NnDescentIndex { data, graph, store }
     }
 }
 
@@ -592,7 +643,7 @@ impl AnnIndex for NnDescentIndex {
     }
 
     fn search(&self, q: &[f32], params: &SearchParams, ctx: &mut SearchContext) -> Vec<Neighbor> {
-        self.graph.search(&self.data, q, params, ctx)
+        self.graph.search(&self.store, q, params, ctx)
     }
 
     fn kind_tag(&self) -> u64 {

@@ -17,6 +17,12 @@
 //! survives (see `graph::search::beam_search_live`). `compact()` rebuilds
 //! once the tombstone fraction crosses a threshold; the FINGER family
 //! re-trains its residual bases on the live set when it does.
+//!
+//! Implementors keep their padded query-time
+//! [`VectorStore`](crate::core::store::VectorStore) in lockstep with the
+//! data matrix: inserts push the row into both, compaction rebuilds the
+//! store from the gathered survivors — so the mutable search paths score
+//! against the same aligned, tail-free rows as the static ones.
 
 use std::fmt;
 use std::io;

@@ -716,6 +716,7 @@ pub fn build_all_families_sharded(data: Arc<Matrix>, n_shards: usize) -> Vec<Box
 mod tests {
     use super::*;
     use crate::core::distance::Metric;
+    use crate::core::store::VectorStore;
     use crate::data::synth::tiny;
     use crate::graph::bruteforce::scan;
     use crate::index::impls::BruteForce;
@@ -774,6 +775,7 @@ mod tests {
     #[test]
     fn sharded_bruteforce_is_exact() {
         let ds = tiny(804, 300, 12, Metric::L2);
+        let store = VectorStore::from_matrix(&ds.data);
         for s in [1usize, 3, 7] {
             let spec = ShardSpec { n_shards: s, ..Default::default() };
             let idx = sharded_bf(&ds, &spec);
@@ -782,7 +784,7 @@ mod tests {
             for qi in 0..ds.queries.rows() {
                 let q = ds.queries.row(qi);
                 let got = idx.search(q, &params, &mut ctx);
-                let want = scan(&ds.data, q, 10);
+                let want = scan(&store, q, 10);
                 assert_eq!(got, want, "S={s} query {qi}");
             }
         }
@@ -827,13 +829,14 @@ mod tests {
             ..Default::default()
         };
         let idx = sharded_bf(&ds, &spec).with_min_shard_frac(0.5);
+        let store = VectorStore::from_matrix(&ds.data);
         let mut ctx = SearchContext::new();
         let params = SearchParams::new(10);
         let mut total = 0.0;
         for qi in 0..ds.queries.rows() {
             let q = ds.queries.row(qi);
             let got = idx.search(q, &params, &mut ctx);
-            let want = scan(&ds.data, q, 10);
+            let want = scan(&store, q, 10);
             let hits = got.iter().filter(|n| want.iter().any(|w| w.id == n.id)).count();
             total += hits as f64 / 10.0;
         }
@@ -892,10 +895,11 @@ mod tests {
         assert_eq!(idx.live_len(), 120);
         assert_eq!(idx.len(), 120);
         assert_eq!(idx.remove(120), Err(MutateError::UnknownId(120)), "id reclaimed");
+        let store = VectorStore::from_matrix(&ds.data);
         for qi in 0..4 {
             let q = ds.queries.row(qi);
             let got = idx.search(q, &SearchParams::new(5), &mut ctx);
-            assert_eq!(got, scan(&ds.data, q, 5), "query {qi}");
+            assert_eq!(got, scan(&store, q, 5), "query {qi}");
         }
     }
 

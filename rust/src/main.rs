@@ -15,7 +15,8 @@
 //!   finger serve      --dataset sift-sim-128 --method ivfpq --addr 127.0.0.1:7771
 //!   finger serve      --index index.bin [--rerank]
 //!   finger bench      <figure1|figure2|figure3|figure4|figure5|figure6|
-//!                      figure7|figure8|table1|rank-selection|all>
+//!                      figure7|figure8|table1|rank-selection|churn|
+//!                      hotpath|all>
 //!                     [--scale 1.0] [--out results/]
 //!   finger info       # artifacts manifest summary
 
@@ -75,7 +76,7 @@ fn help() {
          \u{20}  update   --vector \"v1,v2,...\" [--addr A]   (insert into a running server)\n\
          \u{20}  delete   --key ID [--addr A]               (tombstone a served point)\n\
          \u{20}  compact  [--addr A]                        (reclaim tombstones if over threshold)\n\
-         \u{20}  bench    FIGURE [--scale F] [--out DIR]   (figure1..figure8, table1, rank-selection, churn, all)\n\
+         \u{20}  bench    FIGURE [--scale F] [--out DIR]   (figure1..figure8, table1, rank-selection, churn, hotpath, all)\n\
          \u{20}  info\n\
          sharding (build/search/serve): --shards S [--shard-strategy round-robin|kmeans]\n\
          \u{20}                         [--min-shard-frac F]   (probe the nearest F·S shards, 0<F<=1)"
@@ -438,6 +439,11 @@ fn bench(args: &Args) {
         "table1" => figures::table1(&out, scale),
         "rank-selection" => figures::rank_selection(&out, scale),
         "churn" => bench_churn(&out, scale),
+        // Hot-path data-plane microharness (padded store + batched
+        // kernels): scalar-vs-batched ns/dist and QPS for flat HNSW and
+        // FINGER-HNSW, written as BENCH_hotpath.json for the perf
+        // trajectory CI records every PR.
+        "hotpath" => finger_ann::eval::hotpath::bench_hotpath(&out, scale),
         "all" => {
             figures::figure2(&out, scale);
             figures::figure3(&out, scale);
@@ -449,6 +455,7 @@ fn bench(args: &Args) {
             figures::table1(&out, scale);
             figures::rank_selection(&out, scale);
             bench_churn(&out, scale);
+            finger_ann::eval::hotpath::bench_hotpath(&out, scale);
         }
         other => {
             eprintln!("unknown bench '{other}'");

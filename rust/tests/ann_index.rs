@@ -8,13 +8,15 @@
 use std::sync::Arc;
 
 use finger_ann::core::distance::{l2_sq, Metric};
+use finger_ann::core::matrix::Matrix;
 use finger_ann::data::groundtruth::exact_knn;
 use finger_ann::data::synth::{tiny, Dataset};
+use finger_ann::finger::construct::FingerParams;
 use finger_ann::graph::hnsw::HnswParams;
 use finger_ann::graph::nndescent::NnDescentParams;
 use finger_ann::graph::search::Neighbor;
 use finger_ann::graph::vamana::VamanaParams;
-use finger_ann::index::impls::{BruteForce, HnswIndex, NnDescentIndex, VamanaIndex};
+use finger_ann::index::impls::{BruteForce, FingerHnswIndex, HnswIndex, NnDescentIndex, VamanaIndex};
 use finger_ann::index::{
     build_all_families, build_all_families_sharded, AnnIndex, MutateError, SearchContext,
     SearchParams,
@@ -276,6 +278,75 @@ fn mutation_lifecycle_conformance() {
     expect.sort_unstable();
     seen_mutable.sort_unstable();
     assert_eq!(seen_mutable, expect, "mutable family set drifted");
+}
+
+/// The batched-data-plane acceptance criterion, end to end through the
+/// public `AnnIndex` API: plain beam search and FINGER-screened search
+/// return bitwise-identical (dist, id) streams under batched vs scalar
+/// scoring — on seeded datasets with a non-lane-multiple dimension, a NaN
+/// row (ties and NaN ordering included), and across the tombstone-aware
+/// live paths after online mutation.
+#[test]
+fn batched_and_scalar_search_streams_bitwise_identical() {
+    let ds = tiny(610, 500, 12, Metric::L2); // dim 12: lane-folded tail in play
+    let mut poisoned: Matrix = (*ds.data).clone();
+    poisoned.row_mut(123)[7] = f32::NAN; // corrupt row must order identically
+    let data = Arc::new(poisoned);
+
+    let mut indexes: Vec<Box<dyn AnnIndex>> = vec![
+        Box::new(HnswIndex::build(
+            Arc::clone(&data),
+            HnswParams { m: 10, ef_construction: 70, ..Default::default() },
+        )),
+        Box::new(FingerHnswIndex::build(
+            Arc::clone(&data),
+            HnswParams { m: 10, ef_construction: 70, ..Default::default() },
+            FingerParams { rank: 8, ..Default::default() },
+        )),
+        Box::new(VamanaIndex::build(
+            Arc::clone(&data),
+            VamanaParams { r: 16, ..Default::default() },
+        )),
+        Box::new(NnDescentIndex::build(Arc::clone(&data), NnDescentParams::default())),
+    ];
+
+    let mut ctx = SearchContext::new();
+    let compare_all = |index: &dyn AnnIndex, ctx: &mut SearchContext, phase: &str| {
+        for ef in [5usize, 30, 120] {
+            let batched = SearchParams::new(10).with_ef(ef);
+            let scalar = SearchParams::new(10).with_ef(ef).with_scalar_kernels(true);
+            for qi in 0..ds.queries.rows() {
+                let q = ds.queries.row(qi);
+                let a = index.search(q, &batched, ctx);
+                let b = index.search(q, &scalar, ctx);
+                // Neighbor equality goes through f32::total_cmp, so equal
+                // streams mean bitwise-equal distances and ids.
+                assert_eq!(a, b, "{} [{phase}] ef={ef} query {qi}", index.name());
+            }
+        }
+    };
+
+    for index in &indexes {
+        compare_all(index.as_ref(), &mut ctx, "static");
+    }
+
+    // Mutate the mutable families (tombstones + an append) and compare the
+    // live search paths too.
+    for index in indexes.iter_mut() {
+        let name = index.name();
+        let Some(m) = index.as_mutable() else { continue };
+        let v: Vec<f32> = (0..12).map(|j| 30.0 + j as f32).collect();
+        m.insert(&v, &mut ctx).unwrap();
+        for dead in [0u32, 7, 123, 250] {
+            m.remove(dead).unwrap();
+        }
+        assert_eq!(m.live_len(), 497, "{name}");
+    }
+    for index in &indexes {
+        if index.as_mutable_view().is_some() {
+            compare_all(index.as_ref(), &mut ctx, "live");
+        }
+    }
 }
 
 #[test]

@@ -17,6 +17,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use finger_ann::core::matrix::Matrix;
+use finger_ann::core::store::VectorStore;
 use finger_ann::data::persist::{load_index, save_index};
 use finger_ann::graph::bruteforce::scan;
 use finger_ann::index::impls::BruteForce;
@@ -96,9 +97,10 @@ fn v4_sharded_fixture_loads_identical_to_fresh_scan() {
 
     let mut ctx = SearchContext::new();
     let params = SearchParams::new(4);
+    let store = VectorStore::from_matrix(&want);
     for (i, q) in probes().iter().enumerate() {
         let got = loaded.search(q, &params, &mut ctx);
-        let exact = scan(&want, q, 4);
+        let exact = scan(&store, q, 4);
         assert_eq!(got, exact, "probe {i}: full-probe sharded != exact scan");
     }
     let view = loaded.as_mutable_view().expect("sharded bruteforce is mutable");

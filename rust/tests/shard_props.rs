@@ -16,6 +16,7 @@ use std::sync::Arc;
 use finger_ann::core::distance::{l2_sq, Metric};
 use finger_ann::core::matrix::Matrix;
 use finger_ann::core::rng::Pcg32;
+use finger_ann::core::store::VectorStore;
 use finger_ann::data::groundtruth::exact_knn;
 use finger_ann::data::persist::{load_index, save_index};
 use finger_ann::data::synth::tiny;
@@ -59,12 +60,13 @@ fn merged_topk_equals_bruteforce_over_union() {
         let data = random_matrix(rng, n, dim);
         let spec = ShardSpec { n_shards: s, strategy, ..Default::default() };
         let idx = sharded_bruteforce(&data, &spec);
+        let store = VectorStore::from_matrix(&data);
         let mut ctx = SearchContext::new();
         let params = SearchParams::new(k);
         for _ in 0..4 {
             let q = vec_f32(rng, dim);
             let got = idx.search(&q, &params, &mut ctx);
-            let want = scan(&data, &q, k);
+            let want = scan(&store, &q, k);
             if got != want {
                 return false;
             }
@@ -127,12 +129,13 @@ fn merge_is_stable_under_ties() {
         let s = 2 + rng.gen_range(5);
         let spec = ShardSpec { n_shards: s, ..Default::default() };
         let idx = sharded_bruteforce(&data, &spec);
+        let store = VectorStore::from_matrix(&data);
         let mut ctx = SearchContext::new();
         let k = copies * 2 + 1; // forces tie groups to be split at k
         let params = SearchParams::new(k);
         for p in protos.iter().take(4) {
             let got = idx.search(p, &params, &mut ctx);
-            let want = scan(&data, p, k);
+            let want = scan(&store, p, k);
             if got != want {
                 return false;
             }
