@@ -33,6 +33,10 @@ fn bench<F: FnMut() -> f32>(name: &str, iters: usize, mut f: F) {
 }
 
 fn main() {
+    println!(
+        "kernel backend: {} (set FINGER_KERNEL=scalar to force the fallback)",
+        finger_ann::core::distance::kernel_backend().name()
+    );
     let mut rng = Pcg32::new(1);
     for dim in [96usize, 128, 256, 784, 960] {
         let a: Vec<f32> = (0..dim).map(|_| rng.next_gaussian()).collect();

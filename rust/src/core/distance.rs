@@ -1,9 +1,13 @@
 //! Distance kernels — the innermost loops of the whole system.
 //!
 //! Hardware adaptation (DESIGN.md §4): the paper's AVX2 C++ uses explicit
-//! 8-lane f32 intrinsics. Here the loops are written over fixed-width
-//! chunks so LLVM reliably auto-vectorizes them; `l2_sq` and `dot` compile
-//! to the same packed-FMA bodies on x86-64 and aarch64.
+//! 8-lane f32 intrinsics. Since this PR the same is true here: every entry
+//! point below dispatches through [`crate::core::simd::kernels`] to an
+//! explicit-intrinsics backend selected once at startup (x86_64 AVX2+FMA,
+//! aarch64 NEON, or the portable scalar reference — `FINGER_KERNEL=scalar`
+//! forces the fallback). All backends share the same accumulator layout
+//! and horizontal-reduction order, so the choice is **bitwise invisible**:
+//! every strict `(dist, id)`-equality suite passes under any backend.
 //!
 //! ## The padded-store fast path
 //!
@@ -13,15 +17,21 @@
 //! zero-padded inputs, which is exactly what
 //! [`VectorStore`](crate::core::store::VectorStore) holds: rows padded to
 //! the lane width in aligned storage. Search paths score padded queries
-//! against padded rows, so the hot loop has no tail branch at all, and the
-//! batched kernels ([`l2_sq_batch4`], [`dot_batch4`]) compute one query
-//! against 4 rows per pass — the query chunk is loaded once and the four
-//! independent accumulator sets keep the FMA ports busy. Each row of a
-//! batch goes through the identical per-lane operation order as the
+//! against padded rows, so the hot loop has no tail branch at all (and
+//! the SIMD loads, unaligned-tolerant for the raw `Matrix` path, never
+//! split a cache line on the 64-byte-aligned lane-multiple store rows).
+//! The batched kernels ([`l2_sq_batch4`], [`dot_batch4`]) compute one
+//! query against 4 rows per pass — the query chunk is loaded once and the
+//! four independent accumulator sets keep the FMA ports busy. Each row of
+//! a batch goes through the identical per-lane operation order as the
 //! single-row kernel, so batched and scalar scoring produce bitwise-equal
-//! distances (ties, NaNs and all) — pinned by tests here and in
-//! `rust/tests/ann_index.rs`. Measured in `rust/benches/distance.rs` and
-//! `finger bench hotpath`.
+//! distances (ties, NaNs and all) — pinned by tests here, in
+//! `rust/tests/kernel_dispatch.rs`, and in `rust/tests/ann_index.rs`.
+//! Measured in `rust/benches/distance.rs` and `finger bench hotpath`.
+
+use crate::core::simd::kernels;
+
+pub use crate::core::simd::{KernelBackend, LANES};
 
 /// Distance measure of a dataset. Angular datasets are normalized at load
 /// time, after which L2 ordering equals cosine ordering (the paper does the
@@ -51,52 +61,23 @@ impl Metric {
     }
 }
 
-/// SIMD chunk width of every kernel; the padded row stride of
-/// [`VectorStore`](crate::core::store::VectorStore) is a multiple of this.
-pub const LANES: usize = 8;
+/// The kernel backend this process dispatched to (for logs/benchmarks).
+pub fn kernel_backend() -> KernelBackend {
+    kernels().backend
+}
 
 /// Squared L2 distance. Tail elements fold into the lane accumulators, so
 /// zero-padding either input to a lane multiple does not change the result
 /// bit (see the module docs).
 #[inline]
 pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / LANES;
-    let mut acc = [0.0f32; LANES];
-    for c in 0..chunks {
-        let base = c * LANES;
-        // Indexed with constant offsets so the bounds checks hoist and the
-        // body vectorizes to packed sub+FMA.
-        for l in 0..LANES {
-            let d = a[base + l] - b[base + l];
-            acc[l] = d.mul_add(d, acc[l]);
-        }
-    }
-    for (l, i) in (chunks * LANES..n).enumerate() {
-        let d = a[i] - b[i];
-        acc[l] = d.mul_add(d, acc[l]);
-    }
-    acc.iter().sum()
+    (kernels().l2_sq)(a, b)
 }
 
 /// Inner product; same lane-folded tail contract as [`l2_sq`].
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / LANES;
-    let mut acc = [0.0f32; LANES];
-    for c in 0..chunks {
-        let base = c * LANES;
-        for l in 0..LANES {
-            acc[l] = a[base + l].mul_add(b[base + l], acc[l]);
-        }
-    }
-    for (l, i) in (chunks * LANES..n).enumerate() {
-        acc[l] = a[i].mul_add(b[i], acc[l]);
-    }
-    acc.iter().sum()
+    (kernels().dot)(a, b)
 }
 
 /// Squared L2 from one query to 4 rows in one pass: each query chunk is
@@ -106,80 +87,36 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 /// `l2_sq(q, r_i)` — same operations in the same order per row.
 #[inline]
 pub fn l2_sq_batch4(q: &[f32], r0: &[f32], r1: &[f32], r2: &[f32], r3: &[f32]) -> [f32; 4] {
-    let n = q.len();
-    debug_assert!(r0.len() == n && r1.len() == n && r2.len() == n && r3.len() == n);
-    let chunks = n / LANES;
-    let mut a0 = [0.0f32; LANES];
-    let mut a1 = [0.0f32; LANES];
-    let mut a2 = [0.0f32; LANES];
-    let mut a3 = [0.0f32; LANES];
-    for c in 0..chunks {
-        let base = c * LANES;
-        for l in 0..LANES {
-            let qv = q[base + l];
-            let d0 = qv - r0[base + l];
-            a0[l] = d0.mul_add(d0, a0[l]);
-            let d1 = qv - r1[base + l];
-            a1[l] = d1.mul_add(d1, a1[l]);
-            let d2 = qv - r2[base + l];
-            a2[l] = d2.mul_add(d2, a2[l]);
-            let d3 = qv - r3[base + l];
-            a3[l] = d3.mul_add(d3, a3[l]);
-        }
-    }
-    for (l, i) in (chunks * LANES..n).enumerate() {
-        let qv = q[i];
-        let d0 = qv - r0[i];
-        a0[l] = d0.mul_add(d0, a0[l]);
-        let d1 = qv - r1[i];
-        a1[l] = d1.mul_add(d1, a1[l]);
-        let d2 = qv - r2[i];
-        a2[l] = d2.mul_add(d2, a2[l]);
-        let d3 = qv - r3[i];
-        a3[l] = d3.mul_add(d3, a3[l]);
-    }
-    [
-        a0.iter().sum(),
-        a1.iter().sum(),
-        a2.iter().sum(),
-        a3.iter().sum(),
-    ]
+    (kernels().l2_sq_batch4)(q, r0, r1, r2, r3)
 }
 
 /// Inner product from one query to 4 rows in one pass; per-row bitwise
 /// identical to [`dot`].
 #[inline]
 pub fn dot_batch4(q: &[f32], r0: &[f32], r1: &[f32], r2: &[f32], r3: &[f32]) -> [f32; 4] {
-    let n = q.len();
-    debug_assert!(r0.len() == n && r1.len() == n && r2.len() == n && r3.len() == n);
-    let chunks = n / LANES;
-    let mut a0 = [0.0f32; LANES];
-    let mut a1 = [0.0f32; LANES];
-    let mut a2 = [0.0f32; LANES];
-    let mut a3 = [0.0f32; LANES];
-    for c in 0..chunks {
-        let base = c * LANES;
-        for l in 0..LANES {
-            let qv = q[base + l];
-            a0[l] = qv.mul_add(r0[base + l], a0[l]);
-            a1[l] = qv.mul_add(r1[base + l], a1[l]);
-            a2[l] = qv.mul_add(r2[base + l], a2[l]);
-            a3[l] = qv.mul_add(r3[base + l], a3[l]);
-        }
-    }
-    for (l, i) in (chunks * LANES..n).enumerate() {
-        let qv = q[i];
-        a0[l] = qv.mul_add(r0[i], a0[l]);
-        a1[l] = qv.mul_add(r1[i], a1[l]);
-        a2[l] = qv.mul_add(r2[i], a2[l]);
-        a3[l] = qv.mul_add(r3[i], a3[l]);
-    }
-    [
-        a0.iter().sum(),
-        a1.iter().sum(),
-        a2.iter().sum(),
-        a3.iter().sum(),
-    ]
+    (kernels().dot_batch4)(q, r0, r1, r2, r3)
+}
+
+/// Portable-reference squared L2 (bypasses dispatch). Bitwise identical to
+/// [`l2_sq`]; the `SearchParams::with_scalar_kernels` search paths call
+/// this directly so "scalar mode" really runs the fallback kernels.
+#[inline]
+pub fn l2_sq_scalar(a: &[f32], b: &[f32]) -> f32 {
+    crate::core::simd::scalar::l2_sq(a, b)
+}
+
+/// Portable-reference inner product (bypasses dispatch).
+#[inline]
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    crate::core::simd::scalar::dot(a, b)
+}
+
+/// Best-effort L1 read-prefetch of the cache line holding `p`
+/// (`prefetcht0` / `prfm pldl1keep` behind the same backend dispatch as
+/// the kernels; a no-op under the forced scalar backend).
+#[inline]
+pub fn prefetch_l1(p: *const f32) {
+    (kernels().prefetch)(p)
 }
 
 /// Squared norm.
@@ -296,6 +233,19 @@ mod tests {
                 dot(&pad(&a), &pad(&b)).to_bits(),
                 "dot n={n}"
             );
+        }
+    }
+
+    #[test]
+    fn dispatched_equals_scalar_reference() {
+        // The cross-backend contract in one line: whatever kernels() chose
+        // is bit-for-bit the scalar fallback.
+        let mut r = Pcg32::new(6);
+        for &n in LENS {
+            let a = randv(&mut r, n);
+            let b = randv(&mut r, n);
+            assert_eq!(l2_sq(&a, &b).to_bits(), l2_sq_scalar(&a, &b).to_bits(), "n={n}");
+            assert_eq!(dot(&a, &b).to_bits(), dot_scalar(&a, &b).to_bits(), "n={n}");
         }
     }
 

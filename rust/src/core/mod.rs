@@ -7,6 +7,7 @@ pub mod json;
 pub mod linalg;
 pub mod matrix;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 pub mod store;
 pub mod threads;

@@ -1,40 +1,98 @@
 //! Tiny scoped parallel-for — no rayon offline, so index builds and query
 //! sweeps fan out over std::thread::scope with a shared atomic work index.
+//!
+//! The build plane relies on three properties of these primitives:
+//!
+//! * **Result placement is by index, never by completion order** —
+//!   [`parallel_map`]/[`parallel_map_with`] write slot `i` for item `i`,
+//!   so outputs are deterministic regardless of scheduling.
+//! * **Per-worker state** ([`parallel_for_with`]) gives each thread its
+//!   own scratch (e.g. a pooled `SearchContext`) without locking.
+//! * **Disjoint writes** ([`DisjointSlice`]) let independent items fill
+//!   non-overlapping ranges of one output buffer in place.
+//!
+//! None of them impose an execution order; determinism comes from the
+//! callers computing each item as a pure function of frozen inputs.
 
+use std::marker::PhantomData;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
-/// Number of worker threads to use by default (capped to keep the container
-/// responsive).
+/// Number of worker threads to use by default: the `FINGER_THREADS`
+/// environment variable when set (≥ 1), else the available parallelism
+/// capped to keep the container responsive.
 pub fn default_threads() -> usize {
+    if let Ok(raw) = std::env::var("FINGER_THREADS") {
+        if let Ok(t) = raw.trim().parse::<usize>() {
+            return t.max(1);
+        }
+    }
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4)
         .min(16)
 }
 
+/// `0` means "auto" everywhere a thread count is configurable.
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        default_threads()
+    } else {
+        threads
+    }
+}
+
+/// Claim size for the shared work counter: large enough that cheap bodies
+/// don't serialize on the atomic (one `fetch_add` per ~8 items per worker
+/// round), small enough that stragglers still steal work.
+fn chunk_for(n: usize, threads: usize) -> usize {
+    (n / (threads * 8)).clamp(1, 1024)
+}
+
 /// Run `f(i)` for every i in 0..n across `threads` workers, work-stealing
-/// via a shared atomic counter. `f` must be Sync; borrow everything it
-/// needs immutably or through interior mutability / disjoint indexing.
+/// chunks of the index range via a shared atomic counter (a per-item
+/// `fetch_add` was a contention hotspot for cheap bodies). `f` must be
+/// Sync; borrow everything it needs immutably or through interior
+/// mutability / disjoint indexing.
 pub fn parallel_for<F>(n: usize, threads: usize, f: F)
 where
     F: Fn(usize) + Sync,
 {
+    parallel_for_with(n, threads, || (), |_, i| f(i));
+}
+
+/// [`parallel_for`] with per-worker state: each worker calls `init` once
+/// and passes the value to every `f` invocation it runs — the pattern the
+/// parallel index builds use for pooled per-thread `SearchContext`s.
+pub fn parallel_for_with<S, I, F>(n: usize, threads: usize, init: I, f: F)
+where
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) + Sync,
+{
     let threads = threads.max(1).min(n.max(1));
     if threads <= 1 || n <= 1 {
+        let mut state = init();
         for i in 0..n {
-            f(i);
+            f(&mut state, i);
         }
         return;
     }
+    let chunk = chunk_for(n, threads);
     let next = AtomicUsize::new(0);
     std::thread::scope(|s| {
         for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            s.spawn(|| {
+                let mut state = init();
+                loop {
+                    let start = next.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + chunk).min(n);
+                    for i in start..end {
+                        f(&mut state, i);
+                    }
                 }
-                f(i);
             });
         }
     });
@@ -43,19 +101,87 @@ where
 /// Map over 0..n in parallel collecting results in order.
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
-    T: Send + Default + Clone,
+    T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let mut out = vec![T::default(); n];
-    {
-        let slots: Vec<std::sync::Mutex<&mut T>> =
-            out.iter_mut().map(std::sync::Mutex::new).collect();
-        parallel_for(n, threads, |i| {
-            let mut slot = slots[i].lock().unwrap();
-            **slot = f(i);
-        });
+    parallel_map_with(n, threads, || (), move |_, i| f(i))
+}
+
+/// [`parallel_map`] with per-worker state (see [`parallel_for_with`]).
+pub fn parallel_map_with<T, S, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    parallel_for_with(n, threads, init, |state, i| {
+        *slots[i].lock().unwrap() = Some(f(state, i));
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("parallel_map slot unfilled"))
+        .collect()
+}
+
+/// Shared-write view over a mutable slice for *provably disjoint* index
+/// ranges: the parallel build passes one of these to workers that each
+/// own distinct ranges (per-node table rows, per-edge blocks), avoiding
+/// a mutex per element.
+///
+/// Safety contract: concurrent callers must never write overlapping
+/// ranges; the type only checks bounds.
+pub struct DisjointSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Sync for DisjointSlice<'_, T> {}
+unsafe impl<T: Send> Send for DisjointSlice<'_, T> {}
+
+impl<'a, T> DisjointSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        DisjointSlice {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _marker: PhantomData,
+        }
     }
-    out
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write one element.
+    ///
+    /// # Safety
+    /// No other thread may concurrently access index `i`.
+    #[inline]
+    pub unsafe fn write(&self, i: usize, value: T) {
+        assert!(i < self.len, "DisjointSlice index out of bounds");
+        *self.ptr.add(i) = value;
+    }
+
+    /// Mutable view of `start..start + len`.
+    ///
+    /// # Safety
+    /// No other thread may concurrently access any index in the range.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &'a mut [T] {
+        assert!(
+            start <= self.len && len <= self.len - start,
+            "DisjointSlice range out of bounds"
+        );
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
 }
 
 #[cfg(test)]
@@ -73,10 +199,39 @@ mod tests {
     }
 
     #[test]
+    fn covers_non_chunk_multiples() {
+        // n deliberately not a multiple of the chunk size.
+        for n in [1usize, 7, 97, 1023, 1025] {
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            parallel_for(n, 5, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "n={n}");
+        }
+    }
+
+    #[test]
     fn map_preserves_order() {
         let out = parallel_map(100, 4, |i| i * i);
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn map_with_worker_state_preserves_order() {
+        // Each worker's state is private; results land by index.
+        let out = parallel_map_with(
+            500,
+            8,
+            || 0usize,
+            |calls, i| {
+                *calls += 1;
+                i + *calls - *calls // i, but touches the state
+            },
+        );
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i);
         }
     }
 
@@ -91,5 +246,28 @@ mod tests {
         parallel_for(0, 4, |_| panic!("should not run"));
         let v: Vec<usize> = parallel_map(0, 4, |i| i);
         assert!(v.is_empty());
+    }
+
+    #[test]
+    fn disjoint_slice_parallel_fill() {
+        let mut buf = vec![0u64; 4096];
+        {
+            let view = DisjointSlice::new(&mut buf);
+            parallel_for(1024, 8, |i| unsafe {
+                let chunk = view.slice_mut(i * 4, 4);
+                for (k, v) in chunk.iter_mut().enumerate() {
+                    *v = (i * 4 + k) as u64;
+                }
+            });
+        }
+        for (i, v) in buf.iter().enumerate() {
+            assert_eq!(*v, i as u64);
+        }
+    }
+
+    #[test]
+    fn resolve_threads_zero_is_auto() {
+        assert_eq!(resolve_threads(3), 3);
+        assert!(resolve_threads(0) >= 1);
     }
 }

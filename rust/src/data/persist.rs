@@ -127,6 +127,7 @@ pub fn load_hnsw<R: io::Read>(r: &mut BinReader<R>) -> io::Result<Hnsw> {
             ef_construction,
             seed,
             heuristic,
+            threads: 0,
         },
         base,
         upper,
@@ -228,6 +229,7 @@ pub fn load_finger<R: io::Read>(r: &mut BinReader<R>) -> io::Result<FingerIndex>
             distribution_matching,
             error_correction,
             seed,
+            threads: 0,
         },
         c_norm,
         c_sqnorm,
@@ -264,6 +266,7 @@ pub fn load_vamana<R: io::Read>(r: &mut BinReader<R>) -> io::Result<Vamana> {
             alpha: av[0],
             seed,
             passes,
+            threads: 0,
         },
         adj,
         medoid,
@@ -301,6 +304,7 @@ pub fn load_nndescent<R: io::Read>(r: &mut BinReader<R>) -> io::Result<NnDescent
             degree,
             seed,
             prune,
+            threads: 0,
         },
         adj,
         entry_probes,

@@ -1,16 +1,24 @@
 //! `finger bench hotpath` — the reproducible hot-path microharness behind
 //! the repo's perf trajectory (`BENCH_hotpath.json`).
 //!
-//! Two sections, both hand-rolled (no criterion — the offline build has no
-//! dependencies):
+//! Three sections, all hand-rolled (no criterion — the offline build has
+//! no dependencies):
 //!
-//! * **kernel** — raw ns/distance of the scalar [`l2_sq`] vs the 4-row
-//!   [`l2_sq_batch4`] over padded [`VectorStore`] rows, across dims.
+//! * **kernel** — raw ns/distance of the single-row [`l2_sq`] vs the
+//!   4-row [`l2_sq_batch4`] over padded [`VectorStore`] rows, across
+//!   dims, under the runtime-dispatched backend (recorded as
+//!   `kernel_backend`; `FINGER_KERNEL=scalar` re-runs the same harness on
+//!   the portable fallback).
 //! * **search** — end-to-end QPS, distance calls/query and inclusive
 //!   ns/distance for flat HNSW and FINGER-HNSW, each under batched and
 //!   scalar scoring (`SearchParams::with_scalar_kernels`). Before timing,
 //!   the harness *asserts* the two scoring modes return bitwise-identical
 //!   result streams — the bench doubles as the equality check.
+//! * **build** — construction throughput (points/sec) for hnsw and
+//!   hnsw-finger at `T = 1` and `T = max` (the deterministic parallel
+//!   build plane), asserting the two builds persist identically-shaped
+//!   graphs by comparing entry/edges, and logging the speedup. The ≥ 2×
+//!   expectation at `T = max` is informational — logged, never asserted.
 //!
 //! `ns_per_dist` in the search section is *inclusive*: elapsed wall time
 //! divided by the number of exact distance computations, so it also
@@ -21,11 +29,12 @@
 use std::path::Path;
 use std::time::Instant;
 
-use crate::core::distance::{l2_sq, l2_sq_batch4};
+use crate::core::distance::{kernel_backend, l2_sq, l2_sq_batch4};
 use crate::core::json::Json;
 use crate::core::matrix::Matrix;
 use crate::core::rng::Pcg32;
 use crate::core::store::VectorStore;
+use crate::core::threads::default_threads;
 use crate::data::spec_by_name;
 use crate::finger::construct::FingerParams;
 use crate::graph::hnsw::HnswParams;
@@ -136,9 +145,72 @@ fn run_search(
     ])
 }
 
+/// Build throughput of the deterministic parallel build plane: hnsw and
+/// hnsw-finger at T = 1 and T = max, reported as points/sec. The T=max
+/// graph is bitwise identical to T=1 by construction (the determinism
+/// suite proves it on persisted bytes); here we sanity-check entry +
+/// edge count and log the speedup, never assert it. Returns the T=max
+/// indexes so the search section can reuse them instead of rebuilding.
+fn build_section(ds: &crate::data::Dataset, out: &mut Vec<Json>) -> (HnswIndex, FingerHnswIndex) {
+    let n = ds.data.rows();
+    let t_max = default_threads();
+    let mut keep_hnsw: Option<HnswIndex> = None;
+    let mut keep_finger: Option<FingerHnswIndex> = None;
+    for (label, rank) in [("hnsw", 0usize), ("hnsw-finger", 16)] {
+        let mut pts_per_sec = [0.0f64; 2];
+        let mut fingerprint = [(0u32, 0usize); 2];
+        for (i, threads) in [1usize, t_max].into_iter().enumerate() {
+            let hp = HnswParams { m: 16, ef_construction: 120, threads, ..Default::default() };
+            let t0 = Instant::now();
+            let (entry, edges) = if rank == 0 {
+                let ix = HnswIndex::build(std::sync::Arc::clone(&ds.data), hp);
+                let f = (ix.graph.entry, ix.graph.base.num_edges());
+                keep_hnsw = Some(ix);
+                f
+            } else {
+                let ix = FingerHnswIndex::build(
+                    std::sync::Arc::clone(&ds.data),
+                    hp,
+                    FingerParams { rank, threads, ..Default::default() },
+                );
+                let f = (ix.inner.hnsw.entry, ix.inner.hnsw.base.num_edges());
+                keep_finger = Some(ix);
+                f
+            };
+            let secs = t0.elapsed().as_secs_f64().max(1e-9);
+            pts_per_sec[i] = n as f64 / secs;
+            fingerprint[i] = (entry, edges);
+            println!(
+                "  build {label:<12} T={threads:<2} {:8.0} points/sec   ({secs:.2}s)",
+                pts_per_sec[i]
+            );
+            out.push(Json::obj(vec![
+                ("index", Json::str(label)),
+                ("threads", Json::num(threads as f64)),
+                ("points_per_sec", Json::num(pts_per_sec[i])),
+                ("build_secs", Json::num(secs)),
+            ]));
+        }
+        assert_eq!(
+            fingerprint[0], fingerprint[1],
+            "{label}: T=1 and T={t_max} builds diverged"
+        );
+        println!(
+            "  build {label:<12} T={t_max} speedup {:.2}x over T=1 (informational target ≥ 2x)",
+            pts_per_sec[1] / pts_per_sec[0].max(1e-9)
+        );
+    }
+    (keep_hnsw.expect("hnsw built"), keep_finger.expect("hnsw-finger built"))
+}
+
 /// The `finger bench hotpath` entry: writes `BENCH_hotpath.json` to `out`.
 pub fn bench_hotpath(out: &Path, scale: f64) {
     println!("== hotpath: padded-store + batched-kernel data plane ==");
+    println!(
+        "  kernel backend {} / {} threads",
+        kernel_backend().name(),
+        default_threads()
+    );
     let spec = spec_by_name("sift-sim-128", scale).expect("known dataset");
     println!("  dataset {} (n={}, dim={})", spec.name, spec.n, spec.dim);
     let ds = spec.generate();
@@ -146,15 +218,11 @@ pub fn bench_hotpath(out: &Path, scale: f64) {
     let mut kernel = Vec::new();
     kernel_section(&mut kernel);
 
-    let hnsw_params = HnswParams { m: 16, ef_construction: 120, ..Default::default() };
-    let t0 = Instant::now();
-    let hnsw = HnswIndex::build(std::sync::Arc::clone(&ds.data), hnsw_params.clone());
-    let finger = FingerHnswIndex::build(
-        std::sync::Arc::clone(&ds.data),
-        hnsw_params,
-        FingerParams { rank: 16, ..Default::default() },
-    );
-    println!("  indexes built in {:.1}s", t0.elapsed().as_secs_f64());
+    // The build-throughput section also supplies the indexes the search
+    // section times (T=max builds are bitwise identical to T=1, so reuse
+    // loses nothing).
+    let mut build = Vec::new();
+    let (hnsw, finger) = build_section(&ds, &mut build);
 
     let mut ctx = SearchContext::for_universe(ds.data.rows()).with_stats();
     let indexes: [(&str, &dyn AnnIndex); 2] = [("hnsw", &hnsw), ("hnsw-finger", &finger)];
@@ -181,13 +249,16 @@ pub fn bench_hotpath(out: &Path, scale: f64) {
     }
 
     let doc = Json::obj(vec![
-        ("schema", Json::str("hotpath-v1")),
+        ("schema", Json::str("hotpath-v2")),
         ("dataset", Json::str(&ds.name)),
         ("n", Json::num(ds.data.rows() as f64)),
         ("dim", Json::num(ds.data.cols() as f64)),
         ("scale", Json::num(scale)),
         ("ef", Json::num(ef as f64)),
+        ("kernel_backend", Json::str(kernel_backend().name())),
+        ("threads", Json::num(default_threads() as f64)),
         ("kernel", Json::Arr(kernel)),
+        ("build", Json::Arr(build)),
         ("search", Json::Arr(search)),
     ]);
     std::fs::create_dir_all(out).ok();

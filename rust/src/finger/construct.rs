@@ -18,6 +18,7 @@ use crate::core::linalg::finger_projection;
 use crate::core::matrix::Matrix;
 use crate::core::rng::Pcg32;
 use crate::core::stats;
+use crate::core::threads::{parallel_for, parallel_map, resolve_threads, DisjointSlice};
 use crate::graph::adjacency::FlatAdj;
 
 /// Construction parameters.
@@ -32,6 +33,10 @@ pub struct FingerParams {
     /// Enable the additive mean-L1 error-correction term.
     pub error_correction: bool,
     pub seed: u64,
+    /// Training worker threads (0 = `FINGER_THREADS`/auto). Training is
+    /// per-node/per-pair parallel with a fixed sampling plan, so the
+    /// built index is bitwise identical for every value; never persisted.
+    pub threads: usize,
 }
 
 impl Default for FingerParams {
@@ -42,8 +47,23 @@ impl Default for FingerParams {
             distribution_matching: true,
             error_correction: true,
             seed: 42,
+            threads: 0,
         }
     }
+}
+
+/// Per-node neighbor-pair pick for training, drawn from a private PCG
+/// stream keyed on (seed, node) — independent of visit order, so the
+/// sampling plan is the same no matter how the work is scheduled. Shared
+/// with the RPLSH rebuild so the two sampling protocols cannot drift.
+pub(crate) fn sample_pair(seed: u64, c: u32, n_neighbors: usize) -> (usize, usize) {
+    let mut rng = Pcg32::with_stream(seed, c as u64);
+    let i = rng.gen_range(n_neighbors);
+    let mut j = rng.gen_range(n_neighbors);
+    while j == i {
+        j = rng.gen_range(n_neighbors);
+    }
+    (i, j)
 }
 
 /// Distribution-matching parameters (Algorithm 2 outputs).
@@ -91,40 +111,46 @@ pub struct FingerIndex {
 
 impl FingerIndex {
     /// Algorithm 2. `adj` is the base-layer adjacency of any search graph.
+    ///
+    /// Training is parallel and deterministic: the sampling plan (one
+    /// neighbor pair per node, a strided SVD subsample of those pairs) is
+    /// fixed up front from per-node keyed PCG streams, after which every
+    /// residual, cosine, per-node table row, and per-edge block is an
+    /// independent pure function fanned out over `params.threads` workers
+    /// — the result is bitwise identical for every thread count.
     pub fn build(data: &Matrix, adj: &FlatAdj, params: FingerParams) -> FingerIndex {
         let n = data.rows();
         let m = data.cols();
         let r = params.rank.min(m);
-        let mut rng = Pcg32::new(params.seed);
+        let threads = resolve_threads(params.threads);
 
-        // ---- Pass 1: sample residuals for the SVD and pairs for matching.
-        let mut res_samples = Matrix::zeros(0, 0);
+        // ---- Pass 1: the sampling plan — one neighbor pair per node
+        // with 2+ neighbors, drawn from (seed, node)-keyed streams.
         let mut pair_nodes: Vec<(u32, u32, u32)> = Vec::new(); // (c, d, d')
         for c in 0..n as u32 {
             let nbs = adj.neighbors(c);
             if nbs.len() < 2 {
                 continue;
             }
-            let i = rng.gen_range(nbs.len());
-            let mut j = rng.gen_range(nbs.len());
-            while j == i {
-                j = rng.gen_range(nbs.len());
-            }
-            let (d, dp) = (nbs[i], nbs[j]);
-            pair_nodes.push((c, d, dp));
-            // Residual of d w.r.t. c, added to the SVD pool (reservoir-less
-            // subsample: accept while under cap, else skip pseudo-randomly).
-            if res_samples.rows() < params.max_svd_samples {
-                res_samples.push_row(&residual(data, c, d));
-            } else if rng.next_f32() < 0.05 {
-                let slot = rng.gen_range(params.max_svd_samples);
-                let rres = residual(data, c, d);
-                res_samples.row_mut(slot).copy_from_slice(&rres);
-            }
+            let (i, j) = sample_pair(params.seed, c, nbs.len());
+            pair_nodes.push((c, nbs[i], nbs[j]));
+        }
+
+        // SVD pool: all pair residuals when they fit, else an evenly
+        // strided subsample of them (deterministic, order-free).
+        let take = pair_nodes.len().min(params.max_svd_samples);
+        let sample_rows: Vec<Vec<f32>> = parallel_map(take, threads, |s| {
+            let (c, d, _) = pair_nodes[s * pair_nodes.len() / take.max(1)];
+            residual(data, c, d)
+        });
+        let mut res_samples = Matrix::zeros(0, 0);
+        for row in &sample_rows {
+            res_samples.push_row(row);
         }
         if res_samples.rows() == 0 {
             // Degenerate graph (no node with 2+ neighbors): fall back to
             // random rows as "residuals" so we still produce a basis.
+            let mut rng = Pcg32::new(params.seed);
             for _ in 0..r.max(8) {
                 let i = rng.gen_range(n);
                 res_samples.push_row(data.row(i));
@@ -135,55 +161,71 @@ impl FingerIndex {
         let eb = finger_projection(&res_samples, r, params.seed ^ 0xABCD);
         let proj = eb.basis; // r × m
 
-        // ---- Distribution matching: X true cosines, Y projected cosines.
-        let mut xs = Vec::with_capacity(pair_nodes.len());
-        let mut ys = Vec::with_capacity(pair_nodes.len());
-        for &(c, d, dp) in &pair_nodes {
+        // ---- Distribution matching: X true cosines, Y projected cosines
+        // (independent per pair — fanned out).
+        let xy: Vec<(f32, f32)> = parallel_map(pair_nodes.len(), threads, |pi| {
+            let (c, d, dp) = pair_nodes[pi];
             let rd = residual(data, c, d);
             let rdp = residual(data, c, dp);
             let pd = project(&proj, &rd);
             let pdp = project(&proj, &rdp);
-            xs.push(cosine(&rd, &rdp));
-            ys.push(cosine(&pd, &pdp));
-        }
+            (cosine(&rd, &rdp), cosine(&pd, &pdp))
+        });
+        let xs: Vec<f32> = xy.iter().map(|p| p.0).collect();
+        let ys: Vec<f32> = xy.iter().map(|p| p.1).collect();
         let matching = fit_matching(&xs, &ys, &params);
 
-        // ---- Per-node and per-edge precomputation.
+        // ---- Per-node and per-edge precomputation: disjoint writes per
+        // node (a node's edge slots are contiguous), fanned out.
         let mut c_norm = vec![0.0f32; n];
         let mut c_sqnorm = vec![0.0f32; n];
         let mut pc = vec![0.0f32; n * r];
-        for c in 0..n {
-            let x = data.row(c);
-            let sq = norm_sq(x);
-            c_sqnorm[c] = sq;
-            c_norm[c] = sq.sqrt();
-            let p = project(&proj, x);
-            pc[c * r..(c + 1) * r].copy_from_slice(&p);
+        {
+            let cn = DisjointSlice::new(&mut c_norm);
+            let cs = DisjointSlice::new(&mut c_sqnorm);
+            let pcv = DisjointSlice::new(&mut pc);
+            parallel_for(n, threads, |c| {
+                let x = data.row(c);
+                let sq = norm_sq(x);
+                let p = project(&proj, x);
+                // Safety: each worker writes only node c's scalar cells
+                // and its private pc row.
+                unsafe {
+                    cs.write(c, sq);
+                    cn.write(c, sq.sqrt());
+                    pcv.slice_mut(c * r, r).copy_from_slice(&p);
+                }
+            });
         }
 
         let slots = adj.total_slots();
         let stride = r + EDGE_SCALARS;
         let mut edge = vec![0.0f32; slots * stride];
-        for c in 0..n as u32 {
-            let xc = data.row(c as usize);
-            let csq = c_sqnorm[c as usize].max(1e-12);
-            let cn = c_norm[c as usize].max(1e-12);
-            for (j, &d) in adj.neighbors(c).iter().enumerate() {
-                let slot = adj.edge_slot(c, j);
-                let xd = data.row(d as usize);
-                let t = dot(xc, xd) / csq; // projection coefficient
-                // d_res = d - t*c
-                let mut dres = vec![0.0f32; m];
-                for k in 0..m {
-                    dres[k] = xd[k] - t * xc[k];
+        {
+            let ev = DisjointSlice::new(&mut edge);
+            parallel_for(n, threads, |ci| {
+                let c = ci as u32;
+                let xc = data.row(ci);
+                let csq = c_sqnorm[ci].max(1e-12);
+                let cn = c_norm[ci].max(1e-12);
+                for (j, &d) in adj.neighbors(c).iter().enumerate() {
+                    let slot = adj.edge_slot(c, j);
+                    let xd = data.row(d as usize);
+                    let t = dot(xc, xd) / csq; // projection coefficient
+                    // d_res = d - t*c
+                    let mut dres = vec![0.0f32; m];
+                    for k in 0..m {
+                        dres[k] = xd[k] - t * xc[k];
+                    }
+                    let p = project(&proj, &dres);
+                    // Safety: edge slots of distinct nodes are disjoint.
+                    let b = unsafe { ev.slice_mut(slot * stride, stride) };
+                    b[0] = t * cn; // signed length along c
+                    b[1] = norm_sq(&dres).sqrt();
+                    b[2] = norm_sq(&p).sqrt();
+                    b[EDGE_SCALARS..].copy_from_slice(&p);
                 }
-                let p = project(&proj, &dres);
-                let b = &mut edge[slot * stride..(slot + 1) * stride];
-                b[0] = t * cn; // signed length along c
-                b[1] = norm_sq(&dres).sqrt();
-                b[2] = norm_sq(&p).sqrt();
-                b[EDGE_SCALARS..].copy_from_slice(&p);
-            }
+            });
         }
 
         FingerIndex {

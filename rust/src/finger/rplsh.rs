@@ -107,83 +107,105 @@ impl SignLsh {
 impl FingerIndex {
     /// Recompute every projection-derived table under a new basis. Used by
     /// the RPLSH ablation; also exercised by tests to validate that
-    /// construction is a pure function of (data, adj, proj).
+    /// construction is a pure function of (data, adj, proj). Parallelized
+    /// per node/pair exactly like `FingerIndex::build` — keyed sampling
+    /// streams and disjoint writes, so the result is identical for every
+    /// `params.threads`.
     pub fn rebuild_with_projection(&mut self, data: &Matrix, adj: &FlatAdj, proj: Matrix) {
-        use crate::core::distance::norm_sq;
         use crate::core::distance::cosine;
+        use crate::core::distance::norm_sq;
+        use crate::core::threads::{parallel_for, parallel_map, resolve_threads, DisjointSlice};
         use crate::finger::construct::EDGE_SCALARS;
         let n = data.rows();
         let m = data.cols();
         let r = proj.rows();
         let old_stride = self.edge_stride(); // still the old rank's stride
+        let threads = resolve_threads(self.params.threads);
 
-        // Per-node P·c.
+        // Per-node P·c (disjoint rows, fanned out).
         let mut pc = vec![0.0f32; n * r];
-        for c in 0..n {
-            let p = crate::finger::construct::project(&proj, data.row(c));
-            pc[c * r..(c + 1) * r].copy_from_slice(&p);
+        {
+            let pcv = DisjointSlice::new(&mut pc);
+            parallel_for(n, threads, |c| {
+                let p = crate::finger::construct::project(&proj, data.row(c));
+                // Safety: each worker writes only node c's private row.
+                unsafe { pcv.slice_mut(c * r, r).copy_from_slice(&p) };
+            });
         }
 
         // Per-edge blocks: `d_proj`/`||d_res||` are basis-independent and
         // carried over from the old blocks; the projected residual and its
         // norm are recomputed under the new basis. The rank (and therefore
-        // the block stride) may change, so the table is rebuilt wholesale.
+        // the block stride) may change, so the table is rebuilt wholesale
+        // — per node in parallel, since edge slots of distinct nodes are
+        // disjoint.
         let slots = adj.total_slots();
         let new_stride = r + EDGE_SCALARS;
         let mut edge = vec![0.0f32; slots * new_stride];
-        for c in 0..n as u32 {
-            let xc = data.row(c as usize);
-            let csq = self.c_sqnorm[c as usize].max(1e-12);
-            for (j, &d) in adj.neighbors(c).iter().enumerate() {
-                let slot = adj.edge_slot(c, j);
-                let xd = data.row(d as usize);
-                let t = dot(xc, xd) / csq;
-                let mut dres = vec![0.0f32; m];
-                for k in 0..m {
-                    dres[k] = xd[k] - t * xc[k];
+        {
+            let ev = DisjointSlice::new(&mut edge);
+            let this = &*self;
+            parallel_for(n, threads, |ci| {
+                let c = ci as u32;
+                let xc = data.row(ci);
+                let csq = this.c_sqnorm[ci].max(1e-12);
+                for (j, &d) in adj.neighbors(c).iter().enumerate() {
+                    let slot = adj.edge_slot(c, j);
+                    let xd = data.row(d as usize);
+                    let t = dot(xc, xd) / csq;
+                    let mut dres = vec![0.0f32; m];
+                    for k in 0..m {
+                        dres[k] = xd[k] - t * xc[k];
+                    }
+                    let p = crate::finger::construct::project(&proj, &dres);
+                    // Safety: slots of distinct nodes never overlap.
+                    let b = unsafe { ev.slice_mut(slot * new_stride, new_stride) };
+                    b[0] = this.edge[slot * old_stride];
+                    b[1] = this.edge[slot * old_stride + 1];
+                    b[2] = norm_sq(&p).sqrt();
+                    b[EDGE_SCALARS..].copy_from_slice(&p);
                 }
-                let p = crate::finger::construct::project(&proj, &dres);
-                let b = &mut edge[slot * new_stride..(slot + 1) * new_stride];
-                b[0] = self.edge[slot * old_stride];
-                b[1] = self.edge[slot * old_stride + 1];
-                b[2] = norm_sq(&p).sqrt();
-                b[EDGE_SCALARS..].copy_from_slice(&p);
-            }
+            });
         }
         self.rank = r;
         self.proj = proj;
         self.pc = pc;
         self.edge = edge;
 
-        // Refit distribution matching under the new basis.
-        let mut rng = Pcg32::new(self.params.seed ^ 0x77);
-        let mut xs = Vec::new();
-        let mut ys = Vec::new();
+        // Refit distribution matching under the new basis: pair picks come
+        // from (seed^0x77, node)-keyed streams, cosines fan out per pair.
+        let refit_seed = self.params.seed ^ 0x77;
+        let mut pairs: Vec<(u32, u32, u32)> = Vec::new();
         for c in 0..n as u32 {
             let nbs = adj.neighbors(c);
             if nbs.len() < 2 {
                 continue;
             }
-            let i = rng.gen_range(nbs.len());
-            let mut j2 = rng.gen_range(nbs.len());
-            while j2 == i {
-                j2 = rng.gen_range(nbs.len());
-            }
+            let (i, j2) = crate::finger::construct::sample_pair(refit_seed, c, nbs.len());
+            pairs.push((c, nbs[i], nbs[j2]));
+        }
+        let this = &*self;
+        let xy: Vec<(f32, f32)> = parallel_map(pairs.len(), threads, |pi| {
+            let (c, d, dp) = pairs[pi];
             let xc = data.row(c as usize);
-            let csq = self.c_sqnorm[c as usize].max(1e-12);
+            let csq = this.c_sqnorm[c as usize].max(1e-12);
             let resid = |d: u32| -> Vec<f32> {
                 let xd = data.row(d as usize);
                 let t = dot(xc, xd) / csq;
                 xd.iter().zip(xc).map(|(&a, &b)| a - t * b).collect()
             };
-            let rd = resid(nbs[i]);
-            let rdp = resid(nbs[j2]);
-            xs.push(cosine(&rd, &rdp));
-            ys.push(cosine(
-                &crate::finger::construct::project(&self.proj, &rd),
-                &crate::finger::construct::project(&self.proj, &rdp),
-            ));
-        }
+            let rd = resid(d);
+            let rdp = resid(dp);
+            (
+                cosine(&rd, &rdp),
+                cosine(
+                    &crate::finger::construct::project(&this.proj, &rd),
+                    &crate::finger::construct::project(&this.proj, &rdp),
+                ),
+            )
+        });
+        let xs: Vec<f32> = xy.iter().map(|p| p.0).collect();
+        let ys: Vec<f32> = xy.iter().map(|p| p.1).collect();
         self.matching = crate::finger::construct::fit_matching(&xs, &ys, &self.params);
     }
 }

@@ -20,7 +20,7 @@
 //! admission and screening decisions and return bitwise-identical result
 //! streams with identical stats.
 
-use crate::core::distance::{l2_sq, l2_sq_batch4};
+use crate::core::distance::{l2_sq, l2_sq_batch4, l2_sq_scalar, prefetch_l1};
 use crate::core::matrix::Matrix;
 use crate::core::store::VectorStore;
 use crate::finger::approx::{approx_dist_sq, QueryCenter, QueryState};
@@ -33,9 +33,11 @@ use crate::index::mutable::LiveIds;
 /// Process one gathered neighbor exactly the way the scalar Algorithm 4
 /// loop does: screen if the top queue is full, then (maybe) take the
 /// exact distance — `pre` supplies it when the fill-phase batch already
-/// computed it — and admit against the cached upper bound. All counting
-/// goes through `SearchStats::{record, record_approx}` so `per_hop` and
-/// `wasted` (the Figure 2 data) are populated on the FINGER path too.
+/// computed it, `exact` is the kernel to use otherwise (dispatched, or
+/// the portable scalar fallback in unbatched mode) — and admit against
+/// the cached upper bound. All counting goes through
+/// `SearchStats::{record, record_approx}` so `per_hop` and `wasted` (the
+/// Figure 2 data) are populated on the FINGER path too.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn admit_screened<F: LiveFilter + ?Sized>(
@@ -47,6 +49,7 @@ fn admit_screened<F: LiveFilter + ?Sized>(
     nb: u32,
     slot: usize,
     pre: Option<f32>,
+    exact: fn(&[f32], &[f32]) -> f32,
     ef: usize,
     hop: usize,
     ub: &mut f32,
@@ -66,7 +69,7 @@ fn admit_screened<F: LiveFilter + ?Sized>(
             return; // screened out: the exact computation is skipped
         }
     }
-    let d = pre.unwrap_or_else(|| l2_sq(qp, store.row(nb as usize)));
+    let d = pre.unwrap_or_else(|| exact(qp, store.row(nb as usize)));
     if ctx.stats_enabled {
         ctx.stats.record(hop, full && d > *ub);
     }
@@ -102,9 +105,14 @@ pub fn finger_beam_search_filtered<F: LiveFilter + ?Sized>(
     let mut slots = std::mem::take(&mut ctx.slots);
     store.pad_query(q, &mut qp);
 
+    // Unbatched mode doubles as the full fallback: exact distances go
+    // through the portable scalar kernels, bypassing the SIMD dispatch
+    // (bitwise-identical either way).
+    let exact: fn(&[f32], &[f32]) -> f32 = if batched { l2_sq } else { l2_sq_scalar };
+
     let qs = QueryState::new(index, q);
     ctx.visited.insert(entry);
-    let d0 = l2_sq(&qp, store.row(entry as usize));
+    let d0 = exact(&qp, store.row(entry as usize));
     if ctx.stats_enabled {
         ctx.stats.dist_calls += 1;
     }
@@ -142,11 +150,17 @@ pub fn finger_beam_search_filtered<F: LiveFilter + ?Sized>(
         while i < block.len() {
             if batched && ctx.top.len() < ef && i + 4 <= block.len() {
                 // Fill phase: everything gets an exact distance anyway, so
-                // score 4 rows per kernel pass. If the queue fills inside
-                // this sub-block, `admit_screened` switches to screening
-                // for the rest — the precomputed distance is only used
-                // when the scalar path would have computed it, so
-                // decisions and stats stay identical.
+                // score 4 rows per kernel pass (prefetching the next
+                // sub-block's rows toward L1 first). If the queue fills
+                // inside this sub-block, `admit_screened` switches to
+                // screening for the rest — the precomputed distance is
+                // only used when the scalar path would have computed it,
+                // so decisions and stats stay identical.
+                if i + 8 <= block.len() {
+                    for t in i + 4..i + 8 {
+                        prefetch_l1(store.row(block[t] as usize).as_ptr());
+                    }
+                }
                 let d4 = l2_sq_batch4(
                     &qp,
                     store.row(block[i] as usize),
@@ -164,6 +178,7 @@ pub fn finger_beam_search_filtered<F: LiveFilter + ?Sized>(
                         block[i + t],
                         slots[i + t],
                         Some(d),
+                        exact,
                         ef,
                         hop,
                         &mut ub,
@@ -183,6 +198,7 @@ pub fn finger_beam_search_filtered<F: LiveFilter + ?Sized>(
                     block[i],
                     slots[i],
                     None,
+                    exact,
                     ef,
                     hop,
                     &mut ub,

@@ -4,15 +4,33 @@
 //! heuristic at each level, bidirectional linking with pruning. All
 //! distance work — construction and query — runs against a padded,
 //! aligned [`VectorStore`].
+//!
+//! ## Deterministic parallel construction
+//!
+//! The static build ([`Hnsw::build_with_store`]) processes insertions in
+//! geometric-ramp batches with a **search-parallel / commit-serial**
+//! scheme: every item of a batch runs its greedy descent, per-level
+//! candidate beam searches, *and* neighbor selection concurrently against
+//! the frozen graph prefix (the graph as of the batch start) into
+//! per-item plans; then the plans are committed — links set, backward
+//! edges pruned, entry point updated — strictly serially in ascending id
+//! order. Each plan is a pure function of (frozen graph, store, id) and
+//! the commit order is fixed, so a build with `params.threads = T` is
+//! **bitwise identical** for every T (adjacency, levels, entry, and
+//! therefore persisted bytes) — pinned by `rust/tests/kernel_dispatch.rs`.
+//! The online [`Hnsw::insert_node`] path runs the same plan+commit pair
+//! back-to-back on the live graph, which is exactly the old sequential
+//! insertion.
 
 use crate::core::distance::l2_sq;
 use crate::core::matrix::Matrix;
 use crate::core::rng::{Pcg32, SplitMix64};
 use crate::core::store::VectorStore;
+use crate::core::threads::{parallel_map_with, resolve_threads};
 use crate::graph::adjacency::FlatAdj;
 use crate::graph::earlyterm::beam_search_early_term;
 use crate::graph::search::{beam_search_filtered, greedy_descent, AllLive, Neighbor};
-use crate::index::context::{SearchContext, SearchParams};
+use crate::index::context::{ContextPool, SearchContext, SearchParams};
 use crate::index::mutable::LiveIds;
 
 /// HNSW build parameters.
@@ -25,6 +43,10 @@ pub struct HnswParams {
     /// Use the diversity heuristic (Algorithm 4 of the HNSW paper) for
     /// neighbor selection rather than plain nearest.
     pub heuristic: bool,
+    /// Build worker threads (0 = `FINGER_THREADS`/auto). The built graph
+    /// is bitwise identical for every value (see the module docs), so this
+    /// is never persisted.
+    pub threads: usize,
 }
 
 impl Default for HnswParams {
@@ -34,8 +56,29 @@ impl Default for HnswParams {
             ef_construction: 100,
             seed: 42,
             heuristic: true,
+            threads: 0,
         }
     }
+}
+
+/// Batch size of the parallel build at `committed` already-inserted
+/// nodes: double until 16, then grow as `committed / 4`. Early batches
+/// are small while the beam can still sweep the whole prefix, and the
+/// steady state bounds candidate staleness at 25% of the graph while
+/// keeping batches large enough to feed every worker. A pure function of
+/// `committed`, so the schedule (and thus the build) is thread-count
+/// independent.
+fn build_batch(committed: usize) -> usize {
+    committed.min((committed / 4).max(16))
+}
+
+/// Per-item output of the parallel search phase: the neighbor lists
+/// selected for each level, computed entirely against the frozen prefix.
+struct InsertPlan {
+    /// Highest level the item links at (`node_level.min(frozen max)`).
+    top_level: usize,
+    /// Selected neighbor ids per level, from `top_level` down to 0.
+    selected: Vec<Vec<u32>>,
 }
 
 /// A built HNSW index.
@@ -85,13 +128,29 @@ impl Hnsw {
             params,
         };
 
-        // One pooled context for the whole build: the construction-time
-        // beam searches reuse the same heaps and visited set.
-        let mut ctx = SearchContext::for_universe(n);
-        // Insert points one by one (point 0 initializes the graph).
+        // Search-parallel / commit-serial batches (see module docs).
+        // Point 0 initializes the graph; every batch plans its insertions
+        // concurrently against the frozen prefix (per-worker pooled
+        // contexts), then commits serially in ascending id order.
+        let threads = resolve_threads(g.params.threads);
+        let pool = ContextPool::new(threads, n);
         g.max_level = g.levels[0] as usize;
-        for i in 1..n {
-            g.insert(store, i as u32, &mut ctx);
+        let mut committed = 1usize;
+        while committed < n {
+            let batch = build_batch(committed).min(n - committed);
+            let plans: Vec<InsertPlan> = {
+                let frozen = &g;
+                parallel_map_with(
+                    batch,
+                    threads,
+                    || pool.checkout(),
+                    |ctx, bi| frozen.plan_insert(store, (committed + bi) as u32, ctx),
+                )
+            };
+            for (bi, plan) in plans.into_iter().enumerate() {
+                g.commit_insert(store, (committed + bi) as u32, plan);
+            }
+            committed += batch;
         }
         g
     }
@@ -112,12 +171,12 @@ impl Hnsw {
         }
     }
 
-    /// Insert `id` into the graph structure (storage for it must already
-    /// exist at every layer). Returns the base-layer nodes whose neighbor
-    /// lists changed — `id` itself plus every back-linked neighbor — so
-    /// side indexes keyed on base edge slots (FINGER) can refresh exactly
-    /// the touched rows.
-    fn insert(&mut self, store: &VectorStore, id: u32, ctx: &mut SearchContext) -> Vec<u32> {
+    /// Search phase of one insertion, read-only against the current (for
+    /// the batched build: frozen) graph: greedy descent, the per-level
+    /// candidate beam searches, and neighbor selection. A pure function
+    /// of `(self, store, id)` — this is what a batch fans out in
+    /// parallel, one pooled context per worker.
+    fn plan_insert(&self, store: &VectorStore, id: u32, ctx: &mut SearchContext) -> InsertPlan {
         let q = store.row_logical(id as usize);
         let node_level = self.levels[id as usize] as usize;
         let mut cur = self.entry;
@@ -128,9 +187,9 @@ impl Hnsw {
             cur = greedy_descent(store, self.layer(l), cur, q, ctx).id;
         }
 
-        // Insert at each level from min(top, node_level) down to 0.
-        let mut base_touched: Vec<u32> = Vec::new();
-        for l in (0..=node_level.min(top)).rev() {
+        let top_level = node_level.min(top);
+        let mut selected_per_level = Vec::with_capacity(top_level + 1);
+        for l in (0..=top_level).rev() {
             let found = beam_search_filtered(
                 store,
                 self.layer(l),
@@ -143,15 +202,36 @@ impl Hnsw {
             );
             cur = found.first().map(|n| n.id).unwrap_or(cur);
             let cap = if l == 0 { 2 * self.params.m } else { self.params.m };
+            // Selection depends only on the item's own candidate list, so
+            // it runs here (parallel) rather than in the serial commit.
             let selected = if self.params.heuristic {
                 select_heuristic(store, &found, cap)
             } else {
                 found.iter().take(cap).copied().collect()
             };
-            // Link bidirectionally with pruning.
-            let list: Vec<u32> = selected.iter().map(|n| n.id).collect();
-            self.layer_mut(l).set(id, &list);
-            for &nb in &list {
+            selected_per_level.push(selected.iter().map(|n| n.id).collect());
+        }
+        InsertPlan {
+            top_level,
+            selected: selected_per_level,
+        }
+    }
+
+    /// Commit phase of one insertion: write the planned neighbor lists,
+    /// back-link with pruning, force the base-layer reachability in-link,
+    /// and update the entry point. The batched build calls this serially
+    /// in ascending id order. Returns the base-layer nodes whose neighbor
+    /// lists changed — `id` itself plus every back-linked neighbor — so
+    /// side indexes keyed on base edge slots (FINGER) can refresh exactly
+    /// the touched rows.
+    fn commit_insert(&mut self, store: &VectorStore, id: u32, plan: InsertPlan) -> Vec<u32> {
+        let node_level = self.levels[id as usize] as usize;
+        let mut base_touched: Vec<u32> = Vec::new();
+        for (li, l) in (0..=plan.top_level).rev().enumerate() {
+            let cap = if l == 0 { 2 * self.params.m } else { self.params.m };
+            let list = &plan.selected[li];
+            self.layer_mut(l).set(id, list);
+            for &nb in list {
                 self.link_with_prune(store, l, nb, id, cap);
             }
             if l == 0 {
@@ -168,7 +248,7 @@ impl Hnsw {
                     }
                 }
                 base_touched.push(id);
-                base_touched.extend(&list);
+                base_touched.extend(list);
             }
         }
 
@@ -177,6 +257,15 @@ impl Hnsw {
             self.entry = id;
         }
         base_touched
+    }
+
+    /// Insert `id` into the graph structure (storage for it must already
+    /// exist at every layer): the sequential plan+commit pair, used by the
+    /// online [`Hnsw::insert_node`] path. Returns the touched base-layer
+    /// nodes (see [`Hnsw::commit_insert`]).
+    fn insert(&mut self, store: &VectorStore, id: u32, ctx: &mut SearchContext) -> Vec<u32> {
+        let plan = self.plan_insert(store, id, ctx);
+        self.commit_insert(store, id, plan)
     }
 
     /// Deterministic geometric level for an online-inserted node: a

@@ -2,11 +2,21 @@
 //! PyNNDescent-style baseline of the paper's Figures 1/5/8. Builds an
 //! approximate K-NN graph by iterated local joins, then diversity-prunes
 //! and symmetrizes it into a searchable graph.
+//!
+//! Construction is batch-parallel and deterministic: random init draws
+//! from a per-node PCG stream (`Pcg32::with_stream(seed, u)`), and each
+//! local-join batch computes its candidate pools and all pairwise
+//! distances concurrently from the frozen lists (state as of the batch
+//! start) before applying the `offer` updates serially in ascending node
+//! order. Every parallel item is a pure function of frozen state, so the
+//! built graph is bitwise identical for every `params.threads` (pinned
+//! by `rust/tests/kernel_dispatch.rs`).
 
 use crate::core::distance::l2_sq;
 use crate::core::matrix::Matrix;
 use crate::core::rng::Pcg32;
 use crate::core::store::VectorStore;
+use crate::core::threads::{parallel_map, resolve_threads};
 use crate::graph::adjacency::FlatAdj;
 use crate::graph::earlyterm::beam_search_early_term;
 use crate::graph::hnsw::select_heuristic;
@@ -25,6 +35,9 @@ pub struct NnDescentParams {
     pub seed: u64,
     /// Diversity-prune (PyNNDescent does this for its search graph).
     pub prune: bool,
+    /// Build worker threads (0 = `FINGER_THREADS`/auto); the built graph
+    /// is identical for every value, so this is never persisted.
+    pub threads: usize,
 }
 
 impl Default for NnDescentParams {
@@ -36,9 +49,14 @@ impl Default for NnDescentParams {
             degree: 32,
             seed: 42,
             prune: true,
+            threads: 0,
         }
     }
 }
+
+/// Nodes per local-join batch: bounds the transient pairwise-distance
+/// buffers (~`2·sample²` entries per node) while keeping every worker fed.
+const JOIN_BATCH: usize = 2048;
 
 pub struct NnDescent {
     pub params: NnDescentParams,
@@ -95,27 +113,43 @@ impl NnDescent {
         let n = store.rows();
         assert!(n > 1);
         let k = params.k.min(n - 1);
+        let threads = resolve_threads(params.threads);
         let mut rng = Pcg32::new(params.seed);
 
-        // Random initialization.
-        let mut lists: Vec<KnnList> = (0..n).map(|_| KnnList::new(k)).collect();
-        for u in 0..n {
-            while lists[u].items.len() < k {
-                let v = rng.gen_range(n);
-                if v != u {
-                    let cand = Neighbor {
+        // Random initialization: each node draws its starting neighbors
+        // from a private PCG stream keyed on (seed, node id), so the init
+        // is order-free and fans out across workers.
+        let init: Vec<Vec<Neighbor>> = parallel_map(n, threads, |u| {
+            let mut r = Pcg32::with_stream(params.seed, u as u64);
+            let mut items: Vec<Neighbor> = Vec::with_capacity(k);
+            while items.len() < k {
+                let v = r.gen_range(n);
+                if v != u && !items.iter().any(|x| x.id == v as u32) {
+                    items.push(Neighbor {
                         dist: l2_sq(store.row(u), store.row(v)),
                         id: v as u32,
-                    };
-                    lists[u].offer(cand);
+                    });
                 }
             }
-        }
+            items.sort();
+            items
+        });
+        let mut lists: Vec<KnnList> = init
+            .into_iter()
+            .map(|items| {
+                let mut l = KnnList::new(k);
+                l.items = items;
+                l
+            })
+            .collect();
 
         // Iterated local joins: for each u, sample pairs among (neighbors ∪
-        // reverse neighbors) and try cross-linking them.
-        for _it in 0..params.iters {
-            // Reverse adjacency sample.
+        // reverse neighbors) and try cross-linking them. Per batch, the
+        // pools and all pairwise distances are computed concurrently from
+        // the frozen lists; the `offer` updates (which mutate arbitrary
+        // nodes' lists) commit serially in ascending node order.
+        for it in 0..params.iters {
+            // Reverse adjacency sample (frozen at iteration start).
             let mut reverse: Vec<Vec<u32>> = vec![Vec::new(); n];
             for u in 0..n {
                 for nb in &lists[u].items {
@@ -126,23 +160,46 @@ impl NnDescent {
                 }
             }
             let mut updates = 0usize;
-            for u in 0..n {
-                let mut pool: Vec<u32> =
-                    lists[u].items.iter().map(|x| x.id).collect();
-                pool.extend_from_slice(&reverse[u]);
-                pool.sort_unstable();
-                pool.dedup();
-                if pool.len() > params.sample * 2 {
-                    rng.shuffle(&mut pool);
-                    pool.truncate(params.sample * 2);
-                }
-                for i in 0..pool.len() {
-                    for j in i + 1..pool.len() {
-                        let (a, b) = (pool[i], pool[j]);
-                        if a == b {
-                            continue;
+            let mut start = 0usize;
+            while start < n {
+                let end = (start + JOIN_BATCH).min(n);
+                let scored: Vec<Vec<(u32, u32, f32)>> = {
+                    let frozen = &lists;
+                    let rev = &reverse;
+                    let (sample, seed) = (params.sample, params.seed);
+                    parallel_map(end - start, threads, move |bi| {
+                        let u = start + bi;
+                        let mut pool: Vec<u32> =
+                            frozen[u].items.iter().map(|x| x.id).collect();
+                        pool.extend_from_slice(&rev[u]);
+                        pool.sort_unstable();
+                        pool.dedup();
+                        if pool.len() > sample * 2 {
+                            // Keyed stream per (iteration, node): the
+                            // subsample is independent of visit order.
+                            let mut r = Pcg32::with_stream(
+                                seed ^ (it as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15),
+                                u as u64,
+                            );
+                            r.shuffle(&mut pool);
+                            pool.truncate(sample * 2);
                         }
-                        let d = l2_sq(store.row(a as usize), store.row(b as usize));
+                        let mut out = Vec::with_capacity(pool.len() * (pool.len() - 1) / 2);
+                        for i in 0..pool.len() {
+                            for j in i + 1..pool.len() {
+                                let (a, b) = (pool[i], pool[j]);
+                                if a == b {
+                                    continue;
+                                }
+                                let d = l2_sq(store.row(a as usize), store.row(b as usize));
+                                out.push((a, b, d));
+                            }
+                        }
+                        out
+                    })
+                };
+                for pairs in &scored {
+                    for &(a, b, d) in pairs {
                         if lists[a as usize].offer(Neighbor { dist: d, id: b }) {
                             updates += 1;
                         }
@@ -151,23 +208,31 @@ impl NnDescent {
                         }
                     }
                 }
+                start = end;
             }
             if updates == 0 {
                 break; // converged
             }
         }
 
-        // Convert to a searchable graph: optional diversity prune, then
-        // add reverse edges up to the degree cap.
+        // Convert to a searchable graph: optional diversity prune (a pure
+        // per-node function of the final lists — fanned out), then add
+        // reverse edges up to the degree cap (serial, order-dependent).
         let mut adj = FlatAdj::new(n, params.degree);
-        for u in 0..n {
-            let kept = if params.prune {
-                select_heuristic(store, &lists[u].items, params.degree)
-            } else {
-                lists[u].items.iter().take(params.degree).copied().collect()
-            };
-            let ids: Vec<u32> = kept.iter().map(|x| x.id).collect();
-            adj.set(u as u32, &ids);
+        let kept_ids: Vec<Vec<u32>> = {
+            let frozen = &lists;
+            let (prune, degree) = (params.prune, params.degree);
+            parallel_map(n, threads, move |u| {
+                let kept: Vec<Neighbor> = if prune {
+                    select_heuristic(store, &frozen[u].items, degree)
+                } else {
+                    frozen[u].items.iter().take(degree).copied().collect()
+                };
+                kept.iter().map(|x| x.id).collect()
+            })
+        };
+        for (u, ids) in kept_ids.iter().enumerate() {
+            adj.set(u as u32, ids);
         }
         for u in 0..n as u32 {
             let nbs: Vec<u32> = adj.neighbors(u).to_vec();

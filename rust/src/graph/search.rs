@@ -19,9 +19,8 @@
 //! ann_index.rs` pins this end to end.
 
 use std::cmp::Ordering;
-use std::hint::black_box;
 
-use crate::core::distance::{l2_sq, l2_sq_batch4};
+use crate::core::distance::{l2_sq, l2_sq_batch4, l2_sq_scalar, prefetch_l1};
 use crate::core::store::VectorStore;
 use crate::graph::adjacency::FlatAdj;
 use crate::index::context::SearchContext;
@@ -194,8 +193,13 @@ pub fn beam_search_filtered<F: LiveFilter + ?Sized>(
     let mut dists = std::mem::take(&mut ctx.dists);
     store.pad_query(q, &mut qp);
 
+    // Unbatched mode doubles as the full fallback: it scores through the
+    // portable scalar kernels directly, bypassing the SIMD dispatch
+    // (bitwise-identical results either way — that is the contract).
+    let exact: fn(&[f32], &[f32]) -> f32 = if batched { l2_sq } else { l2_sq_scalar };
+
     ctx.visited.insert(entry);
-    let d0 = l2_sq(&qp, store.row(entry as usize));
+    let d0 = exact(&qp, store.row(entry as usize));
     if ctx.stats_enabled {
         ctx.stats.dist_calls += 1;
     }
@@ -228,12 +232,12 @@ pub fn beam_search_filtered<F: LiveFilter + ?Sized>(
         if batched {
             let mut i = 0;
             while i + 4 <= block.len() {
-                // Prefetch hint: touch the next block of rows early so
-                // their cache lines are in flight while this block's FMAs
-                // retire (plain reads — no intrinsics).
+                // Prefetch: start the next block's cache lines toward L1
+                // while this block's FMAs retire (`prefetcht0` /
+                // `prfm pldl1keep` behind the kernel dispatch).
                 if i + 8 <= block.len() {
                     for t in i + 4..i + 8 {
-                        black_box(store.row(block[t] as usize)[0]);
+                        prefetch_l1(store.row(block[t] as usize).as_ptr());
                     }
                 }
                 let d4 = l2_sq_batch4(
@@ -247,11 +251,11 @@ pub fn beam_search_filtered<F: LiveFilter + ?Sized>(
                 i += 4;
             }
             for &nb in &block[i..] {
-                dists.push(l2_sq(&qp, store.row(nb as usize)));
+                dists.push(exact(&qp, store.row(nb as usize)));
             }
         } else {
             for &nb in &block[..] {
-                dists.push(l2_sq(&qp, store.row(nb as usize)));
+                dists.push(exact(&qp, store.row(nb as usize)));
             }
         }
 

@@ -2,15 +2,23 @@
 //! flat-graph baseline in the paper's Figures 1/5/8. Random R-regular
 //! initialization, then two refinement passes of greedy-search +
 //! alpha-robust pruning from the dataset medoid.
+//!
+//! Refinement is batch-parallel and deterministic: each batch of the
+//! shuffled pass order runs its medoid beam searches + alpha-robust
+//! prunes concurrently against the frozen graph (the adjacency as of the
+//! batch start), then commits the new lists and pruned backward edges
+//! serially in pass order — so the built graph is bitwise identical for
+//! every `params.threads` (pinned by `rust/tests/kernel_dispatch.rs`).
 
 use crate::core::distance::l2_sq;
 use crate::core::matrix::Matrix;
 use crate::core::rng::Pcg32;
 use crate::core::store::VectorStore;
+use crate::core::threads::{parallel_map_with, resolve_threads};
 use crate::graph::adjacency::FlatAdj;
 use crate::graph::earlyterm::beam_search_early_term;
 use crate::graph::search::{beam_search_filtered, AllLive, Neighbor};
-use crate::index::context::{SearchContext, SearchParams};
+use crate::index::context::{ContextPool, SearchContext, SearchParams};
 
 #[derive(Clone, Debug)]
 pub struct VamanaParams {
@@ -22,6 +30,9 @@ pub struct VamanaParams {
     pub alpha: f32,
     pub seed: u64,
     pub passes: usize,
+    /// Build worker threads (0 = `FINGER_THREADS`/auto); the built graph
+    /// is identical for every value, so this is never persisted.
+    pub threads: usize,
 }
 
 impl Default for VamanaParams {
@@ -32,9 +43,15 @@ impl Default for VamanaParams {
             alpha: 1.2,
             seed: 42,
             passes: 2,
+            threads: 0,
         }
     }
 }
+
+/// Refinement batch size: big enough to feed every worker, small enough
+/// that in-pass staleness (a batch searches the graph as of its start)
+/// stays a small fraction of a pass.
+const REFINE_BATCH: usize = 128;
 
 pub struct Vamana {
     pub params: VamanaParams,
@@ -71,22 +88,51 @@ impl Vamana {
         let medoid = find_medoid(store, &mut rng);
         let mut g = Vamana { params, adj, medoid };
 
-        let mut ctx = SearchContext::for_universe(n);
+        let threads = resolve_threads(g.params.threads);
+        let pool = ContextPool::new(threads, n);
         let mut order: Vec<u32> = (0..n as u32).collect();
         for _pass in 0..g.params.passes {
             rng.shuffle(&mut order);
-            for &u in &order {
-                let q = store.row_logical(u as usize);
-                let mut found = beam_search_filtered(
-                    store, &g.adj, g.medoid, q, g.params.l, &AllLive, true, &mut ctx,
-                );
-                found.retain(|c| c.id != u);
-                let pruned = robust_prune(store, u, &found, g.params.alpha, g.params.r);
-                let list: Vec<u32> = pruned.iter().map(|c| c.id).collect();
-                g.adj.set(u, &list);
-                // Backward edges with pruning on overflow.
-                for c in pruned {
-                    g.add_edge_with_prune(store, c.id, u);
+            // Search-parallel / commit-serial batches over the pass order:
+            // the expensive medoid beam search + alpha-robust prune of
+            // each item is a pure function of the frozen adjacency, so it
+            // fans out (workers reuse pooled contexts across batches); the
+            // list writes and backward-edge prunes commit serially in pass
+            // order.
+            for chunk in order.chunks(REFINE_BATCH) {
+                let plans: Vec<Vec<u32>> = {
+                    let frozen = &g;
+                    parallel_map_with(
+                        chunk.len(),
+                        threads,
+                        || pool.checkout(),
+                        |ctx, i| {
+                            let u = chunk[i];
+                            let q = store.row_logical(u as usize);
+                            let mut found = beam_search_filtered(
+                                store,
+                                &frozen.adj,
+                                frozen.medoid,
+                                q,
+                                frozen.params.l,
+                                &AllLive,
+                                true,
+                                ctx,
+                            );
+                            found.retain(|c| c.id != u);
+                            let p = &frozen.params;
+                            let pruned = robust_prune(store, u, &found, p.alpha, p.r);
+                            pruned.iter().map(|c| c.id).collect()
+                        },
+                    )
+                };
+                for (i, list) in plans.into_iter().enumerate() {
+                    let u = chunk[i];
+                    g.adj.set(u, &list);
+                    // Backward edges with pruning on overflow.
+                    for v in list {
+                        g.add_edge_with_prune(store, v, u);
+                    }
                 }
             }
         }

@@ -10,6 +10,8 @@
 //! `Option<&mut SearchStats>`.
 
 use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
 
 use crate::graph::search::{MinNeighbor, Neighbor, SearchStats};
 use crate::graph::visited::VisitedSet;
@@ -211,6 +213,37 @@ impl Default for SearchContext {
     }
 }
 
+/// Fixed pool of pooled contexts for the batch-parallel index builds:
+/// each batch's workers check one out (`ContextPool::checkout`) instead
+/// of allocating a fresh `SearchContext` per batch, so the O(universe)
+/// visited set and the heap capacities are paid once per build, not once
+/// per batch. At most `workers` guards may be live at a time (that is
+/// exactly how many workers a build batch spawns); concurrent checkouts
+/// take consecutive counter values, so with `live ≤ workers ≤ slots`
+/// every live guard maps to a distinct slot and the locks never contend.
+pub struct ContextPool {
+    slots: Vec<Mutex<SearchContext>>,
+    next: AtomicUsize,
+}
+
+impl ContextPool {
+    /// Pool of `workers` contexts pre-sized for a universe of `n` points.
+    pub fn new(workers: usize, n: usize) -> ContextPool {
+        ContextPool {
+            slots: (0..workers.max(1))
+                .map(|_| Mutex::new(SearchContext::for_universe(n)))
+                .collect(),
+            next: AtomicUsize::new(0),
+        }
+    }
+
+    /// Check out a context for the duration of one worker's batch run.
+    pub fn checkout(&self) -> MutexGuard<'_, SearchContext> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.slots.len();
+        self.slots[i].lock().unwrap()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -245,6 +278,22 @@ mod tests {
         assert!(ctx.top.is_empty());
         ctx.top.push(Neighbor { dist: 0.5, id: 9 });
         assert_eq!(ctx.drain_top()[0].id, 9);
+    }
+
+    #[test]
+    fn context_pool_hands_out_distinct_slots() {
+        let pool = ContextPool::new(2, 10);
+        {
+            // Two simultaneous checkouts (the worker count the pool was
+            // sized for) must not contend or deadlock.
+            let mut a = pool.checkout();
+            let mut b = pool.checkout();
+            assert!(a.visited.insert(3));
+            assert!(b.visited.insert(3));
+        }
+        // Released guards make every slot available again.
+        let _c = pool.checkout();
+        let _d = pool.checkout();
     }
 
     #[test]

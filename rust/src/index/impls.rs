@@ -12,6 +12,12 @@
 //! extended in lockstep on insert. Padding is numerically invisible (see
 //! `core::distance`), so store-backed searches return bit-identical
 //! results to matrix-backed ones.
+//!
+//! Construction parallelism rides inside each family's params struct
+//! (`threads`, 0 = auto): the graph builds and FINGER training are
+//! deterministic under any worker count, and compaction rebuilds inherit
+//! the same params — so a compacted index is as reproducible as a fresh
+//! build.
 
 use std::io;
 use std::sync::Arc;

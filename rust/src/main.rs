@@ -79,7 +79,9 @@ fn help() {
          \u{20}  bench    FIGURE [--scale F] [--out DIR]   (figure1..figure8, table1, rank-selection, churn, hotpath, all)\n\
          \u{20}  info\n\
          sharding (build/search/serve): --shards S [--shard-strategy round-robin|kmeans]\n\
-         \u{20}                         [--min-shard-frac F]   (probe the nearest F·S shards, 0<F<=1)"
+         \u{20}                         [--min-shard-frac F]   (probe the nearest F·S shards, 0<F<=1)\n\
+         build parallelism (build/search/serve): --threads N   (0 = FINGER_THREADS/auto;\n\
+         \u{20}                         any N builds a bitwise-identical index)"
     );
 }
 
@@ -95,8 +97,10 @@ fn dataset_from_args(args: &Args) -> finger_ann::data::Dataset {
 }
 
 /// Build any index family over `data` — the single construction path used
-/// by `build`, `search`, and `serve`.
-fn build_method(method: &str, data: Arc<Matrix>, args: &Args) -> Box<dyn AnnIndex> {
+/// by `build`, `search`, and `serve`. `threads` is the build parallelism
+/// for this index (0 = `FINGER_THREADS`/auto); the built index is
+/// bitwise identical for every value.
+fn build_method(method: &str, data: Arc<Matrix>, args: &Args, threads: usize) -> Box<dyn AnnIndex> {
     let m = args.get_usize("M", 16);
     let efc = args.get_usize("efc", 120);
     let rank = args.get_usize("rank", 16);
@@ -104,20 +108,20 @@ fn build_method(method: &str, data: Arc<Matrix>, args: &Args) -> Box<dyn AnnInde
         "bruteforce" => Box::new(BruteForce::new(data)),
         "hnsw" => Box::new(HnswIndex::build(
             data,
-            HnswParams { m, ef_construction: efc, ..Default::default() },
+            HnswParams { m, ef_construction: efc, threads, ..Default::default() },
         )),
         "finger" | "hnsw-finger" => Box::new(FingerHnswIndex::build(
             data,
-            HnswParams { m, ef_construction: efc, ..Default::default() },
-            FingerParams { rank, ..Default::default() },
+            HnswParams { m, ef_construction: efc, threads, ..Default::default() },
+            FingerParams { rank, threads, ..Default::default() },
         )),
         "vamana" => Box::new(VamanaIndex::build(
             data,
-            VamanaParams { r: args.get_usize("R", 32), ..Default::default() },
+            VamanaParams { r: args.get_usize("R", 32), threads, ..Default::default() },
         )),
         "nndescent" => Box::new(NnDescentIndex::build(
             data,
-            NnDescentParams { degree: args.get_usize("degree", 32), ..Default::default() },
+            NnDescentParams { degree: args.get_usize("degree", 32), threads, ..Default::default() },
         )),
         "ivfpq" => Box::new(IvfPqIndex::build(
             data,
@@ -136,15 +140,18 @@ fn build_method(method: &str, data: Arc<Matrix>, args: &Args) -> Box<dyn AnnInde
 fn build_index(args: &Args, data: Arc<Matrix>) -> Box<dyn AnnIndex> {
     let method = args.get("method").unwrap_or("finger");
     let shards = args.get_usize("shards", 1);
+    let threads = args.get_usize("threads", 0);
     if shards <= 1 {
-        return build_method(method, data, args);
+        return build_method(method, data, args, threads);
     }
     let strategy_name = args.get("shard-strategy").unwrap_or("round-robin");
     let strategy = ShardStrategy::parse(strategy_name).unwrap_or_else(|| {
         eprintln!("unknown shard strategy '{strategy_name}' (round-robin|kmeans)");
         std::process::exit(2);
     });
-    let spec = ShardSpec { n_shards: shards, strategy, ..Default::default() };
+    // The shard fan-out (`spec.threads`) supplies the parallelism; each
+    // shard builds single-threaded so S × T workers don't oversubscribe.
+    let spec = ShardSpec { n_shards: shards, strategy, threads, ..Default::default() };
     // Reject rather than clamp: a typo'd fraction would otherwise silently
     // probe one shard and collapse recall.
     let frac = match args.get("min-shard-frac") {
@@ -157,7 +164,7 @@ fn build_index(args: &Args, data: Arc<Matrix>) -> Box<dyn AnnIndex> {
             }
         },
     };
-    let index = ShardedIndex::build(data, &spec, |sub| build_method(method, sub, args))
+    let index = ShardedIndex::build(data, &spec, |sub| build_method(method, sub, args, 1))
         .with_min_shard_frac(frac);
     println!(
         "sharded across {} {} shards (probing {}/query)",

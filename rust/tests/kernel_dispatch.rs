@@ -1,0 +1,249 @@
+//! Property suites for the two determinism contracts this repo's strict
+//! equality tests stand on:
+//!
+//! 1. **Kernel dispatch** — whatever backend `core::simd::kernels()`
+//!    selected (AVX2+FMA, NEON, or scalar) returns bitwise-identical
+//!    results to the portable scalar reference for every kernel, across
+//!    the full length zoo (empty / sub-lane / exact-lane / lane+1 / odd
+//!    multi-chunk / real dims), NaN rows, zero-padded tails, and batch4
+//!    remainder handling. Running under `FINGER_KERNEL=scalar` makes
+//!    these trivially true — CI runs the suite in both configurations.
+//!
+//! 2. **Parallel build determinism** — building any graph family with
+//!    `threads ∈ {1, 2, 8}` persists byte-identical index bundles
+//!    (adjacency, levels, entry, FINGER tables — everything), because
+//!    the batched build plans in parallel against a frozen prefix and
+//!    commits serially in a fixed order.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use finger_ann::core::distance::{self, Metric};
+use finger_ann::core::rng::Pcg32;
+use finger_ann::core::simd::{kernels, scalar};
+use finger_ann::core::store::VectorStore;
+use finger_ann::data::persist::save_index;
+use finger_ann::data::synth::tiny;
+use finger_ann::finger::construct::FingerParams;
+use finger_ann::graph::hnsw::{Hnsw, HnswParams};
+use finger_ann::graph::nndescent::NnDescentParams;
+use finger_ann::graph::vamana::VamanaParams;
+use finger_ann::index::impls::{FingerHnswIndex, HnswIndex, NnDescentIndex, VamanaIndex};
+use finger_ann::index::{AnnIndex, SearchContext, SearchParams};
+use finger_ann::testutil::forall;
+
+/// Empty, sub-lane, exact-lane, lane+1, odd multi-chunk, and real dims.
+const LENS: &[usize] = &[0, 1, 7, 8, 9, 17, 100, 784];
+
+fn randv(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_gaussian()).collect()
+}
+
+fn pad_to_lanes(v: &[f32]) -> Vec<f32> {
+    let mut p = v.to_vec();
+    p.resize(v.len().div_ceil(distance::LANES) * distance::LANES, 0.0);
+    p
+}
+
+#[test]
+fn dispatched_kernels_bitwise_equal_scalar_across_lengths() {
+    let ks = kernels();
+    println!("active backend: {}", ks.backend.name());
+    forall("kernel-dispatch-bitwise", 200, |rng| {
+        for &n in LENS {
+            let a = randv(rng, n);
+            let b = randv(rng, n);
+            if (ks.l2_sq)(&a, &b).to_bits() != scalar::l2_sq(&a, &b).to_bits() {
+                return false;
+            }
+            if (ks.dot)(&a, &b).to_bits() != scalar::dot(&a, &b).to_bits() {
+                return false;
+            }
+            let rows: Vec<Vec<f32>> = (0..4).map(|_| randv(rng, n)).collect();
+            let gl = (ks.l2_sq_batch4)(&a, &rows[0], &rows[1], &rows[2], &rows[3]);
+            let sl = scalar::l2_sq_batch4(&a, &rows[0], &rows[1], &rows[2], &rows[3]);
+            let gd = (ks.dot_batch4)(&a, &rows[0], &rows[1], &rows[2], &rows[3]);
+            let sd = scalar::dot_batch4(&a, &rows[0], &rows[1], &rows[2], &rows[3]);
+            for t in 0..4 {
+                if gl[t].to_bits() != sl[t].to_bits() || gd[t].to_bits() != sd[t].to_bits() {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn dispatched_kernels_propagate_nan_like_scalar() {
+    let mut r = Pcg32::new(0xA11);
+    for &n in &[1usize, 7, 8, 17, 100] {
+        let q = randv(&mut r, n);
+        let mut rows: Vec<Vec<f32>> = (0..4).map(|_| randv(&mut r, n)).collect();
+        rows[1][0] = f32::NAN;
+        rows[3][n - 1] = f32::NAN; // NaN in the lane-folded tail position
+        let got = distance::l2_sq_batch4(&q, &rows[0], &rows[1], &rows[2], &rows[3]);
+        let want = scalar::l2_sq_batch4(&q, &rows[0], &rows[1], &rows[2], &rows[3]);
+        for t in 0..4 {
+            assert_eq!(got[t].to_bits(), want[t].to_bits(), "n={n} row {t}");
+        }
+        assert!(got[1].is_nan() && got[3].is_nan());
+        assert!(!got[0].is_nan() && !got[2].is_nan());
+    }
+}
+
+#[test]
+fn dispatched_kernels_keep_zero_padding_invisible() {
+    // The VectorStore contract must hold under every backend: padded
+    // inputs score bitwise-identically to logical ones.
+    let mut r = Pcg32::new(0xB22);
+    for &n in LENS {
+        let a = randv(&mut r, n);
+        let b = randv(&mut r, n);
+        assert_eq!(
+            distance::l2_sq(&a, &b).to_bits(),
+            distance::l2_sq(&pad_to_lanes(&a), &pad_to_lanes(&b)).to_bits(),
+            "l2 n={n}"
+        );
+        assert_eq!(
+            distance::dot(&a, &b).to_bits(),
+            distance::dot(&pad_to_lanes(&a), &pad_to_lanes(&b)).to_bits(),
+            "dot n={n}"
+        );
+    }
+}
+
+#[test]
+fn batch4_remainders_compose_with_single_row_kernel() {
+    // Call sites batch blocks in fours and score the remainder with the
+    // single-row kernel; the composition must equal all-single scoring.
+    let mut r = Pcg32::new(0xC33);
+    for &blocklen in &[1usize, 2, 3, 4, 5, 6, 7, 9] {
+        let n = 13; // non-lane-multiple dim
+        let q = randv(&mut r, n);
+        let rows: Vec<Vec<f32>> = (0..blocklen).map(|_| randv(&mut r, n)).collect();
+        let mut mixed = Vec::new();
+        let mut i = 0;
+        while i + 4 <= blocklen {
+            let d4 = distance::l2_sq_batch4(&q, &rows[i], &rows[i + 1], &rows[i + 2], &rows[i + 3]);
+            mixed.extend_from_slice(&d4);
+            i += 4;
+        }
+        for row in &rows[i..] {
+            mixed.push(distance::l2_sq(&q, row));
+        }
+        for (t, row) in rows.iter().enumerate() {
+            assert_eq!(
+                mixed[t].to_bits(),
+                distance::l2_sq(&q, row).to_bits(),
+                "blocklen={blocklen} row {t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn search_streams_identical_under_dispatch_and_forced_scalar() {
+    // End-to-end: the dispatched-kernel batched search and the forced
+    // scalar-kernel search return bitwise-identical (dist, id) streams.
+    let ds = tiny(907, 400, 28, Metric::L2);
+    let store = VectorStore::from_matrix(&ds.data);
+    let h = Hnsw::build_with_store(
+        &store,
+        HnswParams { m: 10, ef_construction: 60, ..Default::default() },
+    );
+    let mut ctx = SearchContext::new();
+    let batched = SearchParams::new(10).with_ef(60);
+    let scalar_mode = SearchParams::new(10).with_ef(60).with_scalar_kernels(true);
+    for qi in 0..ds.queries.rows().min(20) {
+        let q = ds.queries.row(qi);
+        let a = h.search(&store, q, &batched, &mut ctx);
+        let b = h.search(&store, q, &scalar_mode, &mut ctx);
+        assert_eq!(a, b, "query {qi}");
+    }
+}
+
+// ---------------------------------------------------------------- builds
+
+fn tmp(name: &str) -> PathBuf {
+    // Unique per call: tests run on parallel harness threads, and two of
+    // them build the same (family, threads) combination — a (pid, name)
+    // key alone would collide.
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("finger_dispatch_{}_{seq}_{name}", std::process::id()))
+}
+
+/// Build one family at the given thread count and return its persisted
+/// bundle bytes.
+fn build_bytes(family: &str, threads: usize) -> Vec<u8> {
+    let ds = tiny(911, 230, 12, Metric::L2);
+    let data = Arc::clone(&ds.data);
+    let index: Box<dyn AnnIndex> = match family {
+        "hnsw" => Box::new(HnswIndex::build(
+            data,
+            HnswParams { m: 8, ef_construction: 60, threads, ..Default::default() },
+        )),
+        "hnsw-finger" => Box::new(FingerHnswIndex::build(
+            data,
+            HnswParams { m: 8, ef_construction: 60, threads, ..Default::default() },
+            FingerParams { rank: 8, threads, ..Default::default() },
+        )),
+        "vamana" => Box::new(VamanaIndex::build(
+            data,
+            VamanaParams { r: 16, l: 40, threads, ..Default::default() },
+        )),
+        "nndescent" => Box::new(NnDescentIndex::build(
+            data,
+            NnDescentParams {
+                k: 10,
+                sample: 6,
+                iters: 3,
+                degree: 12,
+                threads,
+                ..Default::default()
+            },
+        )),
+        other => panic!("unknown family {other}"),
+    };
+    let path = tmp(&format!("{family}_{threads}.idx"));
+    save_index(&path, index.as_ref()).expect("save index");
+    let bytes = std::fs::read(&path).expect("read bundle");
+    std::fs::remove_file(&path).ok();
+    bytes
+}
+
+/// The tentpole acceptance property: a parallel build persists the exact
+/// bytes of the single-threaded build, for every graph family.
+#[test]
+fn parallel_builds_persist_identical_bytes() {
+    for family in ["hnsw", "hnsw-finger", "vamana", "nndescent"] {
+        let reference = build_bytes(family, 1);
+        assert!(!reference.is_empty());
+        for threads in [2usize, 8] {
+            let got = build_bytes(family, threads);
+            let first_diff = got
+                .iter()
+                .zip(&reference)
+                .position(|(a, b)| a != b)
+                .unwrap_or(got.len().min(reference.len()));
+            assert!(
+                got == reference,
+                "{family}: T={threads} bundle differs from T=1 \
+                 ({} vs {} bytes, first diff at byte {first_diff})",
+                got.len(),
+                reference.len()
+            );
+        }
+    }
+}
+
+/// `threads = 0` (auto) must match any explicit thread count too — the
+/// knob only changes scheduling, never the result.
+#[test]
+fn auto_threads_build_matches_explicit() {
+    let auto = build_bytes("hnsw", 0);
+    let one = build_bytes("hnsw", 1);
+    assert!(auto == one, "auto-thread build differs from T=1");
+}
