@@ -473,9 +473,39 @@ fn validate_ivfpq(q: &IvfPq, n: usize, dim: usize) -> io::Result<()> {
 
 // ------------------------------------------------------- tagged bundles
 
+/// Fsync a directory so a just-renamed entry survives power loss.
+/// Best-effort: some filesystems refuse directory fsync, and the rename
+/// itself is already atomic, so failures are swallowed.
+pub fn sync_dir(dir: &Path) {
+    let dir = if dir.as_os_str().is_empty() { Path::new(".") } else { dir };
+    if let Ok(d) = std::fs::File::open(dir) {
+        d.sync_all().ok();
+    }
+}
+
 /// Save any `AnnIndex` implementor: header + data matrix + family payload.
+///
+/// Crash-safe: the bundle is written to `<path>.tmp`, fsynced, then
+/// atomically renamed over `path` (and the parent directory fsynced), so
+/// a crash at any point leaves either the old complete bundle or the new
+/// one — never a torn mix, and never a destroyed previous copy.
 pub fn save_index(path: &Path, index: &dyn AnnIndex) -> io::Result<()> {
-    let mut file = io::BufWriter::new(std::fs::File::create(path)?);
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    let written = write_bundle(&tmp, index).and_then(|()| std::fs::rename(&tmp, path));
+    if let Err(e) = written {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e);
+    }
+    sync_dir(path.parent().unwrap_or_else(|| Path::new(".")));
+    Ok(())
+}
+
+/// Write the bundle bytes to `tmp` and fsync them (the first half of the
+/// crash-safe save; the atomic rename happens in [`save_index`]).
+fn write_bundle(tmp: &Path, index: &dyn AnnIndex) -> io::Result<()> {
+    let mut file = io::BufWriter::new(std::fs::File::create(tmp)?);
     {
         let sink: &mut dyn io::Write = &mut file;
         let mut w = BinWriter::new(sink);
@@ -485,7 +515,8 @@ pub fn save_index(path: &Path, index: &dyn AnnIndex) -> io::Result<()> {
         w.matrix(index.data())?;
         index.save_payload(&mut w)?;
     }
-    io::Write::flush(&mut file)
+    let file = file.into_inner().map_err(|e| e.into_error())?;
+    file.sync_all()
 }
 
 /// Load an index saved by [`save_index`], dispatching on the kind tag.
@@ -840,6 +871,27 @@ mod tests {
         let b = m.insert(&v, &mut ctx).unwrap();
         assert_eq!(a, b);
         assert_eq!(a, 121);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn save_is_atomic_and_leaves_no_temp_file() {
+        let ds = tiny(408, 40, 4, Metric::L2);
+        let idx = crate::index::impls::BruteForce::new(Arc::clone(&ds.data));
+        let path = tmp("atomic.idx");
+        let tmp_path = {
+            let mut t = path.as_os_str().to_os_string();
+            t.push(".tmp");
+            std::path::PathBuf::from(t)
+        };
+        save_index(&path, &idx).unwrap();
+        assert!(path.exists());
+        assert!(!tmp_path.exists(), "temp file must be renamed away");
+        let before = std::fs::read(&path).unwrap();
+        // Saving over an existing bundle replaces it whole.
+        save_index(&path, &idx).unwrap();
+        assert!(!tmp_path.exists());
+        assert_eq!(std::fs::read(&path).unwrap(), before, "deterministic resave");
         std::fs::remove_file(&path).ok();
     }
 

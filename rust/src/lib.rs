@@ -16,6 +16,8 @@
 //!   (stubbed offline; see `runtime::xla_stub`).
 //! * [`router`] — serving layer: dynamic batching, workers, metrics, any
 //!   `AnnIndex` behind the server.
+//! * [`wal`] — durable mutation plane: checksummed write-ahead log, group
+//!   commit, snapshot checkpoints, crash recovery.
 //! * [`eval`] — recall/throughput harnesses regenerating every figure.
 //!
 //! See the repository `README.md` for the paper-to-module map and the
@@ -32,3 +34,4 @@ pub mod quant;
 pub mod router;
 pub mod runtime;
 pub mod testutil;
+pub mod wal;

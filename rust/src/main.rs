@@ -43,6 +43,7 @@ use finger_ann::index::{
 use finger_ann::quant::ivfpq::IvfPqParams;
 use finger_ann::router::{Client, MutOutcome, Request, ServeIndex, Server, ServerConfig};
 use finger_ann::runtime::{default_artifacts_dir, service::RerankService, Manifest};
+use finger_ann::wal::{FsyncPolicy, ScanResult, Wal, WalOp};
 
 const METHODS: &str = "bruteforce|hnsw|finger|vamana|nndescent|ivfpq";
 
@@ -58,6 +59,8 @@ fn main() {
         "update" => update(&args),
         "delete" => delete(&args),
         "compact" => compact(&args),
+        "snapshot" => snapshot(&args),
+        "wal" => wal_cmd(&args),
         "bench" => bench(&args),
         "info" => info(),
         _ => help(),
@@ -76,8 +79,12 @@ fn help() {
          \u{20}  update   --vector \"v1,v2,...\" [--addr A]   (insert into a running server)\n\
          \u{20}  delete   --key ID [--addr A]               (tombstone a served point)\n\
          \u{20}  compact  [--addr A]                        (reclaim tombstones if over threshold)\n\
+         \u{20}  snapshot [--addr A]                        (checkpoint a serving index via its WAL)\n\
+         \u{20}  wal      dump|truncate --wal-dir DIR      (inspect / repair a WAL directory)\n\
          \u{20}  bench    FIGURE [--scale F] [--out DIR]   (figure1..figure8, table1, rank-selection, churn, hotpath, all)\n\
          \u{20}  info\n\
+         durability (serve): --wal-dir DIR [--fsync-policy always|every_n:N|interval_ms:M|never]\n\
+         \u{20}                         (log every mutation before ack; recover on restart)\n\
          sharding (build/search/serve): --shards S [--shard-strategy round-robin|kmeans]\n\
          \u{20}                         [--min-shard-frac F]   (probe the nearest F·S shards, 0<F<=1)\n\
          build parallelism (build/search/serve): --threads N   (0 = FINGER_THREADS/auto;\n\
@@ -251,10 +258,10 @@ fn search(args: &Args) {
     );
 }
 
-fn serve(args: &Args) {
-    // Either load a prebuilt tagged bundle (`--index path`, any family) or
-    // build the requested `--method` in-process.
-    let index: Box<dyn AnnIndex> = if let Some(path) = args.get("index") {
+/// The non-durable index acquisition for `serve`: load a prebuilt tagged
+/// bundle (`--index path`, any family) or build `--method` in-process.
+fn build_or_load(args: &Args) -> Box<dyn AnnIndex> {
+    if let Some(path) = args.get("index") {
         // A prebuilt bundle carries its own shard layout and probe
         // fraction; accepting build-time shard flags here would silently
         // ignore them, so reject the combination outright.
@@ -273,12 +280,67 @@ fn serve(args: &Args) {
         let ds = dataset_from_args(args);
         println!("building {} index...", args.get("method").unwrap_or("finger"));
         build_index(args, Arc::clone(&ds.data))
+    }
+}
+
+fn fsync_policy_from_args(args: &Args) -> FsyncPolicy {
+    let name = args.get("fsync-policy").unwrap_or("always");
+    FsyncPolicy::parse(name).unwrap_or_else(|| {
+        eprintln!("bad --fsync-policy '{name}' (always|every_n:N|interval_ms:M|never)");
+        std::process::exit(2);
+    })
+}
+
+fn serve(args: &Args) {
+    // With `--wal-dir`, the directory is the source of truth: a durable
+    // generation in it is recovered (build/--index flags are ignored so a
+    // restart can never silently serve stale pre-crash state); an empty
+    // one is bootstrapped around the built/loaded index.
+    let mut wal: Option<Arc<Wal>> = None;
+    let index: Box<dyn AnnIndex> = if let Some(dir) = args.get("wal-dir") {
+        let dir = PathBuf::from(dir);
+        let policy = fsync_policy_from_args(args);
+        if Wal::has_snapshot(&dir) {
+            if args.get("index").is_some() || args.get("dataset").is_some() {
+                println!(
+                    "--wal-dir {} holds a durable generation; recovering it \
+                     (--index/--dataset flags ignored)",
+                    dir.display()
+                );
+            }
+            let (index, w, report) = Wal::recover(&dir, policy).unwrap_or_else(|e| {
+                eprintln!("recovery from {} failed: {e}", dir.display());
+                std::process::exit(1);
+            });
+            println!("{}", report.summary());
+            wal = Some(Arc::new(w));
+            index
+        } else {
+            let index = build_or_load(args);
+            let w = Wal::bootstrap(&dir, index.as_ref(), policy).unwrap_or_else(|e| {
+                eprintln!("wal bootstrap in {} failed: {e}", dir.display());
+                std::process::exit(1);
+            });
+            println!(
+                "wal bootstrapped in {} (fsync policy {})",
+                dir.display(),
+                policy.name()
+            );
+            wal = Some(Arc::new(w));
+            index
+        }
+    } else {
+        build_or_load(args)
     };
     let dim = index.dim();
     let name = index.name();
     // Same knob surface as `search`: --ef/--nprobe/--patience all apply
     // (k still comes per request).
-    let serve_index = Arc::new(ServeIndex::with_params(index, params_from_args(args, 10)));
+    let mut serve_index = ServeIndex::with_params(index, params_from_args(args, 10));
+    if let Some(w) = &wal {
+        serve_index = serve_index.with_wal(Arc::clone(w));
+    }
+    let serve_index = Arc::new(serve_index);
 
     let rerank = if args.has_flag("rerank") {
         let data = Arc::new(serve_index.data_clone());
@@ -309,6 +371,9 @@ fn serve(args: &Args) {
         server.local_addr, config.workers, config.max_batch
     );
     println!("protocol: one JSON per line: {{\"id\":1,\"vector\":[..],\"k\":10}}");
+    // Piped stdout is block-buffered: flush so a supervising process (the
+    // crash-recovery smoke test included) can read the bound address now.
+    std::io::Write::flush(&mut std::io::stdout()).ok();
     loop {
         std::thread::sleep(std::time::Duration::from_secs(10));
         println!("{}", server.metrics.summary());
@@ -338,6 +403,9 @@ fn apply_mutation(args: &Args, req: Request) {
                 if did { "compacted" } else { "below compaction threshold; not rebuilt" },
                 resp.live
             ),
+            MutOutcome::Saved(seq) => {
+                println!("checkpointed at seq {seq} ({} live)", resp.live)
+            }
         },
         Err(e) => {
             eprintln!("server rejected the mutation: {e}");
@@ -383,6 +451,72 @@ fn compact(args: &Args) {
     apply_mutation(args, Request::Compact { id: 0 });
 }
 
+/// `finger snapshot` — checkpoint a serving index through its WAL (SAVE
+/// verb): fresh durable snapshot + log rotation, no restart.
+fn snapshot(args: &Args) {
+    apply_mutation(args, Request::Save { id: 0 });
+}
+
+fn describe_op(op: &WalOp) -> String {
+    match op {
+        WalOp::Insert { vector } => format!("insert (dim {})", vector.len()),
+        WalOp::Delete { key } => format!("delete key {key}"),
+        WalOp::Compact => "compact".into(),
+    }
+}
+
+fn print_scan(dir: &std::path::Path, seq: u64, scan: &ScanResult) {
+    println!("wal generation {seq} in {}", dir.display());
+    for (s, op) in &scan.ops {
+        println!("  seq {s:>6}  {}", describe_op(op));
+    }
+    match &scan.corruption {
+        Some(why) => println!(
+            "  ! torn tail: {why} ({} byte(s) past the durable prefix)",
+            scan.dropped_bytes
+        ),
+        None => println!(
+            "  clean: {} op(s), {} durable byte(s)",
+            scan.ops.len(),
+            scan.durable_len
+        ),
+    }
+}
+
+/// `finger wal dump|truncate --wal-dir DIR` — offline WAL inspection and
+/// repair (truncate cuts the log back to its durable prefix).
+fn wal_cmd(args: &Args) {
+    let action = args.positional.get(1).map(|s| s.as_str()).unwrap_or("dump");
+    let Some(dir) = args.get("wal-dir") else {
+        eprintln!("wal {action} requires --wal-dir DIR");
+        std::process::exit(2);
+    };
+    let dir = std::path::Path::new(dir);
+    let result = match action {
+        "dump" => Wal::dump(dir),
+        "truncate" => Wal::repair(dir),
+        other => {
+            eprintln!("unknown wal action '{other}' (dump|truncate)");
+            std::process::exit(2);
+        }
+    };
+    match result {
+        Ok((seq, scan)) => {
+            print_scan(dir, seq, &scan);
+            if action == "truncate" {
+                println!(
+                    "truncated to {} byte(s); {} torn byte(s) dropped",
+                    scan.durable_len, scan.dropped_bytes
+                );
+            }
+        }
+        Err(e) => {
+            eprintln!("wal {action} failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
 /// Churn sweep: interleaved insert/delete/query recall-over-time for the
 /// mutable families (the streaming-workload scenario).
 fn bench_churn(out: &std::path::Path, scale: f64) {
@@ -425,6 +559,68 @@ fn bench_churn(out: &std::path::Path, scale: f64) {
     }
     let path = out.join("churn.csv");
     std::fs::write(&path, csv_all).expect("write churn.csv");
+    println!("wrote {}", path.display());
+    bench_churn_durability(out, &ds, n);
+}
+
+/// Durability section of the churn benchmark: mutation throughput with the
+/// WAL attached, one row per fsync policy. Shows what `fsync=always` costs
+/// relative to group-committed (`every_n`) and unsynced (`never`) appends.
+fn bench_churn_durability(out: &std::path::Path, ds: &finger_ann::data::Dataset, n: usize) {
+    use finger_ann::core::json::Json;
+    use finger_ann::core::rng::Pcg32;
+
+    let dim = ds.data.cols();
+    let ops = (n / 4).clamp(50, 1000);
+    let mut rows = Vec::new();
+    println!("churn durability (hnsw, {ops} inserts per policy):");
+    for policy_name in ["always", "every_n:8", "never"] {
+        let policy = FsyncPolicy::parse(policy_name).expect("known policy");
+        let dir = std::env::temp_dir()
+            .join(format!("finger_bench_wal_{}_{}", std::process::id(), policy.name().replace(':', "_")));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut index: Box<dyn AnnIndex> = Box::new(HnswIndex::build(
+            Arc::clone(&ds.data),
+            HnswParams { m: 12, ef_construction: 80, ..Default::default() },
+        ));
+        let wal = Wal::bootstrap(&dir, index.as_ref(), policy).expect("bootstrap wal");
+        let mutable = index.as_mutable().expect("hnsw is mutable");
+        let mut ctx = SearchContext::new();
+        let mut rng = Pcg32::new(991);
+        let t0 = Instant::now();
+        for _ in 0..ops {
+            let vector: Vec<f32> = (0..dim).map(|_| rng.next_gaussian()).collect();
+            mutable.insert(&vector, &mut ctx).expect("insert");
+            let (w, seq) = wal.append(&WalOp::Insert { vector }).expect("append");
+            w.commit(seq).expect("commit");
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let w = wal.writer();
+        let ops_per_sec = ops as f64 / secs.max(1e-9);
+        println!(
+            "  fsync={:<12} {:>9.0} ops/s  ({} fsync(s), {} log byte(s))",
+            policy.name(),
+            ops_per_sec,
+            w.sync_count(),
+            w.len()
+        );
+        rows.push(Json::obj(vec![
+            ("policy", Json::str(policy.name().as_str())),
+            ("ops", Json::num(ops as f64)),
+            ("ops_per_sec", Json::num(ops_per_sec)),
+            ("fsyncs", Json::num(w.sync_count() as f64)),
+            ("log_bytes", Json::num(w.len() as f64)),
+        ]));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    let doc = Json::obj(vec![
+        ("schema", Json::str("finger-ann/churn-durability/v1")),
+        ("n", Json::num(n as f64)),
+        ("dim", Json::num(dim as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let path = out.join("BENCH_churn.json");
+    std::fs::write(&path, format!("{doc}\n")).expect("write BENCH_churn.json");
     println!("wrote {}", path.display());
 }
 

@@ -14,6 +14,12 @@
 //!       -> {"id": 9, "deleted": 42, "live": ...}
 //!   {"id": 10, "op": "compact"}
 //!       -> {"id": 10, "compacted": true|false, "live": ...}
+//!   {"id": 11, "op": "save"}
+//!       -> {"id": 11, "saved": <checkpoint seq>, "live": ...}
+//!
+//! `save` checkpoints the serving index through the WAL (fresh snapshot +
+//! log rotation) without a restart; it requires the server to be running
+//! with `--wal-dir`.
 //!
 //! Every failure — malformed frame, unknown verb, unsupported family,
 //! stale id — is a structured `{"id": N, "error": "..."}` line on the
@@ -130,6 +136,7 @@ pub enum Request {
     Insert { id: u64, vector: Vec<f32> },
     Delete { id: u64, key: u32 },
     Compact { id: u64 },
+    Save { id: u64 },
 }
 
 impl Request {
@@ -169,6 +176,10 @@ impl Request {
                 let id = v.get("id").and_then(|x| x.as_f64()).ok_or("missing id")? as u64;
                 Ok(Request::Compact { id })
             }
+            "save" => {
+                let id = v.get("id").and_then(|x| x.as_f64()).ok_or("missing id")? as u64;
+                Ok(Request::Save { id })
+            }
             other => Err(format!("unknown op '{other}'")),
         }
     }
@@ -177,9 +188,10 @@ impl Request {
     pub fn id(&self) -> u64 {
         match self {
             Request::Query(q) => q.id,
-            Request::Insert { id, .. } | Request::Delete { id, .. } | Request::Compact { id } => {
-                *id
-            }
+            Request::Insert { id, .. }
+            | Request::Delete { id, .. }
+            | Request::Compact { id }
+            | Request::Save { id } => *id,
         }
     }
 
@@ -206,6 +218,11 @@ impl Request {
                 ("op", Json::str("compact")),
             ])
             .to_string(),
+            Request::Save { id } => Json::obj(vec![
+                ("id", Json::Num(*id as f64)),
+                ("op", Json::str("save")),
+            ])
+            .to_string(),
         }
     }
 }
@@ -216,6 +233,8 @@ pub enum MutOutcome {
     Inserted(u32),
     Deleted(u32),
     Compacted(bool),
+    /// Checkpoint written; carries the new snapshot sequence.
+    Saved(u64),
 }
 
 /// Acknowledgement for a mutation verb, with the post-op live count.
@@ -232,6 +251,7 @@ impl MutResponse {
             MutOutcome::Inserted(id) => ("inserted", Json::Num(id as f64)),
             MutOutcome::Deleted(id) => ("deleted", Json::Num(id as f64)),
             MutOutcome::Compacted(did) => ("compacted", Json::Bool(did)),
+            MutOutcome::Saved(seq) => ("saved", Json::Num(seq as f64)),
         };
         Json::obj(vec![
             ("id", Json::Num(self.id as f64)),
@@ -254,6 +274,8 @@ impl MutResponse {
             MutOutcome::Deleted(x as u32)
         } else if let Some(b) = v.get("compacted").and_then(|x| x.as_bool()) {
             MutOutcome::Compacted(b)
+        } else if let Some(x) = v.get("saved").and_then(|x| x.as_f64()) {
+            MutOutcome::Saved(x as u64)
         } else {
             return Err("not a mutation acknowledgement".into());
         };
@@ -314,6 +336,7 @@ mod tests {
             Request::Delete { id: 2, key: 77 },
             Request::Compact { id: 3 },
             Request::Query(QueryRequest { id: 4, vector: vec![1.0], k: 2 }),
+            Request::Save { id: 5 },
         ];
         for f in frames {
             let back = Request::parse(&f.to_json_line()).unwrap();
@@ -341,6 +364,7 @@ mod tests {
         assert!(Request::parse(r#"{"id":1,"op":"delete","key":1.5}"#).is_err());
         assert!(Request::parse(r#"{"id":1,"op":"frobnicate"}"#).is_err());
         assert!(Request::parse(r#"{"op":"compact"}"#).is_err(), "compact needs an id");
+        assert!(Request::parse(r#"{"op":"save"}"#).is_err(), "save needs an id");
     }
 
     #[test]
@@ -350,6 +374,7 @@ mod tests {
             MutOutcome::Deleted(4),
             MutOutcome::Compacted(true),
             MutOutcome::Compacted(false),
+            MutOutcome::Saved(12),
         ] {
             let resp = MutResponse { id: 11, outcome, live: 100 };
             let back = MutResponse::parse(&resp.to_json_line()).unwrap();

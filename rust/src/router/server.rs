@@ -22,7 +22,7 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::time::{Duration, Instant};
 
 use crate::core::matrix::Matrix;
@@ -33,6 +33,24 @@ use crate::router::protocol::{
     error_line, MutOutcome, MutResponse, QueryRequest, QueryResponse, Request,
 };
 use crate::runtime::service::RerankService;
+use crate::wal::{Wal, WalOp, WalWriter};
+
+// Poison-tolerant lock acquisition. A panic inside one mutation handler
+// used to poison the index lock and turn every subsequent request on
+// every connection into a panic of its own; recovering the guard keeps
+// the server answering (the panicking request itself is reported as a
+// structured in-band error by `mutate`).
+fn rlock<T: ?Sized>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|e| e.into_inner())
+}
+
+fn wlock<T: ?Sized>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|e| e.into_inner())
+}
+
+fn mlock<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Shared serving state: any index family behind one API. Reads (search)
 /// run concurrently; the mutation verbs serialize behind the write lock.
@@ -54,6 +72,11 @@ pub struct ServeIndex {
     /// valid the moment ids and rows can diverge — so rerank is bypassed
     /// from then on.
     mutated: AtomicBool,
+    /// Optional durability plane: when present, every applied mutation is
+    /// appended under the index write lock (so WAL order == apply order)
+    /// and committed per the fsync policy before the verb is
+    /// acknowledged.
+    wal: Option<Arc<Wal>>,
 }
 
 impl ServeIndex {
@@ -67,7 +90,19 @@ impl ServeIndex {
             params,
             mut_ctx: Mutex::new(SearchContext::new()),
             mutated: AtomicBool::new(false),
+            wal: None,
         }
+    }
+
+    /// Attach a durability plane: mutations append + commit before ack,
+    /// and the `save` verb checkpoints through it.
+    pub fn with_wal(mut self, wal: Arc<Wal>) -> ServeIndex {
+        self.wal = Some(wal);
+        self
+    }
+
+    pub fn wal(&self) -> Option<&Arc<Wal>> {
+        self.wal.as_ref()
     }
 
     /// Has any mutation verb been applied? (Disables the snapshot-based
@@ -79,76 +114,133 @@ impl ServeIndex {
     pub fn search(&self, q: &[f32], k: usize, ctx: &mut SearchContext) -> Vec<(f32, u32)> {
         let mut p = self.params.clone();
         p.k = k;
-        self.index
-            .read()
-            .unwrap()
+        rlock(&self.index)
             .search(q, &p, ctx)
             .into_iter()
             .map(|n| (n.dist, n.id))
             .collect()
     }
 
-    /// Apply one mutation verb under the write lock. Non-mutable families
-    /// and stale ids produce structured errors, never panics or drops.
-    /// Compaction rebuilds inline (see the struct docs for the tradeoff).
+    /// Apply one mutation verb under the write lock. Non-mutable families,
+    /// stale ids, and even panicking handlers produce structured errors,
+    /// never dropped connections. With a WAL attached the op is appended
+    /// under the lock (WAL order == apply order) and made durable per the
+    /// fsync policy *before* the acknowledgement — commit happens after
+    /// the lock drops, so concurrent committers share fsyncs (group
+    /// commit). Compaction rebuilds inline (see the struct docs for the
+    /// tradeoff).
     pub fn mutate(&self, req: &Request) -> Result<MutResponse, String> {
-        let mut guard = self.index.write().unwrap();
-        let dim = guard.dim();
-        let name = guard.name();
-        let Some(index) = guard.as_mutable() else {
-            return Err(format!("index family '{name}' does not support mutation"));
-        };
-        let mut ctx = self.mut_ctx.lock().unwrap();
-        let ctx = &mut *ctx;
-        let outcome = match req {
-            Request::Insert { vector, .. } => {
-                if vector.len() != dim {
-                    return Err(format!("dim mismatch: got {}, want {dim}", vector.len()));
-                }
-                let key = index.insert(vector, ctx).map_err(|e| e.to_string())?;
-                MutOutcome::Inserted(key)
-            }
-            Request::Delete { key, .. } => {
-                index.remove(*key).map_err(|e| e.to_string())?;
-                MutOutcome::Deleted(*key)
-            }
-            Request::Compact { .. } => {
-                MutOutcome::Compacted(index.compact(ctx).map_err(|e| e.to_string())?)
-            }
-            Request::Query(_) => return Err("not a mutation".into()),
-        };
-        // A compact that declined to rebuild changed nothing; everything
-        // else invalidates the rerank snapshot.
-        if !matches!(outcome, MutOutcome::Compacted(false)) {
-            self.mutated.store(true, Ordering::Release);
+        if let Request::Save { id } = req {
+            let (seq, live) = self.save()?;
+            return Ok(MutResponse { id: *id, outcome: MutOutcome::Saved(seq), live });
         }
-        Ok(MutResponse {
-            id: req.id(),
-            outcome,
-            live: index.live_len() as u64,
-        })
+        let mut pending: Option<(Arc<WalWriter>, u64)> = None;
+        let (outcome, live) = {
+            let mut guard = wlock(&self.index);
+            let dim = guard.dim();
+            let name = guard.name();
+            let Some(index) = guard.as_mutable() else {
+                return Err(format!("index family '{name}' does not support mutation"));
+            };
+            let mut ctx = mlock(&self.mut_ctx);
+            let ctx = &mut *ctx;
+            // Catch panics so one bad request cannot take down the server
+            // (and, with the poison-tolerant guards above, cannot wedge
+            // the lock for everyone else). A panicked op is NOT logged:
+            // the WAL only ever holds ops that completed, which is what
+            // lets recovery replay unconditionally.
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || -> Result<MutOutcome, String> {
+                    Ok(match req {
+                        Request::Insert { vector, .. } => {
+                            if vector.len() != dim {
+                                return Err(format!(
+                                    "dim mismatch: got {}, want {dim}",
+                                    vector.len()
+                                ));
+                            }
+                            let key = index.insert(vector, ctx).map_err(|e| e.to_string())?;
+                            MutOutcome::Inserted(key)
+                        }
+                        Request::Delete { key, .. } => {
+                            index.remove(*key).map_err(|e| e.to_string())?;
+                            MutOutcome::Deleted(*key)
+                        }
+                        Request::Compact { .. } => {
+                            MutOutcome::Compacted(index.compact(ctx).map_err(|e| e.to_string())?)
+                        }
+                        Request::Query(_) | Request::Save { .. } => {
+                            return Err("not a mutation".into())
+                        }
+                    })
+                },
+            ))
+            .map_err(|_| "mutation handler panicked; op not applied to the log".to_string())??;
+            // Applied: append before acking, still under the index lock.
+            // Compact is logged even when the threshold gate declined —
+            // the gate is deterministic, so replay declines identically.
+            if let Some(wal) = &self.wal {
+                let op = match req {
+                    Request::Insert { vector, .. } => WalOp::Insert { vector: vector.clone() },
+                    Request::Delete { key, .. } => WalOp::Delete { key: *key },
+                    Request::Compact { .. } => WalOp::Compact,
+                    Request::Query(_) | Request::Save { .. } => unreachable!(),
+                };
+                pending =
+                    Some(wal.append(&op).map_err(|e| format!("wal append failed: {e}"))?);
+            }
+            // A compact that declined to rebuild changed nothing;
+            // everything else invalidates the rerank snapshot.
+            if !matches!(outcome, MutOutcome::Compacted(false)) {
+                self.mutated.store(true, Ordering::Release);
+            }
+            (outcome, index.live_len() as u64)
+        };
+        // Durability before acknowledgement, outside the index lock so
+        // concurrent committers coalesce onto one fsync.
+        if let Some((w, seq)) = pending {
+            w.commit(seq).map_err(|e| format!("wal commit failed: {e}"))?;
+        }
+        Ok(MutResponse { id: req.id(), outcome, live })
+    }
+
+    /// Checkpoint the serving index through the WAL: fresh snapshot + log
+    /// rotation, under the write lock so the cut is quiescent. Returns
+    /// the new snapshot sequence and the live count.
+    pub fn save(&self) -> Result<(u64, u64), String> {
+        let Some(wal) = &self.wal else {
+            return Err("snapshot requires a WAL (serve --wal-dir)".into());
+        };
+        let guard = wlock(&self.index);
+        let seq = wal
+            .checkpoint(guard.as_ref())
+            .map_err(|e| format!("checkpoint failed: {e}"))?;
+        let live = guard
+            .as_mutable_view()
+            .map_or(guard.len() as u64, |v| v.live_len() as u64);
+        Ok((seq, live))
     }
 
     /// Copy of one data row (test/bench convenience; takes the read lock).
     pub fn row(&self, i: usize) -> Vec<f32> {
-        self.index.read().unwrap().data().row(i).to_vec()
+        rlock(&self.index).data().row(i).to_vec()
     }
 
     /// Clone of the whole data matrix (rerank service setup).
     pub fn data_clone(&self) -> Matrix {
-        self.index.read().unwrap().data().clone()
+        rlock(&self.index).data().clone()
     }
 
     pub fn dim(&self) -> usize {
-        self.index.read().unwrap().dim()
+        rlock(&self.index).dim()
     }
 
     pub fn len(&self) -> usize {
-        self.index.read().unwrap().len()
+        rlock(&self.index).len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.index.read().unwrap().is_empty()
+        rlock(&self.index).is_empty()
     }
 }
 
@@ -344,7 +436,7 @@ fn batch_hits(index: &ServeIndex, batch: &[Job], ctx: &mut SearchContext) -> Vec
     // One read-lock acquisition per dynamic batch: every search in the
     // batch sees the same index snapshot, and concurrent mutation verbs
     // wait at most one batch.
-    let ix = index.index.read().unwrap();
+    let ix = rlock(&index.index);
     let dim = ix.dim();
     let uniform = batch.len() > 1
         && batch
@@ -727,6 +819,91 @@ mod tests {
         let resp = client.query(&QueryRequest { id: 2, vector: serve.row(0), k: 3 }).unwrap();
         assert_eq!(resp.hits[0].1, 0);
         server.shutdown();
+    }
+
+    /// A panic while holding the index lock used to poison it and kill
+    /// every later request on every connection. The poison-tolerant
+    /// guards keep the server answering.
+    #[test]
+    fn poisoned_lock_recovers_and_serving_continues() {
+        let index = test_index();
+        {
+            let index = Arc::clone(&index);
+            let _ = std::thread::spawn(move || {
+                let _guard = index.index.write().unwrap_or_else(|e| e.into_inner());
+                panic!("poison the index lock");
+            })
+            .join();
+        }
+        let mut ctx = SearchContext::new();
+        let hits = index.search(&index.row(0), 3, &mut ctx);
+        assert_eq!(hits[0].1, 0, "search survives a poisoned lock");
+        let ack = index.mutate(&Request::Delete { id: 1, key: 5 }).unwrap();
+        assert_eq!(ack.outcome, MutOutcome::Deleted(5), "mutation survives too");
+    }
+
+    /// SAVE without a WAL is a structured error, not a crash.
+    #[test]
+    fn save_without_wal_is_a_structured_error() {
+        let index = test_index();
+        let err = index.mutate(&Request::Save { id: 1 }).unwrap_err();
+        assert!(err.contains("--wal-dir"), "{err}");
+    }
+
+    /// Full durability loop over TCP: mutations append to the WAL, SAVE
+    /// checkpoints mid-flight, and recovery after a "crash" reproduces
+    /// the served index byte for byte.
+    #[test]
+    fn wal_attached_server_logs_saves_and_recovers() {
+        use crate::data::persist::save_index;
+        use crate::wal::{snapshot_path, FsyncPolicy, Wal};
+        let bundle = |index: &dyn AnnIndex, name: &str| -> Vec<u8> {
+            let p = std::env::temp_dir()
+                .join(format!("finger_srvwal_b_{}_{name}", std::process::id()));
+            save_index(&p, index).unwrap();
+            let b = std::fs::read(&p).unwrap();
+            std::fs::remove_file(&p).ok();
+            b
+        };
+
+        let ds = tiny(210, 150, 8, Metric::L2);
+        let idx = HnswIndex::build(
+            Arc::clone(&ds.data),
+            HnswParams { m: 8, ef_construction: 40, ..Default::default() },
+        );
+        let dir = std::env::temp_dir().join(format!("finger_srvwal_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let wal = Arc::new(Wal::bootstrap(&dir, &idx, FsyncPolicy::EveryN(4)).unwrap());
+        let serve =
+            Arc::new(ServeIndex::new(Box::new(idx), 64).with_wal(Arc::clone(&wal)));
+        let server = Server::start(Arc::clone(&serve), cfg(), None).unwrap();
+        let mut client = Client::connect(&server.local_addr).unwrap();
+
+        let v: Vec<f32> = (0..8).map(|i| 40.0 + i as f32).collect();
+        let ack = client.mutate(&Request::Insert { id: 1, vector: v }).unwrap();
+        assert_eq!(ack.outcome, MutOutcome::Inserted(150));
+        client.mutate(&Request::Delete { id: 2, key: 3 }).unwrap();
+
+        // SAVE checkpoints through the WAL without a restart.
+        let ack = client.mutate(&Request::Save { id: 3 }).unwrap();
+        assert_eq!(ack.outcome, MutOutcome::Saved(2));
+        assert!(snapshot_path(&dir, 2).exists());
+
+        // One more logged op after the checkpoint, then "crash".
+        client.mutate(&Request::Delete { id: 4, key: 7 }).unwrap();
+        server.shutdown();
+
+        let (recovered, _wal2, report) = Wal::recover(&dir, FsyncPolicy::Never).unwrap();
+        assert_eq!(report.snapshot_seq, 2);
+        assert_eq!(report.replayed, 1, "only the post-checkpoint op replays");
+        assert!(report.corruption.is_none(), "{report:?}");
+        let served = bundle(rlock(&serve.index).as_ref(), "served");
+        assert_eq!(
+            bundle(recovered.as_ref(), "recovered"),
+            served,
+            "recovered bundle must byte-match the served index"
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     /// The families the old two-variant `IndexKind` enum could not serve

@@ -1,0 +1,279 @@
+//! WAL record format: checksummed, length-prefixed, block-aligned.
+//!
+//! The log is a sequence of 32 KiB blocks (LevelDB's `log_format`). Each
+//! block holds physical records back to back:
+//!
+//! ```text
+//!   crc u32 | len u16 | type u8 | payload (len bytes)
+//! ```
+//!
+//! `crc` is CRC-32 (IEEE) over `type || payload`, so a bit flip anywhere
+//! in the stored bytes is detected. A logical record larger than the
+//! space left in a block is fragmented (`First`/`Middle`/`Last`); small
+//! ones are a single `Full` fragment. When fewer than `HEADER_SIZE`
+//! bytes remain in a block the tail is zero-filled — the reader
+//! recognizes the padding unambiguously because fragment type `0` is
+//! reserved, and skips to the next block boundary.
+//!
+//! Because every fragment is verified independently, a torn write — the
+//! crash leaving only a prefix of the final `write(2)` on disk — is
+//! detected at the first fragment whose bytes are short or whose CRC
+//! mismatches, and recovery truncates to the last complete *logical*
+//! record (a dangling `First` without its `Last` is dropped too).
+//!
+//! Logical payloads are the mutation ops ([`WalOp`]): the exact verbs
+//! the router serves, each prefixed with its monotone op sequence
+//! number so replay can assert contiguity against the snapshot it
+//! starts from.
+
+/// Block size; fragment boundaries never straddle it.
+pub const BLOCK_SIZE: usize = 32 * 1024;
+/// Physical fragment header: crc u32 + len u16 + type u8.
+pub const HEADER_SIZE: usize = 7;
+
+/// Fragment types. `0` is reserved so block-tail zero padding can never
+/// parse as a fragment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FragType {
+    Full = 1,
+    First = 2,
+    Middle = 3,
+    Last = 4,
+}
+
+impl FragType {
+    pub fn from_u8(v: u8) -> Option<FragType> {
+        match v {
+            1 => Some(FragType::Full),
+            2 => Some(FragType::First),
+            3 => Some(FragType::Middle),
+            4 => Some(FragType::Last),
+            _ => None,
+        }
+    }
+}
+
+// ------------------------------------------------------------- CRC-32
+
+/// CRC-32 (IEEE 802.3, reflected, polynomial 0xEDB88320) — the zero-dep
+/// table-driven implementation; matches `zlib.crc32`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 == 1 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut c = !0u32;
+    for &b in bytes {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+fn frag_crc(ty: FragType, payload: &[u8]) -> u32 {
+    let mut buf = Vec::with_capacity(1 + payload.len());
+    buf.push(ty as u8);
+    buf.extend_from_slice(payload);
+    crc32(&buf)
+}
+
+// --------------------------------------------------- physical framing
+
+/// Append one logical record to `out`, fragmenting against the current
+/// block offset `block_off` (bytes already used in the current block).
+/// Returns the new block offset. Purely deterministic: the emitted bytes
+/// depend only on `(block_off, payload)`.
+pub fn encode_record(out: &mut Vec<u8>, mut block_off: usize, payload: &[u8]) -> usize {
+    let mut rest = payload;
+    let mut first = true;
+    loop {
+        let leftover = BLOCK_SIZE - block_off;
+        if leftover < HEADER_SIZE {
+            // Zero-fill the unusable tail; the reader skips it.
+            out.resize(out.len() + leftover, 0);
+            block_off = 0;
+            continue;
+        }
+        let avail = leftover - HEADER_SIZE;
+        let take = rest.len().min(avail);
+        let end = take == rest.len();
+        let ty = match (first, end) {
+            (true, true) => FragType::Full,
+            (true, false) => FragType::First,
+            (false, false) => FragType::Middle,
+            (false, true) => FragType::Last,
+        };
+        let (chunk, tail) = rest.split_at(take);
+        out.extend_from_slice(&frag_crc(ty, chunk).to_le_bytes());
+        out.extend_from_slice(&(take as u16).to_le_bytes());
+        out.push(ty as u8);
+        out.extend_from_slice(chunk);
+        block_off += HEADER_SIZE + take;
+        if block_off == BLOCK_SIZE {
+            block_off = 0;
+        }
+        if end {
+            return block_off;
+        }
+        rest = tail;
+        first = false;
+    }
+}
+
+// ------------------------------------------------------- logical ops
+
+/// One durable mutation: exactly the verbs the router serves. `Compact`
+/// is logged even when the threshold gate declines — the gate is
+/// deterministic, so replay declines identically and the recovered
+/// bytes stay identical to the uninterrupted run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WalOp {
+    Insert { vector: Vec<f32> },
+    Delete { key: u32 },
+    Compact,
+}
+
+const OP_INSERT: u8 = 1;
+const OP_DELETE: u8 = 2;
+const OP_COMPACT: u8 = 3;
+
+impl WalOp {
+    /// Short verb name (`wal dump`, reports).
+    pub fn name(&self) -> &'static str {
+        match self {
+            WalOp::Insert { .. } => "insert",
+            WalOp::Delete { .. } => "delete",
+            WalOp::Compact => "compact",
+        }
+    }
+
+    /// Serialize with the op sequence number: `seq u64 | op u8 | body`.
+    pub fn encode(&self, seq: u64) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16);
+        out.extend_from_slice(&seq.to_le_bytes());
+        match self {
+            WalOp::Insert { vector } => {
+                out.push(OP_INSERT);
+                out.extend_from_slice(&(vector.len() as u32).to_le_bytes());
+                for &x in vector {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            WalOp::Delete { key } => {
+                out.push(OP_DELETE);
+                out.extend_from_slice(&key.to_le_bytes());
+            }
+            WalOp::Compact => out.push(OP_COMPACT),
+        }
+        out
+    }
+
+    /// Decode one logical payload. Errors (short body, unknown op byte,
+    /// length mismatch) are strings the recovery report carries — a
+    /// corrupt payload that still passed CRC is treated like any other
+    /// corruption point: replay stops there.
+    pub fn decode(buf: &[u8]) -> Result<(u64, WalOp), String> {
+        if buf.len() < 9 {
+            return Err(format!("logical record too short ({} bytes)", buf.len()));
+        }
+        let seq = u64::from_le_bytes(buf[..8].try_into().unwrap());
+        let body = &buf[9..];
+        let op = match buf[8] {
+            OP_INSERT => {
+                if body.len() < 4 {
+                    return Err("insert record missing dim".into());
+                }
+                let dim = u32::from_le_bytes(body[..4].try_into().unwrap()) as usize;
+                let data = &body[4..];
+                if data.len() != dim * 4 {
+                    return Err(format!(
+                        "insert record body {} bytes, want {} (dim {dim})",
+                        data.len(),
+                        dim * 4
+                    ));
+                }
+                let vector = data
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                WalOp::Insert { vector }
+            }
+            OP_DELETE => {
+                if body.len() != 4 {
+                    return Err("delete record wants exactly a u32 key".into());
+                }
+                WalOp::Delete { key: u32::from_le_bytes(body.try_into().unwrap()) }
+            }
+            OP_COMPACT => {
+                if !body.is_empty() {
+                    return Err("compact record carries unexpected bytes".into());
+                }
+                WalOp::Compact
+            }
+            other => return Err(format!("unknown op byte {other}")),
+        };
+        Ok((seq, op))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // Standard check value: CRC-32("123456789") = 0xCBF43926.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn op_encoding_roundtrips() {
+        for (seq, op) in [
+            (1u64, WalOp::Insert { vector: vec![1.5, -2.0, 0.0] }),
+            (2, WalOp::Delete { key: 77 }),
+            (3, WalOp::Compact),
+            (u64::MAX, WalOp::Insert { vector: vec![] }),
+        ] {
+            let bytes = op.encode(seq);
+            let (s, back) = WalOp::decode(&bytes).unwrap();
+            assert_eq!(s, seq);
+            assert_eq!(back, op);
+        }
+    }
+
+    #[test]
+    fn op_decoding_rejects_corruption() {
+        assert!(WalOp::decode(&[]).is_err());
+        assert!(WalOp::decode(&[0; 8]).is_err());
+        let mut bytes = WalOp::Insert { vector: vec![1.0] }.encode(4);
+        bytes.pop(); // short body
+        assert!(WalOp::decode(&bytes).is_err());
+        let mut bytes = WalOp::Compact.encode(4);
+        bytes[8] = 99; // unknown verb
+        assert!(WalOp::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn encode_record_fragments_across_blocks() {
+        // Payload bigger than a block must fragment First/Middle.../Last.
+        let payload = vec![0xABu8; BLOCK_SIZE + 100];
+        let mut out = Vec::new();
+        let off = encode_record(&mut out, 0, &payload);
+        assert!(out.len() > payload.len());
+        assert_eq!(out[6], FragType::First as u8);
+        assert_eq!(off, out.len() % BLOCK_SIZE);
+        // A small record near the block end forces zero padding first.
+        let mut out2 = Vec::new();
+        let off2 = encode_record(&mut out2, BLOCK_SIZE - 3, b"xy");
+        assert_eq!(&out2[..3], &[0, 0, 0], "unusable tail zero-filled");
+        assert_eq!(off2, HEADER_SIZE + 2);
+    }
+}

@@ -1,0 +1,342 @@
+//! `WalWriter`: append mutation records, group-commit the fsyncs.
+//!
+//! Appends are serialized on one internal lock and write straight
+//! through to the OS (`write(2)` per logical record); durability is a
+//! separate [`WalWriter::commit`] step governed by the
+//! [`FsyncPolicy`]. The split is what makes **group commit** work: the
+//! router applies a mutation and appends its record while holding the
+//! index write lock, then releases the lock *before* committing. While
+//! one connection's `commit` sits in `fsync(2)`, other connections keep
+//! appending; when the fsync returns it covers every record appended
+//! before it started, so the later committers observe
+//! `synced_seq >= their seq` and return without issuing an fsync of
+//! their own — N acknowledgements, one disk flush.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+use crate::wal::record::{encode_record, WalOp, BLOCK_SIZE};
+
+/// When an acknowledged mutation is actually on disk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// Every acknowledgement waits for an fsync covering its record
+    /// (group-committed: concurrent mutations share one flush).
+    Always,
+    /// Fsync once per `n` appended records.
+    EveryN(u64),
+    /// Fsync when at least this many milliseconds passed since the last.
+    IntervalMs(u64),
+    /// Never fsync (the OS page cache decides; survives process crashes
+    /// but not power loss).
+    Never,
+}
+
+impl FsyncPolicy {
+    /// Parse the CLI spelling: `always | every_n:<N> | interval_ms:<M> |
+    /// never`.
+    pub fn parse(s: &str) -> Option<FsyncPolicy> {
+        match s {
+            "always" => return Some(FsyncPolicy::Always),
+            "never" => return Some(FsyncPolicy::Never),
+            _ => {}
+        }
+        let (kind, arg) = s.split_once(':')?;
+        let v: u64 = arg.parse().ok()?;
+        match kind {
+            "every_n" if v > 0 => Some(FsyncPolicy::EveryN(v)),
+            "interval_ms" => Some(FsyncPolicy::IntervalMs(v)),
+            _ => None,
+        }
+    }
+
+    /// The CLI spelling back.
+    pub fn name(&self) -> String {
+        match self {
+            FsyncPolicy::Always => "always".into(),
+            FsyncPolicy::EveryN(n) => format!("every_n:{n}"),
+            FsyncPolicy::IntervalMs(m) => format!("interval_ms:{m}"),
+            FsyncPolicy::Never => "never".into(),
+        }
+    }
+}
+
+/// Lock that shrugs off poisoning: a panicked mutation handler must not
+/// take the log down with it (the bytes already written are still
+/// well-formed — an interrupted append leaves a torn tail, which is
+/// exactly what recovery handles).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+struct LogState {
+    file: Arc<File>,
+    /// Bytes used in the current 32 KiB block.
+    block_off: usize,
+    /// Total bytes written (the durable-prefix byte length on a clean
+    /// sync; `wal truncate` repairs to the scanner's version of this).
+    len: u64,
+}
+
+struct SyncState {
+    /// Highest op seq covered by a completed fsync.
+    synced_seq: u64,
+    last_sync: Instant,
+}
+
+/// Appender over one log file. See the module docs for the locking
+/// discipline that yields group commit.
+pub struct WalWriter {
+    path: PathBuf,
+    policy: FsyncPolicy,
+    log: Mutex<LogState>,
+    sync: Mutex<SyncState>,
+    /// Last op seq handed out by `append` (reads don't need the log lock).
+    appended_seq: AtomicU64,
+    /// Completed `fsync(2)` calls — the observable group-commit ratio.
+    syncs: AtomicU64,
+}
+
+impl WalWriter {
+    /// Create a fresh log at `path` (fails if it already exists: logs are
+    /// only ever created by bootstrap/rotation, never overwritten). Ops
+    /// appended here get sequence numbers `start_seq + 1, start_seq + 2,
+    /// ...` — `start_seq` is the op count baked into the snapshot this
+    /// log extends.
+    pub fn create(path: &Path, policy: FsyncPolicy, start_seq: u64) -> io::Result<WalWriter> {
+        let file = OpenOptions::new().write(true).create_new(true).open(path)?;
+        Ok(WalWriter::from_file(path, policy, start_seq, file, 0))
+    }
+
+    /// Resume appending to a scanned log: `len` is the durable prefix
+    /// length the scanner validated and `last_seq` the last op it
+    /// replayed. The caller has already truncated the file to `len`.
+    pub fn resume(
+        path: &Path,
+        policy: FsyncPolicy,
+        last_seq: u64,
+        len: u64,
+    ) -> io::Result<WalWriter> {
+        let file = OpenOptions::new().write(true).append(true).open(path)?;
+        Ok(WalWriter::from_file(path, policy, last_seq, file, len))
+    }
+
+    fn from_file(
+        path: &Path,
+        policy: FsyncPolicy,
+        last_seq: u64,
+        file: File,
+        len: u64,
+    ) -> WalWriter {
+        WalWriter {
+            path: path.to_path_buf(),
+            policy,
+            log: Mutex::new(LogState {
+                file: Arc::new(file),
+                block_off: (len % BLOCK_SIZE as u64) as usize,
+                len,
+            }),
+            sync: Mutex::new(SyncState { synced_seq: last_seq, last_sync: Instant::now() }),
+            appended_seq: AtomicU64::new(last_seq),
+            syncs: AtomicU64::new(0),
+        }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn policy(&self) -> FsyncPolicy {
+        self.policy
+    }
+
+    /// Last op seq appended (not necessarily durable yet).
+    pub fn appended_seq(&self) -> u64 {
+        self.appended_seq.load(Ordering::Acquire)
+    }
+
+    /// Highest op seq a completed fsync covers.
+    pub fn synced_seq(&self) -> u64 {
+        lock(&self.sync).synced_seq
+    }
+
+    /// Completed fsyncs (bench/test observability).
+    pub fn sync_count(&self) -> u64 {
+        self.syncs.load(Ordering::Relaxed)
+    }
+
+    /// Bytes appended so far.
+    pub fn len(&self) -> u64 {
+        lock(&self.log).len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Append one op; returns its sequence number. The record reaches the
+    /// OS before this returns (single `write_all`), but is only durable
+    /// once a `commit` at or past the returned seq completes.
+    pub fn append(&self, op: &WalOp) -> io::Result<u64> {
+        let mut log = lock(&self.log);
+        let seq = self.appended_seq.load(Ordering::Acquire) + 1;
+        let payload = op.encode(seq);
+        let mut bytes = Vec::with_capacity(payload.len() + 64);
+        log.block_off = encode_record(&mut bytes, log.block_off, &payload);
+        (&*log.file).write_all(&bytes)?;
+        log.len += bytes.len() as u64;
+        self.appended_seq.store(seq, Ordering::Release);
+        Ok(seq)
+    }
+
+    /// Make the record at `seq` durable per the policy. Call this
+    /// *after* releasing whatever lock serialized the append — that's
+    /// what lets concurrent committers share one fsync.
+    pub fn commit(&self, seq: u64) -> io::Result<()> {
+        match self.policy {
+            FsyncPolicy::Never => Ok(()),
+            FsyncPolicy::Always => self.sync_to(seq),
+            FsyncPolicy::EveryN(n) => {
+                let s = lock(&self.sync);
+                let pending = self.appended_seq.load(Ordering::Acquire) - s.synced_seq;
+                if pending >= n {
+                    self.sync_locked(s)?;
+                }
+                Ok(())
+            }
+            FsyncPolicy::IntervalMs(ms) => {
+                let s = lock(&self.sync);
+                if s.last_sync.elapsed().as_millis() as u64 >= ms
+                    && self.appended_seq.load(Ordering::Acquire) > s.synced_seq
+                {
+                    self.sync_locked(s)?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Unconditional fsync of everything appended so far (checkpointing,
+    /// shutdown).
+    pub fn sync(&self) -> io::Result<()> {
+        self.sync_to(self.appended_seq.load(Ordering::Acquire))
+    }
+
+    /// Ensure a completed fsync covers `seq`; returns without syncing
+    /// when another committer's flush already did (the group-commit hit).
+    fn sync_to(&self, seq: u64) -> io::Result<()> {
+        let s = lock(&self.sync);
+        if s.synced_seq >= seq {
+            return Ok(());
+        }
+        self.sync_locked(s)
+    }
+
+    /// Fsync covering every append that completed before the flush
+    /// starts. Holds only the sync lock, so appends keep flowing.
+    fn sync_locked(&self, mut s: MutexGuard<'_, SyncState>) -> io::Result<()> {
+        let covered = self.appended_seq.load(Ordering::Acquire);
+        let file = Arc::clone(&lock(&self.log).file);
+        file.sync_data()?;
+        self.syncs.fetch_add(1, Ordering::Relaxed);
+        s.synced_seq = covered;
+        s.last_sync = Instant::now();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("finger_walw_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn fsync_policy_parses_and_prints() {
+        assert_eq!(FsyncPolicy::parse("always"), Some(FsyncPolicy::Always));
+        assert_eq!(FsyncPolicy::parse("never"), Some(FsyncPolicy::Never));
+        assert_eq!(FsyncPolicy::parse("every_n:8"), Some(FsyncPolicy::EveryN(8)));
+        assert_eq!(FsyncPolicy::parse("interval_ms:50"), Some(FsyncPolicy::IntervalMs(50)));
+        assert_eq!(FsyncPolicy::parse("every_n:0"), None);
+        assert_eq!(FsyncPolicy::parse("every_n"), None);
+        assert_eq!(FsyncPolicy::parse("sometimes"), None);
+        for p in ["always", "never", "every_n:3", "interval_ms:250"] {
+            assert_eq!(FsyncPolicy::parse(p).unwrap().name(), p);
+        }
+    }
+
+    #[test]
+    fn append_assigns_contiguous_seqs_and_refuses_clobbering() {
+        let path = tmp("seq.log");
+        std::fs::remove_file(&path).ok();
+        let w = WalWriter::create(&path, FsyncPolicy::Never, 10).unwrap();
+        assert_eq!(w.append(&WalOp::Compact).unwrap(), 11);
+        assert_eq!(w.append(&WalOp::Delete { key: 3 }).unwrap(), 12);
+        assert_eq!(w.appended_seq(), 12);
+        assert!(w.len() > 0);
+        // A second create over a live log must fail, not truncate it.
+        assert!(WalWriter::create(&path, FsyncPolicy::Never, 0).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn commit_policies_gate_fsyncs() {
+        let run = |policy: FsyncPolicy, n_ops: u64| -> (u64, u64) {
+            let path = tmp(&format!("pol_{}.log", policy.name().replace(':', "_")));
+            std::fs::remove_file(&path).ok();
+            let w = WalWriter::create(&path, policy, 0).unwrap();
+            for _ in 0..n_ops {
+                let seq = w.append(&WalOp::Compact).unwrap();
+                w.commit(seq).unwrap();
+            }
+            let out = (w.sync_count(), w.synced_seq());
+            std::fs::remove_file(&path).ok();
+            out
+        };
+        let (syncs, synced) = run(FsyncPolicy::Always, 10);
+        assert_eq!(syncs, 10, "single-threaded always = one fsync per op");
+        assert_eq!(synced, 10);
+        let (syncs, synced) = run(FsyncPolicy::EveryN(4), 10);
+        assert_eq!(syncs, 2, "fsync at op 4 and 8");
+        assert_eq!(synced, 8);
+        let (syncs, _) = run(FsyncPolicy::Never, 10);
+        assert_eq!(syncs, 0);
+        let (syncs, _) = run(FsyncPolicy::IntervalMs(3_600_000), 10);
+        assert_eq!(syncs, 0, "hour-long interval never fires in-test");
+    }
+
+    #[test]
+    fn group_commit_shares_fsyncs_across_threads() {
+        let path = tmp("group.log");
+        std::fs::remove_file(&path).ok();
+        let w = Arc::new(WalWriter::create(&path, FsyncPolicy::Always, 0).unwrap());
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let w = Arc::clone(&w);
+                std::thread::spawn(move || {
+                    for _ in 0..25 {
+                        let seq = w.append(&WalOp::Compact).unwrap();
+                        w.commit(seq).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(w.appended_seq(), 100);
+        assert_eq!(w.synced_seq(), 100, "every ack is covered by a flush");
+        assert!(
+            w.sync_count() <= 100,
+            "never more fsyncs than ops ({})",
+            w.sync_count()
+        );
+        std::fs::remove_file(&path).ok();
+    }
+}

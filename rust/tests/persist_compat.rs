@@ -12,6 +12,10 @@
 //! * `v4_sharded.idx` — magic | version 4 | tag 7 | matrix | strategy 0
 //!   (round-robin) | frac [1.0] | S=2 | per shard: even/odd row ids,
 //!   centroid, sub tag 6, sub matrix. No mutation sections anywhere.
+//! * `v5_bruteforce_mutable.idx` — magic | version 5 | tag 6 | 13x4
+//!   matrix (fixture rows + inserted `[9,9,9,9]`) | watermark 13 |
+//!   row ids 0..=12 | dead rows [5]. The golden copy of the current
+//!   mutable format: the writer must keep producing exactly these bytes.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -121,6 +125,33 @@ fn resaving_a_v3_fixture_as_v5_preserves_results() {
         let b = resaved.search(&q, &params, &mut ctx);
         assert_eq!(a, b);
     }
+}
+
+#[test]
+fn v5_mutable_fixture_is_byte_stable_and_loads_its_mutation_state() {
+    // Load side: the checked-in v5 bundle carries a live mutation section.
+    let loaded = load_index(&fixture("v5_bruteforce_mutable.idx")).expect("v5 still loads");
+    assert_eq!(loaded.name(), "bruteforce");
+    assert_eq!(loaded.len(), ROWS + 1);
+    let view = loaded.as_mutable_view().expect("bruteforce is mutable");
+    assert_eq!(view.live_len(), ROWS); // 13 rows, one tombstoned
+    assert!(!view.is_live(5));
+    assert!(view.is_live(12));
+
+    // Save side: replaying the fixture's history through today's writer
+    // must reproduce the checked-in bytes exactly — the golden pin that
+    // keeps the v5 format (and the WAL replay-determinism contract that
+    // depends on it) from drifting silently.
+    let mut idx = BruteForce::new(Arc::new(fixture_matrix()));
+    let mut ctx = SearchContext::new();
+    assert_eq!(idx.insert(&[9.0, 9.0, 9.0, 9.0], &mut ctx).unwrap(), 12);
+    idx.remove(5).unwrap();
+    let path = tmp("v5_golden_resave.idx");
+    save_index(&path, &idx).unwrap();
+    let fresh = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let golden = std::fs::read(fixture("v5_bruteforce_mutable.idx")).unwrap();
+    assert_eq!(fresh, golden, "v5 writer no longer byte-matches the golden fixture");
 }
 
 #[test]

@@ -1,0 +1,447 @@
+//! Durability properties of the WAL subsystem, end to end:
+//!
+//! * **Replay byte-identity** — for every mutable family, a run that
+//!   bootstraps a WAL, checkpoints mid-schedule, and is then "crashed"
+//!   and recovered must persist to a bundle byte-identical to an
+//!   uninterrupted run of the same ops (the PR 5 determinism contract
+//!   upgraded to a durability guarantee).
+//! * **Crash injection** — torn tails and bit flips recover to the last
+//!   durable prefix with a structured report, never a panic, and the
+//!   repaired log accepts resumed appends.
+//! * **Group commit** — fsync policies gate physical syncs through the
+//!   `Wal` handle exactly as they do on a bare `WalWriter`.
+//! * **Process-level smoke** — a served index with `--wal-dir` killed
+//!   (SIGKILL) mid-churn recovers every acknowledged mutation.
+
+use std::sync::Arc;
+
+use finger_ann::core::distance::Metric;
+use finger_ann::core::matrix::Matrix;
+use finger_ann::core::rng::Pcg32;
+use finger_ann::data::persist::{load_index, save_index};
+use finger_ann::data::synth::tiny;
+use finger_ann::finger::construct::FingerParams;
+use finger_ann::graph::hnsw::HnswParams;
+use finger_ann::index::impls::{BruteForce, FingerHnswIndex, HnswIndex};
+use finger_ann::index::sharded::{ShardSpec, ShardedIndex};
+use finger_ann::index::{AnnIndex, MutableAnnIndex, SearchContext};
+use finger_ann::router::{Client, MutOutcome, Request};
+use finger_ann::wal::{log_path, snapshot_path, FsyncPolicy, Wal, WalOp};
+
+const N0: usize = 24;
+const DIM: usize = 6;
+
+/// Same sizing rationale as `mutation_props.rs`: base-layer capacity
+/// `2m >= N0 + ops - 1` keeps the graph complete so replay equality is
+/// structural, not a recall bet.
+fn graph_params() -> HnswParams {
+    HnswParams { m: 32, ef_construction: 128, ..Default::default() }
+}
+
+const FAMILIES: &[&str] = &[
+    "bruteforce",
+    "hnsw",
+    "hnsw-finger",
+    "sharded-bruteforce",
+    "sharded-hnsw",
+];
+
+fn build_family(name: &str, data: &Arc<Matrix>) -> Box<dyn AnnIndex> {
+    let spec = ShardSpec { n_shards: 3, ..Default::default() };
+    match name {
+        "bruteforce" => Box::new(BruteForce::new(Arc::clone(data))),
+        "hnsw" => Box::new(HnswIndex::build(Arc::clone(data), graph_params())),
+        "hnsw-finger" => Box::new(FingerHnswIndex::build(
+            Arc::clone(data),
+            graph_params(),
+            FingerParams { rank: 4, ..Default::default() },
+        )),
+        "sharded-bruteforce" => Box::new(ShardedIndex::build(
+            Arc::clone(data),
+            &spec,
+            |sub| -> Box<dyn AnnIndex> { Box::new(BruteForce::new(sub)) },
+        )),
+        "sharded-hnsw" => Box::new(ShardedIndex::build(
+            Arc::clone(data),
+            &spec,
+            |sub| -> Box<dyn AnnIndex> { Box::new(HnswIndex::build(sub, graph_params())) },
+        )),
+        other => panic!("unknown family {other}"),
+    }
+}
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("finger_walprops_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// A seeded schedule of ops that is valid to apply in order from `n0`
+/// initial rows: deletes always target a live id, the id watermark is
+/// mirrored so inserts line up with the index's own allocation.
+fn gen_ops(seed: u64, n0: usize, count: usize) -> Vec<WalOp> {
+    let mut rng = Pcg32::new(seed);
+    let mut live: Vec<u32> = (0..n0 as u32).collect();
+    let mut next = n0 as u32;
+    let mut ops = Vec::with_capacity(count);
+    for _ in 0..count {
+        match rng.gen_range(10) {
+            0..=4 => {
+                let vector: Vec<f32> = (0..DIM).map(|_| rng.next_gaussian()).collect();
+                ops.push(WalOp::Insert { vector });
+                live.push(next);
+                next += 1;
+            }
+            5..=7 if !live.is_empty() => {
+                let at = rng.gen_range(live.len());
+                ops.push(WalOp::Delete { key: live.swap_remove(at) });
+            }
+            _ => ops.push(WalOp::Compact),
+        }
+    }
+    ops
+}
+
+fn apply(m: &mut dyn MutableAnnIndex, ctx: &mut SearchContext, op: &WalOp) {
+    match op {
+        WalOp::Insert { vector } => {
+            m.insert(vector, ctx).expect("insert");
+        }
+        WalOp::Delete { key } => m.remove(*key).expect("remove live id"),
+        WalOp::Compact => {
+            // Threshold-gated; logged regardless — the gate is
+            // deterministic, so replay takes the same branch.
+            m.compact(ctx).expect("compact");
+        }
+    }
+}
+
+/// The v5 bundle bytes of `index` (what `save_index` would persist).
+fn bundle_bytes(index: &dyn AnnIndex, tag: &str) -> Vec<u8> {
+    let p = std::env::temp_dir().join(format!("finger_walprops_b_{}_{tag}.idx", std::process::id()));
+    save_index(&p, index).expect("save bundle");
+    let bytes = std::fs::read(&p).expect("read bundle back");
+    std::fs::remove_file(&p).ok();
+    bytes
+}
+
+/// The acceptance property: for every mutable family, crash-and-recover
+/// persists the exact bytes an uninterrupted run would have — including
+/// across a mid-schedule checkpoint rotation.
+#[test]
+fn prop_recovered_bundle_is_byte_identical_for_every_family() {
+    for (fi, family) in FAMILIES.iter().enumerate() {
+        let seed = 0xD0_0D ^ ((fi as u64) << 8);
+        let ds = tiny(seed, N0, DIM, Metric::L2);
+        let ops = gen_ops(seed ^ 1, N0, 30);
+        let dir = tmp_dir(&format!("ident_{family}"));
+
+        // Uninterrupted control run: same ops, no WAL. The compaction
+        // threshold stays at its default on every run — replay happens on
+        // a freshly loaded index, so a custom runtime threshold would make
+        // the (deterministic) compact gate branch differently under
+        // recovery than it did live.
+        let mut plain = build_family(family, &ds.data);
+        {
+            let mut ctx = SearchContext::new();
+            let m = plain.as_mutable().expect(family);
+            for op in &ops {
+                apply(m, &mut ctx, op);
+            }
+        }
+
+        // Durable run: group-committed WAL, checkpoint halfway through.
+        let mid = ops.len() / 2;
+        let mut durable = build_family(family, &ds.data);
+        let wal = Wal::bootstrap(&dir, durable.as_ref(), FsyncPolicy::EveryN(3)).expect("bootstrap");
+        {
+            let mut ctx = SearchContext::new();
+            for (i, op) in ops.iter().enumerate() {
+                apply(durable.as_mutable().unwrap(), &mut ctx, op);
+                let (w, seq) = wal.append(op).expect("append");
+                w.commit(seq).expect("commit");
+                assert_eq!(seq, i as u64 + 1, "{family}: log seq mirrors op order");
+                if i == mid {
+                    assert_eq!(wal.checkpoint(durable.as_ref()).unwrap(), i as u64 + 1);
+                }
+            }
+        }
+        wal.sync().expect("final sync");
+        drop(wal);
+        drop(durable); // "crash": nothing survives but the files
+
+        let (recovered, _wal2, report) =
+            Wal::recover(&dir, FsyncPolicy::EveryN(3)).expect("recover");
+        assert!(report.corruption.is_none(), "{family}: {:?}", report.corruption);
+        assert_eq!(report.snapshot_seq, mid as u64 + 1, "{family}");
+        assert_eq!(report.replayed, ops.len() - mid - 1, "{family}");
+        assert_eq!(report.last_seq, ops.len() as u64, "{family}");
+
+        let a = bundle_bytes(plain.as_ref(), &format!("plain_{family}"));
+        let b = bundle_bytes(recovered.as_ref(), &format!("rec_{family}"));
+        assert_eq!(a, b, "{family}: recovered bundle != uninterrupted bundle");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// Crash injection: a torn append (partial record at the tail) is cut
+/// back to the durable prefix with a structured report, and the repaired
+/// log accepts resumed appends that a second recovery replays cleanly.
+#[test]
+fn torn_tail_recovers_the_durable_prefix_and_resumes() {
+    let ds = tiny(31, N0, DIM, Metric::L2);
+    let ops = gen_ops(32, N0, 8);
+    let dir = tmp_dir("torn");
+    let mut idx = build_family("bruteforce", &ds.data);
+    let wal = Wal::bootstrap(&dir, idx.as_ref(), FsyncPolicy::Always).unwrap();
+    let mut ctx = SearchContext::new();
+    for op in &ops {
+        apply(idx.as_mutable().unwrap(), &mut ctx, op);
+        let (w, seq) = wal.append(op).unwrap();
+        w.commit(seq).unwrap();
+    }
+    drop(wal);
+
+    // A crash mid-append leaves fewer bytes than a record header.
+    let lp = log_path(&dir, 0);
+    let clean_len = std::fs::metadata(&lp).unwrap().len();
+    {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&lp).unwrap();
+        f.write_all(&[0x5A, 0x5A, 0x5A]).unwrap();
+    }
+
+    let (mut rec, wal2, report) = Wal::recover(&dir, FsyncPolicy::Always).expect("recover");
+    assert_eq!(report.replayed, ops.len());
+    assert!(report.corruption.is_some(), "torn tail must be reported");
+    assert_eq!(report.dropped_bytes, 3);
+    assert_eq!(
+        std::fs::metadata(&lp).unwrap().len(),
+        clean_len,
+        "repair truncates exactly the torn bytes"
+    );
+
+    // Appends resume on the repaired log with the next sequence number.
+    apply(rec.as_mutable().unwrap(), &mut ctx, &WalOp::Compact);
+    let (w, seq) = wal2.append(&WalOp::Compact).unwrap();
+    assert_eq!(seq, ops.len() as u64 + 1);
+    w.sync().unwrap();
+    drop(wal2);
+
+    let (_rec2, _wal3, r2) = Wal::recover(&dir, FsyncPolicy::Always).expect("second recover");
+    assert!(r2.corruption.is_none(), "{:?}", r2.corruption);
+    assert_eq!(r2.replayed, ops.len() + 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Bit flips anywhere in the log are caught by the record CRC: recovery
+/// stops at the last intact record, reports the corruption, and the
+/// recovered state byte-matches a run of exactly that surviving prefix.
+#[test]
+fn bit_flips_recover_to_a_verified_prefix_never_panic() {
+    let ds = tiny(57, N0, DIM, Metric::L2);
+    let ops = gen_ops(58, N0, 10);
+    let dir = tmp_dir("flip");
+    let mut idx = build_family("bruteforce", &ds.data);
+    let wal = Wal::bootstrap(&dir, idx.as_ref(), FsyncPolicy::Always).unwrap();
+    let mut ctx = SearchContext::new();
+    for op in &ops {
+        apply(idx.as_mutable().unwrap(), &mut ctx, op);
+        let (w, seq) = wal.append(op).unwrap();
+        w.commit(seq).unwrap();
+    }
+    drop(wal);
+    let lp = log_path(&dir, 0);
+    let clean = std::fs::read(&lp).unwrap();
+
+    for flip in [10, clean.len() / 2, clean.len() - 5] {
+        let mut bytes = clean.clone();
+        bytes[flip] ^= 0x10;
+        std::fs::write(&lp, &bytes).unwrap();
+
+        let (rec, _w, report) = Wal::recover(&dir, FsyncPolicy::Always)
+            .unwrap_or_else(|e| panic!("flip at {flip}: recovery errored: {e}"));
+        assert!(report.corruption.is_some(), "flip at {flip} went undetected");
+        assert!(report.replayed < ops.len(), "flip at {flip} dropped nothing");
+        assert_eq!(report.last_seq, report.replayed as u64);
+
+        // The recovered index == a fresh run of exactly the prefix.
+        let mut want = build_family("bruteforce", &ds.data);
+        for op in &ops[..report.replayed] {
+            apply(want.as_mutable().unwrap(), &mut ctx, op);
+        }
+        let a = bundle_bytes(rec.as_ref(), &format!("flip_{flip}"));
+        let b = bundle_bytes(want.as_ref(), &format!("flipwant_{flip}"));
+        assert_eq!(a, b, "flip at {flip}: prefix state diverged");
+
+        // Recovery repaired the file in place; restore the clean copy for
+        // the next injection.
+        std::fs::write(&lp, &clean).unwrap();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Fsync policies gate physical syncs through the `Wal` handle: `every_n`
+/// batches, `never` defers entirely, and an explicit `sync()` always
+/// catches the log up.
+#[test]
+fn commit_policies_gate_fsyncs_through_the_wal_handle() {
+    for (policy, want_synced) in [(FsyncPolicy::EveryN(4), 8), (FsyncPolicy::Never, 0)] {
+        let ds = tiny(91, N0, DIM, Metric::L2);
+        let dir = tmp_dir(&format!("policy_{}", policy.name().replace(':', "_")));
+        let mut idx = build_family("bruteforce", &ds.data);
+        let wal = Wal::bootstrap(&dir, idx.as_ref(), policy).unwrap();
+        let mut ctx = SearchContext::new();
+        let mut rng = Pcg32::new(92);
+        for _ in 0..10 {
+            let vector: Vec<f32> = (0..DIM).map(|_| rng.next_gaussian()).collect();
+            apply(idx.as_mutable().unwrap(), &mut ctx, &WalOp::Insert { vector: vector.clone() });
+            let (w, seq) = wal.append(&WalOp::Insert { vector }).unwrap();
+            w.commit(seq).unwrap();
+        }
+        let w = wal.writer();
+        assert_eq!(w.appended_seq(), 10);
+        assert_eq!(w.synced_seq(), want_synced, "policy {}", policy.name());
+        wal.sync().unwrap();
+        assert_eq!(w.synced_seq(), 10);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// A logical record bigger than one 32 KiB block fragments across block
+/// boundaries and still replays to identical bytes.
+#[test]
+fn a_record_larger_than_one_block_survives_recovery() {
+    let wide = 9_000; // 36 KB payload > BLOCK_SIZE
+    let mut m = Matrix::zeros(0, wide);
+    let mut rng = Pcg32::new(5);
+    for _ in 0..2 {
+        let row: Vec<f32> = (0..wide).map(|_| rng.next_gaussian()).collect();
+        m.push_row(&row);
+    }
+    let data = Arc::new(m);
+    let dir = tmp_dir("bigrec");
+
+    let mut plain: Box<dyn AnnIndex> = Box::new(BruteForce::new(Arc::clone(&data)));
+    let mut durable: Box<dyn AnnIndex> = Box::new(BruteForce::new(Arc::clone(&data)));
+    let wal = Wal::bootstrap(&dir, durable.as_ref(), FsyncPolicy::Always).unwrap();
+    let mut ctx = SearchContext::new();
+    let vector: Vec<f32> = (0..wide).map(|_| rng.next_gaussian()).collect();
+    let op = WalOp::Insert { vector };
+    apply(plain.as_mutable().unwrap(), &mut ctx, &op);
+    apply(durable.as_mutable().unwrap(), &mut ctx, &op);
+    let (w, seq) = wal.append(&op).unwrap();
+    w.commit(seq).unwrap();
+    drop(wal);
+    drop(durable);
+
+    let (rec, _w, report) = Wal::recover(&dir, FsyncPolicy::Always).unwrap();
+    assert!(report.corruption.is_none());
+    assert_eq!(report.replayed, 1);
+    let a = bundle_bytes(plain.as_ref(), "big_plain");
+    let b = bundle_bytes(rec.as_ref(), "big_rec");
+    assert_eq!(a, b);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Kills the child process on every exit path so a failing assert does
+/// not leak a serving `finger` process.
+struct KillOnDrop(std::process::Child);
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        self.0.kill().ok();
+        self.0.wait().ok();
+    }
+}
+
+/// Process-level smoke: serve with `--wal-dir --fsync-policy always`,
+/// churn acknowledged mutations over TCP, SIGKILL the server, and recover
+/// in-process. Every acked op must be durable: the recovered bundle
+/// byte-matches the bootstrap snapshot plus exactly the acked ops.
+#[test]
+fn recovery_smoke_kills_a_serving_process_mid_churn() {
+    use std::io::BufRead as _;
+    use std::process::{Command, Stdio};
+
+    let root = tmp_dir("smoke");
+    std::fs::create_dir_all(&root).unwrap();
+    let wal_dir = root.join("wal");
+    let bundle = root.join("seed.idx");
+
+    let ds = tiny(77, 40, DIM, Metric::L2);
+    let seed_index = BruteForce::new(Arc::clone(&ds.data));
+    save_index(&bundle, &seed_index).unwrap();
+
+    let mut child = Command::new(env!("CARGO_BIN_EXE_finger"))
+        .args([
+            "serve",
+            "--index",
+            bundle.to_str().unwrap(),
+            "--addr",
+            "127.0.0.1:0",
+            "--wal-dir",
+            wal_dir.to_str().unwrap(),
+            "--fsync-policy",
+            "always",
+            "--workers",
+            "1",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn finger serve");
+    let stdout = child.stdout.take().expect("piped stdout");
+    let child = KillOnDrop(child);
+
+    // The banner line carries the OS-assigned port; serve flushes stdout
+    // right after printing it.
+    let mut addr = None;
+    for line in std::io::BufReader::new(stdout).lines() {
+        let line = line.expect("read child stdout");
+        if let Some(rest) = line.split(" on ").nth(1) {
+            if line.starts_with("serving ") {
+                addr = rest.split_whitespace().next().map(str::to_string);
+                break;
+            }
+        }
+    }
+    let addr: std::net::SocketAddr =
+        addr.expect("server banner").parse().expect("parse bound addr");
+
+    let mut client = Client::connect(&addr).expect("connect");
+    let mut acked: Vec<WalOp> = Vec::new();
+    let mut rng = Pcg32::new(4242);
+    for i in 0..12u64 {
+        let vector: Vec<f32> = (0..DIM).map(|_| rng.next_gaussian()).collect();
+        let resp = client
+            .mutate(&Request::Insert { id: i, vector: vector.clone() })
+            .expect("insert acked");
+        assert!(matches!(resp.outcome, MutOutcome::Inserted(_)));
+        acked.push(WalOp::Insert { vector });
+    }
+    let resp = client.mutate(&Request::Delete { id: 99, key: 3 }).expect("delete acked");
+    assert!(matches!(resp.outcome, MutOutcome::Deleted(3)));
+    acked.push(WalOp::Delete { key: 3 });
+
+    // SIGKILL, not shutdown: fsync=always means every ack above is
+    // already durable, so nothing may be lost.
+    drop(client);
+    drop(child);
+
+    let (recovered, _wal, report) =
+        Wal::recover(&wal_dir, FsyncPolicy::Always).expect("recover after kill");
+    assert!(report.corruption.is_none(), "{:?}", report.corruption);
+    assert_eq!(report.replayed, acked.len(), "every acked op is durable");
+
+    // Baseline: the bootstrap snapshot plus the acked ops, applied
+    // in-process.
+    let mut baseline = load_index(&snapshot_path(&wal_dir, 0)).expect("load snapshot");
+    let mut ctx = SearchContext::new();
+    for op in &acked {
+        apply(baseline.as_mutable().unwrap(), &mut ctx, op);
+    }
+    let a = bundle_bytes(recovered.as_ref(), "smoke_rec");
+    let b = bundle_bytes(baseline.as_ref(), "smoke_base");
+    assert_eq!(a, b, "recovered state != snapshot + acked ops");
+    std::fs::remove_dir_all(&root).ok();
+}
