@@ -508,20 +508,48 @@ fn write_bundle(tmp: &Path, index: &dyn AnnIndex) -> io::Result<()> {
     let mut file = io::BufWriter::new(std::fs::File::create(tmp)?);
     {
         let sink: &mut dyn io::Write = &mut file;
-        let mut w = BinWriter::new(sink);
-        w.u64(MAGIC)?;
-        w.u64(VERSION)?;
-        w.u64(index.kind_tag())?;
-        w.matrix(index.data())?;
-        index.save_payload(&mut w)?;
+        write_bundle_into(sink, index)?;
     }
     let file = file.into_inner().map_err(|e| e.into_error())?;
     file.sync_all()
 }
 
+/// One bundle serialization, shared by the on-disk and in-memory paths
+/// so the bytes cannot drift between them.
+fn write_bundle_into(sink: &mut dyn io::Write, index: &dyn AnnIndex) -> io::Result<()> {
+    let mut w = BinWriter::new(sink);
+    w.u64(MAGIC)?;
+    w.u64(VERSION)?;
+    w.u64(index.kind_tag())?;
+    w.matrix(index.data())?;
+    index.save_payload(&mut w)
+}
+
+/// Serialize a bundle into memory: exactly the bytes [`save_index`]
+/// would write. Replication snapshots ship these verbatim, and the
+/// `FINGERPRINT` verb hashes them — byte-identity of this serialization
+/// is the divergence check.
+pub fn bundle_to_vec(index: &dyn AnnIndex) -> io::Result<Vec<u8>> {
+    let mut out: Vec<u8> = Vec::new();
+    {
+        let sink: &mut dyn io::Write = &mut out;
+        write_bundle_into(sink, index)?;
+    }
+    Ok(out)
+}
+
 /// Load an index saved by [`save_index`], dispatching on the kind tag.
 pub fn load_index(path: &Path) -> io::Result<Box<dyn AnnIndex>> {
-    let mut r = BinReader::new(io::BufReader::new(std::fs::File::open(path)?));
+    load_bundle(&mut BinReader::new(io::BufReader::new(std::fs::File::open(path)?)))
+}
+
+/// Load an index from in-memory bundle bytes (a received replication
+/// snapshot) with the same validation as [`load_index`].
+pub fn load_index_from_slice(bytes: &[u8]) -> io::Result<Box<dyn AnnIndex>> {
+    load_bundle(&mut BinReader::new(bytes))
+}
+
+fn load_bundle<R: io::Read>(r: &mut BinReader<R>) -> io::Result<Box<dyn AnnIndex>> {
     if r.u64()? != MAGIC {
         return Err(bad("not a finger-ann index file"));
     }
@@ -535,9 +563,9 @@ pub fn load_index(path: &Path) -> io::Result<Box<dyn AnnIndex>> {
         if version < 4 {
             return Err(bad("sharded bundles require format v4"));
         }
-        return Ok(Box::new(load_sharded(&mut r, data, version)?));
+        return Ok(Box::new(load_sharded(r, data, version)?));
     }
-    load_family(tag, data, &mut r, version).map(|(index, _)| index)
+    load_family(tag, data, r, version).map(|(index, _)| index)
 }
 
 /// Read a family's v5 mutation section; older versions get the identity

@@ -83,6 +83,10 @@ macro_rules! delegate_live_bookkeeping {
         fn set_compact_threshold(&mut self, frac: f64) {
             self.compact_threshold = frac;
         }
+
+        fn compact_threshold(&self) -> f64 {
+            self.compact_threshold
+        }
     };
 }
 

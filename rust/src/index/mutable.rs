@@ -103,6 +103,11 @@ pub trait MutableAnnIndex: AnnIndex {
     /// Set the tombstone fraction at which `compact()` rebuilds
     /// (composite indexes forward it to their sub-indexes).
     fn set_compact_threshold(&mut self, frac: f64);
+
+    /// The currently effective compaction threshold. Checkpointing logs
+    /// a non-default value into the fresh generation (`SetThreshold`) so
+    /// replay and replica apply gate compaction at the log-time value.
+    fn compact_threshold(&self) -> f64;
 }
 
 /// External-id bookkeeping shared by every mutable family: the

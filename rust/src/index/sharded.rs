@@ -659,6 +659,10 @@ impl MutableAnnIndex for ShardedIndex {
             }
         }
     }
+
+    fn compact_threshold(&self) -> f64 {
+        self.compact_threshold
+    }
 }
 
 /// Sharded twin of [`crate::index::impls::build_all_families`]: every

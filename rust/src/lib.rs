@@ -18,6 +18,9 @@
 //!   `AnnIndex` behind the server.
 //! * [`wal`] — durable mutation plane: checksummed write-ahead log, group
 //!   commit, snapshot checkpoints, crash recovery.
+//! * [`repl`] — primary/backup replication: WAL streaming over TCP,
+//!   configurable ack levels, snapshot catch-up, fingerprint divergence
+//!   checks.
 //! * [`eval`] — recall/throughput harnesses regenerating every figure.
 //!
 //! See the repository `README.md` for the paper-to-module map and the
@@ -31,6 +34,7 @@ pub mod finger;
 pub mod graph;
 pub mod index;
 pub mod quant;
+pub mod repl;
 pub mod router;
 pub mod runtime;
 pub mod testutil;

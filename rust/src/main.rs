@@ -41,6 +41,10 @@ use finger_ann::index::{
     AnnIndex, SearchContext, SearchParams, ShardSpec, ShardStrategy, ShardedIndex,
 };
 use finger_ann::quant::ivfpq::IvfPqParams;
+use finger_ann::repl::hub::ReplHub;
+use finger_ann::repl::replica::{Replica, ReplicaOpts};
+use finger_ann::repl::{AckLevel, ReadPool};
+use finger_ann::router::protocol::{FingerprintInfo, QueryRequest};
 use finger_ann::router::{Client, MutOutcome, Request, ServeIndex, Server, ServerConfig};
 use finger_ann::runtime::{default_artifacts_dir, service::RerankService, Manifest};
 use finger_ann::wal::{FsyncPolicy, ScanResult, Wal, WalOp};
@@ -59,7 +63,10 @@ fn main() {
         "update" => update(&args),
         "delete" => delete(&args),
         "compact" => compact(&args),
+        "set-threshold" => set_threshold(&args),
         "snapshot" => snapshot(&args),
+        "query" => query_cmd(&args),
+        "repl" => repl_cmd(&args),
         "wal" => wal_cmd(&args),
         "bench" => bench(&args),
         "info" => info(),
@@ -79,12 +86,19 @@ fn help() {
          \u{20}  update   --vector \"v1,v2,...\" [--addr A]   (insert into a running server)\n\
          \u{20}  delete   --key ID [--addr A]               (tombstone a served point)\n\
          \u{20}  compact  [--addr A]                        (reclaim tombstones if over threshold)\n\
+         \u{20}  set-threshold --frac F [--addr A]          (retune the compaction gate; logged + replicated)\n\
          \u{20}  snapshot [--addr A]                        (checkpoint a serving index via its WAL)\n\
+         \u{20}  query    --vector \"v1,v2,...\" [--k N] [--addrs A,B,...]  (read fan-out across replicas)\n\
+         \u{20}  repl     status [--addr A]                (role, applied seq, per-replica ack progress)\n\
+         \u{20}  repl     fingerprint --addrs A,B,...      (compare state hashes; exit 1 on divergence)\n\
          \u{20}  wal      dump|truncate --wal-dir DIR      (inspect / repair a WAL directory)\n\
          \u{20}  bench    FIGURE [--scale F] [--out DIR]   (figure1..figure8, table1, rank-selection, churn, hotpath, all)\n\
          \u{20}  info\n\
          durability (serve): --wal-dir DIR [--fsync-policy always|every_n:N|interval_ms:M|never]\n\
          \u{20}                         (log every mutation before ack; recover on restart)\n\
+         replication (serve): primary: --repl-listen ADDR [--ack-level none|one|all]\n\
+         \u{20}                         [--repl-expect N] [--repl-ack-timeout-ms M]  (requires --wal-dir)\n\
+         \u{20}               replica: --replica-of ADDR [--wal-dir DIR]  (read-only; streams the primary's WAL)\n\
          sharding (build/search/serve): --shards S [--shard-strategy round-robin|kmeans]\n\
          \u{20}                         [--min-shard-frac F]   (probe the nearest F·S shards, 0<F<=1)\n\
          build parallelism (build/search/serve): --threads N   (0 = FINGER_THREADS/auto;\n\
@@ -292,11 +306,18 @@ fn fsync_policy_from_args(args: &Args) -> FsyncPolicy {
 }
 
 fn serve(args: &Args) {
+    // `--replica-of` flips the whole command into read-only replica mode:
+    // no local build, state arrives over the replication stream.
+    if args.get("replica-of").is_some() {
+        serve_replica(args);
+        return;
+    }
     // With `--wal-dir`, the directory is the source of truth: a durable
     // generation in it is recovered (build/--index flags are ignored so a
     // restart can never silently serve stale pre-crash state); an empty
     // one is bootstrapped around the built/loaded index.
     let mut wal: Option<Arc<Wal>> = None;
+    let mut recovered_seq = 0u64;
     let index: Box<dyn AnnIndex> = if let Some(dir) = args.get("wal-dir") {
         let dir = PathBuf::from(dir);
         let policy = fsync_policy_from_args(args);
@@ -313,6 +334,7 @@ fn serve(args: &Args) {
                 std::process::exit(1);
             });
             println!("{}", report.summary());
+            recovered_seq = report.last_seq;
             wal = Some(Arc::new(w));
             index
         } else {
@@ -340,6 +362,38 @@ fn serve(args: &Args) {
     if let Some(w) = &wal {
         serve_index = serve_index.with_wal(Arc::clone(w));
     }
+    // Primary replication: stream the WAL to replicas over `--repl-listen`.
+    if let Some(listen) = args.get("repl-listen") {
+        let Some(w) = &wal else {
+            eprintln!("--repl-listen requires --wal-dir (the WAL is the replication stream)");
+            std::process::exit(2);
+        };
+        let level_name = args.get("ack-level").unwrap_or("one");
+        let level = AckLevel::parse(level_name).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
+        let expect = args.get_usize("repl-expect", 1);
+        let timeout_ms = args.get_usize("repl-ack-timeout-ms", 5000) as u64;
+        let hub = ReplHub::start(
+            listen,
+            Arc::clone(w),
+            level,
+            expect,
+            std::time::Duration::from_millis(timeout_ms),
+        )
+        .unwrap_or_else(|e| {
+            eprintln!("replication listener bind on {listen} failed: {e}");
+            std::process::exit(1);
+        });
+        println!(
+            "replication listener on {} (ack level {}, expect {expect})",
+            hub.local_addr(),
+            level.name()
+        );
+        serve_index = serve_index.with_repl(hub);
+    }
+    serve_index.set_applied_seq(recovered_seq);
     let serve_index = Arc::new(serve_index);
 
     let rerank = if args.has_flag("rerank") {
@@ -380,6 +434,64 @@ fn serve(args: &Args) {
     }
 }
 
+/// `serve --replica-of ADDR` — read-only replica. State arrives over the
+/// primary's replication stream (snapshot + ordered WAL ops); with
+/// `--wal-dir` the stream is also persisted locally so a restart resumes
+/// from the durable position instead of re-fetching the snapshot. The
+/// query listener comes up only after the replica has caught up, so the
+/// first client never sees placeholder state.
+fn serve_replica(args: &Args) {
+    let raw = args.get("replica-of").expect("checked by caller");
+    let primary: std::net::SocketAddr = raw.parse().unwrap_or_else(|_| {
+        eprintln!("bad --replica-of '{raw}'");
+        std::process::exit(2);
+    });
+    // Placeholder until the first snapshot (or local recovery) installs
+    // real state; `install` swaps it out before the replica reports ready.
+    let placeholder: Box<dyn AnnIndex> = Box::new(BruteForce::new(Arc::new(Matrix::zeros(0, 1))));
+    let serve_index =
+        Arc::new(ServeIndex::with_params(placeholder, params_from_args(args, 10)).as_replica());
+    let opts = ReplicaOpts {
+        wal_dir: args.get("wal-dir").map(PathBuf::from),
+        policy: fsync_policy_from_args(args),
+        reconnect: std::time::Duration::from_millis(200),
+    };
+    let replica = Replica::start(primary, Arc::clone(&serve_index), opts).unwrap_or_else(|e| {
+        eprintln!("replica start failed: {e}");
+        std::process::exit(1);
+    });
+    print!("replica of {primary}: catching up...");
+    std::io::Write::flush(&mut std::io::stdout()).ok();
+    while !replica.wait_ready(std::time::Duration::from_secs(1)) {
+        print!(".");
+        std::io::Write::flush(&mut std::io::stdout()).ok();
+    }
+    println!(" caught up at seq {}", replica.applied());
+
+    let config = ServerConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:7772").to_string(),
+        workers: args.get_usize("workers", 4),
+        max_batch: args.get_usize("max-batch", 8),
+        ..Default::default()
+    };
+    let server = Server::start(Arc::clone(&serve_index), config.clone(), None).expect("bind");
+    println!(
+        "serving replica of {primary} on {} ({} workers, max_batch {})",
+        server.local_addr, config.workers, config.max_batch
+    );
+    println!("protocol: one JSON per line: {{\"id\":1,\"vector\":[..],\"k\":10}} (read-only)");
+    std::io::Write::flush(&mut std::io::stdout()).ok();
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(10));
+        println!(
+            "{} (applied seq {}, {} reconnect(s))",
+            server.metrics.summary(),
+            replica.applied(),
+            replica.reconnects()
+        );
+    }
+}
+
 fn mutation_addr(args: &Args) -> std::net::SocketAddr {
     let addr = args.get("addr").unwrap_or("127.0.0.1:7771");
     addr.parse().unwrap_or_else(|_| {
@@ -406,6 +518,9 @@ fn apply_mutation(args: &Args, req: Request) {
             MutOutcome::Saved(seq) => {
                 println!("checkpointed at seq {seq} ({} live)", resp.live)
             }
+            MutOutcome::ThresholdSet(frac) => {
+                println!("compaction threshold set to {frac} ({} live)", resp.live)
+            }
         },
         Err(e) => {
             eprintln!("server rejected the mutation: {e}");
@@ -414,11 +529,9 @@ fn apply_mutation(args: &Args, req: Request) {
     }
 }
 
-/// `finger update --vector "v1,v2,..."` — online insert into a running
-/// server (the INSERT protocol verb).
-fn update(args: &Args) {
+fn parse_vector_arg(args: &Args, cmd: &str) -> Vec<f32> {
     let Some(raw) = args.get("vector") else {
-        eprintln!("update requires --vector \"v1,v2,...\"");
+        eprintln!("{cmd} requires --vector \"v1,v2,...\"");
         std::process::exit(2);
     };
     let vector: Vec<f32> = raw
@@ -434,6 +547,13 @@ fn update(args: &Args) {
         eprintln!("empty vector");
         std::process::exit(2);
     }
+    vector
+}
+
+/// `finger update --vector "v1,v2,..."` — online insert into a running
+/// server (the INSERT protocol verb).
+fn update(args: &Args) {
+    let vector = parse_vector_arg(args, "update");
     apply_mutation(args, Request::Insert { id: 0, vector });
 }
 
@@ -451,10 +571,131 @@ fn compact(args: &Args) {
     apply_mutation(args, Request::Compact { id: 0 });
 }
 
+/// `finger set-threshold --frac F` — retune the compaction gate on a
+/// running server (SET_THRESHOLD verb). Logged and replicated like any
+/// other mutation, so replicas and post-recovery replay converge on the
+/// same compaction decisions.
+fn set_threshold(args: &Args) {
+    let Some(frac) = args.get("frac").and_then(|s| s.parse::<f64>().ok()) else {
+        eprintln!("set-threshold requires --frac F (a float in (0, 1])");
+        std::process::exit(2);
+    };
+    apply_mutation(args, Request::SetThreshold { id: 0, frac });
+}
+
 /// `finger snapshot` — checkpoint a serving index through its WAL (SAVE
 /// verb): fresh durable snapshot + log rotation, no restart.
 fn snapshot(args: &Args) {
     apply_mutation(args, Request::Save { id: 0 });
+}
+
+/// Parse `--addrs A,B,...` (falling back to `--addr`, then the default
+/// mutation address) into a read-pool address list.
+fn read_addrs(args: &Args) -> Vec<std::net::SocketAddr> {
+    let raw = args
+        .get("addrs")
+        .unwrap_or_else(|| args.get("addr").unwrap_or("127.0.0.1:7771"))
+        .to_string();
+    let mut addrs = Vec::new();
+    for part in raw.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        match part.parse() {
+            Ok(a) => addrs.push(a),
+            Err(_) => {
+                eprintln!("bad address '{part}' in --addrs");
+                std::process::exit(2);
+            }
+        }
+    }
+    if addrs.is_empty() {
+        eprintln!("--addrs is empty");
+        std::process::exit(2);
+    }
+    addrs
+}
+
+/// `finger query --vector "v1,v2,..." [--k N] [--addrs A,B,...]` — one
+/// search request fanned over a read pool (primary + replicas) with
+/// round-robin rotation and failover.
+fn query_cmd(args: &Args) {
+    let vector = parse_vector_arg(args, "query");
+    let k = args.get_usize("k", 10);
+    let mut pool = ReadPool::new(read_addrs(args));
+    let req = QueryRequest { id: 0, vector, k };
+    match pool.query(&req) {
+        Ok((addr, resp)) => {
+            println!("{} hit(s) from {addr} ({} us server-side):", resp.hits.len(), resp.latency_us);
+            for (dist, key) in &resp.hits {
+                println!("  key {key:>8}  dist {dist:.6}");
+            }
+        }
+        Err(e) => {
+            eprintln!("query failed on every address: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// `finger repl status|fingerprint` — replication observability.
+///
+/// `status` prints one node's role and per-replica ack progress;
+/// `fingerprint` hashes the live state of every listed node and exits 1
+/// if they disagree (the divergence check the replication contract is
+/// supposed to make impossible).
+fn repl_cmd(args: &Args) {
+    let action = args.positional.get(1).map(|s| s.as_str()).unwrap_or("status");
+    match action {
+        "status" => {
+            let addr = mutation_addr(args);
+            let mut client = Client::connect(&addr).unwrap_or_else(|e| {
+                eprintln!("cannot connect to {addr}: {e}");
+                std::process::exit(1);
+            });
+            let line = client
+                .send_raw(&Request::ReplStatus { id: 0 }.to_json_line())
+                .unwrap_or_else(|e| {
+                    eprintln!("repl status on {addr} failed: {e}");
+                    std::process::exit(1);
+                });
+            println!("{}", line.trim_end());
+        }
+        "fingerprint" => {
+            let addrs = read_addrs(args);
+            let mut infos: Vec<(std::net::SocketAddr, FingerprintInfo)> = Vec::new();
+            for addr in &addrs {
+                let info = Client::connect(addr)
+                    .map_err(|e| e.to_string())
+                    .and_then(|mut c| {
+                        c.send_raw(&Request::Fingerprint { id: 0 }.to_json_line())
+                            .map_err(|e| e.to_string())
+                    })
+                    .and_then(|line| FingerprintInfo::parse(&line))
+                    .unwrap_or_else(|e| {
+                        eprintln!("fingerprint on {addr} failed: {e}");
+                        std::process::exit(1);
+                    });
+                println!(
+                    "  {addr}: fingerprint {:016x}  seq {}  live {}",
+                    info.fingerprint, info.seq, info.live
+                );
+                infos.push((*addr, info));
+            }
+            let first = &infos[0].1;
+            if infos.iter().all(|(_, i)| i.fingerprint == first.fingerprint) {
+                println!("all {} node(s) agree at fingerprint {:016x}", infos.len(), first.fingerprint);
+            } else {
+                eprintln!("STATE DIVERGENCE across {} node(s)", infos.len());
+                std::process::exit(1);
+            }
+        }
+        other => {
+            eprintln!("unknown repl action '{other}' (status|fingerprint)");
+            std::process::exit(2);
+        }
+    }
 }
 
 fn describe_op(op: &WalOp) -> String {
@@ -462,6 +703,7 @@ fn describe_op(op: &WalOp) -> String {
         WalOp::Insert { vector } => format!("insert (dim {})", vector.len()),
         WalOp::Delete { key } => format!("delete key {key}"),
         WalOp::Compact => "compact".into(),
+        WalOp::SetThreshold { frac } => format!("set_threshold {frac}"),
     }
 }
 

@@ -1,0 +1,313 @@
+//! Replication wire frames: length-prefixed, CRC-checked, little-endian.
+//!
+//! The stream between a primary and a replica is a sequence of frames:
+//!
+//! ```text
+//!   crc u32 | len u32 | type u8 | payload (len bytes)
+//! ```
+//!
+//! `crc` is the WAL's CRC-32 (IEEE, [`crate::wal::record`]) over
+//! `type || payload` — the same per-record verification discipline as
+//! the log, lifted to the wire, so a bit flip or a torn TCP segment is
+//! detected before anything is applied. `len` is u32 (not the log's
+//! u16) because a `Snapshot` frame carries a whole persisted bundle.
+//!
+//! Frame types (type byte in parentheses; `0` reserved, like the log's
+//! padding sentinel):
+//!
+//! * `Hello` (1), replica → primary: `last_seq u64 | need_snapshot u8`.
+//!   Opens every connection; `last_seq` is the replica's durable
+//!   position, `need_snapshot` forces a full snapshot when the replica
+//!   has no local state at all.
+//! * `Snapshot` (2), primary → replica: `snapshot_seq u64 | bundle`.
+//!   The bundle bytes are a complete `save_index` v5 bundle, verbatim.
+//! * `Op` (3), primary → replica: exactly [`WalOp::encode`]`(seq)` — the
+//!   WAL's logical record, reused unchanged, so the replication stream
+//!   and the log literally share one serialization.
+//! * `Ack` (4), replica → primary: `seq u64`, the replica's new durable
+//!   position.
+//! * `CaughtUp` (5), primary → replica: `seq u64`, sent once the
+//!   registration-time catch-up is fully enqueued; the replica uses it
+//!   to report readiness.
+//!
+//! The golden fixture `rust/tests/fixtures/repl_frame_v1.bin` pins this
+//! encoding byte for byte; any drift fails `repl_props`.
+
+use std::io::{self, Read, Write};
+
+use crate::wal::record::crc32;
+use crate::wal::WalOp;
+
+/// Frame header: crc u32 + len u32 + type u8.
+pub const HEADER_SIZE: usize = 9;
+/// Sanity cap on a frame payload (a snapshot bundle can be large, but a
+/// garbage length must not allocate unboundedly).
+pub const MAX_FRAME: usize = 1 << 30;
+
+const TY_HELLO: u8 = 1;
+const TY_SNAPSHOT: u8 = 2;
+const TY_OP: u8 = 3;
+const TY_ACK: u8 = 4;
+const TY_CAUGHT_UP: u8 = 5;
+
+fn invalid(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+/// One replication frame. See the module docs for the wire layout.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    Hello { last_seq: u64, need_snapshot: bool },
+    Snapshot { snapshot_seq: u64, bundle: Vec<u8> },
+    /// Payload is exactly `WalOp::encode(seq)`.
+    Op { record: Vec<u8> },
+    Ack { seq: u64 },
+    CaughtUp { seq: u64 },
+}
+
+impl Frame {
+    /// An `Op` frame straight from a logical WAL op.
+    pub fn op(seq: u64, op: &WalOp) -> Frame {
+        Frame::Op { record: op.encode(seq) }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "hello",
+            Frame::Snapshot { .. } => "snapshot",
+            Frame::Op { .. } => "op",
+            Frame::Ack { .. } => "ack",
+            Frame::CaughtUp { .. } => "caught_up",
+        }
+    }
+
+    fn type_byte(&self) -> u8 {
+        match self {
+            Frame::Hello { .. } => TY_HELLO,
+            Frame::Snapshot { .. } => TY_SNAPSHOT,
+            Frame::Op { .. } => TY_OP,
+            Frame::Ack { .. } => TY_ACK,
+            Frame::CaughtUp { .. } => TY_CAUGHT_UP,
+        }
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        match self {
+            Frame::Hello { last_seq, need_snapshot } => {
+                let mut p = Vec::with_capacity(9);
+                p.extend_from_slice(&last_seq.to_le_bytes());
+                p.push(u8::from(*need_snapshot));
+                p
+            }
+            Frame::Snapshot { snapshot_seq, bundle } => {
+                let mut p = Vec::with_capacity(8 + bundle.len());
+                p.extend_from_slice(&snapshot_seq.to_le_bytes());
+                p.extend_from_slice(bundle);
+                p
+            }
+            Frame::Op { record } => record.clone(),
+            Frame::Ack { seq } | Frame::CaughtUp { seq } => seq.to_le_bytes().to_vec(),
+        }
+    }
+
+    /// Serialize: header + payload, ready for one `write_all`.
+    pub fn encode(&self) -> Vec<u8> {
+        let ty = self.type_byte();
+        let payload = self.payload();
+        let mut crc_buf = Vec::with_capacity(1 + payload.len());
+        crc_buf.push(ty);
+        crc_buf.extend_from_slice(&payload);
+        let mut out = Vec::with_capacity(HEADER_SIZE + payload.len());
+        out.extend_from_slice(&crc32(&crc_buf).to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.push(ty);
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    pub fn write_to(&self, w: &mut dyn Write) -> io::Result<()> {
+        w.write_all(&self.encode())?;
+        w.flush()
+    }
+
+    /// Read one frame. `Ok(None)` is a clean EOF (zero bytes before the
+    /// header); anything torn, CRC-mismatched, oversized, or unknown is
+    /// an error — the caller drops the connection rather than applying a
+    /// suspect frame.
+    pub fn read_from(r: &mut dyn Read) -> io::Result<Option<Frame>> {
+        let mut header = [0u8; HEADER_SIZE];
+        let mut got = 0;
+        while got < HEADER_SIZE {
+            match r.read(&mut header[got..]) {
+                Ok(0) if got == 0 => return Ok(None),
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        format!("torn frame header ({got} of {HEADER_SIZE} bytes)"),
+                    ))
+                }
+                Ok(n) => got += n,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        let crc = u32::from_le_bytes(header[..4].try_into().unwrap());
+        let len = u32::from_le_bytes(header[4..8].try_into().unwrap()) as usize;
+        let ty = header[8];
+        if len > MAX_FRAME {
+            return Err(invalid(format!("frame claims {len} bytes (cap {MAX_FRAME})")));
+        }
+        let mut payload = vec![0u8; len];
+        r.read_exact(&mut payload).map_err(|e| {
+            io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                format!("torn frame payload (want {len} bytes): {e}"),
+            )
+        })?;
+        let mut crc_buf = Vec::with_capacity(1 + len);
+        crc_buf.push(ty);
+        crc_buf.extend_from_slice(&payload);
+        if crc32(&crc_buf) != crc {
+            return Err(invalid("frame CRC mismatch".into()));
+        }
+        Frame::decode_payload(ty, payload).map(Some).map_err(invalid)
+    }
+
+    fn decode_payload(ty: u8, payload: Vec<u8>) -> Result<Frame, String> {
+        let u64_at = |p: &[u8]| -> Result<u64, String> {
+            p.get(..8)
+                .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+                .ok_or_else(|| "frame payload too short for u64".to_string())
+        };
+        match ty {
+            TY_HELLO => {
+                if payload.len() != 9 {
+                    return Err(format!("hello frame wants 9 bytes, got {}", payload.len()));
+                }
+                let need_snapshot = match payload[8] {
+                    0 => false,
+                    1 => true,
+                    other => return Err(format!("hello need_snapshot byte {other}")),
+                };
+                Ok(Frame::Hello { last_seq: u64_at(&payload)?, need_snapshot })
+            }
+            TY_SNAPSHOT => {
+                let snapshot_seq = u64_at(&payload)?;
+                Ok(Frame::Snapshot { snapshot_seq, bundle: payload[8..].to_vec() })
+            }
+            TY_OP => {
+                // Validate now so a malformed record never reaches apply;
+                // keep the original bytes (the replica re-decodes, and the
+                // bytes are what its own WAL append must reproduce).
+                WalOp::decode(&payload)?;
+                Ok(Frame::Op { record: payload })
+            }
+            TY_ACK => {
+                if payload.len() != 8 {
+                    return Err(format!("ack frame wants 8 bytes, got {}", payload.len()));
+                }
+                Ok(Frame::Ack { seq: u64_at(&payload)? })
+            }
+            TY_CAUGHT_UP => {
+                if payload.len() != 8 {
+                    return Err(format!("caught_up frame wants 8 bytes, got {}", payload.len()));
+                }
+                Ok(Frame::CaughtUp { seq: u64_at(&payload)? })
+            }
+            other => Err(format!("unknown frame type {other}")),
+        }
+    }
+
+    /// The `(seq, op)` of an `Op` frame (`None` for other frames).
+    pub fn op_record(&self) -> Option<(u64, WalOp)> {
+        match self {
+            Frame::Op { record } => WalOp::decode(record).ok(),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn all_frames() -> Vec<Frame> {
+        vec![
+            Frame::Hello { last_seq: 7, need_snapshot: true },
+            Frame::Hello { last_seq: 0, need_snapshot: false },
+            Frame::Snapshot { snapshot_seq: 3, bundle: vec![0xDE, 0xAD, 0xBE, 0xEF] },
+            Frame::Snapshot { snapshot_seq: 0, bundle: Vec::new() },
+            Frame::op(9, &WalOp::Insert { vector: vec![1.5, -2.0] }),
+            Frame::op(10, &WalOp::SetThreshold { frac: 0.25 }),
+            Frame::op(11, &WalOp::Delete { key: 42 }),
+            Frame::op(12, &WalOp::Compact),
+            Frame::Ack { seq: 12 },
+            Frame::CaughtUp { seq: 12 },
+        ]
+    }
+
+    #[test]
+    fn frames_roundtrip_through_a_stream() {
+        let mut wire = Vec::new();
+        for f in all_frames() {
+            f.write_to(&mut wire).unwrap();
+        }
+        let mut r = Cursor::new(wire);
+        for want in all_frames() {
+            let got = Frame::read_from(&mut r).unwrap().unwrap();
+            assert_eq!(got, want);
+        }
+        assert_eq!(Frame::read_from(&mut r).unwrap(), None, "clean EOF");
+    }
+
+    #[test]
+    fn op_frames_expose_their_record() {
+        let f = Frame::op(5, &WalOp::Delete { key: 3 });
+        assert_eq!(f.op_record(), Some((5, WalOp::Delete { key: 3 })));
+        assert_eq!(Frame::Ack { seq: 5 }.op_record(), None);
+    }
+
+    #[test]
+    fn corruption_is_rejected_not_applied() {
+        let good = Frame::Ack { seq: 9 }.encode();
+        // Flip one payload bit: CRC mismatch.
+        let mut flipped = good.clone();
+        *flipped.last_mut().unwrap() ^= 0x40;
+        assert!(Frame::read_from(&mut Cursor::new(flipped)).is_err());
+        // Flip the type byte: CRC covers it too.
+        let mut retyped = good.clone();
+        retyped[8] = TY_CAUGHT_UP;
+        assert!(Frame::read_from(&mut Cursor::new(retyped)).is_err());
+        // Torn header and torn payload.
+        assert!(Frame::read_from(&mut Cursor::new(good[..4].to_vec())).is_err());
+        assert!(Frame::read_from(&mut Cursor::new(good[..HEADER_SIZE + 2].to_vec())).is_err());
+        // Unknown type with a valid CRC.
+        let mut unknown = Frame::Ack { seq: 9 }.payload();
+        let mut crc_buf = vec![99u8];
+        crc_buf.extend_from_slice(&unknown);
+        let mut wire = crc32(&crc_buf).to_le_bytes().to_vec();
+        wire.extend_from_slice(&(unknown.len() as u32).to_le_bytes());
+        wire.push(99);
+        wire.append(&mut unknown);
+        assert!(Frame::read_from(&mut Cursor::new(wire)).is_err());
+        // Absurd length: rejected before allocating.
+        let mut huge = good;
+        huge[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Frame::read_from(&mut Cursor::new(huge)).is_err());
+    }
+
+    #[test]
+    fn malformed_op_payloads_fail_at_decode_time() {
+        // An op frame whose record is garbage must be rejected by the
+        // frame layer (valid CRC, invalid logical payload).
+        let record = vec![0u8; 9]; // seq 0, op byte 0 = unknown
+        let mut crc_buf = vec![TY_OP];
+        crc_buf.extend_from_slice(&record);
+        let mut wire = crc32(&crc_buf).to_le_bytes().to_vec();
+        wire.extend_from_slice(&(record.len() as u32).to_le_bytes());
+        wire.push(TY_OP);
+        wire.extend_from_slice(&record);
+        assert!(Frame::read_from(&mut Cursor::new(wire)).is_err());
+    }
+}

@@ -1,0 +1,315 @@
+//! Primary-side replication hub: accepts replicas, streams the ordered
+//! WAL, gates client acknowledgements on replica acks.
+//!
+//! One hub per primary. Each accepted connection handshakes with a
+//! [`Frame::Hello`] carrying the replica's durable position, then — with
+//! the hub state locked, so live publishes cannot interleave — the hub
+//! reads a catch-up from the WAL's generation manager
+//! ([`Wal::catchup_since`]: full snapshot if the replica is behind the
+//! generation base, plus the log tail), enqueues it, and registers the
+//! replica for the live stream. The lock ordering makes the stream
+//! gap-free and duplicate-free by construction:
+//!
+//! * [`ReplHub::publish`] runs under the index write lock (the caller's),
+//!   once per applied+logged op, in seq order; it takes the state lock to
+//!   enqueue.
+//! * Registration holds the state lock across the catch-up file read, so
+//!   for any op, either its publish happened before registration (then
+//!   its append — which precedes publish under the index lock — is in
+//!   the tail the catch-up read) or it happens after (then the slot is
+//!   registered and receives it live). The per-slot `last_enqueued`
+//!   watermark drops the overlap.
+//!
+//! Ack gating: `wait_acked(seq)` blocks until enough connected replicas
+//! report a durable position `>= seq` — `none` returns immediately,
+//! `one` wants any single replica, `all` wants `expect` of them — or
+//! the timeout elapses (a structured error; the op stays applied and
+//! logged locally, so a timed-out ack is ambiguous, not rolled back —
+//! exactly the semantics of every quorum system's timeout).
+
+use std::io::{self, BufReader};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::repl::frame::Frame;
+use crate::repl::AckLevel;
+use crate::wal::{Wal, WalOp};
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+struct Slot {
+    id: u64,
+    /// Highest seq enqueued to this replica (catch-up included).
+    last_enqueued: u64,
+    /// Highest seq the replica acked as durably applied.
+    acked: u64,
+    tx: mpsc::Sender<Vec<u8>>,
+    /// Kept for shutdown: closing the socket unblocks the reader thread.
+    stream: TcpStream,
+}
+
+struct HubState {
+    next_id: u64,
+    slots: Vec<Slot>,
+}
+
+/// Per-replica view for `repl status`.
+#[derive(Clone, Debug)]
+pub struct ReplicaStatus {
+    pub id: u64,
+    pub acked: u64,
+    pub enqueued: u64,
+}
+
+/// See the module docs. Construct with [`ReplHub::start`].
+pub struct ReplHub {
+    level: AckLevel,
+    expect: usize,
+    ack_timeout: Duration,
+    wal: Arc<Wal>,
+    local_addr: SocketAddr,
+    state: Mutex<HubState>,
+    acked_cv: Condvar,
+    stop: Arc<AtomicBool>,
+    accept_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl ReplHub {
+    /// Bind the replication listener and start accepting replicas.
+    /// `expect` is the replica count level `all` waits for (min 1).
+    pub fn start(
+        addr: &str,
+        wal: Arc<Wal>,
+        level: AckLevel,
+        expect: usize,
+        ack_timeout: Duration,
+    ) -> io::Result<Arc<ReplHub>> {
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let hub = Arc::new(ReplHub {
+            level,
+            expect: expect.max(1),
+            ack_timeout,
+            wal,
+            local_addr,
+            state: Mutex::new(HubState { next_id: 0, slots: Vec::new() }),
+            acked_cv: Condvar::new(),
+            stop: Arc::new(AtomicBool::new(false)),
+            accept_thread: Mutex::new(None),
+        });
+        let accept = {
+            let hub = Arc::clone(&hub);
+            std::thread::Builder::new()
+                .name("finger-repl-accept".into())
+                .spawn(move || loop {
+                    if hub.stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let hub2 = Arc::clone(&hub);
+                            std::thread::Builder::new()
+                                .name("finger-repl-conn".into())
+                                .spawn(move || hub2.serve_replica(stream))
+                                .ok();
+                        }
+                        Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                })?
+        };
+        *lock(&hub.accept_thread) = Some(accept);
+        Ok(hub)
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn level(&self) -> AckLevel {
+        self.level
+    }
+
+    pub fn expect(&self) -> usize {
+        self.expect
+    }
+
+    /// Handshake + catch-up + registration, then pump acks until the
+    /// replica disconnects. Runs on a per-connection thread.
+    fn serve_replica(self: Arc<Self>, stream: TcpStream) {
+        stream.set_nodelay(true).ok();
+        let Ok(reader_stream) = stream.try_clone() else { return };
+        let mut reader = BufReader::new(reader_stream);
+        let (last_seq, need_snapshot) = match Frame::read_from(&mut reader) {
+            Ok(Some(Frame::Hello { last_seq, need_snapshot })) => (last_seq, need_snapshot),
+            _ => return, // anything else: not a replica; drop
+        };
+
+        let (id, rx) = {
+            // State lock held across the catch-up read — see the module
+            // docs for why this ordering closes the publish race.
+            let mut state = lock(&self.state);
+            let Ok(catchup) = self.wal.catchup_since(last_seq, need_snapshot) else {
+                return;
+            };
+            let (tx, rx) = mpsc::channel::<Vec<u8>>();
+            let mut enqueued = last_seq;
+            if let Some((base, bundle)) = catchup.snapshot {
+                let _ = tx.send(Frame::Snapshot { snapshot_seq: base, bundle }.encode());
+                enqueued = enqueued.max(base);
+            }
+            for (seq, op) in &catchup.ops {
+                let _ = tx.send(Frame::op(*seq, op).encode());
+                enqueued = enqueued.max(*seq);
+            }
+            let _ = tx.send(Frame::CaughtUp { seq: enqueued }.encode());
+            let id = state.next_id;
+            state.next_id += 1;
+            let Ok(slot_stream) = stream.try_clone() else { return };
+            state.slots.push(Slot {
+                id,
+                last_enqueued: enqueued,
+                // A reconnecting replica's durable position stands.
+                acked: last_seq,
+                tx,
+                stream: slot_stream,
+            });
+            self.acked_cv.notify_all();
+            (id, rx)
+        };
+
+        // Sender thread: drain the queue onto the socket.
+        let sender = {
+            let hub = Arc::clone(&self);
+            let mut out = stream;
+            std::thread::Builder::new()
+                .name("finger-repl-send".into())
+                .spawn(move || {
+                    use std::io::Write as _;
+                    while let Ok(frame) = rx.recv() {
+                        if out.write_all(&frame).is_err() {
+                            break;
+                        }
+                    }
+                    hub.drop_slot(id);
+                })
+        };
+
+        // This thread becomes the ack reader.
+        loop {
+            match Frame::read_from(&mut reader) {
+                Ok(Some(Frame::Ack { seq })) => {
+                    let mut state = lock(&self.state);
+                    if let Some(slot) = state.slots.iter_mut().find(|s| s.id == id) {
+                        slot.acked = slot.acked.max(seq);
+                    }
+                    self.acked_cv.notify_all();
+                }
+                Ok(Some(_)) | Ok(None) | Err(_) => break,
+            }
+        }
+        self.drop_slot(id);
+        if let Ok(s) = sender {
+            let _ = s.join();
+        }
+    }
+
+    /// Deregister a replica (its queue sender drops, ending the sender
+    /// thread; waiters re-evaluate without it).
+    fn drop_slot(&self, id: u64) {
+        let mut state = lock(&self.state);
+        if let Some(pos) = state.slots.iter().position(|s| s.id == id) {
+            let slot = state.slots.remove(pos);
+            slot.stream.shutdown(std::net::Shutdown::Both).ok();
+        }
+        self.acked_cv.notify_all();
+    }
+
+    /// Enqueue one applied+logged op to every connected replica. Call
+    /// under the same lock that serialized apply+append (the index write
+    /// lock) so publish order equals log order.
+    pub fn publish(&self, seq: u64, op: &WalOp) {
+        let frame = Frame::op(seq, op).encode();
+        let mut state = lock(&self.state);
+        let mut dead: Vec<u64> = Vec::new();
+        for slot in &mut state.slots {
+            if seq <= slot.last_enqueued {
+                continue; // catch-up already covered it
+            }
+            debug_assert_eq!(seq, slot.last_enqueued + 1, "publish must be gap-free");
+            if slot.tx.send(frame.clone()).is_ok() {
+                slot.last_enqueued = seq;
+            } else {
+                dead.push(slot.id);
+            }
+        }
+        for id in dead {
+            if let Some(pos) = state.slots.iter().position(|s| s.id == id) {
+                let slot = state.slots.remove(pos);
+                slot.stream.shutdown(std::net::Shutdown::Both).ok();
+            }
+        }
+    }
+
+    /// Block until the configured replication level acknowledges `seq`
+    /// (see the module docs), or time out with a structured error.
+    pub fn wait_acked(&self, seq: u64) -> Result<(), String> {
+        let want = match self.level {
+            AckLevel::None => return Ok(()),
+            AckLevel::One => 1,
+            AckLevel::All => self.expect,
+        };
+        let deadline = Instant::now() + self.ack_timeout;
+        let mut state = lock(&self.state);
+        loop {
+            let have = state.slots.iter().filter(|s| s.acked >= seq).count();
+            if have >= want {
+                return Ok(());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(format!(
+                    "replication ack timeout: seq {seq} durable on {have} replica(s), \
+                     level '{}' wants {want} (op is applied and logged locally)",
+                    self.level.name()
+                ));
+            }
+            let (guard, _) = self
+                .acked_cv
+                .wait_timeout(state, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            state = guard;
+        }
+    }
+
+    /// Connected-replica snapshot for the `repl_status` verb.
+    pub fn status(&self) -> Vec<ReplicaStatus> {
+        lock(&self.state)
+            .slots
+            .iter()
+            .map(|s| ReplicaStatus { id: s.id, acked: s.acked, enqueued: s.last_enqueued })
+            .collect()
+    }
+
+    /// Stop accepting, disconnect every replica, join the accept thread.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        {
+            let mut state = lock(&self.state);
+            for slot in state.slots.drain(..) {
+                slot.stream.shutdown(std::net::Shutdown::Both).ok();
+            }
+        }
+        self.acked_cv.notify_all();
+        if let Some(t) = lock(&self.accept_thread).take() {
+            let _ = t.join();
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Primary/backup replication for the serving plane.
+//!
+//! The whole subsystem rides on two guarantees the earlier layers
+//! already prove:
+//!
+//! 1. **Determinism** (PR 5): applying the same mutation sequence to the
+//!    same starting state produces byte-identical persisted bundles, for
+//!    every mutable index family.
+//! 2. **A total mutation order** (PR 6): the WAL assigns each applied op
+//!    a contiguous sequence number under the index write lock.
+//!
+//! Given those, replication is just shipping the ordered op stream: the
+//! primary streams WAL records to N replicas ([`hub::ReplHub`]), each
+//! replica applies them through the same `MutableAnnIndex` verbs
+//! ([`replica::Replica`]), and byte-level state equality falls out —
+//! checkable at runtime by comparing [`bundle_fingerprint`]s, and
+//! checked exhaustively (restarts, fault injection, SIGKILL) by
+//! `rust/tests/repl_props.rs`.
+//!
+//! Wire format: [`frame::Frame`] — the same length-prefixed CRC-checked
+//! framing discipline as the on-disk log, with `Op` payloads literally
+//! being [`crate::wal::WalOp::encode`] bytes.
+
+pub mod frame;
+pub mod hub;
+pub mod replica;
+
+use std::net::SocketAddr;
+
+use crate::index::AnnIndex;
+use crate::router::protocol::{QueryRequest, QueryResponse};
+use crate::router::server::Client;
+
+/// How many replica acknowledgements a mutation waits for before the
+/// client is acked. `None` = fire-and-forget (replicas converge
+/// asynchronously); `One` = at least one replica has applied and
+/// durably logged the op; `All` = every expected replica has.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AckLevel {
+    None,
+    One,
+    All,
+}
+
+impl AckLevel {
+    pub fn parse(s: &str) -> Result<AckLevel, String> {
+        match s {
+            "none" => Ok(AckLevel::None),
+            "one" => Ok(AckLevel::One),
+            "all" => Ok(AckLevel::All),
+            other => Err(format!("unknown ack level '{other}' (none|one|all)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AckLevel::None => "none",
+            AckLevel::One => "one",
+            AckLevel::All => "all",
+        }
+    }
+}
+
+/// FNV-1a 64-bit. Tiny, dependency-free, and stable across platforms —
+/// exactly what a divergence check needs (this is an integrity
+/// fingerprint, not a cryptographic one).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fingerprint of the live index: hash of its persisted-bundle bytes.
+/// Because persistence is deterministic, two nodes that applied the same
+/// op sequence return the same value — the `FINGERPRINT` verb and
+/// `repl fingerprint` CLI compare these across the topology.
+pub fn bundle_fingerprint(index: &dyn AnnIndex) -> std::io::Result<u64> {
+    Ok(fnv1a64(&crate::data::persist::bundle_to_vec(index)?))
+}
+
+/// Round-robin read fan-out over a replica set: queries rotate across
+/// the addresses and fail over to the next on connection error — the
+/// read-scaling half of primary/backup replication. Connections are
+/// per-call; this is a CLI/test convenience, not a pooled client.
+pub struct ReadPool {
+    addrs: Vec<SocketAddr>,
+    next: usize,
+}
+
+impl ReadPool {
+    pub fn new(addrs: Vec<SocketAddr>) -> ReadPool {
+        ReadPool { addrs, next: 0 }
+    }
+
+    pub fn addrs(&self) -> &[SocketAddr] {
+        &self.addrs
+    }
+
+    /// Query the next node in rotation; on failure try the rest in order.
+    /// Returns the answering node alongside the response.
+    pub fn query(&mut self, req: &QueryRequest) -> Result<(SocketAddr, QueryResponse), String> {
+        if self.addrs.is_empty() {
+            return Err("read pool has no addresses".into());
+        }
+        let n = self.addrs.len();
+        let mut last_err = String::new();
+        for i in 0..n {
+            let addr = self.addrs[(self.next + i) % n];
+            match Client::connect(&addr).map_err(|e| e.to_string()) {
+                Ok(mut c) => match c.query(req) {
+                    Ok(resp) => {
+                        self.next = (self.next + i + 1) % n;
+                        return Ok((addr, resp));
+                    }
+                    Err(e) => last_err = format!("{addr}: {e}"),
+                },
+                Err(e) => last_err = format!("{addr}: {e}"),
+            }
+        }
+        Err(format!("all {n} node(s) failed, last: {last_err}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ack_levels_parse_and_name() {
+        for (s, l) in [("none", AckLevel::None), ("one", AckLevel::One), ("all", AckLevel::All)] {
+            assert_eq!(AckLevel::parse(s), Ok(l));
+            assert_eq!(l.name(), s);
+        }
+        assert!(AckLevel::parse("two").is_err());
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn fingerprint_is_deterministic_and_state_sensitive() {
+        use crate::core::matrix::Matrix;
+        use crate::index::impls::BruteForce;
+        use crate::index::SearchContext;
+        use std::sync::Arc;
+        let mut m = Matrix::zeros(0, 2);
+        m.push_row(&[1.0, 2.0]);
+        m.push_row(&[3.0, 4.0]);
+        let mut a: Box<dyn AnnIndex> = Box::new(BruteForce::new(Arc::new(m.clone())));
+        let b: Box<dyn AnnIndex> = Box::new(BruteForce::new(Arc::new(m)));
+        let fa = bundle_fingerprint(a.as_ref()).unwrap();
+        assert_eq!(fa, bundle_fingerprint(b.as_ref()).unwrap(), "same state, same print");
+        let mut ctx = SearchContext::new();
+        a.as_mutable().unwrap().insert(&[5.0, 6.0], &mut ctx).unwrap();
+        assert_ne!(fa, bundle_fingerprint(a.as_ref()).unwrap(), "mutation moves the print");
+    }
+}

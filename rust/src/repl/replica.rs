@@ -1,0 +1,280 @@
+//! Replica-side replication client: connects to a primary, applies the
+//! ordered op stream through the shared [`ServeIndex`], and acks each
+//! op once it is durable locally.
+//!
+//! The replica is strict about sequencing: after applying seq `s`, the
+//! only acceptable next op is `s + 1`. A gap means a frame was lost in
+//! transit (or the primary's log diverged); a lower-or-equal seq means a
+//! duplicate. Either way the replica counts a violation, drops the
+//! connection, and reconnects with a fresh `Hello { last_seq: applied }`
+//! — the primary's catch-up path then re-delivers exactly the missing
+//! suffix (or a snapshot if the tail was compacted away). Torn and
+//! corrupt frames never reach this layer; the frame codec rejects them.
+//!
+//! When the replica keeps its own WAL (`ReplicaOpts::wal_dir`), every
+//! applied op is appended and committed there before the ack goes back,
+//! so a primary running at ack level `all` over replicas with
+//! `--fsync-policy always` gets true multi-node durability. A received
+//! snapshot atomically replaces the local generation via
+//! [`Wal::reinstall`], byte-for-byte, preserving the determinism
+//! contract: primary and replica bundles stay byte-identical.
+
+use std::io::{self, BufReader};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::repl::frame::Frame;
+use crate::router::server::ServeIndex;
+use crate::wal::{FsyncPolicy, Wal};
+
+/// Replica configuration. `wal_dir: None` keeps the replica ephemeral
+/// (it re-snapshots from the primary on every restart).
+#[derive(Clone, Debug)]
+pub struct ReplicaOpts {
+    pub wal_dir: Option<PathBuf>,
+    pub policy: FsyncPolicy,
+    /// Pause between reconnect attempts after a dropped stream.
+    pub reconnect: Duration,
+}
+
+impl Default for ReplicaOpts {
+    fn default() -> Self {
+        ReplicaOpts {
+            wal_dir: None,
+            policy: FsyncPolicy::EveryN(8),
+            reconnect: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Handle to the background replication loop. Dropping it does NOT stop
+/// the loop; call [`Replica::stop`].
+pub struct Replica {
+    applied: Arc<AtomicU64>,
+    ready: Arc<AtomicBool>,
+    violations: Arc<AtomicU64>,
+    reconnects: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    /// Live connection, shared so `stop()` can shut the socket down and
+    /// unblock a reader waiting on a quiet primary.
+    conn: Arc<Mutex<Option<TcpStream>>>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Replica {
+    /// Start replicating from `primary` into `serve`. If a local WAL
+    /// generation already exists under `opts.wal_dir`, it is recovered
+    /// and installed first, so the replica resumes from its durable
+    /// position instead of re-fetching a snapshot.
+    pub fn start(
+        primary: SocketAddr,
+        serve: Arc<ServeIndex>,
+        opts: ReplicaOpts,
+    ) -> io::Result<Replica> {
+        let applied = Arc::new(AtomicU64::new(0));
+        let ready = Arc::new(AtomicBool::new(false));
+        let violations = Arc::new(AtomicU64::new(0));
+        let reconnects = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let conn: Arc<Mutex<Option<TcpStream>>> = Arc::new(Mutex::new(None));
+
+        let mut local: Option<Wal> = None;
+        let mut has_state = false;
+        if let Some(dir) = &opts.wal_dir {
+            if Wal::has_snapshot(dir) {
+                let (index, wal, report) = Wal::recover(dir, opts.policy)?;
+                serve.install(index, report.last_seq);
+                applied.store(report.last_seq, Ordering::SeqCst);
+                local = Some(wal);
+                has_state = true;
+            }
+        }
+
+        let thread = {
+            let applied = Arc::clone(&applied);
+            let ready = Arc::clone(&ready);
+            let violations = Arc::clone(&violations);
+            let reconnects = Arc::clone(&reconnects);
+            let stop = Arc::clone(&stop);
+            let conn = Arc::clone(&conn);
+            std::thread::Builder::new().name("finger-replica".into()).spawn(move || {
+                let mut st = StreamState { serve, opts, local, has_state, conn };
+                while !stop.load(Ordering::Relaxed) {
+                    // Ok(()) is a clean EOF (primary went away); errors are
+                    // connect failures or protocol violations — the latter
+                    // are tallied inside stream_once where the context is.
+                    let _ = st.stream_once(primary, &applied, &ready, &violations, &stop);
+                    ready.store(false, Ordering::SeqCst);
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    reconnects.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(st.opts.reconnect);
+                }
+            })?
+        };
+
+        Ok(Replica {
+            applied,
+            ready,
+            violations,
+            reconnects,
+            stop,
+            conn,
+            thread: Some(thread),
+        })
+    }
+
+    /// Highest seq applied locally.
+    pub fn applied(&self) -> u64 {
+        self.applied.load(Ordering::SeqCst)
+    }
+
+    /// True once the primary signalled the replica is caught up on the
+    /// current connection.
+    pub fn is_ready(&self) -> bool {
+        self.ready.load(Ordering::SeqCst)
+    }
+
+    /// Sequencing violations detected (gaps or duplicates that forced a
+    /// reconnect). Fault-injection tests assert this moves.
+    pub fn violations(&self) -> u64 {
+        self.violations.load(Ordering::Relaxed)
+    }
+
+    /// Completed reconnect cycles.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects.load(Ordering::Relaxed)
+    }
+
+    /// Poll until caught up or `timeout` elapses.
+    pub fn wait_ready(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        while Instant::now() < deadline {
+            if self.is_ready() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        self.is_ready()
+    }
+
+    /// Poll until `applied() >= seq` or `timeout` elapses.
+    pub fn wait_applied(&self, seq: u64, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        while Instant::now() < deadline {
+            if self.applied() >= seq {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        self.applied() >= seq
+    }
+
+    /// Stop the loop and join it. Releases the local WAL lock so a
+    /// successor replica can reopen the same directory.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(stream) = self.conn.lock().unwrap_or_else(|e| e.into_inner()).take() {
+            stream.shutdown(std::net::Shutdown::Both).ok();
+        }
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Mutable state owned by the replication thread across reconnects.
+struct StreamState {
+    serve: Arc<ServeIndex>,
+    opts: ReplicaOpts,
+    local: Option<Wal>,
+    has_state: bool,
+    conn: Arc<Mutex<Option<TcpStream>>>,
+}
+
+impl StreamState {
+    /// One connection lifetime: handshake, then apply frames until EOF,
+    /// error, or stop. Sequencing violations bump `violations` before the
+    /// connection is abandoned; the caller reconnects either way.
+    fn stream_once(
+        &mut self,
+        primary: SocketAddr,
+        applied: &AtomicU64,
+        ready: &AtomicBool,
+        violations: &AtomicU64,
+        stop: &AtomicBool,
+    ) -> io::Result<()> {
+        let mut out = TcpStream::connect_timeout(&primary, Duration::from_millis(500))?;
+        out.set_nodelay(true).ok();
+        // Publish the socket so stop() can shut it down and unblock the
+        // (otherwise fully blocking) frame reads below.
+        *self.conn.lock().unwrap_or_else(|e| e.into_inner()) = Some(out.try_clone()?);
+        let mut reader = BufReader::new(out.try_clone()?);
+        Frame::Hello {
+            last_seq: applied.load(Ordering::SeqCst),
+            need_snapshot: !self.has_state,
+        }
+        .write_to(&mut out)?;
+
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            let frame = match Frame::read_from(&mut reader) {
+                Ok(Some(f)) => f,
+                Ok(None) => return Ok(()), // clean EOF
+                Err(e) => return Err(e),
+            };
+            match frame {
+                Frame::Snapshot { snapshot_seq, bundle } => {
+                    let index = crate::data::persist::load_index_from_slice(&bundle)
+                        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+                    if let Some(dir) = &self.opts.wal_dir {
+                        // Replace the local generation with the primary's
+                        // bytes verbatim before exposing the new state.
+                        self.local =
+                            Some(Wal::reinstall(dir, snapshot_seq, &bundle, self.opts.policy)?);
+                    }
+                    self.serve.install(index, snapshot_seq);
+                    applied.store(snapshot_seq, Ordering::SeqCst);
+                    self.has_state = true;
+                    Frame::Ack { seq: snapshot_seq }.write_to(&mut out)?;
+                }
+                Frame::Op { record } => {
+                    let (seq, op) = Frame::Op { record }
+                        .op_record()
+                        .expect("frame codec validated the op payload");
+                    let expect = applied.load(Ordering::SeqCst) + 1;
+                    if !self.has_state || seq != expect {
+                        // Gap (lost frame) or duplicate: refuse to apply,
+                        // reconnect, and let catch-up repair the stream.
+                        violations.fetch_add(1, Ordering::Relaxed);
+                        return Err(io::Error::new(
+                            io::ErrorKind::InvalidData,
+                            format!("seq violation: got {seq}, expected {expect}"),
+                        ));
+                    }
+                    self.serve
+                        .apply_replicated(seq, &op, self.local.as_ref())
+                        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+                    applied.store(seq, Ordering::SeqCst);
+                    Frame::Ack { seq }.write_to(&mut out)?;
+                }
+                Frame::CaughtUp { seq: _ } => {
+                    ready.store(true, Ordering::SeqCst);
+                }
+                Frame::Hello { .. } | Frame::Ack { .. } => {
+                    violations.fetch_add(1, Ordering::Relaxed);
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        "unexpected handshake/ack frame from primary",
+                    ));
+                }
+            }
+        }
+    }
+}

@@ -16,10 +16,25 @@
 //!       -> {"id": 10, "compacted": true|false, "live": ...}
 //!   {"id": 11, "op": "save"}
 //!       -> {"id": 11, "saved": <checkpoint seq>, "live": ...}
+//!   {"id": 12, "op": "set_threshold", "frac": 0.25}
+//!       -> {"id": 12, "threshold": 0.25, "live": ...}
 //!
 //! `save` checkpoints the serving index through the WAL (fresh snapshot +
 //! log rotation) without a restart; it requires the server to be running
-//! with `--wal-dir`.
+//! with `--wal-dir`. `set_threshold` retunes the compaction gate as a
+//! logged, replicated op (so replay and replicas gate identically).
+//!
+//! Read-only introspection verbs (allowed on replicas, never logged):
+//!   {"id": 13, "op": "fingerprint"}
+//!       -> {"id": 13, "fingerprint": "<hex u64>", "seq": N, "live": ...}
+//!   {"id": 14, "op": "repl_status"}
+//!       -> {"id": 14, "role": "primary|replica|standalone", "seq": N,
+//!           ...role-specific fields}
+//!
+//! `fingerprint` hashes the index's persisted-bundle bytes (FNV-1a 64);
+//! determinism makes equal fingerprints mean byte-identical state, so
+//! comparing them across a primary and its replicas is the divergence
+//! check. The hash travels as a hex string because JSON numbers are f64.
 //!
 //! Every failure — malformed frame, unknown verb, unsupported family,
 //! stale id — is a structured `{"id": N, "error": "..."}` line on the
@@ -137,6 +152,13 @@ pub enum Request {
     Delete { id: u64, key: u32 },
     Compact { id: u64 },
     Save { id: u64 },
+    /// Retune the compaction gate — logged and replicated like any
+    /// mutation, so replay/replica compaction gates identically.
+    SetThreshold { id: u64, frac: f64 },
+    /// Hash of the persisted-bundle bytes (read-only, replica-safe).
+    Fingerprint { id: u64 },
+    /// Replication role/progress introspection (read-only).
+    ReplStatus { id: u64 },
 }
 
 impl Request {
@@ -180,6 +202,25 @@ impl Request {
                 let id = v.get("id").and_then(|x| x.as_f64()).ok_or("missing id")? as u64;
                 Ok(Request::Save { id })
             }
+            "set_threshold" => {
+                let id = v.get("id").and_then(|x| x.as_f64()).ok_or("missing id")? as u64;
+                let frac = v
+                    .get("frac")
+                    .and_then(|x| x.as_f64())
+                    .ok_or("set_threshold requires a frac")?;
+                if !frac.is_finite() || !(0.0..=1.0).contains(&frac) || frac == 0.0 {
+                    return Err("frac must be in (0, 1]".into());
+                }
+                Ok(Request::SetThreshold { id, frac })
+            }
+            "fingerprint" => {
+                let id = v.get("id").and_then(|x| x.as_f64()).ok_or("missing id")? as u64;
+                Ok(Request::Fingerprint { id })
+            }
+            "repl_status" => {
+                let id = v.get("id").and_then(|x| x.as_f64()).ok_or("missing id")? as u64;
+                Ok(Request::ReplStatus { id })
+            }
             other => Err(format!("unknown op '{other}'")),
         }
     }
@@ -191,7 +232,10 @@ impl Request {
             Request::Insert { id, .. }
             | Request::Delete { id, .. }
             | Request::Compact { id }
-            | Request::Save { id } => *id,
+            | Request::Save { id }
+            | Request::SetThreshold { id, .. }
+            | Request::Fingerprint { id }
+            | Request::ReplStatus { id } => *id,
         }
     }
 
@@ -223,18 +267,37 @@ impl Request {
                 ("op", Json::str("save")),
             ])
             .to_string(),
+            Request::SetThreshold { id, frac } => Json::obj(vec![
+                ("id", Json::Num(*id as f64)),
+                ("op", Json::str("set_threshold")),
+                ("frac", Json::Num(*frac)),
+            ])
+            .to_string(),
+            Request::Fingerprint { id } => Json::obj(vec![
+                ("id", Json::Num(*id as f64)),
+                ("op", Json::str("fingerprint")),
+            ])
+            .to_string(),
+            Request::ReplStatus { id } => Json::obj(vec![
+                ("id", Json::Num(*id as f64)),
+                ("op", Json::str("repl_status")),
+            ])
+            .to_string(),
         }
     }
 }
 
-/// What a mutation verb did.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// What a mutation verb did. (`PartialEq` only: `ThresholdSet` carries
+/// an `f64`.)
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum MutOutcome {
     Inserted(u32),
     Deleted(u32),
     Compacted(bool),
     /// Checkpoint written; carries the new snapshot sequence.
     Saved(u64),
+    /// Compaction gate retuned; carries the new threshold.
+    ThresholdSet(f64),
 }
 
 /// Acknowledgement for a mutation verb, with the post-op live count.
@@ -252,6 +315,7 @@ impl MutResponse {
             MutOutcome::Deleted(id) => ("deleted", Json::Num(id as f64)),
             MutOutcome::Compacted(did) => ("compacted", Json::Bool(did)),
             MutOutcome::Saved(seq) => ("saved", Json::Num(seq as f64)),
+            MutOutcome::ThresholdSet(frac) => ("threshold", Json::Num(frac)),
         };
         Json::obj(vec![
             ("id", Json::Num(self.id as f64)),
@@ -276,10 +340,53 @@ impl MutResponse {
             MutOutcome::Compacted(b)
         } else if let Some(x) = v.get("saved").and_then(|x| x.as_f64()) {
             MutOutcome::Saved(x as u64)
+        } else if let Some(x) = v.get("threshold").and_then(|x| x.as_f64()) {
+            MutOutcome::ThresholdSet(x)
         } else {
             return Err("not a mutation acknowledgement".into());
         };
         Ok(MutResponse { id, outcome, live })
+    }
+}
+
+/// Answer to the `fingerprint` verb. The 64-bit hash is carried as a
+/// hex string: JSON numbers are f64 and cannot hold a u64 exactly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FingerprintInfo {
+    pub id: u64,
+    /// FNV-1a 64 over the persisted-bundle bytes.
+    pub fingerprint: u64,
+    /// Last op sequence applied when the hash was taken (0 = no WAL).
+    pub seq: u64,
+    pub live: u64,
+}
+
+impl FingerprintInfo {
+    pub fn to_json_line(&self) -> String {
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("fingerprint", Json::str(&format!("{:016x}", self.fingerprint))),
+            ("seq", Json::Num(self.seq as f64)),
+            ("live", Json::Num(self.live as f64)),
+        ])
+        .to_string()
+    }
+
+    pub fn parse(line: &str) -> Result<FingerprintInfo, String> {
+        let v = Json::parse(line).map_err(|e| e.to_string())?;
+        if let Some(err) = v.get("error").and_then(|e| e.as_str()) {
+            return Err(err.to_string());
+        }
+        let id = v.get("id").and_then(|x| x.as_f64()).ok_or("missing id")? as u64;
+        let fp = v
+            .get("fingerprint")
+            .and_then(|x| x.as_str())
+            .ok_or("missing fingerprint")?;
+        let fingerprint =
+            u64::from_str_radix(fp, 16).map_err(|_| format!("bad fingerprint hex '{fp}'"))?;
+        let seq = v.get("seq").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64;
+        let live = v.get("live").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64;
+        Ok(FingerprintInfo { id, fingerprint, seq, live })
     }
 }
 
@@ -337,6 +444,9 @@ mod tests {
             Request::Compact { id: 3 },
             Request::Query(QueryRequest { id: 4, vector: vec![1.0], k: 2 }),
             Request::Save { id: 5 },
+            Request::SetThreshold { id: 6, frac: 0.25 },
+            Request::Fingerprint { id: 7 },
+            Request::ReplStatus { id: 8 },
         ];
         for f in frames {
             let back = Request::parse(&f.to_json_line()).unwrap();
@@ -365,6 +475,11 @@ mod tests {
         assert!(Request::parse(r#"{"id":1,"op":"frobnicate"}"#).is_err());
         assert!(Request::parse(r#"{"op":"compact"}"#).is_err(), "compact needs an id");
         assert!(Request::parse(r#"{"op":"save"}"#).is_err(), "save needs an id");
+        assert!(Request::parse(r#"{"id":1,"op":"set_threshold"}"#).is_err());
+        assert!(Request::parse(r#"{"id":1,"op":"set_threshold","frac":0.0}"#).is_err());
+        assert!(Request::parse(r#"{"id":1,"op":"set_threshold","frac":1.5}"#).is_err());
+        assert!(Request::parse(r#"{"id":1,"op":"set_threshold","frac":-0.5}"#).is_err());
+        assert!(Request::parse(r#"{"op":"fingerprint"}"#).is_err(), "fingerprint needs an id");
     }
 
     #[test]
@@ -375,6 +490,7 @@ mod tests {
             MutOutcome::Compacted(true),
             MutOutcome::Compacted(false),
             MutOutcome::Saved(12),
+            MutOutcome::ThresholdSet(0.25),
         ] {
             let resp = MutResponse { id: 11, outcome, live: 100 };
             let back = MutResponse::parse(&resp.to_json_line()).unwrap();
@@ -382,5 +498,21 @@ mod tests {
         }
         let line = error_line(3, "nope");
         assert_eq!(MutResponse::parse(&line), Err("nope".to_string()));
+    }
+
+    /// A u64 fingerprint must survive the JSON trip exactly — that is
+    /// why it travels as hex, not as an (f64-backed) number.
+    #[test]
+    fn fingerprint_info_roundtrips_u64_exactly() {
+        let info = FingerprintInfo {
+            id: 9,
+            // > 2^53: would be rounded if carried as a JSON number.
+            fingerprint: 0xdead_beef_cafe_f00d,
+            seq: 41,
+            live: 100,
+        };
+        let back = FingerprintInfo::parse(&info.to_json_line()).unwrap();
+        assert_eq!(info, back);
+        assert!(FingerprintInfo::parse(&error_line(1, "x")).is_err());
     }
 }

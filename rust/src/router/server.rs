@@ -26,11 +26,12 @@ use std::sync::{mpsc, Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWri
 use std::time::{Duration, Instant};
 
 use crate::core::matrix::Matrix;
-use crate::index::{AnnIndex, SearchContext, SearchParams};
+use crate::index::{AnnIndex, SearchContext, SearchParams, DEFAULT_COMPACT_THRESHOLD};
+use crate::repl::hub::ReplHub;
 use crate::router::batcher::{Batcher, SubmitError};
 use crate::router::metrics::Metrics;
 use crate::router::protocol::{
-    error_line, MutOutcome, MutResponse, QueryRequest, QueryResponse, Request,
+    error_line, FingerprintInfo, MutOutcome, MutResponse, QueryRequest, QueryResponse, Request,
 };
 use crate::runtime::service::RerankService;
 use crate::wal::{Wal, WalOp, WalWriter};
@@ -77,6 +78,18 @@ pub struct ServeIndex {
     /// and committed per the fsync policy before the verb is
     /// acknowledged.
     wal: Option<Arc<Wal>>,
+    /// Optional replication hub (primary role): applied+logged ops are
+    /// published to connected replicas under the same write lock, and the
+    /// client ack additionally waits for the configured replication
+    /// level.
+    repl: Option<Arc<ReplHub>>,
+    /// Replica role: mutation verbs are refused (the replication stream
+    /// is the only writer); searches and the read-only introspection
+    /// verbs serve normally.
+    read_only: bool,
+    /// Last op sequence applied to the live index (via local mutation or
+    /// the replication stream). Reported by `fingerprint`/`repl_status`.
+    applied_seq: AtomicU64,
 }
 
 impl ServeIndex {
@@ -91,6 +104,9 @@ impl ServeIndex {
             mut_ctx: Mutex::new(SearchContext::new()),
             mutated: AtomicBool::new(false),
             wal: None,
+            repl: None,
+            read_only: false,
+            applied_seq: AtomicU64::new(0),
         }
     }
 
@@ -99,6 +115,38 @@ impl ServeIndex {
     pub fn with_wal(mut self, wal: Arc<Wal>) -> ServeIndex {
         self.wal = Some(wal);
         self
+    }
+
+    /// Attach a replication hub (primary role): every applied+logged op
+    /// is streamed to connected replicas, and acks gate on the hub's
+    /// level. Requires a WAL (the hub streams from it).
+    pub fn with_repl(mut self, hub: Arc<ReplHub>) -> ServeIndex {
+        self.repl = Some(hub);
+        self
+    }
+
+    /// Mark this server a replica: reads serve, writes are refused (the
+    /// replication stream applies mutations via [`ServeIndex::apply_replicated`]).
+    pub fn as_replica(mut self) -> ServeIndex {
+        self.read_only = true;
+        self
+    }
+
+    /// Seed the applied-sequence counter (e.g. after WAL recovery).
+    pub fn set_applied_seq(&self, seq: u64) {
+        self.applied_seq.store(seq, Ordering::SeqCst);
+    }
+
+    pub fn applied_seq(&self) -> u64 {
+        self.applied_seq.load(Ordering::SeqCst)
+    }
+
+    pub fn repl_hub(&self) -> Option<&Arc<ReplHub>> {
+        self.repl.as_ref()
+    }
+
+    pub fn is_read_only(&self) -> bool {
+        self.read_only
     }
 
     pub fn wal(&self) -> Option<&Arc<Wal>> {
@@ -130,6 +178,9 @@ impl ServeIndex {
     /// commit). Compaction rebuilds inline (see the struct docs for the
     /// tradeoff).
     pub fn mutate(&self, req: &Request) -> Result<MutResponse, String> {
+        if self.read_only {
+            return Err("replica is read-only; send writes to the primary".into());
+        }
         if let Request::Save { id } = req {
             let (seq, live) = self.save()?;
             return Ok(MutResponse { id: *id, outcome: MutOutcome::Saved(seq), live });
@@ -169,9 +220,14 @@ impl ServeIndex {
                         Request::Compact { .. } => {
                             MutOutcome::Compacted(index.compact(ctx).map_err(|e| e.to_string())?)
                         }
-                        Request::Query(_) | Request::Save { .. } => {
-                            return Err("not a mutation".into())
+                        Request::SetThreshold { frac, .. } => {
+                            index.set_compact_threshold(*frac);
+                            MutOutcome::ThresholdSet(*frac)
                         }
+                        Request::Query(_)
+                        | Request::Save { .. }
+                        | Request::Fingerprint { .. }
+                        | Request::ReplStatus { .. } => return Err("not a mutation".into()),
                     })
                 },
             ))
@@ -184,14 +240,29 @@ impl ServeIndex {
                     Request::Insert { vector, .. } => WalOp::Insert { vector: vector.clone() },
                     Request::Delete { key, .. } => WalOp::Delete { key: *key },
                     Request::Compact { .. } => WalOp::Compact,
-                    Request::Query(_) | Request::Save { .. } => unreachable!(),
+                    Request::SetThreshold { frac, .. } => WalOp::SetThreshold { frac: *frac },
+                    Request::Query(_)
+                    | Request::Save { .. }
+                    | Request::Fingerprint { .. }
+                    | Request::ReplStatus { .. } => unreachable!(),
                 };
-                pending =
-                    Some(wal.append(&op).map_err(|e| format!("wal append failed: {e}"))?);
+                let (w, seq) =
+                    wal.append(&op).map_err(|e| format!("wal append failed: {e}"))?;
+                // Publish to replicas under the same lock that ordered the
+                // append: stream order == log order == apply order.
+                if let Some(hub) = &self.repl {
+                    hub.publish(seq, &op);
+                }
+                self.applied_seq.store(seq, Ordering::SeqCst);
+                pending = Some((w, seq));
             }
-            // A compact that declined to rebuild changed nothing;
-            // everything else invalidates the rerank snapshot.
-            if !matches!(outcome, MutOutcome::Compacted(false)) {
+            // A compact that declined to rebuild changed nothing, and a
+            // threshold change moves no vectors; everything else
+            // invalidates the rerank snapshot.
+            if !matches!(
+                outcome,
+                MutOutcome::Compacted(false) | MutOutcome::ThresholdSet(_)
+            ) {
                 self.mutated.store(true, Ordering::Release);
             }
             (outcome, index.live_len() as u64)
@@ -200,6 +271,13 @@ impl ServeIndex {
         // concurrent committers coalesce onto one fsync.
         if let Some((w, seq)) = pending {
             w.commit(seq).map_err(|e| format!("wal commit failed: {e}"))?;
+            // Replication gate: the client ack also waits for the
+            // configured number of replica acks (level none returns
+            // immediately). On timeout the op is still applied+logged
+            // locally — the error reports exactly that ambiguity.
+            if let Some(hub) = &self.repl {
+                hub.wait_acked(seq)?;
+            }
         }
         Ok(MutResponse { id: req.id(), outcome, live })
     }
@@ -207,6 +285,11 @@ impl ServeIndex {
     /// Checkpoint the serving index through the WAL: fresh snapshot + log
     /// rotation, under the write lock so the cut is quiescent. Returns
     /// the new snapshot sequence and the live count.
+    ///
+    /// The v5 bundle does not persist the compaction threshold, so when
+    /// the live index runs a non-default one it is re-logged as the first
+    /// op of the fresh generation (and streamed to replicas) — replay and
+    /// catch-up then gate compaction exactly as the live run does.
     pub fn save(&self) -> Result<(u64, u64), String> {
         let Some(wal) = &self.wal else {
             return Err("snapshot requires a WAL (serve --wal-dir)".into());
@@ -215,10 +298,126 @@ impl ServeIndex {
         let seq = wal
             .checkpoint(guard.as_ref())
             .map_err(|e| format!("checkpoint failed: {e}"))?;
+        let threshold = guard.as_mutable_view().map(|v| v.compact_threshold());
+        if let Some(frac) = threshold.filter(|f| *f != DEFAULT_COMPACT_THRESHOLD) {
+            let op = WalOp::SetThreshold { frac };
+            let (w, tseq) = wal
+                .append(&op)
+                .map_err(|e| format!("threshold re-log failed: {e}"))?;
+            if let Some(hub) = &self.repl {
+                hub.publish(tseq, &op);
+            }
+            self.applied_seq.store(tseq, Ordering::SeqCst);
+            w.commit(tseq).map_err(|e| format!("threshold re-log commit failed: {e}"))?;
+        }
         let live = guard
             .as_mutable_view()
             .map_or(guard.len() as u64, |v| v.live_len() as u64);
         Ok((seq, live))
+    }
+
+    /// Swap in a whole new index (replica snapshot install / recovery).
+    /// Takes the write lock, so in-flight search batches finish against
+    /// the old state and later ones see the new.
+    pub fn install(&self, index: Box<dyn AnnIndex>, seq: u64) {
+        let mut guard = wlock(&self.index);
+        *guard = index;
+        self.applied_seq.store(seq, Ordering::SeqCst);
+        // The rerank snapshot (if any) was taken against the boot-time
+        // index; a wholesale swap invalidates it just like a mutation.
+        self.mutated.store(true, Ordering::Release);
+    }
+
+    /// Apply one op from the replication stream: same verbs, same
+    /// ordering discipline as [`ServeIndex::mutate`], but the sequence
+    /// number is the primary's, and the local WAL (when the replica keeps
+    /// one) must land it at exactly that sequence — a mismatch means the
+    /// local log diverged from the stream and is a hard error, not a
+    /// retry.
+    pub fn apply_replicated(
+        &self,
+        seq: u64,
+        op: &WalOp,
+        wal: Option<&Wal>,
+    ) -> Result<(), String> {
+        let mut guard = wlock(&self.index);
+        let name = guard.name();
+        let Some(index) = guard.as_mutable() else {
+            return Err(format!("index family '{name}' does not support mutation"));
+        };
+        let mut ctx = mlock(&self.mut_ctx);
+        let ctx = &mut *ctx;
+        match op {
+            WalOp::Insert { vector } => {
+                index.insert(vector, ctx).map_err(|e| e.to_string())?;
+            }
+            WalOp::Delete { key } => {
+                index.remove(*key).map_err(|e| e.to_string())?;
+            }
+            WalOp::Compact => {
+                index.compact(ctx).map_err(|e| e.to_string())?;
+            }
+            WalOp::SetThreshold { frac } => index.set_compact_threshold(*frac),
+        }
+        self.mutated.store(true, Ordering::Release);
+        if let Some(wal) = wal {
+            let (w, lseq) = wal.append(op).map_err(|e| format!("local append failed: {e}"))?;
+            if lseq != seq {
+                return Err(format!(
+                    "local WAL diverged: primary seq {seq}, local append landed at {lseq}"
+                ));
+            }
+            // Durable before the ack goes back — with `--fsync-policy
+            // always` this is what makes level-`all` acks survive a
+            // primary SIGKILL.
+            w.commit(lseq).map_err(|e| format!("local commit failed: {e}"))?;
+        }
+        self.applied_seq.store(seq, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Hash the live index's persisted-bundle bytes (read lock only).
+    /// Determinism makes equal fingerprints mean byte-identical state.
+    pub fn fingerprint(&self, id: u64) -> Result<FingerprintInfo, String> {
+        let guard = rlock(&self.index);
+        let fingerprint = crate::repl::bundle_fingerprint(guard.as_ref())
+            .map_err(|e| format!("fingerprint failed: {e}"))?;
+        let live = guard
+            .as_mutable_view()
+            .map_or(guard.len() as u64, |v| v.live_len() as u64);
+        Ok(FingerprintInfo { id, fingerprint, seq: self.applied_seq(), live })
+    }
+
+    /// JSON line for the `repl_status` verb: role, applied sequence, and
+    /// (on a primary) per-replica ack progress.
+    pub fn repl_status_json(&self, id: u64) -> String {
+        use crate::core::json::Json;
+        let mut fields = vec![
+            ("id", Json::Num(id as f64)),
+            ("seq", Json::Num(self.applied_seq() as f64)),
+        ];
+        match (&self.repl, self.read_only) {
+            (Some(hub), _) => {
+                fields.push(("role", Json::str("primary")));
+                fields.push(("ack_level", Json::str(hub.level().name())));
+                fields.push(("expect", Json::Num(hub.expect() as f64)));
+                let replicas = hub
+                    .status()
+                    .into_iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("id", Json::Num(r.id as f64)),
+                            ("acked", Json::Num(r.acked as f64)),
+                            ("enqueued", Json::Num(r.enqueued as f64)),
+                        ])
+                    })
+                    .collect();
+                fields.push(("replicas", Json::Arr(replicas)));
+            }
+            (None, true) => fields.push(("role", Json::str("replica"))),
+            (None, false) => fields.push(("role", Json::str("standalone"))),
+        }
+        Json::obj(fields).to_string()
     }
 
     /// Copy of one data row (test/bench convenience; takes the read lock).
@@ -498,6 +697,22 @@ fn handle_conn(
                     "{}",
                     error_line(r.id, &format!("dim mismatch: got {}, want {dim}", r.vector.len()))
                 );
+                continue;
+            }
+            // Read-only introspection verbs answer inline (replica-safe).
+            Ok(Request::Fingerprint { id }) => {
+                let reply = match index.fingerprint(id) {
+                    Ok(info) => info.to_json_line(),
+                    Err(e) => {
+                        metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        error_line(id, &e)
+                    }
+                };
+                let _ = writeln!(writer, "{reply}");
+                continue;
+            }
+            Ok(Request::ReplStatus { id }) => {
+                let _ = writeln!(writer, "{}", index.repl_status_json(id));
                 continue;
             }
             // Mutation verbs apply on the connection thread (write lock)
@@ -840,6 +1055,66 @@ mod tests {
         assert_eq!(hits[0].1, 0, "search survives a poisoned lock");
         let ack = index.mutate(&Request::Delete { id: 1, key: 5 }).unwrap();
         assert_eq!(ack.outcome, MutOutcome::Deleted(5), "mutation survives too");
+    }
+
+    /// The replication-era verbs over plain TCP: `set_threshold` applies
+    /// and acks, `fingerprint` matches a locally computed hash, and
+    /// `repl_status` reports the standalone role.
+    #[test]
+    fn threshold_fingerprint_and_status_verbs() {
+        use crate::router::protocol::FingerprintInfo;
+        let ds = tiny(211, 120, 8, Metric::L2);
+        let idx = HnswIndex::build(
+            Arc::clone(&ds.data),
+            HnswParams { m: 8, ef_construction: 40, ..Default::default() },
+        );
+        let serve = Arc::new(ServeIndex::new(Box::new(idx), 64));
+        let server = Server::start(Arc::clone(&serve), cfg(), None).unwrap();
+        let mut client = Client::connect(&server.local_addr).unwrap();
+
+        let ack = client.mutate(&Request::SetThreshold { id: 1, frac: 0.5 }).unwrap();
+        assert_eq!(ack.outcome, MutOutcome::ThresholdSet(0.5));
+        assert_eq!(
+            rlock(&serve.index).as_mutable_view().unwrap().compact_threshold(),
+            0.5
+        );
+
+        let raw = client.send_raw(r#"{"id":2,"op":"fingerprint"}"#).unwrap();
+        let info = FingerprintInfo::parse(raw.trim()).unwrap();
+        let local = crate::repl::bundle_fingerprint(rlock(&serve.index).as_ref()).unwrap();
+        assert_eq!(info.fingerprint, local, "verb matches a locally computed hash");
+        assert_eq!(info.live, 120);
+
+        let raw = client.send_raw(r#"{"id":3,"op":"repl_status"}"#).unwrap();
+        assert!(raw.contains(r#""role": "standalone""#) || raw.contains(r#""role":"standalone""#),
+            "unexpected status line: {raw}");
+        server.shutdown();
+    }
+
+    /// A replica-role ServeIndex refuses every mutation verb but still
+    /// answers reads and introspection.
+    #[test]
+    fn replica_serve_index_refuses_writes() {
+        let ds = tiny(212, 80, 8, Metric::L2);
+        let idx = HnswIndex::build(
+            Arc::clone(&ds.data),
+            HnswParams { m: 8, ef_construction: 40, ..Default::default() },
+        );
+        let serve = ServeIndex::new(Box::new(idx), 48).as_replica();
+        for req in [
+            Request::Insert { id: 1, vector: vec![0.0; 8] },
+            Request::Delete { id: 2, key: 0 },
+            Request::Compact { id: 3 },
+            Request::Save { id: 4 },
+            Request::SetThreshold { id: 5, frac: 0.5 },
+        ] {
+            let err = serve.mutate(&req).unwrap_err();
+            assert!(err.contains("read-only"), "{err}");
+        }
+        assert!(serve.fingerprint(6).is_ok(), "introspection still serves");
+        assert!(serve.repl_status_json(7).contains("replica"));
+        let mut ctx = SearchContext::new();
+        assert_eq!(serve.search(&serve.row(0), 1, &mut ctx)[0].1, 0);
     }
 
     /// SAVE without a WAL is a structured error, not a crash.

@@ -2,6 +2,10 @@
 //! proptest). `forall` runs a closure over `n` seeded random cases and
 //! reports the first failing seed; failures are reproducible by
 //! construction because all generators take the seed explicitly.
+//!
+//! [`proxy`] adds a fault-injecting TCP proxy for replication tests.
+
+pub mod proxy;
 
 use crate::core::rng::Pcg32;
 

@@ -1,0 +1,286 @@
+//! Fault-injecting TCP proxy for the replication stream.
+//!
+//! Sits between a replica and its primary. The replica→primary direction
+//! (Hello + Acks) is forwarded verbatim; the primary→replica direction is
+//! parsed at frame granularity (the 9-byte `crc|len|type` header from
+//! [`crate::repl::frame`]) and each frame runs through a seeded fault
+//! plan:
+//!
+//! * **Drop** — the frame vanishes; later frames keep flowing, so the
+//!   replica sees a sequence gap it must detect itself.
+//! * **Duplicate** — the frame is written twice; the replica must reject
+//!   the replay.
+//! * **Delay** — the frame is held briefly, bunching deliveries.
+//! * **Truncate** — a prefix of the frame is written and the connection
+//!   is cut: a torn frame, exactly what a mid-write crash produces.
+//!
+//! The accept loop keeps serving, so a replica that drops a poisoned
+//! connection reconnects *through the proxy* and keeps getting faults
+//! until the plan's budget is spent. Faults are deterministic in the
+//! seed — a failing schedule replays exactly.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::core::rng::Pcg32;
+use crate::repl::frame::HEADER_SIZE;
+
+/// What the plan decided for one downstream frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    Forward,
+    Drop,
+    Duplicate,
+    Delay,
+    /// Write only a prefix of the frame, then cut the connection.
+    Truncate,
+}
+
+/// Seeded per-frame fault decisions with a bounded budget: after
+/// `max_faults` injections every frame forwards cleanly, so the system
+/// under test always gets a fault-free tail to converge on.
+pub struct FaultPlan {
+    rng: Pcg32,
+    /// Chance (out of 100) that any one frame draws a fault.
+    pub fault_pct: u32,
+    pub max_faults: u64,
+    injected: u64,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64, fault_pct: u32, max_faults: u64) -> FaultPlan {
+        FaultPlan { rng: Pcg32::new(seed), fault_pct, max_faults, injected: 0 }
+    }
+
+    fn decide(&mut self) -> Fault {
+        if self.injected >= self.max_faults
+            || self.rng.gen_range(100) >= self.fault_pct as usize
+        {
+            return Fault::Forward;
+        }
+        self.injected += 1;
+        match self.rng.gen_range(4) {
+            0 => Fault::Drop,
+            1 => Fault::Duplicate,
+            2 => Fault::Delay,
+            _ => Fault::Truncate,
+        }
+    }
+}
+
+/// A running fault proxy. One upstream (the primary's replication
+/// listener), one listening socket replicas point at.
+pub struct FaultProxy {
+    pub local_addr: SocketAddr,
+    injected: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FaultProxy {
+    /// Listen on an ephemeral port and relay every accepted connection to
+    /// `upstream`, faulting primary→replica frames per the plan. The plan
+    /// is shared across reconnects (one budget for the proxy's lifetime).
+    pub fn start(upstream: SocketAddr, plan: FaultPlan) -> std::io::Result<FaultProxy> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let injected = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread = {
+            let injected = Arc::clone(&injected);
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new().name("fault-proxy".into()).spawn(move || {
+                // The plan lives on the accept thread; connections are
+                // served one at a time (replication uses one connection,
+                // and serialized service keeps fault order deterministic).
+                let mut plan = plan;
+                loop {
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((client, _)) => {
+                            relay(client, upstream, &mut plan, &injected, &stop);
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?
+        };
+        Ok(FaultProxy { local_addr, injected, stop: Arc::clone(&stop), thread: Some(thread) })
+    }
+
+    /// Faults injected so far (proves the plan actually fired).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Serve one proxied connection until either side closes or a Truncate
+/// fault cuts it.
+fn relay(
+    client: TcpStream,
+    upstream: SocketAddr,
+    plan: &mut FaultPlan,
+    injected: &AtomicU64,
+    stop: &AtomicBool,
+) {
+    let Ok(server) = TcpStream::connect_timeout(&upstream, Duration::from_millis(500)) else {
+        return;
+    };
+    client.set_nodelay(true).ok();
+    server.set_nodelay(true).ok();
+
+    // Upstream direction (replica → primary): verbatim byte pump.
+    let up = {
+        let (Ok(mut from), Ok(mut to)) = (client.try_clone(), server.try_clone()) else {
+            return;
+        };
+        std::thread::spawn(move || {
+            let mut buf = [0u8; 4096];
+            loop {
+                match from.read(&mut buf) {
+                    Ok(0) | Err(_) => break,
+                    Ok(n) => {
+                        if to.write_all(&buf[..n]).is_err() {
+                            break;
+                        }
+                    }
+                }
+            }
+            to.shutdown(std::net::Shutdown::Write).ok();
+        })
+    };
+
+    // Downstream direction (primary → replica): frame-by-frame faults.
+    let mut from = server;
+    let mut to = client;
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let Some(frame) = read_raw_frame(&mut from) else { break };
+        match plan.decide() {
+            Fault::Forward => {
+                if to.write_all(&frame).is_err() {
+                    break;
+                }
+            }
+            Fault::Drop => {
+                injected.fetch_add(1, Ordering::Relaxed);
+            }
+            Fault::Duplicate => {
+                injected.fetch_add(1, Ordering::Relaxed);
+                if to.write_all(&frame).is_err() || to.write_all(&frame).is_err() {
+                    break;
+                }
+            }
+            Fault::Delay => {
+                injected.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(Duration::from_millis(20));
+                if to.write_all(&frame).is_err() {
+                    break;
+                }
+            }
+            Fault::Truncate => {
+                injected.fetch_add(1, Ordering::Relaxed);
+                let cut = (frame.len() / 2).max(1);
+                let _ = to.write_all(&frame[..cut]);
+                break;
+            }
+        }
+    }
+    // Cut both sides so the replica reconnects promptly.
+    to.shutdown(std::net::Shutdown::Both).ok();
+    from.shutdown(std::net::Shutdown::Both).ok();
+    let _ = up.join();
+}
+
+/// Read one whole frame (header + payload) as raw bytes, without
+/// validating the CRC — the proxy relays damage, it does not repair it.
+fn read_raw_frame(r: &mut TcpStream) -> Option<Vec<u8>> {
+    let mut header = [0u8; HEADER_SIZE];
+    let mut got = 0;
+    while got < HEADER_SIZE {
+        match r.read(&mut header[got..]) {
+            Ok(0) | Err(_) => return None,
+            Ok(n) => got += n,
+        }
+    }
+    let len = u32::from_le_bytes(header[4..8].try_into().unwrap()) as usize;
+    let mut frame = header.to_vec();
+    frame.resize(HEADER_SIZE + len, 0);
+    let mut got = 0;
+    while got < len {
+        match r.read(&mut frame[HEADER_SIZE + got..]) {
+            Ok(0) | Err(_) => return None,
+            Ok(n) => got += n,
+        }
+    }
+    Some(frame)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_is_deterministic_and_budgeted() {
+        let decisions = |seed: u64| -> Vec<Fault> {
+            let mut p = FaultPlan::new(seed, 50, 5);
+            (0..100).map(|_| p.decide()).collect()
+        };
+        assert_eq!(decisions(7), decisions(7), "same seed, same schedule");
+        let d = decisions(7);
+        let faults = d.iter().filter(|f| **f != Fault::Forward).count();
+        assert_eq!(faults, 5, "budget caps injections");
+        assert!(
+            d.iter().rev().take(50).all(|f| *f == Fault::Forward),
+            "after the budget, everything forwards"
+        );
+    }
+
+    /// The proxy relays a framed stream faithfully when the plan injects
+    /// nothing (0% fault chance).
+    #[test]
+    fn clean_plan_relays_frames_verbatim() {
+        use crate::repl::frame::Frame;
+        let upstream = TcpListener::bind("127.0.0.1:0").unwrap();
+        let up_addr = upstream.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = upstream.accept().unwrap();
+            // Read the client's hello bytes (upstream pump), then answer
+            // with two frames.
+            let mut b = [0u8; 1];
+            s.read_exact(&mut b).unwrap();
+            Frame::Ack { seq: 1 }.write_to(&mut s).unwrap();
+            Frame::CaughtUp { seq: 1 }.write_to(&mut s).unwrap();
+        });
+        let proxy = FaultProxy::start(up_addr, FaultPlan::new(1, 0, 0)).unwrap();
+        let mut c = TcpStream::connect(proxy.local_addr).unwrap();
+        c.write_all(&[0x55]).unwrap();
+        let mut reader = std::io::BufReader::new(c.try_clone().unwrap());
+        assert_eq!(Frame::read_from(&mut reader).unwrap(), Some(Frame::Ack { seq: 1 }));
+        assert_eq!(
+            Frame::read_from(&mut reader).unwrap(),
+            Some(Frame::CaughtUp { seq: 1 })
+        );
+        assert_eq!(proxy.injected(), 0);
+        server.join().unwrap();
+        proxy.stop();
+    }
+}

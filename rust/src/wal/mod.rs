@@ -103,6 +103,26 @@ fn invalid(msg: String) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg)
 }
 
+/// What [`Wal::catchup_since`] hands a (re)connecting replica: an
+/// optional full snapshot (`(base_seq, bundle bytes)`) and the log ops
+/// past the replica's position, in order.
+pub struct Catchup {
+    pub snapshot: Option<(u64, Vec<u8>)>,
+    pub ops: Vec<(u64, WalOp)>,
+}
+
+impl Catchup {
+    /// Last sequence this catch-up brings the replica to.
+    pub fn last_seq(&self, from: u64) -> u64 {
+        self.ops
+            .last()
+            .map(|(s, _)| *s)
+            .or(self.snapshot.as_ref().map(|(s, _)| *s))
+            .unwrap_or(from)
+            .max(from)
+    }
+}
+
 /// The durable mutation plane for one serving index: owns the WAL
 /// directory, the current log writer, and the checkpoint path. Thread
 /// safety mirrors the router: appends happen under the index write lock
@@ -126,6 +146,19 @@ impl Wal {
     /// that state wants [`Wal::recover`], and clobbering it would destroy
     /// the only durable copy.
     pub fn bootstrap(dir: &Path, index: &dyn AnnIndex, policy: FsyncPolicy) -> io::Result<Wal> {
+        Wal::bootstrap_at(dir, index, policy, 0)
+    }
+
+    /// [`Wal::bootstrap`] with an explicit starting sequence: the snapshot
+    /// claims `seq` ops are already baked in and the log carries
+    /// `seq + 1, ...`. A replica installing a primary snapshot uses this
+    /// so its local generation numbering mirrors the primary's.
+    pub fn bootstrap_at(
+        dir: &Path,
+        index: &dyn AnnIndex,
+        policy: FsyncPolicy,
+        seq: u64,
+    ) -> io::Result<Wal> {
         std::fs::create_dir_all(dir)?;
         if Wal::has_snapshot(dir) {
             return Err(invalid(format!(
@@ -133,14 +166,58 @@ impl Wal {
                 dir.display()
             )));
         }
-        save_index(&snapshot_path(dir, 0), index)?;
-        let writer = WalWriter::create(&log_path(dir, 0), policy, 0)?;
+        save_index(&snapshot_path(dir, seq), index)?;
+        let writer = WalWriter::create(&log_path(dir, seq), policy, seq)?;
         sync_dir(dir);
         Ok(Wal {
             dir: dir.to_path_buf(),
             policy,
             writer: Mutex::new(Arc::new(writer)),
-            snapshot_seq: AtomicU64::new(0),
+            snapshot_seq: AtomicU64::new(seq),
+        })
+    }
+
+    /// Replace whatever generation `dir` holds with a received snapshot:
+    /// the `bundle` bytes are written verbatim as `snapshot-{seq}.idx`
+    /// (byte-identity with the sender's snapshot is the point), a fresh
+    /// log is created at `seq`, and any older generation is deleted
+    /// afterwards. Crash-safe in the same way checkpointing is: the new
+    /// generation is durable before the old one goes, and recovery picks
+    /// the highest seq. The caller validates the bundle (it loads the
+    /// index from the same bytes before calling this).
+    pub fn reinstall(dir: &Path, seq: u64, bundle: &[u8], policy: FsyncPolicy) -> io::Result<Wal> {
+        std::fs::create_dir_all(dir)?;
+        let snap = snapshot_path(dir, seq);
+        let mut tmp = snap.as_os_str().to_os_string();
+        tmp.push(".tmp");
+        let tmp = PathBuf::from(tmp);
+        std::fs::write(&tmp, bundle)?;
+        std::fs::File::open(&tmp)?.sync_all()?;
+        std::fs::rename(&tmp, &snap)?;
+        let lp = log_path(dir, seq);
+        std::fs::remove_file(&lp).ok(); // stale same-seq log from a torn install
+        let writer = WalWriter::create(&lp, policy, seq)?;
+        sync_dir(dir);
+        // New generation durable: clear out every other one.
+        for entry in std::fs::read_dir(dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let other = name
+                .strip_prefix("snapshot-")
+                .and_then(|s| s.strip_suffix(".idx"))
+                .or_else(|| name.strip_prefix("wal-").and_then(|s| s.strip_suffix(".log")))
+                .and_then(|s| s.parse::<u64>().ok());
+            if matches!(other, Some(o) if o != seq) {
+                std::fs::remove_file(entry.path()).ok();
+            }
+        }
+        sync_dir(dir);
+        Ok(Wal {
+            dir: dir.to_path_buf(),
+            policy,
+            writer: Mutex::new(Arc::new(writer)),
+            snapshot_seq: AtomicU64::new(seq),
         })
     }
 
@@ -203,6 +280,10 @@ impl Wal {
                     WalOp::Insert { vector } => m.insert(vector, &mut ctx).map(|_| ()),
                     WalOp::Delete { key } => m.remove(*key).map(|_| ()),
                     WalOp::Compact => m.compact(&mut ctx).map(|_| ()),
+                    WalOp::SetThreshold { frac } => {
+                        m.set_compact_threshold(*frac);
+                        Ok(())
+                    }
                 };
                 r.map_err(|e| invalid(format!("replay failed at seq {seq}: {e:?}")))?;
             }
@@ -261,6 +342,48 @@ impl Wal {
     /// Fsync everything appended so far, regardless of policy.
     pub fn sync(&self) -> io::Result<()> {
         self.writer().sync()
+    }
+
+    /// Everything a replica at `last_seq` needs to catch up to the
+    /// current generation: a full snapshot when it is behind the
+    /// generation's base (or has no state at all), plus the log ops past
+    /// its position. Reads race benignly with both appenders and
+    /// checkpoints: a torn in-flight record makes [`scan_log`] stop at
+    /// the durable prefix (the racing op is published live once its
+    /// append completes), and a rotation mid-read is detected by
+    /// re-checking the generation seq and retrying.
+    pub fn catchup_since(&self, last_seq: u64, need_snapshot: bool) -> io::Result<Catchup> {
+        for _ in 0..16 {
+            let base = self.snapshot_seq();
+            let snapshot = if need_snapshot || last_seq < base {
+                match std::fs::read(snapshot_path(&self.dir, base)) {
+                    Ok(bytes) => Some((base, bytes)),
+                    // Rotated away between the seq read and the file
+                    // read: retry against the new generation.
+                    Err(e) if e.kind() == io::ErrorKind::NotFound => continue,
+                    Err(e) => return Err(e),
+                }
+            } else {
+                None
+            };
+            let floor = snapshot.as_ref().map_or(last_seq, |(s, _)| (*s).max(last_seq));
+            let lp = log_path(&self.dir, base);
+            let scan = match std::fs::read(&lp) {
+                Ok(bytes) => scan_log(&bytes),
+                Err(e) if e.kind() == io::ErrorKind::NotFound => continue,
+                Err(e) => return Err(e),
+            };
+            if self.snapshot_seq() != base {
+                continue; // rotated under us; the tail we read is stale
+            }
+            let ops: Vec<(u64, WalOp)> =
+                scan.ops.into_iter().filter(|(seq, _)| *seq > floor).collect();
+            return Ok(Catchup { snapshot, ops });
+        }
+        Err(invalid(format!(
+            "catch-up raced checkpoint rotation 16 times in {}",
+            self.dir.display()
+        )))
     }
 
     /// Checkpoint: persist `index` as a fresh snapshot, rotate to a new
@@ -358,6 +481,7 @@ mod tests {
             WalOp::Compact => {
                 m.compact(&mut ctx).unwrap();
             }
+            WalOp::SetThreshold { frac } => m.set_compact_threshold(*frac),
         }
         let (w, seq) = wal.append(op).unwrap();
         w.commit(seq).unwrap();
@@ -505,6 +629,98 @@ mod tests {
         assert_eq!(std::fs::metadata(&lp).unwrap().len(), scan.durable_len);
         let (_, scan) = Wal::dump(&dir).unwrap();
         assert!(scan.is_clean(), "repaired log scans clean");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The PR 6 caveat, closed: a non-default compact threshold is an op
+    /// in the log, so replay gates compaction exactly as the live run
+    /// did. Threshold 1/6 makes one tombstone in six rows cross the
+    /// gate — the default 0.3 would decline — so without the logged op
+    /// the recovered bundle would differ.
+    #[test]
+    fn logged_threshold_reaches_replay() {
+        let dir = fresh_dir("thresh");
+        let mut index: Box<dyn AnnIndex> = Box::new(BruteForce::new(Arc::new(base_matrix())));
+        let wal = Wal::bootstrap(&dir, index.as_ref(), FsyncPolicy::Never).unwrap();
+        for op in [
+            WalOp::SetThreshold { frac: 1.0 / 6.0 },
+            WalOp::Delete { key: 4 },
+            WalOp::Compact,
+        ] {
+            apply_and_log(&mut index, &wal, &op);
+        }
+        assert_eq!(index.len(), 5, "compaction must have rebuilt over the live set");
+        drop(wal);
+        let (recovered, _w, report) = Wal::recover(&dir, FsyncPolicy::Never).unwrap();
+        assert_eq!(report.replayed, 3);
+        assert_eq!(recovered.len(), 5, "replayed compact honors the logged threshold");
+        assert_eq!(
+            bundle_bytes(recovered.as_ref(), "trec"),
+            bundle_bytes(index.as_ref(), "torig"),
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reinstall_replaces_the_generation_with_received_bytes() {
+        let dir = fresh_dir("reinst");
+        let mut index: Box<dyn AnnIndex> = Box::new(BruteForce::new(Arc::new(base_matrix())));
+        let wal = Wal::bootstrap(&dir, index.as_ref(), FsyncPolicy::Never).unwrap();
+        for op in &ops()[..2] {
+            apply_and_log(&mut index, &wal, op);
+        }
+        drop(wal);
+        // A "primary snapshot" at seq 10 arrives as bundle bytes.
+        let bundle = bundle_bytes(index.as_ref(), "src");
+        let wal2 = Wal::reinstall(&dir, 10, &bundle, FsyncPolicy::Never).unwrap();
+        assert_eq!(wal2.snapshot_seq(), 10);
+        assert_eq!(std::fs::read(snapshot_path(&dir, 10)).unwrap(), bundle, "verbatim bytes");
+        assert!(!snapshot_path(&dir, 0).exists(), "old generation deleted");
+        assert!(!log_path(&dir, 0).exists());
+        let (_, seq) = wal2.append(&WalOp::Compact).unwrap();
+        assert_eq!(seq, 11, "appends continue the installed numbering");
+        drop(wal2);
+        let (rec, _, report) = Wal::recover(&dir, FsyncPolicy::Never).unwrap();
+        assert_eq!(report.snapshot_seq, 10);
+        assert_eq!(bundle_bytes(rec.as_ref(), "rrec"), bundle_bytes(index.as_ref(), "rorig"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn catchup_since_returns_snapshot_and_tail_as_needed() {
+        let dir = fresh_dir("catchup");
+        let mut index: Box<dyn AnnIndex> = Box::new(BruteForce::new(Arc::new(base_matrix())));
+        let wal = Wal::bootstrap(&dir, index.as_ref(), FsyncPolicy::Never).unwrap();
+        let all = ops();
+        for op in &all[..3] {
+            apply_and_log(&mut index, &wal, op);
+        }
+        // Caught-up replica: nothing to send.
+        let c = wal.catchup_since(3, false).unwrap();
+        assert!(c.snapshot.is_none());
+        assert!(c.ops.is_empty());
+        assert_eq!(c.last_seq(3), 3);
+        // Replica at 1: just the tail.
+        let c = wal.catchup_since(1, false).unwrap();
+        assert!(c.snapshot.is_none());
+        assert_eq!(c.ops.iter().map(|(s, _)| *s).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(c.last_seq(1), 3);
+        // Fresh replica: full snapshot + whole log.
+        let c = wal.catchup_since(0, true).unwrap();
+        let (base, bytes) = c.snapshot.expect("fresh replica gets the snapshot");
+        assert_eq!(base, 0);
+        assert_eq!(bytes, std::fs::read(snapshot_path(&dir, 0)).unwrap());
+        assert_eq!(c.ops.len(), 3);
+        // After a rotation, a replica behind the new base needs the
+        // snapshot even without asking for it.
+        let seq = wal.checkpoint(index.as_ref()).unwrap();
+        assert_eq!(seq, 3);
+        apply_and_log(&mut index, &wal, &all[3]);
+        let c = wal.catchup_since(1, false).unwrap();
+        let (base, _) = c.snapshot.expect("behind the generation base");
+        assert_eq!(base, 3);
+        assert_eq!(c.ops.iter().map(|(s, _)| *s).collect::<Vec<_>>(), vec![4]);
+        assert_eq!(c.last_seq(1), 4);
         std::fs::remove_dir_all(&dir).ok();
     }
 

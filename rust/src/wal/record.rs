@@ -132,17 +132,23 @@ pub fn encode_record(out: &mut Vec<u8>, mut block_off: usize, payload: &[u8]) ->
 /// One durable mutation: exactly the verbs the router serves. `Compact`
 /// is logged even when the threshold gate declines — the gate is
 /// deterministic, so replay declines identically and the recovered
-/// bytes stay identical to the uninterrupted run.
+/// bytes stay identical to the uninterrupted run. `SetThreshold` logs
+/// the compaction threshold itself, so replay (and replica apply) gates
+/// later compacts at the log-time threshold instead of assuming the
+/// default — without it, a recovered index could compact where the live
+/// run declined (or vice versa) and the bundles would diverge.
 #[derive(Clone, Debug, PartialEq)]
 pub enum WalOp {
     Insert { vector: Vec<f32> },
     Delete { key: u32 },
     Compact,
+    SetThreshold { frac: f64 },
 }
 
 const OP_INSERT: u8 = 1;
 const OP_DELETE: u8 = 2;
 const OP_COMPACT: u8 = 3;
+const OP_SETTHRESHOLD: u8 = 4;
 
 impl WalOp {
     /// Short verb name (`wal dump`, reports).
@@ -151,6 +157,7 @@ impl WalOp {
             WalOp::Insert { .. } => "insert",
             WalOp::Delete { .. } => "delete",
             WalOp::Compact => "compact",
+            WalOp::SetThreshold { .. } => "set_threshold",
         }
     }
 
@@ -171,6 +178,10 @@ impl WalOp {
                 out.extend_from_slice(&key.to_le_bytes());
             }
             WalOp::Compact => out.push(OP_COMPACT),
+            WalOp::SetThreshold { frac } => {
+                out.push(OP_SETTHRESHOLD);
+                out.extend_from_slice(&frac.to_le_bytes());
+            }
         }
         out
     }
@@ -217,6 +228,16 @@ impl WalOp {
                 }
                 WalOp::Compact
             }
+            OP_SETTHRESHOLD => {
+                if body.len() != 8 {
+                    return Err("set_threshold record wants exactly an f64".into());
+                }
+                let frac = f64::from_le_bytes(body.try_into().unwrap());
+                if !frac.is_finite() || !(0.0..=1.0).contains(&frac) || frac == 0.0 {
+                    return Err(format!("set_threshold fraction {frac} outside (0, 1]"));
+                }
+                WalOp::SetThreshold { frac }
+            }
             other => return Err(format!("unknown op byte {other}")),
         };
         Ok((seq, op))
@@ -240,6 +261,8 @@ mod tests {
             (1u64, WalOp::Insert { vector: vec![1.5, -2.0, 0.0] }),
             (2, WalOp::Delete { key: 77 }),
             (3, WalOp::Compact),
+            (4, WalOp::SetThreshold { frac: 0.25 }),
+            (5, WalOp::SetThreshold { frac: 1.0 }),
             (u64::MAX, WalOp::Insert { vector: vec![] }),
         ] {
             let bytes = op.encode(seq);
@@ -259,6 +282,20 @@ mod tests {
         let mut bytes = WalOp::Compact.encode(4);
         bytes[8] = 99; // unknown verb
         assert!(WalOp::decode(&bytes).is_err());
+        let mut bytes = WalOp::SetThreshold { frac: 0.5 }.encode(4);
+        bytes.pop(); // short f64 body
+        assert!(WalOp::decode(&bytes).is_err());
+        // A bit pattern outside (0, 1] passed CRC but is still rejected.
+        let bytes = WalOp::SetThreshold { frac: 0.5 }.encode(4);
+        let mut neg = bytes.clone();
+        neg[9..17].copy_from_slice(&(-0.5f64).to_le_bytes());
+        assert!(WalOp::decode(&neg).is_err());
+        let mut zero = bytes.clone();
+        zero[9..17].copy_from_slice(&0.0f64.to_le_bytes());
+        assert!(WalOp::decode(&zero).is_err());
+        let mut nan = bytes;
+        nan[9..17].copy_from_slice(&f64::NAN.to_le_bytes());
+        assert!(WalOp::decode(&nan).is_err());
     }
 
     #[test]

@@ -1,0 +1,607 @@
+//! Replication properties of the primary/backup plane, end to end:
+//!
+//! * **Wire golden fixture** — the frame encoding is pinned byte for byte
+//!   by `fixtures/repl_frame_v1.bin`; any drift in the header layout, the
+//!   CRC, or the shared `WalOp` record serialization fails here first.
+//! * **Convergence byte-identity** — for every mutable family, a replica
+//!   that restarts mid-stream (forcing both catch-up modes: log tail and
+//!   snapshot reinstall across a primary-side rotation) converges to
+//!   state byte-identical to an uninterrupted in-process control run,
+//!   both in memory and in its own durable WAL.
+//! * **Ack levels** — a mutation acked at level `all` is already applied
+//!   and durable on the replica when the client ack returns; with no
+//!   replica connected the ack times out with a structured error and the
+//!   op stays applied + logged locally.
+//! * **Fault injection** — a seeded fault proxy drops, duplicates,
+//!   delays, and truncates stream frames; the replica never applies a
+//!   torn or replayed record (CRC + seq discipline) and converges
+//!   byte-identically once the fault budget is spent.
+//! * **Kill-the-primary smoke** — a real primary process serving with
+//!   `--repl-listen --ack-level all` is SIGKILLed after acking inserts;
+//!   every acked vector is readable from the surviving replica process.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use finger_ann::core::distance::Metric;
+use finger_ann::core::matrix::Matrix;
+use finger_ann::core::rng::Pcg32;
+use finger_ann::data::persist::{bundle_to_vec, save_index};
+use finger_ann::data::synth::tiny;
+use finger_ann::finger::construct::FingerParams;
+use finger_ann::graph::hnsw::HnswParams;
+use finger_ann::index::impls::{BruteForce, FingerHnswIndex, HnswIndex};
+use finger_ann::index::sharded::{ShardSpec, ShardedIndex};
+use finger_ann::index::{AnnIndex, MutableAnnIndex, SearchContext, SearchParams};
+use finger_ann::repl::frame::Frame;
+use finger_ann::repl::hub::ReplHub;
+use finger_ann::repl::replica::{Replica, ReplicaOpts};
+use finger_ann::repl::{fnv1a64, AckLevel};
+use finger_ann::router::protocol::FingerprintInfo;
+use finger_ann::router::{Client, MutOutcome, Request, ServeIndex};
+use finger_ann::testutil::proxy::{FaultPlan, FaultProxy};
+use finger_ann::wal::{FsyncPolicy, Wal, WalOp};
+
+const N0: usize = 24;
+const DIM: usize = 6;
+
+/// Same sizing rationale as `wal_props.rs`: base-layer capacity
+/// `2m >= N0 + ops - 1` keeps the graph complete so replay equality is
+/// structural, not a recall bet.
+fn graph_params() -> HnswParams {
+    HnswParams { m: 32, ef_construction: 128, ..Default::default() }
+}
+
+const FAMILIES: &[&str] = &[
+    "bruteforce",
+    "hnsw",
+    "hnsw-finger",
+    "sharded-bruteforce",
+    "sharded-hnsw",
+];
+
+fn build_family(name: &str, data: &Arc<Matrix>) -> Box<dyn AnnIndex> {
+    let spec = ShardSpec { n_shards: 3, ..Default::default() };
+    match name {
+        "bruteforce" => Box::new(BruteForce::new(Arc::clone(data))),
+        "hnsw" => Box::new(HnswIndex::build(Arc::clone(data), graph_params())),
+        "hnsw-finger" => Box::new(FingerHnswIndex::build(
+            Arc::clone(data),
+            graph_params(),
+            FingerParams { rank: 4, ..Default::default() },
+        )),
+        "sharded-bruteforce" => Box::new(ShardedIndex::build(
+            Arc::clone(data),
+            &spec,
+            |sub| -> Box<dyn AnnIndex> { Box::new(BruteForce::new(sub)) },
+        )),
+        "sharded-hnsw" => Box::new(ShardedIndex::build(
+            Arc::clone(data),
+            &spec,
+            |sub| -> Box<dyn AnnIndex> { Box::new(HnswIndex::build(sub, graph_params())) },
+        )),
+        other => panic!("unknown family {other}"),
+    }
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("finger_replprops_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// A seeded schedule valid to apply in order from `n0` initial rows
+/// (deletes target live ids, inserts mirror the id watermark), covering
+/// all four replicated verbs. A `SetThreshold` is spliced in early so the
+/// primary-side checkpoint re-log path always fires.
+fn gen_ops(seed: u64, n0: usize, count: usize) -> Vec<WalOp> {
+    let mut rng = Pcg32::new(seed);
+    let mut live: Vec<u32> = (0..n0 as u32).collect();
+    let mut next = n0 as u32;
+    let mut ops = Vec::with_capacity(count + 1);
+    for _ in 0..count {
+        match rng.gen_range(10) {
+            0..=4 => {
+                let vector: Vec<f32> = (0..DIM).map(|_| rng.next_gaussian()).collect();
+                ops.push(WalOp::Insert { vector });
+                live.push(next);
+                next += 1;
+            }
+            5..=6 if !live.is_empty() => {
+                let at = rng.gen_range(live.len());
+                ops.push(WalOp::Delete { key: live.swap_remove(at) });
+            }
+            7 => {
+                let frac = (rng.gen_range(9) + 1) as f64 / 10.0;
+                ops.push(WalOp::SetThreshold { frac });
+            }
+            _ => ops.push(WalOp::Compact),
+        }
+    }
+    // Splicing a threshold change shifts no ids, so the schedule stays
+    // valid; 0.5 != the 0.3 default, so `save()` must re-log it.
+    ops.insert(count.min(5), WalOp::SetThreshold { frac: 0.5 });
+    ops
+}
+
+/// Apply an op directly (the uninterrupted control run).
+fn apply_plain(m: &mut dyn MutableAnnIndex, ctx: &mut SearchContext, op: &WalOp) {
+    match op {
+        WalOp::Insert { vector } => {
+            m.insert(vector, ctx).expect("insert");
+        }
+        WalOp::Delete { key } => m.remove(*key).expect("remove live id"),
+        WalOp::Compact => {
+            m.compact(ctx).expect("compact");
+        }
+        WalOp::SetThreshold { frac } => m.set_compact_threshold(*frac),
+    }
+}
+
+/// The protocol request that produces `op` on a serving primary.
+fn op_request(id: u64, op: &WalOp) -> Request {
+    match op {
+        WalOp::Insert { vector } => Request::Insert { id, vector: vector.clone() },
+        WalOp::Delete { key } => Request::Delete { id, key: *key },
+        WalOp::Compact => Request::Compact { id },
+        WalOp::SetThreshold { frac } => Request::SetThreshold { id, frac: *frac },
+    }
+}
+
+/// An in-process primary: index + WAL + replication hub, no TCP query
+/// listener (tests drive `ServeIndex::mutate` directly).
+fn start_primary(
+    family: &str,
+    data: &Arc<Matrix>,
+    dir: &std::path::Path,
+    level: AckLevel,
+    expect: usize,
+    ack_timeout: Duration,
+) -> (Arc<ServeIndex>, Arc<ReplHub>) {
+    let index = build_family(family, data);
+    let wal =
+        Arc::new(Wal::bootstrap(dir, index.as_ref(), FsyncPolicy::EveryN(3)).expect("bootstrap"));
+    let hub = ReplHub::start("127.0.0.1:0", Arc::clone(&wal), level, expect, ack_timeout)
+        .expect("bind repl hub");
+    let primary = Arc::new(
+        ServeIndex::with_params(index, SearchParams::new(10))
+            .with_wal(wal)
+            .with_repl(Arc::clone(&hub)),
+    );
+    (primary, hub)
+}
+
+/// A fresh replica-side `ServeIndex` (placeholder index until the stream
+/// installs real state).
+fn replica_serve() -> Arc<ServeIndex> {
+    let placeholder: Box<dyn AnnIndex> = Box::new(BruteForce::new(Arc::new(Matrix::zeros(0, 1))));
+    Arc::new(ServeIndex::with_params(placeholder, SearchParams::new(10)).as_replica())
+}
+
+fn replica_opts(dir: &std::path::Path) -> ReplicaOpts {
+    ReplicaOpts {
+        wal_dir: Some(dir.to_path_buf()),
+        policy: FsyncPolicy::Always,
+        reconnect: Duration::from_millis(20),
+    }
+}
+
+/// The replication wire format is pinned byte for byte: re-encoding the
+/// canonical frame set must reproduce `fixtures/repl_frame_v1.bin`
+/// exactly, and the fixture must parse back to the same frames.
+#[test]
+fn golden_fixture_pins_the_wire_encoding() {
+    let frames = vec![
+        Frame::Hello { last_seq: 7, need_snapshot: true },
+        Frame::Hello { last_seq: 0, need_snapshot: false },
+        Frame::Snapshot { snapshot_seq: 3, bundle: vec![0xDE, 0xAD, 0xBE, 0xEF] },
+        Frame::Snapshot { snapshot_seq: 0, bundle: Vec::new() },
+        Frame::op(9, &WalOp::Insert { vector: vec![1.5, -2.0] }),
+        Frame::op(10, &WalOp::SetThreshold { frac: 0.25 }),
+        Frame::op(11, &WalOp::Delete { key: 42 }),
+        Frame::op(12, &WalOp::Compact),
+        Frame::Ack { seq: 12 },
+        Frame::CaughtUp { seq: 12 },
+    ];
+    let mut wire = Vec::new();
+    for f in &frames {
+        wire.extend_from_slice(&f.encode());
+    }
+    let golden: &[u8] = include_bytes!("fixtures/repl_frame_v1.bin");
+    assert_eq!(
+        wire, golden,
+        "replication wire encoding drifted from the v1 golden fixture"
+    );
+    let mut r = std::io::Cursor::new(golden);
+    for want in &frames {
+        let got = Frame::read_from(&mut r).expect("fixture frame").expect("not EOF");
+        assert_eq!(&got, want);
+    }
+    assert_eq!(Frame::read_from(&mut r).unwrap(), None, "clean EOF after the fixture");
+}
+
+/// The acceptance property: for every mutable family, a replica that is
+/// stopped mid-stream (while the primary keeps mutating and rotates its
+/// log with a checkpoint) and restarted from its own durable state
+/// converges to bytes identical to an uninterrupted control run — in
+/// memory (fingerprint) and in its local WAL (offline recovery).
+#[test]
+fn prop_replica_converges_byte_identically_for_every_family() {
+    for (fi, family) in FAMILIES.iter().enumerate() {
+        let seed = 0x5EED ^ ((fi as u64) << 8);
+        let ds = tiny(seed, N0, DIM, Metric::L2);
+        let ops = gen_ops(seed ^ 1, N0, 30);
+        let pdir = tmp_dir(&format!("ident_p_{family}"));
+        let rdir = tmp_dir(&format!("ident_r_{family}"));
+
+        // Uninterrupted control run: same ops, no WAL, no network.
+        let mut control = build_family(family, &ds.data);
+        {
+            let mut ctx = SearchContext::new();
+            let m = control.as_mutable().expect(family);
+            for op in &ops {
+                apply_plain(m, &mut ctx, op);
+            }
+        }
+
+        let (primary, hub) =
+            start_primary(family, &ds.data, &pdir, AckLevel::None, 1, Duration::from_secs(2));
+        let mut rserve = replica_serve();
+        let mut replica =
+            Some(Replica::start(hub.local_addr(), Arc::clone(&rserve), replica_opts(&rdir))
+                .expect("replica start"));
+
+        for (i, op) in ops.iter().enumerate() {
+            if i == 10 {
+                // Replica goes away mid-stream; its durable position is
+                // whatever it had committed.
+                replica.take().unwrap().stop();
+            }
+            if i == 15 {
+                // Checkpoint + rotation on the primary: the restarted
+                // replica's position now predates the log base, forcing
+                // the snapshot-reinstall catch-up path (and the
+                // threshold re-log, since the 0.5 splice already ran).
+                let resp = primary.mutate(&Request::Save { id: 0 }).expect("save");
+                assert!(matches!(resp.outcome, MutOutcome::Saved(_)));
+            }
+            if i == 20 {
+                rserve = replica_serve();
+                replica = Some(Replica::start(
+                    hub.local_addr(),
+                    Arc::clone(&rserve),
+                    replica_opts(&rdir),
+                )
+                .expect("replica restart"));
+            }
+            primary
+                .mutate(&op_request(i as u64, op))
+                .unwrap_or_else(|e| panic!("{family}: op {i} rejected: {e}"));
+        }
+
+        let last = primary.applied_seq();
+        let rep = replica.take().unwrap();
+        assert!(
+            rep.wait_applied(last, Duration::from_secs(20)),
+            "{family}: replica stalled at seq {} (want {last})",
+            rep.applied()
+        );
+
+        let control_bytes = bundle_to_vec(control.as_ref()).expect("control bundle");
+        let pfp = primary.fingerprint(0).expect("primary fingerprint");
+        assert_eq!(
+            pfp.fingerprint,
+            fnv1a64(&control_bytes),
+            "{family}: primary state != uninterrupted control run"
+        );
+        let rfp = rserve.fingerprint(0).expect("replica fingerprint");
+        assert_eq!(rfp.fingerprint, pfp.fingerprint, "{family}: replica diverged from primary");
+        assert_eq!(rfp.seq, last, "{family}: replica applied seq");
+
+        rep.stop();
+        hub.shutdown();
+
+        // The replica's own durable state recovers offline to the same
+        // bytes — acked-and-applied implies durable-and-identical.
+        let (rrec, _rwal, rreport) =
+            Wal::recover(&rdir, FsyncPolicy::Always).expect("replica offline recovery");
+        assert!(rreport.corruption.is_none(), "{family}: {:?}", rreport.corruption);
+        assert_eq!(rreport.last_seq, last, "{family}: replica durable seq");
+        assert_eq!(
+            bundle_to_vec(rrec.as_ref()).expect("recovered bundle"),
+            control_bytes,
+            "{family}: replica durable bytes != control run"
+        );
+
+        std::fs::remove_dir_all(&pdir).ok();
+        std::fs::remove_dir_all(&rdir).ok();
+    }
+}
+
+/// Level `all`: when the client ack returns, the op is already applied
+/// and durable on every expected replica — no wait, no grace period.
+#[test]
+fn level_all_ack_means_the_replica_already_has_the_op() {
+    let ds = tiny(1201, N0, DIM, Metric::L2);
+    let pdir = tmp_dir("all_p");
+    let rdir = tmp_dir("all_r");
+    let (primary, hub) =
+        start_primary("bruteforce", &ds.data, &pdir, AckLevel::All, 1, Duration::from_secs(10));
+    let rserve = replica_serve();
+    let replica = Replica::start(hub.local_addr(), Arc::clone(&rserve), replica_opts(&rdir))
+        .expect("replica start");
+    assert!(replica.wait_ready(Duration::from_secs(10)), "replica never caught up");
+
+    let mut rng = Pcg32::new(7);
+    for i in 0..5u64 {
+        let vector: Vec<f32> = (0..DIM).map(|_| rng.next_gaussian()).collect();
+        primary.mutate(&Request::Insert { id: i, vector }).expect("acked insert");
+        // The ack gate ran: the replica has applied and locally committed
+        // this exact seq before mutate() returned.
+        assert!(
+            replica.applied() >= i + 1,
+            "insert {i} acked at level all but replica is at {}",
+            replica.applied()
+        );
+    }
+    let pfp = primary.fingerprint(0).unwrap();
+    let rfp = rserve.fingerprint(0).unwrap();
+    assert_eq!(rfp.fingerprint, pfp.fingerprint, "synchronous divergence");
+    assert_eq!(rfp.live, (N0 + 5) as u64);
+
+    replica.stop();
+    hub.shutdown();
+    std::fs::remove_dir_all(&pdir).ok();
+    std::fs::remove_dir_all(&rdir).ok();
+}
+
+/// Level `all` with no replica connected: the ack times out with a
+/// structured error that states the op is applied and logged locally —
+/// and it is.
+#[test]
+fn ack_timeout_is_structured_and_the_op_stays_local() {
+    let ds = tiny(1301, N0, DIM, Metric::L2);
+    let pdir = tmp_dir("timeout_p");
+    let (primary, hub) = start_primary(
+        "bruteforce",
+        &ds.data,
+        &pdir,
+        AckLevel::All,
+        1,
+        Duration::from_millis(150),
+    );
+    let vector = vec![0.5f32; DIM];
+    let err = primary
+        .mutate(&Request::Insert { id: 0, vector })
+        .expect_err("no replica is connected; level all must time out");
+    assert!(err.contains("replication ack timeout"), "got: {err}");
+    assert!(err.contains("applied and logged locally"), "got: {err}");
+    // The ambiguity is one-sided: the op is durable on the primary.
+    assert_eq!(primary.applied_seq(), 1);
+    assert_eq!(primary.fingerprint(0).unwrap().live, (N0 + 1) as u64);
+
+    hub.shutdown();
+    std::fs::remove_dir_all(&pdir).ok();
+}
+
+/// Fault injection: the stream runs through a proxy that drops,
+/// duplicates, delays, and truncates frames on a seeded budget. The
+/// replica must never apply a torn or replayed record (it drops the
+/// connection instead) and must converge byte-identically once the
+/// budget is spent and the tail runs clean.
+#[test]
+fn faulted_stream_converges_byte_identically() {
+    let ds = tiny(1401, N0, DIM, Metric::L2);
+    let ops = gen_ops(1402, N0, 40);
+    let pdir = tmp_dir("fault_p");
+    let rdir = tmp_dir("fault_r");
+    let (primary, hub) =
+        start_primary("bruteforce", &ds.data, &pdir, AckLevel::None, 1, Duration::from_secs(2));
+    // Every one of the first 8 downstream frames draws a fault, then the
+    // plan is spent and the stream runs clean forever.
+    let proxy = FaultProxy::start(hub.local_addr(), FaultPlan::new(0xFA17, 100, 8))
+        .expect("proxy start");
+    let rserve = replica_serve();
+    let replica = Replica::start(proxy.local_addr, Arc::clone(&rserve), replica_opts(&rdir))
+        .expect("replica start");
+
+    for (i, op) in ops.iter().enumerate() {
+        primary
+            .mutate(&op_request(i as u64, op))
+            .unwrap_or_else(|e| panic!("op {i} rejected: {e}"));
+    }
+    let last = primary.applied_seq();
+    assert!(
+        replica.wait_applied(last, Duration::from_secs(30)),
+        "replica stalled at {} (want {last}) after {} fault(s), {} violation(s), {} reconnect(s)",
+        replica.applied(),
+        proxy.injected(),
+        replica.violations(),
+        replica.reconnects()
+    );
+    assert!(proxy.injected() > 0, "the fault plan never fired");
+
+    let pfp = primary.fingerprint(0).unwrap();
+    let rfp = rserve.fingerprint(0).unwrap();
+    assert_eq!(
+        rfp.fingerprint, pfp.fingerprint,
+        "replica diverged under faults ({} injected, {} violation(s), {} reconnect(s))",
+        proxy.injected(),
+        replica.violations(),
+        replica.reconnects()
+    );
+
+    // Shutdown order matters: stop the replica (its conn socket is shut
+    // down), then the hub (unblocks the proxy's upstream read), then the
+    // proxy's accept loop.
+    replica.stop();
+    hub.shutdown();
+    proxy.stop();
+    std::fs::remove_dir_all(&pdir).ok();
+    std::fs::remove_dir_all(&rdir).ok();
+}
+
+/// Kills the child process on every exit path so a failing assert does
+/// not leak a serving `finger` process.
+struct KillOnDrop(std::process::Child);
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        self.0.kill().ok();
+        self.0.wait().ok();
+    }
+}
+
+/// Read the child's stdout until `pick` matches a line, returning the
+/// match. Panics (with everything read so far) if the child closes
+/// stdout first.
+fn scan_stdout<T>(
+    lines: &mut std::io::Lines<std::io::BufReader<std::process::ChildStdout>>,
+    what: &str,
+    pick: impl Fn(&str) -> Option<T>,
+) -> T {
+    let mut seen = String::new();
+    for line in lines.by_ref() {
+        let line = line.expect("read child stdout");
+        seen.push_str(&line);
+        seen.push('\n');
+        if let Some(v) = pick(&line) {
+            return v;
+        }
+    }
+    panic!("child exited before printing {what}; stdout so far:\n{seen}");
+}
+
+fn addr_after_on(line: &str) -> Option<std::net::SocketAddr> {
+    line.split(" on ").nth(1)?.split_whitespace().next()?.parse().ok()
+}
+
+/// Process-level smoke: a primary serving with `--repl-listen --ack-level
+/// all` and a replica process with `--replica-of --fsync-policy always`.
+/// Inserts acked by the primary are durable on the replica by definition
+/// of level `all`; SIGKILL the primary and every acked vector must be
+/// readable (distance ~0 at k=1) from the surviving replica.
+#[test]
+fn kill_the_primary_and_read_acked_ops_from_the_replica() {
+    use std::io::BufRead as _;
+    use std::process::{Command, Stdio};
+
+    let root = tmp_dir("smoke");
+    std::fs::create_dir_all(&root).unwrap();
+    let p_wal = root.join("p_wal");
+    let r_wal = root.join("r_wal");
+    let bundle = root.join("seed.idx");
+
+    let ds = tiny(1501, 40, DIM, Metric::L2);
+    save_index(&bundle, &BruteForce::new(Arc::clone(&ds.data))).unwrap();
+
+    let mut primary = Command::new(env!("CARGO_BIN_EXE_finger"))
+        .args([
+            "serve",
+            "--index",
+            bundle.to_str().unwrap(),
+            "--addr",
+            "127.0.0.1:0",
+            "--workers",
+            "1",
+            "--wal-dir",
+            p_wal.to_str().unwrap(),
+            "--fsync-policy",
+            "always",
+            "--repl-listen",
+            "127.0.0.1:0",
+            "--ack-level",
+            "all",
+            "--repl-expect",
+            "1",
+            "--repl-ack-timeout-ms",
+            "20000",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn primary");
+    let p_stdout = primary.stdout.take().expect("piped stdout");
+    let primary = KillOnDrop(primary);
+    let mut p_lines = std::io::BufReader::new(p_stdout).lines();
+    // The replication banner prints before the serving banner.
+    let repl_addr = scan_stdout(&mut p_lines, "the replication banner", |l| {
+        l.starts_with("replication listener on ").then(|| addr_after_on(l)).flatten()
+    });
+    let query_addr = scan_stdout(&mut p_lines, "the serving banner", |l| {
+        l.starts_with("serving ").then(|| addr_after_on(l)).flatten()
+    });
+
+    let mut replica = Command::new(env!("CARGO_BIN_EXE_finger"))
+        .args([
+            "serve",
+            "--replica-of",
+            &repl_addr.to_string(),
+            "--addr",
+            "127.0.0.1:0",
+            "--workers",
+            "1",
+            "--wal-dir",
+            r_wal.to_str().unwrap(),
+            "--fsync-policy",
+            "always",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn replica");
+    let r_stdout = replica.stdout.take().expect("piped stdout");
+    let _replica = KillOnDrop(replica);
+    let mut r_lines = std::io::BufReader::new(r_stdout).lines();
+    let replica_addr = scan_stdout(&mut r_lines, "the replica banner", |l| {
+        l.starts_with("serving replica").then(|| addr_after_on(l)).flatten()
+    });
+
+    // Acked at level all: durable on the replica before each ack.
+    let mut client = Client::connect(&query_addr).expect("connect primary");
+    let mut rng = Pcg32::new(9);
+    let mut acked: Vec<Vec<f32>> = Vec::new();
+    for i in 0..8u64 {
+        let vector: Vec<f32> = (0..DIM).map(|_| rng.next_gaussian()).collect();
+        let resp = client
+            .mutate(&Request::Insert { id: i, vector: vector.clone() })
+            .expect("insert acked at level all");
+        assert!(matches!(resp.outcome, MutOutcome::Inserted(_)));
+        acked.push(vector);
+    }
+
+    // SIGKILL the primary. Level-all acks mean nothing above may be lost.
+    drop(client);
+    drop(primary);
+
+    let mut rclient = Client::connect(&replica_addr).expect("connect replica");
+    for (i, vector) in acked.iter().enumerate() {
+        let resp = rclient
+            .query(&finger_ann::router::protocol::QueryRequest {
+                id: i as u64,
+                vector: vector.clone(),
+                k: 1,
+            })
+            .expect("replica serves reads after the primary dies");
+        let (dist, _key) = resp.hits.first().copied().expect("one hit");
+        assert!(
+            dist.abs() < 1e-5,
+            "acked insert {i} is not on the replica (nearest dist {dist})"
+        );
+    }
+    // The replica's state hash covers the seed rows plus every acked op.
+    let line = rclient
+        .send_raw(&Request::Fingerprint { id: 0 }.to_json_line())
+        .expect("fingerprint verb");
+    let info = FingerprintInfo::parse(&line).expect("fingerprint response");
+    assert_eq!(info.live, 40 + 8, "replica live count");
+    assert_eq!(info.seq, 8, "replica applied seq");
+
+    // Writes must be refused with a pointer to the primary.
+    let err = rclient
+        .mutate(&Request::Insert { id: 99, vector: vec![0.0; DIM] })
+        .expect_err("replica is read-only");
+    assert!(err.contains("read-only"), "got: {err}");
+
+    std::fs::remove_dir_all(&root).ok();
+}

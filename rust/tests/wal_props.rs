@@ -113,6 +113,7 @@ fn apply(m: &mut dyn MutableAnnIndex, ctx: &mut SearchContext, op: &WalOp) {
             // deterministic, so replay takes the same branch.
             m.compact(ctx).expect("compact");
         }
+        WalOp::SetThreshold { frac } => m.set_compact_threshold(*frac),
     }
 }
 
@@ -137,10 +138,11 @@ fn prop_recovered_bundle_is_byte_identical_for_every_family() {
         let dir = tmp_dir(&format!("ident_{family}"));
 
         // Uninterrupted control run: same ops, no WAL. The compaction
-        // threshold stays at its default on every run — replay happens on
-        // a freshly loaded index, so a custom runtime threshold would make
-        // the (deterministic) compact gate branch differently under
-        // recovery than it did live.
+        // threshold stays at its default here because this test rotates
+        // the log with a bare `Wal::checkpoint`, which does not re-log a
+        // custom threshold into the fresh generation (the serving path,
+        // `ServeIndex::save`, does — see `repl_props.rs` for schedules
+        // that exercise `SetThreshold` across rotations).
         let mut plain = build_family(family, &ds.data);
         {
             let mut ctx = SearchContext::new();
