@@ -63,6 +63,7 @@ fn main() {
             max_wait: Duration::from_micros(200),
             max_queue: 4096,
             use_pjrt_rerank: use_rerank,
+            ..Default::default()
         },
         rerank,
     )

@@ -39,6 +39,7 @@ fn main() {
                 max_wait: Duration::from_micros(100),
                 max_queue: 8192,
                 use_pjrt_rerank: false,
+                ..Default::default()
             },
             None,
         )

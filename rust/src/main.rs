@@ -45,7 +45,9 @@ use finger_ann::repl::hub::ReplHub;
 use finger_ann::repl::replica::{Replica, ReplicaOpts};
 use finger_ann::repl::{AckLevel, ReadPool};
 use finger_ann::router::protocol::{FingerprintInfo, QueryRequest};
-use finger_ann::router::{Client, MutOutcome, Request, ServeIndex, Server, ServerConfig};
+use finger_ann::router::{
+    poll, Client, MutOutcome, Request, ServeIndex, ServeMode, Server, ServerConfig,
+};
 use finger_ann::runtime::{default_artifacts_dir, service::RerankService, Manifest};
 use finger_ann::wal::{FsyncPolicy, ScanResult, Wal, WalOp};
 
@@ -83,6 +85,8 @@ fn help() {
          \u{20}  search   --dataset NAME [--method {METHODS}] [--ef N] [--k N] [--nprobe N] [--patience N]\n\
          \u{20}  serve    --dataset NAME [--method {METHODS}] [--addr A] [--workers N] [--rerank]\n\
          \u{20}  serve    --index index.bin [--addr A] [--workers N] [--rerank]\n\
+         \u{20}           [--serve-mode threads|epoll]  (default epoll on Linux: one event loop,\n\
+         \u{20}                         fixed worker pool; threads = blocking fallback)\n\
          \u{20}  update   --vector \"v1,v2,...\" [--addr A]   (insert into a running server)\n\
          \u{20}  delete   --key ID [--addr A]               (tombstone a served point)\n\
          \u{20}  compact  [--addr A]                        (reclaim tombstones if over threshold)\n\
@@ -92,7 +96,7 @@ fn help() {
          \u{20}  repl     status [--addr A]                (role, applied seq, per-replica ack progress)\n\
          \u{20}  repl     fingerprint --addrs A,B,...      (compare state hashes; exit 1 on divergence)\n\
          \u{20}  wal      dump|truncate --wal-dir DIR      (inspect / repair a WAL directory)\n\
-         \u{20}  bench    FIGURE [--scale F] [--out DIR]   (figure1..figure8, table1, rank-selection, churn, hotpath, all)\n\
+         \u{20}  bench    FIGURE [--scale F] [--out DIR]   (figure1..figure8, table1, rank-selection, churn, hotpath, router, all)\n\
          \u{20}  info\n\
          durability (serve): --wal-dir DIR [--fsync-policy always|every_n:N|interval_ms:M|never]\n\
          \u{20}                         (log every mutation before ack; recover on restart)\n\
@@ -305,6 +309,17 @@ fn fsync_policy_from_args(args: &Args) -> FsyncPolicy {
     })
 }
 
+/// `--serve-mode threads|epoll` (default: epoll where supported).
+fn serve_mode_from_args(args: &Args) -> ServeMode {
+    match args.get("serve-mode") {
+        None => ServeMode::default(),
+        Some(raw) => ServeMode::parse(raw).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }),
+    }
+}
+
 fn serve(args: &Args) {
     // `--replica-of` flips the whole command into read-only replica mode:
     // no local build, state arrives over the replication stream.
@@ -417,12 +432,21 @@ fn serve(args: &Args) {
         workers: args.get_usize("workers", 4),
         max_batch: args.get_usize("max-batch", 8),
         use_pjrt_rerank: rerank.is_some(),
+        mode: serve_mode_from_args(args),
         ..Default::default()
     };
+    // Best-effort: lift RLIMIT_NOFILE to its hard cap so the epoll loop
+    // can actually hold thousands of sockets.
+    if let Ok(limit) = poll::raise_nofile_limit() {
+        println!("nofile limit: {limit}");
+    }
     let server = Server::start(serve_index, config.clone(), rerank).expect("bind");
     println!(
-        "serving {name} ({dim}-dim) on {} ({} workers, max_batch {})",
-        server.local_addr, config.workers, config.max_batch
+        "serving {name} ({dim}-dim) on {} ({} workers, max_batch {}, {} mode)",
+        server.local_addr,
+        config.workers,
+        config.max_batch,
+        config.mode.name()
     );
     println!("protocol: one JSON per line: {{\"id\":1,\"vector\":[..],\"k\":10}}");
     // Piped stdout is block-buffered: flush so a supervising process (the
@@ -472,12 +496,19 @@ fn serve_replica(args: &Args) {
         addr: args.get("addr").unwrap_or("127.0.0.1:7772").to_string(),
         workers: args.get_usize("workers", 4),
         max_batch: args.get_usize("max-batch", 8),
+        mode: serve_mode_from_args(args),
         ..Default::default()
     };
+    if let Ok(limit) = poll::raise_nofile_limit() {
+        println!("nofile limit: {limit}");
+    }
     let server = Server::start(Arc::clone(&serve_index), config.clone(), None).expect("bind");
     println!(
-        "serving replica of {primary} on {} ({} workers, max_batch {})",
-        server.local_addr, config.workers, config.max_batch
+        "serving replica of {primary} on {} ({} workers, max_batch {}, {} mode)",
+        server.local_addr,
+        config.workers,
+        config.max_batch,
+        config.mode.name()
     );
     println!("protocol: one JSON per line: {{\"id\":1,\"vector\":[..],\"k\":10}} (read-only)");
     std::io::Write::flush(&mut std::io::stdout()).ok();
@@ -866,6 +897,149 @@ fn bench_churn_durability(out: &std::path::Path, ds: &finger_ann::data::Dataset,
     println!("wrote {}", path.display());
 }
 
+/// Serving-plane benchmark: mixed read/write load over real TCP for each
+/// frontend (thread-per-connection and, where supported, the epoll event
+/// loop). 16 blocking clients each run a seeded ~90% query / ~8% insert /
+/// ~2% delete mix and record per-op client-side latency; the JSON row per
+/// mode carries QPS and p50/p99/p999.
+fn bench_router(out: &std::path::Path, scale: f64) {
+    use finger_ann::core::distance::Metric;
+    use finger_ann::core::json::Json;
+    use finger_ann::core::rng::Pcg32;
+    use finger_ann::data::synth::tiny;
+
+    let n = ((4000.0 * scale) as usize).clamp(400, 20_000);
+    let dim = 32usize;
+    let clients = 16usize;
+    let ops_per_client = (n / 8).clamp(100, 800);
+    let ds = tiny(7411, n, dim, Metric::L2);
+    let mut modes = vec![ServeMode::Threads];
+    if poll::SUPPORTED {
+        modes.push(ServeMode::Epoll);
+    }
+    println!(
+        "router serving bench (hnsw n={n} dim={dim}, {clients} clients x {ops_per_client} mixed ops):"
+    );
+
+    let mut rows = Vec::new();
+    for mode in modes {
+        // Fresh index per mode: the mix mutates it.
+        let index: Box<dyn AnnIndex> = Box::new(HnswIndex::build(
+            Arc::clone(&ds.data),
+            HnswParams { m: 12, ef_construction: 80, ..Default::default() },
+        ));
+        let serve_index = Arc::new(ServeIndex::new(index, 64));
+        let server = Server::start(
+            Arc::clone(&serve_index),
+            ServerConfig {
+                addr: "127.0.0.1:0".into(),
+                workers: 4,
+                mode,
+                ..Default::default()
+            },
+            None,
+        )
+        .expect("bind bench server");
+        let addr = server.local_addr;
+
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..clients)
+            .map(|ci| {
+                let data = Arc::clone(&ds.data);
+                std::thread::spawn(move || {
+                    let mut client = Client::connect(&addr).expect("connect");
+                    let mut rng = Pcg32::new(0x7700 + ci as u64);
+                    let mut lats = Vec::with_capacity(ops_per_client);
+                    let mut errors = 0u64;
+                    let mut inserted: Vec<u32> = Vec::new();
+                    for op in 0..ops_per_client {
+                        let roll = rng.next_u32() % 100;
+                        let t = Instant::now();
+                        let ok = if roll < 90 || (roll >= 98 && inserted.is_empty()) {
+                            let row = rng.next_u32() as usize % data.rows();
+                            client
+                                .query(&QueryRequest {
+                                    id: op as u64,
+                                    vector: data.row(row).to_vec(),
+                                    k: 10,
+                                })
+                                .is_ok()
+                        } else if roll < 98 {
+                            let vector: Vec<f32> =
+                                (0..dim).map(|_| rng.next_gaussian()).collect();
+                            match client.mutate(&Request::Insert { id: op as u64, vector }) {
+                                Ok(ack) => {
+                                    if let MutOutcome::Inserted(key) = ack.outcome {
+                                        inserted.push(key);
+                                    }
+                                    true
+                                }
+                                Err(_) => false,
+                            }
+                        } else {
+                            let key = inserted.pop().expect("checked non-empty");
+                            client.mutate(&Request::Delete { id: op as u64, key }).is_ok()
+                        };
+                        lats.push(t.elapsed().as_micros() as u64);
+                        if !ok {
+                            errors += 1;
+                        }
+                    }
+                    (lats, errors)
+                })
+            })
+            .collect();
+        let mut lats: Vec<u64> = Vec::new();
+        let mut errors = 0u64;
+        for h in handles {
+            let (l, e) = h.join().expect("client thread");
+            lats.extend(l);
+            errors += e;
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        server.shutdown();
+
+        lats.sort_unstable();
+        let pct = |p: f64| -> u64 {
+            let idx = ((lats.len() - 1) as f64 * p).round() as usize;
+            lats[idx]
+        };
+        let total_ops = lats.len();
+        let qps = total_ops as f64 / secs.max(1e-9);
+        let (p50, p99, p999) = (pct(0.50), pct(0.99), pct(0.999));
+        println!(
+            "  mode={:<8} {:>8.0} qps  p50={}us p99={}us p999={}us  ({} ops, {} errors)",
+            mode.name(),
+            qps,
+            p50,
+            p99,
+            p999,
+            total_ops,
+            errors
+        );
+        rows.push(Json::obj(vec![
+            ("mode", Json::str(mode.name())),
+            ("ops", Json::num(total_ops as f64)),
+            ("qps", Json::num(qps)),
+            ("p50_us", Json::num(p50 as f64)),
+            ("p99_us", Json::num(p99 as f64)),
+            ("p999_us", Json::num(p999 as f64)),
+            ("errors", Json::num(errors as f64)),
+        ]));
+    }
+    let doc = Json::obj(vec![
+        ("schema", Json::str("finger-ann/router-bench/v1")),
+        ("n", Json::num(n as f64)),
+        ("dim", Json::num(dim as f64)),
+        ("clients", Json::num(clients as f64)),
+        ("ops_per_client", Json::num(ops_per_client as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let path = out.join("BENCH_router.json");
+    std::fs::write(&path, format!("{doc}\n")).expect("write BENCH_router.json");
+    println!("wrote {}", path.display());
+}
+
 fn bench(args: &Args) {
     let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     let scale = args.get_f64("scale", 0.25);
@@ -889,6 +1063,9 @@ fn bench(args: &Args) {
         // FINGER-HNSW, written as BENCH_hotpath.json for the perf
         // trajectory CI records every PR.
         "hotpath" => finger_ann::eval::hotpath::bench_hotpath(&out, scale),
+        // Serving-plane benchmark: mixed read/write load over real TCP,
+        // per serve mode, written as BENCH_router.json.
+        "router" => bench_router(&out, scale),
         "all" => {
             figures::figure2(&out, scale);
             figures::figure3(&out, scale);
@@ -901,6 +1078,7 @@ fn bench(args: &Args) {
             figures::rank_selection(&out, scale);
             bench_churn(&out, scale);
             finger_ann::eval::hotpath::bench_hotpath(&out, scale);
+            bench_router(&out, scale);
         }
         other => {
             eprintln!("unknown bench '{other}'");

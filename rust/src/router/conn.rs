@@ -1,0 +1,448 @@
+//! Per-connection state machine for the epoll serving plane.
+//!
+//! Each accepted socket gets a [`Conn`]: an incremental JSON-line framer
+//! over a pooled read buffer, a sequence-numbered reorder stage so
+//! pipelined requests answered out of order by the worker pool still go
+//! back in request order, and a write buffer with explicit backpressure
+//! (when a client stops reading its responses, we stop reading its
+//! requests). The event loop in `router::server` owns a slab of these
+//! and drives them from `epoll` readiness; nothing here blocks.
+
+use std::collections::BTreeMap;
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::sync::Mutex;
+
+/// Hard cap on a single request frame. A line that exceeds this without a
+/// terminating `\n` is a protocol violation (or an attack); the server
+/// answers with a structured error and closes the connection.
+pub const MAX_FRAME: usize = 32 * 1024 * 1024;
+
+/// Per-connection cap on requests handed to the workers but not yet
+/// answered. Past this we stop reading from the socket — the kernel's
+/// receive buffer (and eventually the client) absorbs the rest.
+pub const MAX_INFLIGHT: usize = 256;
+
+/// Pause reading when this many response bytes are queued unwritten; a
+/// client that won't drain its responses doesn't get to buffer more work.
+pub const WRITE_HIGH_WATER: usize = 256 * 1024;
+
+const READ_CHUNK: usize = 16 * 1024;
+
+/// Reusable byte buffers shared across connections. Short-lived
+/// connections then cost no steady-state allocation: buffers are
+/// recycled through here instead of freed. Oversized buffers (a client
+/// that sent one huge frame) are dropped rather than pooled so a burst
+/// can't pin memory forever.
+pub struct BufPool {
+    free: Mutex<Vec<Vec<u8>>>,
+    max_pooled: usize,
+}
+
+/// Buffers larger than this are dropped on recycle instead of pooled.
+const MAX_POOLED_BUF: usize = 1024 * 1024;
+
+impl BufPool {
+    pub fn new(max_pooled: usize) -> BufPool {
+        BufPool { free: Mutex::new(Vec::new()), max_pooled }
+    }
+
+    pub fn get(&self) -> Vec<u8> {
+        self.free
+            .lock()
+            .map(|mut f| f.pop())
+            .unwrap_or(None)
+            .unwrap_or_else(|| Vec::with_capacity(READ_CHUNK))
+    }
+
+    pub fn put(&self, mut buf: Vec<u8>) {
+        buf.clear();
+        if buf.capacity() > MAX_POOLED_BUF {
+            return;
+        }
+        if let Ok(mut f) = self.free.lock() {
+            if f.len() < self.max_pooled {
+                f.push(buf);
+            }
+        }
+    }
+
+    /// Number of buffers currently pooled (for tests/metrics).
+    pub fn pooled(&self) -> usize {
+        self.free.lock().map(|f| f.len()).unwrap_or(0)
+    }
+}
+
+/// What `read_frames` observed on the socket.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadStatus {
+    /// Socket drained (WouldBlock) or reading paused by backpressure.
+    Ok,
+    /// Peer sent EOF; already-buffered frames were still extracted.
+    Eof,
+    /// A frame exceeded [`MAX_FRAME`] without a newline.
+    FrameTooLong,
+    /// Hard socket error; connection is dead.
+    Err,
+}
+
+/// One accepted connection: framing in, ordered responses out.
+pub struct Conn {
+    pub stream: TcpStream,
+    /// Generation of the slab slot holding this conn; completions carry
+    /// it so answers for a previous occupant of the slot are discarded.
+    pub gen: u64,
+    rbuf: Vec<u8>,
+    /// Scan resume offset into `rbuf`: bytes before this were already
+    /// searched for `\n` in a previous pass.
+    scan: usize,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Sequence assigned to the next frame read from this connection.
+    next_seq: u64,
+    /// Sequence whose response is next in line to be written.
+    next_write: u64,
+    /// Completed responses waiting on earlier sequences (pipelining).
+    pending: BTreeMap<u64, String>,
+    /// Frames handed out but not yet completed.
+    inflight: usize,
+    eof: bool,
+    dead: bool,
+    /// Interest currently registered with the poller `(read, write)`,
+    /// tracked so the loop only issues `epoll_ctl(MOD)` on change.
+    pub interest: (bool, bool),
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream, gen: u64, pool: &BufPool) -> Conn {
+        Conn {
+            stream,
+            gen,
+            rbuf: pool.get(),
+            scan: 0,
+            wbuf: pool.get(),
+            wpos: 0,
+            next_seq: 0,
+            next_write: 0,
+            pending: BTreeMap::new(),
+            inflight: 0,
+            eof: false,
+            dead: false,
+            interest: (true, false),
+        }
+    }
+
+    /// Whether the framer should keep consuming socket bytes.
+    pub fn want_read(&self) -> bool {
+        !self.eof
+            && !self.dead
+            && self.inflight < MAX_INFLIGHT
+            && self.pending_write() < WRITE_HIGH_WATER
+    }
+
+    pub fn want_write(&self) -> bool {
+        !self.dead && self.pending_write() > 0
+    }
+
+    fn pending_write(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    /// Read until WouldBlock/EOF (or until backpressure pauses us),
+    /// appending every complete newline-terminated frame to `frames`
+    /// tagged with its sequence number. Empty lines are ignored, like
+    /// the blocking path always has.
+    pub fn read_frames(&mut self, frames: &mut Vec<(u64, String)>) -> ReadStatus {
+        if self.dead {
+            return ReadStatus::Err;
+        }
+        loop {
+            if !self.want_read() {
+                return if self.eof { ReadStatus::Eof } else { ReadStatus::Ok };
+            }
+            let start = self.rbuf.len();
+            self.rbuf.resize(start + READ_CHUNK, 0);
+            let n = match self.stream.read(&mut self.rbuf[start..]) {
+                Ok(n) => n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    self.rbuf.truncate(start);
+                    return ReadStatus::Ok;
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {
+                    self.rbuf.truncate(start);
+                    continue;
+                }
+                Err(_) => {
+                    self.rbuf.truncate(start);
+                    self.dead = true;
+                    return ReadStatus::Err;
+                }
+            };
+            self.rbuf.truncate(start + n);
+            if n == 0 {
+                self.eof = true;
+                self.extract_lines(frames);
+                return ReadStatus::Eof;
+            }
+            self.extract_lines(frames);
+            if self.rbuf.len() > MAX_FRAME {
+                self.dead = true;
+                return ReadStatus::FrameTooLong;
+            }
+        }
+    }
+
+    /// Pull every complete line out of `rbuf`, assign sequences, and
+    /// compact the consumed prefix.
+    fn extract_lines(&mut self, frames: &mut Vec<(u64, String)>) {
+        let mut consumed = 0;
+        while let Some(rel) = self.rbuf[self.scan..].iter().position(|&b| b == b'\n') {
+            let end = self.scan + rel;
+            let line = &self.rbuf[consumed..end];
+            let text = String::from_utf8_lossy(line).trim().to_string();
+            consumed = end + 1;
+            self.scan = consumed;
+            if text.is_empty() {
+                continue;
+            }
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            self.inflight += 1;
+            frames.push((seq, text));
+        }
+        if consumed > 0 {
+            self.rbuf.drain(..consumed);
+            self.scan = self.rbuf.len();
+        } else {
+            self.scan = self.rbuf.len();
+        }
+    }
+
+    /// Deliver the response for frame `seq`. Responses are buffered until
+    /// every earlier sequence has been answered, then written in request
+    /// order — pipelined clients see responses in the order they asked.
+    pub fn complete(&mut self, seq: u64, line: &str) {
+        if self.inflight > 0 {
+            self.inflight -= 1;
+        }
+        self.pending.insert(seq, line.to_string());
+        while let Some(ready) = self.pending.remove(&self.next_write) {
+            self.wbuf.extend_from_slice(ready.as_bytes());
+            self.wbuf.push(b'\n');
+            self.next_write += 1;
+        }
+    }
+
+    /// Queue a line out of band (parse errors, shutdown notices) — it
+    /// still consumes the frame's slot in the response order when tagged
+    /// via [`Conn::complete`]; this variant is for pre-framing failures
+    /// (e.g. an overlong frame) where no sequence exists.
+    pub fn push_raw(&mut self, line: &str) {
+        self.wbuf.extend_from_slice(line.as_bytes());
+        self.wbuf.push(b'\n');
+    }
+
+    /// Write as much of the buffered output as the socket accepts.
+    /// Returns false if the connection died.
+    pub fn flush(&mut self) -> bool {
+        if self.dead {
+            return false;
+        }
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    return false;
+                }
+                Ok(n) => self.wpos += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    return false;
+                }
+            }
+        }
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        } else if self.wpos > READ_CHUNK {
+            // Compact occasionally so a slow reader doesn't grow the
+            // buffer without bound on the consumed side.
+            self.wbuf.drain(..self.wpos);
+            self.wpos = 0;
+        }
+        true
+    }
+
+    pub fn mark_dead(&mut self) {
+        self.dead = true;
+    }
+
+    pub fn is_dead(&self) -> bool {
+        self.dead
+    }
+
+    /// True once the conversation is over: peer sent EOF, every accepted
+    /// frame has been answered, and all bytes are on the wire.
+    pub fn finished(&self) -> bool {
+        self.dead
+            || (self.eof
+                && self.inflight == 0
+                && self.pending.is_empty()
+                && self.pending_write() == 0)
+    }
+
+    /// Return the buffers to the pool on close.
+    pub fn recycle(self, pool: &BufPool) {
+        pool.put(self.rbuf);
+        pool.put(self.wbuf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let c = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        let (s, _) = l.accept().unwrap();
+        s.set_nonblocking(true).unwrap();
+        (c, s)
+    }
+
+    #[test]
+    fn frames_split_across_reads_reassemble() {
+        let (mut client, server) = pair();
+        let pool = BufPool::new(8);
+        let mut conn = Conn::new(server, 0, &pool);
+        let mut frames = Vec::new();
+
+        // Trickle a frame one byte at a time.
+        for b in b"{\"q\":1}" {
+            client.write_all(&[*b]).unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            assert_eq!(conn.read_frames(&mut frames), ReadStatus::Ok);
+            assert!(frames.is_empty(), "no frame before newline");
+        }
+        client.write_all(b"\n").unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert_eq!(conn.read_frames(&mut frames), ReadStatus::Ok);
+        assert_eq!(frames, vec![(0, "{\"q\":1}".to_string())]);
+    }
+
+    #[test]
+    fn pipelined_frames_in_one_segment_get_sequenced() {
+        let (mut client, server) = pair();
+        let pool = BufPool::new(8);
+        let mut conn = Conn::new(server, 0, &pool);
+        let mut frames = Vec::new();
+
+        client.write_all(b"a\nb\n\nc\npartial").unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        conn.read_frames(&mut frames);
+        let got: Vec<_> = frames.iter().map(|(s, t)| (*s, t.as_str())).collect();
+        assert_eq!(got, vec![(0, "a"), (1, "b"), (2, "c")], "blank line skipped, partial held");
+
+        frames.clear();
+        client.write_all(b"-done\n").unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        conn.read_frames(&mut frames);
+        assert_eq!(frames, vec![(3, "partial-done".to_string())]);
+    }
+
+    #[test]
+    fn out_of_order_completions_write_in_request_order() {
+        let (client, server) = pair();
+        let pool = BufPool::new(8);
+        let mut conn = Conn::new(server, 0, &pool);
+
+        // Pretend three frames were read.
+        let mut frames = Vec::new();
+        (&client).write_all(b"x\ny\nz\n").unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        conn.read_frames(&mut frames);
+        assert_eq!(frames.len(), 3);
+
+        conn.complete(2, "r2");
+        conn.complete(0, "r0");
+        conn.complete(1, "r1");
+        assert!(conn.flush());
+
+        let mut reader = std::io::BufReader::new(&client);
+        let mut out = String::new();
+        use std::io::BufRead as _;
+        for _ in 0..3 {
+            reader.read_line(&mut out).unwrap();
+        }
+        assert_eq!(out, "r0\nr1\nr2\n");
+        assert!(conn.inflight == 0 && conn.pending.is_empty());
+    }
+
+    #[test]
+    fn inflight_cap_pauses_reading() {
+        let (mut client, server) = pair();
+        let pool = BufPool::new(8);
+        let mut conn = Conn::new(server, 0, &pool);
+        let mut frames = Vec::new();
+
+        let mut blob = String::new();
+        for i in 0..MAX_INFLIGHT + 10 {
+            blob.push_str(&format!("req{i}\n"));
+        }
+        client.write_all(blob.as_bytes()).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        conn.read_frames(&mut frames);
+        // Reading pauses once the cap is hit; the rest stays buffered or
+        // in the kernel until completions free slots.
+        assert!(frames.len() >= MAX_INFLIGHT);
+        assert!(!conn.want_read(), "at/above inflight cap, reads pause");
+
+        for (seq, _) in frames.drain(..) {
+            conn.complete(seq, "ok");
+        }
+        assert!(conn.want_read(), "completions resume reading");
+    }
+
+    #[test]
+    fn oversized_frame_is_rejected() {
+        let (mut client, server) = pair();
+        let pool = BufPool::new(8);
+        let mut conn = Conn::new(server, 0, &pool);
+        let mut frames = Vec::new();
+
+        // Fake an almost-over-limit buffer without shipping 32 MiB
+        // through loopback: preload rbuf as if reads had accumulated it,
+        // then push it over the cap with real socket bytes.
+        conn.rbuf = vec![b'x'; MAX_FRAME];
+        conn.scan = conn.rbuf.len();
+        client.write_all(b"spill").unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let status = conn.read_frames(&mut frames);
+        assert_eq!(status, ReadStatus::FrameTooLong);
+        assert!(frames.is_empty());
+        assert!(conn.is_dead());
+    }
+
+    #[test]
+    fn buffer_pool_recycles() {
+        let pool = BufPool::new(4);
+        let (client, server) = pair();
+        let conn = Conn::new(server, 0, &pool);
+        assert_eq!(pool.pooled(), 0);
+        conn.recycle(&pool);
+        assert_eq!(pool.pooled(), 2);
+        drop(client);
+
+        let b = pool.get();
+        assert_eq!(pool.pooled(), 1);
+        pool.put(b);
+        assert_eq!(pool.pooled(), 2);
+
+        // Oversized buffers are not pooled.
+        pool.put(Vec::with_capacity(MAX_POOLED_BUF + 1));
+        assert_eq!(pool.pooled(), 2);
+    }
+}

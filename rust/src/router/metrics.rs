@@ -16,6 +16,14 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub batched_queries: AtomicU64,
     pub rejected: AtomicU64,
+    /// Connections accepted over the server's lifetime.
+    pub connections: AtomicU64,
+    /// Transient `accept(2)` failures (EMFILE, ECONNABORTED, ...) the
+    /// accept path logged, backed off from, and survived.
+    pub accept_errors: AtomicU64,
+    /// Accepted connections refused because the per-connection thread
+    /// could not be spawned (threads fallback mode only).
+    pub spawn_failures: AtomicU64,
     latency_buckets: [AtomicU64; 15],
     latency_sum_us: AtomicU64,
 }
@@ -85,11 +93,14 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "requests={} responses={} errors={} rejected={} batches={} mean_batch={:.2} mean_lat={:.0}us p50={}us p99={}us",
+            "requests={} responses={} errors={} rejected={} conns={} accept_errors={} spawn_failures={} batches={} mean_batch={:.2} mean_lat={:.0}us p50={}us p99={}us",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
+            self.connections.load(Ordering::Relaxed),
+            self.accept_errors.load(Ordering::Relaxed),
+            self.spawn_failures.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.mean_latency_us(),
@@ -128,5 +139,17 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.latency_percentile_us(99.0), 0);
         assert_eq!(m.mean_latency_us(), 0.0);
+    }
+
+    #[test]
+    fn serving_plane_counters_surface_in_summary() {
+        let m = Metrics::new();
+        m.connections.fetch_add(3, Ordering::Relaxed);
+        m.accept_errors.fetch_add(2, Ordering::Relaxed);
+        m.spawn_failures.fetch_add(1, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("conns=3"), "{s}");
+        assert!(s.contains("accept_errors=2"), "{s}");
+        assert!(s.contains("spawn_failures=1"), "{s}");
     }
 }

@@ -1,12 +1,15 @@
-//! The serving layer (L3 coordination): JSON-line protocol, dynamic
+//! The serving layer (L3 coordination): JSON-line protocol, zero-dep
+//! epoll event loop (with a thread-per-connection fallback), dynamic
 //! batcher with backpressure, worker pool over any `AnnIndex`, metrics.
 
 pub mod batcher;
+pub mod conn;
 pub mod metrics;
+pub mod poll;
 pub mod protocol;
 pub mod server;
 
 pub use batcher::{Batcher, SubmitError};
 pub use metrics::Metrics;
 pub use protocol::{MutOutcome, MutResponse, QueryRequest, QueryResponse, Request};
-pub use server::{Client, ServeIndex, Server, ServerConfig};
+pub use server::{Client, ServeIndex, ServeMode, Server, ServerConfig};

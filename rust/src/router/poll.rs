@@ -1,0 +1,459 @@
+//! Zero-dependency epoll: a thin poller over raw Linux syscalls.
+//!
+//! The offline build has no `libc` (or any other crate), so the event
+//! loop talks to the kernel directly: `epoll_create1` / `epoll_ctl` /
+//! `epoll_pwait` / `eventfd2` are issued via inline-asm syscall stubs on
+//! x86_64 and aarch64, wrapped in the tiny safe [`Poller`] / [`Waker`]
+//! API the serving plane consumes. Everything is level-triggered — the
+//! connection state machine in `router::conn` re-reads/re-writes until
+//! `WouldBlock`, so level semantics are the simple and correct choice.
+//!
+//! On non-Linux targets (or exotic architectures) the same API exists
+//! but every constructor returns `Unsupported`; `SUPPORTED` is the
+//! compile-time switch the server uses to fall back to
+//! thread-per-connection.
+
+#![allow(dead_code)]
+
+use std::io;
+
+/// True when the real epoll backend is compiled in.
+pub const SUPPORTED: bool = cfg!(all(
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+));
+
+/// One readiness notification, decoded from the kernel's epoll_event.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// The token registered with [`Poller::add`] (connection slot, or one
+    /// of the server's sentinel tokens for the listener and waker).
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    /// EPOLLERR / EPOLLHUP: the peer is gone or the socket errored.
+    pub errhup: bool,
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod sys {
+    use super::Event;
+    use std::io;
+    use std::os::fd::{AsRawFd, FromRawFd, OwnedFd, RawFd};
+
+    // -- raw syscall stubs ------------------------------------------------
+
+    #[cfg(target_arch = "x86_64")]
+    mod nr {
+        pub const READ: usize = 0;
+        pub const WRITE: usize = 1;
+        pub const EPOLL_CTL: usize = 233;
+        pub const EPOLL_PWAIT: usize = 281;
+        pub const EVENTFD2: usize = 290;
+        pub const EPOLL_CREATE1: usize = 291;
+        pub const PRLIMIT64: usize = 302;
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    mod nr {
+        pub const READ: usize = 63;
+        pub const WRITE: usize = 64;
+        pub const EPOLL_CTL: usize = 21;
+        pub const EPOLL_PWAIT: usize = 22;
+        pub const EVENTFD2: usize = 19;
+        pub const EPOLL_CREATE1: usize = 20;
+        pub const PRLIMIT64: usize = 261;
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn syscall6(
+        n: usize,
+        a1: usize,
+        a2: usize,
+        a3: usize,
+        a4: usize,
+        a5: usize,
+        a6: usize,
+    ) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") n as isize => ret,
+            in("rdi") a1,
+            in("rsi") a2,
+            in("rdx") a3,
+            in("r10") a4,
+            in("r8") a5,
+            in("r9") a6,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn syscall6(
+        n: usize,
+        a1: usize,
+        a2: usize,
+        a3: usize,
+        a4: usize,
+        a5: usize,
+        a6: usize,
+    ) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "svc 0",
+            in("x8") n,
+            inlateout("x0") a1 => ret,
+            in("x1") a2,
+            in("x2") a3,
+            in("x3") a4,
+            in("x4") a5,
+            in("x5") a6,
+            options(nostack),
+        );
+        ret
+    }
+
+    /// Fold the kernel's negative-errno convention into io::Result.
+    fn check(ret: isize) -> io::Result<usize> {
+        if (-4095..0).contains(&ret) {
+            Err(io::Error::from_raw_os_error(-ret as i32))
+        } else {
+            Ok(ret as usize)
+        }
+    }
+
+    // -- epoll constants (uapi/linux/eventpoll.h) -------------------------
+
+    const EPOLL_CLOEXEC: usize = 0o2000000;
+    const EPOLL_CTL_ADD: usize = 1;
+    const EPOLL_CTL_DEL: usize = 2;
+    const EPOLL_CTL_MOD: usize = 3;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+
+    const EFD_NONBLOCK: usize = 0o4000;
+    const EFD_CLOEXEC: usize = 0o2000000;
+
+    /// The kernel's epoll_event: packed on x86_64, naturally aligned on
+    /// every other architecture (uapi `EPOLL_PACKED`).
+    #[cfg(target_arch = "x86_64")]
+    #[repr(C, packed)]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    #[cfg(not(target_arch = "x86_64"))]
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    fn interest_mask(readable: bool, writable: bool) -> u32 {
+        let mut m = 0;
+        if readable {
+            m |= EPOLLIN;
+        }
+        if writable {
+            m |= EPOLLOUT;
+        }
+        m
+    }
+
+    /// Level-triggered epoll instance.
+    pub struct Poller {
+        ep: OwnedFd,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            let fd = check(unsafe { syscall6(nr::EPOLL_CREATE1, EPOLL_CLOEXEC, 0, 0, 0, 0, 0) })?;
+            Ok(Poller { ep: unsafe { OwnedFd::from_raw_fd(fd as RawFd) } })
+        }
+
+        fn ctl(&self, op: usize, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+            let ev = EpollEvent { events, data: token };
+            let ptr = if op == EPOLL_CTL_DEL { 0 } else { &ev as *const EpollEvent as usize };
+            check(unsafe {
+                syscall6(nr::EPOLL_CTL, self.ep.as_raw_fd() as usize, op, fd as usize, ptr, 0, 0)
+            })
+            .map(|_| ())
+        }
+
+        pub fn add(&self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, interest_mask(readable, writable), token)
+        }
+
+        pub fn modify(
+            &self,
+            fd: RawFd,
+            token: u64,
+            readable: bool,
+            writable: bool,
+        ) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, interest_mask(readable, writable), token)
+        }
+
+        pub fn remove(&self, fd: RawFd) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+        }
+
+        /// Wait up to `timeout_ms` (-1 = forever) and decode readiness into
+        /// `out` (cleared first). EINTR is not an error — it returns an
+        /// empty set so the caller's loop re-checks its stop flag.
+        pub fn wait(&self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+            out.clear();
+            const MAX_EVENTS: usize = 1024;
+            let mut buf = [EpollEvent { events: 0, data: 0 }; MAX_EVENTS];
+            let ret = unsafe {
+                syscall6(
+                    nr::EPOLL_PWAIT,
+                    self.ep.as_raw_fd() as usize,
+                    buf.as_mut_ptr() as usize,
+                    MAX_EVENTS,
+                    timeout_ms as usize,
+                    0, // sigmask: NULL (no signal atomicity needed)
+                    8, // sigsetsize (ignored with a NULL mask)
+                )
+            };
+            let n = match check(ret) {
+                Ok(n) => n,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => 0,
+                Err(e) => return Err(e),
+            };
+            for ev in buf.iter().take(n) {
+                let bits = ev.events;
+                out.push(Event {
+                    token: ev.data,
+                    readable: bits & EPOLLIN != 0,
+                    writable: bits & EPOLLOUT != 0,
+                    errhup: bits & (EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    /// Cross-thread wakeup for the event loop: an eventfd registered in
+    /// the poller. Worker threads `wake()` after queuing a completion;
+    /// the loop `drain()`s on readiness. Writes coalesce in the kernel's
+    /// 64-bit counter, so a storm of wakes costs one loop iteration.
+    pub struct Waker {
+        efd: OwnedFd,
+    }
+
+    impl Waker {
+        pub fn new() -> io::Result<Waker> {
+            let flags = EFD_NONBLOCK | EFD_CLOEXEC;
+            let fd = check(unsafe { syscall6(nr::EVENTFD2, 0, flags, 0, 0, 0, 0) })?;
+            Ok(Waker { efd: unsafe { OwnedFd::from_raw_fd(fd as RawFd) } })
+        }
+
+        pub fn raw_fd(&self) -> RawFd {
+            self.efd.as_raw_fd()
+        }
+
+        pub fn wake(&self) {
+            let one = 1u64.to_ne_bytes();
+            // EAGAIN (counter saturated) still leaves the fd readable, so
+            // the wakeup is delivered either way; nothing to handle.
+            let _ = unsafe {
+                syscall6(
+                    nr::WRITE,
+                    self.efd.as_raw_fd() as usize,
+                    one.as_ptr() as usize,
+                    one.len(),
+                    0,
+                    0,
+                    0,
+                )
+            };
+        }
+
+        pub fn drain(&self) {
+            let mut buf = [0u8; 8];
+            let _ = unsafe {
+                syscall6(
+                    nr::READ,
+                    self.efd.as_raw_fd() as usize,
+                    buf.as_mut_ptr() as usize,
+                    buf.len(),
+                    0,
+                    0,
+                    0,
+                )
+            };
+        }
+    }
+
+    // -- fd-limit helper (used by the connection-soak tests) --------------
+
+    const RLIMIT_NOFILE: usize = 7;
+
+    #[repr(C)]
+    struct Rlimit64 {
+        cur: u64,
+        max: u64,
+    }
+
+    /// Raise RLIMIT_NOFILE's soft limit to the hard limit and return the
+    /// new soft limit. Lets the 2k-connection soak run under the stingy
+    /// default soft limit most CI containers ship with.
+    pub fn raise_nofile_limit() -> io::Result<u64> {
+        let mut cur = Rlimit64 { cur: 0, max: 0 };
+        check(unsafe {
+            syscall6(nr::PRLIMIT64, 0, RLIMIT_NOFILE, 0, &mut cur as *mut Rlimit64 as usize, 0, 0)
+        })?;
+        if cur.cur >= cur.max {
+            return Ok(cur.cur);
+        }
+        let want = Rlimit64 { cur: cur.max, max: cur.max };
+        check(unsafe {
+            syscall6(nr::PRLIMIT64, 0, RLIMIT_NOFILE, &want as *const Rlimit64 as usize, 0, 0, 0)
+        })?;
+        Ok(want.cur)
+    }
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+mod sys {
+    //! Stub backend: same API, every constructor reports Unsupported. The
+    //! server checks [`super::SUPPORTED`] and falls back to
+    //! thread-per-connection before ever calling these.
+
+    use super::Event;
+    use std::io;
+    use std::os::fd::RawFd;
+
+    pub struct Poller;
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Err(io::Error::new(io::ErrorKind::Unsupported, "epoll unavailable on this target"))
+        }
+
+        pub fn add(&self, _fd: RawFd, _token: u64, _r: bool, _w: bool) -> io::Result<()> {
+            unreachable!("stub poller cannot be constructed")
+        }
+
+        pub fn modify(&self, _fd: RawFd, _token: u64, _r: bool, _w: bool) -> io::Result<()> {
+            unreachable!("stub poller cannot be constructed")
+        }
+
+        pub fn remove(&self, _fd: RawFd) -> io::Result<()> {
+            unreachable!("stub poller cannot be constructed")
+        }
+
+        pub fn wait(&self, _out: &mut Vec<Event>, _timeout_ms: i32) -> io::Result<()> {
+            unreachable!("stub poller cannot be constructed")
+        }
+    }
+
+    pub struct Waker;
+
+    impl Waker {
+        pub fn new() -> io::Result<Waker> {
+            Err(io::Error::new(io::ErrorKind::Unsupported, "eventfd unavailable on this target"))
+        }
+
+        pub fn raw_fd(&self) -> RawFd {
+            unreachable!("stub waker cannot be constructed")
+        }
+
+        pub fn wake(&self) {}
+
+        pub fn drain(&self) {}
+    }
+
+    pub fn raise_nofile_limit() -> io::Result<u64> {
+        Err(io::Error::new(io::ErrorKind::Unsupported, "prlimit unavailable on this target"))
+    }
+}
+
+pub use sys::{raise_nofile_limit, Poller, Waker};
+
+#[cfg(all(test, target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+
+    #[test]
+    fn waker_wakes_and_drains() {
+        let poller = Poller::new().unwrap();
+        let waker = Waker::new().unwrap();
+        poller.add(waker.raw_fd(), 7, true, false).unwrap();
+
+        let mut events = Vec::new();
+        poller.wait(&mut events, 0).unwrap();
+        assert!(events.is_empty(), "nothing ready before wake");
+
+        waker.wake();
+        waker.wake(); // coalesces
+        poller.wait(&mut events, 1000).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 7);
+        assert!(events[0].readable);
+
+        waker.drain();
+        poller.wait(&mut events, 0).unwrap();
+        assert!(events.is_empty(), "drained waker is quiet again");
+    }
+
+    #[test]
+    fn socket_readability_and_interest_changes() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let mut client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+
+        let poller = Poller::new().unwrap();
+        poller.add(server.as_raw_fd(), 42, true, false).unwrap();
+
+        let mut events = Vec::new();
+        poller.wait(&mut events, 0).unwrap();
+        assert!(events.is_empty());
+
+        client.write_all(b"ping").unwrap();
+        poller.wait(&mut events, 1000).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 42);
+        assert!(events[0].readable && !events[0].errhup);
+
+        // A connected socket's send buffer is writable; after MOD to
+        // write-interest the same fd reports EPOLLOUT.
+        poller.modify(server.as_raw_fd(), 42, false, true).unwrap();
+        poller.wait(&mut events, 1000).unwrap();
+        assert_eq!(events.len(), 1);
+        assert!(events[0].writable);
+
+        // Peer close with zero interests still surfaces as err/hup.
+        poller.modify(server.as_raw_fd(), 42, false, false).unwrap();
+        drop(client);
+        poller.wait(&mut events, 1000).unwrap();
+        assert_eq!(events.len(), 1);
+        assert!(events[0].errhup, "peer close reported: {:?}", events[0]);
+
+        poller.remove(server.as_raw_fd()).unwrap();
+        poller.wait(&mut events, 0).unwrap();
+        assert!(events.is_empty());
+    }
+
+    #[test]
+    fn raise_nofile_reports_a_sane_limit() {
+        let limit = raise_nofile_limit().unwrap();
+        assert!(limit >= 256, "soft fd limit after raise: {limit}");
+        // Idempotent.
+        assert_eq!(raise_nofile_limit().unwrap(), limit);
+    }
+}

@@ -6,6 +6,11 @@
 //!   Response: {"id": 7, "ids": [u32...], "dists": [f32...],
 //!              "latency_us": 123}
 //!
+//! `k` is required and must be a positive integer: a request that omits
+//! it (or sends 0, a fraction, or a non-number) is answered with a
+//! structured error rather than silently searched with a default — a
+//! malformed client must never mistake 10 arbitrary hits for its answer.
+//!
 //! Mutation verbs (served concurrently with search batches; the server
 //! takes the index's write lock per mutation):
 //!   {"id": 8, "op": "insert", "vector": [f32...]}
@@ -79,10 +84,19 @@ impl QueryRequest {
         if vector.is_empty() {
             return Err("empty vector".into());
         }
-        let k = v.get("k").and_then(|x| x.as_usize()).unwrap_or(10);
-        if k == 0 {
-            return Err("k must be positive".into());
-        }
+        // `k` is mandatory and validated strictly: `as_usize` would
+        // truncate 2.5 to 2 and a missing field used to default to 10 —
+        // both silently served the wrong answer instead of an error.
+        let k = match v.get("k") {
+            None => return Err("missing k (must be a positive integer)".into()),
+            Some(x) => {
+                let f = x.as_f64().ok_or("k must be a positive integer")?;
+                if !f.is_finite() || f.fract() != 0.0 || !(1.0..=u32::MAX as f64).contains(&f) {
+                    return Err("k must be a positive integer".into());
+                }
+                f as usize
+            }
+        };
         Ok(QueryRequest { id, vector, k })
     }
 
@@ -142,6 +156,18 @@ pub fn error_line(id: u64, msg: &str) -> String {
         ("error", Json::str(msg)),
     ])
     .to_string()
+}
+
+/// Best-effort frame id for error reporting on a line that failed
+/// [`Request::parse`]: if the line is still valid JSON with a numeric
+/// `id` (e.g. a well-formed frame with a bad `k`), the error can be
+/// correlated to the request that caused it; otherwise 0.
+pub fn request_id_hint(line: &str) -> u64 {
+    Json::parse(line)
+        .ok()
+        .and_then(|v| v.get("id").and_then(|x| x.as_f64()))
+        .filter(|f| f.is_finite() && *f >= 0.0)
+        .map_or(0, |f| f as u64)
 }
 
 /// One parsed request frame: a search or one of the mutation verbs.
@@ -424,10 +450,34 @@ mod tests {
         assert!(QueryRequest::parse("not json").is_err());
     }
 
+    /// Regression: `k` used to default to 10 when missing and truncate
+    /// when fractional — a malformed request got 10 (or the wrong number
+    /// of) hits instead of an error.
     #[test]
-    fn default_k_is_10() {
-        let r = QueryRequest::parse(r#"{"id":1,"vector":[1.0,2.0]}"#).unwrap();
-        assert_eq!(r.k, 10);
+    fn missing_zero_or_non_integer_k_is_rejected() {
+        for frame in [
+            r#"{"id":1,"vector":[1.0,2.0]}"#,
+            r#"{"id":1,"vector":[1.0,2.0],"k":0}"#,
+            r#"{"id":1,"vector":[1.0,2.0],"k":2.5}"#,
+            r#"{"id":1,"vector":[1.0,2.0],"k":-3}"#,
+            r#"{"id":1,"vector":[1.0,2.0],"k":"ten"}"#,
+            r#"{"id":1,"vector":[1.0,2.0],"k":1e300}"#,
+        ] {
+            let err = QueryRequest::parse(frame).unwrap_err();
+            assert!(err.contains('k'), "{frame} -> {err}");
+        }
+        // Integral-valued floats are fine (all JSON numbers are f64).
+        let r = QueryRequest::parse(r#"{"id":1,"vector":[1.0,2.0],"k":7.0}"#).unwrap();
+        assert_eq!(r.k, 7);
+    }
+
+    #[test]
+    fn request_id_hint_recovers_ids_when_possible() {
+        assert_eq!(request_id_hint(r#"{"id":42,"vector":[1.0],"k":0}"#), 42);
+        assert_eq!(request_id_hint("{garbage"), 0);
+        assert_eq!(request_id_hint(r#"{"vector":[1.0]}"#), 0);
+        assert_eq!(request_id_hint(r#"{"id":"seven"}"#), 0);
+        assert_eq!(request_id_hint(r#"{"id":-4}"#), 0);
     }
 
     #[test]

@@ -1,26 +1,39 @@
 //! The serving coordinator: TCP JSON-line frontend, dynamic batcher,
 //! worker pool over a shared index, optional PJRT exact re-rank.
 //!
-//! Topology (vLLM-router-shaped, scaled to one process):
+//! Topology, epoll mode (the Linux default — one event-loop thread, a
+//! fixed worker pool, no per-connection threads):
 //!
-//!   conn threads ──submit──▶ Batcher ──next_batch──▶ worker threads
-//!        ▲                                               │
-//!        └────────────── mpsc per request ◀──────────────┘
+//!   epoll loop ──frames──▶ Batcher ──next_batch──▶ worker threads
+//!       ▲   ▲                                          │
+//!       │   └── completions (mpsc + eventfd wake) ◀────┤
+//!       └────── verb completions ◀── verb executor ◀───┘
+//!
+//! The loop (`EventLoop`) owns every connection as a [`crate::router::conn::Conn`]
+//! state machine: nonblocking reads feed the incremental framer, parsed
+//! queries go to the shared [`Batcher`], mutation/introspection verbs go
+//! to a dedicated executor thread (they can block on WAL fsync or
+//! replication acks), and completions flow back over an mpsc channel
+//! paired with an eventfd [`crate::router::poll::Waker`]. Responses to
+//! pipelined requests are re-sequenced per connection so clients always
+//! see answers in request order. `--serve-mode threads` keeps the
+//! original thread-per-connection loop as a fallback (and the only mode
+//! off Linux).
 //!
 //! Workers own their scratch (a pooled `SearchContext`) and search the
 //! shared [`ServeIndex`] — any [`AnnIndex`] implementor, so the same
 //! server binary fronts HNSW, HNSW-FINGER, Vamana, NN-descent, IVF-PQ, or
 //! brute force. The index sits behind an `RwLock`: search batches take
 //! shared read locks on the worker pool while the mutation verbs
-//! (`INSERT`/`DELETE`/`COMPACT`, applied on the connection threads) take
-//! brief write locks — live updates and query traffic interleave on one
-//! server. The optional PJRT `rerank` executable re-scores the candidate
-//! set through the AOT JAX/Pallas artifact so final distances come from
-//! the L1 kernel (exactness cross-check + the "Python-free request path"
-//! demonstration).
+//! (`INSERT`/`DELETE`/`COMPACT`) take brief write locks — live updates
+//! and query traffic interleave on one server. The optional PJRT `rerank`
+//! executable re-scores the candidate set through the AOT JAX/Pallas
+//! artifact so final distances come from the L1 kernel (exactness
+//! cross-check + the "Python-free request path" demonstration).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::time::{Duration, Instant};
@@ -29,9 +42,12 @@ use crate::core::matrix::Matrix;
 use crate::index::{AnnIndex, SearchContext, SearchParams, DEFAULT_COMPACT_THRESHOLD};
 use crate::repl::hub::ReplHub;
 use crate::router::batcher::{Batcher, SubmitError};
+use crate::router::conn::{BufPool, Conn, ReadStatus};
 use crate::router::metrics::Metrics;
+use crate::router::poll::{self, Poller, Waker};
 use crate::router::protocol::{
-    error_line, FingerprintInfo, MutOutcome, MutResponse, QueryRequest, QueryResponse, Request,
+    error_line, request_id_hint, FingerprintInfo, MutOutcome, MutResponse, QueryRequest,
+    QueryResponse, Request,
 };
 use crate::runtime::service::RerankService;
 use crate::wal::{Wal, WalOp, WalWriter};
@@ -443,11 +459,101 @@ impl ServeIndex {
     }
 }
 
-/// One queued query with its response channel.
+/// A finished response on its way back to the epoll loop: which
+/// connection slot (plus the slot's generation, so answers for a closed
+/// connection whose slot was reused get discarded) and which pipelined
+/// frame this line answers.
+pub struct Completion {
+    slot: usize,
+    gen: u64,
+    seq: u64,
+    line: String,
+}
+
+/// Where a worker delivers a query's response: an mpsc channel (blocking
+/// connection threads and `submit_local`) or the event loop's completion
+/// queue plus an eventfd wake.
+pub enum Responder {
+    Channel(mpsc::Sender<QueryResponse>),
+    Event {
+        slot: usize,
+        gen: u64,
+        seq: u64,
+        done: mpsc::Sender<Completion>,
+        waker: Arc<Waker>,
+    },
+}
+
+impl Responder {
+    fn respond(&self, resp: QueryResponse) {
+        match self {
+            // Receiver may have hung up; that's fine.
+            Responder::Channel(tx) => {
+                let _ = tx.send(resp);
+            }
+            Responder::Event { slot, gen, seq, done, waker } => {
+                let _ = done.send(Completion {
+                    slot: *slot,
+                    gen: *gen,
+                    seq: *seq,
+                    line: resp.to_json_line(),
+                });
+                waker.wake();
+            }
+        }
+    }
+}
+
+/// One queued query with its response path.
 pub struct Job {
     pub req: QueryRequest,
     pub submitted: Instant,
-    pub resp: mpsc::Sender<QueryResponse>,
+    pub resp: Responder,
+}
+
+/// A non-query verb routed off the event loop (mutations can block for
+/// seconds on WAL fsync or replication acks; the loop never waits).
+struct VerbJob {
+    slot: usize,
+    gen: u64,
+    seq: u64,
+    req: Request,
+}
+
+/// How the frontend multiplexes connections.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeMode {
+    /// One blocking thread per connection (portable fallback).
+    Threads,
+    /// One nonblocking epoll event loop for all connections (Linux).
+    Epoll,
+}
+
+impl Default for ServeMode {
+    fn default() -> ServeMode {
+        if poll::SUPPORTED {
+            ServeMode::Epoll
+        } else {
+            ServeMode::Threads
+        }
+    }
+}
+
+impl ServeMode {
+    pub fn parse(s: &str) -> Result<ServeMode, String> {
+        match s {
+            "threads" => Ok(ServeMode::Threads),
+            "epoll" => Ok(ServeMode::Epoll),
+            other => Err(format!("unknown serve mode '{other}' (expected threads|epoll)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ServeMode::Threads => "threads",
+            ServeMode::Epoll => "epoll",
+        }
+    }
 }
 
 /// Server configuration.
@@ -460,6 +566,12 @@ pub struct ServerConfig {
     pub max_queue: usize,
     /// Re-rank candidates through the PJRT artifact when available.
     pub use_pjrt_rerank: bool,
+    /// Connection multiplexing: epoll event loop (Linux default) or
+    /// thread-per-connection fallback.
+    pub mode: ServeMode,
+    /// Max read/write buffers the epoll loop keeps pooled for reuse
+    /// across connections (two per live connection while open).
+    pub buf_pool: usize,
 }
 
 impl Default for ServerConfig {
@@ -471,8 +583,44 @@ impl Default for ServerConfig {
             max_wait: Duration::from_micros(200),
             max_queue: 4096,
             use_pjrt_rerank: false,
+            mode: ServeMode::default(),
+            buf_pool: 1024,
         }
     }
+}
+
+/// Capped exponential backoff for transient accept errors (EMFILE and
+/// friends): the accept loop must never die — it logs, waits, retries.
+fn accept_backoff(streak: u32) -> Duration {
+    Duration::from_millis((1u64 << streak.min(6)).min(50))
+}
+
+#[cfg(test)]
+static INJECT_SPAWN_FAILURES: AtomicU64 = AtomicU64::new(0);
+
+/// Test hook: pretend `thread::Builder::spawn` failed for the next N
+/// accepted connections (real triggers — RLIMIT_NPROC exhaustion — are
+/// too invasive to induce in a shared test process).
+#[cfg(test)]
+fn injected_spawn_failure() -> bool {
+    let mut n = INJECT_SPAWN_FAILURES.load(Ordering::Relaxed);
+    while n > 0 {
+        match INJECT_SPAWN_FAILURES.compare_exchange(
+            n,
+            n - 1,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => return true,
+            Err(cur) => n = cur,
+        }
+    }
+    false
+}
+
+#[cfg(not(test))]
+fn injected_spawn_failure() -> bool {
+    false
 }
 
 /// A running server (handle for shutdown + metrics).
@@ -481,13 +629,19 @@ pub struct Server {
     pub local_addr: std::net::SocketAddr,
     batcher: Arc<Batcher<Job>>,
     stop: Arc<AtomicBool>,
+    /// Present in epoll mode: kicks the event loop out of `epoll_pwait`
+    /// so shutdown doesn't wait out the poll timeout.
+    waker: Option<Arc<Waker>>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
     /// Start listening + worker pool. `rerank` is an optional PJRT
     /// executor service (a dedicated thread owning the compiled artifact;
-    /// see `runtime::service`) shared by all workers.
+    /// see `runtime::service`) shared by all workers. With
+    /// `config.mode == Epoll` on an unsupported target this returns the
+    /// underlying `Unsupported` error — callers wanting the automatic
+    /// fallback should use `ServeMode::default()`.
     pub fn start(
         index: Arc<ServeIndex>,
         config: ServerConfig,
@@ -505,7 +659,8 @@ impl Server {
         let stop = Arc::new(AtomicBool::new(false));
         let mut threads = Vec::new();
 
-        // Worker pool.
+        // Worker pool (shared by both modes; the Responder enum routes
+        // each response to its connection thread or the event loop).
         for wid in 0..config.workers.max(1) {
             let batcher = Arc::clone(&batcher);
             let index = Arc::clone(&index);
@@ -538,8 +693,7 @@ impl Server {
                                 };
                                 let latency_us = job.submitted.elapsed().as_micros() as u64;
                                 metrics.record_latency_us(latency_us);
-                                // Receiver may have hung up; that's fine.
-                                let _ = job.resp.send(QueryResponse {
+                                job.resp.respond(QueryResponse {
                                     id: job.req.id,
                                     hits,
                                     latency_us,
@@ -551,50 +705,177 @@ impl Server {
             );
         }
 
-        // Accept loop.
-        {
-            let batcher = Arc::clone(&batcher);
-            let metrics = Arc::clone(&metrics);
-            let stop = Arc::clone(&stop);
-            let index = Arc::clone(&index);
-            threads.push(
-                std::thread::Builder::new()
-                    .name("finger-accept".into())
-                    .spawn(move || {
-                        let conn_id = Arc::new(AtomicU64::new(0));
-                        loop {
-                            if stop.load(Ordering::Relaxed) {
-                                break;
-                            }
-                            match listener.accept() {
-                                Ok((stream, _)) => {
-                                    let batcher = Arc::clone(&batcher);
-                                    let metrics = Arc::clone(&metrics);
-                                    let index = Arc::clone(&index);
-                                    let cid = conn_id.fetch_add(1, Ordering::Relaxed);
-                                    std::thread::Builder::new()
-                                        .name(format!("finger-conn-{cid}"))
-                                        .spawn(move || {
-                                            handle_conn(stream, &batcher, &metrics, &index)
+        let waker = match config.mode {
+            ServeMode::Epoll => {
+                let poller = Poller::new()?;
+                let waker = Arc::new(Waker::new()?);
+                poller.add(listener.as_raw_fd(), TOKEN_LISTENER, true, false)?;
+                poller.add(waker.raw_fd(), TOKEN_WAKER, true, false)?;
+                let (comp_tx, comp_rx) = mpsc::channel();
+                let (verbs_tx, verbs_rx) = mpsc::channel::<VerbJob>();
+
+                // Verb executor: mutations / fingerprint / repl_status can
+                // block (write lock, WAL fsync, replication acks), so they
+                // run here, never on the event loop. One thread also keeps
+                // a connection's verbs applied in submission order.
+                {
+                    let index = Arc::clone(&index);
+                    let metrics = Arc::clone(&metrics);
+                    let comp_tx = comp_tx.clone();
+                    let waker = Arc::clone(&waker);
+                    threads.push(
+                        std::thread::Builder::new()
+                            .name("finger-verbs".into())
+                            .spawn(move || {
+                                while let Ok(job) = verbs_rx.recv() {
+                                    let line = verb_reply(&index, &metrics, &job.req);
+                                    if comp_tx
+                                        .send(Completion {
+                                            slot: job.slot,
+                                            gen: job.gen,
+                                            seq: job.seq,
+                                            line,
                                         })
-                                        .ok();
+                                        .is_err()
+                                    {
+                                        break;
+                                    }
+                                    waker.wake();
                                 }
-                                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                                    std::thread::sleep(Duration::from_millis(2));
+                            })?,
+                    );
+                }
+
+                let dim = index.dim();
+                let event_loop = EventLoop {
+                    listener,
+                    poller,
+                    waker: Arc::clone(&waker),
+                    index,
+                    batcher: Arc::clone(&batcher),
+                    metrics: Arc::clone(&metrics),
+                    stop: Arc::clone(&stop),
+                    pool: BufPool::new(config.buf_pool),
+                    comp_tx,
+                    comp_rx,
+                    verbs_tx,
+                    conns: Vec::new(),
+                    free: Vec::new(),
+                    next_gen: 0,
+                    accept_streak: 0,
+                    dim,
+                };
+                threads.push(
+                    std::thread::Builder::new()
+                        .name("finger-epoll".into())
+                        .spawn(move || event_loop.run())?,
+                );
+                Some(waker)
+            }
+            ServeMode::Threads => {
+                let batcher = Arc::clone(&batcher);
+                let metrics = Arc::clone(&metrics);
+                let stop = Arc::clone(&stop);
+                let index = Arc::clone(&index);
+                threads.push(
+                    std::thread::Builder::new()
+                        .name("finger-accept".into())
+                        .spawn(move || {
+                            let mut conn_id = 0u64;
+                            let mut streak = 0u32;
+                            loop {
+                                if stop.load(Ordering::Relaxed) {
+                                    break;
                                 }
-                                Err(_) => break,
+                                match listener.accept() {
+                                    Ok((stream, _)) => {
+                                        streak = 0;
+                                        // BSD-family targets inherit the
+                                        // listener's O_NONBLOCK on accept;
+                                        // connection threads read blocking.
+                                        let _ = stream.set_nonblocking(false);
+                                        let _ = stream.set_nodelay(true);
+                                        metrics.connections.fetch_add(1, Ordering::Relaxed);
+                                        // Clone a writer *before* the spawn
+                                        // so a spawn failure can still be
+                                        // reported in-band (the closure —
+                                        // and the stream it owns — is
+                                        // dropped when spawn errors).
+                                        let refusal = stream.try_clone();
+                                        let batcher = Arc::clone(&batcher);
+                                        let conn_metrics = Arc::clone(&metrics);
+                                        let index = Arc::clone(&index);
+                                        let cid = conn_id;
+                                        conn_id += 1;
+                                        let spawned: std::io::Result<()> =
+                                            if injected_spawn_failure() {
+                                                Err(std::io::Error::new(
+                                                    std::io::ErrorKind::WouldBlock,
+                                                    "injected spawn failure",
+                                                ))
+                                            } else {
+                                                std::thread::Builder::new()
+                                                    .name(format!("finger-conn-{cid}"))
+                                                    .spawn(move || {
+                                                        handle_conn(
+                                                            stream,
+                                                            &batcher,
+                                                            &conn_metrics,
+                                                            &index,
+                                                        )
+                                                    })
+                                                    .map(|_| ())
+                                            };
+                                        if let Err(e) = spawned {
+                                            metrics
+                                                .spawn_failures
+                                                .fetch_add(1, Ordering::Relaxed);
+                                            metrics.errors.fetch_add(1, Ordering::Relaxed);
+                                            if let Ok(mut w) = refusal {
+                                                let _ = writeln!(
+                                                    w,
+                                                    "{}",
+                                                    error_line(
+                                                        0,
+                                                        &format!(
+                                                            "cannot serve connection: {e}"
+                                                        )
+                                                    )
+                                                );
+                                            }
+                                        }
+                                    }
+                                    Err(ref e)
+                                        if e.kind() == std::io::ErrorKind::WouldBlock =>
+                                    {
+                                        std::thread::sleep(Duration::from_millis(2));
+                                    }
+                                    Err(e) => {
+                                        // Transient failure (EMFILE under fd
+                                        // pressure, ECONNABORTED, ...): the
+                                        // accept loop must outlive it. Log,
+                                        // back off, retry; only `stop` ends
+                                        // the loop.
+                                        metrics.accept_errors.fetch_add(1, Ordering::Relaxed);
+                                        eprintln!("finger-serve: accept error (retrying): {e}");
+                                        std::thread::sleep(accept_backoff(streak));
+                                        streak = streak.saturating_add(1);
+                                    }
+                                }
                             }
-                        }
-                    })
-                    .unwrap(),
-            );
-        }
+                        })
+                        .unwrap(),
+                );
+                None
+            }
+        };
 
         Ok(Server {
             metrics,
             local_addr,
             batcher,
             stop,
+            waker,
             threads,
         })
     }
@@ -609,17 +890,262 @@ impl Server {
         self.batcher.submit(Job {
             req,
             submitted: Instant::now(),
-            resp: tx,
+            resp: Responder::Channel(tx),
         })?;
         Ok(rx)
     }
 
     pub fn shutdown(self) {
         self.stop.store(true, Ordering::Relaxed);
+        if let Some(waker) = &self.waker {
+            waker.wake();
+        }
         self.batcher.close();
         for t in self.threads {
             let _ = t.join();
         }
+    }
+}
+
+/// Sentinel poller tokens for the two non-connection fds. Connection
+/// tokens are slab slot indexes, which stay far below these.
+const TOKEN_LISTENER: u64 = u64::MAX;
+const TOKEN_WAKER: u64 = u64::MAX - 1;
+
+/// The epoll frontend: one thread multiplexing every connection.
+struct EventLoop {
+    listener: TcpListener,
+    poller: Poller,
+    waker: Arc<Waker>,
+    index: Arc<ServeIndex>,
+    batcher: Arc<Batcher<Job>>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    pool: BufPool,
+    comp_tx: mpsc::Sender<Completion>,
+    comp_rx: mpsc::Receiver<Completion>,
+    verbs_tx: mpsc::Sender<VerbJob>,
+    /// Connection slab; the poller token for a connection is its slot.
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    next_gen: u64,
+    accept_streak: u32,
+    dim: usize,
+}
+
+impl EventLoop {
+    fn run(mut self) {
+        let mut events = Vec::new();
+        let mut frames: Vec<(u64, String)> = Vec::new();
+        loop {
+            if self.stop.load(Ordering::Relaxed) {
+                break;
+            }
+            if self.poller.wait(&mut events, 500).is_err() {
+                break;
+            }
+            for ev in events.iter().copied() {
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_burst(),
+                    TOKEN_WAKER => self.waker.drain(),
+                    slot => self.conn_event(slot as usize, ev.errhup, &mut frames),
+                }
+            }
+            self.drain_completions();
+        }
+    }
+
+    /// Accept until the listener drains. Transient errors (EMFILE, ...)
+    /// are counted, logged, and backed off — the listener stays armed
+    /// (level-triggered), so the next `epoll_pwait` retries.
+    fn accept_burst(&mut self) {
+        loop {
+            if self.stop.load(Ordering::Relaxed) {
+                return;
+            }
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    self.accept_streak = 0;
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let slot = self.free.pop().unwrap_or_else(|| {
+                        self.conns.push(None);
+                        self.conns.len() - 1
+                    });
+                    self.next_gen += 1;
+                    let conn = Conn::new(stream, self.next_gen, &self.pool);
+                    if self
+                        .poller
+                        .add(conn.stream.as_raw_fd(), slot as u64, true, false)
+                        .is_err()
+                    {
+                        self.free.push(slot);
+                        continue;
+                    }
+                    self.metrics.connections.fetch_add(1, Ordering::Relaxed);
+                    self.conns[slot] = Some(conn);
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) => {
+                    self.metrics.accept_errors.fetch_add(1, Ordering::Relaxed);
+                    eprintln!("finger-serve: accept error (retrying): {e}");
+                    std::thread::sleep(accept_backoff(self.accept_streak));
+                    self.accept_streak = self.accept_streak.saturating_add(1);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Readiness on one connection: pump the framer, route frames, flush.
+    fn conn_event(&mut self, slot: usize, errhup: bool, frames: &mut Vec<(u64, String)>) {
+        let Some(mut conn) = self.conns.get_mut(slot).and_then(|s| s.take()) else {
+            return;
+        };
+        frames.clear();
+        let status = conn.read_frames(frames);
+        if status == ReadStatus::FrameTooLong {
+            self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            // Best-effort in-band refusal; the framer already marked the
+            // connection dead, so write straight to the socket.
+            let _ = writeln!(
+                conn.stream,
+                "{}",
+                error_line(0, "frame exceeds the 32 MiB limit")
+            );
+        }
+        if conn.is_dead() || (errhup && frames.is_empty() && !conn.finished()) {
+            // Socket error/peer reset with nothing actionable buffered.
+            conn.mark_dead();
+            frames.clear();
+        }
+        for (seq, line) in frames.drain(..) {
+            self.process_frame(&mut conn, slot, seq, &line);
+        }
+        conn.flush();
+        self.settle(slot, conn);
+    }
+
+    /// Route one framed request: queries to the batcher, verbs to the
+    /// executor thread, failures straight back onto the connection.
+    fn process_frame(&self, conn: &mut Conn, slot: usize, seq: u64, line: &str) {
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        match Request::parse(line) {
+            Ok(Request::Query(req)) => {
+                if req.vector.len() != self.dim {
+                    self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    let msg = format!("dim mismatch: got {}, want {}", req.vector.len(), self.dim);
+                    conn.complete(seq, &error_line(req.id, &msg));
+                    return;
+                }
+                let id = req.id;
+                let job = Job {
+                    req,
+                    submitted: Instant::now(),
+                    resp: Responder::Event {
+                        slot,
+                        gen: conn.gen,
+                        seq,
+                        done: self.comp_tx.clone(),
+                        waker: Arc::clone(&self.waker),
+                    },
+                };
+                match self.batcher.submit(job) {
+                    Ok(()) => {}
+                    Err(SubmitError::Full) => {
+                        self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                        conn.complete(seq, &error_line(id, "overloaded"));
+                    }
+                    Err(SubmitError::Closed) => {
+                        conn.complete(seq, &error_line(id, "shutting down"));
+                    }
+                }
+            }
+            Ok(req) => {
+                let gen = conn.gen;
+                if let Err(mpsc::SendError(job)) =
+                    self.verbs_tx.send(VerbJob { slot, gen, seq, req })
+                {
+                    conn.complete(seq, &error_line(job.req.id(), "shutting down"));
+                }
+            }
+            Err(e) => {
+                self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                conn.complete(seq, &error_line(request_id_hint(line), &e));
+            }
+        }
+    }
+
+    /// Deliver worker/verb completions to their connections (discarding
+    /// any whose slot generation no longer matches — the connection
+    /// closed and the slot was recycled).
+    fn drain_completions(&mut self) {
+        while let Ok(c) = self.comp_rx.try_recv() {
+            let Some(mut conn) = self.conns.get_mut(c.slot).and_then(|s| s.take()) else {
+                continue;
+            };
+            if conn.gen != c.gen {
+                self.conns[c.slot] = Some(conn);
+                continue;
+            }
+            conn.complete(c.seq, &c.line);
+            conn.flush();
+            self.settle(c.slot, conn);
+        }
+    }
+
+    /// Put a connection back in the slab with its poller interest
+    /// re-armed, or tear it down if it is finished/dead.
+    fn settle(&mut self, slot: usize, mut conn: Conn) {
+        if conn.finished() {
+            self.close(slot, conn);
+            return;
+        }
+        let desired = (conn.want_read(), conn.want_write());
+        if desired != conn.interest {
+            if self
+                .poller
+                .modify(conn.stream.as_raw_fd(), slot as u64, desired.0, desired.1)
+                .is_err()
+            {
+                self.close(slot, conn);
+                return;
+            }
+            conn.interest = desired;
+        }
+        self.conns[slot] = Some(conn);
+    }
+
+    fn close(&mut self, slot: usize, conn: Conn) {
+        let _ = self.poller.remove(conn.stream.as_raw_fd());
+        conn.recycle(&self.pool);
+        self.conns[slot] = None;
+        self.free.push(slot);
+    }
+}
+
+/// Reply line for a non-query verb: mutations, fingerprint, repl_status.
+/// Shared by the blocking connection threads and the epoll verb executor
+/// so both modes answer identically.
+fn verb_reply(index: &ServeIndex, metrics: &Metrics, req: &Request) -> String {
+    match req {
+        Request::Fingerprint { id } => match index.fingerprint(*id) {
+            Ok(info) => info.to_json_line(),
+            Err(e) => {
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+                error_line(*id, &e)
+            }
+        },
+        Request::ReplStatus { id } => index.repl_status_json(*id),
+        other => match index.mutate(other) {
+            Ok(resp) => resp.to_json_line(),
+            Err(e) => {
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+                error_line(other.id(), &e)
+            }
+        },
     }
 }
 
@@ -699,40 +1225,17 @@ fn handle_conn(
                 );
                 continue;
             }
-            // Read-only introspection verbs answer inline (replica-safe).
-            Ok(Request::Fingerprint { id }) => {
-                let reply = match index.fingerprint(id) {
-                    Ok(info) => info.to_json_line(),
-                    Err(e) => {
-                        metrics.errors.fetch_add(1, Ordering::Relaxed);
-                        error_line(id, &e)
-                    }
-                };
-                let _ = writeln!(writer, "{reply}");
-                continue;
-            }
-            Ok(Request::ReplStatus { id }) => {
-                let _ = writeln!(writer, "{}", index.repl_status_json(id));
-                continue;
-            }
-            // Mutation verbs apply on the connection thread (write lock)
-            // while search batches keep flowing through the worker pool.
-            Ok(mreq) => {
-                let reply = match index.mutate(&mreq) {
-                    Ok(resp) => resp.to_json_line(),
-                    Err(e) => {
-                        metrics.errors.fetch_add(1, Ordering::Relaxed);
-                        error_line(mreq.id(), &e)
-                    }
-                };
-                let _ = writeln!(writer, "{reply}");
+            // Non-query verbs (mutations + introspection) share the reply
+            // path with the epoll mode's verb executor.
+            Ok(vreq) => {
+                let _ = writeln!(writer, "{}", verb_reply(index, metrics, &vreq));
                 continue;
             }
             Err(e) => {
                 // Malformed frames get a structured error on the same
                 // connection — the stream keeps serving.
                 metrics.errors.fetch_add(1, Ordering::Relaxed);
-                let _ = writeln!(writer, "{}", error_line(0, &e));
+                let _ = writeln!(writer, "{}", error_line(request_id_hint(&line), &e));
                 continue;
             }
         };
@@ -740,7 +1243,7 @@ fn handle_conn(
         let job = Job {
             req,
             submitted: Instant::now(),
-            resp: tx,
+            resp: Responder::Channel(tx),
         };
         let id = job.req.id;
         match batcher.submit(job) {
@@ -774,6 +1277,9 @@ pub struct Client {
 impl Client {
     pub fn connect(addr: &std::net::SocketAddr) -> std::io::Result<Client> {
         let stream = TcpStream::connect(addr)?;
+        // Small JSON frames + request/response turnarounds: Nagle would
+        // add up to one delayed-ACK interval (~40ms) per pipelined frame.
+        stream.set_nodelay(true)?;
         let reader = BufReader::new(stream.try_clone()?);
         Ok(Client { stream, reader })
     }
@@ -831,8 +1337,12 @@ mod tests {
             max_batch: 4,
             max_wait: Duration::from_micros(100),
             max_queue: 256,
-            use_pjrt_rerank: false,
+            ..Default::default()
         }
+    }
+
+    fn threads_cfg() -> ServerConfig {
+        ServerConfig { mode: ServeMode::Threads, ..cfg() }
     }
 
     #[test]
@@ -929,7 +1439,7 @@ mod tests {
                             k,
                         },
                         submitted: Instant::now(),
-                        resp: tx,
+                        resp: Responder::Channel(tx),
                     }
                 })
                 .collect()
@@ -1213,5 +1723,134 @@ mod tests {
             assert_eq!(resp.hits[0].1, 7, "{name}: self-query top hit");
             server.shutdown();
         }
+    }
+
+    /// Serializes the threads-mode tests: the spawn-failure injection is
+    /// a process-global counter, so another concurrently accepting
+    /// threads-mode server could consume it.
+    static THREADS_MODE_LOCK: Mutex<()> = Mutex::new(());
+
+    /// The portable fallback keeps serving queries and mutations.
+    #[test]
+    fn threads_mode_still_serves() {
+        let _serial = mlock(&THREADS_MODE_LOCK);
+        let ds = tiny(220, 150, 8, Metric::L2);
+        let idx = HnswIndex::build(
+            Arc::clone(&ds.data),
+            HnswParams { m: 8, ef_construction: 40, ..Default::default() },
+        );
+        let serve = Arc::new(ServeIndex::new(Box::new(idx), 64));
+        let server = Server::start(Arc::clone(&serve), threads_cfg(), None).unwrap();
+        let mut client = Client::connect(&server.local_addr).unwrap();
+        let resp = client.query(&QueryRequest { id: 1, vector: serve.row(4), k: 3 }).unwrap();
+        assert_eq!(resp.hits[0].1, 4);
+        let v: Vec<f32> = (0..8).map(|i| 90.0 + i as f32).collect();
+        let ack = client.mutate(&Request::Insert { id: 2, vector: v }).unwrap();
+        assert_eq!(ack.outcome, MutOutcome::Inserted(150));
+        server.shutdown();
+    }
+
+    /// Regression (threads fallback): a connection-thread spawn failure
+    /// used to be swallowed with `.ok()` — the client was dropped with no
+    /// response and no metric. It must get an in-band structured error,
+    /// the failure must be counted, and the server must keep accepting.
+    #[test]
+    fn spawn_failure_is_counted_and_reported_in_band() {
+        let _serial = mlock(&THREADS_MODE_LOCK);
+        let index = test_index();
+        let server = Server::start(Arc::clone(&index), threads_cfg(), None).unwrap();
+
+        INJECT_SPAWN_FAILURES.store(1, Ordering::SeqCst);
+        let refused = TcpStream::connect(server.local_addr).unwrap();
+        let mut line = String::new();
+        BufReader::new(&refused)
+            .read_line(&mut line)
+            .expect("refusal line arrives before close");
+        assert!(line.contains("error"), "structured refusal, got: {line}");
+        assert!(line.contains("cannot serve connection"), "got: {line}");
+
+        // The accept loop survived and the next client is served normally.
+        let mut client = Client::connect(&server.local_addr).unwrap();
+        let resp = client.query(&QueryRequest { id: 1, vector: index.row(2), k: 2 }).unwrap();
+        assert_eq!(resp.hits[0].1, 2);
+        assert_eq!(server.metrics.spawn_failures.load(Ordering::Relaxed), 1);
+        assert_eq!(INJECT_SPAWN_FAILURES.load(Ordering::SeqCst), 0);
+        server.shutdown();
+    }
+
+    /// Regression: query-plane sockets never set TCP_NODELAY, so Nagle
+    /// could add ~40ms to small pipelined frames.
+    #[test]
+    fn client_connection_disables_nagle() {
+        let index = test_index();
+        let server = Server::start(Arc::clone(&index), cfg(), None).unwrap();
+        let client = Client::connect(&server.local_addr).unwrap();
+        assert!(client.stream.nodelay().unwrap(), "Client::connect must set TCP_NODELAY");
+        server.shutdown();
+    }
+
+    #[test]
+    fn serve_mode_parsing_and_default() {
+        assert_eq!(ServeMode::parse("threads").unwrap(), ServeMode::Threads);
+        assert_eq!(ServeMode::parse("epoll").unwrap(), ServeMode::Epoll);
+        assert!(ServeMode::parse("tokio").is_err());
+        if poll::SUPPORTED {
+            assert_eq!(ServeMode::default(), ServeMode::Epoll, "epoll is the Linux default");
+        } else {
+            assert_eq!(ServeMode::default(), ServeMode::Threads);
+        }
+        assert_eq!(ServeMode::Threads.name(), "threads");
+        assert_eq!(ServeMode::Epoll.name(), "epoll");
+    }
+
+    /// The accept-error backoff grows exponentially and is capped — the
+    /// loop never sleeps unboundedly and never dies.
+    #[test]
+    fn accept_backoff_grows_and_caps() {
+        assert_eq!(accept_backoff(0), Duration::from_millis(1));
+        assert_eq!(accept_backoff(1), Duration::from_millis(2));
+        assert_eq!(accept_backoff(5), Duration::from_millis(32));
+        assert_eq!(accept_backoff(6), Duration::from_millis(50));
+        assert_eq!(accept_backoff(1_000_000), Duration::from_millis(50));
+    }
+
+    /// Pipelining under the event loop: many frames written in one
+    /// segment come back as exactly one response per frame, in request
+    /// order, with a malformed frame answered in-band at its position.
+    #[test]
+    fn epoll_pipelined_frames_answered_in_order() {
+        if !poll::SUPPORTED {
+            return;
+        }
+        let index = test_index();
+        let server = Server::start(Arc::clone(&index), cfg(), None).unwrap();
+        let mut stream = TcpStream::connect(server.local_addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+
+        let mut blob = String::new();
+        for i in 0..8u64 {
+            if i == 3 {
+                blob.push_str("{not json\n");
+            } else {
+                let req = QueryRequest { id: i, vector: index.row(i as usize), k: 2 };
+                blob.push_str(&req.to_json_line());
+                blob.push('\n');
+            }
+        }
+        stream.write_all(blob.as_bytes()).unwrap();
+
+        let mut reader = BufReader::new(&stream);
+        for i in 0..8u64 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            if i == 3 {
+                assert!(line.contains("error"), "frame 3 is the malformed one: {line}");
+            } else {
+                let resp = QueryResponse::parse(line.trim()).unwrap();
+                assert_eq!(resp.id, i, "responses arrive in request order");
+                assert_eq!(resp.hits[0].1, i as u32, "self-query top hit");
+            }
+        }
+        server.shutdown();
     }
 }

@@ -41,6 +41,7 @@ fn served_results_match_direct_search() {
             max_wait: Duration::from_micros(100),
             max_queue: 256,
             use_pjrt_rerank: false,
+            ..Default::default()
         },
         None,
     )
@@ -79,6 +80,7 @@ fn served_recall_matches_offline_recall() {
         max_wait: Duration::from_micros(100),
         max_queue: 1024,
         use_pjrt_rerank: false,
+        ..Default::default()
     }, None).unwrap();
 
     let mut total = 0.0;
@@ -122,6 +124,7 @@ fn pjrt_rerank_returns_exact_distances() {
             max_wait: Duration::from_micros(100),
             max_queue: 256,
             use_pjrt_rerank: true,
+            ..Default::default()
         },
         Some(Arc::new(svc)),
     )
@@ -153,6 +156,7 @@ fn overload_rejections_are_reported() {
             max_wait: Duration::from_millis(20),
             max_queue: 1, // absurdly small: force rejections
             use_pjrt_rerank: false,
+            ..Default::default()
         },
         None,
     )

@@ -149,6 +149,7 @@ fn mutation_verbs_interleave_with_search_batches() {
                 max_wait: Duration::from_micros(100),
                 max_queue: 1024,
                 use_pjrt_rerank: false,
+                ..Default::default()
             },
             None,
         )

@@ -1,0 +1,336 @@
+//! Integration tests for the serving plane, end to end over real TCP:
+//!
+//! * **Pipelining** — N frames written in one segment come back as N
+//!   responses in request order, even though the worker pool completes
+//!   them out of order.
+//! * **Slow clients** — a frame dripped a few bytes per write (each
+//!   chunk its own epoll wakeup) is reassembled and answered.
+//! * **Soak** — ~2k concurrent connections against one event loop and a
+//!   fixed worker pool: the server's thread count must not grow with the
+//!   connection count, and every request gets exactly one answer.
+//! * **Accept-loop survival** — a `finger serve` child capped at 64 fds
+//!   is flooded past EMFILE; once the flood drops, a fresh connection
+//!   must still be served (the pre-fix accept loop died permanently on
+//!   the first transient error, in both modes).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use finger_ann::core::distance::Metric;
+use finger_ann::data::persist::save_index;
+use finger_ann::data::synth::tiny;
+use finger_ann::index::impls::BruteForce;
+use finger_ann::router::poll;
+use finger_ann::router::{
+    Client, MutOutcome, QueryRequest, QueryResponse, Request, ServeIndex, ServeMode, Server,
+    ServerConfig,
+};
+
+const DIM: usize = 8;
+
+fn serve_index(n: usize, seed: u64) -> Arc<ServeIndex> {
+    let ds = tiny(seed, n, DIM, Metric::L2);
+    Arc::new(ServeIndex::new(Box::new(BruteForce::new(Arc::clone(&ds.data))), 32))
+}
+
+fn start(mode: ServeMode, workers: usize) -> (Arc<ServeIndex>, Server) {
+    let index = serve_index(240, 901);
+    let server = Server::start(
+        Arc::clone(&index),
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers,
+            max_batch: 8,
+            max_wait: Duration::from_micros(100),
+            max_queue: 4096,
+            mode,
+            ..Default::default()
+        },
+        None,
+    )
+    .unwrap();
+    (index, server)
+}
+
+/// Worker completions land out of order (4 workers, shuffled batches);
+/// the per-connection reorder stage must still write responses in
+/// request order.
+#[test]
+fn pipelined_requests_answered_in_order_over_tcp() {
+    if !poll::SUPPORTED {
+        eprintln!("skipping: epoll unsupported on this target");
+        return;
+    }
+    let (index, server) = start(ServeMode::Epoll, 4);
+    let stream = TcpStream::connect(server.local_addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    let mut batch = String::new();
+    for i in 0..32u64 {
+        let row = (i as usize * 7) % index.len();
+        batch.push_str(&QueryRequest { id: i, vector: index.row(row), k: 3 }.to_json_line());
+        batch.push('\n');
+    }
+    (&stream).write_all(batch.as_bytes()).unwrap();
+
+    let mut reader = BufReader::new(&stream);
+    for i in 0..32u64 {
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("response within timeout");
+        let resp = QueryResponse::parse(line.trim()).expect("parse response");
+        assert_eq!(resp.id, i, "responses must come back in request order");
+        let row = (i as usize * 7) % index.len();
+        assert_eq!(resp.hits[0].1 as usize, row, "self-query top hit");
+    }
+    server.shutdown();
+}
+
+/// A frame arriving three bytes at a time spans many epoll wakeups; the
+/// connection buffers until the newline and then answers normally.
+#[test]
+fn slow_client_partial_frames_assemble_across_wakeups() {
+    if !poll::SUPPORTED {
+        eprintln!("skipping: epoll unsupported on this target");
+        return;
+    }
+    let (index, server) = start(ServeMode::Epoll, 2);
+    let stream = TcpStream::connect(server.local_addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    let frame = format!("{}\n", QueryRequest { id: 7, vector: index.row(5), k: 2 }.to_json_line());
+    for chunk in frame.as_bytes().chunks(3) {
+        (&stream).write_all(chunk).unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let mut line = String::new();
+    BufReader::new(&stream).read_line(&mut line).expect("response within timeout");
+    let resp = QueryResponse::parse(line.trim()).expect("parse response");
+    assert_eq!(resp.id, 7);
+    assert_eq!(resp.hits[0].1, 5, "self-query top hit");
+    server.shutdown();
+}
+
+fn current_threads() -> usize {
+    let status = std::fs::read_to_string("/proc/self/status").expect("read /proc/self/status");
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .expect("Threads: line")
+        .trim()
+        .parse()
+        .expect("parse thread count")
+}
+
+/// The headline scaling property: thousands of concurrent connections on
+/// one event loop + a fixed worker pool, zero per-connection threads,
+/// zero dropped requests.
+#[test]
+fn soak_thousands_of_connections_fixed_thread_budget() {
+    if !poll::SUPPORTED {
+        eprintln!("skipping: epoll unsupported on this target");
+        return;
+    }
+    let limit = poll::raise_nofile_limit().unwrap_or(1024);
+    // Each held connection costs two fds in this process (client end +
+    // server end); leave headroom for the harness, stdio, and the index.
+    let target = ((limit.saturating_sub(256) / 2) as usize).min(2048);
+    if target < 64 {
+        eprintln!("skipping: nofile limit {limit} too low for a soak");
+        return;
+    }
+
+    let (index, server) = start(ServeMode::Epoll, 4);
+    let before = current_threads();
+
+    let mut conns = Vec::with_capacity(target);
+    for _ in 0..target {
+        let s = TcpStream::connect(server.local_addr).expect("connect");
+        s.set_nodelay(true).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        conns.push(s);
+    }
+
+    // The fixed pool was fully spawned before `before` was sampled, so
+    // the delta across 2k accepted connections must be ~zero.
+    let after = current_threads();
+    assert!(
+        after <= before + 2,
+        "thread count grew with connections: {before} -> {after} for {target} conns"
+    );
+
+    for (ci, s) in conns.iter_mut().enumerate() {
+        let frame = QueryRequest { id: ci as u64, vector: index.row(ci % index.len()), k: 1 }
+            .to_json_line();
+        s.write_all(frame.as_bytes()).unwrap();
+        s.write_all(b"\n").unwrap();
+    }
+    let mut answered = 0usize;
+    for (ci, s) in conns.iter().enumerate() {
+        let mut line = String::new();
+        BufReader::new(s).read_line(&mut line).expect("response within timeout");
+        let resp = QueryResponse::parse(line.trim()).expect("parse response");
+        assert_eq!(resp.id, ci as u64);
+        answered += 1;
+    }
+    assert_eq!(answered, target, "every request answered, zero drops");
+    server.shutdown();
+}
+
+/// The portable fallback still serves both planes over real TCP.
+#[test]
+fn threads_fallback_serves_queries_and_mutations() {
+    let (index, server) = start(ServeMode::Threads, 2);
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    let resp = client.query(&QueryRequest { id: 1, vector: index.row(3), k: 2 }).unwrap();
+    assert_eq!(resp.hits[0].1, 3, "self-query top hit");
+    let ack = client.mutate(&Request::Insert { id: 2, vector: vec![0.25; DIM] }).unwrap();
+    assert!(matches!(ack.outcome, MutOutcome::Inserted(_)));
+    server.shutdown();
+}
+
+/// Mutations route through the verb executor off the event loop, and a
+/// frame without `k` gets a structured in-band error while the
+/// connection keeps serving.
+#[test]
+fn epoll_mode_serves_mutations_and_rejects_missing_k() {
+    if !poll::SUPPORTED {
+        eprintln!("skipping: epoll unsupported on this target");
+        return;
+    }
+    let (index, server) = start(ServeMode::Epoll, 2);
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    let ack = client.mutate(&Request::Insert { id: 1, vector: vec![0.5; DIM] }).unwrap();
+    assert!(matches!(ack.outcome, MutOutcome::Inserted(_)));
+
+    let raw = client.send_raw(r#"{"id":5,"vector":[0,0,0,0,0,0,0,0]}"#).unwrap();
+    assert!(raw.contains("error") && raw.contains('k'), "missing k must be rejected: {raw}");
+    assert!(raw.contains("\"id\":5"), "error echoes the request id: {raw}");
+
+    let resp = client.query(&QueryRequest { id: 6, vector: index.row(0), k: 1 }).unwrap();
+    assert_eq!(resp.hits[0].1, 0, "connection keeps serving after the bad frame");
+    server.shutdown();
+}
+
+/// Kills the child process on every exit path so a failing assert does
+/// not leak a serving `finger` process.
+struct KillOnDrop(std::process::Child);
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        self.0.kill().ok();
+        self.0.wait().ok();
+    }
+}
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("finger_routerserve_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Spawn `finger serve` under `ulimit -n 64` and return its bound addr.
+fn spawn_capped_server(mode: &str, root: &std::path::Path) -> (KillOnDrop, SocketAddr) {
+    use std::process::{Command, Stdio};
+    let bundle = root.join("seed.idx");
+    let ds = tiny(88, 40, DIM, Metric::L2);
+    save_index(&bundle, &BruteForce::new(Arc::clone(&ds.data))).unwrap();
+
+    let cmd = format!(
+        "ulimit -n 64; exec {} serve --index {} --addr 127.0.0.1:0 --workers 1 --serve-mode {}",
+        env!("CARGO_BIN_EXE_finger"),
+        bundle.display(),
+        mode
+    );
+    let mut child = Command::new("sh")
+        .args(["-c", &cmd])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn capped finger serve");
+    let stdout = child.stdout.take().expect("piped stdout");
+    let child = KillOnDrop(child);
+
+    // The banner line carries the OS-assigned port; serve flushes stdout
+    // right after printing it.
+    let mut addr = None;
+    for line in BufReader::new(stdout).lines() {
+        let line = line.expect("read child stdout");
+        if line.starts_with("serving ") {
+            if let Some(rest) = line.split(" on ").nth(1) {
+                addr = rest.split_whitespace().next().map(str::to_string);
+                break;
+            }
+        }
+    }
+    let addr = addr.expect("server banner").parse().expect("parse bound addr");
+    (child, addr)
+}
+
+/// Flood a 64-fd server past EMFILE, release the flood, and require a
+/// fresh connection to be served. The pre-fix accept path exited on the
+/// first `accept(2)` error, leaving the process alive but deaf.
+fn accept_survives_fd_exhaustion(mode: &str) {
+    let root = tmp_dir(&format!("exhaust_{mode}"));
+    std::fs::create_dir_all(&root).unwrap();
+    let (child, addr) = spawn_capped_server(mode, &root);
+
+    // The kernel completes handshakes into the listen backlog even while
+    // accept(2) is failing with EMFILE, so most of these "succeed" from
+    // our side; the server side runs out of fds well before 80.
+    let mut flood = Vec::new();
+    for _ in 0..80 {
+        match TcpStream::connect_timeout(&addr, Duration::from_millis(500)) {
+            Ok(s) => flood.push(s),
+            Err(_) => break,
+        }
+    }
+    assert!(flood.len() >= 40, "flood only opened {} conns", flood.len());
+    std::thread::sleep(Duration::from_millis(200));
+    drop(flood);
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut served = false;
+    while Instant::now() < deadline {
+        if let Ok(stream) = TcpStream::connect_timeout(&addr, Duration::from_millis(500)) {
+            stream.set_nodelay(true).ok();
+            stream.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+            let frame = QueryRequest { id: 9, vector: vec![0.0; DIM], k: 1 }.to_json_line();
+            let mut w = &stream;
+            if w.write_all(frame.as_bytes()).is_ok() && w.write_all(b"\n").is_ok() {
+                let mut line = String::new();
+                if BufReader::new(&stream).read_line(&mut line).is_ok()
+                    && line.contains("\"id\"")
+                    && !line.contains("error")
+                {
+                    served = true;
+                    break;
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    assert!(served, "server stopped serving after fd exhaustion ({mode} mode)");
+    drop(child);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn accept_survives_fd_exhaustion_epoll() {
+    if !poll::SUPPORTED {
+        eprintln!("skipping: epoll unsupported on this target");
+        return;
+    }
+    accept_survives_fd_exhaustion("epoll");
+}
+
+#[test]
+fn accept_survives_fd_exhaustion_threads() {
+    if !cfg!(target_os = "linux") {
+        eprintln!("skipping: ulimit child harness is linux-only");
+        return;
+    }
+    accept_survives_fd_exhaustion("threads");
+}
