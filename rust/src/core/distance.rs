@@ -97,6 +97,21 @@ pub fn dot_batch4(q: &[f32], r0: &[f32], r1: &[f32], r2: &[f32], r3: &[f32]) -> 
     (kernels().dot_batch4)(q, r0, r1, r2, r3)
 }
 
+/// Squared L2 between two u8 code rows (SQ8 traversal tier). Exact
+/// integer arithmetic, so — unlike the f32 kernels, where bitwise
+/// equality is engineered — every backend agrees by construction.
+#[inline]
+pub fn u8_l2_sq(a: &[u8], b: &[u8]) -> u32 {
+    (kernels().u8_l2_sq)(a, b)
+}
+
+/// Portable-reference u8 squared L2 (bypasses dispatch); bitwise
+/// identical to [`u8_l2_sq`].
+#[inline]
+pub fn u8_l2_sq_scalar(a: &[u8], b: &[u8]) -> u32 {
+    crate::core::simd::scalar::u8_l2_sq(a, b)
+}
+
 /// Portable-reference squared L2 (bypasses dispatch). Bitwise identical to
 /// [`l2_sq`]; the `SearchParams::with_scalar_kernels` search paths call
 /// this directly so "scalar mode" really runs the fallback kernels.

@@ -72,12 +72,20 @@ impl KernelBackend {
 /// backends; `prefetch` is a no-op wherever the architecture has no hint
 /// instruction (and under the forced scalar backend, which models the
 /// "no intrinsics at all" configuration).
+///
+/// `u8_l2_sq` is the quantized-tier kernel: squared L2 between two u8
+/// code rows as an exact integer sum. Integer addition is associative, so
+/// every backend returns the *same* u32 by construction — the bitwise
+/// contract costs nothing here. The u32 accumulator is exact for rows up
+/// to 66 000 dims (65025 per element); far beyond any supported dim.
 pub struct Kernels {
     pub backend: KernelBackend,
     pub l2_sq: fn(&[f32], &[f32]) -> f32,
     pub dot: fn(&[f32], &[f32]) -> f32,
     pub l2_sq_batch4: fn(&[f32], &[f32], &[f32], &[f32], &[f32]) -> [f32; 4],
     pub dot_batch4: fn(&[f32], &[f32], &[f32], &[f32], &[f32]) -> [f32; 4],
+    /// Squared L2 between two u8 code rows (SQ8 traversal tier).
+    pub u8_l2_sq: fn(&[u8], &[u8]) -> u32,
     /// Best-effort L1 read prefetch of the cache line at `p`.
     pub prefetch: fn(*const f32),
 }
@@ -90,6 +98,7 @@ const SCALAR_KERNELS: Kernels = Kernels {
     dot: scalar::dot,
     l2_sq_batch4: scalar::l2_sq_batch4,
     dot_batch4: scalar::dot_batch4,
+    u8_l2_sq: scalar::u8_l2_sq,
     prefetch: prefetch_noop,
 };
 
@@ -123,6 +132,7 @@ fn select_backend() -> Kernels {
                 dot: avx2::dot,
                 l2_sq_batch4: avx2::l2_sq_batch4,
                 dot_batch4: avx2::dot_batch4,
+                u8_l2_sq: avx2::u8_l2_sq,
                 prefetch: avx2::prefetch,
             };
         }
@@ -137,6 +147,7 @@ fn select_backend() -> Kernels {
                 dot: neon::dot,
                 l2_sq_batch4: neon::l2_sq_batch4,
                 dot_batch4: neon::dot_batch4,
+                u8_l2_sq: neon::u8_l2_sq,
                 prefetch: neon::prefetch,
             };
         }
@@ -254,6 +265,22 @@ pub mod scalar {
             fold_l2_tail(a, q, r, start, n);
         }
         [hsum(&acc[0]), hsum(&acc[1]), hsum(&acc[2]), hsum(&acc[3])]
+    }
+
+    /// Squared L2 between u8 code rows, exact in u32. Unlike the f32
+    /// kernels there is no lane-order contract to uphold: integer sums
+    /// are associative, so any evaluation order yields the same bits.
+    /// Zero-padded tail lanes contribute 0 exactly (both rows pad with
+    /// the same byte), mirroring the f32 padding invariant.
+    #[inline]
+    pub fn u8_l2_sq(a: &[u8], b: &[u8]) -> u32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut sum = 0u32;
+        for i in 0..a.len() {
+            let d = a[i] as i32 - b[i] as i32;
+            sum = sum.wrapping_add((d * d) as u32);
+        }
+        sum
     }
 
     /// Inner product from one query to 4 rows; per-row bitwise identical
@@ -430,6 +457,41 @@ mod avx2 {
     pub fn prefetch(p: *const f32) {
         unsafe { _mm_prefetch::<_MM_HINT_T0>(p as *const i8) }
     }
+
+    /// u8 squared L2, 16 codes per iteration. `maddubs` would saturate
+    /// (i16 products cap at 32767 < 255² = 65025), so each 16-byte half
+    /// is widened to 16×i16 with `cvtepu8_epi16` and squared-accumulated
+    /// via `madd_epi16` into 8 i32 lanes — exact integer arithmetic, so
+    /// the result matches the scalar reference bit-for-bit.
+    #[target_feature(enable = "avx2")]
+    unsafe fn u8_l2_sq_impl(a: &[u8], b: &[u8]) -> u32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 16;
+        let mut acc = _mm256_setzero_si256();
+        for c in 0..chunks {
+            let base = c * 16;
+            let va = _mm256_cvtepu8_epi16(_mm_loadu_si128(a.as_ptr().add(base) as *const __m128i));
+            let vb = _mm256_cvtepu8_epi16(_mm_loadu_si128(b.as_ptr().add(base) as *const __m128i));
+            let d = _mm256_sub_epi16(va, vb);
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(d, d));
+        }
+        let mut lanes = [0i32; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut sum = 0u32;
+        for l in lanes {
+            sum = sum.wrapping_add(l as u32);
+        }
+        for i in chunks * 16..n {
+            let d = a[i] as i32 - b[i] as i32;
+            sum = sum.wrapping_add((d * d) as u32);
+        }
+        sum
+    }
+
+    pub fn u8_l2_sq(a: &[u8], b: &[u8]) -> u32 {
+        unsafe { u8_l2_sq_impl(a, b) }
+    }
 }
 
 /// NEON backend (baseline on aarch64): two 4-lane registers stand in for
@@ -559,6 +621,36 @@ mod neon {
         }
     }
 
+    /// u8 squared L2, 16 codes per iteration: absolute byte difference
+    /// (`vabdq_u8`), widening square of each half (`vmull_u8` — products
+    /// fit u16 since 255² = 65025), pairwise-accumulated into 4 u32
+    /// lanes (`vpadalq_u16`). Exact integers ⇒ bitwise equal to scalar.
+    pub fn u8_l2_sq(a: &[u8], b: &[u8]) -> u32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 16;
+        unsafe {
+            let mut acc = vdupq_n_u32(0);
+            for c in 0..chunks {
+                let base = c * 16;
+                let d = vabdq_u8(
+                    vld1q_u8(a.as_ptr().add(base)),
+                    vld1q_u8(b.as_ptr().add(base)),
+                );
+                let dlo = vget_low_u8(d);
+                let dhi = vget_high_u8(d);
+                acc = vpadalq_u16(acc, vmull_u8(dlo, dlo));
+                acc = vpadalq_u16(acc, vmull_u8(dhi, dhi));
+            }
+            let mut sum = vaddvq_u32(acc);
+            for i in chunks * 16..n {
+                let d = a[i] as i32 - b[i] as i32;
+                sum = sum.wrapping_add((d * d) as u32);
+            }
+            sum
+        }
+    }
+
     /// L1 read prefetch via `prfm pldl1keep` (no stable intrinsic yet).
     pub fn prefetch(p: *const f32) {
         unsafe {
@@ -614,6 +706,30 @@ mod tests {
                 assert_eq!(gl[t].to_bits(), sl[t].to_bits(), "l2b4 n={n} row {t}");
                 assert_eq!(gd[t].to_bits(), sd[t].to_bits(), "dotb4 n={n} row {t}");
             }
+        }
+    }
+
+    /// u8 kernel parity across backends, including the saturation edge
+    /// (all-255 vs all-0: a `maddubs`-style i16 path would clip 65025 to
+    /// 32767 and fail here) and lengths straddling the 16-byte chunk.
+    #[test]
+    fn dispatched_u8_kernel_bitwise_equal_scalar() {
+        let ks = kernels();
+        let mut rng = Pcg32::new(0xC0DE5);
+        for &n in LENS {
+            let a: Vec<u8> = (0..n).map(|_| (rng.next_u32() & 0xFF) as u8).collect();
+            let b: Vec<u8> = (0..n).map(|_| (rng.next_u32() & 0xFF) as u8).collect();
+            assert_eq!(
+                (ks.u8_l2_sq)(&a, &b),
+                scalar::u8_l2_sq(&a, &b),
+                "u8 l2 n={n} backend={}",
+                ks.backend.name()
+            );
+            let hi = vec![255u8; n];
+            let lo = vec![0u8; n];
+            let want = (n as u32).wrapping_mul(255 * 255);
+            assert_eq!((ks.u8_l2_sq)(&hi, &lo), want, "saturation n={n}");
+            assert_eq!(scalar::u8_l2_sq(&hi, &lo), want, "scalar saturation n={n}");
         }
     }
 

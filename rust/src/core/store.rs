@@ -167,6 +167,102 @@ impl VectorStore {
     }
 }
 
+/// u8 sibling of [`VectorStore`]: 64-byte-aligned, lane-padded SQ8 code
+/// rows the quantized beam search traverses instead of the f32 rows.
+/// Same layout discipline (aligned payload start, stride padded to the
+/// kernel lane width, zero tail bytes) so the u8 kernel's hot loop is
+/// tail-light and never splits a cache line; zero padding is exact for
+/// the integer kernel because both sides pad with the same byte.
+pub struct Sq8Store {
+    buf: Vec<u8>,
+    off: usize,
+    rows: usize,
+    cols: usize,
+    padded: usize,
+}
+
+impl Sq8Store {
+    /// Empty store for `cols`-wide code rows, pre-sized for `rows`.
+    pub fn with_dims(rows: usize, cols: usize) -> Sq8Store {
+        let mut s = Sq8Store {
+            buf: Vec::new(),
+            off: 0,
+            rows: 0,
+            cols,
+            padded: pad_up(cols),
+        };
+        s.reserve_rows(rows);
+        s
+    }
+
+    fn reserve_rows(&mut self, extra: usize) {
+        let body = (self.rows + extra) * self.padded;
+        if self.off + body <= self.buf.capacity() {
+            return;
+        }
+        let cap = (body + ALIGN_BYTES).max(self.buf.capacity() * 2 + ALIGN_BYTES);
+        let mut nb: Vec<u8> = Vec::with_capacity(cap);
+        let noff = nb.as_ptr().align_offset(ALIGN_BYTES).min(ALIGN_BYTES);
+        nb.resize(noff, 0);
+        nb.extend_from_slice(&self.buf[self.off..self.off + self.rows * self.padded]);
+        self.buf = nb;
+        self.off = noff;
+    }
+
+    /// Append one code row (length `cols`; tail zero-padded to stride).
+    pub fn push_row(&mut self, codes: &[u8]) {
+        assert_eq!(codes.len(), self.cols, "code row width mismatch");
+        self.reserve_rows(1);
+        self.buf.extend_from_slice(codes);
+        self.buf.resize(self.off + (self.rows + 1) * self.padded, 0);
+        self.rows += 1;
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row stride in bytes (`cols` padded to the kernel lane width).
+    #[inline]
+    pub fn padded_cols(&self) -> usize {
+        self.padded
+    }
+
+    /// Padded code row `i` (length [`Sq8Store::padded_cols`], zero tail).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u8] {
+        debug_assert!(i < self.rows);
+        let s = self.off + i * self.padded;
+        &self.buf[s..s + self.padded]
+    }
+
+    /// Logical code row `i` (length [`Sq8Store::cols`]).
+    #[inline]
+    pub fn row_logical(&self, i: usize) -> &[u8] {
+        &self.row(i)[..self.cols]
+    }
+
+    /// Zero-pad query codes into `out` to the row stride.
+    #[inline]
+    pub fn pad_query(&self, codes: &[u8], out: &mut Vec<u8>) {
+        debug_assert_eq!(codes.len(), self.cols, "query code dim mismatch");
+        out.clear();
+        out.extend_from_slice(codes);
+        out.resize(self.padded, 0);
+    }
+
+    /// Payload bytes (padding included).
+    pub fn nbytes(&self) -> usize {
+        self.rows * self.padded
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -270,5 +366,48 @@ mod tests {
         assert!(s.row_logical(0)[1].is_nan());
         assert!(s.row(0)[5..].iter().all(|&x| x == 0.0));
         assert!(s.sq_norm(0).is_nan());
+    }
+
+    #[test]
+    fn sq8_store_rows_roundtrip_padded_and_aligned() {
+        use crate::core::distance::u8_l2_sq;
+        for cols in [1usize, 7, 8, 9, 17, 100] {
+            let mut s = Sq8Store::with_dims(4, cols);
+            let mut rng = Pcg32::new(cols as u64);
+            let rows: Vec<Vec<u8>> = (0..4)
+                .map(|_| (0..cols).map(|_| (rng.next_u32() & 0xFF) as u8).collect())
+                .collect();
+            for r in &rows {
+                s.push_row(r);
+            }
+            assert_eq!(s.rows(), 4);
+            assert_eq!(s.padded_cols() % LANES, 0);
+            let mut qp = Vec::new();
+            for (i, r) in rows.iter().enumerate() {
+                assert_eq!(s.row_logical(i), &r[..]);
+                assert!(s.row(i)[cols..].iter().all(|&x| x == 0));
+                // Padding invisibility for the integer kernel.
+                s.pad_query(&rows[0], &mut qp);
+                assert_eq!(u8_l2_sq(&qp, s.row(i)), u8_l2_sq(&rows[0], r), "row {i}");
+            }
+            assert_eq!(s.nbytes(), 4 * s.padded_cols());
+        }
+        let s = Sq8Store::with_dims(64, 32);
+        let mut s = s;
+        s.push_row(&[7u8; 32]);
+        assert_eq!(s.row(0).as_ptr() as usize % ALIGN_BYTES, 0);
+    }
+
+    #[test]
+    fn sq8_store_growth_keeps_old_rows() {
+        let mut s = Sq8Store::with_dims(1, 10);
+        s.push_row(&[1u8; 10]);
+        let snapshot = s.row_logical(0).to_vec();
+        for r in 0..40 {
+            s.push_row(&[(r as u8).wrapping_mul(3); 10]);
+        }
+        assert_eq!(s.rows(), 41);
+        assert_eq!(s.row_logical(0), &snapshot[..]);
+        assert_eq!(s.row_logical(40), &[39u8 * 3; 10]);
     }
 }

@@ -16,7 +16,11 @@
 //! next-id watermark, the row→external-id map, and the tombstone list —
 //! so a churned index serves the same live set after a restart. v3 and v4
 //! files still load (their mutation state is the identity); sharded
-//! bundles require v4+.
+//! bundles require v4+. v6 adds the **quantized-tier section** for the
+//! families that can traverse on SQ8/PQ codes (bruteforce, hnsw,
+//! hnsw-finger): a precision tag followed by the codec parameters and the
+//! code rows, written *before* the mutation section so the live state
+//! stays at the payload tail. v3–v5 files still load (no tier → F32).
 //! Everything is fully validated at load — live-set coverage (every live
 //! point in exactly one shard), ascending id maps, shard rows
 //! bitwise-equal to the parent matrix, watermark/tombstone consistency —
@@ -40,12 +44,14 @@ use crate::index::impls::{
 use crate::index::mutable::LiveIds;
 use crate::index::sharded::{ShardParts, ShardStrategy, ShardedIndex};
 use crate::index::AnnIndex;
+use crate::core::store::Sq8Store;
 use crate::quant::ivfpq::{IvfPq, IvfPqParams};
 use crate::quant::kmeans::KMeans;
 use crate::quant::pq::{Pq, PqParams};
+use crate::quant::sq8::{Precision, QuantTier, Sq8Codec};
 
 const MAGIC: u64 = 0x464E_4752; // "FNGR"
-const VERSION: u64 = 5;
+const VERSION: u64 = 6;
 /// Oldest format still readable (v3 single-index bundles).
 const MIN_VERSION: u64 = 3;
 
@@ -402,6 +408,131 @@ pub fn load_ivfpq<R: io::Read>(r: &mut BinReader<R>) -> io::Result<IvfPq> {
     })
 }
 
+/// Write a family's quantized-tier section (format v6). `None` writes
+/// just the F32 precision tag. Callers emit this section *before* the
+/// live section so the mutation state stays at the payload tail (the
+/// corruption tests and external tooling compute offsets from the end).
+pub fn save_quant<W: io::Write>(
+    w: &mut BinWriter<W>,
+    tier: Option<&QuantTier>,
+) -> io::Result<()> {
+    match tier {
+        None => w.u64(Precision::F32.tag()),
+        Some(QuantTier::Sq8 { codec, store }) => {
+            w.u64(Precision::Sq8.tag())?;
+            w.f32_slice(&codec.mins)?;
+            w.f32_slice(&codec.maxs)?;
+            w.f32_slice(&[codec.delta])?;
+            // Logical (unpadded) codes, row-major; padding is rebuilt on
+            // load so the on-disk bytes are lane-width independent.
+            let mut codes = Vec::with_capacity(store.rows() * store.cols());
+            for i in 0..store.rows() {
+                codes.extend_from_slice(store.row_logical(i));
+            }
+            w.u8_slice(&codes)
+        }
+        Some(QuantTier::Pq { pq }) => {
+            w.u64(Precision::Pq.tag())?;
+            // Same layout as the PQ half of `save_ivfpq`.
+            w.u64(pq.params.n_sub as u64)?;
+            w.u64(pq.params.nbits as u64)?;
+            w.u64(pq.params.kmeans_iters as u64)?;
+            w.u64(pq.params.seed)?;
+            w.u64(pq.books.len() as u64)?;
+            for b in &pq.books {
+                w.matrix(&b.centroids)?;
+            }
+            let ranges: Vec<u32> = pq
+                .ranges
+                .iter()
+                .flat_map(|&(lo, hi)| [lo as u32, hi as u32])
+                .collect();
+            w.u32_slice(&ranges)?;
+            w.u8_slice(&pq.codes)?;
+            w.u64(pq.n as u64)
+        }
+    }
+}
+
+/// Read a family's v6 quantized-tier section; older versions have none
+/// (every pre-v6 bundle is full-precision). Validates shapes against the
+/// family's row count and dimensionality.
+pub fn load_quant<R: io::Read>(
+    r: &mut BinReader<R>,
+    version: u64,
+    n: usize,
+    dim: usize,
+) -> io::Result<Option<QuantTier>> {
+    if version < 6 {
+        return Ok(None);
+    }
+    let p = Precision::from_tag(r.u64()?).ok_or_else(|| bad("unknown precision tag"))?;
+    match p {
+        Precision::F32 => Ok(None),
+        Precision::Sq8 => {
+            let mins = r.f32_slice()?;
+            let maxs = r.f32_slice()?;
+            let dv = r.f32_slice()?;
+            if mins.len() != dim || maxs.len() != dim || dv.len() != 1 {
+                return Err(bad("sq8 codec shape mismatch"));
+            }
+            // `delta` is re-derived from the ranges; the stored copy is a
+            // belt-and-braces consistency check, not a second source.
+            let codec = Sq8Codec::from_ranges(mins, maxs);
+            if codec.delta.to_bits() != dv[0].to_bits() {
+                return Err(bad("sq8 delta disagrees with stored ranges"));
+            }
+            let codes = r.u8_slice()?;
+            if codes.len() != n * dim {
+                return Err(bad("sq8 code shape mismatch"));
+            }
+            let mut store = Sq8Store::with_dims(n, dim);
+            for i in 0..n {
+                store.push_row(&codes[i * dim..(i + 1) * dim]);
+            }
+            Ok(Some(QuantTier::Sq8 { codec, store }))
+        }
+        Precision::Pq => {
+            let n_sub = r.u64()? as usize;
+            let nbits = r.u64()? as usize;
+            let kmeans_iters = r.u64()? as usize;
+            let seed = r.u64()?;
+            let n_books = r.u64()? as usize;
+            let mut books = Vec::with_capacity(n_books);
+            for _ in 0..n_books {
+                books.push(KMeans { centroids: r.matrix()? });
+            }
+            let flat = r.u32_slice()?;
+            if flat.len() != 2 * n_books {
+                return Err(bad("pq tier ranges"));
+            }
+            let ranges: Vec<(usize, usize)> = flat
+                .chunks_exact(2)
+                .map(|c| (c[0] as usize, c[1] as usize))
+                .collect();
+            for &(lo, hi) in &ranges {
+                if lo > hi || hi > dim {
+                    return Err(bad("pq tier subspace range out of bounds"));
+                }
+            }
+            let codes = r.u8_slice()?;
+            let pn = r.u64()? as usize;
+            if pn != n || codes.len() != n * n_books {
+                return Err(bad("pq tier code shape mismatch"));
+            }
+            Ok(Some(QuantTier::Pq {
+                pq: Pq {
+                    params: PqParams { n_sub, nbits, kmeans_iters, seed },
+                    books,
+                    ranges,
+                    codes,
+                    n,
+                },
+            }))
+        }
+    }
+}
+
 // ---------------------------------------------------- load-time validation
 //
 // Family loaders only check shapes they can see locally; `load_index`
@@ -593,9 +724,14 @@ fn load_family<R: io::Read>(
         TAG_HNSW => {
             let hnsw = load_hnsw(r)?;
             validate_hnsw(&hnsw, n)?;
+            let quant = load_quant(r, version, n, data.cols())?;
             let live = load_live(r, version, n)?;
             (
-                Box::new(HnswIndex::from_parts(data, hnsw).with_live(live.clone())),
+                Box::new(
+                    HnswIndex::from_parts(data, hnsw)
+                        .with_quant(quant)
+                        .with_live(live.clone()),
+                ),
                 live,
             )
         }
@@ -604,10 +740,12 @@ fn load_family<R: io::Read>(
             let index = load_finger(r)?;
             validate_hnsw(&hnsw, n)?;
             validate_finger(&index, &hnsw, n)?;
+            let quant = load_quant(r, version, n, data.cols())?;
             let live = load_live(r, version, n)?;
             (
                 Box::new(
                     FingerHnswIndex::from_parts(data, FingerHnsw { hnsw, index })
+                        .with_quant(quant)
                         .with_live(live.clone()),
                 ),
                 live,
@@ -636,9 +774,10 @@ fn load_family<R: io::Read>(
             (Box::new(IvfPqIndex::from_parts(data, q)), LiveIds::fresh(n))
         }
         TAG_BRUTEFORCE => {
+            let quant = load_quant(r, version, n, data.cols())?;
             let live = load_live(r, version, n)?;
             (
-                Box::new(BruteForce::new(data).with_live(live.clone())),
+                Box::new(BruteForce::new(data).with_quant(quant).with_live(live.clone())),
                 live,
             )
         }

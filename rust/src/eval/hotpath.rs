@@ -19,6 +19,13 @@
 //!   build plane), asserting the two builds persist identically-shaped
 //!   graphs by comparing entry/edges, and logging the speedup. The ≥ 2×
 //!   expectation at `T = max` is informational — logged, never asserted.
+//! * **quant** (v3) — recall@10 vs QPS vs traversal-resident bytes for
+//!   the f32, sq8 and pq distance tiers over the same HNSW graph
+//!   parameters, one row per (tier, ef). Each row records `tier_bytes`:
+//!   the bytes the beam loop actually reads per tier (padded f32 store
+//!   for `f32`; codec + code rows for `sq8`/`pq`). The ≥ 2× byte
+//!   reduction of sq8 over f32 *is* asserted (it is a layout fact, not a
+//!   measurement); recall deltas are logged, never asserted.
 //!
 //! `ns_per_dist` in the search section is *inclusive*: elapsed wall time
 //! divided by the number of exact distance computations, so it also
@@ -29,17 +36,20 @@
 use std::path::Path;
 use std::time::Instant;
 
-use crate::core::distance::{kernel_backend, l2_sq, l2_sq_batch4};
+use crate::core::distance::{kernel_backend, l2_sq, l2_sq_batch4, LANES};
 use crate::core::json::Json;
 use crate::core::matrix::Matrix;
 use crate::core::rng::Pcg32;
 use crate::core::store::VectorStore;
 use crate::core::threads::default_threads;
+use crate::data::groundtruth::exact_knn;
 use crate::data::spec_by_name;
+use crate::eval::recall::recall;
 use crate::finger::construct::FingerParams;
 use crate::graph::hnsw::HnswParams;
 use crate::index::impls::{FingerHnswIndex, HnswIndex};
 use crate::index::{AnnIndex, SearchContext, SearchParams};
+use crate::quant::sq8::Precision;
 
 /// Median-of-5 timed reps of `f`, returning ns per iteration.
 fn time_ns_per_iter<F: FnMut() -> f32>(iters: usize, mut f: F) -> f64 {
@@ -203,6 +213,75 @@ fn build_section(ds: &crate::data::Dataset, out: &mut Vec<Json>) -> (HnswIndex, 
     (keep_hnsw.expect("hnsw built"), keep_finger.expect("hnsw-finger built"))
 }
 
+/// Quantized-tier sweep: recall@10 vs QPS vs traversal-resident bytes
+/// for the f32/sq8/pq tiers over identical graph parameters. The f32
+/// index is the T=max build from the build section; the quantized
+/// variants rebuild the same graph with a sibling code tier.
+fn quant_section(ds: &crate::data::Dataset, hnsw: &HnswIndex, out: &mut Vec<Json>) {
+    let k = 10usize;
+    let gt = exact_knn(&ds.data, &ds.queries, k);
+    let t_max = default_threads();
+    let hp = HnswParams { m: 16, ef_construction: 120, threads: t_max, ..Default::default() };
+
+    // Traversal-resident bytes: what the beam loop reads per tier. The
+    // f32 tier scores padded store rows; sq8/pq score code rows (codec /
+    // codebook bytes included via `QuantTier::nbytes`).
+    let n = ds.data.rows();
+    let padded = ds.data.cols().div_ceil(LANES.max(1)) * LANES.max(1);
+    let f32_bytes = n * padded * std::mem::size_of::<f32>();
+
+    let sq8 = HnswIndex::build_with_precision(std::sync::Arc::clone(&ds.data), hp.clone(), Precision::Sq8);
+    let pq = HnswIndex::build_with_precision(std::sync::Arc::clone(&ds.data), hp, Precision::Pq);
+    let sq8_bytes = sq8.quant().map_or(0, |t| t.nbytes());
+    let pq_bytes = pq.quant().map_or(0, |t| t.nbytes());
+    assert!(
+        sq8_bytes * 2 <= f32_bytes,
+        "sq8 tier ({sq8_bytes} B) must be >= 2x smaller than f32 ({f32_bytes} B)"
+    );
+    println!(
+        "  tier bytes: f32 {f32_bytes}   sq8 {sq8_bytes} ({:.2}x smaller)   pq {pq_bytes} ({:.2}x smaller)",
+        f32_bytes as f64 / sq8_bytes.max(1) as f64,
+        f32_bytes as f64 / pq_bytes.max(1) as f64
+    );
+
+    let tiers: [(&str, &dyn AnnIndex, usize); 3] =
+        [("f32", hnsw, f32_bytes), ("sq8", &sq8, sq8_bytes), ("pq", &pq, pq_bytes)];
+    let nq = ds.queries.rows();
+    let mut ctx = SearchContext::for_universe(n);
+    let mut f32_recall = [0.0f64; 3];
+    for (ei, ef) in [40usize, 80, 160].into_iter().enumerate() {
+        for (label, index, tier_bytes) in tiers {
+            let params = SearchParams::new(k).with_ef(ef);
+            for qi in 0..nq.min(8) {
+                index.search(ds.queries.row(qi), &params, &mut ctx);
+            }
+            let t0 = Instant::now();
+            let mut total_recall = 0.0f64;
+            for qi in 0..nq {
+                let res = index.search(ds.queries.row(qi), &params, &mut ctx);
+                total_recall += recall(&res[..res.len().min(k)], &gt[qi]);
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            let qps = nq as f64 / secs.max(1e-9);
+            let rec = total_recall / nq.max(1) as f64;
+            if label == "f32" {
+                f32_recall[ei] = rec;
+            }
+            println!(
+                "  quant {label:<4} ef={ef:<4} recall@{k} {rec:.4} (Δf32 {:+.4})   QPS {qps:9.0}   {tier_bytes:>9} tier bytes",
+                rec - f32_recall[ei]
+            );
+            out.push(Json::obj(vec![
+                ("tier", Json::str(label)),
+                ("ef", Json::num(ef as f64)),
+                ("recall", Json::num(rec)),
+                ("qps", Json::num(qps)),
+                ("tier_bytes", Json::num(tier_bytes as f64)),
+            ]));
+        }
+    }
+}
+
 /// The `finger bench hotpath` entry: writes `BENCH_hotpath.json` to `out`.
 pub fn bench_hotpath(out: &Path, scale: f64) {
     println!("== hotpath: padded-store + batched-kernel data plane ==");
@@ -248,8 +327,11 @@ pub fn bench_hotpath(out: &Path, scale: f64) {
         search.push(run_search(label, "batched", index, &ds.queries, &batched, &mut ctx));
     }
 
+    let mut quant = Vec::new();
+    quant_section(&ds, &hnsw, &mut quant);
+
     let doc = Json::obj(vec![
-        ("schema", Json::str("hotpath-v2")),
+        ("schema", Json::str("hotpath-v3")),
         ("dataset", Json::str(&ds.name)),
         ("n", Json::num(ds.data.rows() as f64)),
         ("dim", Json::num(ds.data.cols() as f64)),
@@ -260,6 +342,7 @@ pub fn bench_hotpath(out: &Path, scale: f64) {
         ("kernel", Json::Arr(kernel)),
         ("build", Json::Arr(build)),
         ("search", Json::Arr(search)),
+        ("quant", Json::Arr(quant)),
     ]);
     std::fs::create_dir_all(out).ok();
     let path = out.join("BENCH_hotpath.json");

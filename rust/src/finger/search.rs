@@ -26,7 +26,7 @@ use crate::core::store::VectorStore;
 use crate::finger::approx::{approx_dist_sq, QueryCenter, QueryState};
 use crate::finger::construct::FingerIndex;
 use crate::graph::adjacency::FlatAdj;
-use crate::graph::search::{AllLive, LiveFilter, MinNeighbor, Neighbor};
+use crate::graph::search::{AllLive, ApproxScorer, LiveFilter, MinNeighbor, Neighbor};
 use crate::index::context::{SearchContext, SearchParams};
 use crate::index::mutable::LiveIds;
 
@@ -213,6 +213,95 @@ pub fn finger_beam_search_filtered<F: LiveFilter + ?Sized>(
     }
 
     ctx.qbuf = qp;
+    ctx.block = block;
+    ctx.slots = slots;
+    ctx.drain_top()
+}
+
+/// Quantized FINGER beam search: the FINGER screen (Algorithm 3, built
+/// from the f32 query exactly as in the exact core) composes with a
+/// quantized admission distance — a neighbor that survives the screen is
+/// scored by the [`ApproxScorer`] (SQ8 / PQ codes) instead of the f32
+/// kernel, so the hot loop never touches full-precision rows at all.
+/// Both estimates target the same squared-L2 scale, so the screen's
+/// upper-bound comparison stays meaningful. All in-loop scoring counts
+/// as `approx_calls`; callers restore exact ordering with
+/// [`crate::graph::search::rerank_exact`] over the full returned pool.
+#[allow(clippy::too_many_arguments)]
+pub fn finger_beam_search_approx_filtered<F: LiveFilter + ?Sized, S: ApproxScorer>(
+    n_rows: usize,
+    adj: &FlatAdj,
+    index: &FingerIndex,
+    entry: u32,
+    q: &[f32],
+    ef: usize,
+    filter: &F,
+    scorer: &mut S,
+    ctx: &mut SearchContext,
+) -> Vec<Neighbor> {
+    ctx.begin(n_rows);
+    let mut block = std::mem::take(&mut ctx.block);
+    let mut slots = std::mem::take(&mut ctx.slots);
+
+    let qs = QueryState::new(index, q);
+    ctx.visited.insert(entry);
+    let d0 = scorer.dist(entry as usize);
+    if ctx.stats_enabled {
+        ctx.stats.record_approx();
+    }
+    ctx.cands.push(MinNeighbor(Neighbor { dist: d0, id: entry }));
+    if filter.emits(entry) {
+        ctx.top.push(Neighbor { dist: d0, id: entry });
+    }
+
+    while let Some(MinNeighbor(cur)) = ctx.cands.pop() {
+        let mut ub = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
+        if cur.dist > ub && ctx.top.len() >= ef {
+            break;
+        }
+        if ctx.stats_enabled {
+            ctx.stats.hops += 1;
+        }
+        let mut qc: Option<QueryCenter> = None;
+
+        block.clear();
+        slots.clear();
+        for (j, &nb) in adj.neighbors(cur.id).iter().enumerate() {
+            if ctx.visited.insert(nb) {
+                block.push(nb);
+                slots.push(adj.edge_slot(cur.id, j));
+            }
+        }
+
+        for (i, &nb) in block.iter().enumerate() {
+            let full = ctx.top.len() >= ef;
+            if full {
+                let qc = qc.get_or_insert_with(|| QueryCenter::new(index, &qs, cur.id, cur.dist));
+                let approx = approx_dist_sq(index, qc, slots[i]);
+                if ctx.stats_enabled {
+                    ctx.stats.record_approx();
+                }
+                if approx > ub {
+                    continue; // screened out before any code-row read
+                }
+            }
+            let d = scorer.dist(nb as usize);
+            if ctx.stats_enabled {
+                ctx.stats.record_approx();
+            }
+            if !full || d < ub {
+                ctx.cands.push(MinNeighbor(Neighbor { dist: d, id: nb }));
+                if filter.emits(nb) {
+                    ctx.top.push(Neighbor { dist: d, id: nb });
+                    if ctx.top.len() > ef {
+                        ctx.top.pop();
+                    }
+                    ub = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
+                }
+            }
+        }
+    }
+
     ctx.block = block;
     ctx.slots = slots;
     ctx.drain_top()

@@ -288,6 +288,109 @@ pub fn beam_search_filtered<F: LiveFilter + ?Sized>(
     ctx.drain_top()
 }
 
+/// Per-query approximate scorer the quantized beam search traverses on:
+/// one call per candidate row, returning a distance *surrogate* that is
+/// monotone-comparable across rows (SQ8 rescaled integer L2, PQ ADC
+/// lookups). Implementations hold their own per-query state (encoded
+/// query codes / ADC table), built once before the beam starts.
+pub trait ApproxScorer {
+    fn dist(&mut self, row: usize) -> f32;
+}
+
+/// Quantized variant of [`beam_search_filtered`]: the beam is driven by
+/// [`ApproxScorer`] distances (counted as `approx_calls`), full-precision
+/// rows are never touched in the loop. Admission logic is byte-identical
+/// to the exact core — same heaps, same upper-bound refresh, same
+/// tie-break through [`Neighbor`] total order — so for a fixed scorer the
+/// result stream is deterministic across kernels and thread counts.
+/// Callers restore exact ordering with [`rerank_exact`] over the full
+/// returned pool.
+#[allow(clippy::too_many_arguments)]
+pub fn beam_search_approx_filtered<F: LiveFilter + ?Sized, S: ApproxScorer>(
+    n_rows: usize,
+    adj: &FlatAdj,
+    entry: u32,
+    ef: usize,
+    filter: &F,
+    scorer: &mut S,
+    ctx: &mut SearchContext,
+) -> Vec<Neighbor> {
+    ctx.begin(n_rows);
+    let mut block = std::mem::take(&mut ctx.block);
+
+    ctx.visited.insert(entry);
+    let d0 = scorer.dist(entry as usize);
+    if ctx.stats_enabled {
+        ctx.stats.record_approx();
+    }
+    ctx.cands.push(MinNeighbor(Neighbor { dist: d0, id: entry }));
+    if filter.emits(entry) {
+        ctx.top.push(Neighbor { dist: d0, id: entry });
+    }
+
+    while let Some(MinNeighbor(cur)) = ctx.cands.pop() {
+        let mut ub = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
+        if cur.dist > ub && ctx.top.len() >= ef {
+            break;
+        }
+        if ctx.stats_enabled {
+            ctx.stats.hops += 1;
+        }
+
+        block.clear();
+        for &nb in adj.neighbors(cur.id) {
+            if ctx.visited.insert(nb) {
+                block.push(nb);
+            }
+        }
+
+        for &nb in &block[..] {
+            let d = scorer.dist(nb as usize);
+            if ctx.stats_enabled {
+                ctx.stats.record_approx();
+            }
+            let full = ctx.top.len() >= ef;
+            if !full || d < ub {
+                ctx.cands.push(MinNeighbor(Neighbor { dist: d, id: nb }));
+                if filter.emits(nb) {
+                    ctx.top.push(Neighbor { dist: d, id: nb });
+                    if ctx.top.len() > ef {
+                        ctx.top.pop();
+                    }
+                    ub = ctx.top.peek().map(|n| n.dist).unwrap_or(f32::INFINITY);
+                }
+            }
+        }
+    }
+
+    ctx.block = block;
+    ctx.drain_top()
+}
+
+/// The re-rank half of the quantized-traversal contract: rescore *every*
+/// candidate the approximate beam returned with the exact f32 kernel
+/// (counted as `dist_calls`), then restore [`Neighbor`] total order. The
+/// pool is re-ranked in full — never pre-truncated on approximate
+/// distances — so a candidate mis-ranked by quantization can still win;
+/// callers truncate to `k` afterwards. `qp` must be padded to the store
+/// stride (see `VectorStore::pad_query`).
+pub fn rerank_exact(
+    store: &VectorStore,
+    qp: &[f32],
+    cands: &mut Vec<Neighbor>,
+    batched: bool,
+    ctx: &mut SearchContext,
+) {
+    let exact: fn(&[f32], &[f32]) -> f32 = if batched { l2_sq } else { l2_sq_scalar };
+    for nb in cands.iter_mut() {
+        nb.dist = exact(qp, store.row(nb.id as usize));
+    }
+    if ctx.stats_enabled {
+        ctx.stats.dist_calls += cands.len() as u64;
+    }
+    cands.sort();
+}
+
 /// Greedy best-first search (Algorithm 1) over one adjacency layer.
 /// Returns up to `ef` nearest (ascending). `entry` must be a valid node.
 pub fn beam_search(
@@ -608,6 +711,59 @@ mod tests {
         assert_eq!(s.dist_calls, 1);
         assert_eq!(s.wasted, 1);
         assert_eq!(s.per_hop, vec![(1, 1)]);
+    }
+
+    /// With a scorer that *is* the exact kernel, the approx core must
+    /// reproduce the exact core's stream bit-for-bit (same admission
+    /// logic), and `rerank_exact` must be a no-op on the ordering.
+    #[test]
+    fn approx_core_with_exact_scorer_matches_exact_core() {
+        struct ExactShim<'a> {
+            store: &'a VectorStore,
+            qp: Vec<f32>,
+        }
+        impl ApproxScorer for ExactShim<'_> {
+            fn dist(&mut self, row: usize) -> f32 {
+                l2_sq(&self.qp, self.store.row(row))
+            }
+        }
+        let mut rng = Pcg32::new(21);
+        let n = 150;
+        let dim = 9;
+        let mut data = Matrix::zeros(0, 0);
+        for _ in 0..n {
+            let row: Vec<f32> = (0..dim).map(|_| rng.next_gaussian()).collect();
+            data.push_row(&row);
+        }
+        let store = store_of(&data);
+        let mut adj = FlatAdj::new(n, 7);
+        for u in 0..n as u32 {
+            for k in 1..=7u32 {
+                adj.push(u, (u * 11 + k * 5) % n as u32);
+            }
+        }
+        let mut live = LiveIds::fresh(n);
+        live.kill_row(3);
+        let mut ctx = SearchContext::new().with_stats();
+        for qi in 0..4 {
+            let q: Vec<f32> = (0..dim).map(|_| rng.next_gaussian()).collect();
+            let mut qp = Vec::new();
+            store.pad_query(&q, &mut qp);
+            for ef in [4usize, 20] {
+                let want = beam_search_filtered(&store, &adj, 0, &q, ef, &live, true, &mut ctx);
+                ctx.take_stats();
+                let mut shim = ExactShim { store: &store, qp: qp.clone() };
+                let mut got =
+                    beam_search_approx_filtered(n, &adj, 0, ef, &live, &mut shim, &mut ctx);
+                let st = ctx.take_stats();
+                assert!(st.approx_calls > 0 && st.dist_calls == 0, "q{qi} ef={ef}");
+                assert_eq!(got, want, "pre-rerank q{qi} ef={ef}");
+                rerank_exact(&store, &qp, &mut got, true, &mut ctx);
+                assert_eq!(got, want, "post-rerank q{qi} ef={ef}");
+                let st2 = ctx.take_stats();
+                assert_eq!(st2.dist_calls, want.len() as u64, "rerank counts exact calls");
+            }
+        }
     }
 
     #[test]

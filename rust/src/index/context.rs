@@ -134,6 +134,11 @@ pub struct SearchContext {
     pub slots: Vec<usize>,
     /// Distances matching `block` entry-for-entry.
     pub dists: Vec<f32>,
+    /// Quantized-traversal scratch: SQ8-encoded (and lane-padded) query
+    /// codes, rebuilt once per search when the index has an SQ8 tier.
+    pub qcodes: Vec<u8>,
+    /// Quantized-traversal scratch: PQ ADC table for the current query.
+    pub qtable: Vec<f32>,
     /// Accumulated instrumentation; only written when `stats_enabled`.
     pub stats: SearchStats,
     /// Toggle for stats recording (off = zero bookkeeping on the hot path).
@@ -152,6 +157,8 @@ impl SearchContext {
             block: Vec::new(),
             slots: Vec::new(),
             dists: Vec::new(),
+            qcodes: Vec::new(),
+            qtable: Vec::new(),
             stats: SearchStats::default(),
             stats_enabled: false,
         }

@@ -28,15 +28,19 @@ use crate::data::io::BinWriter;
 use crate::data::persist;
 use crate::finger::construct::{FingerIndex, FingerParams};
 use crate::finger::search::{search_hnsw_with_index, FingerHnsw};
+use crate::finger::search::finger_beam_search_approx_filtered;
 use crate::graph::bruteforce::{scan, scan_live};
 use crate::graph::hnsw::{Hnsw, HnswParams};
 use crate::graph::nndescent::{NnDescent, NnDescentParams};
-use crate::graph::search::Neighbor;
+use crate::graph::search::{
+    beam_search_approx_filtered, greedy_descent, rerank_exact, AllLive, LiveFilter, Neighbor,
+};
 use crate::graph::vamana::{Vamana, VamanaParams};
 use crate::index::context::{SearchContext, SearchParams};
 use crate::index::mutable::{LiveIds, MutableAnnIndex, MutateError, DEFAULT_COMPACT_THRESHOLD};
 use crate::index::AnnIndex;
 use crate::quant::ivfpq::{IvfPq, IvfPqParams};
+use crate::quant::sq8::{Precision, QuantTier};
 
 /// Rebuild a matrix from the live rows named by `keep`, in order (shared
 /// by every family's compaction, including the sharded parent's).
@@ -49,6 +53,71 @@ pub(crate) fn gather_rows(data: &Matrix, keep: &[usize]) -> Arc<Matrix> {
 }
 
 type PayloadWriter<'a, 'b> = &'a mut BinWriter<&'b mut dyn io::Write>;
+
+/// Quantized traversal + exact re-rank, shared by the HNSW-shaped
+/// families. The upper layers are descended with exact f32 distances
+/// (they hold a vanishing fraction of the distance work), the base-layer
+/// beam runs entirely on the tier's approximate scorer — composed with
+/// the FINGER screen when `finger` is given — and the full candidate pool
+/// is then re-scored with the exact kernels and truncated to `k`, which
+/// restores f32 ordering of everything the approximate beam surfaced.
+/// `params.patience` is ignored in quantized mode (the approximate core
+/// has no early-termination arm).
+fn quant_graph_search<F: LiveFilter + ?Sized>(
+    tier: &QuantTier,
+    store: &VectorStore,
+    graph: &Hnsw,
+    finger: Option<&FingerIndex>,
+    q: &[f32],
+    params: &SearchParams,
+    filter: &F,
+    ctx: &mut SearchContext,
+) -> Vec<Neighbor> {
+    if store.rows() == 0 {
+        return Vec::new();
+    }
+    let mut cur = graph.entry;
+    for l in (1..=graph.max_level).rev() {
+        cur = greedy_descent(store, &graph.upper[l - 1], cur, q, ctx).id;
+    }
+    // The scorer borrows the pooled qcodes/qtable scratch; take the
+    // buffers out of the context so it can be handed to the core mutably.
+    let mut qcodes = std::mem::take(&mut ctx.qcodes);
+    let mut qtable = std::mem::take(&mut ctx.qtable);
+    let mut pool = {
+        let mut scorer = tier.scorer(q, &mut qcodes, &mut qtable);
+        match finger {
+            Some(findex) => finger_beam_search_approx_filtered(
+                store.rows(),
+                &graph.base,
+                findex,
+                cur,
+                q,
+                params.beam_width(),
+                filter,
+                &mut scorer,
+                ctx,
+            ),
+            None => beam_search_approx_filtered(
+                store.rows(),
+                &graph.base,
+                cur,
+                params.beam_width(),
+                filter,
+                &mut scorer,
+                ctx,
+            ),
+        }
+    };
+    ctx.qcodes = qcodes;
+    ctx.qtable = qtable;
+    let mut qp = std::mem::take(&mut ctx.qbuf);
+    store.pad_query(q, &mut qp);
+    rerank_exact(store, &qp, &mut pool, !params.scalar_kernels, ctx);
+    ctx.qbuf = qp;
+    pool.truncate(params.k);
+    pool
+}
 
 /// The [`MutableAnnIndex`] methods that are pure [`LiveIds`] bookkeeping,
 /// identical for every flat family (`insert`/`compact` stay hand-written
@@ -114,8 +183,28 @@ pub fn build_all_families(data: Arc<Matrix>) -> Vec<Box<dyn AnnIndex>> {
             NnDescentParams::default(),
         )),
         Box::new(IvfPqIndex::build(
-            data,
+            Arc::clone(&data),
             IvfPqParams { n_list: 16, ..Default::default() },
+        )),
+        // Quantized-traversal variants (appended at the end so the tag
+        // order of the first six families — and every fixture that pins
+        // it — is unchanged).
+        Box::new(BruteForce::with_precision(Arc::clone(&data), Precision::Sq8)),
+        Box::new(HnswIndex::build_with_precision(
+            Arc::clone(&data),
+            HnswParams { m: 12, ef_construction: 80, ..Default::default() },
+            Precision::Sq8,
+        )),
+        Box::new(HnswIndex::build_with_precision(
+            Arc::clone(&data),
+            HnswParams { m: 12, ef_construction: 80, ..Default::default() },
+            Precision::Pq,
+        )),
+        Box::new(FingerHnswIndex::build_with_precision(
+            data,
+            HnswParams { m: 12, ef_construction: 80, ..Default::default() },
+            FingerParams { rank: 8, ..Default::default() },
+            Precision::Sq8,
         )),
     ]
 }
@@ -129,13 +218,75 @@ pub struct BruteForce {
     store: VectorStore,
     live: LiveIds,
     compact_threshold: f64,
+    quant: Option<QuantTier>,
 }
 
 impl BruteForce {
     pub fn new(data: Arc<Matrix>) -> BruteForce {
         let live = LiveIds::fresh(data.rows());
         let store = VectorStore::from_matrix(&data);
-        BruteForce { data, store, live, compact_threshold: DEFAULT_COMPACT_THRESHOLD }
+        BruteForce { data, store, live, compact_threshold: DEFAULT_COMPACT_THRESHOLD, quant: None }
+    }
+
+    /// Build with a quantized traversal tier: the scan scores the codes,
+    /// a shortlist of `rerank_width()` survivors is re-ranked exactly.
+    pub fn with_precision(data: Arc<Matrix>, precision: Precision) -> BruteForce {
+        let mut bf = BruteForce::new(data);
+        bf.quant = QuantTier::build(precision, &bf.data);
+        bf
+    }
+
+    /// Attach a loaded quantized tier (the v6 loader's entry).
+    pub fn with_quant(mut self, quant: Option<QuantTier>) -> BruteForce {
+        if let Some(t) = &quant {
+            assert_eq!(t.rows(), self.data.rows(), "quant tier must cover the rows");
+        }
+        self.quant = quant;
+        self
+    }
+
+    pub fn quant(&self) -> Option<&QuantTier> {
+        self.quant.as_ref()
+    }
+
+    /// Approximate scan over the quantized tier + exact re-rank of the
+    /// shortlist. Ids in the pool are rows until the final remap.
+    fn scan_quant(
+        &self,
+        tier: &QuantTier,
+        q: &[f32],
+        params: &SearchParams,
+        ctx: &mut SearchContext,
+    ) -> Vec<Neighbor> {
+        let identity = self.live.is_identity();
+        let mut qcodes = std::mem::take(&mut ctx.qcodes);
+        let mut qtable = std::mem::take(&mut ctx.qtable);
+        let mut pool: Vec<Neighbor> = Vec::with_capacity(self.data.rows());
+        {
+            let mut scorer = tier.scorer(q, &mut qcodes, &mut qtable);
+            for row in 0..self.data.rows() {
+                if !identity && self.live.is_dead_row(row) {
+                    continue;
+                }
+                pool.push(Neighbor { dist: scorer.dist(row), id: row as u32 });
+            }
+        }
+        ctx.qcodes = qcodes;
+        ctx.qtable = qtable;
+        if ctx.stats_enabled {
+            ctx.stats.approx_calls += pool.len() as u64;
+        }
+        pool.sort();
+        pool.truncate(params.rerank_width().max(params.beam_width()));
+        let mut qp = std::mem::take(&mut ctx.qbuf);
+        self.store.pad_query(q, &mut qp);
+        rerank_exact(&self.store, &qp, &mut pool, !params.scalar_kernels, ctx);
+        ctx.qbuf = qp;
+        pool.truncate(params.k);
+        if !identity {
+            self.live.remap_rows_to_external(&mut pool);
+        }
+        pool
     }
 
     /// Restore persisted mutation state (the v5 loader's entry).
@@ -156,7 +307,12 @@ impl BruteForce {
 
 impl AnnIndex for BruteForce {
     fn name(&self) -> &'static str {
-        "bruteforce"
+        match self.quant.as_ref().map(|t| t.precision()) {
+            None => "bruteforce",
+            Some(Precision::Sq8) => "bruteforce-sq8",
+            Some(Precision::Pq) => "bruteforce-pq",
+            Some(Precision::F32) => unreachable!("F32 never builds a tier"),
+        }
     }
 
     fn dim(&self) -> usize {
@@ -172,10 +328,13 @@ impl AnnIndex for BruteForce {
     }
 
     fn nbytes(&self) -> usize {
-        0
+        self.quant.as_ref().map_or(0, |t| t.nbytes())
     }
 
     fn search(&self, q: &[f32], params: &SearchParams, ctx: &mut SearchContext) -> Vec<Neighbor> {
+        if let Some(tier) = &self.quant {
+            return self.scan_quant(tier, q, params, ctx);
+        }
         if self.live.is_identity() {
             if ctx.stats_enabled {
                 ctx.stats.dist_calls += self.data.rows() as u64;
@@ -201,7 +360,8 @@ impl AnnIndex for BruteForce {
     }
 
     fn save_payload(&self, w: PayloadWriter) -> io::Result<()> {
-        self.live.save(w) // nothing else beyond the data matrix
+        persist::save_quant(w, self.quant.as_ref())?; // quant before live: live stays at tail
+        self.live.save(w)
     }
 }
 
@@ -212,6 +372,9 @@ impl MutableAnnIndex for BruteForce {
         }
         Arc::make_mut(&mut self.data).push_row(v);
         self.store.push_row(v);
+        if let Some(t) = &mut self.quant {
+            t.push_row(v); // frozen codec/codebooks
+        }
         Ok(self.live.alloc())
     }
 
@@ -219,8 +382,12 @@ impl MutableAnnIndex for BruteForce {
         if !self.live.should_compact(self.compact_threshold) {
             return Ok(false);
         }
-        self.data = gather_rows(&self.data, &self.live.compact_plan());
+        let plan = self.live.compact_plan();
+        self.data = gather_rows(&self.data, &plan);
         self.store = VectorStore::from_matrix(&self.data);
+        if let Some(t) = &mut self.quant {
+            t.gather_rows(&plan); // codes gathered verbatim, codec frozen
+        }
         self.live.apply_compact();
         Ok(true)
     }
@@ -239,6 +406,7 @@ pub struct HnswIndex {
     store: VectorStore,
     live: LiveIds,
     compact_threshold: f64,
+    quant: Option<QuantTier>,
 }
 
 impl HnswIndex {
@@ -246,13 +414,40 @@ impl HnswIndex {
         let store = VectorStore::from_matrix(&data);
         let graph = Hnsw::build_with_store(&store, params);
         let live = LiveIds::fresh(data.rows());
-        HnswIndex { data, graph, store, live, compact_threshold: DEFAULT_COMPACT_THRESHOLD }
+        HnswIndex { data, graph, store, live, compact_threshold: DEFAULT_COMPACT_THRESHOLD, quant: None }
+    }
+
+    /// Build with a quantized traversal tier over the same graph: the
+    /// base-layer beam scores codes, the final pool re-ranks exactly.
+    /// The graph itself is identical to the F32 build (construction stays
+    /// full-precision), so precision is purely a search-time trade.
+    pub fn build_with_precision(
+        data: Arc<Matrix>,
+        params: HnswParams,
+        precision: Precision,
+    ) -> HnswIndex {
+        let mut ix = HnswIndex::build(data, params);
+        ix.quant = QuantTier::build(precision, &ix.data);
+        ix
     }
 
     pub fn from_parts(data: Arc<Matrix>, graph: Hnsw) -> HnswIndex {
         let store = VectorStore::from_matrix(&data);
         let live = LiveIds::fresh(data.rows());
-        HnswIndex { data, graph, store, live, compact_threshold: DEFAULT_COMPACT_THRESHOLD }
+        HnswIndex { data, graph, store, live, compact_threshold: DEFAULT_COMPACT_THRESHOLD, quant: None }
+    }
+
+    /// Attach a loaded quantized tier (the v6 loader's entry).
+    pub fn with_quant(mut self, quant: Option<QuantTier>) -> HnswIndex {
+        if let Some(t) = &quant {
+            assert_eq!(t.rows(), self.data.rows(), "quant tier must cover the rows");
+        }
+        self.quant = quant;
+        self
+    }
+
+    pub fn quant(&self) -> Option<&QuantTier> {
+        self.quant.as_ref()
     }
 
     /// Restore persisted mutation state (the v5 loader's entry).
@@ -275,7 +470,12 @@ impl HnswIndex {
 
 impl AnnIndex for HnswIndex {
     fn name(&self) -> &'static str {
-        "hnsw"
+        match self.quant.as_ref().map(|t| t.precision()) {
+            None => "hnsw",
+            Some(Precision::Sq8) => "hnsw-sq8",
+            Some(Precision::Pq) => "hnsw-pq",
+            Some(Precision::F32) => unreachable!("F32 never builds a tier"),
+        }
     }
 
     fn dim(&self) -> usize {
@@ -291,10 +491,22 @@ impl AnnIndex for HnswIndex {
     }
 
     fn nbytes(&self) -> usize {
-        self.graph.nbytes()
+        self.graph.nbytes() + self.quant.as_ref().map_or(0, |t| t.nbytes())
     }
 
     fn search(&self, q: &[f32], params: &SearchParams, ctx: &mut SearchContext) -> Vec<Neighbor> {
+        if let Some(tier) = &self.quant {
+            let identity = self.live.is_identity();
+            let mut res = if !identity && self.live.any_dead() {
+                quant_graph_search(tier, &self.store, &self.graph, None, q, params, &self.live, ctx)
+            } else {
+                quant_graph_search(tier, &self.store, &self.graph, None, q, params, &AllLive, ctx)
+            };
+            if !identity {
+                self.live.remap_rows_to_external(&mut res);
+            }
+            return res;
+        }
         if self.live.is_identity() {
             return self.graph.search(&self.store, q, params, ctx);
         }
@@ -321,6 +533,7 @@ impl AnnIndex for HnswIndex {
 
     fn save_payload(&self, w: PayloadWriter) -> io::Result<()> {
         persist::save_hnsw(w, &self.graph)?;
+        persist::save_quant(w, self.quant.as_ref())?; // quant before live: live stays at tail
         self.live.save(w)
     }
 }
@@ -333,6 +546,9 @@ impl MutableAnnIndex for HnswIndex {
         let row = self.data.rows() as u32;
         Arc::make_mut(&mut self.data).push_row(v);
         self.store.push_row(v);
+        if let Some(t) = &mut self.quant {
+            t.push_row(v); // frozen codec/codebooks
+        }
         let id = self.live.alloc();
         self.graph.insert_node(&self.store, row, ctx);
         Ok(id)
@@ -344,9 +560,13 @@ impl MutableAnnIndex for HnswIndex {
         if !self.live.should_compact(self.compact_threshold) || self.live.live_len() == 0 {
             return Ok(false);
         }
-        let data = gather_rows(&self.data, &self.live.compact_plan());
+        let plan = self.live.compact_plan();
+        let data = gather_rows(&self.data, &plan);
         self.store = VectorStore::from_matrix(&data);
         self.graph = Hnsw::build_with_store(&self.store, self.graph.params.clone());
+        if let Some(t) = &mut self.quant {
+            t.gather_rows(&plan); // codes gathered verbatim, codec frozen
+        }
         self.data = data;
         self.live.apply_compact();
         Ok(true)
@@ -366,6 +586,7 @@ pub struct FingerHnswIndex {
     store: VectorStore,
     live: LiveIds,
     compact_threshold: f64,
+    quant: Option<QuantTier>,
 }
 
 impl FingerHnswIndex {
@@ -377,13 +598,54 @@ impl FingerHnswIndex {
         let store = VectorStore::from_matrix(&data);
         let inner = FingerHnsw::build_with_store(&data, &store, hnsw_params, finger_params);
         let live = LiveIds::fresh(data.rows());
-        FingerHnswIndex { data, inner, store, live, compact_threshold: DEFAULT_COMPACT_THRESHOLD }
+        FingerHnswIndex {
+            data,
+            inner,
+            store,
+            live,
+            compact_threshold: DEFAULT_COMPACT_THRESHOLD,
+            quant: None,
+        }
+    }
+
+    /// Build with a quantized traversal tier composed with the FINGER
+    /// screen: the screen prunes candidates with the rank-r estimate,
+    /// survivors are scored on the codes, the pool re-ranks exactly.
+    pub fn build_with_precision(
+        data: Arc<Matrix>,
+        hnsw_params: HnswParams,
+        finger_params: FingerParams,
+        precision: Precision,
+    ) -> FingerHnswIndex {
+        let mut ix = FingerHnswIndex::build(data, hnsw_params, finger_params);
+        ix.quant = QuantTier::build(precision, &ix.data);
+        ix
     }
 
     pub fn from_parts(data: Arc<Matrix>, inner: FingerHnsw) -> FingerHnswIndex {
         let store = VectorStore::from_matrix(&data);
         let live = LiveIds::fresh(data.rows());
-        FingerHnswIndex { data, inner, store, live, compact_threshold: DEFAULT_COMPACT_THRESHOLD }
+        FingerHnswIndex {
+            data,
+            inner,
+            store,
+            live,
+            compact_threshold: DEFAULT_COMPACT_THRESHOLD,
+            quant: None,
+        }
+    }
+
+    /// Attach a loaded quantized tier (the v6 loader's entry).
+    pub fn with_quant(mut self, quant: Option<QuantTier>) -> FingerHnswIndex {
+        if let Some(t) = &quant {
+            assert_eq!(t.rows(), self.data.rows(), "quant tier must cover the rows");
+        }
+        self.quant = quant;
+        self
+    }
+
+    pub fn quant(&self) -> Option<&QuantTier> {
+        self.quant.as_ref()
     }
 
     /// Restore persisted mutation state (the v5 loader's entry).
@@ -406,7 +668,12 @@ impl FingerHnswIndex {
 
 impl AnnIndex for FingerHnswIndex {
     fn name(&self) -> &'static str {
-        "hnsw-finger"
+        match self.quant.as_ref().map(|t| t.precision()) {
+            None => "hnsw-finger",
+            Some(Precision::Sq8) => "hnsw-finger-sq8",
+            Some(Precision::Pq) => "hnsw-finger-pq",
+            Some(Precision::F32) => unreachable!("F32 never builds a tier"),
+        }
     }
 
     fn dim(&self) -> usize {
@@ -422,7 +689,7 @@ impl AnnIndex for FingerHnswIndex {
     }
 
     fn nbytes(&self) -> usize {
-        self.inner.nbytes()
+        self.inner.nbytes() + self.quant.as_ref().map_or(0, |t| t.nbytes())
     }
 
     fn approx_rank(&self) -> usize {
@@ -430,6 +697,20 @@ impl AnnIndex for FingerHnswIndex {
     }
 
     fn search(&self, q: &[f32], params: &SearchParams, ctx: &mut SearchContext) -> Vec<Neighbor> {
+        if let Some(tier) = &self.quant {
+            let identity = self.live.is_identity();
+            let graph = &self.inner.hnsw;
+            let findex = Some(&self.inner.index);
+            let mut res = if !identity && self.live.any_dead() {
+                quant_graph_search(tier, &self.store, graph, findex, q, params, &self.live, ctx)
+            } else {
+                quant_graph_search(tier, &self.store, graph, findex, q, params, &AllLive, ctx)
+            };
+            if !identity {
+                self.live.remap_rows_to_external(&mut res);
+            }
+            return res;
+        }
         if self.live.is_identity() {
             return self.inner.search(&self.store, q, params, ctx);
         }
@@ -457,6 +738,7 @@ impl AnnIndex for FingerHnswIndex {
     fn save_payload(&self, w: PayloadWriter) -> io::Result<()> {
         persist::save_hnsw(w, &self.inner.hnsw)?;
         persist::save_finger(w, &self.inner.index)?;
+        persist::save_quant(w, self.quant.as_ref())?; // quant before live: live stays at tail
         self.live.save(w)
     }
 }
@@ -469,6 +751,9 @@ impl MutableAnnIndex for FingerHnswIndex {
         let row = self.data.rows() as u32;
         Arc::make_mut(&mut self.data).push_row(v);
         self.store.push_row(v);
+        if let Some(t) = &mut self.quant {
+            t.push_row(v); // frozen codec/codebooks
+        }
         let id = self.live.alloc();
         let touched = self.inner.hnsw.insert_node(&self.store, row, ctx);
         self.inner
@@ -486,14 +771,20 @@ impl MutableAnnIndex for FingerHnswIndex {
         if !self.live.should_compact(self.compact_threshold) || self.live.live_len() == 0 {
             return Ok(false);
         }
-        let data = gather_rows(&self.data, &self.live.compact_plan());
+        let plan = self.live.compact_plan();
+        let data = gather_rows(&self.data, &plan);
         let hnsw_params = self.inner.hnsw.params.clone();
         let finger_params = self.inner.index.params.clone();
         // Full retrain: fresh graph + fresh FINGER residual bases fit to
-        // the live distribution.
+        // the live distribution. The quantized tier is the exception —
+        // its codec stays frozen and the code rows are gathered verbatim,
+        // so WAL replay reproduces it byte-for-byte.
         self.store = VectorStore::from_matrix(&data);
         self.inner =
             FingerHnsw::build_with_store(&data, &self.store, hnsw_params, finger_params);
+        if let Some(t) = &mut self.quant {
+            t.gather_rows(&plan);
+        }
         self.data = data;
         self.live.apply_compact();
         Ok(true)

@@ -17,6 +17,13 @@
 //! | `nndescent`     | NN-descent KNN graph           | `graph::nndescent`|
 //! | `ivfpq`         | IVF-PQ + exact re-rank         | `quant::ivfpq`    |
 //! | `sharded-*`     | scatter-gather over any family | `index::sharded`  |
+//! | `*-sq8`, `*-pq` | quantized traversal + exact re-rank over the base family | `quant::sq8` |
+//!
+//! The `-sq8`/`-pq` variants (e.g. `hnsw-sq8`, `hnsw-finger-sq8`) are the
+//! same graph with a quantized sibling of the vector store: the beam
+//! traverses on approximate distances and the final pool re-ranks with
+//! exact f32 kernels (see [`crate::quant::sq8`]). Select at build time
+//! with [`crate::quant::Precision`] (CLI: `--precision sq8|pq`).
 
 pub mod context;
 pub mod impls;

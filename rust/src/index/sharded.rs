@@ -210,6 +210,12 @@ fn sharded_label(inner: &str) -> &'static str {
         "vamana" => "sharded-vamana",
         "nndescent" => "sharded-nndescent",
         "ivfpq" => "sharded-ivfpq",
+        "bruteforce-sq8" => "sharded-bruteforce-sq8",
+        "bruteforce-pq" => "sharded-bruteforce-pq",
+        "hnsw-sq8" => "sharded-hnsw-sq8",
+        "hnsw-pq" => "sharded-hnsw-pq",
+        "hnsw-finger-sq8" => "sharded-hnsw-finger-sq8",
+        "hnsw-finger-pq" => "sharded-hnsw-finger-pq",
         _ => "sharded",
     }
 }
@@ -682,6 +688,7 @@ pub fn build_all_families_sharded(data: Arc<Matrix>, n_shards: usize) -> Vec<Box
         BruteForce, FingerHnswIndex, HnswIndex, IvfPqIndex, NnDescentIndex, VamanaIndex,
     };
     use crate::quant::ivfpq::IvfPqParams;
+    use crate::quant::sq8::Precision;
 
     let spec = ShardSpec { n_shards, ..Default::default() };
     vec![
@@ -707,10 +714,38 @@ pub fn build_all_families_sharded(data: Arc<Matrix>, n_shards: usize) -> Vec<Box
         Box::new(ShardedIndex::build(Arc::clone(&data), &spec, |sub| -> Box<dyn AnnIndex> {
             Box::new(NnDescentIndex::build(sub, NnDescentParams::default()))
         })),
-        Box::new(ShardedIndex::build(data, &spec, |sub| -> Box<dyn AnnIndex> {
+        Box::new(ShardedIndex::build(Arc::clone(&data), &spec, |sub| -> Box<dyn AnnIndex> {
             Box::new(IvfPqIndex::build(
                 sub,
                 IvfPqParams { n_list: 8, ..Default::default() },
+            ))
+        })),
+        // Quantized-traversal variants, appended at the end to mirror the
+        // flat registry. Each shard trains its own codec/codebooks on its
+        // own rows (the tier is shard-local state like the graph).
+        Box::new(ShardedIndex::build(Arc::clone(&data), &spec, |sub| -> Box<dyn AnnIndex> {
+            Box::new(BruteForce::with_precision(sub, Precision::Sq8))
+        })),
+        Box::new(ShardedIndex::build(Arc::clone(&data), &spec, |sub| -> Box<dyn AnnIndex> {
+            Box::new(HnswIndex::build_with_precision(
+                sub,
+                HnswParams { m: 12, ef_construction: 80, ..Default::default() },
+                Precision::Sq8,
+            ))
+        })),
+        Box::new(ShardedIndex::build(Arc::clone(&data), &spec, |sub| -> Box<dyn AnnIndex> {
+            Box::new(HnswIndex::build_with_precision(
+                sub,
+                HnswParams { m: 12, ef_construction: 80, ..Default::default() },
+                Precision::Pq,
+            ))
+        })),
+        Box::new(ShardedIndex::build(data, &spec, |sub| -> Box<dyn AnnIndex> {
+            Box::new(FingerHnswIndex::build_with_precision(
+                sub,
+                HnswParams { m: 12, ef_construction: 80, ..Default::default() },
+                FingerParams { rank: 8, ..Default::default() },
+                Precision::Sq8,
             ))
         })),
     ]

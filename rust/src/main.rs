@@ -41,6 +41,7 @@ use finger_ann::index::{
     AnnIndex, SearchContext, SearchParams, ShardSpec, ShardStrategy, ShardedIndex,
 };
 use finger_ann::quant::ivfpq::IvfPqParams;
+use finger_ann::quant::Precision;
 use finger_ann::repl::hub::ReplHub;
 use finger_ann::repl::replica::{Replica, ReplicaOpts};
 use finger_ann::repl::{AckLevel, ReadPool};
@@ -103,6 +104,8 @@ fn help() {
          replication (serve): primary: --repl-listen ADDR [--ack-level none|one|all]\n\
          \u{20}                         [--repl-expect N] [--repl-ack-timeout-ms M]  (requires --wal-dir)\n\
          \u{20}               replica: --replica-of ADDR [--wal-dir DIR]  (read-only; streams the primary's WAL)\n\
+         precision (build/search/serve): --precision f32|sq8|pq   (quantized in-loop distances\n\
+         \u{20}                         + exact re-rank; bruteforce/hnsw/finger only)\n\
          sharding (build/search/serve): --shards S [--shard-strategy round-robin|kmeans]\n\
          \u{20}                         [--min-shard-frac F]   (probe the nearest F·S shards, 0<F<=1)\n\
          build parallelism (build/search/serve): --threads N   (0 = FINGER_THREADS/auto;\n\
@@ -121,6 +124,16 @@ fn dataset_from_args(args: &Args) -> finger_ann::data::Dataset {
     spec.generate()
 }
 
+/// `--precision f32|sq8|pq` — which distance tier the beam search
+/// traverses on (quantized tiers re-rank the final pool exactly).
+fn precision_from_args(args: &Args) -> Precision {
+    let name = args.get("precision").unwrap_or("f32");
+    Precision::parse(name).unwrap_or_else(|| {
+        eprintln!("unknown precision '{name}' (f32|sq8|pq)");
+        std::process::exit(2);
+    })
+}
+
 /// Build any index family over `data` — the single construction path used
 /// by `build`, `search`, and `serve`. `threads` is the build parallelism
 /// for this index (0 = `FINGER_THREADS`/auto); the built index is
@@ -129,16 +142,28 @@ fn build_method(method: &str, data: Arc<Matrix>, args: &Args, threads: usize) ->
     let m = args.get_usize("M", 16);
     let efc = args.get_usize("efc", 120);
     let rank = args.get_usize("rank", 16);
+    let precision = precision_from_args(args);
+    if precision != Precision::F32
+        && !matches!(method, "bruteforce" | "hnsw" | "finger" | "hnsw-finger")
+    {
+        eprintln!(
+            "--precision {} only applies to bruteforce|hnsw|finger (got '{method}')",
+            precision.name()
+        );
+        std::process::exit(2);
+    }
     match method {
-        "bruteforce" => Box::new(BruteForce::new(data)),
-        "hnsw" => Box::new(HnswIndex::build(
+        "bruteforce" => Box::new(BruteForce::with_precision(data, precision)),
+        "hnsw" => Box::new(HnswIndex::build_with_precision(
             data,
             HnswParams { m, ef_construction: efc, threads, ..Default::default() },
+            precision,
         )),
-        "finger" | "hnsw-finger" => Box::new(FingerHnswIndex::build(
+        "finger" | "hnsw-finger" => Box::new(FingerHnswIndex::build_with_precision(
             data,
             HnswParams { m, ef_construction: efc, threads, ..Default::default() },
             FingerParams { rank, threads, ..Default::default() },
+            precision,
         )),
         "vamana" => Box::new(VamanaIndex::build(
             data,
@@ -280,14 +305,14 @@ fn search(args: &Args) {
 /// bundle (`--index path`, any family) or build `--method` in-process.
 fn build_or_load(args: &Args) -> Box<dyn AnnIndex> {
     if let Some(path) = args.get("index") {
-        // A prebuilt bundle carries its own shard layout and probe
-        // fraction; accepting build-time shard flags here would silently
-        // ignore them, so reject the combination outright.
-        for flag in ["shards", "shard-strategy", "min-shard-frac"] {
+        // A prebuilt bundle carries its own shard layout, probe
+        // fraction, and quantized tier; accepting build-time flags here
+        // would silently ignore them, so reject the combination outright.
+        for flag in ["shards", "shard-strategy", "min-shard-frac", "precision"] {
             if args.get(flag).is_some() {
                 eprintln!(
                     "--{flag} only applies when building (it is baked into the \
-                     bundle); rebuild with `finger build --shards ...` instead"
+                     bundle); rebuild with `finger build --{flag} ...` instead"
                 );
                 std::process::exit(2);
             }

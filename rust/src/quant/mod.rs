@@ -1,10 +1,13 @@
-//! Quantization baselines for Figure 7: k-means, Product Quantization
-//! with ADC, and IVF-PQ with exact re-ranking.
+//! Quantization plane: k-means, Product Quantization with ADC, IVF-PQ
+//! with exact re-ranking (the Figure 7 baselines), and the SQ8/PQ
+//! quantized traversal tier the beam-search cores run on.
 
 pub mod ivfpq;
 pub mod kmeans;
 pub mod pq;
+pub mod sq8;
 
 pub use ivfpq::{IvfPq, IvfPqParams};
 pub use kmeans::KMeans;
 pub use pq::{Pq, PqParams};
+pub use sq8::{Precision, QuantTier, Sq8Codec, TierScorer};

@@ -84,12 +84,38 @@ impl Pq {
         }
     }
 
+    /// Encode one vector with the *frozen* codebooks (length `n_sub`).
+    /// The online-insert path of the quantized tier: codebooks are never
+    /// retrained, so replay and compaction stay deterministic.
+    pub fn encode_row(&self, v: &[f32]) -> Vec<u8> {
+        self.ranges
+            .iter()
+            .enumerate()
+            .map(|(s, &(lo, hi))| self.books[s].assign(&v[lo..hi]) as u8)
+            .collect()
+    }
+
+    /// Append one pre-encoded row (pairs with [`Pq::encode_row`]).
+    pub fn push_codes(&mut self, codes: &[u8]) {
+        assert_eq!(codes.len(), self.ranges.len(), "code width mismatch");
+        self.codes.extend_from_slice(codes);
+        self.n += 1;
+    }
+
     /// Build the ADC table for a query: (n_sub × k) squared distances from
     /// each query sub-vector to each codeword.
     pub fn adc_table(&self, q: &[f32]) -> Vec<f32> {
+        let mut table = Vec::new();
+        self.adc_table_into(q, &mut table);
+        table
+    }
+
+    /// [`Pq::adc_table`] into a caller-pooled buffer (search hot path).
+    pub fn adc_table_into(&self, q: &[f32], table: &mut Vec<f32>) {
         let k = 1usize << self.params.nbits;
         let n_sub = self.ranges.len();
-        let mut table = vec![0.0f32; n_sub * k];
+        table.clear();
+        table.resize(n_sub * k, 0.0);
         for (s, &(lo, hi)) in self.ranges.iter().enumerate() {
             let sub = &q[lo..hi];
             let book = &self.books[s];
@@ -97,7 +123,6 @@ impl Pq {
                 table[s * k + c] = crate::core::distance::l2_sq(sub, book.centroids.row(c));
             }
         }
-        table
     }
 
     /// Approximate squared distance of encoded point `i` via the ADC table.

@@ -1,0 +1,425 @@
+//! SQ8 scalar quantization and the per-index quantized traversal tier.
+//!
+//! The beam-search cores can traverse on approximate distances instead of
+//! full-precision f32 rows (see `graph::search::beam_search_approx_filtered`):
+//! [`Sq8Codec`] maps each vector to one byte per dimension, [`Sq8Store`]
+//! (in `core::store`) holds the codes lane-padded and cache-aligned, and
+//! the runtime-dispatched u8 kernel scores 16 codes per instruction —
+//! 4x less bandwidth than the f32 rows that used to stream through the
+//! hot loop. An exact f32 re-rank of the final candidate pool restores
+//! ordering (`graph::search::rerank_exact`).
+//!
+//! ## Codec
+//!
+//! Per-dimension min/max with one **shared** step size:
+//!
+//! ```text
+//! delta = max_j (maxs[j] - mins[j]) / 255
+//! code[j] = round((x[j] - mins[j]) / delta) clamped to [0, 255]
+//! ```
+//!
+//! A shared `delta` (rather than per-dim steps) keeps the approximate
+//! distance a single rescale of the integer kernel output:
+//! `approx_l2 = delta² · Σ (code_a[j] - code_b[j])²` — no per-dim weights
+//! in the loop. All training arithmetic is plain f32 so the codec (and
+//! therefore every persisted byte) is identical across kernels and
+//! thread counts.
+//!
+//! ## Freeze discipline
+//!
+//! Codec parameters are trained **once at build** and never retrained:
+//! online inserts encode with the frozen codec, compaction gathers the
+//! surviving code rows verbatim. That keeps WAL replay and
+//! compact-vs-rebuild byte-identical, at the cost of inserts far outside
+//! the trained range clamping to the [0, 255] edge (they still re-rank
+//! exactly). `rust/tests/mutation_props.rs` pins the lockstep invariant:
+//! `codes(i) == encode(row(i))` for every live row at every step.
+
+use crate::core::distance::u8_l2_sq;
+use crate::core::matrix::Matrix;
+use crate::core::store::Sq8Store;
+use crate::graph::search::ApproxScorer;
+use crate::quant::pq::Pq;
+
+/// Which distance tier a family's beam search traverses on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// Full-precision f32 rows (the default; no quantized tier is built).
+    F32,
+    /// SQ8 codes drive the beam; exact f32 re-rank of the final pool.
+    Sq8,
+    /// PQ ADC-table lookups drive the beam; exact f32 re-rank.
+    Pq,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f32" | "full" => Some(Precision::F32),
+            "sq8" => Some(Precision::Sq8),
+            "pq" => Some(Precision::Pq),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Sq8 => "sq8",
+            Precision::Pq => "pq",
+        }
+    }
+
+    /// Stable on-disk tag (format v6 quant section).
+    pub fn tag(&self) -> u64 {
+        match self {
+            Precision::F32 => 0,
+            Precision::Sq8 => 1,
+            Precision::Pq => 2,
+        }
+    }
+
+    pub fn from_tag(t: u64) -> Option<Precision> {
+        match t {
+            0 => Some(Precision::F32),
+            1 => Some(Precision::Sq8),
+            2 => Some(Precision::Pq),
+            _ => None,
+        }
+    }
+}
+
+/// Per-dim min/max scalar quantizer with a shared step (see module docs).
+#[derive(Clone, Debug)]
+pub struct Sq8Codec {
+    pub mins: Vec<f32>,
+    pub maxs: Vec<f32>,
+    /// Shared step size; `delta²` rescales the integer kernel output.
+    pub delta: f32,
+}
+
+impl Sq8Codec {
+    /// Train on all rows of `data` (plain f32 arithmetic, deterministic).
+    /// NaN entries are ignored for range-finding; degenerate ranges (empty
+    /// data, constant or all-NaN columns) fall back to `delta = 1`.
+    pub fn train(data: &Matrix) -> Sq8Codec {
+        let dim = data.cols();
+        let mut mins = vec![f32::INFINITY; dim];
+        let mut maxs = vec![f32::NEG_INFINITY; dim];
+        for i in 0..data.rows() {
+            for (j, &v) in data.row(i).iter().enumerate() {
+                if v < mins[j] {
+                    mins[j] = v;
+                }
+                if v > maxs[j] {
+                    maxs[j] = v;
+                }
+            }
+        }
+        for j in 0..dim {
+            if !mins[j].is_finite() || !maxs[j].is_finite() {
+                mins[j] = 0.0;
+                maxs[j] = 0.0;
+            }
+        }
+        Sq8Codec::from_ranges(mins, maxs)
+    }
+
+    /// Rebuild the codec from persisted ranges; `delta` is re-derived the
+    /// same way `train` derives it, so save/load cannot drift (the saved
+    /// delta is still written and checked for belt-and-braces).
+    pub fn from_ranges(mins: Vec<f32>, maxs: Vec<f32>) -> Sq8Codec {
+        let mut span = 0.0f32;
+        for (lo, hi) in mins.iter().zip(&maxs) {
+            let s = hi - lo;
+            if s > span {
+                span = s;
+            }
+        }
+        let delta = if span > 0.0 { span / 255.0 } else { 1.0 };
+        Sq8Codec { mins, maxs, delta }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.mins.len()
+    }
+
+    /// Encode one vector into `out` (length = dim). Out-of-range values
+    /// clamp to the byte edges; NaN encodes as 0 (deterministically).
+    pub fn encode_into(&self, v: &[f32], out: &mut Vec<u8>) {
+        assert_eq!(v.len(), self.dim(), "encode dim mismatch");
+        out.clear();
+        for (j, &x) in v.iter().enumerate() {
+            let q = ((x - self.mins[j]) / self.delta).round().clamp(0.0, 255.0);
+            out.push(q as u8); // saturating cast; NaN -> 0
+        }
+    }
+
+    pub fn encode(&self, v: &[f32]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.dim());
+        self.encode_into(v, &mut out);
+        out
+    }
+
+    /// Scale factor from integer code distance to approximate squared L2.
+    #[inline]
+    pub fn dist_scale(&self) -> f32 {
+        self.delta * self.delta
+    }
+
+    /// Codec parameter bytes (mins + maxs + delta).
+    pub fn nbytes(&self) -> usize {
+        (self.mins.len() + self.maxs.len() + 1) * std::mem::size_of::<f32>()
+    }
+}
+
+/// The quantized sibling of an index's `VectorStore`, kept in row
+/// lockstep with it: row `i` of the tier encodes row `i` of the data.
+/// Built once per index when `Precision != F32`.
+pub enum QuantTier {
+    Sq8 { codec: Sq8Codec, store: Sq8Store },
+    Pq { pq: Pq },
+}
+
+impl QuantTier {
+    /// Build the tier for `precision` over `data` (`None` for F32).
+    pub fn build(precision: Precision, data: &Matrix) -> Option<QuantTier> {
+        match precision {
+            Precision::F32 => None,
+            Precision::Sq8 => {
+                let codec = Sq8Codec::train(data);
+                let mut store = Sq8Store::with_dims(data.rows(), data.cols());
+                let mut codes = Vec::with_capacity(data.cols());
+                for i in 0..data.rows() {
+                    codec.encode_into(data.row(i), &mut codes);
+                    store.push_row(&codes);
+                }
+                Some(QuantTier::Sq8 { codec, store })
+            }
+            Precision::Pq => Some(QuantTier::Pq {
+                pq: Pq::train(data, Default::default()),
+            }),
+        }
+    }
+
+    pub fn precision(&self) -> Precision {
+        match self {
+            QuantTier::Sq8 { .. } => Precision::Sq8,
+            QuantTier::Pq { .. } => Precision::Pq,
+        }
+    }
+
+    /// Number of encoded rows (must equal the f32 store's row count).
+    pub fn rows(&self) -> usize {
+        match self {
+            QuantTier::Sq8 { store, .. } => store.rows(),
+            QuantTier::Pq { pq } => pq.n,
+        }
+    }
+
+    /// Encode and append one row with the *frozen* codec/codebooks
+    /// (online-insert mirror of the f32 store's `push_row`).
+    pub fn push_row(&mut self, v: &[f32]) {
+        match self {
+            QuantTier::Sq8 { codec, store } => {
+                let codes = codec.encode(v);
+                store.push_row(&codes);
+            }
+            QuantTier::Pq { pq } => {
+                let codes = pq.encode_row(v);
+                pq.push_codes(&codes);
+            }
+        }
+    }
+
+    /// Compaction: gather surviving code rows in `keep` order (old row
+    /// indices), codec/codebooks frozen — no re-encode, so the compacted
+    /// tier is byte-identical to a replayed one.
+    pub fn gather_rows(&mut self, keep: &[usize]) {
+        match self {
+            QuantTier::Sq8 { store, .. } => {
+                let mut next = Sq8Store::with_dims(keep.len(), store.cols());
+                for &old in keep {
+                    next.push_row(store.row_logical(old));
+                }
+                *store = next;
+            }
+            QuantTier::Pq { pq } => {
+                let w = pq.ranges.len();
+                let mut codes = Vec::with_capacity(keep.len() * w);
+                for &old in keep {
+                    codes.extend_from_slice(&pq.codes[old * w..(old + 1) * w]);
+                }
+                pq.codes = codes;
+                pq.n = keep.len();
+            }
+        }
+    }
+
+    /// Resident bytes of the quantized tier (codes + codec parameters).
+    pub fn nbytes(&self) -> usize {
+        match self {
+            QuantTier::Sq8 { codec, store } => codec.nbytes() + store.nbytes(),
+            QuantTier::Pq { pq } => {
+                let book_bytes: usize = pq
+                    .books
+                    .iter()
+                    .map(|b| b.centroids.rows() * b.centroids.cols() * 4)
+                    .sum();
+                book_bytes + pq.codes.len()
+            }
+        }
+    }
+
+    /// Build the per-query scorer. `qcodes`/`qtable` are pooled scratch
+    /// buffers (see `SearchContext`) the scorer borrows for the query's
+    /// lifetime: SQ8 encodes + pads the query into `qcodes`, PQ builds
+    /// its ADC table into `qtable`.
+    pub fn scorer<'a>(
+        &'a self,
+        q: &[f32],
+        qcodes: &'a mut Vec<u8>,
+        qtable: &'a mut Vec<f32>,
+    ) -> TierScorer<'a> {
+        match self {
+            QuantTier::Sq8 { codec, store } => {
+                codec.encode_into(q, qcodes);
+                qcodes.resize(store.padded_cols(), 0);
+                TierScorer::Sq8 {
+                    store,
+                    scale: codec.dist_scale(),
+                    qcodes,
+                }
+            }
+            QuantTier::Pq { pq } => {
+                pq.adc_table_into(q, qtable);
+                TierScorer::Pq { pq, table: qtable }
+            }
+        }
+    }
+}
+
+/// Per-query [`ApproxScorer`] over a [`QuantTier`].
+pub enum TierScorer<'a> {
+    Sq8 {
+        store: &'a Sq8Store,
+        scale: f32,
+        qcodes: &'a [u8],
+    },
+    Pq { pq: &'a Pq, table: &'a [f32] },
+}
+
+impl ApproxScorer for TierScorer<'_> {
+    #[inline]
+    fn dist(&mut self, row: usize) -> f32 {
+        match self {
+            TierScorer::Sq8 { store, scale, qcodes } => {
+                *scale * u8_l2_sq(qcodes, store.row(row)) as f32
+            }
+            TierScorer::Pq { pq, table } => pq.adc_dist(table, row),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::distance::{l2_sq, Metric};
+    use crate::core::rng::Pcg32;
+    use crate::data::synth::tiny;
+
+    #[test]
+    fn precision_parse_name_tag_roundtrip() {
+        for p in [Precision::F32, Precision::Sq8, Precision::Pq] {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+            assert_eq!(Precision::from_tag(p.tag()), Some(p));
+        }
+        assert_eq!(Precision::parse("full"), Some(Precision::F32));
+        assert_eq!(Precision::parse("fp16"), None);
+        assert_eq!(Precision::from_tag(9), None);
+    }
+
+    #[test]
+    fn codes_cover_the_range_and_roundtrip_error_is_bounded() {
+        let ds = tiny(31, 300, 24, Metric::L2);
+        let codec = Sq8Codec::train(&ds.data);
+        assert!(codec.delta > 0.0);
+        for i in 0..ds.data.rows() {
+            let codes = codec.encode(ds.data.row(i));
+            for (j, (&c, &x)) in codes.iter().zip(ds.data.row(i)).enumerate() {
+                // Reconstruction within half a step.
+                let rec = codec.mins[j] + c as f32 * codec.delta;
+                assert!(
+                    (rec - x).abs() <= 0.5 * codec.delta + 1e-5,
+                    "row {i} dim {j}: rec={rec} x={x}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn approx_distance_correlates_with_exact() {
+        let ds = tiny(32, 400, 16, Metric::L2);
+        let tier = QuantTier::build(Precision::Sq8, &ds.data).unwrap();
+        let q = ds.queries.row(0);
+        let (mut qc, mut qt) = (Vec::new(), Vec::new());
+        let mut sc = tier.scorer(q, &mut qc, &mut qt);
+        let mut approx = Vec::new();
+        let mut exact = Vec::new();
+        for i in 0..ds.data.rows() {
+            approx.push(sc.dist(i));
+            exact.push(l2_sq(q, ds.data.row(i)));
+        }
+        let corr = crate::core::stats::pearson(&approx, &exact);
+        assert!(corr > 0.99, "SQ8 correlation = {corr}");
+    }
+
+    #[test]
+    fn degenerate_inputs_encode_deterministically() {
+        // Constant columns, NaN, and out-of-range inserts must all map to
+        // well-defined codes.
+        let m = Matrix::from_rows(&[vec![1.0, 5.0], vec![1.0, 5.0]]);
+        let codec = Sq8Codec::train(&m);
+        assert_eq!(codec.delta, 1.0, "constant data falls back to unit step");
+        assert_eq!(codec.encode(&[1.0, 5.0]), vec![0, 0]);
+        assert_eq!(codec.encode(&[f32::NAN, 1e9]), vec![0, 255]);
+        assert_eq!(codec.encode(&[-1e9, -1e9]), vec![0, 0]);
+        let empty = Sq8Codec::train(&Matrix::zeros(0, 3));
+        assert_eq!(empty.encode(&[0.5, -0.5, 0.0]), vec![1, 0, 0]);
+    }
+
+    #[test]
+    fn tier_insert_and_gather_stay_in_lockstep() {
+        let ds = tiny(33, 60, 8, Metric::L2);
+        let mut rng = Pcg32::new(7);
+        for p in [Precision::Sq8, Precision::Pq] {
+            let mut tier = QuantTier::build(p, &ds.data).unwrap();
+            let frozen = QuantTier::build(p, &ds.data).unwrap();
+            let mut rows: Vec<Vec<f32>> = (0..ds.data.rows()).map(|i| ds.data.row(i).to_vec()).collect();
+            for _ in 0..10 {
+                let v: Vec<f32> = (0..8).map(|_| rng.next_gaussian() * 2.0).collect();
+                tier.push_row(&v);
+                rows.push(v);
+            }
+            assert_eq!(tier.rows(), 70);
+            // Inserted rows used the frozen codec: encoding through the
+            // untouched tier gives the same codes.
+            let keep: Vec<usize> = (0..70).filter(|i| i % 3 != 0).collect();
+            tier.gather_rows(&keep);
+            assert_eq!(tier.rows(), keep.len());
+            let (mut qc, mut qt) = (Vec::new(), Vec::new());
+            let (mut qc2, mut qt2) = (Vec::new(), Vec::new());
+            for (new, &old) in keep.iter().enumerate() {
+                let mut a = tier.scorer(&rows[0], &mut qc, &mut qt);
+                let da = a.dist(new);
+                drop(a);
+                if old < 60 {
+                    let mut b = frozen.scorer(&rows[0], &mut qc2, &mut qt2);
+                    let db = b.dist(old);
+                    assert_eq!(da.to_bits(), db.to_bits(), "p={p:?} row {old}");
+                }
+            }
+        }
+    }
+}

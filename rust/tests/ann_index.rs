@@ -21,9 +21,11 @@ use finger_ann::index::{
     build_all_families, build_all_families_sharded, AnnIndex, MutateError, SearchContext,
     SearchParams,
 };
+use finger_ann::quant::Precision;
 
-/// All six flat families plus their sharded wrappers over one dataset —
-/// the single registry shared with the persistence-roundtrip suite.
+/// All ten flat families (six f32 + four quantized-tier variants) plus
+/// their sharded wrappers over one dataset — the single registry shared
+/// with the persistence-roundtrip suite.
 fn all_indexes(ds: &Dataset) -> Vec<Box<dyn AnnIndex>> {
     let mut v = build_all_families(Arc::clone(&ds.data));
     v.extend(build_all_families_sharded(Arc::clone(&ds.data), 3));
@@ -50,12 +52,20 @@ fn names_and_metadata_are_honest() {
             "vamana",
             "nndescent",
             "ivfpq",
+            "bruteforce-sq8",
+            "hnsw-sq8",
+            "hnsw-pq",
+            "hnsw-finger-sq8",
             "sharded-bruteforce",
             "sharded-hnsw",
             "sharded-hnsw-finger",
             "sharded-vamana",
             "sharded-nndescent",
             "sharded-ivfpq",
+            "sharded-bruteforce-sq8",
+            "sharded-hnsw-sq8",
+            "sharded-hnsw-pq",
+            "sharded-hnsw-finger-sq8",
         ]
     );
     for index in &indexes {
@@ -69,7 +79,7 @@ fn names_and_metadata_are_honest() {
         } else {
             assert!(index.nbytes() > 0, "{}", index.name());
         }
-        if index.name() == "hnsw-finger" || index.name() == "sharded-hnsw-finger" {
+        if index.name().contains("hnsw-finger") {
             assert_eq!(index.approx_rank(), 8, "{}", index.name());
         }
     }
@@ -153,8 +163,24 @@ fn stats_invariants_hold_for_every_family() {
             // Full-probe scatter over brute-force shards sums to one scan.
             assert_eq!(stats.dist_calls, index.len() as u64, "{name}");
         }
+        if name == "bruteforce-sq8" || name == "sharded-bruteforce-sq8" {
+            // Quantized scan scores every live row approximately, then
+            // re-ranks only a shortlist exactly (per shard, so the sharded
+            // sum can reach the full scan when shards fit the shortlist).
+            assert_eq!(stats.approx_calls, index.len() as u64, "{name}");
+            assert!(stats.dist_calls <= index.len() as u64, "{name}");
+        }
+        if name == "bruteforce-sq8" {
+            assert!(stats.dist_calls < index.len() as u64, "{name}: shortlist not truncated");
+        }
         if name == "hnsw-finger" || name == "ivfpq" || name == "sharded-ivfpq" {
             assert!(stats.approx_calls > 0, "{name}: approximate path unused");
+        }
+        if name.ends_with("-sq8") || name.ends_with("-pq") {
+            // Quantized traversal drives the beam (approx_calls) and the
+            // exact re-rank of the final pool records dist_calls.
+            assert!(stats.approx_calls > 0, "{name}: quantized loop unused");
+            assert!(stats.dist_calls > 0, "{name}: exact re-rank unused");
         }
         // Disabled stats must record nothing.
         ctx.stats_enabled = false;
@@ -203,9 +229,17 @@ fn mutation_lifecycle_conformance() {
         "bruteforce",
         "hnsw",
         "hnsw-finger",
+        "bruteforce-sq8",
+        "hnsw-sq8",
+        "hnsw-pq",
+        "hnsw-finger-sq8",
         "sharded-bruteforce",
         "sharded-hnsw",
         "sharded-hnsw-finger",
+        "sharded-bruteforce-sq8",
+        "sharded-hnsw-sq8",
+        "sharded-hnsw-pq",
+        "sharded-hnsw-finger-sq8",
     ];
     let mut seen_mutable = Vec::new();
 
@@ -303,6 +337,19 @@ fn batched_and_scalar_search_streams_bitwise_identical() {
             HnswParams { m: 10, ef_construction: 70, ..Default::default() },
             FingerParams { rank: 8, ..Default::default() },
         )),
+        // Quantized tiers ride the same contract: the u8 beam loop is
+        // kernel-dispatch-invariant and the re-rank honors the flag.
+        Box::new(HnswIndex::build_with_precision(
+            Arc::clone(&data),
+            HnswParams { m: 10, ef_construction: 70, ..Default::default() },
+            Precision::Sq8,
+        )),
+        Box::new(FingerHnswIndex::build_with_precision(
+            Arc::clone(&data),
+            HnswParams { m: 10, ef_construction: 70, ..Default::default() },
+            FingerParams { rank: 8, ..Default::default() },
+            Precision::Sq8,
+        )),
         Box::new(VamanaIndex::build(
             Arc::clone(&data),
             VamanaParams { r: 16, ..Default::default() },
@@ -347,6 +394,78 @@ fn batched_and_scalar_search_streams_bitwise_identical() {
             compare_all(index.as_ref(), &mut ctx, "live");
         }
     }
+}
+
+/// The quantized-tier acceptance criterion: SQ8/PQ traversal with exact
+/// re-rank stays within 2 recall points of the f32 family it shadows,
+/// and the sq8 tier is at least 2x smaller than the f32 vectors it
+/// replaces in the hot loop.
+#[test]
+fn quantized_families_within_two_points_of_f32() {
+    let ds = tiny(611, 500, 16, Metric::L2);
+    let gt = exact_knn(&ds.data, &ds.queries, 10);
+    let params = SearchParams::new(10).with_ef(200);
+    let mut ctx = SearchContext::new();
+    let mean_recall = |index: &dyn AnnIndex, ctx: &mut SearchContext| {
+        let mut total = 0.0;
+        for qi in 0..ds.queries.rows() {
+            let res = index.search(ds.queries.row(qi), &params, ctx);
+            let hits = res.iter().filter(|n| gt[qi].contains(&n.id)).count();
+            total += hits as f64 / 10.0;
+        }
+        total / ds.queries.rows() as f64
+    };
+
+    let hp = HnswParams { m: 12, ef_construction: 80, ..Default::default() };
+    let fp = FingerParams { rank: 8, ..Default::default() };
+    let pairs: Vec<(Box<dyn AnnIndex>, Box<dyn AnnIndex>)> = vec![
+        (
+            Box::new(BruteForce::new(Arc::clone(&ds.data))),
+            Box::new(BruteForce::with_precision(Arc::clone(&ds.data), Precision::Sq8)),
+        ),
+        (
+            Box::new(HnswIndex::build(Arc::clone(&ds.data), hp.clone())),
+            Box::new(HnswIndex::build_with_precision(
+                Arc::clone(&ds.data),
+                hp.clone(),
+                Precision::Sq8,
+            )),
+        ),
+        (
+            Box::new(HnswIndex::build(Arc::clone(&ds.data), hp.clone())),
+            Box::new(HnswIndex::build_with_precision(
+                Arc::clone(&ds.data),
+                hp.clone(),
+                Precision::Pq,
+            )),
+        ),
+        (
+            Box::new(FingerHnswIndex::build(Arc::clone(&ds.data), hp.clone(), fp.clone())),
+            Box::new(FingerHnswIndex::build_with_precision(
+                Arc::clone(&ds.data),
+                hp.clone(),
+                fp,
+                Precision::Sq8,
+            )),
+        ),
+    ];
+    for (exact, quant) in &pairs {
+        let base = mean_recall(exact.as_ref(), &mut ctx);
+        let q = mean_recall(quant.as_ref(), &mut ctx);
+        assert!(
+            q >= base - 0.02,
+            "{}: recall {q:.4} more than 2pts under {} ({base:.4})",
+            quant.name(),
+            exact.name()
+        );
+    }
+
+    // sq8 codes are 1 byte/lane vs 4 for f32 — even with codec overhead
+    // the traversal tier must be >= 2x smaller than the raw f32 vectors.
+    let sq8 = HnswIndex::build_with_precision(Arc::clone(&ds.data), hp, Precision::Sq8);
+    let tier = sq8.quant().expect("sq8 tier").nbytes();
+    let f32_bytes = ds.data.rows() * ds.data.cols() * std::mem::size_of::<f32>();
+    assert!(tier * 2 <= f32_bytes, "sq8 tier {tier} B vs f32 {f32_bytes} B");
 }
 
 #[test]

@@ -30,6 +30,7 @@ use finger_ann::graph::nndescent::NnDescentParams;
 use finger_ann::graph::vamana::VamanaParams;
 use finger_ann::index::impls::{FingerHnswIndex, HnswIndex, NnDescentIndex, VamanaIndex};
 use finger_ann::index::{AnnIndex, SearchContext, SearchParams};
+use finger_ann::quant::Precision;
 use finger_ann::testutil::forall;
 
 /// Empty, sub-lane, exact-lane, lane+1, odd multi-chunk, and real dims.
@@ -72,6 +73,48 @@ fn dispatched_kernels_bitwise_equal_scalar_across_lengths() {
         }
         true
     });
+}
+
+#[test]
+fn dispatched_u8_kernel_bitwise_equal_scalar_across_lengths() {
+    // The quantized-tier kernel under the same contract: integer result,
+    // so "bitwise" is plain u32 equality — but it must hold for every
+    // backend across the same length zoo.
+    let ks = kernels();
+    forall("u8-kernel-dispatch-bitwise", 200, |rng| {
+        for &n in LENS {
+            let a: Vec<u8> = (0..n).map(|_| (rng.gen_range(256)) as u8).collect();
+            let b: Vec<u8> = (0..n).map(|_| (rng.gen_range(256)) as u8).collect();
+            if (ks.u8_l2_sq)(&a, &b) != scalar::u8_l2_sq(&a, &b) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn u8_kernel_saturation_and_codec_rounding_edges() {
+    // Saturation: the worst-case per-lane diff is 255, whose square
+    // (65025) overflows i16 — the widened accumulation must not saturate.
+    let ks = kernels();
+    for &n in LENS {
+        let hi = vec![255u8; n];
+        let lo = vec![0u8; n];
+        let want = n as u32 * 255 * 255;
+        assert_eq!((ks.u8_l2_sq)(&hi, &lo), want, "dispatch saturation n={n}");
+        assert_eq!(scalar::u8_l2_sq(&hi, &lo), want, "scalar saturation n={n}");
+        assert_eq!(distance::u8_l2_sq(&hi, &lo), distance::u8_l2_sq_scalar(&hi, &lo));
+    }
+
+    // Rounding: encode points sitting exactly between two codes —
+    // f32::round ties away from zero, byte edges clamp, NaN pins to 0.
+    let m = finger_ann::core::matrix::Matrix::from_rows(&[vec![0.0f32, 0.0], vec![255.0, 255.0]]);
+    let codec = finger_ann::quant::Sq8Codec::train(&m);
+    assert_eq!(codec.delta, 1.0);
+    assert_eq!(codec.encode(&[0.49, 0.5]), vec![0, 1], "half rounds away from zero");
+    assert_eq!(codec.encode(&[254.5, 1e30]), vec![255, 255], "upper edge clamps");
+    assert_eq!(codec.encode(&[-7.0, f32::NAN]), vec![0, 0], "lower edge and NaN clamp to 0");
 }
 
 #[test]
@@ -190,6 +233,22 @@ fn build_bytes(family: &str, threads: usize) -> Vec<u8> {
             HnswParams { m: 8, ef_construction: 60, threads, ..Default::default() },
             FingerParams { rank: 8, threads, ..Default::default() },
         )),
+        "hnsw-sq8" => Box::new(HnswIndex::build_with_precision(
+            data,
+            HnswParams { m: 8, ef_construction: 60, threads, ..Default::default() },
+            Precision::Sq8,
+        )),
+        "hnsw-pq" => Box::new(HnswIndex::build_with_precision(
+            data,
+            HnswParams { m: 8, ef_construction: 60, threads, ..Default::default() },
+            Precision::Pq,
+        )),
+        "hnsw-finger-sq8" => Box::new(FingerHnswIndex::build_with_precision(
+            data,
+            HnswParams { m: 8, ef_construction: 60, threads, ..Default::default() },
+            FingerParams { rank: 8, threads, ..Default::default() },
+            Precision::Sq8,
+        )),
         "vamana" => Box::new(VamanaIndex::build(
             data,
             VamanaParams { r: 16, l: 40, threads, ..Default::default() },
@@ -218,7 +277,15 @@ fn build_bytes(family: &str, threads: usize) -> Vec<u8> {
 /// bytes of the single-threaded build, for every graph family.
 #[test]
 fn parallel_builds_persist_identical_bytes() {
-    for family in ["hnsw", "hnsw-finger", "vamana", "nndescent"] {
+    for family in [
+        "hnsw",
+        "hnsw-finger",
+        "vamana",
+        "nndescent",
+        "hnsw-sq8",
+        "hnsw-pq",
+        "hnsw-finger-sq8",
+    ] {
         let reference = build_bytes(family, 1);
         assert!(!reference.is_empty());
         for threads in [2usize, 8] {

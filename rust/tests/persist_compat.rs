@@ -1,9 +1,9 @@
-//! Golden-fixture persistence compatibility: checked-in v3 and v4 index
-//! files must keep loading on v5 code, bitwise-identical to a fresh build
-//! over the same data — and a corrupt or truncated v5 mutation section
-//! must be rejected with an error, never a panic.
+//! Golden-fixture persistence compatibility: checked-in v3, v4, and v5
+//! index files must keep loading on v6 code, bitwise-identical to a
+//! fresh build over the same data — and a corrupt or truncated mutation
+//! section must be rejected with an error, never a panic.
 //!
-//! Fixture layout (both files share the 12x4 matrix with
+//! Fixture layout (all files share the 12x4 matrix with
 //! `val(i, j) = 0.5 * (i*4 + j) - 3.0`, every value exactly representable
 //! in f32 so bitwise comparison is meaningful):
 //!
@@ -14,8 +14,11 @@
 //!   centroid, sub tag 6, sub matrix. No mutation sections anywhere.
 //! * `v5_bruteforce_mutable.idx` — magic | version 5 | tag 6 | 13x4
 //!   matrix (fixture rows + inserted `[9,9,9,9]`) | watermark 13 |
-//!   row ids 0..=12 | dead rows [5]. The golden copy of the current
-//!   mutable format: the writer must keep producing exactly these bytes.
+//!   row ids 0..=12 | dead rows [5]. No quantized-tier section (pre-v6).
+//! * `v6_bruteforce_sq8.idx` — magic | version 6 | tag 6 | the same 13x4
+//!   matrix | precision 1 (sq8) | mins | maxs | [delta] | 52 code bytes |
+//!   the same mutation section. The golden copy of the current format:
+//!   the writer must keep producing exactly these bytes.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -26,6 +29,7 @@ use finger_ann::data::persist::{load_index, save_index};
 use finger_ann::graph::bruteforce::scan;
 use finger_ann::index::impls::BruteForce;
 use finger_ann::index::{AnnIndex, MutableAnnIndex, SearchContext, SearchParams};
+use finger_ann::quant::Precision;
 
 const ROWS: usize = 12;
 const COLS: usize = 4;
@@ -112,9 +116,9 @@ fn v4_sharded_fixture_loads_identical_to_fresh_scan() {
 }
 
 #[test]
-fn resaving_a_v3_fixture_as_v5_preserves_results() {
+fn resaving_a_v3_fixture_as_v6_preserves_results() {
     let loaded = load_index(&fixture("v3_bruteforce.idx")).unwrap();
-    let path = tmp("resave_v5.idx");
+    let path = tmp("resave_v6.idx");
     save_index(&path, loaded.as_ref()).unwrap();
     let resaved = load_index(&path).unwrap();
     std::fs::remove_file(&path).ok();
@@ -128,43 +132,79 @@ fn resaving_a_v3_fixture_as_v5_preserves_results() {
 }
 
 #[test]
-fn v5_mutable_fixture_is_byte_stable_and_loads_its_mutation_state() {
-    // Load side: the checked-in v5 bundle carries a live mutation section.
+fn v5_mutable_fixture_loads_on_v6_code_with_its_mutation_state() {
+    // v5 -> v6 load compat: the checked-in v5 bundle (no quantized-tier
+    // section) keeps loading, carrying its live mutation section, and a
+    // replay of its history searches identically.
     let loaded = load_index(&fixture("v5_bruteforce_mutable.idx")).expect("v5 still loads");
-    assert_eq!(loaded.name(), "bruteforce");
+    assert_eq!(loaded.name(), "bruteforce"); // no tier in a pre-v6 file
     assert_eq!(loaded.len(), ROWS + 1);
     let view = loaded.as_mutable_view().expect("bruteforce is mutable");
     assert_eq!(view.live_len(), ROWS); // 13 rows, one tombstoned
     assert!(!view.is_live(5));
     assert!(view.is_live(12));
 
-    // Save side: replaying the fixture's history through today's writer
-    // must reproduce the checked-in bytes exactly — the golden pin that
-    // keeps the v5 format (and the WAL replay-determinism contract that
-    // depends on it) from drifting silently.
     let mut idx = BruteForce::new(Arc::new(fixture_matrix()));
     let mut ctx = SearchContext::new();
     assert_eq!(idx.insert(&[9.0, 9.0, 9.0, 9.0], &mut ctx).unwrap(), 12);
     idx.remove(5).unwrap();
-    let path = tmp("v5_golden_resave.idx");
-    save_index(&path, &idx).unwrap();
-    let fresh = std::fs::read(&path).unwrap();
-    std::fs::remove_file(&path).ok();
-    let golden = std::fs::read(fixture("v5_bruteforce_mutable.idx")).unwrap();
-    assert_eq!(fresh, golden, "v5 writer no longer byte-matches the golden fixture");
+    let params = SearchParams::new(4);
+    for (i, q) in probes().iter().enumerate() {
+        let a = loaded.search(q, &params, &mut ctx);
+        let b = idx.search(q, &params, &mut ctx);
+        assert_eq!(a, b, "probe {i}: v5 load diverges from replayed history");
+    }
 }
 
 #[test]
-fn corrupt_or_truncated_v5_tombstone_section_is_rejected() {
-    // Build a v5 bundle with a non-trivial mutation section: one insert,
-    // one delete. The bruteforce payload is exactly the live section, so
-    // it sits at the tail of the file: ... | watermark u64 | row-id slice
+fn v6_quantized_fixture_is_byte_stable_and_loads_its_tier() {
+    // Load side: the checked-in v6 bundle carries an sq8 tier (codec
+    // frozen on the 12 build rows, codes in lockstep through the insert)
+    // plus the same mutation section as the v5 fixture.
+    let loaded = load_index(&fixture("v6_bruteforce_sq8.idx")).expect("v6 loads");
+    assert_eq!(loaded.name(), "bruteforce-sq8");
+    assert_eq!(loaded.len(), ROWS + 1);
+    let view = loaded.as_mutable_view().expect("bruteforce-sq8 is mutable");
+    assert_eq!(view.live_len(), ROWS);
+    assert!(!view.is_live(5));
+    assert!(view.is_live(12));
+
+    // Replaying the same history on today's code must search identically
+    // (same frozen codec, same codes, same exact re-rank).
+    let mut idx = BruteForce::with_precision(Arc::new(fixture_matrix()), Precision::Sq8);
+    let mut ctx = SearchContext::new();
+    assert_eq!(idx.insert(&[9.0, 9.0, 9.0, 9.0], &mut ctx).unwrap(), 12);
+    idx.remove(5).unwrap();
+    let params = SearchParams::new(4);
+    for (i, q) in probes().iter().enumerate() {
+        let a = loaded.search(q, &params, &mut ctx);
+        let b = idx.search(q, &params, &mut ctx);
+        assert_eq!(a, b, "probe {i}: v6 load diverges from replayed history");
+    }
+
+    // Save side: the golden pin on the current writer. Replaying the
+    // fixture's history must reproduce the checked-in bytes exactly —
+    // codec ranges, delta, code rows, and mutation section included.
+    let path = tmp("v6_golden_resave.idx");
+    save_index(&path, &idx).unwrap();
+    let fresh = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let golden = std::fs::read(fixture("v6_bruteforce_sq8.idx")).unwrap();
+    assert_eq!(fresh, golden, "v6 writer no longer byte-matches the golden fixture");
+}
+
+#[test]
+fn corrupt_or_truncated_tombstone_section_is_rejected() {
+    // Build a current-format bundle with a non-trivial mutation section:
+    // one insert, one delete. The bruteforce payload is the quant tag
+    // (F32 here) followed by the live section, so the live state sits at
+    // the tail of the file: ... | watermark u64 | row-id slice
     // | dead-row slice — whose final 4 bytes are the single dead entry.
     let mut idx = BruteForce::new(Arc::new(fixture_matrix()));
     let mut ctx = SearchContext::new();
     idx.insert(&[9.0, 9.0, 9.0, 9.0], &mut ctx).unwrap();
     idx.remove(5).unwrap();
-    let path = tmp("v5_tomb.idx");
+    let path = tmp("v6_tomb.idx");
     save_index(&path, &idx).unwrap();
     let bytes = std::fs::read(&path).unwrap();
     std::fs::remove_file(&path).ok();
