@@ -42,12 +42,14 @@ use finger_ann::index::{
 };
 use finger_ann::quant::ivfpq::IvfPqParams;
 use finger_ann::quant::Precision;
-use finger_ann::repl::hub::ReplHub;
-use finger_ann::repl::replica::{Replica, ReplicaOpts};
+use finger_ann::repl::cluster::{ClusterNode, ClusterOpts};
+use finger_ann::repl::election::{ElectionConfig, ElectionNode, PeerSpec};
+use finger_ann::repl::hub::{HubOpts, ReplHub};
+use finger_ann::repl::replica::{Replica, ReplicaOpts, ReplicaStore};
 use finger_ann::repl::{AckLevel, ReadPool};
 use finger_ann::router::protocol::{FingerprintInfo, QueryRequest};
 use finger_ann::router::{
-    poll, Client, MutOutcome, Request, ServeIndex, ServeMode, Server, ServerConfig,
+    poll, Client, MutOutcome, MutResponse, Request, ServeIndex, ServeMode, Server, ServerConfig,
 };
 use finger_ann::runtime::{default_artifacts_dir, service::RerankService, Manifest};
 use finger_ann::wal::{FsyncPolicy, ScanResult, Wal, WalOp};
@@ -94,16 +96,23 @@ fn help() {
          \u{20}  set-threshold --frac F [--addr A]          (retune the compaction gate; logged + replicated)\n\
          \u{20}  snapshot [--addr A]                        (checkpoint a serving index via its WAL)\n\
          \u{20}  query    --vector \"v1,v2,...\" [--k N] [--addrs A,B,...]  (read fan-out across replicas)\n\
-         \u{20}  repl     status [--addr A]                (role, applied seq, per-replica ack progress)\n\
+         \u{20}  repl     status [--addr A]                (role, term, applied seq, ack progress; any node)\n\
          \u{20}  repl     fingerprint --addrs A,B,...      (compare state hashes; exit 1 on divergence)\n\
+         \u{20}  repl     leader --addrs A,B,...           (discover the elected leader; exit 1 if none)\n\
          \u{20}  wal      dump|truncate --wal-dir DIR      (inspect / repair a WAL directory)\n\
-         \u{20}  bench    FIGURE [--scale F] [--out DIR]   (figure1..figure8, table1, rank-selection, churn, hotpath, router, all)\n\
+         \u{20}  bench    FIGURE [--scale F] [--out DIR]   (figure1..figure8, table1, rank-selection, churn, hotpath, router, repl, all)\n\
          \u{20}  info\n\
          durability (serve): --wal-dir DIR [--fsync-policy always|every_n:N|interval_ms:M|never]\n\
          \u{20}                         (log every mutation before ack; recover on restart)\n\
-         replication (serve): primary: --repl-listen ADDR [--ack-level none|one|all]\n\
+         replication (serve): primary: --repl-listen ADDR [--ack-level none|one|all|quorum]\n\
          \u{20}                         [--repl-expect N] [--repl-ack-timeout-ms M]  (requires --wal-dir)\n\
-         \u{20}               replica: --replica-of ADDR [--wal-dir DIR]  (read-only; streams the primary's WAL)\n\
+         \u{20}               replica: --replica-of ADDR [--wal-dir DIR]  (read-only; binds at once,\n\
+         \u{20}                         answers {{\"state\":\"warming\"}} until caught up)\n\
+         cluster (serve): --cluster \"1@H:P,2@H:P,3@H:P\" --cluster-id N --wal-dir DIR\n\
+         \u{20}                         [--repl-listen A] [--advertise-repl A] [--advertise-query A]\n\
+         \u{20}                         [--ack-level quorum] [--election-timeout-ms M] [--heartbeat-ms M]\n\
+         \u{20}                         (leader elected by term-numbered votes; writes quorum-acked;\n\
+         \u{20}                         followers redirect writes and keep serving reads)\n\
          precision (build/search/serve): --precision f32|sq8|pq   (quantized in-loop distances\n\
          \u{20}                         + exact re-rank; bruteforce/hnsw/finger only)\n\
          sharding (build/search/serve): --shards S [--shard-strategy round-robin|kmeans]\n\
@@ -346,6 +355,12 @@ fn serve_mode_from_args(args: &Args) -> ServeMode {
 }
 
 fn serve(args: &Args) {
+    // `--cluster` runs the node under quorum replication with leader
+    // election: roles are elected, not configured.
+    if args.get("cluster").is_some() {
+        serve_cluster(args);
+        return;
+    }
     // `--replica-of` flips the whole command into read-only replica mode:
     // no local build, state arrives over the replication stream.
     if args.get("replica-of").is_some() {
@@ -418,9 +433,12 @@ fn serve(args: &Args) {
         let hub = ReplHub::start(
             listen,
             Arc::clone(w),
-            level,
-            expect,
-            std::time::Duration::from_millis(timeout_ms),
+            HubOpts {
+                level,
+                expect,
+                ack_timeout: std::time::Duration::from_millis(timeout_ms),
+                ..HubOpts::default()
+            },
         )
         .unwrap_or_else(|e| {
             eprintln!("replication listener bind on {listen} failed: {e}");
@@ -486,9 +504,13 @@ fn serve(args: &Args) {
 /// `serve --replica-of ADDR` — read-only replica. State arrives over the
 /// primary's replication stream (snapshot + ordered WAL ops); with
 /// `--wal-dir` the stream is also persisted locally so a restart resumes
-/// from the durable position instead of re-fetching the snapshot. The
-/// query listener comes up only after the replica has caught up, so the
-/// first client never sees placeholder state.
+/// from the durable position instead of re-fetching the snapshot.
+///
+/// The query listener binds *immediately* — before the first byte of
+/// catch-up — so orchestrators get a stable address to health-check and
+/// clients get a structured `{"state":"warming"}` answer instead of a
+/// connection refusal. Queries serve real state only after catch-up
+/// flips the readiness latch.
 fn serve_replica(args: &Args) {
     let raw = args.get("replica-of").expect("checked by caller");
     let primary: std::net::SocketAddr = raw.parse().unwrap_or_else(|_| {
@@ -496,26 +518,10 @@ fn serve_replica(args: &Args) {
         std::process::exit(2);
     });
     // Placeholder until the first snapshot (or local recovery) installs
-    // real state; `install` swaps it out before the replica reports ready.
+    // real state; the warming gate keeps it invisible to clients.
     let placeholder: Box<dyn AnnIndex> = Box::new(BruteForce::new(Arc::new(Matrix::zeros(0, 1))));
     let serve_index =
         Arc::new(ServeIndex::with_params(placeholder, params_from_args(args, 10)).as_replica());
-    let opts = ReplicaOpts {
-        wal_dir: args.get("wal-dir").map(PathBuf::from),
-        policy: fsync_policy_from_args(args),
-        reconnect: std::time::Duration::from_millis(200),
-    };
-    let replica = Replica::start(primary, Arc::clone(&serve_index), opts).unwrap_or_else(|e| {
-        eprintln!("replica start failed: {e}");
-        std::process::exit(1);
-    });
-    print!("replica of {primary}: catching up...");
-    std::io::Write::flush(&mut std::io::stdout()).ok();
-    while !replica.wait_ready(std::time::Duration::from_secs(1)) {
-        print!(".");
-        std::io::Write::flush(&mut std::io::stdout()).ok();
-    }
-    println!(" caught up at seq {}", replica.applied());
 
     let config = ServerConfig {
         addr: args.get("addr").unwrap_or("127.0.0.1:7772").to_string(),
@@ -535,7 +541,33 @@ fn serve_replica(args: &Args) {
         config.max_batch,
         config.mode.name()
     );
-    println!("protocol: one JSON per line: {{\"id\":1,\"vector\":[..],\"k\":10}} (read-only)");
+    println!(
+        "protocol: one JSON per line: {{\"id\":1,\"vector\":[..],\"k\":10}} \
+         (read-only; answers {{\"state\":\"warming\"}} until caught up)"
+    );
+    std::io::Write::flush(&mut std::io::stdout()).ok();
+
+    let opts = ReplicaOpts {
+        store: match args.get("wal-dir") {
+            Some(d) => ReplicaStore::Dir(PathBuf::from(d)),
+            None => ReplicaStore::None,
+        },
+        policy: fsync_policy_from_args(args),
+        seed: args.get_usize("seed", 0x5EED) as u64,
+        ..ReplicaOpts::default()
+    };
+    let replica = Replica::start(primary, Arc::clone(&serve_index), opts).unwrap_or_else(|e| {
+        eprintln!("replica start failed: {e}");
+        std::process::exit(1);
+    });
+    serve_index.set_repl_metrics(replica.metrics());
+    print!("replica of {primary}: catching up...");
+    std::io::Write::flush(&mut std::io::stdout()).ok();
+    while !replica.wait_ready(std::time::Duration::from_secs(1)) {
+        print!(".");
+        std::io::Write::flush(&mut std::io::stdout()).ok();
+    }
+    println!(" caught up at seq {}", replica.applied());
     std::io::Write::flush(&mut std::io::stdout()).ok();
     loop {
         std::thread::sleep(std::time::Duration::from_secs(10));
@@ -548,6 +580,196 @@ fn serve_replica(args: &Args) {
     }
 }
 
+/// `serve --cluster "1@H:P,2@H:P,3@H:P" --cluster-id N` — one node of a
+/// quorum-replicated cluster with automatic failover.
+///
+/// The spec lists every node's *election* endpoint; who leads is decided
+/// by term-numbered elections, not flags. The node binds its query
+/// listener and replication listener up front (both addresses are
+/// stable across role flips), recovers local state from `--wal-dir`
+/// (required — quorum commit is WAL-fsync based), and then converges on
+/// whatever role the election hands it: leaders take writes at ack
+/// level `quorum` and stream the WAL to followers; followers serve
+/// reads and redirect writes to the leader's advertised query address.
+fn serve_cluster(args: &Args) {
+    let spec = args.get("cluster").expect("checked by caller");
+    let my_id = args.get_usize("cluster-id", 0) as u64;
+    if my_id == 0 {
+        eprintln!("--cluster requires --cluster-id N (nonzero, listed in the spec)");
+        std::process::exit(2);
+    }
+    let mut listen: Option<String> = None;
+    let mut peers: Vec<PeerSpec> = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let Some((id_s, addr)) = part.split_once('@') else {
+            eprintln!("bad --cluster entry '{part}' (want ID@HOST:PORT)");
+            std::process::exit(2);
+        };
+        let Ok(id) = id_s.trim().parse::<u64>() else {
+            eprintln!("bad node id '{id_s}' in --cluster entry '{part}'");
+            std::process::exit(2);
+        };
+        if id == my_id {
+            listen = Some(addr.trim().to_string());
+        } else {
+            peers.push(PeerSpec { id, addr: addr.trim().to_string() });
+        }
+    }
+    let Some(listen) = listen else {
+        eprintln!("--cluster-id {my_id} does not appear in --cluster '{spec}'");
+        std::process::exit(2);
+    };
+    let expect = peers.len() + 1;
+    let Some(dir) = args.get("wal-dir") else {
+        eprintln!("--cluster requires --wal-dir (quorum commit is WAL-fsync based)");
+        std::process::exit(2);
+    };
+    let dir = PathBuf::from(dir);
+    let policy = fsync_policy_from_args(args);
+
+    // Same source-of-truth rule as plain `serve`: a durable generation in
+    // the WAL dir wins over build flags.
+    let (index, wal, recovered_seq): (Box<dyn AnnIndex>, Arc<Wal>, u64) = if Wal::has_snapshot(&dir)
+    {
+        let (index, w, report) = Wal::recover(&dir, policy).unwrap_or_else(|e| {
+            eprintln!("recovery from {} failed: {e}", dir.display());
+            std::process::exit(1);
+        });
+        println!("{}", report.summary());
+        let seq = report.last_seq;
+        (index, Arc::new(w), seq)
+    } else {
+        let index = build_or_load(args);
+        let w = Wal::bootstrap(&dir, index.as_ref(), policy).unwrap_or_else(|e| {
+            eprintln!("wal bootstrap in {} failed: {e}", dir.display());
+            std::process::exit(1);
+        });
+        println!("wal bootstrapped in {} (fsync policy {})", dir.display(), policy.name());
+        (index, Arc::new(w), 0)
+    };
+    let dim = index.dim();
+    let name = index.name();
+    let serve_index = ServeIndex::with_params(index, params_from_args(args, 10))
+        .with_wal(Arc::clone(&wal))
+        .in_cluster();
+    serve_index.set_applied_seq(recovered_seq);
+    let serve_index = Arc::new(serve_index);
+
+    let config = ServerConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:7771").to_string(),
+        workers: args.get_usize("workers", 4),
+        max_batch: args.get_usize("max-batch", 8),
+        mode: serve_mode_from_args(args),
+        ..Default::default()
+    };
+    if let Ok(limit) = poll::raise_nofile_limit() {
+        println!("nofile limit: {limit}");
+    }
+    let server = Server::start(Arc::clone(&serve_index), config.clone(), None).expect("bind");
+    println!(
+        "serving {name} ({dim}-dim) on {} ({} workers, max_batch {}, {} mode, \
+         cluster node {my_id} of {expect})",
+        server.local_addr,
+        config.workers,
+        config.max_batch,
+        config.mode.name()
+    );
+    std::io::Write::flush(&mut std::io::stdout()).ok();
+
+    // Replication listener: bound once, before any election outcome, so
+    // the address this node advertises in heartbeats never changes.
+    let repl_listener = std::net::TcpListener::bind(args.get("repl-listen").unwrap_or("127.0.0.1:0"))
+        .unwrap_or_else(|e| {
+            eprintln!("replication listener bind failed: {e}");
+            std::process::exit(1);
+        });
+    let repl_local = repl_listener.local_addr().expect("bound listener has an addr");
+    let repl_advertise = args
+        .get("advertise-repl")
+        .map(str::to_string)
+        .unwrap_or_else(|| repl_local.to_string());
+    let query_advertise = args
+        .get("advertise-query")
+        .map(str::to_string)
+        .unwrap_or_else(|| server.local_addr.to_string());
+
+    let level = AckLevel::parse(args.get("ack-level").unwrap_or("quorum")).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    // `all` counts replica acks (there are expect-1 of them); `quorum`
+    // counts cluster nodes, the leader included.
+    let hub_expect = if level == AckLevel::All { expect - 1 } else { expect };
+    let timeout_ms = args.get_usize("repl-ack-timeout-ms", 5000) as u64;
+    let election = ElectionNode::start(ElectionConfig {
+        id: my_id,
+        listen: listen.clone(),
+        peers,
+        election_timeout: std::time::Duration::from_millis(
+            args.get_usize("election-timeout-ms", 300) as u64,
+        ),
+        heartbeat_interval: std::time::Duration::from_millis(
+            args.get_usize("heartbeat-ms", 60) as u64,
+        ),
+        state_dir: Some(dir.clone()),
+        seed: args.get_usize("election-seed", my_id as usize) as u64,
+    })
+    .unwrap_or_else(|e| {
+        eprintln!("election start on {listen} failed: {e}");
+        std::process::exit(1);
+    });
+    println!(
+        "election listener on {} (node {my_id}, term resumes from {})",
+        election.local_addr(),
+        election.term()
+    );
+    let cluster = ClusterNode::start(
+        election,
+        repl_listener,
+        Arc::clone(&wal),
+        Arc::clone(&serve_index),
+        ClusterOpts {
+            hub: HubOpts {
+                level,
+                expect: hub_expect,
+                ack_timeout: std::time::Duration::from_millis(timeout_ms),
+                ..HubOpts::default()
+            },
+            policy,
+            repl_advertise: repl_advertise.clone(),
+            query_advertise,
+            seed: 0x5EED ^ my_id,
+        },
+    )
+    .unwrap_or_else(|e| {
+        eprintln!("cluster supervisor start failed: {e}");
+        std::process::exit(1);
+    });
+    serve_index.set_cluster(Arc::clone(&cluster));
+    println!(
+        "replication listener on {repl_local} (advertised {repl_advertise}, ack level {}, \
+         quorum {}/{expect})",
+        level.name(),
+        expect / 2 + 1
+    );
+    std::io::Write::flush(&mut std::io::stdout()).ok();
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(5));
+        println!(
+            "{} (role {}, term {}, applied seq {})",
+            server.metrics.summary(),
+            cluster.role().name(),
+            cluster.term(),
+            serve_index.applied_seq()
+        );
+        std::io::Write::flush(&mut std::io::stdout()).ok();
+    }
+}
+
 fn mutation_addr(args: &Args) -> std::net::SocketAddr {
     let addr = args.get("addr").unwrap_or("127.0.0.1:7771");
     addr.parse().unwrap_or_else(|_| {
@@ -556,31 +778,49 @@ fn mutation_addr(args: &Args) -> std::net::SocketAddr {
     })
 }
 
+fn send_mutation(addr: &std::net::SocketAddr, req: &Request) -> Result<MutResponse, String> {
+    let mut client =
+        Client::connect(addr).map_err(|e| format!("cannot connect to {addr}: {e}"))?;
+    client.mutate(req)
+}
+
 fn apply_mutation(args: &Args, req: Request) {
     let addr = mutation_addr(args);
-    let mut client = Client::connect(&addr).unwrap_or_else(|e| {
-        eprintln!("cannot connect to {addr}: {e}");
-        std::process::exit(1);
-    });
-    match client.mutate(&req) {
-        Ok(resp) => match resp.outcome {
-            MutOutcome::Inserted(id) => println!("inserted id {id} ({} live)", resp.live),
-            MutOutcome::Deleted(id) => println!("deleted id {id} ({} live)", resp.live),
-            MutOutcome::Compacted(did) => println!(
-                "{} ({} live)",
-                if did { "compacted" } else { "below compaction threshold; not rebuilt" },
-                resp.live
-            ),
-            MutOutcome::Saved(seq) => {
-                println!("checkpointed at seq {seq} ({} live)", resp.live)
+    let resp = match send_mutation(&addr, &req) {
+        Ok(resp) => resp,
+        // Follower rejections name the leader's query address — chase it
+        // once, so writes work against any cluster node.
+        Err(e) => match e
+            .split("leader is at ")
+            .nth(1)
+            .and_then(|rest| rest.trim().parse::<std::net::SocketAddr>().ok())
+        {
+            Some(leader) => {
+                eprintln!("{addr} is not the leader; redirecting to {leader}");
+                send_mutation(&leader, &req).unwrap_or_else(|e| {
+                    eprintln!("leader {leader} rejected the mutation: {e}");
+                    std::process::exit(1);
+                })
             }
-            MutOutcome::ThresholdSet(frac) => {
-                println!("compaction threshold set to {frac} ({} live)", resp.live)
+            None => {
+                eprintln!("server rejected the mutation: {e}");
+                std::process::exit(1);
             }
         },
-        Err(e) => {
-            eprintln!("server rejected the mutation: {e}");
-            std::process::exit(1);
+    };
+    match resp.outcome {
+        MutOutcome::Inserted(id) => println!("inserted id {id} ({} live)", resp.live),
+        MutOutcome::Deleted(id) => println!("deleted id {id} ({} live)", resp.live),
+        MutOutcome::Compacted(did) => println!(
+            "{} ({} live)",
+            if did { "compacted" } else { "below compaction threshold; not rebuilt" },
+            resp.live
+        ),
+        MutOutcome::Saved(seq) => {
+            println!("checkpointed at seq {seq} ({} live)", resp.live)
+        }
+        MutOutcome::ThresholdSet(frac) => {
+            println!("compaction threshold set to {frac} ({} live)", resp.live)
         }
     }
 }
@@ -747,8 +987,21 @@ fn repl_cmd(args: &Args) {
                 std::process::exit(1);
             }
         }
+        // `repl leader --addrs A,B,...` — ask every node who leads.
+        // Works against followers (they relay what heartbeats told them),
+        // so any one reachable node is enough.
+        "leader" => {
+            let pool = ReadPool::new(read_addrs(args));
+            match pool.discover_leader() {
+                Some(leader) => println!("leader: {leader}"),
+                None => {
+                    eprintln!("no leader discovered (cluster may be mid-election)");
+                    std::process::exit(1);
+                }
+            }
+        }
         other => {
-            eprintln!("unknown repl action '{other}' (status|fingerprint)");
+            eprintln!("unknown repl action '{other}' (status|fingerprint|leader)");
             std::process::exit(2);
         }
     }
@@ -1065,6 +1318,135 @@ fn bench_router(out: &std::path::Path, scale: f64) {
     println!("wrote {}", path.display());
 }
 
+/// Replication-plane benchmark: client-observed write-ack latency per
+/// ack level over real TCP, against a leader streaming to two local
+/// replicas (fsync `always` on every node, so the numbers carry the
+/// true durability cost). The `quorum` row is the one failover cares
+/// about: it is what a 3-node cluster charges per write.
+fn bench_repl(out: &std::path::Path, scale: f64) {
+    use finger_ann::core::distance::Metric;
+    use finger_ann::core::json::Json;
+    use finger_ann::core::rng::Pcg32;
+    use finger_ann::data::synth::tiny;
+
+    let n = ((2000.0 * scale) as usize).clamp(200, 8_000);
+    let dim = 16usize;
+    let ops = ((400.0 * scale) as usize).clamp(60, 1000);
+    let ds = tiny(9113, n, dim, Metric::L2);
+    std::fs::create_dir_all(out).expect("mkdir");
+    println!("repl ack-latency bench (hnsw n={n} dim={dim}, {ops} inserts per level, 2 replicas):");
+
+    let mut rows = Vec::new();
+    for level in [AckLevel::None, AckLevel::One, AckLevel::Quorum, AckLevel::All] {
+        let stamp = format!("{}_{}", std::process::id(), level.name());
+        let leader_dir = std::env::temp_dir().join(format!("finger_bench_repl_l_{stamp}"));
+        let _ = std::fs::remove_dir_all(&leader_dir);
+        let index: Box<dyn AnnIndex> = Box::new(HnswIndex::build(
+            Arc::clone(&ds.data),
+            HnswParams { m: 12, ef_construction: 80, ..Default::default() },
+        ));
+        let wal =
+            Arc::new(Wal::bootstrap(&leader_dir, index.as_ref(), FsyncPolicy::Always).expect("wal"));
+        // `all` counts replica acks (2 replicas); `quorum` counts cluster
+        // nodes (leader + 2 = 3, majority 2).
+        let expect = if level == AckLevel::Quorum { 3 } else { 2 };
+        let hub = ReplHub::start(
+            "127.0.0.1:0",
+            Arc::clone(&wal),
+            HubOpts {
+                level,
+                expect,
+                ack_timeout: std::time::Duration::from_secs(10),
+                ..HubOpts::default()
+            },
+        )
+        .expect("hub");
+        let serve_index = Arc::new(
+            ServeIndex::new(index, 64).with_wal(Arc::clone(&wal)).with_repl(Arc::clone(&hub)),
+        );
+        let server = Server::start(
+            Arc::clone(&serve_index),
+            ServerConfig { addr: "127.0.0.1:0".into(), workers: 2, ..Default::default() },
+            None,
+        )
+        .expect("bind bench server");
+
+        let mut replicas = Vec::new();
+        for r in 0..2 {
+            let rdir = std::env::temp_dir().join(format!("finger_bench_repl_r{r}_{stamp}"));
+            let _ = std::fs::remove_dir_all(&rdir);
+            let placeholder: Box<dyn AnnIndex> =
+                Box::new(BruteForce::new(Arc::new(Matrix::zeros(0, 1))));
+            let rserve = Arc::new(ServeIndex::new(placeholder, 64).as_replica());
+            let replica = Replica::start(
+                hub.local_addr(),
+                Arc::clone(&rserve),
+                ReplicaOpts {
+                    store: ReplicaStore::Dir(rdir.clone()),
+                    policy: FsyncPolicy::Always,
+                    ..ReplicaOpts::default()
+                },
+            )
+            .expect("replica");
+            assert!(
+                replica.wait_ready(std::time::Duration::from_secs(20)),
+                "replica catch-up timed out"
+            );
+            replicas.push((replica, rdir));
+        }
+
+        let mut client = Client::connect(&server.local_addr).expect("connect");
+        let mut rng = Pcg32::new(0x9E11 + expect as u64);
+        let mut lats: Vec<u64> = Vec::with_capacity(ops);
+        let t0 = Instant::now();
+        for op in 0..ops {
+            let vector: Vec<f32> = (0..dim).map(|_| rng.next_gaussian()).collect();
+            let t = Instant::now();
+            client
+                .mutate(&Request::Insert { id: op as u64, vector })
+                .expect("quorum-acked insert");
+            lats.push(t.elapsed().as_micros() as u64);
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        drop(client);
+        server.shutdown();
+        hub.shutdown();
+        for (replica, rdir) in replicas {
+            replica.stop();
+            let _ = std::fs::remove_dir_all(&rdir);
+        }
+        let _ = std::fs::remove_dir_all(&leader_dir);
+
+        lats.sort_unstable();
+        let pct = |p: f64| -> u64 { lats[((lats.len() - 1) as f64 * p).round() as usize] };
+        let (p50, p99) = (pct(0.50), pct(0.99));
+        let wps = ops as f64 / secs.max(1e-9);
+        println!(
+            "  ack={:<7} {:>8.0} writes/s  p50={p50}us p99={p99}us  ({ops} ops)",
+            level.name(),
+            wps
+        );
+        rows.push(Json::obj(vec![
+            ("ack_level", Json::str(level.name())),
+            ("ops", Json::num(ops as f64)),
+            ("writes_per_sec", Json::num(wps)),
+            ("p50_us", Json::num(p50 as f64)),
+            ("p99_us", Json::num(p99 as f64)),
+        ]));
+    }
+    let doc = Json::obj(vec![
+        ("schema", Json::str("finger-ann/repl-bench/v1")),
+        ("n", Json::num(n as f64)),
+        ("dim", Json::num(dim as f64)),
+        ("replicas", Json::num(2.0)),
+        ("fsync", Json::str("always")),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let path = out.join("BENCH_repl.json");
+    std::fs::write(&path, format!("{doc}\n")).expect("write BENCH_repl.json");
+    println!("wrote {}", path.display());
+}
+
 fn bench(args: &Args) {
     let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     let scale = args.get_f64("scale", 0.25);
@@ -1091,6 +1473,9 @@ fn bench(args: &Args) {
         // Serving-plane benchmark: mixed read/write load over real TCP,
         // per serve mode, written as BENCH_router.json.
         "router" => bench_router(&out, scale),
+        // Replication-plane benchmark: write-ack latency per ack level
+        // (the quorum row is the failover-safe cost), BENCH_repl.json.
+        "repl" => bench_repl(&out, scale),
         "all" => {
             figures::figure2(&out, scale);
             figures::figure3(&out, scale);
@@ -1104,6 +1489,7 @@ fn bench(args: &Args) {
             bench_churn(&out, scale);
             finger_ann::eval::hotpath::bench_hotpath(&out, scale);
             bench_router(&out, scale);
+            bench_repl(&out, scale);
         }
         other => {
             eprintln!("unknown bench '{other}'");

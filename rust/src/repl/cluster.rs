@@ -1,0 +1,319 @@
+//! Cluster-node supervisor: glues the election state machine to the
+//! replication plane so a node flips between leader and follower roles
+//! without operator intervention.
+//!
+//! One [`ClusterNode`] per process. It owns the node's replication
+//! listener — bound once at startup, so the address a node advertises in
+//! heartbeats survives every role flip — and a small reconciliation loop
+//! that polls the [`ElectionNode`] every ~20ms and converges the local
+//! wiring onto the elected role:
+//!
+//! * **Leader**: construct a listener-less [`ReplHub`] over the shared
+//!   WAL, attach it to the [`ServeIndex`] (mutations start publishing +
+//!   quorum-gating), and route accepted replication sockets into it.
+//! * **Follower**: tear the hub down (stale-term ops then fail the
+//!   role check, not replicate), and run a [`Replica`] against the
+//!   leader's advertised replication address in shared-WAL mode. Every
+//!   new `(leader, term)` forces a full snapshot on first contact: a
+//!   deposed leader may carry an uncommitted divergent tail, and the
+//!   snapshot install ([`Wal::reinstall_into`]) wipes it byte-exactly.
+//! * **Candidate / no leader**: neither; reads keep serving from the
+//!   installed state, writes fail fast with a structured `no-quorum`
+//!   error via [`ClusterNode::check_writable`].
+//!
+//! The supervisor also feeds the election its inputs each tick: the
+//! node's durable log position (`note_log`, labeled with the current
+//! leader's term — that label is what makes the log-matching vote check
+//! honest) and the applied watermark (`note_commit`).
+
+use std::io;
+use std::net::{SocketAddr, TcpListener, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::repl::election::{ElectionNode, LeaderInfo, Role};
+use crate::repl::hub::{HubOpts, ReplHub};
+use crate::repl::replica::{ReplMetrics, Replica, ReplicaOpts, ReplicaStore};
+use crate::router::server::ServeIndex;
+use crate::wal::{FsyncPolicy, Wal};
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const RECONCILE_TICK: Duration = Duration::from_millis(20);
+
+/// Cluster-node tuning (everything the reconciler needs beyond the
+/// election itself).
+#[derive(Clone, Debug)]
+pub struct ClusterOpts {
+    /// Hub options applied whenever this node leads (level `quorum`,
+    /// `expect` = cluster size for multi-node clusters).
+    pub hub: HubOpts,
+    /// Fsync policy for follower-side appends.
+    pub policy: FsyncPolicy,
+    /// Replication address advertised in heartbeats — what followers
+    /// dial. Usually the repl listener's own address; tests point it at
+    /// a fault proxy.
+    pub repl_advertise: String,
+    /// Query address advertised in heartbeats — where clients should
+    /// send writes when this node leads.
+    pub query_advertise: String,
+    /// Seed for the follower reconnect-backoff jitter.
+    pub seed: u64,
+}
+
+/// Role-dependent wiring owned by the reconciler.
+struct Active {
+    hub: Option<Arc<ReplHub>>,
+    replica: Option<Replica>,
+    /// `(leader id, term)` the running replica follows.
+    following: Option<(u64, u64)>,
+    /// Metrics handle of the most recent follower stream (kept after a
+    /// promotion so REPL_STATUS history survives the flip).
+    metrics: Option<Arc<ReplMetrics>>,
+}
+
+/// See the module docs. Construct with [`ClusterNode::start`]; store on
+/// the [`ServeIndex`] via `set_cluster` so mutations consult
+/// [`ClusterNode::check_writable`].
+pub struct ClusterNode {
+    election: ElectionNode,
+    serve: Arc<ServeIndex>,
+    wal: Arc<Wal>,
+    opts: ClusterOpts,
+    repl_local: SocketAddr,
+    active: Mutex<Active>,
+    stop: Arc<AtomicBool>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+fn resolve(addr: &str) -> Option<SocketAddr> {
+    addr.parse().ok().or_else(|| addr.to_socket_addrs().ok().and_then(|mut it| it.next()))
+}
+
+impl ClusterNode {
+    /// Start supervising. `election` must already be running;
+    /// `repl_listener` is the node's bound replication port (stable for
+    /// the process lifetime). The serve index should already hold the
+    /// recovered local state.
+    pub fn start(
+        election: ElectionNode,
+        repl_listener: TcpListener,
+        wal: Arc<Wal>,
+        serve: Arc<ServeIndex>,
+        opts: ClusterOpts,
+    ) -> io::Result<Arc<ClusterNode>> {
+        let repl_local = repl_listener.local_addr()?;
+        repl_listener.set_nonblocking(true)?;
+        election.set_advert(&opts.repl_advertise, &opts.query_advertise);
+        // Seed the election's log position from recovered state without
+        // clobbering the persisted term label.
+        election.note_log(election.last_log_term(), serve.applied_seq());
+
+        let node = Arc::new(ClusterNode {
+            election,
+            serve,
+            wal,
+            opts,
+            repl_local,
+            active: Mutex::new(Active {
+                hub: None,
+                replica: None,
+                following: None,
+                metrics: None,
+            }),
+            stop: Arc::new(AtomicBool::new(false)),
+            threads: Mutex::new(Vec::new()),
+        });
+
+        let accept = {
+            let node = Arc::clone(&node);
+            std::thread::Builder::new().name("finger-cluster-accept".into()).spawn(move || {
+                loop {
+                    if node.stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match repl_listener.accept() {
+                        Ok((stream, _)) => {
+                            // Route to the active hub; a non-leader has
+                            // nothing to stream, so the socket drops and
+                            // the dialer backs off and retries (by then
+                            // the heartbeats point it elsewhere).
+                            let hub = lock(&node.active).hub.clone();
+                            match hub {
+                                Some(h) => h.attach(stream),
+                                None => drop(stream),
+                            }
+                        }
+                        Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?
+        };
+        let reconcile = {
+            let node = Arc::clone(&node);
+            std::thread::Builder::new()
+                .name("finger-cluster-reconcile".into())
+                .spawn(move || node.reconcile_loop())?
+        };
+        lock(&node.threads).extend([accept, reconcile]);
+        Ok(node)
+    }
+
+    fn reconcile_loop(&self) {
+        while !self.stop.load(Ordering::Relaxed) {
+            self.reconcile_once();
+            std::thread::sleep(RECONCILE_TICK);
+        }
+    }
+
+    /// One convergence step: make the local wiring match the elected
+    /// role. Idempotent; cheap when nothing changed.
+    fn reconcile_once(&self) {
+        let leader = self.election.leader();
+        let is_leader = self.election.is_leader();
+        let mut act = lock(&self.active);
+
+        if is_leader {
+            if let Some(r) = act.replica.take() {
+                r.stop();
+            }
+            act.following = None;
+            if act.hub.is_none() {
+                let hub =
+                    ReplHub::new(Arc::clone(&self.wal), self.opts.hub.clone(), self.repl_local);
+                self.serve.set_hub(Some(Arc::clone(&hub)));
+                act.hub = Some(hub);
+                // A node only wins with the longest durable log, so its
+                // state is as fresh as the cluster has: serve it.
+                self.serve.set_ready();
+            }
+            self.election.note_commit(self.serve.applied_seq());
+        } else {
+            if let Some(h) = act.hub.take() {
+                self.serve.set_hub(None);
+                h.shutdown();
+            }
+            if let Some(info) = leader.as_ref().filter(|l| l.id != self.election.id()) {
+                let key = (info.id, info.term);
+                if act.following != Some(key) {
+                    if let Some(r) = act.replica.take() {
+                        r.stop();
+                    }
+                    if let Some(addr) = resolve(&info.repl_addr) {
+                        let ropts = ReplicaOpts {
+                            store: ReplicaStore::Shared(Arc::clone(&self.wal)),
+                            policy: self.opts.policy,
+                            seed: self.opts.seed,
+                            // A new (leader, term) means our tail may be
+                            // divergent; never trust it.
+                            force_snapshot: true,
+                            ..ReplicaOpts::default()
+                        };
+                        if let Ok(r) = Replica::start(addr, Arc::clone(&self.serve), ropts) {
+                            act.metrics = Some(r.metrics());
+                            act.replica = Some(r);
+                            act.following = Some(key);
+                        }
+                    }
+                }
+            }
+            // No known leader: keep any running replica dialing its last
+            // target — if that leader returns it resumes, and a new
+            // leader's heartbeat re-keys `following` above.
+        }
+        drop(act);
+
+        // Feed the election its log position every tick. The term label
+        // is the leadership the applied prefix came from: our own term
+        // as leader, the current leader's as follower. With no leader in
+        // sight the label holds (the log did not advance either).
+        let label = if is_leader {
+            Some(self.election.term())
+        } else {
+            leader.as_ref().map(|l| l.term)
+        };
+        if let Some(term) = label {
+            self.election.note_log(term, self.serve.applied_seq());
+        }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.election.id()
+    }
+
+    pub fn role(&self) -> Role {
+        self.election.role()
+    }
+
+    pub fn term(&self) -> u64 {
+        self.election.term()
+    }
+
+    pub fn leader(&self) -> Option<LeaderInfo> {
+        self.election.leader()
+    }
+
+    /// The election handle (tests use it for partition injection).
+    pub fn election(&self) -> &ElectionNode {
+        &self.election
+    }
+
+    /// This node's bound replication address.
+    pub fn repl_addr(&self) -> SocketAddr {
+        self.repl_local
+    }
+
+    /// Follower-stream counters (present once this node has followed).
+    pub fn replica_metrics(&self) -> Option<Arc<ReplMetrics>> {
+        lock(&self.active).metrics.clone()
+    }
+
+    /// Gate for mutation verbs: only the elected leader takes writes.
+    /// The error is structured — followers point at the leader's query
+    /// address so clients can redirect, and a leaderless cluster reports
+    /// `no-quorum` instead of hanging.
+    pub fn check_writable(&self) -> Result<(), String> {
+        if self.election.is_leader() {
+            return Ok(());
+        }
+        match self.election.leader() {
+            Some(l) => Err(format!(
+                "not the leader (term {}); leader is at {}",
+                l.term, l.query_addr
+            )),
+            None => Err(format!(
+                "no-quorum: no leader elected (term {}); writes unavailable, reads still serve",
+                self.election.term()
+            )),
+        }
+    }
+
+    /// Stop the reconciler, the election, and whatever role wiring is
+    /// live. Safe to call more than once.
+    pub fn shutdown(&self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.election.shutdown();
+        {
+            let mut act = lock(&self.active);
+            if let Some(r) = act.replica.take() {
+                r.stop();
+            }
+            if let Some(h) = act.hub.take() {
+                self.serve.set_hub(None);
+                h.shutdown();
+            }
+        }
+        for t in lock(&self.threads).drain(..) {
+            let _ = t.join();
+        }
+    }
+}

@@ -1,0 +1,854 @@
+//! Term-numbered leader election over the replication wire frames.
+//!
+//! One `ElectionNode` per cluster member. The state machine is the
+//! Raft election core, stripped to what the replication plane needs:
+//!
+//! * **Roles.** Every node is a follower until its randomized election
+//!   timeout fires without hearing a leader heartbeat; it then bumps
+//!   the term, votes for itself, and campaigns. A majority of granted
+//!   votes makes it leader; a higher term observed anywhere (vote,
+//!   heartbeat, or ack) demotes it back to follower immediately — the
+//!   term is the fence.
+//! * **Log matching.** A vote request carries the candidate's
+//!   `(last_log_term, last_seq)` position and a peer grants only when
+//!   that pair is lexicographically at least its own. A quorum-acked op
+//!   is durable on a majority, so every majority overlaps a holder of
+//!   it: a node missing committed ops can never assemble a majority.
+//!   (Comparing `last_seq` alone would be unsafe — a deposed leader's
+//!   long uncommitted tail could outvote a survivor holding committed
+//!   entries from a newer term.)
+//! * **Persistence.** `(term, voted_for, last_log_term)` live in a
+//!   CRC-checked `election.state` file (tmp + rename + fsync), so a
+//!   restarted node can never vote twice in one term or regress its
+//!   term — the two invariants that make majorities mean anything.
+//! * **Transport.** Short-lived TCP connections carrying exactly one
+//!   request/response frame pair (`VoteRequest`/`VoteReply`,
+//!   `Heartbeat`/`HeartbeatAck`) — no long-lived session state, so a
+//!   partition heals the moment connects succeed again. Heartbeats
+//!   advertise the leader's replication and query addresses; followers
+//!   discover where to stream from without out-of-band config.
+//!
+//! The `set_partitioned` test seam freezes a node completely (no sends,
+//! incoming frames dropped without reply) to simulate a network
+//! partition around a node that still believes it is leader.
+
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::core::rng::Pcg32;
+use crate::repl::frame::Frame;
+use crate::wal::record::crc32;
+
+/// Where a node currently stands in the election state machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Follower,
+    Candidate,
+    Leader,
+}
+
+impl Role {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Role::Follower => "follower",
+            Role::Candidate => "candidate",
+            Role::Leader => "leader",
+        }
+    }
+}
+
+/// One peer's identity and election endpoint (everything but self).
+#[derive(Clone, Debug)]
+pub struct PeerSpec {
+    pub id: u64,
+    pub addr: String,
+}
+
+/// Static election configuration for one node.
+#[derive(Clone)]
+pub struct ElectionConfig {
+    /// This node's id. Must be nonzero (0 encodes "voted for nobody").
+    pub id: u64,
+    /// Election listener bind address (e.g. `127.0.0.1:0`).
+    pub listen: String,
+    /// Every other cluster member's election endpoint.
+    pub peers: Vec<PeerSpec>,
+    /// Base election timeout; the live timeout is randomized in
+    /// `[base, 2*base)` and re-drawn per campaign so ties break.
+    pub election_timeout: Duration,
+    /// Leader heartbeat period (keep well under `election_timeout`).
+    pub heartbeat_interval: Duration,
+    /// Directory for the persisted `election.state` file (`None` keeps
+    /// state in memory only — tests, or callers without durability).
+    pub state_dir: Option<PathBuf>,
+    /// Seed for the timeout jitter (deterministic per node).
+    pub seed: u64,
+}
+
+/// What a node knows about the current leader.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LeaderInfo {
+    pub id: u64,
+    pub term: u64,
+    pub repl_addr: String,
+    pub query_addr: String,
+}
+
+struct ElState {
+    term: u64,
+    /// Who this node voted for in `term` (0 = nobody yet).
+    voted_for: u64,
+    role: Role,
+    leader: Option<LeaderInfo>,
+    /// Last heartbeat (or granted vote) observed; the election clock.
+    last_heartbeat: Instant,
+    /// Last heartbeat broadcast sent (leader only).
+    last_broadcast: Instant,
+    /// Live randomized election timeout.
+    timeout: Duration,
+    /// Votes gathered in the current candidacy (self included).
+    votes: usize,
+    rng: Pcg32,
+}
+
+struct Inner {
+    cfg: ElectionConfig,
+    peers: Vec<(u64, SocketAddr)>,
+    local_addr: SocketAddr,
+    state: Mutex<ElState>,
+    /// Advertised (repl_addr, query_addr) carried in heartbeats.
+    advert: Mutex<(String, String)>,
+    /// This node's log position, fed by the serving layer via
+    /// [`ElectionNode::note_log`]; read by the vote handlers.
+    last_log_term: AtomicU64,
+    last_seq: AtomicU64,
+    /// Commit watermark advertised when leader / last heard from one.
+    commit: AtomicU64,
+    partitioned: AtomicBool,
+    stop: AtomicBool,
+    accept_thread: Mutex<Option<JoinHandle<()>>>,
+    tick_thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+/// A running election participant. Cheap to clone (shared inner).
+#[derive(Clone)]
+pub struct ElectionNode {
+    inner: Arc<Inner>,
+}
+
+const STATE_FILE: &str = "election.state";
+const STATE_MAGIC: &[u8; 4] = b"ELS1";
+const CONNECT_TIMEOUT: Duration = Duration::from_millis(250);
+const REPLY_TIMEOUT: Duration = Duration::from_millis(500);
+const TICK: Duration = Duration::from_millis(10);
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn encode_state(term: u64, voted_for: u64, last_log_term: u64) -> Vec<u8> {
+    let mut b = Vec::with_capacity(32);
+    b.extend_from_slice(STATE_MAGIC);
+    b.extend_from_slice(&term.to_le_bytes());
+    b.extend_from_slice(&voted_for.to_le_bytes());
+    b.extend_from_slice(&last_log_term.to_le_bytes());
+    b.extend_from_slice(&crc32(&b[..28]).to_le_bytes());
+    b
+}
+
+fn decode_state(bytes: &[u8]) -> Option<(u64, u64, u64)> {
+    if bytes.len() != 32 || &bytes[..4] != STATE_MAGIC {
+        return None;
+    }
+    let crc = u32::from_le_bytes(bytes[28..32].try_into().unwrap());
+    if crc32(&bytes[..28]) != crc {
+        return None;
+    }
+    let at = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
+    Some((at(4), at(12), at(20)))
+}
+
+fn load_state(dir: &std::path::Path) -> Option<(u64, u64, u64)> {
+    decode_state(&std::fs::read(dir.join(STATE_FILE)).ok()?)
+}
+
+/// Durable before it matters: a node that voted (or bumped its term)
+/// must still know after a crash, or one term could mint two leaders.
+fn write_state(dir: &std::path::Path, bytes: &[u8]) -> io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let tmp = dir.join(format!("{STATE_FILE}.tmp"));
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        io::Write::write_all(&mut f, bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, dir.join(STATE_FILE))?;
+    crate::data::persist::sync_dir(dir);
+    Ok(())
+}
+
+fn persist_locked(inner: &Inner, st: &ElState) {
+    let Some(dir) = &inner.cfg.state_dir else { return };
+    let bytes = encode_state(st.term, st.voted_for, inner.last_log_term.load(Ordering::SeqCst));
+    if let Err(e) = write_state(dir, &bytes) {
+        eprintln!("election[{}]: state persist failed: {e}", inner.cfg.id);
+    }
+}
+
+fn draw_timeout(rng: &mut Pcg32, base: Duration) -> Duration {
+    let ms = base.as_millis().max(1) as usize;
+    base + Duration::from_millis(rng.gen_range(ms) as u64)
+}
+
+impl ElectionNode {
+    /// Bind `cfg.listen` and start the node.
+    pub fn start(cfg: ElectionConfig) -> io::Result<ElectionNode> {
+        let listener = TcpListener::bind(&cfg.listen)?;
+        Self::start_on(cfg, listener)
+    }
+
+    /// Start on a pre-bound listener (tests reserve port-0 addresses up
+    /// front so every node can name its peers before any node runs).
+    pub fn start_on(cfg: ElectionConfig, listener: TcpListener) -> io::Result<ElectionNode> {
+        if cfg.id == 0 {
+            return Err(io::Error::new(io::ErrorKind::InvalidInput, "node id 0 is reserved"));
+        }
+        let mut peers = Vec::with_capacity(cfg.peers.len());
+        for p in &cfg.peers {
+            let addr: SocketAddr = p.addr.parse().map_err(|_| {
+                io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    format!("bad peer addr '{}' for node {}", p.addr, p.id),
+                )
+            })?;
+            peers.push((p.id, addr));
+        }
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let (term, voted_for, last_log_term) = cfg
+            .state_dir
+            .as_deref()
+            .and_then(load_state)
+            .unwrap_or((0, 0, 0));
+        let mut rng = Pcg32::new(cfg.seed ^ cfg.id.wrapping_mul(0x9E3779B97F4A7C15));
+        let timeout = draw_timeout(&mut rng, cfg.election_timeout);
+        let now = Instant::now();
+        let inner = Arc::new(Inner {
+            peers,
+            local_addr,
+            state: Mutex::new(ElState {
+                term,
+                voted_for,
+                role: Role::Follower,
+                leader: None,
+                last_heartbeat: now,
+                last_broadcast: now,
+                timeout,
+                votes: 0,
+                rng,
+            }),
+            advert: Mutex::new((String::new(), String::new())),
+            last_log_term: AtomicU64::new(last_log_term),
+            last_seq: AtomicU64::new(0),
+            commit: AtomicU64::new(0),
+            partitioned: AtomicBool::new(false),
+            stop: AtomicBool::new(false),
+            accept_thread: Mutex::new(None),
+            tick_thread: Mutex::new(None),
+            cfg,
+        });
+
+        let acc = Arc::clone(&inner);
+        let accept = std::thread::Builder::new()
+            .name("finger-election-accept".into())
+            .spawn(move || accept_loop(&acc, listener))?;
+        *lock(&inner.accept_thread) = Some(accept);
+
+        let tic = Arc::clone(&inner);
+        let tick = std::thread::Builder::new()
+            .name("finger-election-tick".into())
+            .spawn(move || tick_loop(&tic))?;
+        *lock(&inner.tick_thread) = Some(tick);
+
+        Ok(ElectionNode { inner })
+    }
+
+    pub fn id(&self) -> u64 {
+        self.inner.cfg.id
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.inner.local_addr
+    }
+
+    pub fn role(&self) -> Role {
+        lock(&self.inner.state).role
+    }
+
+    pub fn term(&self) -> u64 {
+        lock(&self.inner.state).term
+    }
+
+    pub fn is_leader(&self) -> bool {
+        self.role() == Role::Leader
+    }
+
+    /// The leader this node currently recognizes (itself included).
+    pub fn leader(&self) -> Option<LeaderInfo> {
+        lock(&self.inner.state).leader.clone()
+    }
+
+    /// The highest commit watermark heard from (or advertised as) a
+    /// leader.
+    pub fn leader_commit(&self) -> u64 {
+        self.inner.commit.load(Ordering::SeqCst)
+    }
+
+    /// Advertise where this node's replication hub and query plane
+    /// listen; carried in heartbeats when it leads.
+    pub fn set_advert(&self, repl_addr: &str, query_addr: &str) {
+        *lock(&self.inner.advert) = (repl_addr.to_string(), query_addr.to_string());
+    }
+
+    /// Feed the node's durable log position `(term, seq)` into the vote
+    /// handlers. The term component persists when it changes (once per
+    /// leadership change, not per op).
+    pub fn note_log(&self, term: u64, seq: u64) {
+        self.inner.last_seq.store(seq, Ordering::SeqCst);
+        let prev = self.inner.last_log_term.swap(term, Ordering::SeqCst);
+        if prev != term {
+            let st = lock(&self.inner.state);
+            persist_locked(&self.inner, &st);
+        }
+    }
+
+    /// Advance the commit watermark advertised in this leader's
+    /// heartbeats.
+    pub fn note_commit(&self, seq: u64) {
+        self.inner.commit.fetch_max(seq, Ordering::SeqCst);
+    }
+
+    /// The log-position term last fed via [`ElectionNode::note_log`] (or
+    /// restored from the persisted state file).
+    pub fn last_log_term(&self) -> u64 {
+        self.inner.last_log_term.load(Ordering::SeqCst)
+    }
+
+    /// The log-position seq last fed via [`ElectionNode::note_log`].
+    pub fn last_seq(&self) -> u64 {
+        self.inner.last_seq.load(Ordering::SeqCst)
+    }
+
+    /// Test seam: a partitioned node freezes — it sends nothing, drops
+    /// every incoming frame without replying, and never campaigns (so
+    /// its term does not inflate while cut off). Healing resets its
+    /// election clock so it first listens for the current leader.
+    pub fn set_partitioned(&self, on: bool) {
+        self.inner.partitioned.store(on, Ordering::SeqCst);
+        if !on {
+            lock(&self.inner.state).last_heartbeat = Instant::now();
+        }
+    }
+
+    pub fn is_partitioned(&self) -> bool {
+        self.inner.partitioned.load(Ordering::SeqCst)
+    }
+
+    /// Observe a term from outside the election transport (e.g. a
+    /// replication peer): a higher term demotes immediately.
+    pub fn observe_term(&self, term: u64) {
+        step_down(&self.inner, term);
+    }
+
+    /// Stop the threads. Safe to call more than once.
+    pub fn shutdown(&self) {
+        self.inner.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = lock(&self.inner.accept_thread).take() {
+            t.join().ok();
+        }
+        if let Some(t) = lock(&self.inner.tick_thread).take() {
+            t.join().ok();
+        }
+    }
+}
+
+/// Demote to follower at `term` if it is newer than ours.
+fn step_down(inner: &Inner, term: u64) {
+    let mut st = lock(&inner.state);
+    if term > st.term {
+        st.term = term;
+        st.voted_for = 0;
+        st.role = Role::Follower;
+        st.leader = None;
+        st.last_heartbeat = Instant::now();
+        persist_locked(inner, &st);
+    }
+}
+
+fn accept_loop(inner: &Arc<Inner>, listener: TcpListener) {
+    while !inner.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => handle_conn(inner, stream),
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+fn handle_conn(inner: &Arc<Inner>, mut stream: TcpStream) {
+    if inner.partitioned.load(Ordering::SeqCst) {
+        return; // dropped without a reply: the caller sees a dead peer
+    }
+    stream.set_read_timeout(Some(REPLY_TIMEOUT)).ok();
+    stream.set_nodelay(true).ok();
+    let Ok(Some(req)) = Frame::read_from(&mut stream) else { return };
+    if inner.partitioned.load(Ordering::SeqCst) {
+        return;
+    }
+    let reply = match req {
+        Frame::VoteRequest { term, candidate, last_log_term, last_seq } => {
+            handle_vote(inner, term, candidate, last_log_term, last_seq)
+        }
+        Frame::Heartbeat { term, leader, commit, repl_addr, query_addr } => {
+            handle_heartbeat(inner, term, leader, commit, repl_addr, query_addr)
+        }
+        _ => return, // replication frames do not belong on this port
+    };
+    reply.write_to(&mut stream).ok();
+}
+
+fn handle_vote(inner: &Inner, term: u64, candidate: u64, last_log_term: u64, last_seq: u64) -> Frame {
+    let mut st = lock(&inner.state);
+    let mut dirty = false;
+    if term > st.term {
+        st.term = term;
+        st.voted_for = 0;
+        st.role = Role::Follower;
+        st.leader = None;
+        dirty = true;
+    }
+    let mine = (
+        inner.last_log_term.load(Ordering::SeqCst),
+        inner.last_seq.load(Ordering::SeqCst),
+    );
+    let up_to_date = (last_log_term, last_seq) >= mine;
+    let granted = term == st.term
+        && (st.voted_for == 0 || st.voted_for == candidate)
+        && up_to_date;
+    if granted {
+        if st.voted_for != candidate {
+            st.voted_for = candidate;
+            dirty = true;
+        }
+        // Granting resets the election clock: give the candidate a full
+        // timeout to win before this node campaigns against it.
+        st.last_heartbeat = Instant::now();
+    }
+    if dirty {
+        persist_locked(inner, &st);
+    }
+    Frame::VoteReply { term: st.term, granted }
+}
+
+fn handle_heartbeat(
+    inner: &Inner,
+    term: u64,
+    leader: u64,
+    commit: u64,
+    repl_addr: String,
+    query_addr: String,
+) -> Frame {
+    let mut st = lock(&inner.state);
+    if term < st.term {
+        return Frame::HeartbeatAck { term: st.term };
+    }
+    let mut dirty = false;
+    if term > st.term {
+        st.term = term;
+        st.voted_for = 0;
+        dirty = true;
+    }
+    // Equal term included: a candidate that hears the winner's
+    // heartbeat steps down.
+    st.role = Role::Follower;
+    st.leader = Some(LeaderInfo { id: leader, term, repl_addr, query_addr });
+    st.last_heartbeat = Instant::now();
+    inner.commit.fetch_max(commit, Ordering::SeqCst);
+    if dirty {
+        persist_locked(inner, &st);
+    }
+    Frame::HeartbeatAck { term: st.term }
+}
+
+fn tick_loop(inner: &Arc<Inner>) {
+    while !inner.stop.load(Ordering::SeqCst) {
+        std::thread::sleep(TICK);
+        if inner.partitioned.load(Ordering::SeqCst) {
+            continue;
+        }
+        let now = Instant::now();
+        enum Action {
+            Broadcast(u64),
+            Campaign(u64),
+            None,
+        }
+        let action = {
+            let mut st = lock(&inner.state);
+            match st.role {
+                Role::Leader => {
+                    if now.duration_since(st.last_broadcast) >= inner.cfg.heartbeat_interval {
+                        st.last_broadcast = now;
+                        Action::Broadcast(st.term)
+                    } else {
+                        Action::None
+                    }
+                }
+                _ => {
+                    if now.duration_since(st.last_heartbeat) >= st.timeout {
+                        st.term += 1;
+                        st.voted_for = inner.cfg.id;
+                        st.role = Role::Candidate;
+                        st.leader = None;
+                        st.votes = 1;
+                        st.last_heartbeat = now;
+                        let base = inner.cfg.election_timeout;
+                        st.timeout = draw_timeout(&mut st.rng, base);
+                        persist_locked(inner, &st);
+                        Action::Campaign(st.term)
+                    } else {
+                        Action::None
+                    }
+                }
+            }
+        };
+        match action {
+            Action::Broadcast(term) => broadcast_heartbeats(inner, term),
+            Action::Campaign(term) => start_campaign(inner, term),
+            Action::None => {}
+        }
+    }
+}
+
+fn majority(inner: &Inner) -> usize {
+    (inner.peers.len() + 1) / 2 + 1
+}
+
+fn become_leader_if_won(inner: &Arc<Inner>, term: u64) {
+    let won = {
+        let mut st = lock(&inner.state);
+        if st.role == Role::Candidate && st.term == term && st.votes >= majority(inner) {
+            st.role = Role::Leader;
+            let (repl_addr, query_addr) = lock(&inner.advert).clone();
+            st.leader = Some(LeaderInfo { id: inner.cfg.id, term, repl_addr, query_addr });
+            st.last_broadcast = Instant::now();
+            true
+        } else {
+            false
+        }
+    };
+    if won {
+        // Announce immediately: every heartbeat a peer hears before its
+        // timeout fires is one fewer disputed election.
+        broadcast_heartbeats(inner, term);
+    }
+}
+
+fn start_campaign(inner: &Arc<Inner>, term: u64) {
+    become_leader_if_won(inner, term); // single-node cluster wins alone
+    let last_log_term = inner.last_log_term.load(Ordering::SeqCst);
+    let last_seq = inner.last_seq.load(Ordering::SeqCst);
+    for &(_, addr) in &inner.peers {
+        let inner = Arc::clone(inner);
+        std::thread::Builder::new()
+            .name("finger-election-vote".into())
+            .spawn(move || {
+                if inner.partitioned.load(Ordering::SeqCst) {
+                    return;
+                }
+                let req = Frame::VoteRequest {
+                    term,
+                    candidate: inner.cfg.id,
+                    last_log_term,
+                    last_seq,
+                };
+                // A dead or partitioned peer simply contributes no vote.
+                if let Some(Frame::VoteReply { term: t, granted }) = ask(&addr, &req) {
+                    if t > term {
+                        step_down(&inner, t);
+                    } else if granted {
+                        {
+                            let mut st = lock(&inner.state);
+                            if st.role == Role::Candidate && st.term == term {
+                                st.votes += 1;
+                            }
+                        }
+                        become_leader_if_won(&inner, term);
+                    }
+                }
+            })
+            .ok();
+    }
+}
+
+fn broadcast_heartbeats(inner: &Arc<Inner>, term: u64) {
+    let (repl_addr, query_addr) = lock(&inner.advert).clone();
+    let commit = inner.commit.load(Ordering::SeqCst);
+    for &(_, addr) in &inner.peers {
+        let inner = Arc::clone(inner);
+        let (repl_addr, query_addr) = (repl_addr.clone(), query_addr.clone());
+        std::thread::Builder::new()
+            .name("finger-election-hb".into())
+            .spawn(move || {
+                if inner.partitioned.load(Ordering::SeqCst) {
+                    return;
+                }
+                let hb = Frame::Heartbeat {
+                    term,
+                    leader: inner.cfg.id,
+                    commit,
+                    repl_addr,
+                    query_addr,
+                };
+                if let Some(Frame::HeartbeatAck { term: t }) = ask(&addr, &hb) {
+                    if t > term {
+                        step_down(&inner, t);
+                    }
+                }
+            })
+            .ok();
+    }
+}
+
+/// One request/response exchange on a fresh connection.
+fn ask(addr: &SocketAddr, req: &Frame) -> Option<Frame> {
+    let mut stream = TcpStream::connect_timeout(addr, CONNECT_TIMEOUT).ok()?;
+    stream.set_read_timeout(Some(REPLY_TIMEOUT)).ok();
+    stream.set_nodelay(true).ok();
+    req.write_to(&mut stream).ok()?;
+    Frame::read_from(&mut stream).ok()?
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A node whose election timeout is effectively infinite: it never
+    /// campaigns, so tests drive it purely with frames over TCP.
+    fn quiet_node(id: u64, state_dir: Option<PathBuf>) -> ElectionNode {
+        ElectionNode::start(ElectionConfig {
+            id,
+            listen: "127.0.0.1:0".into(),
+            peers: Vec::new(),
+            election_timeout: Duration::from_secs(3600),
+            heartbeat_interval: Duration::from_secs(3600),
+            state_dir,
+            seed: 7,
+        })
+        .expect("start quiet node")
+    }
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("finger_election_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn send(addr: &SocketAddr, req: &Frame) -> Option<Frame> {
+        ask(addr, req)
+    }
+
+    #[test]
+    fn votes_require_up_to_date_logs_and_are_single_per_term() {
+        let node = quiet_node(1, None);
+        node.note_log(2, 10);
+        let addr = node.local_addr();
+        let vote = |term, candidate, llt, ls| {
+            match send(&addr, &Frame::VoteRequest { term, candidate, last_log_term: llt, last_seq: ls }) {
+                Some(Frame::VoteReply { term, granted }) => (term, granted),
+                other => panic!("want a vote reply, got {other:?}"),
+            }
+        };
+        // A longer but older-term log loses the lexicographic compare.
+        assert_eq!(vote(5, 2, 1, 50), (5, false));
+        // Up-to-date candidate wins the vote.
+        assert_eq!(vote(5, 3, 2, 10), (5, true));
+        // Same term, different candidate: already voted.
+        assert_eq!(vote(5, 4, 2, 10), (5, false));
+        // Same candidate re-asking is idempotent.
+        assert_eq!(vote(5, 3, 2, 10), (5, true));
+        // A new term resets the vote.
+        assert_eq!(vote(6, 4, 3, 0), (6, true));
+        // Stale-term request is refused and told the current term.
+        assert_eq!(vote(4, 5, 9, 99), (6, false));
+        node.shutdown();
+    }
+
+    #[test]
+    fn heartbeats_install_a_leader_and_stale_terms_are_fenced() {
+        let node = quiet_node(1, None);
+        let addr = node.local_addr();
+        let hb = Frame::Heartbeat {
+            term: 3,
+            leader: 9,
+            commit: 17,
+            repl_addr: "127.0.0.1:7780".into(),
+            query_addr: "127.0.0.1:7771".into(),
+        };
+        assert_eq!(send(&addr, &hb), Some(Frame::HeartbeatAck { term: 3 }));
+        assert_eq!(node.term(), 3);
+        assert_eq!(node.role(), Role::Follower);
+        let leader = node.leader().expect("leader installed");
+        assert_eq!((leader.id, leader.term), (9, 3));
+        assert_eq!(leader.repl_addr, "127.0.0.1:7780");
+        assert_eq!(node.leader_commit(), 17);
+        // A stale-term heartbeat changes nothing and is answered with
+        // the newer term (the fence a deposed leader observes).
+        let stale = Frame::Heartbeat {
+            term: 2,
+            leader: 8,
+            commit: 0,
+            repl_addr: String::new(),
+            query_addr: String::new(),
+        };
+        assert_eq!(send(&addr, &stale), Some(Frame::HeartbeatAck { term: 3 }));
+        assert_eq!(node.leader().expect("unchanged").id, 9);
+        node.shutdown();
+    }
+
+    #[test]
+    fn term_and_vote_survive_a_restart() {
+        let dir = tmp_dir("persist");
+        let node = quiet_node(1, Some(dir.clone()));
+        let addr = node.local_addr();
+        send(
+            &addr,
+            &Frame::Heartbeat {
+                term: 7,
+                leader: 2,
+                commit: 0,
+                repl_addr: String::new(),
+                query_addr: String::new(),
+            },
+        );
+        assert_eq!(node.term(), 7);
+        node.shutdown();
+        let reborn = quiet_node(1, Some(dir.clone()));
+        assert_eq!(reborn.term(), 7, "term must survive a crash");
+        // A corrupt state file is ignored, not trusted.
+        std::fs::write(dir.join(STATE_FILE), b"garbage").unwrap();
+        assert_eq!(load_state(&dir), None);
+        reborn.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn partitioned_node_drops_frames_without_reply() {
+        let node = quiet_node(1, None);
+        let addr = node.local_addr();
+        node.set_partitioned(true);
+        assert!(node.is_partitioned());
+        let req = Frame::VoteRequest { term: 9, candidate: 2, last_log_term: 9, last_seq: 9 };
+        assert_eq!(send(&addr, &req), None, "partitioned node must not reply");
+        assert_eq!(node.term(), 0, "dropped frames must not move the term");
+        node.set_partitioned(false);
+        assert!(matches!(send(&addr, &req), Some(Frame::VoteReply { granted: true, .. })));
+        node.shutdown();
+    }
+
+    fn cluster(n: usize, base_ms: u64) -> Vec<ElectionNode> {
+        let listeners: Vec<TcpListener> =
+            (0..n).map(|_| TcpListener::bind("127.0.0.1:0").expect("bind")).collect();
+        let addrs: Vec<String> =
+            listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+        listeners
+            .into_iter()
+            .enumerate()
+            .map(|(i, listener)| {
+                let peers = addrs
+                    .iter()
+                    .enumerate()
+                    .filter(|(j, _)| *j != i)
+                    .map(|(j, a)| PeerSpec { id: (j + 1) as u64, addr: a.clone() })
+                    .collect();
+                ElectionNode::start_on(
+                    ElectionConfig {
+                        id: (i + 1) as u64,
+                        listen: String::new(),
+                        peers,
+                        election_timeout: Duration::from_millis(base_ms),
+                        heartbeat_interval: Duration::from_millis(base_ms / 4),
+                        state_dir: None,
+                        seed: 0xE1EC + i as u64,
+                    },
+                    listener,
+                )
+                .expect("start node")
+            })
+            .collect()
+    }
+
+    fn wait_for_leader(nodes: &[ElectionNode], budget: Duration) -> usize {
+        let deadline = Instant::now() + budget;
+        loop {
+            let leaders: Vec<usize> = nodes
+                .iter()
+                .enumerate()
+                .filter(|(_, n)| n.is_leader())
+                .map(|(i, _)| i)
+                .collect();
+            if leaders.len() == 1 {
+                let li = leaders[0];
+                let term = nodes[li].term();
+                // Stable once every follower recognizes it at that term.
+                let all_agree = nodes.iter().enumerate().all(|(i, n)| {
+                    i == li
+                        || n.leader().map(|l| l.id == nodes[li].id() && l.term == term)
+                            == Some(true)
+                });
+                if all_agree {
+                    return li;
+                }
+            }
+            assert!(Instant::now() < deadline, "no stable leader within {budget:?}");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    #[test]
+    fn three_nodes_elect_exactly_one_leader() {
+        let nodes = cluster(3, 150);
+        let li = wait_for_leader(&nodes, Duration::from_secs(10));
+        let term = nodes[li].term();
+        assert!(term >= 1);
+        for (i, n) in nodes.iter().enumerate() {
+            if i != li {
+                assert_eq!(n.role(), Role::Follower);
+            }
+        }
+        for n in &nodes {
+            n.shutdown();
+        }
+    }
+
+    /// The log-matching check: with two nodes, the one holding the
+    /// longer durable log must win (the stale node can never assemble a
+    /// majority because the up-to-date node refuses it).
+    #[test]
+    fn log_matching_lets_only_the_longest_log_win() {
+        let nodes = cluster(2, 150);
+        nodes[0].note_log(1, 5);
+        nodes[1].note_log(1, 0);
+        let li = wait_for_leader(&nodes, Duration::from_secs(15));
+        assert_eq!(li, 0, "the node with the longer durable log must win");
+        for n in &nodes {
+            n.shutdown();
+        }
+    }
+}

@@ -30,8 +30,27 @@
 //!   registration-time catch-up is fully enqueued; the replica uses it
 //!   to report readiness.
 //!
-//! The golden fixture `rust/tests/fixtures/repl_frame_v1.bin` pins this
-//! encoding byte for byte; any drift fails `repl_props`.
+//! Election frames (types 6–9, one request/response pair per
+//! short-lived connection between election endpoints):
+//!
+//! * `VoteRequest` (6), candidate → peer:
+//!   `term u64 | candidate u64 | last_log_term u64 | last_seq u64`.
+//!   The `(last_log_term, last_seq)` pair is the candidate's log
+//!   position; a peer grants only to candidates at least as up to date
+//!   as itself (lexicographic compare), so a node missing
+//!   quorum-committed ops can never win.
+//! * `VoteReply` (7), peer → candidate: `term u64 | granted u8`.
+//! * `Heartbeat` (8), leader → peer: `term u64 | leader u64 |
+//!   commit u64 | repl_len u16 | repl addr bytes | query_len u16 |
+//!   query addr bytes`. The addr strings advertise where the leader's
+//!   replication hub and query plane live, so followers discover both
+//!   without any out-of-band config.
+//! * `HeartbeatAck` (9), peer → leader: `term u64` (a higher term than
+//!   the leader's fences a deposed leader immediately).
+//!
+//! The golden fixture `rust/tests/fixtures/repl_frame_v1.bin` pins the
+//! v1 (types 1–5) encoding byte for byte; any drift fails `repl_props`.
+//! Types 6–9 are additive — the v1 bytes are untouched.
 
 use std::io::{self, Read, Write};
 
@@ -49,6 +68,13 @@ const TY_SNAPSHOT: u8 = 2;
 const TY_OP: u8 = 3;
 const TY_ACK: u8 = 4;
 const TY_CAUGHT_UP: u8 = 5;
+const TY_VOTE_REQUEST: u8 = 6;
+const TY_VOTE_REPLY: u8 = 7;
+const TY_HEARTBEAT: u8 = 8;
+const TY_HEARTBEAT_ACK: u8 = 9;
+
+/// Cap on an advertised addr string inside a `Heartbeat` frame.
+const MAX_ADDR: usize = 256;
 
 fn invalid(msg: String) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg)
@@ -63,6 +89,10 @@ pub enum Frame {
     Op { record: Vec<u8> },
     Ack { seq: u64 },
     CaughtUp { seq: u64 },
+    VoteRequest { term: u64, candidate: u64, last_log_term: u64, last_seq: u64 },
+    VoteReply { term: u64, granted: bool },
+    Heartbeat { term: u64, leader: u64, commit: u64, repl_addr: String, query_addr: String },
+    HeartbeatAck { term: u64 },
 }
 
 impl Frame {
@@ -78,6 +108,10 @@ impl Frame {
             Frame::Op { .. } => "op",
             Frame::Ack { .. } => "ack",
             Frame::CaughtUp { .. } => "caught_up",
+            Frame::VoteRequest { .. } => "vote_request",
+            Frame::VoteReply { .. } => "vote_reply",
+            Frame::Heartbeat { .. } => "heartbeat",
+            Frame::HeartbeatAck { .. } => "heartbeat_ack",
         }
     }
 
@@ -88,6 +122,10 @@ impl Frame {
             Frame::Op { .. } => TY_OP,
             Frame::Ack { .. } => TY_ACK,
             Frame::CaughtUp { .. } => TY_CAUGHT_UP,
+            Frame::VoteRequest { .. } => TY_VOTE_REQUEST,
+            Frame::VoteReply { .. } => TY_VOTE_REPLY,
+            Frame::Heartbeat { .. } => TY_HEARTBEAT,
+            Frame::HeartbeatAck { .. } => TY_HEARTBEAT_ACK,
         }
     }
 
@@ -107,6 +145,32 @@ impl Frame {
             }
             Frame::Op { record } => record.clone(),
             Frame::Ack { seq } | Frame::CaughtUp { seq } => seq.to_le_bytes().to_vec(),
+            Frame::VoteRequest { term, candidate, last_log_term, last_seq } => {
+                let mut p = Vec::with_capacity(32);
+                p.extend_from_slice(&term.to_le_bytes());
+                p.extend_from_slice(&candidate.to_le_bytes());
+                p.extend_from_slice(&last_log_term.to_le_bytes());
+                p.extend_from_slice(&last_seq.to_le_bytes());
+                p
+            }
+            Frame::VoteReply { term, granted } => {
+                let mut p = Vec::with_capacity(9);
+                p.extend_from_slice(&term.to_le_bytes());
+                p.push(u8::from(*granted));
+                p
+            }
+            Frame::Heartbeat { term, leader, commit, repl_addr, query_addr } => {
+                let mut p = Vec::with_capacity(28 + repl_addr.len() + query_addr.len());
+                p.extend_from_slice(&term.to_le_bytes());
+                p.extend_from_slice(&leader.to_le_bytes());
+                p.extend_from_slice(&commit.to_le_bytes());
+                for addr in [repl_addr, query_addr] {
+                    p.extend_from_slice(&(addr.len() as u16).to_le_bytes());
+                    p.extend_from_slice(addr.as_bytes());
+                }
+                p
+            }
+            Frame::HeartbeatAck { term } => term.to_le_bytes().to_vec(),
         }
     }
 
@@ -214,6 +278,70 @@ impl Frame {
                 }
                 Ok(Frame::CaughtUp { seq: u64_at(&payload)? })
             }
+            TY_VOTE_REQUEST => {
+                if payload.len() != 32 {
+                    return Err(format!("vote_request frame wants 32 bytes, got {}", payload.len()));
+                }
+                Ok(Frame::VoteRequest {
+                    term: u64_at(&payload)?,
+                    candidate: u64_at(&payload[8..])?,
+                    last_log_term: u64_at(&payload[16..])?,
+                    last_seq: u64_at(&payload[24..])?,
+                })
+            }
+            TY_VOTE_REPLY => {
+                if payload.len() != 9 {
+                    return Err(format!("vote_reply frame wants 9 bytes, got {}", payload.len()));
+                }
+                let granted = match payload[8] {
+                    0 => false,
+                    1 => true,
+                    other => return Err(format!("vote_reply granted byte {other}")),
+                };
+                Ok(Frame::VoteReply { term: u64_at(&payload)?, granted })
+            }
+            TY_HEARTBEAT => {
+                if payload.len() < 28 {
+                    return Err(format!("heartbeat frame wants >= 28 bytes, got {}", payload.len()));
+                }
+                let term = u64_at(&payload)?;
+                let leader = u64_at(&payload[8..])?;
+                let commit = u64_at(&payload[16..])?;
+                let mut at = 24usize;
+                let mut addrs = Vec::with_capacity(2);
+                for what in ["repl", "query"] {
+                    let len_bytes = payload
+                        .get(at..at + 2)
+                        .ok_or_else(|| format!("heartbeat {what} addr length is torn"))?;
+                    let len = u16::from_le_bytes(len_bytes.try_into().unwrap()) as usize;
+                    if len > MAX_ADDR {
+                        return Err(format!("heartbeat {what} addr claims {len} bytes"));
+                    }
+                    at += 2;
+                    let bytes = payload
+                        .get(at..at + len)
+                        .ok_or_else(|| format!("heartbeat {what} addr is torn"))?;
+                    let addr = std::str::from_utf8(bytes)
+                        .map_err(|_| format!("heartbeat {what} addr is not utf-8"))?;
+                    addrs.push(addr.to_string());
+                    at += len;
+                }
+                if at != payload.len() {
+                    return Err(format!(
+                        "heartbeat frame has {} trailing byte(s)",
+                        payload.len() - at
+                    ));
+                }
+                let query_addr = addrs.pop().unwrap();
+                let repl_addr = addrs.pop().unwrap();
+                Ok(Frame::Heartbeat { term, leader, commit, repl_addr, query_addr })
+            }
+            TY_HEARTBEAT_ACK => {
+                if payload.len() != 8 {
+                    return Err(format!("heartbeat_ack frame wants 8 bytes, got {}", payload.len()));
+                }
+                Ok(Frame::HeartbeatAck { term: u64_at(&payload)? })
+            }
             other => Err(format!("unknown frame type {other}")),
         }
     }
@@ -244,6 +372,24 @@ mod tests {
             Frame::op(12, &WalOp::Compact),
             Frame::Ack { seq: 12 },
             Frame::CaughtUp { seq: 12 },
+            Frame::VoteRequest { term: 3, candidate: 2, last_log_term: 2, last_seq: 17 },
+            Frame::VoteReply { term: 3, granted: true },
+            Frame::VoteReply { term: 4, granted: false },
+            Frame::Heartbeat {
+                term: 3,
+                leader: 2,
+                commit: 17,
+                repl_addr: "127.0.0.1:7780".into(),
+                query_addr: "127.0.0.1:7771".into(),
+            },
+            Frame::Heartbeat {
+                term: 0,
+                leader: 1,
+                commit: 0,
+                repl_addr: String::new(),
+                query_addr: String::new(),
+            },
+            Frame::HeartbeatAck { term: 3 },
         ]
     }
 
@@ -295,6 +441,49 @@ mod tests {
         let mut huge = good;
         huge[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(Frame::read_from(&mut Cursor::new(huge)).is_err());
+    }
+
+    /// Types 1–5 keep their v1 encoding byte for byte: the election
+    /// frames are additive, so a v1 peer stream still parses.
+    #[test]
+    fn legacy_frame_bytes_are_untouched() {
+        let hello = Frame::Hello { last_seq: 7, need_snapshot: true }.encode();
+        assert_eq!(hello[8], TY_HELLO);
+        assert_eq!(&hello[9..17], &7u64.to_le_bytes());
+        assert_eq!(hello[17], 1);
+        assert_eq!(hello.len(), HEADER_SIZE + 9);
+        let ack = Frame::Ack { seq: 12 }.encode();
+        assert_eq!(ack[8], TY_ACK);
+        assert_eq!(&ack[9..17], &12u64.to_le_bytes());
+    }
+
+    #[test]
+    fn malformed_election_payloads_are_rejected() {
+        // A heartbeat whose addr length field overruns the payload.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u64.to_le_bytes());
+        payload.extend_from_slice(&2u64.to_le_bytes());
+        payload.extend_from_slice(&3u64.to_le_bytes());
+        payload.extend_from_slice(&200u16.to_le_bytes()); // claims 200 bytes, has 2
+        payload.extend_from_slice(b"hi");
+        assert!(Frame::decode_payload(TY_HEARTBEAT, payload).is_err());
+        // Truncated vote request.
+        assert!(Frame::decode_payload(TY_VOTE_REQUEST, vec![0u8; 24]).is_err());
+        // Vote reply with a non-boolean granted byte.
+        let mut reply = 5u64.to_le_bytes().to_vec();
+        reply.push(2);
+        assert!(Frame::decode_payload(TY_VOTE_REPLY, reply).is_err());
+        // Heartbeat with trailing garbage after both addrs.
+        let mut hb = Frame::Heartbeat {
+            term: 1,
+            leader: 2,
+            commit: 3,
+            repl_addr: "a".into(),
+            query_addr: "b".into(),
+        }
+        .payload();
+        hb.push(0);
+        assert!(Frame::decode_payload(TY_HEARTBEAT, hb).is_err());
     }
 
     #[test]

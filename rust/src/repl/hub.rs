@@ -1,7 +1,7 @@
 //! Primary-side replication hub: accepts replicas, streams the ordered
 //! WAL, gates client acknowledgements on replica acks.
 //!
-//! One hub per primary. Each accepted connection handshakes with a
+//! One hub per leader. Each accepted connection handshakes with a
 //! [`Frame::Hello`] carrying the replica's durable position, then — with
 //! the hub state locked, so live publishes cannot interleave — the hub
 //! reads a catch-up from the WAL's generation manager
@@ -20,12 +20,26 @@
 //!   registered and receives it live). The per-slot `last_enqueued`
 //!   watermark drops the overlap.
 //!
-//! Ack gating: `wait_acked(seq)` blocks until enough connected replicas
-//! report a durable position `>= seq` — `none` returns immediately,
-//! `one` wants any single replica, `all` wants `expect` of them — or
-//! the timeout elapses (a structured error; the op stays applied and
-//! logged locally, so a timed-out ack is ambiguous, not rolled back —
-//! exactly the semantics of every quorum system's timeout).
+//! A replica that claims a durable position AHEAD of this hub's log (a
+//! deposed leader reconnecting with an uncommitted tail) is never
+//! believed: the handshake forces a full snapshot and zeroes the slot's
+//! watermarks, so the stale claim can neither vote phantom quorum acks
+//! nor filter future publishes.
+//!
+//! Ack gating: `wait_acked(seq)` blocks until enough of the cluster
+//! reports a durable position `>= seq` — `none` returns immediately,
+//! `one` wants any single replica, `all` wants `expect` replicas, and
+//! `quorum` wants a majority of the `expect`-node cluster *counting the
+//! leader's own fsync as one vote*. Quorum waits degrade instead of
+//! hanging: when fewer than a majority of nodes are even connected the
+//! wait fails fast with a structured `no-quorum` error (the op stays
+//! applied and logged locally — ambiguous, not rolled back — exactly
+//! the semantics of every quorum system's timeout).
+//!
+//! In cluster mode the hub does not own a listener: construct with
+//! [`ReplHub::new`] and hand accepted replica sockets to
+//! [`ReplHub::attach`] (the cluster supervisor owns the bound port so
+//! the advertised address survives leader changes).
 
 use std::io::{self, BufReader};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -41,12 +55,43 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
+/// Hub tuning. `expect` is the cluster size the `all` and `quorum`
+/// levels are judged against (min 1): for `all` it is the replica count
+/// to wait for; for `quorum` it is the total node count *including the
+/// leader*, of which a majority must be durable.
+#[derive(Clone, Debug)]
+pub struct HubOpts {
+    pub level: AckLevel,
+    pub expect: usize,
+    pub ack_timeout: Duration,
+    /// Max live (post-catch-up) frames a replica may leave unacked
+    /// before the hub drops it back to the reconnect+catch-up path.
+    /// Bounds queue memory when a replica stalls without dying.
+    pub max_inflight: u64,
+}
+
+impl Default for HubOpts {
+    fn default() -> Self {
+        HubOpts {
+            level: AckLevel::One,
+            expect: 1,
+            ack_timeout: Duration::from_secs(5),
+            max_inflight: 4096,
+        }
+    }
+}
+
 struct Slot {
     id: u64,
     /// Highest seq enqueued to this replica (catch-up included).
     last_enqueued: u64,
     /// Highest seq the replica acked as durably applied.
     acked: u64,
+    /// Watermark at registration time: live publishes below it were
+    /// delivered by the catch-up read, so the in-flight window counts
+    /// only frames above `max(acked, catchup_high)` — a replica still
+    /// draining a large catch-up is not punished for it.
+    catchup_high: u64,
     tx: mpsc::Sender<Vec<u8>>,
     /// Kept for shutdown: closing the socket unblocks the reader thread.
     stream: TcpStream,
@@ -65,11 +110,10 @@ pub struct ReplicaStatus {
     pub enqueued: u64,
 }
 
-/// See the module docs. Construct with [`ReplHub::start`].
+/// See the module docs. Construct with [`ReplHub::start`] (owns a
+/// listener) or [`ReplHub::new`] + [`ReplHub::attach`] (cluster mode).
 pub struct ReplHub {
-    level: AckLevel,
-    expect: usize,
-    ack_timeout: Duration,
+    opts: HubOpts,
     wal: Arc<Wal>,
     local_addr: SocketAddr,
     state: Mutex<HubState>,
@@ -79,29 +123,30 @@ pub struct ReplHub {
 }
 
 impl ReplHub {
-    /// Bind the replication listener and start accepting replicas.
-    /// `expect` is the replica count level `all` waits for (min 1).
-    pub fn start(
-        addr: &str,
-        wal: Arc<Wal>,
-        level: AckLevel,
-        expect: usize,
-        ack_timeout: Duration,
-    ) -> io::Result<Arc<ReplHub>> {
-        let listener = TcpListener::bind(addr)?;
-        let local_addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
-        let hub = Arc::new(ReplHub {
-            level,
-            expect: expect.max(1),
-            ack_timeout,
+    /// Listener-less hub for cluster mode: the caller owns the bound
+    /// replication port and routes accepted sockets via [`attach`].
+    /// `advertised` is what [`local_addr`] reports.
+    ///
+    /// [`attach`]: ReplHub::attach
+    /// [`local_addr`]: ReplHub::local_addr
+    pub fn new(wal: Arc<Wal>, opts: HubOpts, advertised: SocketAddr) -> Arc<ReplHub> {
+        Arc::new(ReplHub {
+            opts: HubOpts { expect: opts.expect.max(1), ..opts },
             wal,
-            local_addr,
+            local_addr: advertised,
             state: Mutex::new(HubState { next_id: 0, slots: Vec::new() }),
             acked_cv: Condvar::new(),
             stop: Arc::new(AtomicBool::new(false)),
             accept_thread: Mutex::new(None),
-        });
+        })
+    }
+
+    /// Bind the replication listener and start accepting replicas.
+    pub fn start(addr: &str, wal: Arc<Wal>, opts: HubOpts) -> io::Result<Arc<ReplHub>> {
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let hub = ReplHub::new(wal, opts, local_addr);
         let accept = {
             let hub = Arc::clone(&hub);
             std::thread::Builder::new()
@@ -111,13 +156,7 @@ impl ReplHub {
                         break;
                     }
                     match listener.accept() {
-                        Ok((stream, _)) => {
-                            let hub2 = Arc::clone(&hub);
-                            std::thread::Builder::new()
-                                .name("finger-repl-conn".into())
-                                .spawn(move || hub2.serve_replica(stream))
-                                .ok();
-                        }
+                        Ok((stream, _)) => hub.attach(stream),
                         Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
                             std::thread::sleep(Duration::from_millis(2));
                         }
@@ -129,16 +168,30 @@ impl ReplHub {
         Ok(hub)
     }
 
+    /// Hand an accepted replica socket to this hub (spawns the
+    /// per-connection handshake/ack thread).
+    pub fn attach(self: &Arc<Self>, stream: TcpStream) {
+        if self.stop.load(Ordering::Relaxed) {
+            stream.shutdown(std::net::Shutdown::Both).ok();
+            return;
+        }
+        let hub = Arc::clone(self);
+        std::thread::Builder::new()
+            .name("finger-repl-conn".into())
+            .spawn(move || hub.serve_replica(stream))
+            .ok();
+    }
+
     pub fn local_addr(&self) -> SocketAddr {
         self.local_addr
     }
 
     pub fn level(&self) -> AckLevel {
-        self.level
+        self.opts.level
     }
 
     pub fn expect(&self) -> usize {
-        self.expect
+        self.opts.expect
     }
 
     /// Handshake + catch-up + registration, then pump acks until the
@@ -147,10 +200,17 @@ impl ReplHub {
         stream.set_nodelay(true).ok();
         let Ok(reader_stream) = stream.try_clone() else { return };
         let mut reader = BufReader::new(reader_stream);
-        let (last_seq, need_snapshot) = match Frame::read_from(&mut reader) {
+        let (hello_seq, hello_snap) = match Frame::read_from(&mut reader) {
             Ok(Some(Frame::Hello { last_seq, need_snapshot })) => (last_seq, need_snapshot),
             _ => return, // anything else: not a replica; drop
         };
+        // Never believe a position ahead of our own log (a deposed
+        // leader's uncommitted tail): force a full snapshot and zero the
+        // watermarks, else the claim counts as a phantom quorum vote and
+        // filters every future publish.
+        let leader_last = self.wal.writer().appended_seq();
+        let (last_seq, need_snapshot) =
+            if hello_seq > leader_last { (0, true) } else { (hello_seq, hello_snap) };
 
         let (id, rx) = {
             // State lock held across the catch-up read — see the module
@@ -176,8 +236,10 @@ impl ReplHub {
             state.slots.push(Slot {
                 id,
                 last_enqueued: enqueued,
-                // A reconnecting replica's durable position stands.
+                // A reconnecting replica's durable position stands
+                // (zeroed above when it claimed to be ahead of us).
                 acked: last_seq,
+                catchup_high: enqueued,
                 tx,
                 stream: slot_stream,
             });
@@ -234,7 +296,10 @@ impl ReplHub {
 
     /// Enqueue one applied+logged op to every connected replica. Call
     /// under the same lock that serialized apply+append (the index write
-    /// lock) so publish order equals log order.
+    /// lock) so publish order equals log order. A replica whose live
+    /// in-flight window (frames past its catch-up high, unacked) has
+    /// reached `max_inflight` is dropped; it reconnects and catches up
+    /// from the log instead of growing the queue without bound.
     pub fn publish(&self, seq: u64, op: &WalOp) {
         let frame = Frame::op(seq, op).encode();
         let mut state = lock(&self.state);
@@ -244,41 +309,76 @@ impl ReplHub {
                 continue; // catch-up already covered it
             }
             debug_assert_eq!(seq, slot.last_enqueued + 1, "publish must be gap-free");
+            let window_floor = slot.acked.max(slot.catchup_high);
+            if slot.last_enqueued.saturating_sub(window_floor) >= self.opts.max_inflight {
+                dead.push(slot.id);
+                continue;
+            }
             if slot.tx.send(frame.clone()).is_ok() {
                 slot.last_enqueued = seq;
             } else {
                 dead.push(slot.id);
             }
         }
+        let any_dead = !dead.is_empty();
         for id in dead {
             if let Some(pos) = state.slots.iter().position(|s| s.id == id) {
                 let slot = state.slots.remove(pos);
                 slot.stream.shutdown(std::net::Shutdown::Both).ok();
             }
         }
+        drop(state);
+        if any_dead {
+            // Quorum waiters count connected nodes; a drop can flip
+            // them to the fast no-quorum path.
+            self.acked_cv.notify_all();
+        }
     }
 
     /// Block until the configured replication level acknowledges `seq`
-    /// (see the module docs), or time out with a structured error.
+    /// (see the module docs), or fail with a structured error. Quorum
+    /// waits fail *fast* — without burning the timeout — whenever fewer
+    /// than a majority of the `expect`-node cluster is even connected.
     pub fn wait_acked(&self, seq: u64) -> Result<(), String> {
-        let want = match self.level {
+        let (want, count_self) = match self.opts.level {
             AckLevel::None => return Ok(()),
-            AckLevel::One => 1,
-            AckLevel::All => self.expect,
+            AckLevel::One => (1, false),
+            AckLevel::All => (self.opts.expect, false),
+            AckLevel::Quorum => (self.opts.expect / 2 + 1, true),
         };
-        let deadline = Instant::now() + self.ack_timeout;
+        let deadline = Instant::now() + self.opts.ack_timeout;
         let mut state = lock(&self.state);
         loop {
-            let have = state.slots.iter().filter(|s| s.acked >= seq).count();
-            if have >= want {
+            let durable =
+                state.slots.iter().filter(|s| s.acked >= seq).count() + usize::from(count_self);
+            if durable >= want {
                 return Ok(());
+            }
+            if count_self {
+                let reachable = 1 + state.slots.len();
+                if reachable < want {
+                    return Err(format!(
+                        "no-quorum: {reachable}/{} node(s) reachable, quorum wants {want} \
+                         (seq {seq} is applied and logged locally and may be superseded \
+                         on failover)",
+                        self.opts.expect
+                    ));
+                }
             }
             let now = Instant::now();
             if now >= deadline {
+                if count_self {
+                    return Err(format!(
+                        "no-quorum: replication ack timeout: seq {seq} durable on \
+                         {durable}/{} node(s), quorum wants {want} (op is applied and \
+                         logged locally and may be superseded on failover)",
+                        self.opts.expect
+                    ));
+                }
                 return Err(format!(
-                    "replication ack timeout: seq {seq} durable on {have} replica(s), \
+                    "replication ack timeout: seq {seq} durable on {durable} replica(s), \
                      level '{}' wants {want} (op is applied and logged locally)",
-                    self.level.name()
+                    self.opts.level.name()
                 ));
             }
             let (guard, _) = self
@@ -298,7 +398,8 @@ impl ReplHub {
             .collect()
     }
 
-    /// Stop accepting, disconnect every replica, join the accept thread.
+    /// Stop accepting, disconnect every replica, join the accept thread
+    /// (if this hub owns one).
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::Relaxed);
         {
@@ -311,5 +412,130 @@ impl ReplHub {
         if let Some(t) = lock(&self.accept_thread).take() {
             let _ = t.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::matrix::Matrix;
+    use crate::index::impls::BruteForce;
+    use crate::wal::FsyncPolicy;
+    use std::io::Write as _;
+    use std::path::PathBuf;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("finger_hub_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn test_hub(name: &str, opts: HubOpts) -> Arc<ReplHub> {
+        let data = Arc::new(Matrix::zeros(2, 3));
+        let index = BruteForce::new(data);
+        let dir = tmp_dir(name);
+        let wal = Arc::new(Wal::bootstrap(&dir, &index, FsyncPolicy::Always).expect("bootstrap"));
+        ReplHub::start("127.0.0.1:0", wal, opts).expect("bind hub")
+    }
+
+    fn wait_slots(hub: &ReplHub, n: usize) {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while hub.status().len() != n {
+            assert!(Instant::now() < deadline, "hub never reached {n} slot(s)");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn stalled_replica_is_dropped_at_the_inflight_window() {
+        let hub = test_hub(
+            "window",
+            HubOpts {
+                max_inflight: 2,
+                ack_timeout: Duration::from_millis(100),
+                ..HubOpts::default()
+            },
+        );
+        // A fake replica that handshakes and then never acks.
+        let mut conn = TcpStream::connect(hub.local_addr()).expect("connect");
+        conn.write_all(&Frame::Hello { last_seq: 0, need_snapshot: false }.encode())
+            .expect("hello");
+        wait_slots(&hub, 1);
+
+        let op = WalOp::SetThreshold { frac: 0.5 };
+        hub.publish(1, &op);
+        hub.publish(2, &op);
+        assert_eq!(hub.status().len(), 1, "within the window the slot stays");
+        assert_eq!(hub.status()[0].enqueued, 2);
+        // A third unacked live frame exceeds max_inflight=2: dropped.
+        hub.publish(3, &op);
+        assert!(hub.status().is_empty(), "stalled replica must be dropped");
+        hub.shutdown();
+    }
+
+    #[test]
+    fn a_replica_claiming_a_future_seq_is_forced_to_snapshot() {
+        let hub = test_hub("ahead", HubOpts::default());
+        // A deposed leader's uncommitted tail: claims seq 999 while this
+        // hub's log is empty.
+        let mut conn = TcpStream::connect(hub.local_addr()).expect("connect");
+        conn.write_all(&Frame::Hello { last_seq: 999, need_snapshot: false }.encode())
+            .expect("hello");
+        let mut reader = BufReader::new(conn.try_clone().expect("clone"));
+        match Frame::read_from(&mut reader).expect("read") {
+            Some(Frame::Snapshot { snapshot_seq, .. }) => assert_eq!(snapshot_seq, 0),
+            other => panic!("expected forced snapshot, got {other:?}"),
+        }
+        wait_slots(&hub, 1);
+        let st = hub.status().remove(0);
+        assert_eq!(st.acked, 0, "stale claim must not count as durable");
+        assert!(st.enqueued < 999, "watermark must be the hub's own, not the claim");
+        hub.shutdown();
+    }
+
+    #[test]
+    fn quorum_fails_fast_without_a_majority_connected() {
+        let hub = test_hub(
+            "noquorum",
+            HubOpts {
+                level: AckLevel::Quorum,
+                expect: 3,
+                ack_timeout: Duration::from_secs(30),
+                ..HubOpts::default()
+            },
+        );
+        // 0 replicas connected: 1/3 nodes reachable, majority is 2.
+        let t0 = Instant::now();
+        let err = hub.wait_acked(1).expect_err("no quorum available");
+        assert!(t0.elapsed() < Duration::from_secs(5), "must fail fast, not wait the timeout");
+        assert!(err.contains("no-quorum"), "structured error, got: {err}");
+        assert!(err.contains("1/3"), "should report reachable count, got: {err}");
+        hub.shutdown();
+    }
+
+    #[test]
+    fn quorum_is_satisfied_by_leader_plus_one_of_two_replicas() {
+        let hub = test_hub(
+            "quorum2",
+            HubOpts {
+                level: AckLevel::Quorum,
+                expect: 3,
+                ack_timeout: Duration::from_secs(10),
+                ..HubOpts::default()
+            },
+        );
+        let mut a = TcpStream::connect(hub.local_addr()).expect("connect a");
+        a.write_all(&Frame::Hello { last_seq: 0, need_snapshot: false }.encode()).expect("hello");
+        let mut b = TcpStream::connect(hub.local_addr()).expect("connect b");
+        b.write_all(&Frame::Hello { last_seq: 0, need_snapshot: false }.encode()).expect("hello");
+        wait_slots(&hub, 2);
+
+        let op = WalOp::SetThreshold { frac: 0.5 };
+        hub.publish(1, &op);
+        // One replica acks; the leader's own fsync is the second vote of
+        // the 2-of-3 majority.
+        a.write_all(&Frame::Ack { seq: 1 }.encode()).expect("ack");
+        hub.wait_acked(1).expect("leader + one replica is a majority of three");
+        hub.shutdown();
     }
 }

@@ -1,4 +1,4 @@
-//! Primary/backup replication for the serving plane.
+//! Quorum replication for the serving plane.
 //!
 //! The whole subsystem rides on two guarantees the earlier layers
 //! already prove:
@@ -10,36 +10,51 @@
 //!    a contiguous sequence number under the index write lock.
 //!
 //! Given those, replication is just shipping the ordered op stream: the
-//! primary streams WAL records to N replicas ([`hub::ReplHub`]), each
+//! leader streams WAL records to N replicas ([`hub::ReplHub`]), each
 //! replica applies them through the same `MutableAnnIndex` verbs
 //! ([`replica::Replica`]), and byte-level state equality falls out —
 //! checkable at runtime by comparing [`bundle_fingerprint`]s, and
-//! checked exhaustively (restarts, fault injection, SIGKILL) by
-//! `rust/tests/repl_props.rs`.
+//! checked exhaustively (restarts, fault injection, SIGKILL, leader
+//! kills, partitions) by `rust/tests/repl_props.rs` and
+//! `rust/tests/failover_props.rs`.
+//!
+//! Who the leader *is* comes from [`election`]: term-numbered randomized
+//! elections with a log-matching vote check, Raft-style. The
+//! [`cluster::ClusterNode`] supervisor converges each node's wiring
+//! (hub vs replica) onto its elected role, so failover needs no
+//! operator.
 //!
 //! Wire format: [`frame::Frame`] — the same length-prefixed CRC-checked
 //! framing discipline as the on-disk log, with `Op` payloads literally
-//! being [`crate::wal::WalOp::encode`] bytes.
+//! being [`crate::wal::WalOp::encode`] bytes, extended with the election
+//! frames (vote request/reply, heartbeat, heartbeat ack).
 
+pub mod cluster;
+pub mod election;
 pub mod frame;
 pub mod hub;
 pub mod replica;
 
 use std::net::SocketAddr;
 
+use crate::core::json::Json;
 use crate::index::AnnIndex;
-use crate::router::protocol::{QueryRequest, QueryResponse};
+use crate::router::protocol::{QueryRequest, QueryResponse, Request};
 use crate::router::server::Client;
 
-/// How many replica acknowledgements a mutation waits for before the
+/// How much of the cluster must hold a mutation durably before the
 /// client is acked. `None` = fire-and-forget (replicas converge
 /// asynchronously); `One` = at least one replica has applied and
-/// durably logged the op; `All` = every expected replica has.
+/// durably logged the op; `All` = every expected replica has; `Quorum`
+/// = a majority of the cluster counting the leader itself — the default
+/// for multi-node clusters, and the level that makes acked ops survive
+/// any minority of failures.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AckLevel {
     None,
     One,
     All,
+    Quorum,
 }
 
 impl AckLevel {
@@ -48,7 +63,8 @@ impl AckLevel {
             "none" => Ok(AckLevel::None),
             "one" => Ok(AckLevel::One),
             "all" => Ok(AckLevel::All),
-            other => Err(format!("unknown ack level '{other}' (none|one|all)")),
+            "quorum" => Ok(AckLevel::Quorum),
+            other => Err(format!("unknown ack level '{other}' (none|one|all|quorum)")),
         }
     }
 
@@ -57,6 +73,7 @@ impl AckLevel {
             AckLevel::None => "none",
             AckLevel::One => "one",
             AckLevel::All => "all",
+            AckLevel::Quorum => "quorum",
         }
     }
 }
@@ -81,40 +98,105 @@ pub fn bundle_fingerprint(index: &dyn AnnIndex) -> std::io::Result<u64> {
     Ok(fnv1a64(&crate::data::persist::bundle_to_vec(index)?))
 }
 
+/// Splice a `min_seq` session token into an already-encoded query line
+/// (additive field; replicas without session support ignore it).
+fn with_min_seq(line: &str, seq: u64) -> String {
+    match line.rfind('}') {
+        Some(pos) => format!("{}, \"min_seq\": {}{}", &line[..pos], seq, &line[pos..]),
+        None => line.to_string(),
+    }
+}
+
 /// Round-robin read fan-out over a replica set: queries rotate across
 /// the addresses and fail over to the next on connection error — the
-/// read-scaling half of primary/backup replication. Connections are
+/// read-scaling half of the replication plane. Connections are
 /// per-call; this is a CLI/test convenience, not a pooled client.
+///
+/// Read-your-writes: after a write, feed the leader's `(term, seq)` ack
+/// into [`ReadPool::note_write`]; subsequent queries carry the seq as a
+/// `min_seq` session token and a replica still behind it answers a
+/// structured stale-replica error, which this pool treats like any
+/// other failure — it tries the next node.
 pub struct ReadPool {
     addrs: Vec<SocketAddr>,
     next: usize,
+    /// Highest `(term, seq)` this session has written.
+    session: Option<(u64, u64)>,
 }
 
 impl ReadPool {
     pub fn new(addrs: Vec<SocketAddr>) -> ReadPool {
-        ReadPool { addrs, next: 0 }
+        ReadPool { addrs, next: 0, session: None }
     }
 
     pub fn addrs(&self) -> &[SocketAddr] {
         &self.addrs
     }
 
-    /// Query the next node in rotation; on failure try the rest in order.
+    /// Record a write acknowledged at `(term, seq)`; later queries in
+    /// this session only accept replicas at-or-after `seq`.
+    pub fn note_write(&mut self, term: u64, seq: u64) {
+        let newer = match self.session {
+            None => true,
+            Some((t, s)) => (term, seq) > (t, s),
+        };
+        if newer {
+            self.session = Some((term, seq));
+        }
+    }
+
+    /// The session's read-your-writes token, if any write happened.
+    pub fn session(&self) -> Option<(u64, u64)> {
+        self.session
+    }
+
+    /// Ask every node for its replication status until one names the
+    /// leader's query address (its own, when asked of the leader).
+    /// Works against any node — followers relay what heartbeats told
+    /// them.
+    pub fn discover_leader(&self) -> Option<String> {
+        for addr in &self.addrs {
+            let Ok(mut c) = Client::connect(addr) else { continue };
+            let Ok(line) = c.send_raw(&Request::ReplStatus { id: 0 }.to_json_line()) else {
+                continue;
+            };
+            let Ok(v) = Json::parse(line.trim()) else { continue };
+            if v.get("role").and_then(|r| r.as_str()) == Some("leader") {
+                return Some(addr.to_string());
+            }
+            if let Some(lq) = v.get("leader_query").and_then(|x| x.as_str()) {
+                if !lq.is_empty() {
+                    return Some(lq.to_string());
+                }
+            }
+        }
+        None
+    }
+
+    /// Query the next node in rotation; on failure (connect error, or a
+    /// stale replica rejecting the session token) try the rest in order.
     /// Returns the answering node alongside the response.
     pub fn query(&mut self, req: &QueryRequest) -> Result<(SocketAddr, QueryResponse), String> {
         if self.addrs.is_empty() {
             return Err("read pool has no addresses".into());
         }
+        let frame = match self.session {
+            Some((_, seq)) if seq > 0 => with_min_seq(&req.to_json_line(), seq),
+            _ => req.to_json_line(),
+        };
         let n = self.addrs.len();
         let mut last_err = String::new();
         for i in 0..n {
             let addr = self.addrs[(self.next + i) % n];
             match Client::connect(&addr).map_err(|e| e.to_string()) {
-                Ok(mut c) => match c.query(req) {
-                    Ok(resp) => {
-                        self.next = (self.next + i + 1) % n;
-                        return Ok((addr, resp));
-                    }
+                Ok(mut c) => match c.send_raw(&frame) {
+                    Ok(line) => match QueryResponse::parse(line.trim()) {
+                        Ok(resp) => {
+                            self.next = (self.next + i + 1) % n;
+                            return Ok((addr, resp));
+                        }
+                        Err(e) => last_err = format!("{addr}: {e}"),
+                    },
                     Err(e) => last_err = format!("{addr}: {e}"),
                 },
                 Err(e) => last_err = format!("{addr}: {e}"),
@@ -130,7 +212,12 @@ mod tests {
 
     #[test]
     fn ack_levels_parse_and_name() {
-        for (s, l) in [("none", AckLevel::None), ("one", AckLevel::One), ("all", AckLevel::All)] {
+        for (s, l) in [
+            ("none", AckLevel::None),
+            ("one", AckLevel::One),
+            ("all", AckLevel::All),
+            ("quorum", AckLevel::Quorum),
+        ] {
             assert_eq!(AckLevel::parse(s), Ok(l));
             assert_eq!(l.name(), s);
         }
@@ -161,5 +248,24 @@ mod tests {
         let mut ctx = SearchContext::new();
         a.as_mutable().unwrap().insert(&[5.0, 6.0], &mut ctx).unwrap();
         assert_ne!(fa, bundle_fingerprint(a.as_ref()).unwrap(), "mutation moves the print");
+    }
+
+    #[test]
+    fn session_tokens_splice_into_query_lines_and_order_lexicographically() {
+        let mut pool = ReadPool::new(vec![]);
+        assert_eq!(pool.session(), None);
+        pool.note_write(2, 10);
+        pool.note_write(2, 7); // older seq, same term: ignored
+        assert_eq!(pool.session(), Some((2, 10)));
+        pool.note_write(3, 1); // newer term wins even at a lower seq
+        assert_eq!(pool.session(), Some((3, 1)));
+
+        let req = QueryRequest { id: 1, vector: vec![1.0, 2.0], k: 3 };
+        let line = with_min_seq(&req.to_json_line(), 10);
+        assert!(line.contains("\"min_seq\": 10"), "spliced: {line}");
+        // Still a valid query frame with the original fields intact.
+        let back = crate::router::protocol::QueryRequest::parse(&line).unwrap();
+        assert_eq!(back, req);
+        assert_eq!(crate::router::protocol::session_min_seq(&line), Some(10));
     }
 }

@@ -1,23 +1,29 @@
-//! Replica-side replication client: connects to a primary, applies the
+//! Replica-side replication client: connects to a leader, applies the
 //! ordered op stream through the shared [`ServeIndex`], and acks each
 //! op once it is durable locally.
 //!
 //! The replica is strict about sequencing: after applying seq `s`, the
 //! only acceptable next op is `s + 1`. A gap means a frame was lost in
-//! transit (or the primary's log diverged); a lower-or-equal seq means a
+//! transit (or the leader's log diverged); a lower-or-equal seq means a
 //! duplicate. Either way the replica counts a violation, drops the
 //! connection, and reconnects with a fresh `Hello { last_seq: applied }`
-//! — the primary's catch-up path then re-delivers exactly the missing
+//! — the leader's catch-up path then re-delivers exactly the missing
 //! suffix (or a snapshot if the tail was compacted away). Torn and
 //! corrupt frames never reach this layer; the frame codec rejects them.
 //!
-//! When the replica keeps its own WAL (`ReplicaOpts::wal_dir`), every
-//! applied op is appended and committed there before the ack goes back,
-//! so a primary running at ack level `all` over replicas with
-//! `--fsync-policy always` gets true multi-node durability. A received
-//! snapshot atomically replaces the local generation via
-//! [`Wal::reinstall`], byte-for-byte, preserving the determinism
-//! contract: primary and replica bundles stay byte-identical.
+//! Durability comes in three flavours ([`ReplicaStore`]): ephemeral
+//! (re-snapshot on restart), an owned WAL directory (the classic
+//! `--replica-of` shape), or a *shared* [`Wal`] handle for cluster
+//! nodes — the node owns one WAL across its leader/follower role flips,
+//! and a received snapshot swaps its generation in place via
+//! [`Wal::reinstall_into`] (wiping any divergent uncommitted tail a
+//! deposed leader may carry). Received snapshots replace the local
+//! generation byte-for-byte, preserving the determinism contract.
+//!
+//! Reconnects use capped exponential backoff with deterministic seeded
+//! jitter: `min(base << attempt, cap) + uniform(0..=25%)`, attempt
+//! resetting whenever a connection makes progress. Counters live in
+//! [`ReplMetrics`], surfaced through the REPL_STATUS verb.
 
 use std::io::{self, BufReader};
 use std::net::{SocketAddr, TcpStream};
@@ -26,28 +32,81 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::core::rng::Pcg32;
 use crate::repl::frame::Frame;
 use crate::router::server::ServeIndex;
 use crate::wal::{FsyncPolicy, Wal};
 
-/// Replica configuration. `wal_dir: None` keeps the replica ephemeral
-/// (it re-snapshots from the primary on every restart).
+/// Where the replica keeps its durable state.
+#[derive(Clone)]
+pub enum ReplicaStore {
+    /// Ephemeral: no local WAL; re-snapshots from the leader on restart.
+    None,
+    /// Own a WAL generation under this directory (recovered at start).
+    Dir(PathBuf),
+    /// Share the cluster node's WAL: snapshots swap its generation in
+    /// place ([`Wal::reinstall_into`]); ops append through the normal
+    /// apply path. The node must NOT run a second writer on the same
+    /// directory.
+    Shared(Arc<Wal>),
+}
+
+impl std::fmt::Debug for ReplicaStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReplicaStore::None => write!(f, "None"),
+            ReplicaStore::Dir(d) => write!(f, "Dir({})", d.display()),
+            ReplicaStore::Shared(_) => write!(f, "Shared(..)"),
+        }
+    }
+}
+
+/// Replica configuration.
 #[derive(Clone, Debug)]
 pub struct ReplicaOpts {
-    pub wal_dir: Option<PathBuf>,
+    pub store: ReplicaStore,
     pub policy: FsyncPolicy,
-    /// Pause between reconnect attempts after a dropped stream.
-    pub reconnect: Duration,
+    /// First reconnect backoff; doubles per consecutive failed attempt.
+    pub backoff_base: Duration,
+    /// Backoff ceiling (jitter is added on top).
+    pub backoff_cap: Duration,
+    /// Seed for the deterministic backoff jitter.
+    pub seed: u64,
+    /// Request a full snapshot on the first connection even if local
+    /// state exists — cluster followers set this on every new
+    /// (leader, term) so a divergent uncommitted tail cannot survive.
+    pub force_snapshot: bool,
 }
 
 impl Default for ReplicaOpts {
     fn default() -> Self {
         ReplicaOpts {
-            wal_dir: None,
+            store: ReplicaStore::None,
             policy: FsyncPolicy::EveryN(8),
-            reconnect: Duration::from_millis(50),
+            backoff_base: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(2),
+            seed: 0x5EED,
+            force_snapshot: false,
         }
     }
+}
+
+/// Reconnect/stream counters for the REPL_STATUS verb. All monotonic
+/// except `last_backoff_ms` (a gauge).
+#[derive(Debug, Default)]
+pub struct ReplMetrics {
+    /// Reconnect cycles entered (every time the stream ends and the
+    /// loop goes back to dial).
+    pub reconnect_attempts: AtomicU64,
+    /// Reconnect cycles whose connection then made progress (applied
+    /// advanced or caught up).
+    pub reconnects_completed: AtomicU64,
+    /// Full snapshots installed from the stream.
+    pub snapshots_installed: AtomicU64,
+    /// Sequencing violations (gaps/duplicates that forced a reconnect).
+    pub violations: AtomicU64,
+    /// Backoff chosen after the most recent disconnect, in ms.
+    pub last_backoff_ms: AtomicU64,
 }
 
 /// Handle to the background replication loop. Dropping it does NOT stop
@@ -55,20 +114,30 @@ impl Default for ReplicaOpts {
 pub struct Replica {
     applied: Arc<AtomicU64>,
     ready: Arc<AtomicBool>,
-    violations: Arc<AtomicU64>,
-    reconnects: Arc<AtomicU64>,
+    metrics: Arc<ReplMetrics>,
     stop: Arc<AtomicBool>,
     /// Live connection, shared so `stop()` can shut the socket down and
-    /// unblock a reader waiting on a quiet primary.
+    /// unblock a reader waiting on a quiet leader.
     conn: Arc<Mutex<Option<TcpStream>>>,
     thread: Option<std::thread::JoinHandle<()>>,
 }
 
+/// `min(base << attempt, cap)` plus up to 25% deterministic jitter.
+fn backoff_for(attempt: u32, base: Duration, cap: Duration, rng: &mut Pcg32) -> Duration {
+    let base_ms = base.as_millis().max(1) as u64;
+    let cap_ms = cap.as_millis().max(1) as u64;
+    let exp = base_ms.saturating_mul(1u64 << attempt.min(20)).min(cap_ms);
+    let jitter_span = (exp / 4).max(1) as usize;
+    Duration::from_millis(exp + rng.gen_range(jitter_span) as u64)
+}
+
 impl Replica {
     /// Start replicating from `primary` into `serve`. If a local WAL
-    /// generation already exists under `opts.wal_dir`, it is recovered
-    /// and installed first, so the replica resumes from its durable
-    /// position instead of re-fetching a snapshot.
+    /// generation already exists under a [`ReplicaStore::Dir`], it is
+    /// recovered and installed first, so the replica resumes from its
+    /// durable position instead of re-fetching a snapshot (and the
+    /// serve index leaves its warming state immediately — stale reads
+    /// beat no reads).
     pub fn start(
         primary: SocketAddr,
         serve: Arc<ServeIndex>,
@@ -76,19 +145,30 @@ impl Replica {
     ) -> io::Result<Replica> {
         let applied = Arc::new(AtomicU64::new(0));
         let ready = Arc::new(AtomicBool::new(false));
-        let violations = Arc::new(AtomicU64::new(0));
-        let reconnects = Arc::new(AtomicU64::new(0));
+        let metrics = Arc::new(ReplMetrics::default());
         let stop = Arc::new(AtomicBool::new(false));
         let conn: Arc<Mutex<Option<TcpStream>>> = Arc::new(Mutex::new(None));
 
-        let mut local: Option<Wal> = None;
+        let mut local = LocalWal::None;
         let mut has_state = false;
-        if let Some(dir) = &opts.wal_dir {
-            if Wal::has_snapshot(dir) {
-                let (index, wal, report) = Wal::recover(dir, opts.policy)?;
-                serve.install(index, report.last_seq);
-                applied.store(report.last_seq, Ordering::SeqCst);
-                local = Some(wal);
+        match &opts.store {
+            ReplicaStore::None => {}
+            ReplicaStore::Dir(dir) => {
+                if Wal::has_snapshot(dir) {
+                    let (index, wal, report) = Wal::recover(dir, opts.policy)?;
+                    serve.install(index, report.last_seq);
+                    serve.set_ready();
+                    applied.store(report.last_seq, Ordering::SeqCst);
+                    local = LocalWal::Owned(wal);
+                    has_state = true;
+                }
+            }
+            ReplicaStore::Shared(wal) => {
+                // The cluster node recovered this WAL and installed the
+                // index before flipping into follower mode; pick up its
+                // position rather than re-deriving it.
+                applied.store(serve.applied_seq(), Ordering::SeqCst);
+                local = LocalWal::Shared(Arc::clone(wal));
                 has_state = true;
             }
         }
@@ -96,36 +176,54 @@ impl Replica {
         let thread = {
             let applied = Arc::clone(&applied);
             let ready = Arc::clone(&ready);
-            let violations = Arc::clone(&violations);
-            let reconnects = Arc::clone(&reconnects);
+            let metrics = Arc::clone(&metrics);
             let stop = Arc::clone(&stop);
             let conn = Arc::clone(&conn);
+            let backoff_base = opts.backoff_base;
+            let backoff_cap = opts.backoff_cap;
+            let mut rng = Pcg32::new(opts.seed);
             std::thread::Builder::new().name("finger-replica".into()).spawn(move || {
-                let mut st = StreamState { serve, opts, local, has_state, conn };
+                let mut st = StreamState {
+                    serve,
+                    force_snapshot: opts.force_snapshot,
+                    opts,
+                    local,
+                    has_state,
+                    conn,
+                    metrics: Arc::clone(&metrics),
+                };
+                let mut attempt: u32 = 0;
                 while !stop.load(Ordering::Relaxed) {
-                    // Ok(()) is a clean EOF (primary went away); errors are
+                    let before = applied.load(Ordering::SeqCst);
+                    // Ok(()) is a clean EOF (leader went away); errors are
                     // connect failures or protocol violations — the latter
                     // are tallied inside stream_once where the context is.
-                    let _ = st.stream_once(primary, &applied, &ready, &violations, &stop);
+                    let _ = st.stream_once(primary, &applied, &ready, &stop);
+                    let progressed =
+                        applied.load(Ordering::SeqCst) > before || ready.load(Ordering::SeqCst);
                     ready.store(false, Ordering::SeqCst);
                     if stop.load(Ordering::Relaxed) {
                         break;
                     }
-                    reconnects.fetch_add(1, Ordering::Relaxed);
-                    std::thread::sleep(st.opts.reconnect);
+                    metrics.reconnect_attempts.fetch_add(1, Ordering::Relaxed);
+                    if progressed {
+                        metrics.reconnects_completed.fetch_add(1, Ordering::Relaxed);
+                        attempt = 0;
+                    }
+                    let pause = backoff_for(attempt, backoff_base, backoff_cap, &mut rng);
+                    metrics.last_backoff_ms.store(pause.as_millis() as u64, Ordering::Relaxed);
+                    attempt = attempt.saturating_add(1);
+                    // Sleep in slices so stop() is honoured promptly even
+                    // at the backoff ceiling.
+                    let deadline = Instant::now() + pause;
+                    while Instant::now() < deadline && !stop.load(Ordering::Relaxed) {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
                 }
             })?
         };
 
-        Ok(Replica {
-            applied,
-            ready,
-            violations,
-            reconnects,
-            stop,
-            conn,
-            thread: Some(thread),
-        })
+        Ok(Replica { applied, ready, metrics, stop, conn, thread: Some(thread) })
     }
 
     /// Highest seq applied locally.
@@ -133,7 +231,7 @@ impl Replica {
         self.applied.load(Ordering::SeqCst)
     }
 
-    /// True once the primary signalled the replica is caught up on the
+    /// True once the leader signalled the replica is caught up on the
     /// current connection.
     pub fn is_ready(&self) -> bool {
         self.ready.load(Ordering::SeqCst)
@@ -142,12 +240,17 @@ impl Replica {
     /// Sequencing violations detected (gaps or duplicates that forced a
     /// reconnect). Fault-injection tests assert this moves.
     pub fn violations(&self) -> u64 {
-        self.violations.load(Ordering::Relaxed)
+        self.metrics.violations.load(Ordering::Relaxed)
     }
 
-    /// Completed reconnect cycles.
+    /// Reconnect cycles entered.
     pub fn reconnects(&self) -> u64 {
-        self.reconnects.load(Ordering::Relaxed)
+        self.metrics.reconnect_attempts.load(Ordering::Relaxed)
+    }
+
+    /// Shared counters for the REPL_STATUS verb.
+    pub fn metrics(&self) -> Arc<ReplMetrics> {
+        Arc::clone(&self.metrics)
     }
 
     /// Poll until caught up or `timeout` elapses.
@@ -187,25 +290,45 @@ impl Replica {
     }
 }
 
+/// The replica's live WAL handle (see [`ReplicaStore`]).
+enum LocalWal {
+    None,
+    Owned(Wal),
+    Shared(Arc<Wal>),
+}
+
+impl LocalWal {
+    fn as_wal(&self) -> Option<&Wal> {
+        match self {
+            LocalWal::None => None,
+            LocalWal::Owned(w) => Some(w),
+            LocalWal::Shared(w) => Some(w),
+        }
+    }
+}
+
 /// Mutable state owned by the replication thread across reconnects.
 struct StreamState {
     serve: Arc<ServeIndex>,
     opts: ReplicaOpts,
-    local: Option<Wal>,
+    local: LocalWal,
     has_state: bool,
+    /// Ask for a snapshot on the next handshake regardless of local
+    /// state; cleared once one is installed.
+    force_snapshot: bool,
     conn: Arc<Mutex<Option<TcpStream>>>,
+    metrics: Arc<ReplMetrics>,
 }
 
 impl StreamState {
     /// One connection lifetime: handshake, then apply frames until EOF,
-    /// error, or stop. Sequencing violations bump `violations` before the
+    /// error, or stop. Sequencing violations bump the metric before the
     /// connection is abandoned; the caller reconnects either way.
     fn stream_once(
         &mut self,
         primary: SocketAddr,
         applied: &AtomicU64,
         ready: &AtomicBool,
-        violations: &AtomicU64,
         stop: &AtomicBool,
     ) -> io::Result<()> {
         let mut out = TcpStream::connect_timeout(&primary, Duration::from_millis(500))?;
@@ -215,8 +338,8 @@ impl StreamState {
         *self.conn.lock().unwrap_or_else(|e| e.into_inner()) = Some(out.try_clone()?);
         let mut reader = BufReader::new(out.try_clone()?);
         Frame::Hello {
-            last_seq: applied.load(Ordering::SeqCst),
-            need_snapshot: !self.has_state,
+            last_seq: if self.force_snapshot { 0 } else { applied.load(Ordering::SeqCst) },
+            need_snapshot: !self.has_state || self.force_snapshot,
         }
         .write_to(&mut out)?;
 
@@ -233,15 +356,31 @@ impl StreamState {
                 Frame::Snapshot { snapshot_seq, bundle } => {
                     let index = crate::data::persist::load_index_from_slice(&bundle)
                         .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
-                    if let Some(dir) = &self.opts.wal_dir {
-                        // Replace the local generation with the primary's
-                        // bytes verbatim before exposing the new state.
-                        self.local =
-                            Some(Wal::reinstall(dir, snapshot_seq, &bundle, self.opts.policy)?);
+                    match &self.opts.store {
+                        ReplicaStore::None => {}
+                        ReplicaStore::Dir(dir) => {
+                            // Replace the local generation with the
+                            // leader's bytes verbatim before exposing the
+                            // new state.
+                            self.local = LocalWal::Owned(Wal::reinstall(
+                                dir,
+                                snapshot_seq,
+                                &bundle,
+                                self.opts.policy,
+                            )?);
+                        }
+                        ReplicaStore::Shared(wal) => {
+                            // Swap the shared WAL's generation in place —
+                            // this wipes any divergent uncommitted tail
+                            // from a deposed-leader past.
+                            wal.reinstall_into(snapshot_seq, &bundle)?;
+                        }
                     }
                     self.serve.install(index, snapshot_seq);
                     applied.store(snapshot_seq, Ordering::SeqCst);
                     self.has_state = true;
+                    self.force_snapshot = false;
+                    self.metrics.snapshots_installed.fetch_add(1, Ordering::Relaxed);
                     Frame::Ack { seq: snapshot_seq }.write_to(&mut out)?;
                 }
                 Frame::Op { record } => {
@@ -252,29 +391,62 @@ impl StreamState {
                     if !self.has_state || seq != expect {
                         // Gap (lost frame) or duplicate: refuse to apply,
                         // reconnect, and let catch-up repair the stream.
-                        violations.fetch_add(1, Ordering::Relaxed);
+                        self.metrics.violations.fetch_add(1, Ordering::Relaxed);
                         return Err(io::Error::new(
                             io::ErrorKind::InvalidData,
                             format!("seq violation: got {seq}, expected {expect}"),
                         ));
                     }
                     self.serve
-                        .apply_replicated(seq, &op, self.local.as_ref())
+                        .apply_replicated(seq, &op, self.local.as_wal())
                         .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
                     applied.store(seq, Ordering::SeqCst);
                     Frame::Ack { seq }.write_to(&mut out)?;
                 }
                 Frame::CaughtUp { seq: _ } => {
                     ready.store(true, Ordering::SeqCst);
+                    // End of warming: the serve index may now answer
+                    // queries (one-way latch; stays up across later
+                    // disconnects so stale reads keep flowing).
+                    self.serve.set_ready();
                 }
-                Frame::Hello { .. } | Frame::Ack { .. } => {
-                    violations.fetch_add(1, Ordering::Relaxed);
+                _ => {
+                    // Handshake/ack/election traffic has no business on a
+                    // replica's downstream.
+                    self.metrics.violations.fetch_add(1, Ordering::Relaxed);
                     return Err(io::Error::new(
                         io::ErrorKind::InvalidData,
-                        "unexpected handshake/ack frame from primary",
+                        "unexpected frame from leader",
                     ));
                 }
             }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_capped_exponential_with_bounded_jitter() {
+        let base = Duration::from_millis(50);
+        let cap = Duration::from_secs(2);
+        let mut rng = Pcg32::new(0x5EED);
+        for attempt in 0..24u32 {
+            let exp = 50u64.saturating_mul(1 << attempt.min(20)).min(2000);
+            let b = backoff_for(attempt, base, cap, &mut rng).as_millis() as u64;
+            assert!(b >= exp, "attempt {attempt}: {b} below floor {exp}");
+            assert!(b <= exp + (exp / 4).max(1), "attempt {attempt}: {b} above jitter bound");
+        }
+        // Deterministic for a given seed.
+        let mut a = Pcg32::new(42);
+        let mut b = Pcg32::new(42);
+        for attempt in 0..8 {
+            assert_eq!(
+                backoff_for(attempt, base, cap, &mut a),
+                backoff_for(attempt, base, cap, &mut b)
+            );
         }
     }
 }

@@ -158,6 +158,51 @@ pub fn error_line(id: u64, msg: &str) -> String {
     .to_string()
 }
 
+/// Structured answer for a replica that has not finished its first
+/// catch-up: health probes see a live listener and a parseable state
+/// instead of connection-refused. Parses as an error (clients retry),
+/// but carries a machine-readable `state` field.
+pub fn warming_line(id: u64) -> String {
+    Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("state", Json::str("warming")),
+        ("error", Json::str("warming: replica has not caught up yet")),
+    ])
+    .to_string()
+}
+
+/// Structured rejection for a read-your-writes session query landing on
+/// a replica still behind the session's write position. The client's
+/// pool treats it as a failed node and tries the next one.
+pub fn stale_line(id: u64, min_seq: u64, applied: u64) -> String {
+    Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("state", Json::str("stale")),
+        (
+            "error",
+            Json::str(&format!(
+                "stale-replica: serving seq {applied} is behind session min_seq {min_seq}"
+            )),
+        ),
+    ])
+    .to_string()
+}
+
+/// Extract the optional `min_seq` session token from a raw query line.
+/// The substring guard keeps the common (token-less) path from paying a
+/// second JSON parse.
+pub fn session_min_seq(line: &str) -> Option<u64> {
+    if !line.contains("\"min_seq\"") {
+        return None;
+    }
+    Json::parse(line)
+        .ok()?
+        .get("min_seq")?
+        .as_f64()
+        .filter(|f| f.is_finite() && *f >= 0.0)
+        .map(|f| f as u64)
+}
+
 /// Best-effort frame id for error reporting on a line that failed
 /// [`Request::parse`]: if the line is still valid JSON with a numeric
 /// `id` (e.g. a well-formed frame with a bad `k`), the error can be
@@ -326,12 +371,17 @@ pub enum MutOutcome {
     ThresholdSet(f64),
 }
 
-/// Acknowledgement for a mutation verb, with the post-op live count.
+/// Acknowledgement for a mutation verb, with the post-op live count and
+/// the op's log sequence (0 when the server runs without a WAL). The
+/// sequence is the read-your-writes session token: feed it to
+/// `ReadPool::note_write` and later queries in the session carry it as
+/// `min_seq`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MutResponse {
     pub id: u64,
     pub outcome: MutOutcome,
     pub live: u64,
+    pub seq: u64,
 }
 
 impl MutResponse {
@@ -347,6 +397,7 @@ impl MutResponse {
             ("id", Json::Num(self.id as f64)),
             (key, val),
             ("live", Json::Num(self.live as f64)),
+            ("seq", Json::Num(self.seq as f64)),
         ])
         .to_string()
     }
@@ -358,6 +409,8 @@ impl MutResponse {
         }
         let id = v.get("id").and_then(|x| x.as_f64()).ok_or("missing id")? as u64;
         let live = v.get("live").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64;
+        // Additive field: acks from older servers simply have no seq.
+        let seq = v.get("seq").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64;
         let outcome = if let Some(x) = v.get("inserted").and_then(|x| x.as_f64()) {
             MutOutcome::Inserted(x as u32)
         } else if let Some(x) = v.get("deleted").and_then(|x| x.as_f64()) {
@@ -371,7 +424,7 @@ impl MutResponse {
         } else {
             return Err("not a mutation acknowledgement".into());
         };
-        Ok(MutResponse { id, outcome, live })
+        Ok(MutResponse { id, outcome, live, seq })
     }
 }
 
@@ -542,12 +595,46 @@ mod tests {
             MutOutcome::Saved(12),
             MutOutcome::ThresholdSet(0.25),
         ] {
-            let resp = MutResponse { id: 11, outcome, live: 100 };
+            let resp = MutResponse { id: 11, outcome, live: 100, seq: 17 };
             let back = MutResponse::parse(&resp.to_json_line()).unwrap();
             assert_eq!(resp, back);
         }
         let line = error_line(3, "nope");
         assert_eq!(MutResponse::parse(&line), Err("nope".to_string()));
+        // Acks from servers that predate the seq field still parse.
+        let legacy = r#"{"id": 1, "inserted": 5, "live": 9}"#;
+        assert_eq!(MutResponse::parse(legacy).unwrap().seq, 0);
+    }
+
+    #[test]
+    fn warming_and_stale_lines_are_structured_errors_with_state() {
+        let w = warming_line(4);
+        let err = QueryResponse::parse(&w).unwrap_err();
+        assert!(err.contains("warming"), "{err}");
+        let v = Json::parse(&w).unwrap();
+        assert_eq!(v.get("state").and_then(|s| s.as_str()), Some("warming"));
+
+        let s = stale_line(5, 12, 9);
+        let err = QueryResponse::parse(&s).unwrap_err();
+        assert!(err.contains("stale-replica"), "{err}");
+        assert!(err.contains("12") && err.contains('9'), "{err}");
+        let v = Json::parse(&s).unwrap();
+        assert_eq!(v.get("state").and_then(|x| x.as_str()), Some("stale"));
+    }
+
+    #[test]
+    fn session_min_seq_extraction_is_strict_and_additive() {
+        assert_eq!(session_min_seq(r#"{"id":1,"vector":[1.0],"k":2}"#), None);
+        assert_eq!(
+            session_min_seq(r#"{"id":1,"vector":[1.0],"k":2,"min_seq":31}"#),
+            Some(31)
+        );
+        assert_eq!(session_min_seq(r#"{"min_seq":-4}"#), None, "negative rejected");
+        assert_eq!(session_min_seq(r#"{"min_seq":"x"}"#), None, "non-numeric rejected");
+        // The token must not break standard request parsing.
+        let req =
+            Request::parse(r#"{"id":1,"vector":[1.0,2.0],"k":2,"min_seq":31}"#).unwrap();
+        assert!(matches!(req, Request::Query(_)));
     }
 
     /// A u64 fingerprint must survive the JSON trip exactly — that is

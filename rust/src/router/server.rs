@@ -40,14 +40,16 @@ use std::time::{Duration, Instant};
 
 use crate::core::matrix::Matrix;
 use crate::index::{AnnIndex, SearchContext, SearchParams, DEFAULT_COMPACT_THRESHOLD};
+use crate::repl::cluster::ClusterNode;
 use crate::repl::hub::ReplHub;
+use crate::repl::replica::ReplMetrics;
 use crate::router::batcher::{Batcher, SubmitError};
 use crate::router::conn::{BufPool, Conn, ReadStatus};
 use crate::router::metrics::Metrics;
 use crate::router::poll::{self, Poller, Waker};
 use crate::router::protocol::{
-    error_line, request_id_hint, FingerprintInfo, MutOutcome, MutResponse, QueryRequest,
-    QueryResponse, Request,
+    error_line, request_id_hint, session_min_seq, stale_line, warming_line, FingerprintInfo,
+    MutOutcome, MutResponse, QueryRequest, QueryResponse, Request,
 };
 use crate::runtime::service::RerankService;
 use crate::wal::{Wal, WalOp, WalWriter};
@@ -94,15 +96,31 @@ pub struct ServeIndex {
     /// and committed per the fsync policy before the verb is
     /// acknowledged.
     wal: Option<Arc<Wal>>,
-    /// Optional replication hub (primary role): applied+logged ops are
+    /// Optional replication hub (leader role): applied+logged ops are
     /// published to connected replicas under the same write lock, and the
     /// client ack additionally waits for the configured replication
-    /// level.
-    repl: Option<Arc<ReplHub>>,
+    /// level. Behind a mutex because cluster failover swaps it at
+    /// runtime (promotion installs a hub, demotion removes it).
+    repl: Mutex<Option<Arc<ReplHub>>>,
     /// Replica role: mutation verbs are refused (the replication stream
     /// is the only writer); searches and the read-only introspection
     /// verbs serve normally.
     read_only: bool,
+    /// Cluster supervisor, when this node runs under leader election.
+    /// Mutations consult its role check, and `repl_status` reports the
+    /// elected role/term/leader.
+    cluster: Mutex<Option<Arc<ClusterNode>>>,
+    /// True when this index was built for cluster mode but the
+    /// supervisor has not been attached yet — mutations fail fast
+    /// instead of sneaking through the startup window unfenced.
+    cluster_pending: bool,
+    /// One-way readiness latch. Starts false only for warm-up roles
+    /// (`as_replica`): the query listener binds immediately and answers
+    /// structured `warming` errors until catch-up flips this.
+    ready: AtomicBool,
+    /// Follower-stream counters for `repl_status` (attached by the
+    /// serve wiring when this node replicates from a leader).
+    repl_metrics: Mutex<Option<Arc<ReplMetrics>>>,
     /// Last op sequence applied to the live index (via local mutation or
     /// the replication stream). Reported by `fingerprint`/`repl_status`.
     applied_seq: AtomicU64,
@@ -120,8 +138,12 @@ impl ServeIndex {
             mut_ctx: Mutex::new(SearchContext::new()),
             mutated: AtomicBool::new(false),
             wal: None,
-            repl: None,
+            repl: Mutex::new(None),
             read_only: false,
+            cluster: Mutex::new(None),
+            cluster_pending: false,
+            ready: AtomicBool::new(true),
+            repl_metrics: Mutex::new(None),
             applied_seq: AtomicU64::new(0),
         }
     }
@@ -133,19 +155,66 @@ impl ServeIndex {
         self
     }
 
-    /// Attach a replication hub (primary role): every applied+logged op
+    /// Attach a replication hub (leader role): every applied+logged op
     /// is streamed to connected replicas, and acks gate on the hub's
     /// level. Requires a WAL (the hub streams from it).
-    pub fn with_repl(mut self, hub: Arc<ReplHub>) -> ServeIndex {
-        self.repl = Some(hub);
+    pub fn with_repl(self, hub: Arc<ReplHub>) -> ServeIndex {
+        *mlock(&self.repl) = Some(hub);
         self
     }
 
-    /// Mark this server a replica: reads serve, writes are refused (the
-    /// replication stream applies mutations via [`ServeIndex::apply_replicated`]).
+    /// Mark this server a replica: reads serve once caught up (queries
+    /// answer a structured `warming` error until then), writes are
+    /// refused (the replication stream applies mutations via
+    /// [`ServeIndex::apply_replicated`]).
     pub fn as_replica(mut self) -> ServeIndex {
         self.read_only = true;
+        self.ready = AtomicBool::new(false);
         self
+    }
+
+    /// Mark this index as serving under a cluster supervisor. Until
+    /// [`ServeIndex::set_cluster`] attaches one, mutations fail fast —
+    /// the role fence must never be absent in cluster mode. The node
+    /// serves reads from its recovered local state throughout (graceful
+    /// degradation: elections stall writes, never reads).
+    pub fn in_cluster(mut self) -> ServeIndex {
+        self.cluster_pending = true;
+        self
+    }
+
+    /// Install/replace the replication hub at runtime (cluster
+    /// promotion installs one, demotion removes it).
+    pub fn set_hub(&self, hub: Option<Arc<ReplHub>>) {
+        *mlock(&self.repl) = hub;
+    }
+
+    /// Attach the cluster supervisor (resolves the `in_cluster` fence).
+    pub fn set_cluster(&self, node: Arc<ClusterNode>) {
+        *mlock(&self.cluster) = Some(node);
+    }
+
+    pub fn cluster(&self) -> Option<Arc<ClusterNode>> {
+        mlock(&self.cluster).clone()
+    }
+
+    /// Flip the readiness latch (one-way). Called when a replica
+    /// catches up to the leader's stream, or when a node wins election.
+    pub fn set_ready(&self) {
+        self.ready.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_ready(&self) -> bool {
+        self.ready.load(Ordering::SeqCst)
+    }
+
+    /// Expose follower-stream counters through `repl_status`.
+    pub fn set_repl_metrics(&self, m: Arc<ReplMetrics>) {
+        *mlock(&self.repl_metrics) = Some(m);
+    }
+
+    pub fn repl_metrics(&self) -> Option<Arc<ReplMetrics>> {
+        mlock(&self.repl_metrics).clone()
     }
 
     /// Seed the applied-sequence counter (e.g. after WAL recovery).
@@ -157,8 +226,10 @@ impl ServeIndex {
         self.applied_seq.load(Ordering::SeqCst)
     }
 
-    pub fn repl_hub(&self) -> Option<&Arc<ReplHub>> {
-        self.repl.as_ref()
+    /// The live replication hub, if this node currently leads. Owned
+    /// clone: failover may swap the slot while the caller holds one.
+    pub fn repl_hub(&self) -> Option<Arc<ReplHub>> {
+        mlock(&self.repl).clone()
     }
 
     pub fn is_read_only(&self) -> bool {
@@ -197,9 +268,26 @@ impl ServeIndex {
         if self.read_only {
             return Err("replica is read-only; send writes to the primary".into());
         }
+        // Cluster role fence: only the elected leader takes writes, and a
+        // demoted leader must start refusing the moment its term is
+        // superseded — this check runs before any state is touched.
+        if self.cluster_pending {
+            match self.cluster() {
+                Some(c) => c.check_writable()?,
+                None => {
+                    return Err(
+                        "cluster initializing; writes unavailable until the role fence is up"
+                            .into(),
+                    )
+                }
+            }
+        }
+        // Snapshot the hub once: failover may swap it mid-verb, and the
+        // publish and the ack wait must talk to the same hub.
+        let hub = self.repl_hub();
         if let Request::Save { id } = req {
             let (seq, live) = self.save()?;
-            return Ok(MutResponse { id: *id, outcome: MutOutcome::Saved(seq), live });
+            return Ok(MutResponse { id: *id, outcome: MutOutcome::Saved(seq), live, seq });
         }
         let mut pending: Option<(Arc<WalWriter>, u64)> = None;
         let (outcome, live) = {
@@ -266,7 +354,7 @@ impl ServeIndex {
                     wal.append(&op).map_err(|e| format!("wal append failed: {e}"))?;
                 // Publish to replicas under the same lock that ordered the
                 // append: stream order == log order == apply order.
-                if let Some(hub) = &self.repl {
+                if let Some(hub) = &hub {
                     hub.publish(seq, &op);
                 }
                 self.applied_seq.store(seq, Ordering::SeqCst);
@@ -285,17 +373,21 @@ impl ServeIndex {
         };
         // Durability before acknowledgement, outside the index lock so
         // concurrent committers coalesce onto one fsync.
+        let mut acked_seq = 0;
         if let Some((w, seq)) = pending {
             w.commit(seq).map_err(|e| format!("wal commit failed: {e}"))?;
             // Replication gate: the client ack also waits for the
-            // configured number of replica acks (level none returns
-            // immediately). On timeout the op is still applied+logged
-            // locally — the error reports exactly that ambiguity.
-            if let Some(hub) = &self.repl {
+            // configured replication level (`none` returns immediately;
+            // `quorum` needs a majority of the cluster durably fsynced,
+            // counting this node). On timeout or lost quorum the op is
+            // still applied+logged locally — the error reports exactly
+            // that ambiguity.
+            if let Some(hub) = &hub {
                 hub.wait_acked(seq)?;
             }
+            acked_seq = seq;
         }
-        Ok(MutResponse { id: req.id(), outcome, live })
+        Ok(MutResponse { id: req.id(), outcome, live, seq: acked_seq })
     }
 
     /// Checkpoint the serving index through the WAL: fresh snapshot + log
@@ -320,7 +412,7 @@ impl ServeIndex {
             let (w, tseq) = wal
                 .append(&op)
                 .map_err(|e| format!("threshold re-log failed: {e}"))?;
-            if let Some(hub) = &self.repl {
+            if let Some(hub) = self.repl_hub() {
                 hub.publish(tseq, &op);
             }
             self.applied_seq.store(tseq, Ordering::SeqCst);
@@ -404,34 +496,81 @@ impl ServeIndex {
         Ok(FingerprintInfo { id, fingerprint, seq: self.applied_seq(), live })
     }
 
-    /// JSON line for the `repl_status` verb: role, applied sequence, and
-    /// (on a primary) per-replica ack progress.
+    /// JSON line for the `repl_status` verb: role, applied sequence,
+    /// warm-up state, per-replica ack progress when this node streams to
+    /// replicas, election facts (term, who leads, where to send writes)
+    /// when it runs under a cluster, and follower-stream counters when
+    /// it replicates from a leader.
+    ///
+    /// Works against any node — followers relay the leader's advertised
+    /// addresses out of the heartbeats, which is what lets `repl status`
+    /// and leader discovery target whichever node answers first.
     pub fn repl_status_json(&self, id: u64) -> String {
         use crate::core::json::Json;
         let mut fields = vec![
             ("id", Json::Num(id as f64)),
             ("seq", Json::Num(self.applied_seq() as f64)),
+            ("state", Json::str(if self.is_ready() { "ready" } else { "warming" })),
         ];
-        match (&self.repl, self.read_only) {
-            (Some(hub), _) => {
-                fields.push(("role", Json::str("primary")));
-                fields.push(("ack_level", Json::str(hub.level().name())));
-                fields.push(("expect", Json::Num(hub.expect() as f64)));
-                let replicas = hub
-                    .status()
-                    .into_iter()
-                    .map(|r| {
-                        Json::obj(vec![
-                            ("id", Json::Num(r.id as f64)),
-                            ("acked", Json::Num(r.acked as f64)),
-                            ("enqueued", Json::Num(r.enqueued as f64)),
-                        ])
-                    })
-                    .collect();
-                fields.push(("replicas", Json::Arr(replicas)));
+        let hub = self.repl_hub();
+        match self.cluster() {
+            Some(c) => {
+                fields.push(("role", Json::str(c.role().name())));
+                fields.push(("node", Json::Num(c.id() as f64)));
+                fields.push(("term", Json::Num(c.term() as f64)));
+                match c.leader() {
+                    Some(l) => {
+                        fields.push(("leader", Json::Num(l.id as f64)));
+                        fields.push(("leader_query", Json::str(&l.query_addr)));
+                        fields.push(("leader_repl", Json::str(&l.repl_addr)));
+                    }
+                    None => fields.push(("leader", Json::Null)),
+                }
             }
-            (None, true) => fields.push(("role", Json::str("replica"))),
-            (None, false) => fields.push(("role", Json::str("standalone"))),
+            None if hub.is_some() => fields.push(("role", Json::str("primary"))),
+            None if self.read_only => fields.push(("role", Json::str("replica"))),
+            None => fields.push(("role", Json::str("standalone"))),
+        }
+        if let Some(hub) = &hub {
+            fields.push(("ack_level", Json::str(hub.level().name())));
+            fields.push(("expect", Json::Num(hub.expect() as f64)));
+            let replicas = hub
+                .status()
+                .into_iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("id", Json::Num(r.id as f64)),
+                        ("acked", Json::Num(r.acked as f64)),
+                        ("enqueued", Json::Num(r.enqueued as f64)),
+                    ])
+                })
+                .collect();
+            fields.push(("replicas", Json::Arr(replicas)));
+        }
+        let metrics = self
+            .repl_metrics()
+            .or_else(|| self.cluster().and_then(|c| c.replica_metrics()));
+        if let Some(m) = metrics {
+            use std::sync::atomic::Ordering::Relaxed;
+            fields.push((
+                "replica_metrics",
+                Json::obj(vec![
+                    (
+                        "reconnect_attempts",
+                        Json::Num(m.reconnect_attempts.load(Relaxed) as f64),
+                    ),
+                    (
+                        "reconnects_completed",
+                        Json::Num(m.reconnects_completed.load(Relaxed) as f64),
+                    ),
+                    (
+                        "snapshots_installed",
+                        Json::Num(m.snapshots_installed.load(Relaxed) as f64),
+                    ),
+                    ("violations", Json::Num(m.violations.load(Relaxed) as f64)),
+                    ("last_backoff_ms", Json::Num(m.last_backoff_ms.load(Relaxed) as f64)),
+                ]),
+            ));
         }
         Json::obj(fields).to_string()
     }
@@ -1034,6 +1173,22 @@ impl EventLoop {
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         match Request::parse(line) {
             Ok(Request::Query(req)) => {
+                // Warm-up gate: a replica binds its listener before it
+                // has state, and answers structured warming errors (not
+                // connection refusals, not stale results) until caught up.
+                if !self.index.is_ready() {
+                    conn.complete(seq, &warming_line(req.id));
+                    return;
+                }
+                // Read-your-writes session gate: a query carrying a
+                // `min_seq` token refuses to answer from state behind it.
+                if let Some(min_seq) = session_min_seq(line) {
+                    let applied = self.index.applied_seq();
+                    if applied < min_seq {
+                        conn.complete(seq, &stale_line(req.id, min_seq, applied));
+                        return;
+                    }
+                }
                 if req.vector.len() != self.dim {
                     self.metrics.errors.fetch_add(1, Ordering::Relaxed);
                     let msg = format!("dim mismatch: got {}, want {}", req.vector.len(), self.dim);
@@ -1215,7 +1370,23 @@ fn handle_conn(
         }
         metrics.requests.fetch_add(1, Ordering::Relaxed);
         let req = match Request::parse(&line) {
-            Ok(Request::Query(r)) if r.vector.len() == dim => r,
+            Ok(Request::Query(r)) if r.vector.len() == dim => {
+                // Same warm-up and read-your-writes session gates as the
+                // epoll mode's `process_frame` — both modes must answer
+                // identically.
+                if !index.is_ready() {
+                    let _ = writeln!(writer, "{}", warming_line(r.id));
+                    continue;
+                }
+                if let Some(min_seq) = session_min_seq(&line) {
+                    let applied = index.applied_seq();
+                    if applied < min_seq {
+                        let _ = writeln!(writer, "{}", stale_line(r.id, min_seq, applied));
+                        continue;
+                    }
+                }
+                r
+            }
             Ok(Request::Query(r)) => {
                 metrics.errors.fetch_add(1, Ordering::Relaxed);
                 let _ = writeln!(

@@ -1,32 +1,42 @@
 //! Fault-injecting TCP proxy for the replication stream.
 //!
-//! Sits between a replica and its primary. The replica→primary direction
-//! (Hello + Acks) is forwarded verbatim; the primary→replica direction is
-//! parsed at frame granularity (the 9-byte `crc|len|type` header from
-//! [`crate::repl::frame`]) and each frame runs through a seeded fault
-//! plan:
+//! Sits between a follower and its leader. Both directions are parsed at
+//! frame granularity (the 9-byte `crc|len|type` header from
+//! [`crate::repl::frame`]); the leader→follower direction runs each
+//! frame through a seeded fault plan:
 //!
 //! * **Drop** — the frame vanishes; later frames keep flowing, so the
-//!   replica sees a sequence gap it must detect itself.
-//! * **Duplicate** — the frame is written twice; the replica must reject
-//!   the replay.
+//!   follower sees a sequence gap it must detect itself.
+//! * **Duplicate** — the frame is written twice; the follower must
+//!   reject the replay.
 //! * **Delay** — the frame is held briefly, bunching deliveries.
 //! * **Truncate** — a prefix of the frame is written and the connection
 //!   is cut: a torn frame, exactly what a mid-write crash produces.
+//! * **Partition** — a symmetric network split: the next few frames are
+//!   dropped in *both* directions, then the connection is cut. Unlike
+//!   `Drop`, the leader's acks vanish too — this is what makes the
+//!   flapping-partition failover tests honest (each side sees the other
+//!   go silent, not a one-way loss).
 //!
-//! The accept loop keeps serving, so a replica that drops a poisoned
-//! connection reconnects *through the proxy* and keeps getting faults
-//! until the plan's budget is spent. Faults are deterministic in the
-//! seed — a failing schedule replays exactly.
+//! The accept loop serves each connection on its own thread (a leader's
+//! proxy may front several followers at once), all drawing from one
+//! shared plan, so a replica that drops a poisoned connection reconnects
+//! *through the proxy* and keeps getting faults until the plan's budget
+//! is spent. Faults are deterministic in the seed — a failing schedule
+//! replays exactly.
 
-use std::io::{Read, Write};
+use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::core::rng::Pcg32;
 use crate::repl::frame::HEADER_SIZE;
+
+/// Frames dropped per direction when a `Partition` fault fires, before
+/// the connection is cut.
+pub const PARTITION_FRAMES: u64 = 4;
 
 /// What the plan decided for one downstream frame.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -37,6 +47,9 @@ pub enum Fault {
     Delay,
     /// Write only a prefix of the frame, then cut the connection.
     Truncate,
+    /// Drop the next [`PARTITION_FRAMES`] frames in both directions,
+    /// then cut the connection — a symmetric network split.
+    Partition,
 }
 
 /// Seeded per-frame fault decisions with a bounded budget: after
@@ -48,11 +61,28 @@ pub struct FaultPlan {
     pub fault_pct: u32,
     pub max_faults: u64,
     injected: u64,
+    /// Every injected fault is a `Partition` (see `partitions_only`).
+    partition_only: bool,
 }
 
 impl FaultPlan {
     pub fn new(seed: u64, fault_pct: u32, max_faults: u64) -> FaultPlan {
-        FaultPlan { rng: Pcg32::new(seed), fault_pct, max_faults, injected: 0 }
+        FaultPlan {
+            rng: Pcg32::new(seed),
+            fault_pct,
+            max_faults,
+            injected: 0,
+            partition_only: false,
+        }
+    }
+
+    /// A plan that only ever injects symmetric partitions — the shape
+    /// the failover convergence tests want (no torn frames muddying the
+    /// signal, just links going dark and coming back).
+    pub fn partitions_only(seed: u64, fault_pct: u32, max_faults: u64) -> FaultPlan {
+        let mut p = FaultPlan::new(seed, fault_pct, max_faults);
+        p.partition_only = true;
+        p
     }
 
     fn decide(&mut self) -> Fault {
@@ -62,17 +92,21 @@ impl FaultPlan {
             return Fault::Forward;
         }
         self.injected += 1;
-        match self.rng.gen_range(4) {
+        if self.partition_only {
+            return Fault::Partition;
+        }
+        match self.rng.gen_range(5) {
             0 => Fault::Drop,
             1 => Fault::Duplicate,
             2 => Fault::Delay,
+            3 => Fault::Partition,
             _ => Fault::Truncate,
         }
     }
 }
 
-/// A running fault proxy. One upstream (the primary's replication
-/// listener), one listening socket replicas point at.
+/// A running fault proxy. One upstream (the leader's replication
+/// listener), one listening socket followers point at.
 pub struct FaultProxy {
     pub local_addr: SocketAddr,
     injected: Arc<AtomicU64>,
@@ -82,8 +116,9 @@ pub struct FaultProxy {
 
 impl FaultProxy {
     /// Listen on an ephemeral port and relay every accepted connection to
-    /// `upstream`, faulting primary→replica frames per the plan. The plan
-    /// is shared across reconnects (one budget for the proxy's lifetime).
+    /// `upstream`, faulting leader→follower frames per the plan. The plan
+    /// is shared across connections and reconnects (one budget for the
+    /// proxy's lifetime).
     pub fn start(upstream: SocketAddr, plan: FaultPlan) -> std::io::Result<FaultProxy> {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let local_addr = listener.local_addr()?;
@@ -94,23 +129,29 @@ impl FaultProxy {
             let injected = Arc::clone(&injected);
             let stop = Arc::clone(&stop);
             std::thread::Builder::new().name("fault-proxy".into()).spawn(move || {
-                // The plan lives on the accept thread; connections are
-                // served one at a time (replication uses one connection,
-                // and serialized service keeps fault order deterministic).
-                let mut plan = plan;
+                let plan = Arc::new(Mutex::new(plan));
+                let mut workers = Vec::new();
                 loop {
                     if stop.load(Ordering::Relaxed) {
                         break;
                     }
                     match listener.accept() {
                         Ok((client, _)) => {
-                            relay(client, upstream, &mut plan, &injected, &stop);
+                            let plan = Arc::clone(&plan);
+                            let injected = Arc::clone(&injected);
+                            let stop = Arc::clone(&stop);
+                            workers.push(std::thread::spawn(move || {
+                                relay(client, upstream, &plan, &injected, &stop);
+                            }));
                         }
                         Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             std::thread::sleep(Duration::from_millis(2));
                         }
                         Err(_) => break,
                     }
+                }
+                for w in workers {
+                    let _ = w.join();
                 }
             })?
         };
@@ -130,12 +171,12 @@ impl FaultProxy {
     }
 }
 
-/// Serve one proxied connection until either side closes or a Truncate
-/// fault cuts it.
+/// Serve one proxied connection until either side closes or a
+/// Truncate/Partition fault cuts it.
 fn relay(
     client: TcpStream,
     upstream: SocketAddr,
-    plan: &mut FaultPlan,
+    plan: &Mutex<FaultPlan>,
     injected: &AtomicU64,
     stop: &AtomicBool,
 ) {
@@ -145,28 +186,34 @@ fn relay(
     client.set_nodelay(true).ok();
     server.set_nodelay(true).ok();
 
-    // Upstream direction (replica → primary): verbatim byte pump.
+    // How many upstream (follower → leader) frames the pump must drop —
+    // armed by a Partition fault on the downstream side, which is what
+    // makes the split symmetric.
+    let up_drop = Arc::new(AtomicU64::new(0));
+
+    // Upstream direction (follower → leader): frame-aware pump so a
+    // partition can swallow whole frames rather than shearing bytes.
     let up = {
         let (Ok(mut from), Ok(mut to)) = (client.try_clone(), server.try_clone()) else {
             return;
         };
+        let up_drop = Arc::clone(&up_drop);
         std::thread::spawn(move || {
-            let mut buf = [0u8; 4096];
             loop {
-                match from.read(&mut buf) {
-                    Ok(0) | Err(_) => break,
-                    Ok(n) => {
-                        if to.write_all(&buf[..n]).is_err() {
-                            break;
-                        }
-                    }
+                let Some(frame) = read_raw_frame(&mut from) else { break };
+                if up_drop.load(Ordering::Relaxed) > 0 {
+                    up_drop.fetch_sub(1, Ordering::Relaxed);
+                    continue;
+                }
+                if to.write_all(&frame).is_err() {
+                    break;
                 }
             }
             to.shutdown(std::net::Shutdown::Write).ok();
         })
     };
 
-    // Downstream direction (primary → replica): frame-by-frame faults.
+    // Downstream direction (leader → follower): frame-by-frame faults.
     let mut from = server;
     let mut to = client;
     loop {
@@ -174,7 +221,8 @@ fn relay(
             break;
         }
         let Some(frame) = read_raw_frame(&mut from) else { break };
-        match plan.decide() {
+        let fault = plan.lock().unwrap_or_else(|e| e.into_inner()).decide();
+        match fault {
             Fault::Forward => {
                 if to.write_all(&frame).is_err() {
                     break;
@@ -202,9 +250,22 @@ fn relay(
                 let _ = to.write_all(&frame[..cut]);
                 break;
             }
+            Fault::Partition => {
+                injected.fetch_add(1, Ordering::Relaxed);
+                // This frame is the first casualty; swallow the next few
+                // in both directions, then cut. Each side just sees the
+                // other go silent and then the link die.
+                up_drop.store(PARTITION_FRAMES, Ordering::Relaxed);
+                for _ in 1..PARTITION_FRAMES {
+                    if read_raw_frame(&mut from).is_none() {
+                        break;
+                    }
+                }
+                break;
+            }
         }
     }
-    // Cut both sides so the replica reconnects promptly.
+    // Cut both sides so the follower reconnects promptly.
     to.shutdown(std::net::Shutdown::Both).ok();
     from.shutdown(std::net::Shutdown::Both).ok();
     let _ = up.join();
@@ -213,6 +274,7 @@ fn relay(
 /// Read one whole frame (header + payload) as raw bytes, without
 /// validating the CRC — the proxy relays damage, it does not repair it.
 fn read_raw_frame(r: &mut TcpStream) -> Option<Vec<u8>> {
+    use std::io::Read;
     let mut header = [0u8; HEADER_SIZE];
     let mut got = 0;
     while got < HEADER_SIZE {
@@ -237,6 +299,7 @@ fn read_raw_frame(r: &mut TcpStream) -> Option<Vec<u8>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::io::BufReader;
 
     #[test]
     fn plan_is_deterministic_and_budgeted() {
@@ -254,6 +317,14 @@ mod tests {
         );
     }
 
+    #[test]
+    fn partition_only_plans_draw_nothing_else() {
+        let mut p = FaultPlan::partitions_only(3, 100, 3);
+        let d: Vec<Fault> = (0..10).map(|_| p.decide()).collect();
+        assert_eq!(&d[..3], &[Fault::Partition; 3]);
+        assert!(d[3..].iter().all(|f| *f == Fault::Forward));
+    }
+
     /// The proxy relays a framed stream faithfully when the plan injects
     /// nothing (0% fault chance).
     #[test]
@@ -262,18 +333,20 @@ mod tests {
         let upstream = TcpListener::bind("127.0.0.1:0").unwrap();
         let up_addr = upstream.local_addr().unwrap();
         let server = std::thread::spawn(move || {
-            let (mut s, _) = upstream.accept().unwrap();
-            // Read the client's hello bytes (upstream pump), then answer
+            let (s, _) = upstream.accept().unwrap();
+            // Read the client's hello frame (upstream pump), then answer
             // with two frames.
-            let mut b = [0u8; 1];
-            s.read_exact(&mut b).unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let hello = Frame::read_from(&mut r).unwrap();
+            assert_eq!(hello, Some(Frame::Hello { last_seq: 9, need_snapshot: false }));
+            let mut s = s;
             Frame::Ack { seq: 1 }.write_to(&mut s).unwrap();
             Frame::CaughtUp { seq: 1 }.write_to(&mut s).unwrap();
         });
         let proxy = FaultProxy::start(up_addr, FaultPlan::new(1, 0, 0)).unwrap();
         let mut c = TcpStream::connect(proxy.local_addr).unwrap();
-        c.write_all(&[0x55]).unwrap();
-        let mut reader = std::io::BufReader::new(c.try_clone().unwrap());
+        Frame::Hello { last_seq: 9, need_snapshot: false }.write_to(&mut c).unwrap();
+        let mut reader = BufReader::new(c.try_clone().unwrap());
         assert_eq!(Frame::read_from(&mut reader).unwrap(), Some(Frame::Ack { seq: 1 }));
         assert_eq!(
             Frame::read_from(&mut reader).unwrap(),
@@ -281,6 +354,73 @@ mod tests {
         );
         assert_eq!(proxy.injected(), 0);
         server.join().unwrap();
+        proxy.stop();
+    }
+
+    /// A partition fault swallows frames in both directions and cuts the
+    /// link; a reconnect through the proxy then relays cleanly (budget
+    /// spent).
+    #[test]
+    fn partition_is_symmetric_then_heals_on_reconnect() {
+        use crate::repl::frame::Frame;
+        let upstream = TcpListener::bind("127.0.0.1:0").unwrap();
+        let up_addr = upstream.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            // First connection: partitioned. Send enough frames to burn
+            // the partition, and count what arrives upstream.
+            let (s, _) = upstream.accept().unwrap();
+            let mut w = s.try_clone().unwrap();
+            let mut r = BufReader::new(s);
+            for seq in 1..=8 {
+                if Frame::Ack { seq }.write_to(&mut w).is_err() {
+                    break;
+                }
+            }
+            let mut upstream_got = 0u64;
+            while let Ok(Some(_)) = Frame::read_from(&mut r) {
+                upstream_got += 1;
+            }
+            // Second connection: clean relay both ways.
+            let (s, _) = upstream.accept().unwrap();
+            let mut w = s.try_clone().unwrap();
+            let mut r = BufReader::new(s);
+            let hello = Frame::read_from(&mut r).unwrap();
+            assert_eq!(hello, Some(Frame::Hello { last_seq: 0, need_snapshot: true }));
+            Frame::Ack { seq: 99 }.write_to(&mut w).unwrap();
+            upstream_got
+        });
+
+        // 100% fault chance, budget 1, partitions only: the very first
+        // downstream frame arms the partition.
+        let proxy = FaultProxy::start(up_addr, FaultPlan::partitions_only(11, 100, 1)).unwrap();
+        let mut c = TcpStream::connect(proxy.local_addr).unwrap();
+        let mut reader = BufReader::new(c.try_clone().unwrap());
+        // Everything the leader sent during the partition is gone: the
+        // stream just ends (proxy cut it after swallowing the window).
+        let mut downstream_got = 0u64;
+        while let Ok(Some(_)) = Frame::read_from(&mut reader) {
+            downstream_got += 1;
+        }
+        // Our frames written into the partition vanish too (the pump
+        // drops them; the write itself may or may not error by then).
+        for seq in 1..=PARTITION_FRAMES {
+            let _ = Frame::Ack { seq }.write_to(&mut c);
+        }
+        drop(c);
+        assert_eq!(proxy.injected(), 1);
+
+        // Reconnect: the budget is spent, so the link is clean again.
+        let mut c2 = TcpStream::connect(proxy.local_addr).unwrap();
+        Frame::Hello { last_seq: 0, need_snapshot: true }.write_to(&mut c2).unwrap();
+        let mut r2 = BufReader::new(c2.try_clone().unwrap());
+        assert_eq!(Frame::read_from(&mut r2).unwrap(), Some(Frame::Ack { seq: 99 }));
+
+        let upstream_got = server.join().unwrap();
+        assert!(
+            downstream_got < 8,
+            "partition must swallow downstream frames (got {downstream_got})"
+        );
+        assert_eq!(upstream_got, 0, "acks written into the partition must vanish");
         proxy.stop();
     }
 }

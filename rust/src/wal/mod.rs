@@ -221,6 +221,19 @@ impl Wal {
         })
     }
 
+    /// [`Wal::reinstall`] in place: swap this handle over to the freshly
+    /// received generation instead of constructing a new `Wal`. Cluster
+    /// followers share one `Wal` between the serving plane and the
+    /// replication stream; reinstalling through the shared handle keeps
+    /// every holder on the new generation (two writers on one directory
+    /// would corrupt it).
+    pub fn reinstall_into(&self, seq: u64, bundle: &[u8]) -> io::Result<()> {
+        let fresh = Wal::reinstall(&self.dir, seq, bundle, self.policy)?;
+        *self.writer.lock().unwrap_or_else(|e| e.into_inner()) = fresh.writer();
+        self.snapshot_seq.store(seq, Ordering::Release);
+        Ok(())
+    }
+
     /// Load the newest snapshot, repair the log tail, replay the durable
     /// ops, and resume appending where the log left off.
     pub fn recover(

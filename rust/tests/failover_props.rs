@@ -1,0 +1,748 @@
+//! Failover properties of the quorum replication plane, end to end:
+//!
+//! * **Kill the leader** — a three-node in-process cluster churns
+//!   quorum-acked writes, loses its elected leader, elects a successor
+//!   holding every acked op (log matching), resumes writes, and the
+//!   survivors converge byte-identically to an uninterrupted control
+//!   run.
+//! * **Split brain** — a leader partitioned away from the election
+//!   plane keeps serving reads but degrades writes to a structured
+//!   `no-quorum` error; on healing it observes the newer term, steps
+//!   down, fences stale writes with a redirect to the new leader, and
+//!   re-converges (its divergent tail is wiped by a forced snapshot).
+//! * **Flapping partitions** — the leader's replication stream runs
+//!   through a fault proxy injecting symmetric partitions on a seeded
+//!   budget; followers ride capped-backoff reconnects through the flaps
+//!   and converge once the budget is spent.
+//! * **Replica warm-up** — a `serve --replica-of` process binds its
+//!   query listener *before* catch-up and answers a structured
+//!   `{"state":"warming"}` until the readiness latch flips; session
+//!   `min_seq` tokens are refused by a replica still behind them.
+//! * **Process-level failover smoke** — three `serve --cluster`
+//!   processes elect a leader, quorum-ack writes, survive a SIGKILL of
+//!   the leader mid-churn with byte-fingerprint convergence, resume
+//!   writes on the successor, and answer `repl leader` from any node.
+
+use std::net::{SocketAddr, TcpListener};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use finger_ann::core::distance::Metric;
+use finger_ann::core::json::Json;
+use finger_ann::core::matrix::Matrix;
+use finger_ann::core::rng::Pcg32;
+use finger_ann::data::persist::{bundle_to_vec, save_index};
+use finger_ann::data::synth::tiny;
+use finger_ann::index::impls::BruteForce;
+use finger_ann::index::{AnnIndex, SearchContext, SearchParams};
+use finger_ann::repl::cluster::{ClusterNode, ClusterOpts};
+use finger_ann::repl::election::{ElectionConfig, ElectionNode, PeerSpec, Role};
+use finger_ann::repl::frame::Frame;
+use finger_ann::repl::hub::HubOpts;
+use finger_ann::repl::{fnv1a64, AckLevel};
+use finger_ann::router::protocol::{FingerprintInfo, QueryRequest};
+use finger_ann::router::{Client, MutOutcome, Request, ServeIndex};
+use finger_ann::testutil::proxy::{FaultPlan, FaultProxy};
+use finger_ann::wal::{FsyncPolicy, Wal};
+
+const DIM: usize = 6;
+const N0: usize = 24;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("finger_failover_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn gauss(rng: &mut Pcg32) -> Vec<f32> {
+    (0..DIM).map(|_| rng.next_gaussian()).collect()
+}
+
+/// One in-process cluster member: its serving index and supervisor.
+struct Node {
+    serve: Arc<ServeIndex>,
+    cluster: Arc<ClusterNode>,
+}
+
+/// A three-node in-process cluster over a shared seed dataset. Every
+/// node bootstraps its own WAL from the same deterministic index, so
+/// the initial states are byte-identical. With `proxied`, each node
+/// advertises a fault proxy (symmetric partitions, seeded budget) in
+/// front of its replication listener — only the elected leader's proxy
+/// ever carries traffic.
+fn start_cluster(
+    root: &Path,
+    data: &Arc<Matrix>,
+    proxied: bool,
+    ack_timeout: Duration,
+) -> (Vec<Node>, Vec<FaultProxy>) {
+    let n = 3;
+    let listeners: Vec<TcpListener> =
+        (0..n).map(|_| TcpListener::bind("127.0.0.1:0").expect("bind election")).collect();
+    let eaddrs: Vec<String> =
+        listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+    let mut nodes = Vec::with_capacity(n);
+    let mut proxies = Vec::new();
+    for (i, listener) in listeners.into_iter().enumerate() {
+        let dir = root.join(format!("node{}", i + 1));
+        let index: Box<dyn AnnIndex> = Box::new(BruteForce::new(Arc::clone(data)));
+        let wal = Arc::new(
+            Wal::bootstrap(&dir, index.as_ref(), FsyncPolicy::Always).expect("bootstrap"),
+        );
+        let serve = Arc::new(
+            ServeIndex::with_params(index, SearchParams::new(10))
+                .with_wal(Arc::clone(&wal))
+                .in_cluster(),
+        );
+        let repl_listener = TcpListener::bind("127.0.0.1:0").expect("bind repl");
+        let repl_local = repl_listener.local_addr().unwrap();
+        let advert = if proxied {
+            let proxy = FaultProxy::start(
+                repl_local,
+                FaultPlan::partitions_only(0xF1A9 ^ i as u64, 100, 2),
+            )
+            .expect("proxy start");
+            let a = proxy.local_addr;
+            proxies.push(proxy);
+            a
+        } else {
+            repl_local
+        };
+        let peers = eaddrs
+            .iter()
+            .enumerate()
+            .filter(|(j, _)| *j != i)
+            .map(|(j, a)| PeerSpec { id: (j + 1) as u64, addr: a.clone() })
+            .collect();
+        let election = ElectionNode::start_on(
+            ElectionConfig {
+                id: (i + 1) as u64,
+                listen: String::new(),
+                peers,
+                election_timeout: Duration::from_millis(200),
+                heartbeat_interval: Duration::from_millis(50),
+                state_dir: Some(dir.clone()),
+                seed: 0xE1EC + i as u64,
+            },
+            listener,
+        )
+        .expect("start election");
+        let cluster = ClusterNode::start(
+            election,
+            repl_listener,
+            Arc::clone(&wal),
+            Arc::clone(&serve),
+            ClusterOpts {
+                hub: HubOpts {
+                    level: AckLevel::Quorum,
+                    expect: n,
+                    ack_timeout,
+                    ..HubOpts::default()
+                },
+                policy: FsyncPolicy::Always,
+                repl_advertise: advert.to_string(),
+                // Distinct fake query addresses so redirect errors are
+                // attributable to a specific node.
+                query_advertise: format!("127.0.0.1:{}", 7800 + i),
+                seed: 0x5EED ^ i as u64,
+            },
+        )
+        .expect("start cluster node");
+        serve.set_cluster(Arc::clone(&cluster));
+        nodes.push(Node { serve, cluster });
+    }
+    (nodes, proxies)
+}
+
+/// Poll until exactly one of the `alive` nodes leads and every other
+/// alive node recognizes it at that term.
+fn wait_leader(nodes: &[Node], alive: &[usize], budget: Duration) -> usize {
+    let deadline = Instant::now() + budget;
+    loop {
+        let leaders: Vec<usize> = alive
+            .iter()
+            .copied()
+            .filter(|&i| nodes[i].cluster.role() == Role::Leader)
+            .collect();
+        if leaders.len() == 1 {
+            let li = leaders[0];
+            let (lid, term) = (nodes[li].cluster.id(), nodes[li].cluster.term());
+            let agree = alive.iter().all(|&i| {
+                i == li
+                    || nodes[i].cluster.leader().map(|l| l.id == lid && l.term == term)
+                        == Some(true)
+            });
+            if agree {
+                return li;
+            }
+        }
+        assert!(Instant::now() < deadline, "no stable leader within {budget:?}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Drive one insert to a quorum ack against a *standing* leader. Every
+/// attempt that reaches the log is recorded in `applied`: a `no-quorum`
+/// error means the op is applied and logged locally and — while this
+/// leader stands — will replicate once followers (re)attach, so the
+/// next attempt uses a fresh vector instead of duplicating it.
+fn insert_until_acked(
+    serve: &ServeIndex,
+    applied: &mut Vec<Vec<f32>>,
+    rng: &mut Pcg32,
+    budget: Duration,
+) {
+    let deadline = Instant::now() + budget;
+    loop {
+        let v = gauss(rng);
+        match serve.mutate(&Request::Insert { id: applied.len() as u64, vector: v.clone() }) {
+            Ok(resp) => {
+                applied.push(v);
+                assert_eq!(
+                    resp.seq,
+                    applied.len() as u64,
+                    "a quorum ack carries the commit seq for read-your-writes sessions"
+                );
+                return;
+            }
+            // The hub's no-quorum errors mean the op reached the local
+            // log; the leaderless `no leader elected` rejection means it
+            // did not — only the former counts toward the control run.
+            Err(e) if e.contains("may be superseded on failover") => applied.push(v),
+            Err(e) if e.contains("no-quorum") => {}
+            Err(e) => panic!("unexpected mutate error: {e}"),
+        }
+        assert!(Instant::now() < deadline, "writes never resumed within {budget:?}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// The uninterrupted control run: the same seed data plus every applied
+/// insert, hashed through the deterministic persistence path.
+fn control_fingerprint(data: &Arc<Matrix>, applied: &[Vec<f32>]) -> u64 {
+    let mut control: Box<dyn AnnIndex> = Box::new(BruteForce::new(Arc::clone(data)));
+    let mut ctx = SearchContext::new();
+    let m = control.as_mutable().expect("bruteforce is mutable");
+    for v in applied {
+        m.insert(v, &mut ctx).expect("control insert");
+    }
+    fnv1a64(&bundle_to_vec(control.as_ref()).expect("control bundle"))
+}
+
+/// Poll until every `alive` node reports exactly the control state.
+fn wait_converged(nodes: &[Node], alive: &[usize], want_fp: u64, want_seq: u64, budget: Duration) {
+    let deadline = Instant::now() + budget;
+    loop {
+        let ok = alive.iter().all(|&i| {
+            nodes[i]
+                .serve
+                .fingerprint(0)
+                .map(|f| f.fingerprint == want_fp && f.seq == want_seq)
+                .unwrap_or(false)
+        });
+        if ok {
+            return;
+        }
+        let seen: Vec<Option<(u64, u64)>> = alive
+            .iter()
+            .map(|&i| nodes[i].serve.fingerprint(0).ok().map(|f| (f.fingerprint, f.seq)))
+            .collect();
+        assert!(
+            Instant::now() < deadline,
+            "nodes never converged to (fp {want_fp:#x}, seq {want_seq}); saw {seen:?}"
+        );
+        std::thread::sleep(Duration::from_millis(30));
+    }
+}
+
+fn teardown(nodes: &[Node], root: &Path) {
+    for n in nodes {
+        n.cluster.shutdown();
+    }
+    std::fs::remove_dir_all(root).ok();
+}
+
+/// Kill the elected leader mid-churn: a successor holding every acked
+/// op wins (log matching), writes resume, and the survivors converge
+/// byte-identically to the control run — every quorum-acked vector is
+/// queryable at distance ~0 on the new leader.
+#[test]
+fn kill_the_leader_and_the_cluster_fails_over() {
+    let root = tmp_dir("kill");
+    let ds = tiny(0xFA11, N0, DIM, Metric::L2);
+    let (nodes, _proxies) = start_cluster(&root, &ds.data, false, Duration::from_secs(5));
+    let all = [0usize, 1, 2];
+    let li = wait_leader(&nodes, &all, Duration::from_secs(15));
+
+    let mut rng = Pcg32::new(0xC0FFEE);
+    let mut applied: Vec<Vec<f32>> = Vec::new();
+    for _ in 0..10 {
+        insert_until_acked(&nodes[li].serve, &mut applied, &mut rng, Duration::from_secs(20));
+    }
+    // The last ack proves a majority holds the whole prefix: the op
+    // stream is ordered, so acking seq s implies holding every seq < s.
+    nodes[li].cluster.shutdown();
+
+    let survivors: Vec<usize> = all.iter().copied().filter(|&i| i != li).collect();
+    let li2 = wait_leader(&nodes, &survivors, Duration::from_secs(30));
+    assert_ne!(li2, li, "the dead leader cannot win its own succession");
+
+    // Writes resume once the surviving follower re-attaches to the new
+    // leader's hub.
+    for _ in 0..5 {
+        insert_until_acked(&nodes[li2].serve, &mut applied, &mut rng, Duration::from_secs(30));
+    }
+
+    let fp = control_fingerprint(&ds.data, &applied);
+    wait_converged(&nodes, &survivors, fp, applied.len() as u64, Duration::from_secs(30));
+
+    // Every applied vector answers at distance ~0 on the new leader.
+    let mut ctx = SearchContext::new();
+    for (i, v) in applied.iter().enumerate() {
+        let hits = nodes[li2].serve.search(v, 1, &mut ctx);
+        let (dist, _) = hits.first().copied().expect("one hit");
+        assert!(dist.abs() < 1e-4, "acked insert {i} lost in failover (nearest dist {dist})");
+    }
+    teardown(&nodes, &root);
+}
+
+/// A leader cut off from the election plane keeps its role (it cannot
+/// observe the newer term) but loses its followers: writes degrade to
+/// a fast structured `no-quorum` error while reads keep serving. On
+/// healing it steps down, fences writes with a redirect to the new
+/// leader, and its divergent tail is wiped by the forced snapshot.
+#[test]
+fn a_partitioned_stale_leader_degrades_then_steps_down_on_heal() {
+    let root = tmp_dir("split");
+    let ds = tiny(0x5B1A, N0, DIM, Metric::L2);
+    let (nodes, _proxies) = start_cluster(&root, &ds.data, false, Duration::from_secs(2));
+    let all = [0usize, 1, 2];
+    let li = wait_leader(&nodes, &all, Duration::from_secs(15));
+
+    let mut rng = Pcg32::new(0xBEEF);
+    let mut applied: Vec<Vec<f32>> = Vec::new();
+    for _ in 0..3 {
+        insert_until_acked(&nodes[li].serve, &mut applied, &mut rng, Duration::from_secs(20));
+    }
+    let old_term = nodes[li].cluster.term();
+
+    nodes[li].cluster.election().set_partitioned(true);
+    let survivors: Vec<usize> = all.iter().copied().filter(|&i| i != li).collect();
+    let li2 = wait_leader(&nodes, &survivors, Duration::from_secs(30));
+    assert!(nodes[li2].cluster.term() > old_term, "a new leadership means a newer term");
+
+    // Give the survivors' reconcilers a few ticks to detach their
+    // replica streams from the deposed leader.
+    std::thread::sleep(Duration::from_millis(500));
+
+    // The deposed side still believes it leads; its writes degrade to a
+    // structured no-quorum error (fast, not a timeout burn) and reads
+    // keep serving the installed state.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let noq = loop {
+        match nodes[li].serve.mutate(&Request::Insert { id: 99, vector: gauss(&mut rng) }) {
+            // A follower had not detached yet; the op lands on the
+            // doomed divergent tail and is wiped below.
+            Ok(_) => std::thread::sleep(Duration::from_millis(50)),
+            Err(e) if e.contains("no-quorum") => break e,
+            Err(e) => panic!("unexpected stale-leader error: {e}"),
+        }
+        assert!(Instant::now() < deadline, "stale leader never degraded to no-quorum");
+    };
+    assert!(noq.contains("may be superseded on failover"), "got: {noq}");
+    let mut ctx = SearchContext::new();
+    assert_eq!(
+        nodes[li].serve.search(&applied[0], 1, &mut ctx).first().map(|h| h.0.abs() < 1e-4),
+        Some(true),
+        "reads must keep serving on the partitioned side"
+    );
+
+    // The healthy majority keeps taking writes.
+    insert_until_acked(&nodes[li2].serve, &mut applied, &mut rng, Duration::from_secs(30));
+
+    // Heal: the deposed leader hears the newer term, steps down, and
+    // fences stale writes with a redirect to the new leader.
+    nodes[li].cluster.election().set_partitioned(false);
+    let deadline = Instant::now() + Duration::from_secs(15);
+    let fence = loop {
+        let err = nodes[li]
+            .serve
+            .mutate(&Request::Insert { id: 100, vector: gauss(&mut rng) })
+            .map(|_| String::new());
+        match err {
+            Err(e) if e.contains("not the leader") => break e,
+            // A brief leaderless / still-partitioned-view window is
+            // fine; keep polling until the demotion lands.
+            Ok(_) | Err(_) => std::thread::sleep(Duration::from_millis(30)),
+        }
+        assert!(Instant::now() < deadline, "deposed leader never stepped down");
+    };
+    assert_eq!(nodes[li].cluster.role(), Role::Follower);
+    assert!(
+        fence.contains(&format!("127.0.0.1:{}", 7800 + li2)),
+        "the fence must redirect to the new leader's query address, got: {fence}"
+    );
+
+    // Convergence wipes the deposed leader's divergent tail: all three
+    // nodes land on the control state (the probe inserts above vanish).
+    let fp = control_fingerprint(&ds.data, &applied);
+    wait_converged(&nodes, &all, fp, applied.len() as u64, Duration::from_secs(30));
+    teardown(&nodes, &root);
+}
+
+/// Symmetric partitions on the leader's replication stream: followers
+/// lose whole frames in both directions, reconnect with capped backoff,
+/// and converge byte-identically once the seeded fault budget is spent.
+/// Leadership is stable throughout (the election plane is not proxied),
+/// so ops that missed their ack window replicate after the flaps.
+#[test]
+fn flapping_repl_partitions_heal_and_the_cluster_converges() {
+    let root = tmp_dir("flap");
+    let ds = tiny(0xF1A9, N0, DIM, Metric::L2);
+    let (nodes, proxies) = start_cluster(&root, &ds.data, true, Duration::from_secs(2));
+    let all = [0usize, 1, 2];
+    let li = wait_leader(&nodes, &all, Duration::from_secs(15));
+
+    let mut rng = Pcg32::new(0xF1AB);
+    let mut applied: Vec<Vec<f32>> = Vec::new();
+    for _ in 0..20 {
+        let v = gauss(&mut rng);
+        match nodes[li].serve.mutate(&Request::Insert { id: applied.len() as u64, vector: v.clone() })
+        {
+            Ok(_) => applied.push(v),
+            // Applied and logged on the standing leader; replicates once
+            // the partition budget is spent.
+            Err(e) if e.contains("may be superseded on failover") => applied.push(v),
+            Err(e) => panic!("unexpected error under partition flaps: {e}"),
+        }
+    }
+    let injected: u64 = proxies.iter().map(|p| p.injected()).sum();
+    assert!(injected > 0, "the partition plan never fired");
+
+    let fp = control_fingerprint(&ds.data, &applied);
+    wait_converged(&nodes, &all, fp, applied.len() as u64, Duration::from_secs(60));
+
+    // The follower streams rode reconnect-with-backoff through the
+    // flaps; the counters surface through the cluster supervisor.
+    let reconnects: u64 = all
+        .iter()
+        .filter_map(|&i| nodes[i].cluster.replica_metrics())
+        .map(|m| m.reconnect_attempts.load(Ordering::Relaxed))
+        .sum();
+    assert!(reconnects > 0, "partition cuts must surface as reconnect cycles");
+
+    teardown(&nodes, &root);
+    for p in proxies {
+        p.stop();
+    }
+}
+
+/// Kills the child process on every exit path so a failing assert does
+/// not leak a serving `finger` process.
+struct KillOnDrop(std::process::Child);
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        self.0.kill().ok();
+        self.0.wait().ok();
+    }
+}
+
+/// Read the child's stdout until `pick` matches a line, returning the
+/// match. Panics (with everything read so far) if the child closes
+/// stdout first.
+fn scan_stdout<T>(
+    lines: &mut std::io::Lines<std::io::BufReader<std::process::ChildStdout>>,
+    what: &str,
+    pick: impl Fn(&str) -> Option<T>,
+) -> T {
+    let mut seen = String::new();
+    for line in lines.by_ref() {
+        let line = line.expect("read child stdout");
+        seen.push_str(&line);
+        seen.push('\n');
+        if let Some(v) = pick(&line) {
+            return v;
+        }
+    }
+    panic!("child exited before printing {what}; stdout so far:\n{seen}");
+}
+
+fn addr_after_on(line: &str) -> Option<SocketAddr> {
+    line.split(" on ").nth(1)?.split_whitespace().next()?.parse().ok()
+}
+
+/// Satellite regression: `serve --replica-of` binds its query listener
+/// *before* the first byte of catch-up. Until the readiness latch
+/// flips, queries answer a structured `{"state":"warming"}` (not a
+/// connection refusal), REPL_STATUS reports the warming state plus the
+/// reconnect counters, and once a snapshot + caught-up arrive the same
+/// connection starts serving. A session `min_seq` token ahead of the
+/// replica's position is refused with a structured stale error.
+#[test]
+fn replica_binds_before_catchup_and_answers_warming() {
+    use std::io::BufRead as _;
+    use std::process::{Command, Stdio};
+
+    let ds = tiny(0x3A3, 16, DIM, Metric::L2);
+    // The test plays the leader: accept the stream, answer nothing yet.
+    let leader_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let leader_addr = leader_listener.local_addr().unwrap();
+
+    let mut child = Command::new(env!("CARGO_BIN_EXE_finger"))
+        .args([
+            "serve",
+            "--replica-of",
+            &leader_addr.to_string(),
+            "--addr",
+            "127.0.0.1:0",
+            "--workers",
+            "1",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn replica");
+    let stdout = child.stdout.take().expect("piped stdout");
+    let _child = KillOnDrop(child);
+    let mut lines = std::io::BufReader::new(stdout).lines();
+    let raddr = scan_stdout(&mut lines, "the replica banner", |l| {
+        l.starts_with("serving replica").then(|| addr_after_on(l)).flatten()
+    });
+
+    let (mut stream, _) = leader_listener.accept().expect("replica dials the leader");
+    let hello = Frame::read_from(&mut stream).expect("handshake").expect("a frame");
+    assert_eq!(hello, Frame::Hello { last_seq: 0, need_snapshot: true });
+
+    // The listener is up before any state arrived: structured warming.
+    let mut client = Client::connect(&raddr).expect("listener must be bound before catch-up");
+    let q = QueryRequest { id: 1, vector: vec![0.0; DIM], k: 1 };
+    let line = client.send_raw(&q.to_json_line()).expect("warming answer");
+    let v = Json::parse(line.trim()).expect("warming answer is JSON");
+    assert_eq!(v.get("state").and_then(|s| s.as_str()), Some("warming"), "got: {line}");
+
+    let status_line =
+        client.send_raw(&Request::ReplStatus { id: 0 }.to_json_line()).expect("repl status");
+    let status = Json::parse(status_line.trim()).expect("status is JSON");
+    assert_eq!(status.get("role").and_then(|s| s.as_str()), Some("replica"));
+    assert_eq!(status.get("state").and_then(|s| s.as_str()), Some("warming"));
+    assert!(
+        status.get("replica_metrics").is_some(),
+        "reconnect/backoff counters must surface in REPL_STATUS, got: {status_line}"
+    );
+
+    // Feed it state: snapshot + caught-up flips the readiness latch.
+    let seed_index = BruteForce::new(Arc::clone(&ds.data));
+    let bundle = bundle_to_vec(&seed_index).expect("seed bundle");
+    Frame::Snapshot { snapshot_seq: 0, bundle }.write_to(&mut stream).expect("send snapshot");
+    Frame::CaughtUp { seq: 0 }.write_to(&mut stream).expect("send caught-up");
+    assert_eq!(
+        Frame::read_from(&mut stream).expect("snapshot ack").expect("a frame"),
+        Frame::Ack { seq: 0 }
+    );
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match client.query(&QueryRequest { id: 2, vector: vec![0.0; DIM], k: 1 }) {
+            Ok(resp) => {
+                assert!(!resp.hits.is_empty(), "caught-up replica must answer hits");
+                break;
+            }
+            Err(e) => {
+                assert!(e.contains("warming"), "unexpected error while warming: {e}");
+                assert!(Instant::now() < deadline, "replica never left the warming state");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+
+    // Read-your-writes: a session ahead of this replica is refused with
+    // a structured stale answer, not silently served old data.
+    let comps = vec!["0.0"; DIM].join(", ");
+    let stale = client
+        .send_raw(&format!("{{\"id\": 3, \"vector\": [{comps}], \"k\": 1, \"min_seq\": 7}}"))
+        .expect("stale answer");
+    let v = Json::parse(stale.trim()).expect("stale answer is JSON");
+    assert_eq!(v.get("state").and_then(|s| s.as_str()), Some("stale"), "got: {stale}");
+    assert!(stale.contains("stale-replica"), "got: {stale}");
+}
+
+/// Process-level acceptance smoke: three `serve --cluster` processes
+/// elect a leader, quorum-ack inserts, survive a SIGKILL of the leader
+/// mid-churn (every acked vector stays readable, survivors converge to
+/// the same byte fingerprint), resume writes against the successor, and
+/// `repl leader` discovers the new leader from any surviving node.
+#[test]
+fn kill_the_elected_leader_process_and_the_cluster_elects_a_successor() {
+    use std::io::BufRead as _;
+    use std::process::{Command, Stdio};
+
+    let root = tmp_dir("proc");
+    std::fs::create_dir_all(&root).unwrap();
+    let bundle = root.join("seed.idx");
+    let ds = tiny(0x9001, 40, DIM, Metric::L2);
+    save_index(&bundle, &BruteForce::new(Arc::clone(&ds.data))).unwrap();
+
+    // Reserve the election endpoints up front so every node can name
+    // its peers before any of them runs.
+    let eaddrs: Vec<String> = (0..3)
+        .map(|_| TcpListener::bind("127.0.0.1:0").unwrap().local_addr().unwrap().to_string())
+        .collect();
+    let spec = eaddrs
+        .iter()
+        .enumerate()
+        .map(|(i, a)| format!("{}@{a}", i + 1))
+        .collect::<Vec<_>>()
+        .join(",");
+
+    let mut procs: Vec<Option<KillOnDrop>> = Vec::new();
+    let mut readers = Vec::new(); // keep pipes open so children never hit EPIPE
+    let mut qaddrs: Vec<SocketAddr> = Vec::new();
+    for i in 1..=3usize {
+        let wal_dir = root.join(format!("node{i}"));
+        let mut child = Command::new(env!("CARGO_BIN_EXE_finger"))
+            .args([
+                "serve",
+                "--cluster",
+                &spec,
+                "--cluster-id",
+                &i.to_string(),
+                "--index",
+                bundle.to_str().unwrap(),
+                "--addr",
+                "127.0.0.1:0",
+                "--workers",
+                "1",
+                "--wal-dir",
+                wal_dir.to_str().unwrap(),
+                "--fsync-policy",
+                "always",
+                "--election-timeout-ms",
+                "250",
+                "--heartbeat-ms",
+                "60",
+                "--repl-ack-timeout-ms",
+                "15000",
+            ])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn cluster node");
+        let stdout = child.stdout.take().expect("piped stdout");
+        let mut lines = std::io::BufReader::new(stdout).lines();
+        let qaddr = scan_stdout(&mut lines, "the serving banner", |l| {
+            l.starts_with("serving ").then(|| addr_after_on(l)).flatten()
+        });
+        procs.push(Some(KillOnDrop(child)));
+        readers.push(lines);
+        qaddrs.push(qaddr);
+    }
+
+    let status = |addr: &SocketAddr| -> Option<Json> {
+        let mut c = Client::connect(addr).ok()?;
+        let line = c.send_raw(&Request::ReplStatus { id: 0 }.to_json_line()).ok()?;
+        Json::parse(line.trim()).ok()
+    };
+    let replicas_attached = |v: &Json| match v.get("replicas") {
+        Some(Json::Arr(a)) => a.len(),
+        _ => 0,
+    };
+    // A leader with `want_replicas` attached followers can quorum-ack.
+    let find_leader = |alive: &[usize], want_replicas: usize, budget: Duration| -> usize {
+        let deadline = Instant::now() + budget;
+        loop {
+            for &i in alive {
+                if let Some(v) = status(&qaddrs[i]) {
+                    if v.get("role").and_then(|r| r.as_str()) == Some("leader")
+                        && replicas_attached(&v) >= want_replicas
+                    {
+                        return i;
+                    }
+                }
+            }
+            assert!(
+                Instant::now() < deadline,
+                "no leader with {want_replicas} attached replica(s) within {budget:?}"
+            );
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    };
+
+    let all = [0usize, 1, 2];
+    let li = find_leader(&all, 2, Duration::from_secs(45));
+
+    let mut client = Client::connect(&qaddrs[li]).expect("connect leader");
+    let mut rng = Pcg32::new(0x90F1);
+    let mut acked: Vec<Vec<f32>> = Vec::new();
+    for k in 0..5u64 {
+        let vector = gauss(&mut rng);
+        let resp = client
+            .mutate(&Request::Insert { id: k, vector: vector.clone() })
+            .expect("quorum-acked insert");
+        assert!(matches!(resp.outcome, MutOutcome::Inserted(_)));
+        assert_eq!(resp.seq, k + 1, "the ack carries the commit seq");
+        acked.push(vector);
+    }
+
+    // SIGKILL the elected leader mid-churn. Quorum acks mean nothing
+    // above may be lost: a majority holds every acked op durably.
+    drop(client);
+    procs[li] = None;
+
+    let survivors: Vec<usize> = all.iter().copied().filter(|&i| i != li).collect();
+    let li2 = find_leader(&survivors, 1, Duration::from_secs(60));
+
+    // Writes resume against the successor.
+    let mut client = Client::connect(&qaddrs[li2]).expect("connect new leader");
+    for k in 5..8u64 {
+        let vector = gauss(&mut rng);
+        let resp = client
+            .mutate(&Request::Insert { id: k, vector: vector.clone() })
+            .expect("post-failover insert");
+        assert!(matches!(resp.outcome, MutOutcome::Inserted(_)));
+        acked.push(vector);
+    }
+
+    // Every quorum-acked vector survived the failover.
+    for (i, vector) in acked.iter().enumerate() {
+        let resp = client
+            .query(&QueryRequest { id: i as u64, vector: vector.clone(), k: 1 })
+            .expect("query acked vector");
+        let (dist, _) = resp.hits.first().copied().expect("one hit");
+        assert!(dist.abs() < 1e-4, "acked insert {i} lost in failover (nearest dist {dist})");
+    }
+
+    // Byte-fingerprint convergence across the survivors.
+    let get_fp = |addr: &SocketAddr| -> Option<FingerprintInfo> {
+        let mut c = Client::connect(addr).ok()?;
+        let line = c.send_raw(&Request::Fingerprint { id: 0 }.to_json_line()).ok()?;
+        FingerprintInfo::parse(line.trim()).ok()
+    };
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let prints: Vec<Option<FingerprintInfo>> =
+            survivors.iter().map(|&i| get_fp(&qaddrs[i])).collect();
+        if let [Some(a), Some(b)] = &prints[..] {
+            if a.fingerprint == b.fingerprint && a.seq == 8 && b.seq == 8 && a.live == 40 + 8 {
+                break;
+            }
+        }
+        assert!(Instant::now() < deadline, "survivors never converged: {prints:?}");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+
+    // Leader discovery works against any surviving node.
+    let addrs_arg =
+        survivors.iter().map(|&i| qaddrs[i].to_string()).collect::<Vec<_>>().join(",");
+    let out = Command::new(env!("CARGO_BIN_EXE_finger"))
+        .args(["repl", "leader", "--addrs", &addrs_arg])
+        .output()
+        .expect("run repl leader");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "repl leader failed: {stdout}");
+    assert!(stdout.contains(&format!("leader: {}", qaddrs[li2])), "got: {stdout}");
+
+    drop(procs);
+    std::fs::remove_dir_all(&root).ok();
+}

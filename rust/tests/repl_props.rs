@@ -35,8 +35,8 @@ use finger_ann::index::impls::{BruteForce, FingerHnswIndex, HnswIndex};
 use finger_ann::index::sharded::{ShardSpec, ShardedIndex};
 use finger_ann::index::{AnnIndex, MutableAnnIndex, SearchContext, SearchParams};
 use finger_ann::repl::frame::Frame;
-use finger_ann::repl::hub::ReplHub;
-use finger_ann::repl::replica::{Replica, ReplicaOpts};
+use finger_ann::repl::hub::{HubOpts, ReplHub};
+use finger_ann::repl::replica::{Replica, ReplicaOpts, ReplicaStore};
 use finger_ann::repl::{fnv1a64, AckLevel};
 use finger_ann::router::protocol::FingerprintInfo;
 use finger_ann::router::{Client, MutOutcome, Request, ServeIndex};
@@ -162,8 +162,12 @@ fn start_primary(
     let index = build_family(family, data);
     let wal =
         Arc::new(Wal::bootstrap(dir, index.as_ref(), FsyncPolicy::EveryN(3)).expect("bootstrap"));
-    let hub = ReplHub::start("127.0.0.1:0", Arc::clone(&wal), level, expect, ack_timeout)
-        .expect("bind repl hub");
+    let hub = ReplHub::start(
+        "127.0.0.1:0",
+        Arc::clone(&wal),
+        HubOpts { level, expect, ack_timeout, ..HubOpts::default() },
+    )
+    .expect("bind repl hub");
     let primary = Arc::new(
         ServeIndex::with_params(index, SearchParams::new(10))
             .with_wal(wal)
@@ -181,9 +185,10 @@ fn replica_serve() -> Arc<ServeIndex> {
 
 fn replica_opts(dir: &std::path::Path) -> ReplicaOpts {
     ReplicaOpts {
-        wal_dir: Some(dir.to_path_buf()),
+        store: ReplicaStore::Dir(dir.to_path_buf()),
         policy: FsyncPolicy::Always,
-        reconnect: Duration::from_millis(20),
+        backoff_base: Duration::from_millis(20),
+        ..ReplicaOpts::default()
     }
 }
 
