@@ -21,10 +21,15 @@
 //!   installed state, writes fail fast with a structured `no-quorum`
 //!   error via [`ClusterNode::check_writable`].
 //!
-//! The supervisor also feeds the election its inputs each tick: the
-//! node's durable log position (`note_log`, labeled with the current
-//! leader's term — that label is what makes the log-matching vote check
-//! honest) and the applied watermark (`note_commit`).
+//! The supervisor also feeds the election its inputs: as leader it
+//! notes its log position under its own term each tick (plus the
+//! applied watermark via `note_commit`); as follower the running
+//! replica's apply hook advances the position, labeled with the term
+//! whose stream the data actually came from. The label must never get
+//! ahead of the log's content: tagging a merely *heard* leader's term
+//! onto a not-yet-wiped divergent tail would let a healed deposed
+//! leader advertise `(new_term, inflated_seq)` and outvote honest
+//! nodes holding quorum-committed data.
 
 use std::io;
 use std::net::{SocketAddr, TcpListener, ToSocketAddrs};
@@ -176,8 +181,10 @@ impl ClusterNode {
     /// One convergence step: make the local wiring match the elected
     /// role. Idempotent; cheap when nothing changed.
     fn reconcile_once(&self) {
-        let leader = self.election.leader();
-        let is_leader = self.election.is_leader();
+        // One atomic snapshot: reading role and term piecemeal could
+        // pair `Leader` with a term this node was already deposed from.
+        let (role, term, leader) = self.election.view();
+        let is_leader = role == Role::Leader;
         let mut act = lock(&self.active);
 
         if is_leader {
@@ -207,6 +214,14 @@ impl ClusterNode {
                         r.stop();
                     }
                     if let Some(addr) = resolve(&info.repl_addr) {
+                        // Label the election log position with this
+                        // leadership's term only as the stream actually
+                        // lands locally — the forced snapshot below has
+                        // wiped any divergent tail by the time the hook
+                        // first fires, so `(term, seq)` never overstates
+                        // what this node's log really holds.
+                        let hook_election = self.election.clone();
+                        let hook_term = info.term;
                         let ropts = ReplicaOpts {
                             store: ReplicaStore::Shared(Arc::clone(&self.wal)),
                             policy: self.opts.policy,
@@ -214,6 +229,9 @@ impl ClusterNode {
                             // A new (leader, term) means our tail may be
                             // divergent; never trust it.
                             force_snapshot: true,
+                            on_apply: Some(Arc::new(move |seq| {
+                                hook_election.note_log(hook_term, seq);
+                            })),
                             ..ReplicaOpts::default()
                         };
                         if let Ok(r) = Replica::start(addr, Arc::clone(&self.serve), ropts) {
@@ -230,16 +248,14 @@ impl ClusterNode {
         }
         drop(act);
 
-        // Feed the election its log position every tick. The term label
-        // is the leadership the applied prefix came from: our own term
-        // as leader, the current leader's as follower. With no leader in
-        // sight the label holds (the log did not advance either).
-        let label = if is_leader {
-            Some(self.election.term())
-        } else {
-            leader.as_ref().map(|l| l.term)
-        };
-        if let Some(term) = label {
+        // As leader, note the log position under our own term each tick
+        // (winning required a quorum to judge this log at least as
+        // up-to-date, so the label is honest). As follower the replica's
+        // apply hook advances it instead — merely *hearing* a leader's
+        // heartbeat must not relabel a possibly-divergent local tail
+        // with the new term. With no leader in sight the label holds
+        // (the log does not advance either).
+        if is_leader {
             self.election.note_log(term, self.serve.applied_seq());
         }
     }

@@ -21,12 +21,22 @@
 //!   CRC-checked `election.state` file (tmp + rename + fsync), so a
 //!   restarted node can never vote twice in one term or regress its
 //!   term — the two invariants that make majorities mean anything.
+//! * **Seeding.** The log *position* (`last_seq`) is in-memory only:
+//!   the serving layer feeds it via [`ElectionNode::note_log`] after
+//!   recovering the WAL. Until that first call a node neither grants
+//!   votes nor campaigns — a restarted node reporting a zero position
+//!   could otherwise hand its vote to a candidate missing committed
+//!   ops, breaking the quorum-overlap argument above.
 //! * **Transport.** Short-lived TCP connections carrying exactly one
 //!   request/response frame pair (`VoteRequest`/`VoteReply`,
 //!   `Heartbeat`/`HeartbeatAck`) — no long-lived session state, so a
 //!   partition heals the moment connects succeed again. Heartbeats
 //!   advertise the leader's replication and query addresses; followers
-//!   discover where to stream from without out-of-band config.
+//!   discover where to stream from without out-of-band config. Sends
+//!   go through one long-lived thread per peer holding a latest-wins
+//!   mailbox: a slow or partitioned peer blocks only its own thread
+//!   (stale heartbeats are superseded, never queued), instead of
+//!   accumulating a fresh blocked thread per tick.
 //!
 //! The `set_partitioned` test seam freezes a node completely (no sends,
 //! incoming frames dropped without reply) to simulate a network
@@ -36,7 +46,7 @@ use std::io;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -116,9 +126,19 @@ struct ElState {
     rng: Pcg32,
 }
 
+/// One peer's outbound lane: a latest-wins mailbox drained by a
+/// dedicated sender thread. Heartbeats and vote requests supersede
+/// whatever is still pending — a peer that blocks for the full
+/// connect+reply timeout simply misses the superseded frames.
+struct PeerLink {
+    addr: SocketAddr,
+    pending: Mutex<Option<Frame>>,
+    cv: Condvar,
+}
+
 struct Inner {
     cfg: ElectionConfig,
-    peers: Vec<(u64, SocketAddr)>,
+    peers: Vec<Arc<PeerLink>>,
     local_addr: SocketAddr,
     state: Mutex<ElState>,
     /// Advertised (repl_addr, query_addr) carried in heartbeats.
@@ -127,12 +147,16 @@ struct Inner {
     /// [`ElectionNode::note_log`]; read by the vote handlers.
     last_log_term: AtomicU64,
     last_seq: AtomicU64,
+    /// Flips on the first `note_log`: until then the position above is
+    /// a placeholder and the node must not grant votes or campaign.
+    log_seeded: AtomicBool,
     /// Commit watermark advertised when leader / last heard from one.
     commit: AtomicU64,
     partitioned: AtomicBool,
     stop: AtomicBool,
     accept_thread: Mutex<Option<JoinHandle<()>>>,
     tick_thread: Mutex<Option<JoinHandle<()>>>,
+    peer_threads: Mutex<Vec<JoinHandle<()>>>,
 }
 
 /// A running election participant. Cheap to clone (shared inner).
@@ -226,7 +250,11 @@ impl ElectionNode {
                     format!("bad peer addr '{}' for node {}", p.addr, p.id),
                 )
             })?;
-            peers.push((p.id, addr));
+            peers.push(Arc::new(PeerLink {
+                addr,
+                pending: Mutex::new(None),
+                cv: Condvar::new(),
+            }));
         }
         listener.set_nonblocking(true)?;
         let local_addr = listener.local_addr()?;
@@ -255,11 +283,13 @@ impl ElectionNode {
             advert: Mutex::new((String::new(), String::new())),
             last_log_term: AtomicU64::new(last_log_term),
             last_seq: AtomicU64::new(0),
+            log_seeded: AtomicBool::new(false),
             commit: AtomicU64::new(0),
             partitioned: AtomicBool::new(false),
             stop: AtomicBool::new(false),
             accept_thread: Mutex::new(None),
             tick_thread: Mutex::new(None),
+            peer_threads: Mutex::new(Vec::new()),
             cfg,
         });
 
@@ -274,6 +304,19 @@ impl ElectionNode {
             .name("finger-election-tick".into())
             .spawn(move || tick_loop(&tic))?;
         *lock(&inner.tick_thread) = Some(tick);
+
+        {
+            let mut senders = lock(&inner.peer_threads);
+            for link in &inner.peers {
+                let inner = Arc::clone(&inner);
+                let link = Arc::clone(link);
+                senders.push(
+                    std::thread::Builder::new()
+                        .name("finger-election-peer".into())
+                        .spawn(move || peer_loop(&inner, &link))?,
+                );
+            }
+        }
 
         Ok(ElectionNode { inner })
     }
@@ -303,6 +346,15 @@ impl ElectionNode {
         lock(&self.inner.state).leader.clone()
     }
 
+    /// Atomic `(role, term, leader)` snapshot under one state lock.
+    /// Reading the three piecemeal races step-downs: a caller could see
+    /// `Leader` and then a *newer* term — and, say, label its log with a
+    /// term whose entries it does not hold.
+    pub fn view(&self) -> (Role, u64, Option<LeaderInfo>) {
+        let st = lock(&self.inner.state);
+        (st.role, st.term, st.leader.clone())
+    }
+
     /// The highest commit watermark heard from (or advertised as) a
     /// leader.
     pub fn leader_commit(&self) -> u64 {
@@ -317,7 +369,9 @@ impl ElectionNode {
 
     /// Feed the node's durable log position `(term, seq)` into the vote
     /// handlers. The term component persists when it changes (once per
-    /// leadership change, not per op).
+    /// leadership change, not per op). The first call unlocks vote
+    /// granting and campaigning: until the serving layer has reported
+    /// its recovered position the node abstains entirely.
     pub fn note_log(&self, term: u64, seq: u64) {
         self.inner.last_seq.store(seq, Ordering::SeqCst);
         let prev = self.inner.last_log_term.swap(term, Ordering::SeqCst);
@@ -325,6 +379,7 @@ impl ElectionNode {
             let st = lock(&self.inner.state);
             persist_locked(&self.inner, &st);
         }
+        self.inner.log_seeded.store(true, Ordering::SeqCst);
     }
 
     /// Advance the commit watermark advertised in this leader's
@@ -368,10 +423,16 @@ impl ElectionNode {
     /// Stop the threads. Safe to call more than once.
     pub fn shutdown(&self) {
         self.inner.stop.store(true, Ordering::SeqCst);
+        for link in &self.inner.peers {
+            link.cv.notify_all();
+        }
         if let Some(t) = lock(&self.inner.accept_thread).take() {
             t.join().ok();
         }
         if let Some(t) = lock(&self.inner.tick_thread).take() {
+            t.join().ok();
+        }
+        for t in lock(&self.inner.peer_threads).drain(..) {
             t.join().ok();
         }
     }
@@ -439,7 +500,12 @@ fn handle_vote(inner: &Inner, term: u64, candidate: u64, last_log_term: u64, las
         inner.last_seq.load(Ordering::SeqCst),
     );
     let up_to_date = (last_log_term, last_seq) >= mine;
-    let granted = term == st.term
+    // An unseeded node does not know its own position yet (last_seq
+    // starts at 0 until the serving layer recovers the WAL); comparing
+    // against the placeholder would under-report and could elect a
+    // candidate missing committed ops. Abstain instead.
+    let granted = inner.log_seeded.load(Ordering::SeqCst)
+        && term == st.term
         && (st.voted_for == 0 || st.voted_for == candidate)
         && up_to_date;
     if granted {
@@ -511,7 +577,13 @@ fn tick_loop(inner: &Arc<Inner>) {
                     }
                 }
                 _ => {
-                    if now.duration_since(st.last_heartbeat) >= st.timeout {
+                    if !inner.log_seeded.load(Ordering::SeqCst) {
+                        // Not seeded: hold the election clock so the
+                        // node neither campaigns on a placeholder
+                        // position nor fires the instant it is seeded.
+                        st.last_heartbeat = now;
+                        Action::None
+                    } else if now.duration_since(st.last_heartbeat) >= st.timeout {
                         st.term += 1;
                         st.voted_for = inner.cfg.id;
                         st.role = Role::Candidate;
@@ -560,28 +632,72 @@ fn become_leader_if_won(inner: &Arc<Inner>, term: u64) {
     }
 }
 
+/// Post a frame to a peer's mailbox, superseding whatever was pending.
+fn post(link: &PeerLink, frame: Frame) {
+    *lock(&link.pending) = Some(frame);
+    link.cv.notify_all();
+}
+
 fn start_campaign(inner: &Arc<Inner>, term: u64) {
     become_leader_if_won(inner, term); // single-node cluster wins alone
     let last_log_term = inner.last_log_term.load(Ordering::SeqCst);
     let last_seq = inner.last_seq.load(Ordering::SeqCst);
-    for &(_, addr) in &inner.peers {
-        let inner = Arc::clone(inner);
-        std::thread::Builder::new()
-            .name("finger-election-vote".into())
-            .spawn(move || {
-                if inner.partitioned.load(Ordering::SeqCst) {
+    for link in &inner.peers {
+        post(
+            link,
+            Frame::VoteRequest { term, candidate: inner.cfg.id, last_log_term, last_seq },
+        );
+    }
+}
+
+fn broadcast_heartbeats(inner: &Arc<Inner>, term: u64) {
+    let (repl_addr, query_addr) = lock(&inner.advert).clone();
+    let commit = inner.commit.load(Ordering::SeqCst);
+    for link in &inner.peers {
+        post(
+            link,
+            Frame::Heartbeat {
+                term,
+                leader: inner.cfg.id,
+                commit,
+                repl_addr: repl_addr.clone(),
+                query_addr: query_addr.clone(),
+            },
+        );
+    }
+}
+
+/// One peer's long-lived sender: block on the mailbox, exchange one
+/// request/response with the peer, feed the reply back into the state
+/// machine. At most one exchange (≤ connect + reply timeout) is ever in
+/// flight per peer, regardless of heartbeat cadence or partitions.
+fn peer_loop(inner: &Arc<Inner>, link: &PeerLink) {
+    while !inner.stop.load(Ordering::SeqCst) {
+        let req = {
+            let mut mb = lock(&link.pending);
+            loop {
+                if inner.stop.load(Ordering::SeqCst) {
                     return;
                 }
-                let req = Frame::VoteRequest {
-                    term,
-                    candidate: inner.cfg.id,
-                    last_log_term,
-                    last_seq,
-                };
+                if let Some(f) = mb.take() {
+                    break f;
+                }
+                let (guard, _) = link
+                    .cv
+                    .wait_timeout(mb, Duration::from_millis(25))
+                    .unwrap_or_else(|e| e.into_inner());
+                mb = guard;
+            }
+        };
+        if inner.partitioned.load(Ordering::SeqCst) {
+            continue;
+        }
+        match &req {
+            &Frame::VoteRequest { term, .. } => {
                 // A dead or partitioned peer simply contributes no vote.
-                if let Some(Frame::VoteReply { term: t, granted }) = ask(&addr, &req) {
+                if let Some(Frame::VoteReply { term: t, granted }) = ask(&link.addr, &req) {
                     if t > term {
-                        step_down(&inner, t);
+                        step_down(inner, t);
                     } else if granted {
                         {
                             let mut st = lock(&inner.state);
@@ -589,40 +705,19 @@ fn start_campaign(inner: &Arc<Inner>, term: u64) {
                                 st.votes += 1;
                             }
                         }
-                        become_leader_if_won(&inner, term);
+                        become_leader_if_won(inner, term);
                     }
                 }
-            })
-            .ok();
-    }
-}
-
-fn broadcast_heartbeats(inner: &Arc<Inner>, term: u64) {
-    let (repl_addr, query_addr) = lock(&inner.advert).clone();
-    let commit = inner.commit.load(Ordering::SeqCst);
-    for &(_, addr) in &inner.peers {
-        let inner = Arc::clone(inner);
-        let (repl_addr, query_addr) = (repl_addr.clone(), query_addr.clone());
-        std::thread::Builder::new()
-            .name("finger-election-hb".into())
-            .spawn(move || {
-                if inner.partitioned.load(Ordering::SeqCst) {
-                    return;
-                }
-                let hb = Frame::Heartbeat {
-                    term,
-                    leader: inner.cfg.id,
-                    commit,
-                    repl_addr,
-                    query_addr,
-                };
-                if let Some(Frame::HeartbeatAck { term: t }) = ask(&addr, &hb) {
+            }
+            &Frame::Heartbeat { term, .. } => {
+                if let Some(Frame::HeartbeatAck { term: t }) = ask(&link.addr, &req) {
                     if t > term {
-                        step_down(&inner, t);
+                        step_down(inner, t);
                     }
                 }
-            })
-            .ok();
+            }
+            _ => {}
+        }
     }
 }
 
@@ -640,9 +735,11 @@ mod tests {
     use super::*;
 
     /// A node whose election timeout is effectively infinite: it never
-    /// campaigns, so tests drive it purely with frames over TCP.
+    /// campaigns, so tests drive it purely with frames over TCP. Seeded
+    /// at position (0, 0) so it may grant votes; tests exercising the
+    /// unseeded state call `ElectionNode::start` themselves.
     fn quiet_node(id: u64, state_dir: Option<PathBuf>) -> ElectionNode {
-        ElectionNode::start(ElectionConfig {
+        let node = ElectionNode::start(ElectionConfig {
             id,
             listen: "127.0.0.1:0".into(),
             peers: Vec::new(),
@@ -651,7 +748,9 @@ mod tests {
             state_dir,
             seed: 7,
         })
-        .expect("start quiet node")
+        .expect("start quiet node");
+        node.note_log(0, 0);
+        node
     }
 
     fn tmp_dir(name: &str) -> PathBuf {
@@ -777,7 +876,7 @@ mod tests {
                     .filter(|(j, _)| *j != i)
                     .map(|(j, a)| PeerSpec { id: (j + 1) as u64, addr: a.clone() })
                     .collect();
-                ElectionNode::start_on(
+                let node = ElectionNode::start_on(
                     ElectionConfig {
                         id: (i + 1) as u64,
                         listen: String::new(),
@@ -789,7 +888,9 @@ mod tests {
                     },
                     listener,
                 )
-                .expect("start node")
+                .expect("start node");
+                node.note_log(0, 0);
+                node
             })
             .collect()
     }
@@ -835,6 +936,42 @@ mod tests {
         for n in &nodes {
             n.shutdown();
         }
+    }
+
+    /// Until `note_log` seeds the recovered position, a node must
+    /// neither grant votes (its in-memory `last_seq` placeholder
+    /// under-reports, which could elect a candidate missing committed
+    /// ops) nor campaign on the placeholder.
+    #[test]
+    fn an_unseeded_node_abstains_from_votes_and_campaigns() {
+        let node = ElectionNode::start(ElectionConfig {
+            id: 1,
+            listen: "127.0.0.1:0".into(),
+            peers: Vec::new(),
+            election_timeout: Duration::from_millis(40),
+            heartbeat_interval: Duration::from_millis(20),
+            state_dir: None,
+            seed: 3,
+        })
+        .expect("start node");
+        let addr = node.local_addr();
+        // A peerless node campaigns and wins alone — unless gated.
+        std::thread::sleep(Duration::from_millis(200));
+        assert_eq!(node.role(), Role::Follower, "unseeded node must not campaign");
+        let req = Frame::VoteRequest { term: 5, candidate: 2, last_log_term: 9, last_seq: 99 };
+        assert!(
+            matches!(ask(&addr, &req), Some(Frame::VoteReply { granted: false, .. })),
+            "unseeded node must refuse even a generous candidate"
+        );
+        // Seeding unlocks both.
+        node.note_log(0, 0);
+        assert!(matches!(ask(&addr, &req), Some(Frame::VoteReply { granted: true, .. })));
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !node.is_leader() {
+            assert!(Instant::now() < deadline, "seeded single-node cluster must elect itself");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        node.shutdown();
     }
 
     /// The log-matching check: with two nodes, the one holding the

@@ -24,7 +24,11 @@
 //! deposed leader reconnecting with an uncommitted tail) is never
 //! believed: the handshake forces a full snapshot and zeroes the slot's
 //! watermarks, so the stale claim can neither vote phantom quorum acks
-//! nor filter future publishes.
+//! nor filter future publishes. A claim within the log but ahead of the
+//! hub's *fsynced* prefix is believed for streaming (the ops exist, so
+//! catch-up resumes from the claim) but its quorum vote is capped at
+//! the durable seq — an appended-but-unsynced op must gather fresh acks
+//! once it is actually on disk, not inherit them from a handshake.
 //!
 //! Ack gating: `wait_acked(seq)` blocks until enough of the cluster
 //! reports a durable position `>= seq` — `none` returns immediately,
@@ -208,9 +212,16 @@ impl ReplHub {
         // leader's uncommitted tail): force a full snapshot and zero the
         // watermarks, else the claim counts as a phantom quorum vote and
         // filters every future publish.
-        let leader_last = self.wal.writer().appended_seq();
+        let leader_appended = self.wal.writer().appended_seq();
         let (last_seq, need_snapshot) =
-            if hello_seq > leader_last { (0, true) } else { (hello_seq, hello_snap) };
+            if hello_seq > leader_appended { (0, true) } else { (hello_seq, hello_snap) };
+        // The claim's quorum vote is additionally capped at this hub's
+        // *durable* prefix: a seq that is appended but not yet fsynced
+        // here must earn fresh acks once committed, not be pre-counted
+        // by a handshake (the stream itself still resumes from the
+        // claim — the ops exist and re-sending them would only trip the
+        // replica's duplicate detection).
+        let believed_acked = last_seq.min(self.wal.writer().synced_seq());
 
         let (id, rx) = {
             // State lock held across the catch-up read — see the module
@@ -236,9 +247,10 @@ impl ReplHub {
             state.slots.push(Slot {
                 id,
                 last_enqueued: enqueued,
-                // A reconnecting replica's durable position stands
-                // (zeroed above when it claimed to be ahead of us).
-                acked: last_seq,
+                // A reconnecting replica's durable position stands up to
+                // this hub's own durable prefix (zeroed above when it
+                // claimed to be ahead of the log entirely).
+                acked: believed_acked,
                 catchup_high: enqueued,
                 tx,
                 stream: slot_stream,
@@ -490,6 +502,35 @@ mod tests {
         let st = hub.status().remove(0);
         assert_eq!(st.acked, 0, "stale claim must not count as durable");
         assert!(st.enqueued < 999, "watermark must be the hub's own, not the claim");
+        hub.shutdown();
+    }
+
+    #[test]
+    fn a_hello_claim_past_the_durable_prefix_is_not_pre_counted() {
+        let data = Arc::new(Matrix::zeros(2, 3));
+        let index = BruteForce::new(data);
+        let dir = tmp_dir("durablecap");
+        let wal =
+            Arc::new(Wal::bootstrap(&dir, &index, FsyncPolicy::Never).expect("bootstrap"));
+        // Two appended ops, none of them fsynced (policy `never`).
+        wal.writer().append(&WalOp::SetThreshold { frac: 0.5 }).expect("append");
+        wal.writer().append(&WalOp::SetThreshold { frac: 0.6 }).expect("append");
+        assert_eq!(wal.writer().synced_seq(), 0, "nothing durable yet");
+        let hub = ReplHub::start("127.0.0.1:0", wal, HubOpts::default()).expect("bind hub");
+
+        let mut conn = TcpStream::connect(hub.local_addr()).expect("connect");
+        conn.write_all(&Frame::Hello { last_seq: 2, need_snapshot: false }.encode())
+            .expect("hello");
+        wait_slots(&hub, 1);
+        let st = hub.status().remove(0);
+        assert_eq!(st.acked, 0, "an appended-but-unsynced claim must not pre-count as a vote");
+        assert_eq!(st.enqueued, 2, "the stream still resumes from the claim, not a snapshot");
+        // The catch-up sends no duplicates: straight to caught-up.
+        let mut reader = BufReader::new(conn.try_clone().expect("clone"));
+        match Frame::read_from(&mut reader).expect("read") {
+            Some(Frame::CaughtUp { seq }) => assert_eq!(seq, 2),
+            other => panic!("expected caught-up at the claim, got {other:?}"),
+        }
         hub.shutdown();
     }
 

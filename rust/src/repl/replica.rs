@@ -61,8 +61,15 @@ impl std::fmt::Debug for ReplicaStore {
     }
 }
 
+/// Called with the applied seq each time this replica's local log
+/// genuinely advances from the leader's stream (snapshot install or op
+/// apply). Cluster nodes use it to label their election log position
+/// with the term whose stream the data actually came from — NOT the
+/// term of whichever leader is merely being heard.
+pub type ApplyHook = Arc<dyn Fn(u64) + Send + Sync>;
+
 /// Replica configuration.
-#[derive(Clone, Debug)]
+#[derive(Clone)]
 pub struct ReplicaOpts {
     pub store: ReplicaStore,
     pub policy: FsyncPolicy,
@@ -76,6 +83,22 @@ pub struct ReplicaOpts {
     /// state exists — cluster followers set this on every new
     /// (leader, term) so a divergent uncommitted tail cannot survive.
     pub force_snapshot: bool,
+    /// Observer of genuine local log advancement (see [`ApplyHook`]).
+    pub on_apply: Option<ApplyHook>,
+}
+
+impl std::fmt::Debug for ReplicaOpts {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ReplicaOpts")
+            .field("store", &self.store)
+            .field("policy", &self.policy)
+            .field("backoff_base", &self.backoff_base)
+            .field("backoff_cap", &self.backoff_cap)
+            .field("seed", &self.seed)
+            .field("force_snapshot", &self.force_snapshot)
+            .field("on_apply", &self.on_apply.as_ref().map(|_| ".."))
+            .finish()
+    }
 }
 
 impl Default for ReplicaOpts {
@@ -87,6 +110,7 @@ impl Default for ReplicaOpts {
             backoff_cap: Duration::from_secs(2),
             seed: 0x5EED,
             force_snapshot: false,
+            on_apply: None,
         }
     }
 }
@@ -381,6 +405,11 @@ impl StreamState {
                     self.has_state = true;
                     self.force_snapshot = false;
                     self.metrics.snapshots_installed.fetch_add(1, Ordering::Relaxed);
+                    // The local log now genuinely reflects the leader's
+                    // stream (a divergent tail was wiped just above).
+                    if let Some(hook) = &self.opts.on_apply {
+                        hook(snapshot_seq);
+                    }
                     Frame::Ack { seq: snapshot_seq }.write_to(&mut out)?;
                 }
                 Frame::Op { record } => {
@@ -401,6 +430,9 @@ impl StreamState {
                         .apply_replicated(seq, &op, self.local.as_wal())
                         .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
                     applied.store(seq, Ordering::SeqCst);
+                    if let Some(hook) = &self.opts.on_apply {
+                        hook(seq);
+                    }
                     Frame::Ack { seq }.write_to(&mut out)?;
                 }
                 Frame::CaughtUp { seq: _ } => {
